@@ -1,0 +1,71 @@
+//! Sparse end-to-end encoder inference with the batching coordinator (Fig. 11).
+//!
+//! Loads the AOT encoder artifacts, serves batched requests with the FFN
+//! executed (a) as a dense PJRT artifact, (b) as a native dense GEMM, and
+//! (c) through the native n:m:g sparse GEMM, and reports median latency,
+//! throughput and the STen-vs-runtime latency breakdown.
+//!
+//! Run: `cargo run --release --example bert_inference -- --tag base --requests 32`
+
+use std::time::Duration;
+
+use anyhow::Result;
+use sten::coordinator::{BatchServer, Engine, FfnMode};
+use sten::runtime::ArtifactRuntime;
+use sten::util::cli::Args;
+use sten::util::rng::Pcg64;
+
+fn run_mode(tag: &str, mode: FfnMode, requests: usize) -> Result<(f64, f64, Vec<(&'static str, f64)>)> {
+    let rt = ArtifactRuntime::open_default()?;
+    let mut engine = Engine::new(rt, tag, mode, 42)?;
+    // Warm up (compiles artifacts).
+    let mut rng = Pcg64::seeded(5);
+    let tokens = engine.random_tokens(&mut rng);
+    engine.forward(&tokens)?;
+    engine.reset_timing();
+
+    let mut server = BatchServer::new(engine, Duration::from_millis(2));
+    let seq = server.engine().dims.seq;
+    let vocab = server.engine().dims.vocab as u32;
+    for _ in 0..requests {
+        let toks: Vec<i32> = (0..seq).map(|_| rng.below(vocab) as i32).collect();
+        server.submit(&toks);
+    }
+    server.run_until_drained()?;
+    let lat = server.median_latency().unwrap_or(0.0);
+    let thr = server.throughput().unwrap_or(0.0);
+    let breakdown = server.engine().timing().sorted();
+    Ok((lat, thr, breakdown))
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let tag = args.get_or("tag", "tiny");
+    let requests: usize = args.num("requests", 32);
+
+    println!("mode\tmedian_latency_ms\tthroughput_req_s\tbreakdown");
+    let modes: Vec<(&str, FfnMode)> = vec![
+        ("dense-artifact (PyTorch-baseline analog)", FfnMode::DenseArtifact),
+        ("native-dense", FfnMode::NativeDense),
+        ("nmg-2:4:4 (STen)", FfnMode::NativeNmg { n: 2, m: 4, g: 4 }),
+        ("nmg-1:4:4 (STen, 75%)", FfnMode::NativeNmg { n: 1, m: 4, g: 4 }),
+    ];
+    let mut dense_lat = None;
+    for (label, mode) in modes {
+        let (lat, thr, breakdown) = run_mode(&tag, mode, requests)?;
+        dense_lat.get_or_insert(lat);
+        let speedup = dense_lat.unwrap() / lat;
+        let bd: Vec<String> = breakdown
+            .iter()
+            .map(|(k, v)| format!("{k}={:.1}ms", v * 1e3))
+            .collect();
+        println!(
+            "{label}\t{:.2}\t{:.1}\t[{}]  ({speedup:.2}x vs dense artifact)",
+            lat * 1e3,
+            thr,
+            bd.join(" ")
+        );
+    }
+    println!("\nbert_inference OK");
+    Ok(())
+}

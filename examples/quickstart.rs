@@ -1,0 +1,68 @@
+//! Quickstart: the STen programming model in five minutes.
+//!
+//! Walks the three core concepts — sparsity layouts, operators, sparsifiers —
+//! then sparsifies a small model with the `SparsityBuilder` and runs sparse
+//! inference through the dispatcher.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use anyhow::Result;
+use sten::dispatch::{Dispatcher, OutputFormat};
+use sten::formats::{AnyTensor, CsrTensor, Layout, NmgTensor};
+use sten::model::{MlpSpec, SparsityBuilder};
+use sten::ops::OpKind;
+use sten::sparsify::{GroupedNm, RandomFraction, ScalarFraction, Sparsifier};
+use sten::tensor::DenseTensor;
+use sten::util::rng::Pcg64;
+
+fn main() -> Result<()> {
+    let mut rng = Pcg64::seeded(42);
+    let d = Dispatcher::with_builtins();
+
+    // ----- 1. Sparsity layouts -------------------------------------------
+    println!("== sparsity layouts ==");
+    let w = DenseTensor::randn(&[64, 96], &mut rng);
+    let csr = CsrTensor::from_dense(&ScalarFraction { fraction: 0.9 }.prune(&w));
+    let nmg = NmgTensor::from_dense(&w, 2, 4, 4);
+    println!("dense:  {} bytes", w.numel() * 4);
+    println!("csr@90%: {} bytes ({} nnz)", csr.bytes(), csr.nnz());
+    println!("n:m:g 2:4:4: {} bytes ({} nnz)", nmg.bytes(), nmg.nnz());
+
+    // ----- 2. Operators: dispatch picks the right kernel ------------------
+    println!("\n== operators ==");
+    let x = AnyTensor::Dense(DenseTensor::randn(&[96, 32], &mut rng));
+    let y = d.call(OpKind::MatMul, &[AnyTensor::Nmg(nmg), x.clone()])?;
+    println!("Nmg x Dense matmul -> {:?} (specialized kernel)", y.shape());
+    let y = d.call(OpKind::Softmax, &[AnyTensor::Csr(csr.clone()).clone()])?;
+    println!("Softmax on CSR -> {:?} (dense fallback)", y.shape());
+    let (hits, conversions, fallbacks) = d.stats.counts();
+    println!("dispatch: {hits} hits, {conversions} conversions, {fallbacks} fallbacks");
+
+    // ----- 3. Sparsifiers + sparse operators ------------------------------
+    println!("\n== sparsifiers ==");
+    let a = AnyTensor::Dense(DenseTensor::randn(&[8, 8], &mut rng));
+    let b = AnyTensor::Dense(DenseTensor::randn(&[8, 8], &mut rng));
+    // The paper's §3.3 example: add -> random-fraction(0.5) -> CSR.
+    let fmt = OutputFormat::external(Box::new(RandomFraction::new(0.5, 7)), Layout::Csr);
+    let c = d.call_sparse(OpKind::Add, &[a, b], &fmt)?;
+    println!("sparse_add output: layout {:?}, nnz {} / 64", c.layout(), c.nnz());
+
+    // ----- 4. Sparsifying an existing model -------------------------------
+    println!("\n== SparsityBuilder ==");
+    let spec = MlpSpec { input_dim: 64, hidden: vec![128], classes: 10 };
+    let params = spec.init(&mut rng);
+    let model = spec.build_graph(&params);
+    println!("dense model: {} bytes", model.param_bytes());
+
+    let mut sb = SparsityBuilder::new();
+    sb.set_weight("fc0.w", Box::new(GroupedNm { n: 2, m: 4, g: 4 }), Layout::Nmg);
+    sb.set_weight("fc1.w", Box::new(ScalarFraction { fraction: 0.9 }), Layout::Csr);
+    let sparse = sb.get_sparse_model(model)?;
+    println!("sparse model: {} bytes", sparse.param_bytes());
+
+    let x = AnyTensor::Dense(DenseTensor::randn(&[4, 64], &mut rng));
+    let logits = sparse.forward(&d, &[x])?;
+    println!("sparse forward -> {:?}", logits.shape());
+    println!("\nquickstart OK");
+    Ok(())
+}

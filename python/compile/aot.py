@@ -1,0 +1,318 @@
+"""AOT lowering: JAX/Pallas (L2/L1) -> HLO text artifacts for the Rust runtime.
+
+HLO **text** is the interchange format, never ``.serialize()``: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the runtime's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Run via ``make artifacts``; it is a no-op when artifacts are newer than the
+compile sources. Emits ``artifacts/manifest.json`` describing every artifact
+(input/output names, shapes, dtypes, format metadata) — the Rust runtime is
+manifest-driven and never hard-codes shapes.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import nmg
+from .kernels.nmg_gemm import nmg_gemm
+from .kernels.masked_gemm import masked_gemm
+from .kernels.ref import ref_layernorm
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text.
+
+    ``print_large_constants=True`` is essential: the default elides large
+    constants as ``constant({...})``, which the consuming HLO text parser
+    (xla_extension 0.5.1) silently reads back as zeros.
+    """
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(True)
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+class Emitter:
+    """Collects artifacts + manifest entries."""
+
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.manifest = {"artifacts": []}
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name, fn, inputs, meta=None, golden=False):
+        """Lower `fn(*inputs)` (inputs = [(name, ShapeDtypeStruct)]) to HLO
+        text; optionally also write a golden test vector for the Rust side."""
+        specs = [s for _, s in inputs]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, fname), "w") as f:
+            f.write(text)
+        out_avals = jax.eval_shape(fn, *specs)
+        if not isinstance(out_avals, (tuple, list)):
+            out_avals = (out_avals,)
+        entry = {
+            "name": name,
+            "file": fname,
+            "inputs": [
+                {"name": n, "dtype": str(s.dtype), "shape": list(s.shape)}
+                for n, s in inputs
+            ],
+            "outputs": [
+                {"dtype": str(a.dtype), "shape": list(a.shape)} for a in out_avals
+            ],
+            "meta": meta or {},
+        }
+        self.manifest["artifacts"].append(entry)
+        print(f"  wrote {fname} ({len(text) / 1024:.0f} KiB, "
+              f"{len(inputs)} inputs, {len(out_avals)} outputs)")
+        if golden:
+            self.emit_golden(name, fn, inputs)
+        return entry
+
+    def emit_golden(self, name, fn, inputs, seed=0):
+        """Run `fn` on deterministic random inputs and write a golden test
+        vector: all inputs then all outputs, concatenated little-endian
+        (f32 / i32 per the manifest dtypes). The Rust integration tests load
+        these to verify the PJRT path bit-for-bit against jax — true
+        cross-language verification, independent of HLO-translation bugs.
+        """
+        rng = np.random.default_rng(seed)
+        concrete = []
+        for _, s in inputs:
+            if np.issubdtype(s.dtype, np.integer):
+                hi = 8  # small non-negative ints: valid for tokens and idx
+                concrete.append(rng.integers(0, hi, s.shape).astype(np.int32))
+            else:
+                concrete.append(rng.standard_normal(s.shape).astype(np.float32))
+        outs = fn(*concrete)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        path = os.path.join(self.out_dir, f"{name}.golden.bin")
+        with open(path, "wb") as f:
+            for a in concrete:
+                f.write(np.ascontiguousarray(a).tobytes())
+            for a in outs:
+                f.write(np.ascontiguousarray(np.asarray(a)).tobytes())
+        for entry in self.manifest["artifacts"]:
+            if entry["name"] == name:
+                entry["golden"] = f"{name}.golden.bin"
+        print(f"  wrote {name}.golden.bin")
+
+    def finish(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"  wrote manifest.json ({len(self.manifest['artifacts'])} artifacts)")
+
+
+def nmg_meta(mm, nn, g, M_, K):
+    C = nmg.num_patterns(mm, nn)
+    CH = -(-K // (C * g))
+    return {"m": mm, "n": nn, "g": g, "C": C, "CH": CH, "S": M_ // mm,
+            "M": M_, "K": K}
+
+
+def emit_gemms(em: Emitter, quick: bool):
+    """Standalone GEMM artifacts: dense, masked, and Pallas n:m:g."""
+    shapes = [(8, 48, 16)] if quick else [(8, 48, 16), (64, 192, 128)]
+    for (Mm, K, N) in shapes:
+        em.emit(
+            f"gemm_dense_{Mm}x{K}x{N}",
+            lambda a, b: (jnp.matmul(a, b),),
+            [("a", spec([Mm, K])), ("b", spec([K, N]))],
+            golden=True,
+        )
+        em.emit(
+            f"gemm_masked_{Mm}x{K}x{N}",
+            lambda a, mask, b: (masked_gemm(a, mask, b, mt=min(8, Mm), nt=min(16, N)),),
+            [("a", spec([Mm, K])), ("mask", spec([Mm, K])), ("b", spec([K, N]))],
+            golden=True,
+        )
+    # Pallas n:m:g GEMM: A (M, K) in n:m:g times B (K, N).
+    mm, nn, g = 4, 2, 4
+    nmg_shapes = [(8, 48, 16)] if quick else [(8, 48, 16), (16, 96, 64)]
+    for (Mm, K, N) in nmg_shapes:
+        meta = nmg_meta(mm, nn, g, Mm, K)
+        S, CH, C = meta["S"], meta["CH"], meta["C"]
+        em.emit(
+            f"gemm_nmg_{Mm}x{K}x{N}",
+            lambda val, idx, b, N=N: (nmg_gemm(val, idx, b, m=mm, n=nn, g=g, nt=min(16, N)),),
+            [
+                ("val", spec([S, CH, C, g, nn])),
+                ("idx", spec([S, CH, C, g], jnp.int32)),
+                ("b", spec([K, N])),
+            ],
+            meta={**meta, "N": N},
+            golden=True,
+        )
+
+
+def encoder_input_specs(cfg: M.EncoderConfig):
+    shapes = cfg.param_shapes()
+    return [(n, spec(shapes[n])) for n in cfg.param_names()]
+
+
+def emit_encoder(em: Emitter, cfg: M.EncoderConfig, tag: str):
+    """Whole-encoder forward + per-block artifacts + train step for `cfg`."""
+    d, f, B, S = cfg.d_model, cfg.d_ff, cfg.batch, cfg.seq
+    cfg_meta = {
+        "vocab": cfg.vocab, "seq": S, "batch": B, "d_model": d,
+        "n_heads": cfg.n_heads, "d_ff": f, "n_layers": cfg.n_layers,
+        "param_names": cfg.param_names(),
+        "masked_params": cfg.masked_param_names(),
+    }
+
+    # Whole forward.
+    params_in = encoder_input_specs(cfg)
+    em.emit(
+        f"encoder_fwd_{tag}",
+        lambda *args: (M.encoder_fwd(cfg, list(args[:-1]), args[-1]),),
+        params_in + [("tokens", spec([B, S], jnp.int32))],
+        meta=cfg_meta,
+        golden=(tag == "tiny"),
+    )
+
+    # Per-block artifacts (one attention block, one dense FFN block) — the
+    # coordinator composes these per layer.
+    em.emit(
+        f"attn_block_{tag}",
+        lambda x, ln_g, ln_b, wq, bq, wk, bk, wv, bv, wo, bo: (
+            M.attn_block(x, ln_g, ln_b, wq, bq, wk, bk, wv, bv, wo, bo,
+                         n_heads=cfg.n_heads),
+        ),
+        [
+            ("x", spec([B, S, d])),
+            ("ln_g", spec([d])), ("ln_b", spec([d])),
+            ("wq", spec([d, d])), ("bq", spec([d])),
+            ("wk", spec([d, d])), ("bk", spec([d])),
+            ("wv", spec([d, d])), ("bv", spec([d])),
+            ("wo", spec([d, d])), ("bo", spec([d])),
+        ],
+        meta=cfg_meta,
+        golden=(tag == "tiny"),
+    )
+    em.emit(
+        f"ffn_block_{tag}",
+        lambda x, ln_g, ln_b, w1, b1, w2, b2: (
+            M.ffn_block(x, ln_g, ln_b, w1, b1, w2, b2),
+        ),
+        [
+            ("x", spec([B, S, d])),
+            ("ln_g", spec([d])), ("ln_b", spec([d])),
+            ("w1", spec([d, f])), ("b1", spec([f])),
+            ("w2", spec([f, d])), ("b2", spec([d])),
+        ],
+        meta=cfg_meta,
+        golden=(tag == "tiny"),
+    )
+    # Embedding front-end and LM head, so the coordinator can run the whole
+    # model block-by-block.
+    em.emit(
+        f"embed_{tag}",
+        lambda emb, pos, tokens: (emb[tokens] + pos[None, :, :],),
+        [
+            ("emb", spec([cfg.vocab, d])), ("pos", spec([S, d])),
+            ("tokens", spec([B, S], jnp.int32)),
+        ],
+        meta=cfg_meta,
+        golden=(tag == "tiny"),
+    )
+    em.emit(
+        f"lm_head_{tag}",
+        lambda x, lnf_g, lnf_b, out_w, out_b: (
+            jnp.matmul(ref_layernorm(x, lnf_g, lnf_b), out_w) + out_b,
+        ),
+        [
+            ("x", spec([B, S, d])),
+            ("lnf_g", spec([d])), ("lnf_b", spec([d])),
+            ("out_w", spec([d, cfg.vocab])), ("out_b", spec([cfg.vocab])),
+        ],
+        meta=cfg_meta,
+        golden=(tag == "tiny"),
+    )
+
+    # n:m:g FFN block (Pallas kernel inside), W1^T (f, d) in 2:4:4.
+    mm, nn, g = 4, 2, 4
+    meta = nmg_meta(mm, nn, g, f, d)
+    em.emit(
+        f"ffn_block_nmg_{tag}",
+        lambda x, ln_g, ln_b, val, idx, b1, w2, b2: (
+            M.ffn_block_nmg(x, ln_g, ln_b, val, idx, b1, w2, b2, m=mm, n=nn, g=g),
+        ),
+        [
+            ("x", spec([B, S, d])),
+            ("ln_g", spec([d])), ("ln_b", spec([d])),
+            ("val", spec([meta["S"], meta["CH"], meta["C"], g, nn])),
+            ("idx", spec([meta["S"], meta["CH"], meta["C"], g], jnp.int32)),
+            ("b1", spec([f])),
+            ("w2", spec([f, d])), ("b2", spec([d])),
+        ],
+        meta={**cfg_meta, "nmg": meta},
+        golden=(tag == "tiny"),
+    )
+
+    # Train step: params + masks + tokens/targets + lr -> (loss, *params').
+    masks_in = [
+        (f"mask.{n}", spec(cfg.param_shapes()[n])) for n in cfg.masked_param_names()
+    ]
+    em.emit(
+        f"train_step_{tag}",
+        lambda *args: M.train_step(
+            cfg,
+            list(args[: len(params_in)]),
+            list(args[len(params_in) : len(params_in) + len(masks_in)]),
+            args[-3], args[-2], args[-1],
+        ),
+        params_in
+        + masks_in
+        + [
+            ("tokens", spec([B, S], jnp.int32)),
+            ("targets", spec([B, S], jnp.int32)),
+            ("lr", spec([], jnp.float32)),
+        ],
+        meta=cfg_meta,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--quick", action="store_true",
+                    help="emit only the small test-sized artifacts")
+    args = ap.parse_args()
+    em = Emitter(args.out)
+
+    print("[aot] GEMM artifacts")
+    emit_gemms(em, quick=args.quick)
+
+    print("[aot] encoder artifacts (tiny: pytest/cargo-test scale)")
+    tiny = M.EncoderConfig(vocab=256, seq=16, batch=2, d_model=32, n_heads=2,
+                           d_ff=64, n_layers=2)
+    emit_encoder(em, tiny, "tiny")
+
+    if not args.quick:
+        print("[aot] encoder artifacts (base: example/bench scale)")
+        base = M.EncoderConfig(vocab=2048, seq=128, batch=8, d_model=256,
+                               n_heads=4, d_ff=1024, n_layers=4)
+        emit_encoder(em, base, "base")
+
+    em.finish()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Layer-1 Pallas kernel: masked (emulated-sparse) GEMM.
+
+The training path of STen uses dense tensors + masks to emulate sparsity
+(§2, §6.1: "masked sparse training"). This kernel is the L1 building block
+for the AOT train step: ``C = (A * mask) @ B`` with the mask applied in VMEM
+so the masked operand is never materialized in HBM.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _masked_kernel(a_ref, mask_ref, b_ref, o_ref):
+    a = a_ref[...]
+    mask = mask_ref[...]
+    b = b_ref[...]
+    o_ref[...] = jnp.dot(a * mask, b, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("mt", "nt"))
+def masked_gemm(a, mask, b, *, mt=128, nt=128):
+    """``C = (A * mask) @ B`` tiled over (M, N).
+
+    Args:
+      a, mask: float32 (M, K); mask entries are 0.0 / 1.0.
+      b: float32 (K, N).
+      mt, nt: output tile sizes.
+    """
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2 and mask.shape == a.shape
+    mt = min(mt, M)
+    nt = min(nt, N)
+    assert M % mt == 0 and N % nt == 0, f"({M},{N}) not divisible by ({mt},{nt})"
+    return pl.pallas_call(
+        _masked_kernel,
+        grid=(M // mt, N // nt),
+        in_specs=[
+            pl.BlockSpec((mt, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((mt, K), lambda i, j: (i, 0)),
+            pl.BlockSpec((K, nt), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((mt, nt), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        interpret=True,
+    )(a, mask, b)

@@ -1,0 +1,139 @@
+"""Grouped n:m (n:m:g) sparsity format — reference implementation (§5 of STen).
+
+Format definition used across this repo (Python and Rust agree bit-for-bit):
+
+* A sparse matrix ``A`` of shape ``(M, K)`` with ``M % m == 0`` is split into
+  ``S = M / m`` *slabs* of ``m`` consecutive rows.
+* Within a slab, each column holds ``m`` values of which ``n`` are kept; the
+  kept row-positions form a *pattern*, one of ``C = comb(m, n)`` choices.
+* Columns are processed in *chunks* of ``chunk_cols = C * g`` consecutive
+  columns. Inside a chunk the columns are permuted so that the patterns appear
+  in a fixed (Gray-code-like) order, each repeated for a *group* of ``g``
+  columns; the original column of each slot is stored in ``idx``.
+* Trailing chunks may be partial: pad slots carry ``val = 0`` (and ``idx = 0``)
+  so kernels need no bounds logic.
+
+Stored arrays:
+
+* ``val``: float32 ``(S, CH, C, g, n)`` — the kept values per column slot.
+* ``idx``: int32 ``(S, CH, C, g)`` — original (absolute) column in ``[0, K)``.
+
+The pattern order within a chunk is chosen so adjacent patterns differ in as
+few row positions as possible (the paper's "save and initialize only one
+vector register" property); see :func:`patterns`.
+"""
+
+import math
+from functools import lru_cache
+
+import numpy as np
+
+
+@lru_cache(maxsize=None)
+def patterns(m: int, n: int) -> tuple:
+    """All C(m, n) patterns (sorted tuples of kept-row indices) in an order
+    where adjacent patterns differ minimally (greedy revolving-door order)."""
+    from itertools import combinations
+
+    combos = [tuple(c) for c in combinations(range(m), n)]
+    order = [combos.pop(0)]
+    while combos:
+        cur = set(order[-1])
+        best = min(range(len(combos)), key=lambda i: (len(cur ^ set(combos[i])), combos[i]))
+        order.append(combos.pop(best))
+    return tuple(order)
+
+
+def num_patterns(m: int, n: int) -> int:
+    """C(m, n)."""
+    return math.comb(m, n)
+
+
+def chunk_cols(m: int, n: int, g: int) -> int:
+    """Columns per chunk: C(m, n) * g."""
+    return num_patterns(m, n) * g
+
+
+def pattern_matrix(m: int, n: int) -> np.ndarray:
+    """(C, n) int32 matrix of kept-row indices, in chunk order."""
+    return np.asarray(patterns(m, n), dtype=np.int32)
+
+
+def dense_to_nmg(a: np.ndarray, n: int, m: int, g: int):
+    """Convert a dense (M, K) matrix to n:m:g arrays ``(val, idx)``.
+
+    Greedy magnitude assignment (§5.2, CPU algorithm): per slab and chunk,
+    score every (column, pattern) pair by the L1 mass the pattern preserves,
+    sort descending and assign columns to patterns first-come-first-served
+    until each pattern's group of g column slots is full.
+    """
+    a = np.asarray(a, dtype=np.float32)
+    M, K = a.shape
+    assert M % m == 0, f"rows {M} not divisible by m={m}"
+    S = M // m
+    pats = pattern_matrix(m, n)  # (C, n)
+    C = pats.shape[0]
+    cc = C * g
+    CH = -(-K // cc)  # ceil
+    val = np.zeros((S, CH, C, g, n), dtype=np.float32)
+    idx = np.zeros((S, CH, C, g), dtype=np.int32)
+
+    for s in range(S):
+        slab = a[s * m : (s + 1) * m, :]  # (m, K)
+        for ch in range(CH):
+            lo, hi = ch * cc, min((ch + 1) * cc, K)
+            cols = np.arange(lo, hi)
+            ncols = len(cols)
+            # scores[j, p] = L1 mass preserved if column cols[j] uses pattern p
+            block = np.abs(slab[:, lo:hi])  # (m, ncols)
+            scores = block[pats, :].sum(axis=1).T  # (ncols, C)
+            order = np.argsort(-scores, axis=None, kind="stable")
+            col_assigned = np.full(ncols, -1, dtype=np.int64)
+            pat_fill = np.zeros(C, dtype=np.int64)
+            assigned = 0
+            for flat in order:
+                j, p = divmod(int(flat), C)
+                if col_assigned[j] >= 0 or pat_fill[p] >= g:
+                    continue
+                col_assigned[j] = p
+                slot = pat_fill[p]
+                pat_fill[p] += 1
+                k = int(cols[j])
+                idx[s, ch, p, slot] = k
+                val[s, ch, p, slot, :] = slab[pats[p], k]
+                assigned += 1
+                if assigned == ncols:
+                    break
+            # Partial chunk: unfilled slots stay (val=0, idx=0).
+    return val, idx
+
+
+def nmg_to_dense(val: np.ndarray, idx: np.ndarray, m: int, n: int, K: int) -> np.ndarray:
+    """Convert n:m:g arrays back to a dense (M, K) matrix.
+
+    Accumulating writes make pad slots (val=0, idx=0) harmless: every real
+    column appears in exactly one slot, so ``+=`` never double-counts, and
+    pad slots only ever add zeros.
+    """
+    S, CH, C, g, n_ = val.shape
+    assert n_ == n
+    pats = pattern_matrix(m, n)  # (C, n)
+    out = np.zeros((S * m, K), dtype=np.float32)
+    cols = idx.reshape(S, -1)  # (S, CH*C*g)
+    vals = val.reshape(S, CH * C * g, n)
+    rows = np.broadcast_to(pats[None, :, None, :], (CH, C, g, n)).reshape(-1, n)
+    for s in range(S):
+        r = rows + s * m  # (slots, n)
+        np.add.at(out, (r.ravel(), np.repeat(cols[s], n)), vals[s].ravel())
+    return out
+
+
+def sparsity_of(n: int, m: int) -> float:
+    """Nominal sparsity of an n:m format."""
+    return 1.0 - n / m
+
+
+def energy(dense: np.ndarray, pruned: np.ndarray) -> float:
+    """The paper's energy metric: ||pruned||_1 / ||dense||_1 (Fig. 7)."""
+    denom = np.abs(dense).sum()
+    return float(np.abs(pruned).sum() / denom) if denom > 0 else 1.0

@@ -1,0 +1,119 @@
+"""Layer-1 Pallas kernel: n:m:g sparse-dense GEMM (§5.1 of STen).
+
+TPU adaptation of the paper's AVX2/AVX-512 kernel (see DESIGN.md
+§Hardware-Adaptation):
+
+* the chunk's fixed permutation order becomes a *static* pattern matrix, so
+  gather indices are data, not control flow;
+* the per-pattern "broadcast into vector registers" FMA loop becomes a small
+  dense (m × chunk_slots) × (chunk_slots × NT) contraction that feeds the MXU;
+* indirect loads of B rows become a VMEM gather over the stored `idx`.
+
+``interpret=True`` is mandatory on this image (CPU PJRT cannot execute Mosaic
+custom-calls); real-TPU efficiency is estimated analytically in EXPERIMENTS.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from . import nmg
+
+
+def _nmg_kernel(val_ref, idx_ref, onehot_ref, b_ref, o_ref):
+    """One grid step: one slab (m output rows) × one N tile."""
+    val = val_ref[...]        # (1, CH, C, g, n)
+    idx = idx_ref[...]        # (1, CH, C, g)
+    onehot = onehot_ref[...]  # (m, C, n) pattern scatter matrix (static data)
+    b = b_ref[...]            # (K, NT)
+    _, CH, C, g, _ = val.shape
+    slots = CH * C * g
+    # Gather the B rows each column slot multiplies (pad slots gather row 0
+    # but carry val == 0, so they contribute nothing).
+    m = onehot.shape[0]
+    gathered = b[idx.reshape(slots)]  # (slots, NT)
+    # Scatter the kept values into a chunk-dense (m, slots) tile: column slot
+    # (ch, c, gi) has its n values at rows pats[c]. Deliberately expressed as
+    # an m-leading broadcast-multiply-reduce (no einsum, no transpose): einsum
+    # lowers to a dot with non-leading batch dims, and the mul+sum+transpose
+    # form to a fusion sandwich, both of which the AOT target
+    # (xla_extension 0.5.1) miscompiles; this form lowers to version-stable
+    # primitives (verified by the golden-vector integration tests).
+    contrib = onehot[:, None, :, None, :] * val  # (m,1,C,1,n)*(1,CH,C,g,n)
+    a_cd = contrib.sum(axis=4).reshape(m, slots)
+    # MXU contraction: (m, slots) @ (slots, NT).
+    o_ref[...] = jnp.dot(a_cd, gathered, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "n", "g", "nt"))
+def nmg_gemm(val, idx, b, *, m, n, g, nt=128):
+    """Sparse-dense GEMM: ``C = A_nmg @ B``.
+
+    Args:
+      val: float32 (S, CH, C, g, n) kept values.
+      idx: int32 (S, CH, C, g) original column per slot.
+      b: float32 (K, N) dense right-hand side.
+      m, n, g: the n:m:g format parameters.
+      nt: N tile width (the lane dimension of the output block).
+
+    Returns:
+      float32 (S*m, N).
+    """
+    S, CH, C, gg, nn = val.shape
+    assert (gg, nn) == (g, n), f"format mismatch: {(gg, nn)} vs {(g, n)}"
+    K, N = b.shape
+    nt = min(nt, N)
+    assert N % nt == 0, f"N={N} not divisible by tile {nt}"
+    pats = nmg.pattern_matrix(m, n)
+    # m-first scatter matrix, built in numpy so the lowered constant carries
+    # the DEFAULT physical layout: a transposed jnp constant enters the
+    # pallas while-loop carry with layout {0,2,1}, which xla_extension 0.5.1
+    # silently misreads (the root cause of the golden-test corruption).
+    oh = np.zeros((m, pats.shape[0], n), dtype=np.float32)
+    for c, pat in enumerate(pats):
+        for j, r in enumerate(pat):
+            oh[r, c, j] = 1.0
+    onehot = jnp.asarray(oh)  # (m, C, n)
+    return pl.pallas_call(
+        _nmg_kernel,
+        grid=(S, N // nt),
+        in_specs=[
+            pl.BlockSpec((1, CH, C, g, n), lambda s, j: (s, 0, 0, 0, 0)),
+            pl.BlockSpec((1, CH, C, g), lambda s, j: (s, 0, 0, 0)),
+            pl.BlockSpec((m, C, n), lambda s, j: (0, 0, 0)),
+            pl.BlockSpec((K, nt), lambda s, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((m, nt), lambda s, j: (s, j)),
+        out_shape=jax.ShapeDtypeStruct((S * m, N), jnp.float32),
+        interpret=True,
+    )(val, idx, onehot, b)
+
+
+def vmem_estimate_bytes(m, n, g, CH, K, nt):
+    """Analytic VMEM footprint of one grid step (bytes), for DESIGN §Perf.
+
+    val + idx blocks + the full-K B tile + the output tile + the chunk-dense
+    scratch. TPU VMEM is ~16 MiB/core; this guides the choice of `nt`.
+    """
+    C = nmg.num_patterns(m, n)
+    slots = CH * C * g
+    val_b = slots * n * 4
+    idx_b = slots * 4
+    b_b = K * nt * 4
+    out_b = m * nt * 4
+    scratch = m * slots * 4 + slots * nt * 4
+    return val_b + idx_b + b_b + out_b + scratch
+
+
+def mxu_utilization_estimate(m, n, g, K, nt):
+    """Fraction of MXU work that is useful (non-pad, non-scatter overhead).
+
+    The contraction is (m × slots) @ (slots × NT); the MXU processes 128×128
+    tiles, so utilization ≈ (m / pad128(m)) × (nt / pad128(nt)) discounted by
+    the densification overhead slots/K ≈ 1 (slots counts every column once).
+    """
+    pad = lambda x: 128 * -(-x // 128)
+    return (m / pad(m)) * (min(nt, 128) / 128)

@@ -1,0 +1,47 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Every kernel in this package has a reference here; pytest (and hypothesis)
+assert ``assert_allclose(kernel(...), ref(...))`` over shape/dtype sweeps.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import nmg
+
+
+def ref_dense_gemm(a, b):
+    """C = A @ B."""
+    return jnp.matmul(a, b)
+
+
+def ref_masked_gemm(a, mask, b):
+    """C = (A * mask) @ B — masked (emulated-sparse) GEMM used in training."""
+    return jnp.matmul(a * mask, b)
+
+
+def ref_nmg_gemm(val, idx, b, *, m, n):
+    """C = densify(val, idx) @ B via the numpy reference densifier."""
+    K = b.shape[0]
+    a = nmg.nmg_to_dense(np.asarray(val), np.asarray(idx), m, n, K)
+    return jnp.matmul(jnp.asarray(a), b)
+
+
+def ref_gelu(x):
+    """tanh-approximated GeLU (matches the Rust kernels and model)."""
+    c = np.float32(np.sqrt(2.0 / np.pi))
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))
+
+
+def ref_layernorm(x, gamma, beta, eps=1e-5):
+    """LayerNorm over the last axis."""
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def ref_softmax(x, axis=-1):
+    """Numerically-stable softmax."""
+    z = x - x.max(axis=axis, keepdims=True)
+    e = jnp.exp(z)
+    return e / e.sum(axis=axis, keepdims=True)

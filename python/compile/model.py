@@ -1,0 +1,230 @@
+"""Layer-2 JAX model: BERT-style transformer encoder + masked train step.
+
+This is the compute graph the Rust coordinator executes through PJRT. It is
+lowered once by :mod:`compile.aot` to HLO text; Python never runs at serving
+or training time.
+
+Three granularities are exported:
+
+* **Blocks** (`attn_block`, `ffn_block`, `ffn_block_nmg`) — one residual
+  sub-block each; the coordinator composes them per-layer so it can dispatch
+  the FFN either to the dense PJRT artifact or to the native Rust n:m:g GEMM
+  (the STen dispatch story, end to end).
+* **Whole encoder** (`encoder_fwd`) — single-artifact forward for latency
+  baselines.
+* **Train step** (`train_step`) — fwd + cross-entropy + bwd + masked SGD
+  update; masks for the FFN weights are inputs so the Rust side can run
+  fixed-mask or recompute-mask (Fig. 9) schedules.
+"""
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import nmg
+from .kernels.nmg_gemm import nmg_gemm
+from .kernels.ref import ref_gelu, ref_layernorm, ref_softmax
+
+
+@dataclass(frozen=True)
+class EncoderConfig:
+    """Transformer encoder hyperparameters (shapes fixed at AOT time)."""
+
+    vocab: int = 2048
+    seq: int = 64
+    batch: int = 8
+    d_model: int = 128
+    n_heads: int = 4
+    d_ff: int = 512
+    n_layers: int = 2
+
+    @property
+    def head_dim(self):
+        return self.d_model // self.n_heads
+
+    def layer_param_names(self, i):
+        p = f"layer{i}."
+        return [
+            p + s
+            for s in (
+                "ln1_g", "ln1_b", "wq", "bq", "wk", "bk", "wv", "bv", "wo", "bo",
+                "ln2_g", "ln2_b", "w1", "b1", "w2", "b2",
+            )
+        ]
+
+    def param_names(self):
+        """Canonical parameter order — the artifact input order."""
+        names = ["emb", "pos"]
+        for i in range(self.n_layers):
+            names += self.layer_param_names(i)
+        names += ["lnf_g", "lnf_b", "out_w", "out_b"]
+        return names
+
+    def param_shapes(self):
+        d, f, v, s = self.d_model, self.d_ff, self.vocab, self.seq
+        shapes = {"emb": (v, d), "pos": (s, d)}
+        for i in range(self.n_layers):
+            p = f"layer{i}."
+            shapes.update({
+                p + "ln1_g": (d,), p + "ln1_b": (d,),
+                p + "wq": (d, d), p + "bq": (d,),
+                p + "wk": (d, d), p + "bk": (d,),
+                p + "wv": (d, d), p + "bv": (d,),
+                p + "wo": (d, d), p + "bo": (d,),
+                p + "ln2_g": (d,), p + "ln2_b": (d,),
+                p + "w1": (d, f), p + "b1": (f,),
+                p + "w2": (f, d), p + "b2": (d,),
+            })
+        shapes.update({"lnf_g": (d,), "lnf_b": (d,), "out_w": (d, v), "out_b": (v,)})
+        return shapes
+
+    def masked_param_names(self):
+        """Parameters that carry sparsity masks in the train step (FFN weights)."""
+        names = []
+        for i in range(self.n_layers):
+            names += [f"layer{i}.w1", f"layer{i}.w2"]
+        return names
+
+    def num_params(self):
+        return sum(int(np.prod(s)) for s in self.param_shapes().values())
+
+
+def init_params(cfg: EncoderConfig, seed: int = 0):
+    """Kaiming/normal init; returns {name: np.float32 array} in canonical order."""
+    rng = np.random.default_rng(seed)
+    params = {}
+    for name, shape in cfg.param_shapes().items():
+        if name.endswith(("_b", "_g")) or name.startswith(("b", "ln")) or ".b" in name or "ln" in name:
+            base = np.ones(shape) if name.endswith("_g") else np.zeros(shape)
+            params[name] = base.astype(np.float32)
+        elif len(shape) == 2:
+            std = (2.0 / shape[0]) ** 0.5
+            params[name] = (rng.standard_normal(shape) * std).astype(np.float32)
+        else:
+            params[name] = np.zeros(shape, dtype=np.float32)
+    # Embeddings: small normal.
+    params["emb"] = (rng.standard_normal(cfg.param_shapes()["emb"]) * 0.02).astype(np.float32)
+    params["pos"] = (rng.standard_normal(cfg.param_shapes()["pos"]) * 0.02).astype(np.float32)
+    return params
+
+
+def attn_block(x, ln_g, ln_b, wq, bq, wk, bk, wv, bv, wo, bo, *, n_heads):
+    """Pre-LN multi-head self-attention with residual. x: (B, S, D)."""
+    B, S, D = x.shape
+    hd = D // n_heads
+    y = ref_layernorm(x, ln_g, ln_b)
+    q = (y @ wq + bq).reshape(B, S, n_heads, hd).transpose(0, 2, 1, 3)
+    k = (y @ wk + bk).reshape(B, S, n_heads, hd).transpose(0, 2, 1, 3)
+    v = (y @ wv + bv).reshape(B, S, n_heads, hd).transpose(0, 2, 1, 3)
+    att = ref_softmax(q @ k.transpose(0, 1, 3, 2) / np.float32(hd**0.5))
+    o = (att @ v).transpose(0, 2, 1, 3).reshape(B, S, D)
+    return x + o @ wo + bo
+
+
+def ffn_block(x, ln_g, ln_b, w1, b1, w2, b2):
+    """Pre-LN GeLU FFN with residual. x: (B, S, D)."""
+    y = ref_layernorm(x, ln_g, ln_b)
+    return x + ref_gelu(y @ w1 + b1) @ w2 + b2
+
+
+def ffn_block_masked(x, ln_g, ln_b, w1, m1, b1, w2, m2, b2):
+    """FFN with masked (emulated-sparse) weights, the training-path form."""
+    y = ref_layernorm(x, ln_g, ln_b)
+    return x + ref_gelu(y @ (w1 * m1) + b1) @ (w2 * m2) + b2
+
+
+def ffn_block_nmg(x, ln_g, ln_b, val1, idx1, b1, w2, b2, *, m, n, g):
+    """FFN whose first linear runs through the Pallas n:m:g GEMM kernel.
+
+    ``val1/idx1`` encode W1^T (shape (F, D)) in n:m:g; the kernel computes
+    ``W1^T @ y^T`` and we transpose back.
+    """
+    B, S, D = x.shape
+    y = ref_layernorm(x, ln_g, ln_b)
+    yt = y.reshape(B * S, D).T  # (D, B*S)
+    h = nmg_gemm(val1, idx1, yt, m=m, n=n, g=g).T  # (B*S, F)
+    h = ref_gelu(h + b1)
+    out = h @ w2 + b2
+    return x + out.reshape(B, S, D)
+
+
+def encoder_fwd(cfg: EncoderConfig, params: list, tokens):
+    """Full forward: tokens (B, S) int32 -> logits (B, S, V).
+
+    `params` is a flat list in `cfg.param_names()` order.
+    """
+    names = cfg.param_names()
+    p = dict(zip(names, params))
+    x = p["emb"][tokens] + p["pos"][None, :, :]
+    for i in range(cfg.n_layers):
+        l = f"layer{i}."
+        x = attn_block(
+            x, p[l + "ln1_g"], p[l + "ln1_b"],
+            p[l + "wq"], p[l + "bq"], p[l + "wk"], p[l + "bk"],
+            p[l + "wv"], p[l + "bv"], p[l + "wo"], p[l + "bo"],
+            n_heads=cfg.n_heads,
+        )
+        x = ffn_block(
+            x, p[l + "ln2_g"], p[l + "ln2_b"],
+            p[l + "w1"], p[l + "b1"], p[l + "w2"], p[l + "b2"],
+        )
+    x = ref_layernorm(x, p["lnf_g"], p["lnf_b"])
+    return x @ p["out_w"] + p["out_b"]
+
+
+def encoder_fwd_masked(cfg: EncoderConfig, params: list, masks: list, tokens):
+    """Forward with masks applied to the FFN weights (training-path network)."""
+    names = cfg.param_names()
+    p = dict(zip(names, params))
+    mk = dict(zip(cfg.masked_param_names(), masks))
+    x = p["emb"][tokens] + p["pos"][None, :, :]
+    for i in range(cfg.n_layers):
+        l = f"layer{i}."
+        x = attn_block(
+            x, p[l + "ln1_g"], p[l + "ln1_b"],
+            p[l + "wq"], p[l + "bq"], p[l + "wk"], p[l + "bk"],
+            p[l + "wv"], p[l + "bv"], p[l + "wo"], p[l + "bo"],
+            n_heads=cfg.n_heads,
+        )
+        x = ffn_block_masked(
+            x, p[l + "ln2_g"], p[l + "ln2_b"],
+            p[l + "w1"], mk[l + "w1"], p[l + "b1"],
+            p[l + "w2"], mk[l + "w2"], p[l + "b2"],
+        )
+    x = ref_layernorm(x, p["lnf_g"], p["lnf_b"])
+    return x @ p["out_w"] + p["out_b"]
+
+
+def cross_entropy(logits, targets):
+    """Mean token-level cross entropy. logits (B,S,V), targets (B,S) int32."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    return (logz - gold).mean()
+
+
+def train_step(cfg: EncoderConfig, params: list, masks: list, tokens, targets, lr):
+    """One masked-SGD step: returns (loss, *updated_params).
+
+    Masked weights are updated as ``(p - lr * grad) * mask`` — the paper's
+    Fig. 2 semantics where the in-place update is re-sparsified with the
+    SameFormatSparsifier (here: the fixed mask). Unmasked weights take plain
+    SGD steps.
+    """
+    names = cfg.param_names()
+    masked = set(cfg.masked_param_names())
+
+    def loss_fn(ps):
+        logits = encoder_fwd_masked(cfg, ps, masks, tokens)
+        return cross_entropy(logits, targets)
+
+    loss, grads = jax.value_and_grad(loss_fn)(list(params))
+    mk = dict(zip(cfg.masked_param_names(), masks))
+    new_params = []
+    for name, p, gr in zip(names, params, grads):
+        q = p - lr * gr
+        if name in masked:
+            q = q * mk[name]
+        new_params.append(q)
+    return (loss, *new_params)

@@ -1,0 +1,71 @@
+"""AOT emitter: HLO text generation + manifest coherence."""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+def test_to_hlo_text_roundtrips_simple_fn(tmp_path):
+    import jax
+
+    def fn(a, b):
+        return (jnp.matmul(a, b) + 1.0,)
+
+    spec = aot.spec([4, 4])
+    lowered = jax.jit(fn).lower(spec, spec)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "f32[4,4]" in text
+
+
+def test_emitter_writes_artifact_and_manifest(tmp_path):
+    em = aot.Emitter(str(tmp_path))
+    entry = em.emit(
+        "toy_add",
+        lambda a, b: (a + b,),
+        [("a", aot.spec([2, 3])), ("b", aot.spec([2, 3]))],
+        meta={"k": 1},
+    )
+    em.finish()
+    assert (tmp_path / "toy_add.hlo.txt").exists()
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["artifacts"][0]["name"] == "toy_add"
+    assert entry["inputs"][0] == {"name": "a", "dtype": "float32", "shape": [2, 3]}
+    assert entry["outputs"][0]["shape"] == [2, 3]
+    assert entry["meta"] == {"k": 1}
+
+
+def test_emitter_multiple_outputs(tmp_path):
+    em = aot.Emitter(str(tmp_path))
+    entry = em.emit(
+        "toy_two",
+        lambda a: (a + 1.0, (a * 2.0).sum()),
+        [("a", aot.spec([3]))],
+    )
+    assert len(entry["outputs"]) == 2
+    assert entry["outputs"][1]["shape"] == []
+
+
+def test_nmg_meta_consistency():
+    meta = aot.nmg_meta(4, 2, 4, 16, 48)
+    assert meta["C"] == 6
+    assert meta["S"] == 4
+    assert meta["CH"] == 2  # ceil(48 / 24)
+
+
+def test_int_inputs_lower(tmp_path):
+    em = aot.Emitter(str(tmp_path))
+    entry = em.emit(
+        "toy_gather",
+        lambda emb, tok: (emb[tok],),
+        [("emb", aot.spec([16, 4])), ("tok", aot.spec([2, 3], jnp.int32))],
+    )
+    assert entry["inputs"][1]["dtype"] == "int32"
+    text = (tmp_path / "toy_gather.hlo.txt").read_text()
+    assert "s32[2,3]" in text

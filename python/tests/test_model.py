@@ -1,0 +1,126 @@
+"""L2 model: shapes, block composition, masked training semantics."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.kernels import nmg
+
+
+CFG = M.EncoderConfig(vocab=64, seq=8, batch=2, d_model=16, n_heads=2,
+                      d_ff=32, n_layers=2)
+
+
+def params_list(cfg, seed=0):
+    p = M.init_params(cfg, seed)
+    return [jnp.asarray(p[n]) for n in cfg.param_names()]
+
+
+def ones_masks(cfg):
+    shapes = cfg.param_shapes()
+    return [jnp.ones(shapes[n], jnp.float32) for n in cfg.masked_param_names()]
+
+
+def test_param_accounting():
+    names = CFG.param_names()
+    shapes = CFG.param_shapes()
+    assert len(names) == len(set(names)) == 2 + 16 * CFG.n_layers + 4
+    assert set(names) == set(shapes)
+    assert CFG.num_params() > 0
+
+
+def test_forward_shapes_and_finiteness():
+    params = params_list(CFG)
+    tokens = jnp.zeros((CFG.batch, CFG.seq), jnp.int32)
+    logits = M.encoder_fwd(CFG, params, tokens)
+    assert logits.shape == (CFG.batch, CFG.seq, CFG.vocab)
+    assert bool(jnp.isfinite(logits).all())
+
+
+def test_masked_forward_with_ones_masks_matches_dense():
+    params = params_list(CFG)
+    tokens = jnp.arange(CFG.batch * CFG.seq, dtype=jnp.int32).reshape(
+        CFG.batch, CFG.seq) % CFG.vocab
+    dense = M.encoder_fwd(CFG, params, tokens)
+    masked = M.encoder_fwd_masked(CFG, params, ones_masks(CFG), tokens)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(masked), rtol=1e-5, atol=1e-5)
+
+
+def test_block_composition_equals_full_forward():
+    """embed -> (attn, ffn)* -> lm_head equals encoder_fwd — this is what the
+    Rust coordinator does when it composes per-block artifacts."""
+    params = params_list(CFG)
+    p = dict(zip(CFG.param_names(), params))
+    tokens = (jnp.arange(CFG.batch * CFG.seq, dtype=jnp.int32)
+              .reshape(CFG.batch, CFG.seq) * 7) % CFG.vocab
+    x = p["emb"][tokens] + p["pos"][None, :, :]
+    for i in range(CFG.n_layers):
+        l = f"layer{i}."
+        x = M.attn_block(x, p[l + "ln1_g"], p[l + "ln1_b"],
+                         p[l + "wq"], p[l + "bq"], p[l + "wk"], p[l + "bk"],
+                         p[l + "wv"], p[l + "bv"], p[l + "wo"], p[l + "bo"],
+                         n_heads=CFG.n_heads)
+        x = M.ffn_block(x, p[l + "ln2_g"], p[l + "ln2_b"],
+                        p[l + "w1"], p[l + "b1"], p[l + "w2"], p[l + "b2"])
+    from compile.kernels.ref import ref_layernorm
+    logits = ref_layernorm(x, p["lnf_g"], p["lnf_b"]) @ p["out_w"] + p["out_b"]
+    full = M.encoder_fwd(CFG, params, tokens)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(full), rtol=1e-5, atol=1e-5)
+
+
+def test_ffn_block_nmg_matches_pruned_dense():
+    """The Pallas-n:m:g FFN block equals the dense FFN block run with the
+    pruned (densified) weight."""
+    m, n, g = 4, 2, 4
+    cfg = CFG
+    rng = np.random.default_rng(3)
+    d, f = cfg.d_model, cfg.d_ff
+    x = jnp.asarray(rng.standard_normal((cfg.batch, cfg.seq, d)), jnp.float32)
+    ln_g = jnp.ones((d,)); ln_b = jnp.zeros((d,))
+    w1 = rng.standard_normal((d, f)).astype(np.float32) * 0.1
+    b1 = rng.standard_normal((f,)).astype(np.float32) * 0.1
+    w2 = rng.standard_normal((f, d)).astype(np.float32) * 0.1
+    b2 = rng.standard_normal((d,)).astype(np.float32) * 0.1
+    val, idx = nmg.dense_to_nmg(w1.T, n, m, g)  # W1^T is (f, d)
+    w1_pruned = nmg.nmg_to_dense(val, idx, m, n, d).T  # back to (d, f)
+    got = M.ffn_block_nmg(x, ln_g, ln_b, jnp.asarray(val), jnp.asarray(idx),
+                          b1, w2, b2, m=m, n=n, g=g)
+    want = M.ffn_block(x, ln_g, ln_b, jnp.asarray(w1_pruned), b1, w2, b2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_train_step_reduces_loss_and_respects_masks():
+    cfg = CFG
+    params = params_list(cfg, seed=1)
+    shapes = cfg.param_shapes()
+    rng = np.random.default_rng(0)
+    masks = []
+    for nme in cfg.masked_param_names():
+        mask = (rng.random(shapes[nme]) < 0.5).astype(np.float32)
+        masks.append(jnp.asarray(mask))
+    # Pre-apply masks so weights start conforming.
+    names = cfg.param_names()
+    mk = dict(zip(cfg.masked_param_names(), masks))
+    params = [p * mk[n] if n in mk else p for n, p in zip(names, params)]
+    tokens = jnp.asarray(rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq)), jnp.int32)
+    targets = jnp.asarray(rng.integers(0, cfg.vocab, (cfg.batch, cfg.seq)), jnp.int32)
+    lr = jnp.float32(0.1)
+
+    loss0, *p1 = M.train_step(cfg, params, masks, tokens, targets, lr)
+    for _ in range(5):
+        loss, *p1 = M.train_step(cfg, list(p1), masks, tokens, targets, lr)
+    assert float(loss) < float(loss0), f"{float(loss)} !< {float(loss0)}"
+    # Masked weights stay masked after updates.
+    p1d = dict(zip(names, p1))
+    for nme in cfg.masked_param_names():
+        masked_out = np.asarray(p1d[nme]) * (1.0 - np.asarray(mk[nme]))
+        assert np.abs(masked_out).max() == 0.0
+
+
+def test_cross_entropy_uniform_logits():
+    logits = jnp.zeros((2, 3, 10))
+    targets = jnp.zeros((2, 3), jnp.int32)
+    ce = M.cross_entropy(logits, targets)
+    assert float(ce) == pytest.approx(np.log(10.0), rel=1e-5)

@@ -1,0 +1,136 @@
+"""n:m:g format invariants and conversion correctness (numpy reference)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import nmg
+
+
+@pytest.mark.parametrize("m,n", [(4, 2), (4, 1), (8, 2), (10, 1), (6, 3)])
+def test_patterns_cover_all_combinations(m, n):
+    pats = nmg.patterns(m, n)
+    assert len(pats) == nmg.num_patterns(m, n)
+    assert len(set(pats)) == len(pats)
+    for p in pats:
+        assert len(p) == n
+        assert all(0 <= r < m for r in p)
+
+
+@pytest.mark.parametrize("m,n", [(4, 2), (4, 1), (8, 2), (10, 1)])
+def test_patterns_adjacent_differ_minimally(m, n):
+    """The chunk order is chosen so adjacent patterns differ in one swap
+    (the paper's single-register save/init property)."""
+    pats = nmg.patterns(m, n)
+    for a, b in zip(pats, pats[1:]):
+        diff = len(set(a) ^ set(b))
+        assert diff == 2, f"{a} -> {b} differ in {diff} positions"
+
+
+def test_roundtrip_exact_when_structure_matches():
+    """A matrix that already satisfies the structure is preserved exactly."""
+    m, n, g = 4, 2, 2
+    C = nmg.num_patterns(m, n)
+    K = C * g * 2
+    rng = np.random.default_rng(0)
+    # Build a conforming matrix: per chunk, exactly g columns per pattern
+    # (shuffled within the chunk — the format permits in-chunk permutation).
+    a = np.zeros((m, K), dtype=np.float32)
+    pats = nmg.patterns(m, n)
+    cc = C * g
+    for ch in range(2):
+        cols = list(range(ch * cc, (ch + 1) * cc))
+        rng.shuffle(cols)
+        i = 0
+        for p in pats:
+            for _ in range(g):
+                a[list(p), cols[i]] = rng.standard_normal(n).astype(np.float32) + 2.0
+                i += 1
+    val, idx = nmg.dense_to_nmg(a, n, m, g)
+    back = nmg.nmg_to_dense(val, idx, m, n, K)
+    np.testing.assert_allclose(back, a)
+    assert nmg.energy(a, back) == pytest.approx(1.0, abs=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    st.sampled_from([(4, 2, 1), (4, 2, 4), (4, 1, 2), (8, 2, 2), (10, 1, 4)]),
+    st.integers(1, 3),  # slabs
+    st.integers(1, 40),  # K columns (may be partial chunks)
+    st.integers(0, 2**31 - 1),
+)
+def test_conversion_invariants(fmt, slabs, K, seed):
+    m, n, g = fmt
+    M = slabs * m
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((M, K)).astype(np.float32)
+    val, idx = nmg.dense_to_nmg(a, n, m, g)
+    C = nmg.num_patterns(m, n)
+    CH = -(-K // (C * g))
+    assert val.shape == (slabs, CH, C, g, n)
+    assert idx.shape == (slabs, CH, C, g)
+    # idx in range, and each real column appears at most once per slab.
+    assert idx.min() >= 0 and idx.max() < max(K, 1)
+    for s in range(slabs):
+        cols = idx[s].reshape(-1)
+        vals = val[s].reshape(-1, n)
+        real = np.abs(vals).sum(axis=1) > 0
+        real_cols = cols[real]
+        assert len(np.unique(real_cols)) == len(real_cols)
+        # idx stays within its chunk's column range.
+        for ch in range(CH):
+            lo, hi = ch * C * g, min((ch + 1) * C * g, K)
+            chunk_idx = idx[s, ch].reshape(-1)
+            chunk_real = np.abs(val[s, ch].reshape(-1, n)).sum(axis=1) > 0
+            assert ((chunk_idx[chunk_real] >= lo) & (chunk_idx[chunk_real] < hi)).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    st.sampled_from([(4, 2, 2), (4, 1, 2), (8, 2, 1)]),
+    st.integers(1, 2),
+    st.integers(4, 30),
+    st.integers(0, 2**31 - 1),
+)
+def test_roundtrip_is_nm_projection(fmt, slabs, K, seed):
+    """densify(sparsify(A)) keeps exactly n values per (column, m-block) and
+    never invents values."""
+    m, n, g = fmt
+    M = slabs * m
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((M, K)).astype(np.float32)
+    val, idx = nmg.dense_to_nmg(a, n, m, g)
+    back = nmg.nmg_to_dense(val, idx, m, n, K)
+    assert back.shape == a.shape
+    # Every kept value matches the original.
+    kept = back != 0
+    np.testing.assert_allclose(back[kept], a[kept])
+    # Per column of each slab: at most n nonzeros.
+    for s in range(slabs):
+        nnz_per_col = (back[s * m : (s + 1) * m] != 0).sum(axis=0)
+        assert (nnz_per_col <= n).all()
+
+
+def test_energy_close_to_nm_upper_bound():
+    """Fig. 7 sanity: n:m:g with larger g preserves more energy, bounded by
+    the unstructured top-k projection."""
+    m, n = 4, 2
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal((64, 96)).astype(np.float32)
+    energies = []
+    for g in (1, 4, 8):
+        val, idx = nmg.dense_to_nmg(a, n, m, g)
+        back = nmg.nmg_to_dense(val, idx, m, n, a.shape[1])
+        energies.append(nmg.energy(a, back))
+    # Unstructured top-50% energy upper bound.
+    flat = np.sort(np.abs(a).ravel())[::-1]
+    unstructured = flat[: flat.size // 2].sum() / flat.sum()
+    for e in energies:
+        assert 0.5 < e <= unstructured + 1e-6
+    # Larger groups are weakly better (more freedom inside a chunk).
+    assert energies[0] <= energies[-1] + 0.02
+
+
+def test_sparsity_of():
+    assert nmg.sparsity_of(2, 4) == 0.5
+    assert nmg.sparsity_of(1, 10) == 0.9

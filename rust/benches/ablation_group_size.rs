@@ -1,0 +1,67 @@
+//! Ablation (§5.1/§6.1 design choices): group size g and conversion algorithm.
+//!
+//! Sweeps g for fixed 2:4 sparsity and reports (a) GEMM runtime — larger
+//! groups amortize the per-pattern accumulator save/init, (b) energy —
+//! larger groups approach plain n:m, and (c) conversion cost — larger
+//! chunks make greedy assignment more expensive. Also ablates greedy vs
+//! swap-refinement conversion (§5.2 CPU vs GPU algorithm).
+//!
+//! Run: `cargo bench --bench ablation_group_size [-- --full]`
+
+use sten::energy;
+use sten::formats::NmgTensor;
+use sten::kernels::{gemm_flops, nmg_gemm};
+use sten::tensor::DenseTensor;
+use sten::util::benchkit::{parse_mode, Bench, BenchMode};
+use sten::util::rng::Pcg64;
+
+fn main() {
+    let mode = parse_mode();
+    let (m_dim, k_dim, n_dim, bench) = match mode {
+        BenchMode::Full => (768, 3072, 2048, Bench::new(2, 8)),
+        BenchMode::Quick => (256, 768, 512, Bench::new(1, 5)),
+    };
+    println!("# Ablation: group size g at 2:4, GEMM {m_dim}x{k_dim}x{n_dim} (mode {mode:?})");
+    let flops = gemm_flops(m_dim, k_dim, n_dim);
+    let mut rng = Pcg64::seeded(8);
+    let a = DenseTensor::randn(&[m_dim, k_dim], &mut rng);
+    let b = DenseTensor::randn(&[k_dim, n_dim], &mut rng);
+
+    println!("\ng\tgemm_ms\tgflops\tenergy\tconvert_ms\tbytes");
+    for g in [1usize, 2, 4, 8, 16] {
+        let conv = Bench::new(1, 3).run(|| NmgTensor::from_dense(&a, 2, 4, g));
+        let t = NmgTensor::from_dense(&a, 2, 4, g);
+        let e = energy::energy(&a, &t.to_dense());
+        let run = bench.run(|| nmg_gemm::spmm(&t, &b));
+        println!(
+            "{g}\t{:.2}\t{:.1}\t{:.4}\t{:.1}\t{}",
+            run.median * 1e3,
+            flops / run.median / 1e9,
+            e,
+            conv.median * 1e3,
+            t.bytes()
+        );
+    }
+
+    println!("\n# conversion algorithm ablation (2:4:4)");
+    let greedy = Bench::new(1, 3).run(|| NmgTensor::from_dense(&a, 2, 4, 4));
+    let tg = NmgTensor::from_dense(&a, 2, 4, 4);
+    println!(
+        "greedy\t{:.1} ms\tenergy {:.4}",
+        greedy.median * 1e3,
+        energy::energy(&a, &tg.to_dense())
+    );
+    // Swap refinement is O(chunk^2) per sweep; bench on a slice in quick mode.
+    let rows = if mode == BenchMode::Full { m_dim } else { 64.min(m_dim) };
+    let asub = DenseTensor::from_vec(
+        &[rows, k_dim],
+        a.data()[..rows * k_dim].to_vec(),
+    );
+    let swap = Bench::new(0, 2).run(|| NmgTensor::from_dense_swap(&asub, 2, 4, 4));
+    let ts = NmgTensor::from_dense_swap(&asub, 2, 4, 4);
+    println!(
+        "swap-refine ({rows} rows)\t{:.1} ms\tenergy {:.4}",
+        swap.median * 1e3,
+        energy::energy(&asub, &ts.to_dense())
+    );
+}

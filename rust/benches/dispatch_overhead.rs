@@ -1,0 +1,87 @@
+//! §4.4 dispatch overhead: direct hit vs lossless conversion vs dense
+//! fallback, plus the operator-patching route.
+//!
+//! Measures the per-call cost of each dispatch outcome on a small matmul so
+//! the dispatch machinery (signature hash, conversion search, fallback
+//! densification) dominates — the framework-overhead component of Fig. 11.
+//!
+//! Run: `cargo bench --bench dispatch_overhead [-- --full]`
+
+use sten::dispatch::{Dispatcher, PatchTable};
+use sten::formats::{AnyTensor, CooTensor, CsrTensor, Layout, MaskedTensor};
+use sten::ops::OpKind;
+use sten::tensor::DenseTensor;
+use sten::util::benchkit::{parse_mode, Bench, BenchMode};
+use sten::util::rng::Pcg64;
+
+fn main() {
+    let mode = parse_mode();
+    let (dim, bench) = match mode {
+        BenchMode::Full => (256, Bench::new(5, 40)),
+        BenchMode::Quick => (64, Bench::new(3, 20)),
+    };
+    println!("# Dispatch overhead on {dim}x{dim} matmul operands (mode {mode:?})");
+    let mut rng = Pcg64::seeded(9);
+    let w = DenseTensor::randn(&[dim, dim], &mut rng).map(|x| if x > 0.5 { x } else { 0.0 });
+    let x = AnyTensor::Dense(DenseTensor::randn(&[dim, dim], &mut rng));
+
+    let d = Dispatcher::with_builtins();
+    println!("\nroute\tper_call_us\toutcome");
+
+    // 1. Exact hit: (Dense, Dense).
+    let a = AnyTensor::Dense(w.clone());
+    let t = bench.run(|| d.call(OpKind::MatMul, &[a.clone(), x.clone()]).unwrap());
+    println!("hit (Dense,Dense)\t{:.1}\thit", t.median * 1e6);
+
+    // 2. Exact hit: (Csr, Dense) sparse kernel.
+    let a = AnyTensor::Csr(CsrTensor::from_dense(&w));
+    let t = bench.run(|| d.call(OpKind::MatMul, &[a.clone(), x.clone()]).unwrap());
+    println!("hit (Csr,Dense)\t{:.1}\thit", t.median * 1e6);
+
+    // 3. Conversion: (Coo, Dense) -> (Csr, Dense).
+    let a = AnyTensor::Coo(CooTensor::from_dense(&w));
+    d.stats.reset();
+    let t = bench.run(|| d.call(OpKind::MatMul, &[a.clone(), x.clone()]).unwrap());
+    let (_, conv, _) = d.stats.counts();
+    assert!(conv > 0, "expected conversion route");
+    println!("convert (Coo->Csr)\t{:.1}\tconversion", t.median * 1e6);
+
+    // 4. Dense fallback: softmax on a masked tensor.
+    let a = AnyTensor::Masked(MaskedTensor::from_dense(&w));
+    d.stats.reset();
+    let t = bench.run(|| d.call(OpKind::Softmax, &[a.clone()]).unwrap());
+    let (_, _, fb) = d.stats.counts();
+    assert!(fb > 0, "expected fallback route");
+    println!("fallback (Softmax on Masked)\t{:.1}\tdense fallback", t.median * 1e6);
+
+    // 5. Patched external function with sparse input.
+    let table = PatchTable::new();
+    fn ext_matmul(ins: &[AnyTensor]) -> anyhow::Result<AnyTensor> {
+        Ok(AnyTensor::Dense(sten::kernels::dense_gemm::matmul(
+            ins[0].as_dense().unwrap(),
+            ins[1].as_dense().unwrap(),
+        )))
+    }
+    table.patch("ext.matmul", ext_matmul, OpKind::MatMul);
+    let a = AnyTensor::Csr(CsrTensor::from_dense(&w));
+    let t = bench.run(|| table.call(&d, "ext.matmul", &[a.clone(), x.clone()]).unwrap());
+    println!("patched (Csr via ext.matmul)\t{:.1}\tpatch->hit", t.median * 1e6);
+
+    // 6. Pure dispatch decision cost: tiny operands so the kernel is ~free.
+    let tiny_a = AnyTensor::Dense(DenseTensor::ones(&[2, 2]));
+    let tiny_b = AnyTensor::Dense(DenseTensor::ones(&[2, 2]));
+    let t = bench.run(|| d.call(OpKind::MatMul, &[tiny_a.clone(), tiny_b.clone()]).unwrap());
+    println!("decision-only (2x2)\t{:.2}\thit", t.median * 1e6);
+
+    let (dispatch_s, kernel_s) = d.stats.times();
+    println!(
+        "\ncumulative: dispatch {:.1} ms vs kernel {:.1} ms ({:.1}% dispatch share)",
+        dispatch_s * 1e3,
+        kernel_s * 1e3,
+        100.0 * dispatch_s / (dispatch_s + kernel_s)
+    );
+
+    // Registered-layout sanity: at least one signature per builtin op.
+    assert!(d.len() >= 14);
+    let _ = Layout::Dense;
+}

@@ -1,0 +1,66 @@
+//! Fig. 11: end-to-end encoder inference latency with breakdown.
+//!
+//! Runs the coordinator over the AOT artifacts in each FFN execution mode
+//! and reports median latency plus the runtime/native/framework split (the
+//! paper's "STen time vs PyTorch runtime" breakdown). Paper claims to
+//! reproduce in shape: sparse n:m:g inference beats the dense baseline, and
+//! a visible share of residual latency is framework/runtime overhead rather
+//! than kernels.
+//!
+//! Run: `cargo bench --bench fig11_e2e_inference [-- --full]`
+//! (full mode uses the `base` artifacts: d_model 256, 4 layers, seq 128.)
+
+use sten::coordinator::{Engine, FfnMode};
+use sten::runtime::ArtifactRuntime;
+use sten::util::benchkit::{parse_mode, Bench, BenchMode};
+use sten::util::rng::Pcg64;
+
+fn main() {
+    let mode = parse_mode();
+    let (tag, bench) = match mode {
+        BenchMode::Full => ("base", Bench::new(2, 10)),
+        BenchMode::Quick => ("tiny", Bench::new(2, 8)),
+    };
+    println!("# Fig 11: end-to-end encoder inference, artifacts `{tag}` (mode {mode:?})");
+    println!("\nffn_mode\tmedian_ms\tspeedup_vs_dense_artifact\truntime_ms\tnative_ms\tframework_ms");
+
+    let modes: Vec<(&str, FfnMode)> = vec![
+        ("dense-artifact", FfnMode::DenseArtifact),
+        ("native-dense", FfnMode::NativeDense),
+        ("nmg-2:4:4", FfnMode::NativeNmg { n: 2, m: 4, g: 4 }),
+        ("nmg-1:4:4", FfnMode::NativeNmg { n: 1, m: 4, g: 4 }),
+        ("nmg-2:8:4", FfnMode::NativeNmg { n: 2, m: 8, g: 4 }),
+    ];
+    let mut dense = None;
+    for (name, ffn) in modes {
+        let rt = ArtifactRuntime::open_default().expect("make artifacts first");
+        let mut engine = Engine::new(rt, tag, ffn, 42).unwrap();
+        let mut rng = Pcg64::seeded(7);
+        let tokens = engine.random_tokens(&mut rng);
+        engine.forward(&tokens).unwrap(); // warm (compile)
+        engine.reset_timing();
+        let sample = bench.run(|| engine.forward(&tokens).unwrap());
+        let t = engine.timing();
+        // Timing accumulates over warmup + measured iterations.
+        let total_calls = (bench.warmup + sample.iters) as f64;
+        println!(
+            "{name}\t{:.2}\t{:.2}\t{:.2}\t{:.2}\t{:.2}",
+            sample.median * 1e3,
+            dense.get_or_insert(sample.median).to_owned() / sample.median,
+            t.secs("runtime") / total_calls * 1e3,
+            t.secs("native") / total_calls * 1e3,
+            t.secs("framework") / total_calls * 1e3,
+        );
+    }
+
+    // Monolithic single-artifact forward for contrast (inference-engine analog
+    // with zero per-block framework overhead).
+    let rt = ArtifactRuntime::open_default().unwrap();
+    let mut engine = Engine::new(rt, tag, FfnMode::DenseArtifact, 42).unwrap();
+    let mut rng = Pcg64::seeded(7);
+    let tokens = engine.random_tokens(&mut rng);
+    engine.forward_monolithic(&tokens).unwrap();
+    let sample = bench.run(|| engine.forward_monolithic(&tokens).unwrap());
+    println!("monolithic-artifact\t{:.2}\t{:.2}\t-\t-\t-",
+        sample.median * 1e3, dense.unwrap() / sample.median);
+}

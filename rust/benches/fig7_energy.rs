@@ -1,0 +1,50 @@
+//! Fig. 7: energy (||pruned||_1 / ||dense||_1) vs sparsity structure.
+//!
+//! Compares unstructured magnitude pruning, n:m, n:m:g with g in {1,4,16},
+//! and 4x4 block pruning on a BERT-shaped weight tensor. Paper claims:
+//! unstructured >= n:m >= n:m:g (approaching n:m as g grows) > blocked.
+//!
+//! Run: `cargo bench --bench fig7_energy [-- --full]`
+
+use sten::energy;
+use sten::tensor::DenseTensor;
+use sten::util::benchkit::{parse_mode, BenchMode};
+use sten::util::rng::Pcg64;
+
+fn main() {
+    let mode = parse_mode();
+    let (rows, cols) = match mode {
+        BenchMode::Full => (760, 3072), // ~BERT_BASE FFN weight; rows % {4,8,10} == 0
+        BenchMode::Quick => (120, 480),
+    };
+    let mut rng = Pcg64::seeded(1);
+    let w = DenseTensor::randn(&[rows, cols], &mut rng);
+    println!("# Fig 7: energy vs structure, weight {rows}x{cols} (mode {mode:?})");
+    println!("sparsity\tformat\tenergy");
+
+    // (n, m) pairs spanning the paper's 50-90% sparsity range.
+    for (n, m) in [(2usize, 4usize), (1, 4), (2, 8), (1, 8), (1, 10)] {
+        let s = 1.0 - n as f32 / m as f32;
+        println!("{s:.2}\tunstructured\t{:.4}", energy::energy_unstructured(&w, s));
+        println!("{s:.2}\t{n}:{m}\t{:.4}", energy::energy_nm(&w, n, m));
+        for g in [1usize, 4, 16] {
+            println!("{s:.2}\t{n}:{m}:{g}\t{:.4}", energy::energy_nmg(&w, n, m, g));
+        }
+        println!("{s:.2}\tblocked-4x4\t{:.4}", energy::energy_blocked(&w, s, 4, 4));
+    }
+
+    // Storage context (paper §2: sparse formats must also save bytes).
+    println!("\n# storage at 2:4(:4), bytes");
+    for (name, bytes) in energy::storage_report(&w, 2, 4, 4) {
+        println!("{name}\t{bytes}");
+    }
+
+    // Shape assertions (the figure's qualitative claims).
+    let unstructured = energy::energy_unstructured(&w, 0.5);
+    let nm = energy::energy_nm(&w, 2, 4);
+    let nmg16 = energy::energy_nmg(&w, 2, 4, 16);
+    let nmg1 = energy::energy_nmg(&w, 2, 4, 1);
+    let blocked = energy::energy_blocked(&w, 0.5, 4, 4);
+    assert!(unstructured >= nm && nm >= nmg16 - 1e-6 && nmg16 >= nmg1 - 0.02 && nmg1 > blocked);
+    println!("\nfig7 shape check OK: unstructured >= n:m >= n:m:g(16) >= n:m:g(1) > blocked");
+}

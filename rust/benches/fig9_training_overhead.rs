@@ -1,0 +1,87 @@
+//! Fig. 9: masked-training overheads by format and sparsification mode.
+//!
+//! Measures per-step training time of the masked MLP trainer relative to
+//! dense training, for unstructured / n:m / n:m:g mask formats, in two
+//! regimes: *fixed* sparsification (mask reused every step — the common
+//! case) and *new* sparsification (mask recomputed every step — e.g. when
+//! sparsity increases). Paper claims: fixed is cheap for all formats; new
+//! is more expensive for formats with complex constraints (n:m:g > n:m >
+//! unstructured).
+//!
+//! Run: `cargo bench --bench fig9_training_overhead [-- --full]`
+
+use sten::model::MlpSpec;
+use sten::train::data::ClusterDataset;
+use sten::train::masked::{compute_mask, MaskFormat, MaskedTrainer};
+use sten::train::schedule::PruneEvent;
+use sten::util::benchkit::{parse_mode, Bench, BenchMode};
+use sten::util::rng::Pcg64;
+
+fn main() {
+    let mode = parse_mode();
+    let (spec, batch, bench) = match mode {
+        BenchMode::Full => (
+            MlpSpec { input_dim: 256, hidden: vec![1024, 1024], classes: 10 },
+            256,
+            Bench::new(2, 10),
+        ),
+        BenchMode::Quick => (
+            MlpSpec { input_dim: 64, hidden: vec![256, 256], classes: 10 },
+            64,
+            Bench::new(1, 6),
+        ),
+    };
+    println!(
+        "# Fig 9: masked training overheads, MLP {:?} batch {batch} (mode {mode:?})",
+        spec.layer_dims()
+    );
+
+    let mut rng = Pcg64::seeded(5);
+    let ds = ClusterDataset::new(spec.input_dim, spec.classes, 0.4, 9);
+    let mut data_rng = Pcg64::seeded(17);
+    let (x, y) = ds.batch(batch, &mut data_rng);
+
+    // Dense baseline: trainer with all-ones masks, never re-sparsified.
+    let params = spec.init(&mut rng);
+    let mut dense_tr = MaskedTrainer::new(spec.clone(), params.clone(), 0.05, MaskFormat::Unstructured);
+    let t_dense = bench.run(|| dense_tr.step(&x, &y).unwrap()).median;
+    println!("\nformat\tmode\tstep_ms\toverhead_vs_dense");
+    println!("dense\t-\t{:.2}\t1.00", t_dense * 1e3);
+
+    let formats: Vec<(&str, MaskFormat)> = vec![
+        ("unstructured", MaskFormat::Unstructured),
+        ("2:4", MaskFormat::Nm { m: 4 }),
+        ("2:4:4", MaskFormat::Nmg { m: 4, g: 4 }),
+    ];
+    for (name, fmt) in formats {
+        // Fixed sparsification: prune once, then train with the fixed mask.
+        let mut tr = MaskedTrainer::new(spec.clone(), params.clone(), 0.05, fmt);
+        tr.apply_event(&PruneEvent { layers: Vec::new(), sparsity: 0.5 });
+        let t_fixed = bench.run(|| tr.step(&x, &y).unwrap()).median;
+        println!("{name}\tfixed\t{:.2}\t{:.2}", t_fixed * 1e3, t_fixed / t_dense);
+
+        // New sparsification: recompute masks every step.
+        let mut tr = MaskedTrainer::new(spec.clone(), params.clone(), 0.05, fmt);
+        tr.apply_event(&PruneEvent { layers: Vec::new(), sparsity: 0.5 });
+        let t_new = bench
+            .run(|| {
+                tr.apply_event(&PruneEvent { layers: Vec::new(), sparsity: 0.5 });
+                tr.step(&x, &y).unwrap()
+            })
+            .median;
+        println!("{name}\tnew\t{:.2}\t{:.2}", t_new * 1e3, t_new / t_dense);
+    }
+
+    // Mask recomputation cost alone (the Fig. 9 "new sparsification" bar).
+    println!("\n# mask recomputation alone, largest layer");
+    let (din, dout) = *spec.layer_dims().iter().max_by_key(|(a, b)| a * b).unwrap();
+    let w = sten::tensor::DenseTensor::randn(&[din, dout], &mut rng);
+    for (name, fmt) in [
+        ("unstructured", MaskFormat::Unstructured),
+        ("2:4", MaskFormat::Nm { m: 4 }),
+        ("2:4:4", MaskFormat::Nmg { m: 4, g: 4 }),
+    ] {
+        let t = bench.run(|| compute_mask(&w, 0.5, fmt)).median;
+        println!("{name}\t{:.3} ms", t * 1e3);
+    }
+}

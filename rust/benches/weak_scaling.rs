@@ -1,0 +1,126 @@
+//! §6.1 weak scaling: distributed masked training overhead vs worker count.
+//!
+//! Fixed per-worker batch, workers 1..=N (in-process replicas + real ring
+//! allreduce). Reports per-step time for dense vs masked-sparse gradient
+//! synchronization, and the share of step time spent on sparse handling
+//! (dense conversion + re-sparsification). Paper claims: conservative
+//! convert-and-resparsify handling adds < 10% weak-scaling overhead.
+//!
+//! Run: `cargo bench --bench weak_scaling [-- --full]`
+
+use std::collections::BTreeMap;
+
+use sten::autograd::Tape;
+use sten::dist::collective::RingAllreduce;
+use sten::dist::ddp::{sync_gradients, GradSyncMode, GradSyncStats};
+use sten::formats::{AnyTensor, MaskedTensor};
+use sten::model::MlpSpec;
+use sten::tensor::DenseTensor;
+use sten::train::data::ClusterDataset;
+use sten::train::masked::{compute_mask, MaskFormat};
+use sten::util::benchkit::{parse_mode, Bench, BenchMode};
+use sten::util::rng::Pcg64;
+
+fn step_time(spec: &MlpSpec, workers: usize, mode: GradSyncMode, batch: usize, bench: Bench) -> (f64, GradSyncStats) {
+    let mut rng = Pcg64::seeded(21);
+    let mut params = spec.init(&mut rng);
+    let masks: BTreeMap<String, DenseTensor> = spec
+        .prunable_weights()
+        .into_iter()
+        .map(|nm| (nm.clone(), compute_mask(&params[&nm], 0.5, MaskFormat::Nm { m: 4 })))
+        .collect();
+    for (nm, mask) in &masks {
+        let w = params[nm].zip(mask, |v, m| v * m);
+        params.insert(nm.clone(), w);
+    }
+    let ds = ClusterDataset::new(spec.input_dim, spec.classes, 0.4, 5);
+    let ring = RingAllreduce::new(workers);
+    let names = spec.weight_names();
+    let mut stats_acc = GradSyncStats::default();
+
+    let sample = bench.run(|| {
+        // Per-worker gradients.
+        let grads: Vec<BTreeMap<String, DenseTensor>> = (0..workers)
+            .map(|w| {
+                let mut r = Pcg64::new(100, w as u64);
+                let (x, y) = ds.batch(batch, &mut r);
+                let tape = Tape::new();
+                let (logits, vars) = spec.forward_tape(&tape, &params, x);
+                let loss = tape.softmax_cross_entropy(logits, &y);
+                tape.backward(loss).unwrap();
+                vars.iter().map(|(nm, v)| (nm.clone(), tape.grad(*v).unwrap())).collect()
+            })
+            .collect();
+        // Synchronize.
+        for nm in &names {
+            let per: Vec<AnyTensor> = grads
+                .iter()
+                .map(|g| match (mode, masks.get(nm)) {
+                    (GradSyncMode::Dense, _) | (_, None) => AnyTensor::Dense(g[nm].clone()),
+                    (_, Some(mask)) => {
+                        AnyTensor::Masked(MaskedTensor::new(g[nm].clone(), mask.clone()))
+                    }
+                })
+                .collect();
+            let (_, st) = sync_gradients(&ring, &per, mode).unwrap();
+            stats_acc.to_dense_s += st.to_dense_s;
+            stats_acc.allreduce_s += st.allreduce_s;
+            stats_acc.resparsify_s += st.resparsify_s;
+        }
+    });
+    (sample.median, stats_acc)
+}
+
+fn main() {
+    let mode = parse_mode();
+    let (spec, batch, bench, max_workers) = match mode {
+        BenchMode::Full => (
+            MlpSpec { input_dim: 256, hidden: vec![1024], classes: 10 },
+            64,
+            Bench::new(1, 6),
+            16,
+        ),
+        BenchMode::Quick => (
+            MlpSpec { input_dim: 64, hidden: vec![256], classes: 10 },
+            32,
+            Bench::new(1, 4),
+            8,
+        ),
+    };
+    println!("# Weak scaling: fixed per-worker batch {batch} (mode {mode:?})");
+    println!("\nworkers\tdense_ms\tsparse_ms\tsparse_overhead_pct\tdense_efficiency\tsparse_efficiency");
+    let mut base: Option<(f64, f64)> = None;
+    let mut w = 1;
+    while w <= max_workers {
+        let (t_dense, _) = step_time(&spec, w, GradSyncMode::Dense, batch, bench);
+        let (t_sparse, st) = step_time(&spec, w, GradSyncMode::SparseResparsify, batch, bench);
+        let (d0, s0) = *base.get_or_insert((t_dense, t_sparse));
+        let overhead = 100.0 * (t_sparse - t_dense).max(0.0) / t_dense;
+        println!(
+            "{w}\t{:.2}\t{:.2}\t{overhead:.1}\t{:.2}\t{:.2}",
+            t_dense * 1e3,
+            t_sparse * 1e3,
+            d0 / t_dense,
+            s0 / t_sparse
+        );
+        let _ = st;
+        w *= 2;
+    }
+
+    // Fixed-pattern optimization (§4.6): resparsify vs pattern-reuse.
+    println!("\n# sync-mode comparison at max workers");
+    for (name, m) in [
+        ("dense", GradSyncMode::Dense),
+        ("sparse-resparsify", GradSyncMode::SparseResparsify),
+        ("sparse-fixed-pattern", GradSyncMode::SparseFixedPattern),
+    ] {
+        let (t, st) = step_time(&spec, max_workers, m, batch, bench);
+        println!(
+            "{name}\t{:.2} ms/step (to_dense {:.2} allreduce {:.2} resparsify {:.2})",
+            t * 1e3,
+            st.to_dense_s * 1e3,
+            st.allreduce_s * 1e3,
+            st.resparsify_s * 1e3
+        );
+    }
+}

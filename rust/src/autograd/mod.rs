@@ -1,0 +1,458 @@
+//! Reverse-mode autograd with sparsified gradients (§4.5, Fig. 2).
+//!
+//! A minimal tape over [`DenseTensor`] compute, reproducing the STen
+//! attachment points: every parameter can carry a *gradient output format*
+//! (inline sparsifier → temporary layout → external sparsifier → final
+//! layout), applied when its gradient is materialized during backward — the
+//! `grad_fmt` argument of `SparseParameterWrapper` in the paper.
+
+use std::cell::RefCell;
+
+use anyhow::{anyhow, Result};
+
+use crate::dispatch::OutputFormat;
+use crate::formats::AnyTensor;
+use crate::kernels::{dense_gemm, elementwise};
+use crate::tensor::DenseTensor;
+
+/// A variable on the tape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Var(usize);
+
+enum Expr {
+    Leaf,
+    MatMul(Var, Var),
+    Add(Var, Var),
+    Mul(Var, Var),
+    BiasAdd(Var, Var),
+    Relu(Var),
+    Gelu(Var),
+    Scale(Var, f32),
+    /// Mean softmax cross-entropy against integer labels; scalar output.
+    SoftmaxXent(Var, Vec<usize>),
+    /// Mean squared error against a constant target; scalar output.
+    Mse(Var, DenseTensor),
+}
+
+struct Node {
+    value: DenseTensor,
+    expr: Expr,
+    grad: Option<DenseTensor>,
+    /// Sparsified gradient view (populated when a grad format is attached).
+    sparse_grad: Option<AnyTensor>,
+    grad_fmt: Option<OutputFormat>,
+    requires_grad: bool,
+}
+
+/// The gradient tape. Single-threaded (interior mutability via `RefCell`),
+/// rebuilt per step — the standard define-by-run model.
+#[derive(Default)]
+pub struct Tape {
+    nodes: RefCell<Vec<Node>>,
+}
+
+impl Tape {
+    /// Empty tape.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn push(&self, value: DenseTensor, expr: Expr, requires_grad: bool) -> Var {
+        let mut nodes = self.nodes.borrow_mut();
+        nodes.push(Node {
+            value,
+            expr,
+            grad: None,
+            sparse_grad: None,
+            grad_fmt: None,
+            requires_grad,
+        });
+        Var(nodes.len() - 1)
+    }
+
+    /// Non-differentiable input (activations, data).
+    pub fn input(&self, value: DenseTensor) -> Var {
+        self.push(value, Expr::Leaf, false)
+    }
+
+    /// Trainable parameter.
+    pub fn param(&self, value: DenseTensor) -> Var {
+        self.push(value, Expr::Leaf, true)
+    }
+
+    /// Trainable parameter with a gradient output format (Fig. 2: the weight
+    /// gradient is sparsified on materialization).
+    pub fn param_with_grad_fmt(&self, value: DenseTensor, fmt: OutputFormat) -> Var {
+        let v = self.push(value, Expr::Leaf, true);
+        self.nodes.borrow_mut()[v.0].grad_fmt = Some(fmt);
+        v
+    }
+
+    /// Current value of a variable.
+    pub fn value(&self, v: Var) -> DenseTensor {
+        self.nodes.borrow()[v.0].value.clone()
+    }
+
+    /// Dense gradient of a variable (after `backward`).
+    pub fn grad(&self, v: Var) -> Option<DenseTensor> {
+        self.nodes.borrow()[v.0].grad.clone()
+    }
+
+    /// Sparsified gradient (present when a grad format was attached).
+    pub fn sparse_grad(&self, v: Var) -> Option<AnyTensor> {
+        self.nodes.borrow()[v.0].sparse_grad.clone()
+    }
+
+    /// C = A · B.
+    pub fn matmul(&self, a: Var, b: Var) -> Var {
+        let value = {
+            let nodes = self.nodes.borrow();
+            dense_gemm::matmul(&nodes[a.0].value, &nodes[b.0].value)
+        };
+        self.push(value, Expr::MatMul(a, b), true)
+    }
+
+    /// Elementwise add.
+    pub fn add(&self, a: Var, b: Var) -> Var {
+        let value = {
+            let nodes = self.nodes.borrow();
+            nodes[a.0].value.zip(&nodes[b.0].value, |x, y| x + y)
+        };
+        self.push(value, Expr::Add(a, b), true)
+    }
+
+    /// Elementwise multiply.
+    pub fn mul(&self, a: Var, b: Var) -> Var {
+        let value = {
+            let nodes = self.nodes.borrow();
+            nodes[a.0].value.zip(&nodes[b.0].value, |x, y| x * y)
+        };
+        self.push(value, Expr::Mul(a, b), true)
+    }
+
+    /// Bias add over the rows of a 2-D tensor.
+    pub fn bias_add(&self, x: Var, bias: Var) -> Var {
+        let value = {
+            let nodes = self.nodes.borrow();
+            elementwise::bias_add(&nodes[x.0].value, nodes[bias.0].value.data())
+        };
+        self.push(value, Expr::BiasAdd(x, bias), true)
+    }
+
+    /// ReLU.
+    pub fn relu(&self, x: Var) -> Var {
+        let value = elementwise::relu(&self.nodes.borrow()[x.0].value);
+        self.push(value, Expr::Relu(x), true)
+    }
+
+    /// GeLU.
+    pub fn gelu(&self, x: Var) -> Var {
+        let value = elementwise::gelu(&self.nodes.borrow()[x.0].value);
+        self.push(value, Expr::Gelu(x), true)
+    }
+
+    /// Scalar scale.
+    pub fn scale(&self, x: Var, alpha: f32) -> Var {
+        let value = self.nodes.borrow()[x.0].value.map(|v| v * alpha);
+        self.push(value, Expr::Scale(x, alpha), true)
+    }
+
+    /// Mean softmax cross-entropy of 2-D logits against integer labels.
+    pub fn softmax_cross_entropy(&self, logits: Var, labels: &[usize]) -> Var {
+        let value = {
+            let nodes = self.nodes.borrow();
+            let l = &nodes[logits.0].value;
+            assert_eq!(l.rows(), labels.len(), "label count mismatch");
+            let probs = elementwise::softmax_rows(l);
+            let mut loss = 0f32;
+            for (i, &y) in labels.iter().enumerate() {
+                loss -= probs.get2(i, y).max(1e-12).ln();
+            }
+            DenseTensor::from_vec(&[], vec![loss / labels.len() as f32])
+        };
+        self.push(value, Expr::SoftmaxXent(logits, labels.to_vec()), true)
+    }
+
+    /// Mean squared error against a constant target.
+    pub fn mse(&self, x: Var, target: &DenseTensor) -> Var {
+        let value = {
+            let nodes = self.nodes.borrow();
+            let diff = nodes[x.0].value.zip(target, |a, b| a - b);
+            let n = diff.numel() as f32;
+            DenseTensor::from_vec(&[], vec![diff.data().iter().map(|d| d * d).sum::<f32>() / n])
+        };
+        self.push(value, Expr::Mse(x, target.clone()), true)
+    }
+
+    /// Run reverse-mode accumulation from a scalar `root`.
+    pub fn backward(&self, root: Var) -> Result<()> {
+        let mut nodes = self.nodes.borrow_mut();
+        if nodes[root.0].value.numel() != 1 {
+            return Err(anyhow!("backward root must be scalar"));
+        }
+        for n in nodes.iter_mut() {
+            n.grad = None;
+            n.sparse_grad = None;
+        }
+        nodes[root.0].grad = Some(DenseTensor::from_vec(&[], vec![1.0]));
+
+        for i in (0..=root.0).rev() {
+            let Some(gout) = nodes[i].grad.clone() else { continue };
+            // Split borrows by taking the expr description first.
+            match &nodes[i].expr {
+                Expr::Leaf => {}
+                Expr::MatMul(a, b) => {
+                    let (a, b) = (*a, *b);
+                    let av = nodes[a.0].value.clone();
+                    let bv = nodes[b.0].value.clone();
+                    let da = dense_gemm::matmul(&gout, &bv.transpose2());
+                    let db = dense_gemm::matmul(&av.transpose2(), &gout);
+                    accumulate(&mut nodes[a.0], da);
+                    accumulate(&mut nodes[b.0], db);
+                }
+                Expr::Add(a, b) => {
+                    let (a, b) = (*a, *b);
+                    accumulate(&mut nodes[a.0], gout.clone());
+                    accumulate(&mut nodes[b.0], gout);
+                }
+                Expr::Mul(a, b) => {
+                    let (a, b) = (*a, *b);
+                    let av = nodes[a.0].value.clone();
+                    let bv = nodes[b.0].value.clone();
+                    accumulate(&mut nodes[a.0], gout.zip(&bv, |g, y| g * y));
+                    accumulate(&mut nodes[b.0], gout.zip(&av, |g, x| g * x));
+                }
+                Expr::BiasAdd(x, bias) => {
+                    let (x, bias) = (*x, *bias);
+                    let cols = gout.cols();
+                    let mut db = vec![0f32; cols];
+                    for (j, v) in gout.data().iter().enumerate() {
+                        db[j % cols] += v;
+                    }
+                    accumulate(&mut nodes[x.0], gout);
+                    accumulate(&mut nodes[bias.0], DenseTensor::from_vec(&[cols], db));
+                }
+                Expr::Relu(x) => {
+                    let x = *x;
+                    let mask = nodes[x.0].value.map(|v| if v > 0.0 { 1.0 } else { 0.0 });
+                    accumulate(&mut nodes[x.0], gout.zip(&mask, |g, m| g * m));
+                }
+                Expr::Gelu(x) => {
+                    let x = *x;
+                    let dg = elementwise::gelu_grad(&nodes[x.0].value);
+                    accumulate(&mut nodes[x.0], gout.zip(&dg, |g, d| g * d));
+                }
+                Expr::Scale(x, alpha) => {
+                    let (x, alpha) = (*x, *alpha);
+                    accumulate(&mut nodes[x.0], gout.map(|g| g * alpha));
+                }
+                Expr::SoftmaxXent(logits, labels) => {
+                    let logits = *logits;
+                    let labels = labels.clone();
+                    let probs = elementwise::softmax_rows(&nodes[logits.0].value);
+                    let batch = labels.len() as f32;
+                    let mut g = probs;
+                    for (i, &y) in labels.iter().enumerate() {
+                        let cur = g.get2(i, y);
+                        g.set2(i, y, cur - 1.0);
+                    }
+                    g.scale(gout.data()[0] / batch);
+                    accumulate(&mut nodes[logits.0], g);
+                }
+                Expr::Mse(x, target) => {
+                    let x = *x;
+                    let target = target.clone();
+                    let n = nodes[x.0].value.numel() as f32;
+                    let g = nodes[x.0]
+                        .value
+                        .zip(&target, |a, b| 2.0 * (a - b) / n)
+                        .map(|v| v * gout.data()[0]);
+                    accumulate(&mut nodes[x.0], g);
+                }
+            }
+        }
+
+        // Apply gradient output formats (Fig. 2: sparsify weight gradients).
+        for n in nodes.iter_mut() {
+            if let (Some(fmt), Some(g)) = (&n.grad_fmt, &n.grad) {
+                let sparse = fmt.apply(&AnyTensor::Dense(g.clone()))?;
+                // The dense view also reflects the sparsified gradient.
+                n.grad = Some(sparse.to_dense());
+                n.sparse_grad = Some(sparse);
+            }
+        }
+        Ok(())
+    }
+
+    /// SGD step over the given parameters: `p -= lr * grad(p)`.
+    pub fn sgd_step(&self, params: &[Var], lr: f32) {
+        let mut nodes = self.nodes.borrow_mut();
+        for &p in params {
+            let g = nodes[p.0].grad.clone().expect("missing grad; call backward first");
+            nodes[p.0].value.axpy(-lr, &g);
+        }
+    }
+}
+
+fn accumulate(node: &mut Node, g: DenseTensor) {
+    if !node.requires_grad && matches!(node.expr, Expr::Leaf) {
+        return;
+    }
+    match &mut node.grad {
+        Some(acc) => acc.axpy(1.0, &g),
+        slot @ None => *slot = Some(g),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Layout;
+    use crate::sparsify::ScalarFraction;
+    use crate::util::rng::Pcg64;
+
+    /// Finite-difference check of d(loss)/d(param[i]).
+    fn fd_check(build: impl Fn(&DenseTensor) -> f32, w: &DenseTensor, grad: &DenseTensor) {
+        let eps = 1e-2;
+        for i in (0..w.numel()).step_by((w.numel() / 8).max(1)) {
+            let mut up = w.clone();
+            up.data_mut()[i] += eps;
+            let mut dn = w.clone();
+            dn.data_mut()[i] -= eps;
+            let fd = (build(&up) - build(&dn)) / (2.0 * eps);
+            let an = grad.data()[i];
+            assert!(
+                (fd - an).abs() < 2e-2 * (1.0 + fd.abs()),
+                "param {i}: fd {fd} vs autograd {an}"
+            );
+        }
+    }
+
+    #[test]
+    fn linear_mse_gradients_match_finite_difference() {
+        let mut rng = Pcg64::seeded(300);
+        let x0 = DenseTensor::randn(&[4, 5], &mut rng);
+        let w0 = DenseTensor::randn(&[5, 3], &mut rng);
+        let t0 = DenseTensor::randn(&[4, 3], &mut rng);
+
+        let loss_of = |w: &DenseTensor| {
+            let tape = Tape::new();
+            let x = tape.input(x0.clone());
+            let wv = tape.param(w.clone());
+            let y = tape.matmul(x, wv);
+            let l = tape.mse(y, &t0);
+            tape.value(l).data()[0]
+        };
+
+        let tape = Tape::new();
+        let x = tape.input(x0.clone());
+        let w = tape.param(w0.clone());
+        let y = tape.matmul(x, w);
+        let l = tape.mse(y, &t0);
+        tape.backward(l).unwrap();
+        fd_check(loss_of, &w0, &tape.grad(w).unwrap());
+    }
+
+    #[test]
+    fn mlp_xent_gradients_match_finite_difference() {
+        let mut rng = Pcg64::seeded(301);
+        let x0 = DenseTensor::randn(&[6, 8], &mut rng);
+        let w1_0 = DenseTensor::kaiming(&[8, 10], &mut rng);
+        let b1_0 = DenseTensor::zeros(&[10]);
+        let w2_0 = DenseTensor::kaiming(&[10, 4], &mut rng);
+        let labels = vec![0usize, 1, 2, 3, 1, 2];
+
+        let loss_of = |w1: &DenseTensor| {
+            let tape = Tape::new();
+            let x = tape.input(x0.clone());
+            let w1v = tape.param(w1.clone());
+            let b1v = tape.param(b1_0.clone());
+            let w2v = tape.param(w2_0.clone());
+            let h = tape.gelu(tape.bias_add(tape.matmul(x, w1v), b1v));
+            let logits = tape.matmul(h, w2v);
+            let l = tape.softmax_cross_entropy(logits, &labels);
+            tape.value(l).data()[0]
+        };
+
+        let tape = Tape::new();
+        let x = tape.input(x0.clone());
+        let w1 = tape.param(w1_0.clone());
+        let b1 = tape.param(b1_0.clone());
+        let w2 = tape.param(w2_0.clone());
+        let h = tape.gelu(tape.bias_add(tape.matmul(x, w1), b1));
+        let logits = tape.matmul(h, w2);
+        let l = tape.softmax_cross_entropy(logits, &labels);
+        tape.backward(l).unwrap();
+        fd_check(loss_of, &w1_0, &tape.grad(w1).unwrap());
+    }
+
+    #[test]
+    fn relu_grad_masks_negatives() {
+        let tape = Tape::new();
+        let x = tape.param(DenseTensor::from_vec(&[1, 4], vec![-1.0, 2.0, -3.0, 4.0]));
+        let y = tape.relu(x);
+        let l = tape.mse(y, &DenseTensor::zeros(&[1, 4]));
+        tape.backward(l).unwrap();
+        let g = tape.grad(x).unwrap();
+        assert_eq!(g.data()[0], 0.0);
+        assert_eq!(g.data()[2], 0.0);
+        assert!(g.data()[1] != 0.0 && g.data()[3] != 0.0);
+    }
+
+    #[test]
+    fn grad_fmt_sparsifies_weight_gradient() {
+        let mut rng = Pcg64::seeded(302);
+        let x0 = DenseTensor::randn(&[4, 6], &mut rng);
+        let tape = Tape::new();
+        let x = tape.input(x0);
+        let fmt = OutputFormat::external(Box::new(ScalarFraction { fraction: 0.5 }), Layout::Csr);
+        let w = tape.param_with_grad_fmt(DenseTensor::randn(&[6, 3], &mut rng), fmt);
+        let y = tape.matmul(x, w);
+        let l = tape.mse(y, &DenseTensor::zeros(&[4, 3]));
+        tape.backward(l).unwrap();
+        let sg = tape.sparse_grad(w).unwrap();
+        assert_eq!(sg.layout(), Layout::Csr);
+        assert_eq!(sg.nnz(), 9); // half of 18 dropped
+        // Dense view agrees with the sparsified gradient.
+        assert!(tape.grad(w).unwrap().allclose(&sg.to_dense(), 0.0, 0.0));
+    }
+
+    #[test]
+    fn sgd_step_reduces_loss() {
+        let mut rng = Pcg64::seeded(303);
+        let x0 = DenseTensor::randn(&[8, 4], &mut rng);
+        let t0 = DenseTensor::randn(&[8, 2], &mut rng);
+        let mut w0 = DenseTensor::kaiming(&[4, 2], &mut rng);
+        let mut losses = Vec::new();
+        for _ in 0..20 {
+            let tape = Tape::new();
+            let x = tape.input(x0.clone());
+            let w = tape.param(w0.clone());
+            let y = tape.matmul(x, w);
+            let l = tape.mse(y, &t0);
+            losses.push(tape.value(l).data()[0]);
+            tape.backward(l).unwrap();
+            tape.sgd_step(&[w], 0.1);
+            w0 = tape.value(w);
+        }
+        assert!(losses.last().unwrap() < &(losses[0] * 0.5), "{losses:?}");
+    }
+
+    #[test]
+    fn backward_requires_scalar_root() {
+        let tape = Tape::new();
+        let x = tape.param(DenseTensor::ones(&[2, 2]));
+        assert!(tape.backward(x).is_err());
+    }
+
+    #[test]
+    fn grad_accumulates_over_shared_use() {
+        let tape = Tape::new();
+        let x = tape.param(DenseTensor::from_vec(&[], vec![3.0]));
+        let y = tape.add(x, x); // y = 2x
+        let l = tape.mse(y, &DenseTensor::from_vec(&[], vec![0.0]));
+        tape.backward(l).unwrap();
+        // d/dx (2x)^2 = 8x = 24.
+        assert!((tape.grad(x).unwrap().data()[0] - 24.0).abs() < 1e-4);
+    }
+}

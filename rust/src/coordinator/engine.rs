@@ -1,0 +1,280 @@
+//! The sparse-BERT inference engine.
+//!
+//! Weights live in Rust (so sparsifiers can transform them); attention /
+//! embedding / LM-head blocks run through the PJRT runtime; the FFN — the
+//! paper's sparse hot spot — runs either as a dense artifact or natively
+//! via the n:m:g GEMM, selected by [`FfnMode`]. Latency is split into
+//! `runtime` (PJRT execute), `native` (Rust kernels) and `framework`
+//! (everything else: batching, transposes, dispatch) — the Fig. 11
+//! STen-vs-runtime breakdown.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use crate::formats::NmgTensor;
+use crate::kernels::{dense_gemm, elementwise, nmg_gemm};
+use crate::runtime::{ArtifactRuntime, Value};
+use crate::tensor::DenseTensor;
+use crate::util::rng::Pcg64;
+use crate::util::timer::TimeBreakdown;
+
+/// Encoder dimensions, read from the artifact manifest meta.
+#[derive(Debug, Clone)]
+pub struct EncoderDims {
+    /// Vocabulary size.
+    pub vocab: usize,
+    /// Sequence length.
+    pub seq: usize,
+    /// Batch size (fixed at AOT time).
+    pub batch: usize,
+    /// Model width.
+    pub d_model: usize,
+    /// FFN width.
+    pub d_ff: usize,
+    /// Encoder layers.
+    pub n_layers: usize,
+}
+
+/// How the FFN blocks execute.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FfnMode {
+    /// PJRT dense artifact (the "dense PyTorch" baseline of Fig. 11).
+    DenseArtifact,
+    /// Native Rust dense GEMM (framework-overhead-free dense baseline).
+    NativeDense,
+    /// Native n:m:g sparse GEMM for the first FFN linear (the STen path).
+    NativeNmg {
+        /// Kept values per block.
+        n: usize,
+        /// Block size.
+        m: usize,
+        /// Group size.
+        g: usize,
+    },
+}
+
+/// The engine: runtime + weights + execution mode.
+pub struct Engine {
+    rt: ArtifactRuntime,
+    tag: String,
+    /// Encoder dimensions.
+    pub dims: EncoderDims,
+    params: BTreeMap<String, DenseTensor>,
+    /// Pre-converted W1^T n:m:g weights per layer (NativeNmg mode).
+    nmg_w1t: Vec<NmgTensor>,
+    /// Execution mode for FFN blocks.
+    pub ffn_mode: FfnMode,
+    times: TimeBreakdown,
+}
+
+impl Engine {
+    /// Build an engine over artifact set `tag` ("tiny"/"base") with random
+    /// (deterministic) weights.
+    pub fn new(rt: ArtifactRuntime, tag: &str, ffn_mode: FfnMode, seed: u64) -> Result<Self> {
+        let spec = rt.spec(&format!("encoder_fwd_{tag}"))?.clone();
+        let meta = &spec.meta;
+        let dims = EncoderDims {
+            vocab: meta.get("vocab").ok_or_else(|| anyhow!("meta.vocab"))?.usize()?,
+            seq: meta.get("seq").ok_or_else(|| anyhow!("meta.seq"))?.usize()?,
+            batch: meta.get("batch").ok_or_else(|| anyhow!("meta.batch"))?.usize()?,
+            d_model: meta.get("d_model").ok_or_else(|| anyhow!("meta.d_model"))?.usize()?,
+            d_ff: meta.get("d_ff").ok_or_else(|| anyhow!("meta.d_ff"))?.usize()?,
+            n_layers: meta.get("n_layers").ok_or_else(|| anyhow!("meta.n_layers"))?.usize()?,
+        };
+        let mut rng = Pcg64::seeded(seed);
+        let mut params = BTreeMap::new();
+        for io in &spec.inputs {
+            if io.name == "tokens" {
+                continue;
+            }
+            let t = if io.name.ends_with("_g") {
+                DenseTensor::ones(&io.shape)
+            } else if io.shape.len() == 2 {
+                let mut w = DenseTensor::randn(&io.shape, &mut rng);
+                w.scale((2.0 / io.shape[0] as f32).sqrt() * 0.5);
+                w
+            } else {
+                DenseTensor::zeros(&io.shape)
+            };
+            params.insert(io.name.clone(), t);
+        }
+        let mut engine = Engine {
+            rt,
+            tag: tag.to_string(),
+            dims,
+            params,
+            nmg_w1t: Vec::new(),
+            ffn_mode,
+            times: TimeBreakdown::new(),
+        };
+        engine.set_ffn_mode(ffn_mode);
+        Ok(engine)
+    }
+
+    /// Change the FFN execution mode (re-sparsifying weights as needed).
+    ///
+    /// In `NativeNmg` mode every layer's W1 is pruned into n:m:g — the
+    /// engine thereafter *serves the pruned network*, exactly like loading
+    /// a sparse checkpoint in STen.
+    pub fn set_ffn_mode(&mut self, mode: FfnMode) {
+        self.ffn_mode = mode;
+        self.nmg_w1t.clear();
+        if let FfnMode::NativeNmg { n, m, g } = mode {
+            for l in 0..self.dims.n_layers {
+                let w1 = &self.params[&format!("layer{l}.w1")];
+                let w1t = w1.transpose2(); // (F, D)
+                let nmg = NmgTensor::from_dense(&w1t, n, m, g);
+                // Keep the served dense weights consistent with the pruned
+                // sparse ones (weights are pruned, not approximated).
+                self.params
+                    .insert(format!("layer{l}.w1"), nmg.to_dense().transpose2());
+                self.nmg_w1t.push(nmg);
+            }
+        }
+    }
+
+    /// Borrow a parameter.
+    pub fn param(&self, name: &str) -> &DenseTensor {
+        &self.params[name]
+    }
+
+    /// Accumulated timing (runtime / native / framework).
+    pub fn timing(&self) -> &TimeBreakdown {
+        &self.times
+    }
+
+    /// Reset timing.
+    pub fn reset_timing(&mut self) {
+        self.times = TimeBreakdown::new();
+        self.rt.reset_timing();
+    }
+
+    fn p(&self, name: &str) -> Value {
+        Value::F32(self.params[name].clone())
+    }
+
+    /// Full forward via the single whole-encoder artifact (baseline).
+    pub fn forward_monolithic(&mut self, tokens: &[i32]) -> Result<DenseTensor> {
+        let name = format!("encoder_fwd_{}", self.tag);
+        let spec = self.rt.spec(&name)?.clone();
+        let mut inputs = Vec::with_capacity(spec.inputs.len());
+        for io in &spec.inputs {
+            if io.name == "tokens" {
+                inputs.push(Value::I32(io.shape.clone(), tokens.to_vec()));
+            } else {
+                inputs.push(self.p(&io.name));
+            }
+        }
+        let t = Instant::now();
+        let out = self.rt.call1(&name, &inputs)?;
+        self.times.add("runtime", t.elapsed());
+        Ok(out)
+    }
+
+    /// Block-composed forward: embed -> (attn, ffn)*L -> lm_head, with the
+    /// FFN executed per `ffn_mode`.
+    pub fn forward(&mut self, tokens: &[i32]) -> Result<DenseTensor> {
+        let t_all = Instant::now();
+        let tag = self.tag.clone();
+        let dims = self.dims.clone();
+
+        let t = Instant::now();
+        let tok_shape = vec![dims.batch, dims.seq];
+        let mut x = self.rt.call1(
+            &format!("embed_{tag}"),
+            &[self.p("emb"), self.p("pos"), Value::I32(tok_shape, tokens.to_vec())],
+        )?;
+        let mut runtime_s = t.elapsed();
+
+        let mut native_s = std::time::Duration::ZERO;
+        for l in 0..dims.n_layers {
+            let pre = |s: &str| format!("layer{l}.{s}");
+            let t = Instant::now();
+            x = self.rt.call1(
+                &format!("attn_block_{tag}"),
+                &[
+                    Value::F32(x),
+                    self.p(&pre("ln1_g")), self.p(&pre("ln1_b")),
+                    self.p(&pre("wq")), self.p(&pre("bq")),
+                    self.p(&pre("wk")), self.p(&pre("bk")),
+                    self.p(&pre("wv")), self.p(&pre("bv")),
+                    self.p(&pre("wo")), self.p(&pre("bo")),
+                ],
+            )?;
+            runtime_s += t.elapsed();
+
+            match self.ffn_mode {
+                FfnMode::DenseArtifact => {
+                    let t = Instant::now();
+                    x = self.rt.call1(
+                        &format!("ffn_block_{tag}"),
+                        &[
+                            Value::F32(x),
+                            self.p(&pre("ln2_g")), self.p(&pre("ln2_b")),
+                            self.p(&pre("w1")), self.p(&pre("b1")),
+                            self.p(&pre("w2")), self.p(&pre("b2")),
+                        ],
+                    )?;
+                    runtime_s += t.elapsed();
+                }
+                FfnMode::NativeDense | FfnMode::NativeNmg { .. } => {
+                    let t = Instant::now();
+                    x = self.native_ffn(l, &x)?;
+                    native_s += t.elapsed();
+                }
+            }
+        }
+
+        let t = Instant::now();
+        let logits = self.rt.call1(
+            &format!("lm_head_{tag}"),
+            &[
+                Value::F32(x),
+                self.p("lnf_g"), self.p("lnf_b"),
+                self.p("out_w"), self.p("out_b"),
+            ],
+        )?;
+        runtime_s += t.elapsed();
+
+        self.times.add("runtime", runtime_s);
+        self.times.add("native", native_s);
+        self.times
+            .add("framework", t_all.elapsed().saturating_sub(runtime_s).saturating_sub(native_s));
+        Ok(logits)
+    }
+
+    /// Native FFN block: LN -> (W1 sparse or dense) -> GeLU -> W2 -> residual.
+    fn native_ffn(&self, l: usize, x: &DenseTensor) -> Result<DenseTensor> {
+        let dims = &self.dims;
+        let (b, s, d) = (dims.batch, dims.seq, dims.d_model);
+        let rows = b * s;
+        let x2 = x.reshape(&[rows, d]);
+        let pre = |n: &str| format!("layer{l}.{n}");
+        let ln_g = &self.params[&pre("ln2_g")];
+        let ln_b = &self.params[&pre("ln2_b")];
+        let y = elementwise::layernorm_rows(&x2, ln_g.data(), ln_b.data());
+
+        let h = match self.ffn_mode {
+            FfnMode::NativeNmg { .. } => {
+                // (F, D) nmg @ (D, rows) -> (F, rows) -> transpose.
+                let yt = y.transpose2();
+                nmg_gemm::spmm(&self.nmg_w1t[l], &yt).transpose2()
+            }
+            _ => dense_gemm::matmul(&y, &self.params[&pre("w1")]),
+        };
+        let h = elementwise::bias_add(&h, self.params[&pre("b1")].data());
+        let h = elementwise::gelu(&h);
+        let out = dense_gemm::matmul(&h, &self.params[&pre("w2")]);
+        let out = elementwise::bias_add(&out, self.params[&pre("b2")].data());
+        Ok(x2.zip(&out, |a, c| a + c).reshape(&[b, s, d]))
+    }
+
+    /// Random valid tokens for smoke tests and benches.
+    pub fn random_tokens(&self, rng: &mut Pcg64) -> Vec<i32> {
+        (0..self.dims.batch * self.dims.seq)
+            .map(|_| rng.below(self.dims.vocab as u32) as i32)
+            .collect()
+    }
+}

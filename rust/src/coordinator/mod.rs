@@ -1,0 +1,17 @@
+//! The Layer-3 inference coordinator.
+//!
+//! Composes the AOT-lowered encoder blocks (attention, embedding, LM head —
+//! executed through PJRT) with the FFN executed either as another artifact
+//! (dense baseline) or through the native n:m:g sparse kernels (the STen
+//! fast path). This is the end-to-end system of Fig. 11: a general framework
+//! runtime whose sparse operators are dispatched to specialized kernels,
+//! with the remaining graph falling back to the dense executor.
+//!
+//! * [`engine`] — the per-model engine with latency breakdown.
+//! * [`serve`] — request queue + dynamic batcher over the engine.
+
+pub mod engine;
+pub mod serve;
+
+pub use engine::{Engine, EncoderDims, FfnMode};
+pub use serve::{BatchServer, RequestResult};

@@ -1,0 +1,154 @@
+//! Request queue + dynamic batcher over the engine.
+//!
+//! Requests (one sequence each) arrive on a queue; the batcher groups up to
+//! the artifact batch size within a timeout, pads the batch, runs one engine
+//! forward and reports per-request latency — the serving shape of the
+//! Fig. 11 end-to-end evaluation.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::tensor::DenseTensor;
+
+use super::engine::Engine;
+
+/// One served request: a token sequence (padded/truncated to the model's
+/// sequence length).
+#[derive(Debug, Clone)]
+pub struct Request {
+    /// Request id.
+    pub id: u64,
+    /// Tokens.
+    pub tokens: Vec<i32>,
+    /// Enqueue timestamp.
+    pub arrived: Instant,
+}
+
+/// Completion record for one request.
+#[derive(Debug, Clone)]
+pub struct RequestResult {
+    /// Request id.
+    pub id: u64,
+    /// Queueing delay (arrival -> batch start).
+    pub queue_s: f64,
+    /// Model execution time of the batch this request rode in.
+    pub compute_s: f64,
+    /// End-to-end latency.
+    pub total_s: f64,
+    /// How many requests shared the batch.
+    pub batch_size: usize,
+}
+
+/// Synchronous dynamic batcher: callers enqueue, `run_until_drained` forms
+/// batches and executes them in arrival order.
+pub struct BatchServer {
+    engine: Engine,
+    queue: VecDeque<Request>,
+    /// Max time a request may wait for batch-mates.
+    pub max_wait: Duration,
+    next_id: u64,
+    /// Completed request records.
+    pub completed: Vec<RequestResult>,
+}
+
+impl BatchServer {
+    /// Server over an engine.
+    pub fn new(engine: Engine, max_wait: Duration) -> Self {
+        BatchServer { engine, queue: VecDeque::new(), max_wait, next_id: 0, completed: Vec::new() }
+    }
+
+    /// The wrapped engine.
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    /// Enqueue a request; tokens are clamped to vocab and padded/truncated
+    /// to the model sequence length. Returns the request id.
+    pub fn submit(&mut self, tokens: &[i32]) -> u64 {
+        let dims = &self.engine.dims;
+        let mut t: Vec<i32> = tokens
+            .iter()
+            .map(|&x| x.rem_euclid(dims.vocab as i32))
+            .take(dims.seq)
+            .collect();
+        t.resize(dims.seq, 0);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.queue.push_back(Request { id, tokens: t, arrived: Instant::now() });
+        id
+    }
+
+    /// Form and execute batches until the queue is empty.
+    pub fn run_until_drained(&mut self) -> Result<()> {
+        while !self.queue.is_empty() {
+            self.run_one_batch()?;
+        }
+        Ok(())
+    }
+
+    /// Execute a single batch (up to the artifact batch size; padded with
+    /// copies of the last request if underfull).
+    pub fn run_one_batch(&mut self) -> Result<Option<DenseTensor>> {
+        let dims = self.engine.dims.clone();
+        if self.queue.is_empty() {
+            return Ok(None);
+        }
+        let take = self.queue.len().min(dims.batch);
+        let batch: Vec<Request> = (0..take).map(|_| self.queue.pop_front().unwrap()).collect();
+        let start = Instant::now();
+
+        // Pad to the fixed artifact batch by repeating the last sequence.
+        let mut tokens = Vec::with_capacity(dims.batch * dims.seq);
+        for r in &batch {
+            tokens.extend_from_slice(&r.tokens);
+        }
+        let last = batch.last().unwrap().tokens.clone();
+        for _ in take..dims.batch {
+            tokens.extend_from_slice(&last);
+        }
+
+        let logits = self.engine.forward(&tokens)?;
+        let compute_s = start.elapsed().as_secs_f64();
+        let done = Instant::now();
+        for r in &batch {
+            self.completed.push(RequestResult {
+                id: r.id,
+                queue_s: (start - r.arrived).as_secs_f64(),
+                compute_s,
+                total_s: (done - r.arrived).as_secs_f64(),
+                batch_size: take,
+            });
+        }
+        Ok(Some(logits))
+    }
+
+    /// Median end-to-end latency over completed requests.
+    pub fn median_latency(&self) -> Option<f64> {
+        if self.completed.is_empty() {
+            return None;
+        }
+        let mut v: Vec<f64> = self.completed.iter().map(|r| r.total_s).collect();
+        v.sort_by(|a, b| a.total_cmp(b));
+        Some(v[v.len() / 2])
+    }
+
+    /// Requests per second over completed requests (compute time only).
+    pub fn throughput(&self) -> Option<f64> {
+        if self.completed.is_empty() {
+            return None;
+        }
+        // Each batch's compute time is shared by its riders.
+        let mut total_compute = 0.0;
+        let mut seen = std::collections::HashSet::new();
+        for r in &self.completed {
+            // compute_s is identical for batch-mates; count each batch once
+            // (keyed by bit pattern).
+            if seen.insert(r.compute_s.to_bits()) {
+                total_compute += r.compute_s;
+            }
+        }
+        Some(self.completed.len() as f64 / total_compute)
+    }
+}

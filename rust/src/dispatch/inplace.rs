@@ -1,0 +1,140 @@
+//! In-place operation handling (§4.4).
+//!
+//! STen handles in-place ops (`add_`, views) pessimistically when no native
+//! in-place sparse implementation exists: compute out-of-place via the
+//! dispatcher, then **re-sparsify the original tensor's format** (the
+//! "inplace fallback" of Fig. 4). This module provides that route plus a
+//! registry for native in-place implementations.
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use anyhow::Result;
+
+use crate::formats::{AnyTensor, Layout};
+use crate::ops::OpKind;
+use crate::sparsify::SameFormat;
+
+use super::{Dispatcher, Signature};
+
+/// Native in-place implementation: mutates the first operand.
+pub type InplaceImplFn = fn(&mut AnyTensor, &[AnyTensor]) -> Result<()>;
+
+/// Registry of native in-place implementations + the pessimistic fallback.
+#[derive(Default)]
+pub struct InplaceDispatcher {
+    native: Mutex<HashMap<Signature, InplaceImplFn>>,
+    /// Count of pessimistic (compute + resparsify) fallbacks taken.
+    pub fallbacks: std::sync::atomic::AtomicU64,
+}
+
+impl InplaceDispatcher {
+    /// Empty in-place dispatcher.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a native in-place implementation for `(op, layouts)` where
+    /// layouts include the mutated operand first.
+    pub fn register(&self, op: OpKind, inputs: &[Layout], f: InplaceImplFn) {
+        self.native
+            .lock()
+            .unwrap()
+            .insert(Signature { op, inputs: inputs.to_vec() }, f);
+    }
+
+    /// Apply `op` in place on `target` with extra `args`.
+    ///
+    /// Route: native in-place implementation if registered; otherwise the
+    /// pessimistic fallback — run the out-of-place op through `dispatcher`,
+    /// then resparsify the result back into `target`'s original format with
+    /// the `SameFormatSparsifier`.
+    pub fn call_inplace(
+        &self,
+        dispatcher: &Dispatcher,
+        op: OpKind,
+        target: &mut AnyTensor,
+        args: &[AnyTensor],
+    ) -> Result<()> {
+        let mut layouts = vec![target.layout()];
+        layouts.extend(args.iter().map(|a| a.layout()));
+        let sig = Signature { op, inputs: layouts };
+        if let Some(f) = self.native.lock().unwrap().get(&sig).copied() {
+            return f(target, args);
+        }
+        // Pessimistic fallback (§4.4): out-of-place + resparsify.
+        self.fallbacks.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let mut inputs = Vec::with_capacity(args.len() + 1);
+        inputs.push(target.clone());
+        inputs.extend_from_slice(args);
+        let out = dispatcher.call(op, &inputs)?;
+        *target = SameFormat.resparsify(target, &out.to_dense())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{CsrTensor, MaskedTensor};
+    use crate::tensor::DenseTensor;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn pessimistic_fallback_preserves_layout() {
+        let d = Dispatcher::with_builtins();
+        let inp = InplaceDispatcher::new();
+        let mut rng = Pcg64::seeded(1);
+        let w = DenseTensor::randn(&[4, 4], &mut rng).map(|x| if x > 0.0 { x } else { 0.0 });
+        let mut t = AnyTensor::Csr(CsrTensor::from_dense(&w));
+        let other = AnyTensor::Dense(DenseTensor::ones(&[4, 4]));
+        inp.call_inplace(&d, OpKind::Add, &mut t, &[other]).unwrap();
+        // Layout preserved, values updated (+1 everywhere, recompressed).
+        assert_eq!(t.layout(), Layout::Csr);
+        let want = w.map(|x| x + 1.0);
+        assert!(t.to_dense().allclose(&want, 1e-6, 1e-6));
+        assert_eq!(inp.fallbacks.load(std::sync::atomic::Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn masked_inplace_keeps_pattern() {
+        // Masked tensors re-apply their mask on in-place updates (the Fig. 2
+        // weight-update semantics).
+        let d = Dispatcher::with_builtins();
+        let inp = InplaceDispatcher::new();
+        let v = DenseTensor::from_vec(&[2, 2], vec![1.0, 0.0, 2.0, 0.0]);
+        let mut t = AnyTensor::Masked(MaskedTensor::from_dense(&v));
+        let other = AnyTensor::Dense(DenseTensor::ones(&[2, 2]));
+        inp.call_inplace(&d, OpKind::Add, &mut t, &[other]).unwrap();
+        assert_eq!(t.to_dense().data(), &[2.0, 0.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn native_inplace_takes_precedence() {
+        fn scale_dense(t: &mut AnyTensor, args: &[AnyTensor]) -> Result<()> {
+            let AnyTensor::Dense(d) = t else { anyhow::bail!("dense only") };
+            let other = args[0].to_dense();
+            *d = d.zip(&other, |a, b| a + b);
+            Ok(())
+        }
+        let d = Dispatcher::with_builtins();
+        let inp = InplaceDispatcher::new();
+        inp.register(OpKind::Add, &[Layout::Dense, Layout::Dense], scale_dense);
+        let mut t = AnyTensor::Dense(DenseTensor::ones(&[2]));
+        inp.call_inplace(&d, OpKind::Add, &mut t, &[AnyTensor::Dense(DenseTensor::ones(&[2]))])
+            .unwrap();
+        assert_eq!(t.to_dense().data(), &[2.0, 2.0]);
+        assert_eq!(inp.fallbacks.load(std::sync::atomic::Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn unary_inplace_relu() {
+        let d = Dispatcher::with_builtins();
+        let inp = InplaceDispatcher::new();
+        let v = DenseTensor::from_vec(&[2, 2], vec![-1.0, 2.0, -3.0, 4.0]);
+        let mut t = AnyTensor::Csr(CsrTensor::from_dense(&v));
+        inp.call_inplace(&d, OpKind::Relu, &mut t, &[]).unwrap();
+        assert_eq!(t.layout(), Layout::Csr);
+        assert_eq!(t.to_dense().data(), &[0.0, 2.0, 0.0, 4.0]);
+    }
+}

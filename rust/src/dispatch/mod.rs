@@ -1,0 +1,434 @@
+//! The STen dispatch engine (§4.4, Figs. 3–4).
+//!
+//! Routing for an op call over tensors with arbitrary sparsity layouts:
+//!
+//! 1. **Registry lookup** — hash the canonical signature
+//!    `(op, input layouts)` and call the registered implementation.
+//! 2. **Lossless conversion** — if no implementation matches, try converting
+//!    inputs (only via conversions guaranteed lossless, see
+//!    [`crate::formats::convert`]) to reach a registered signature.
+//! 3. **Dense fallback** — convert everything to dense (with masks) and run
+//!    the dense reference implementation, with a warning counter.
+//!
+//! Every phase is timed and counted ([`DispatchStats`]) — these counters
+//! feed the Fig. 11 "STen overhead" breakdown and the dispatch-overhead
+//! bench.
+
+pub mod builtin;
+mod inplace;
+mod patch;
+pub use inplace::{InplaceDispatcher, InplaceImplFn};
+pub use patch::{PatchTable, Patched};
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::formats::{convert, AnyTensor, Layout};
+use crate::ops::{dense_reference_any, OpKind};
+use crate::sparsify::{sparsifier_registry, Sparsifier};
+
+/// An operator implementation for one layout signature.
+pub type OpImplFn = fn(&[AnyTensor]) -> Result<AnyTensor>;
+
+/// Canonical dispatch signature.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Signature {
+    /// The operator.
+    pub op: OpKind,
+    /// Input layouts, in argument order.
+    pub inputs: Vec<Layout>,
+}
+
+impl Signature {
+    /// Signature of a concrete call.
+    pub fn of(op: OpKind, inputs: &[AnyTensor]) -> Self {
+        Signature { op, inputs: inputs.iter().map(|t| t.layout()).collect() }
+    }
+}
+
+/// Dispatch outcome counters (reset-able).
+#[derive(Debug, Default)]
+pub struct DispatchStats {
+    /// Exact registry hits.
+    pub hits: AtomicU64,
+    /// Calls resolved after lossless conversion.
+    pub conversions: AtomicU64,
+    /// Calls resolved by the dense fallback.
+    pub fallbacks: AtomicU64,
+    /// Nanoseconds spent inside dispatch decision-making (not kernels).
+    pub dispatch_ns: AtomicU64,
+    /// Nanoseconds spent inside kernels / fallbacks.
+    pub kernel_ns: AtomicU64,
+}
+
+impl DispatchStats {
+    fn snapshot(&self) -> (u64, u64, u64, f64, f64) {
+        (
+            self.hits.load(Ordering::Relaxed),
+            self.conversions.load(Ordering::Relaxed),
+            self.fallbacks.load(Ordering::Relaxed),
+            self.dispatch_ns.load(Ordering::Relaxed) as f64 / 1e9,
+            self.kernel_ns.load(Ordering::Relaxed) as f64 / 1e9,
+        )
+    }
+
+    /// Reset all counters.
+    pub fn reset(&self) {
+        self.hits.store(0, Ordering::Relaxed);
+        self.conversions.store(0, Ordering::Relaxed);
+        self.fallbacks.store(0, Ordering::Relaxed);
+        self.dispatch_ns.store(0, Ordering::Relaxed);
+        self.kernel_ns.store(0, Ordering::Relaxed);
+    }
+
+    /// (hits, conversions, fallbacks).
+    pub fn counts(&self) -> (u64, u64, u64) {
+        let (h, c, f, _, _) = self.snapshot();
+        (h, c, f)
+    }
+
+    /// (dispatch seconds, kernel seconds) — the Fig. 11 split.
+    pub fn times(&self) -> (f64, f64) {
+        let (_, _, _, d, k) = self.snapshot();
+        (d, k)
+    }
+}
+
+/// The dispatcher: registry + conversion search + dense fallback.
+pub struct Dispatcher {
+    registry: Mutex<HashMap<Signature, OpImplFn>>,
+    /// Preferred conversion targets, in order (§4.4: "generally it only
+    /// attempts conversion to formats such as CSR").
+    conversion_targets: Vec<Layout>,
+    /// Outcome statistics.
+    pub stats: DispatchStats,
+}
+
+impl Default for Dispatcher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Dispatcher {
+    /// Empty dispatcher (no implementations registered).
+    pub fn new() -> Self {
+        Dispatcher {
+            registry: Mutex::new(HashMap::new()),
+            conversion_targets: vec![Layout::Csr],
+            stats: DispatchStats::default(),
+        }
+    }
+
+    /// Dispatcher with all built-in implementations registered.
+    pub fn with_builtins() -> Self {
+        let d = Self::new();
+        builtin::register_all(&d);
+        d
+    }
+
+    /// Register an implementation for a signature (last registration wins).
+    pub fn register(&self, op: OpKind, inputs: &[Layout], f: OpImplFn) {
+        self.registry
+            .lock()
+            .unwrap()
+            .insert(Signature { op, inputs: inputs.to_vec() }, f);
+    }
+
+    /// Number of registered implementations.
+    pub fn len(&self) -> usize {
+        self.registry.lock().unwrap().len()
+    }
+
+    /// True when no implementations are registered.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    fn lookup(&self, sig: &Signature) -> Option<OpImplFn> {
+        self.registry.lock().unwrap().get(sig).copied()
+    }
+
+    /// Route an op call (§4.4 flow). Returns the output tensor.
+    pub fn call(&self, op: OpKind, inputs: &[AnyTensor]) -> Result<AnyTensor> {
+        if inputs.len() != op.arity() {
+            bail!("{op}: expected {} inputs, got {}", op.arity(), inputs.len());
+        }
+        let t0 = Instant::now();
+        // Phase 1: exact hit.
+        let sig = Signature::of(op, inputs);
+        if let Some(f) = self.lookup(&sig) {
+            self.stats.hits.fetch_add(1, Ordering::Relaxed);
+            self.charge_dispatch(t0);
+            return self.run_kernel(f, inputs);
+        }
+
+        // Phase 2: lossless conversion search (§4.4: conversion only to
+        // formats guaranteed lossless, e.g. CSR — never through sparsifiers).
+        // Candidates per preferred target: (a) convert only the sparse
+        // inputs (dense stays dense) — covers sparse×dense kernels; (b)
+        // convert every input — covers sparse-sparse kernels.
+        for &target in &self.conversion_targets {
+            let candidates = [
+                sig.inputs
+                    .iter()
+                    .map(|&l| if l == Layout::Dense { Layout::Dense } else { target })
+                    .collect::<Vec<_>>(),
+                sig.inputs.iter().map(|_| target).collect::<Vec<_>>(),
+            ];
+            for cand in candidates {
+                if cand == sig.inputs {
+                    continue;
+                }
+                let cand_sig = Signature { op, inputs: cand.clone() };
+                if let Some(f) = self.lookup(&cand_sig) {
+                    let converted: Option<Vec<AnyTensor>> = inputs
+                        .iter()
+                        .zip(&cand)
+                        .map(|(t, &l)| convert::lossless(t, l))
+                        .collect();
+                    if let Some(conv) = converted {
+                        self.stats.conversions.fetch_add(1, Ordering::Relaxed);
+                        self.charge_dispatch(t0);
+                        return self.run_kernel(f, &conv);
+                    }
+                }
+            }
+        }
+
+        // Phase 3: dense fallback (always possible — every layout densifies).
+        self.stats.fallbacks.fetch_add(1, Ordering::Relaxed);
+        self.charge_dispatch(t0);
+        let t1 = Instant::now();
+        let out = dense_reference_any(op, inputs);
+        self.stats
+            .kernel_ns
+            .fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        out
+    }
+
+    /// Sparse-operator call (§3.3): run `op`, then the output format chain
+    /// `inline sparsifier -> tmp layout -> external sparsifier -> out layout`.
+    pub fn call_sparse(
+        &self,
+        op: OpKind,
+        inputs: &[AnyTensor],
+        out_fmt: &OutputFormat,
+    ) -> Result<AnyTensor> {
+        let raw = self.call(op, inputs)?;
+        out_fmt.apply(&raw)
+    }
+
+    fn run_kernel(&self, f: OpImplFn, inputs: &[AnyTensor]) -> Result<AnyTensor> {
+        let t = Instant::now();
+        let out = f(inputs);
+        self.stats
+            .kernel_ns
+            .fetch_add(t.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        out
+    }
+
+    fn charge_dispatch(&self, t0: Instant) {
+        self.stats
+            .dispatch_ns
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+    }
+}
+
+/// Output format of a sparse operator (§3.3): inline sparsifier + temporary
+/// layout, then external sparsifier + final layout.
+pub struct OutputFormat {
+    /// Applied "inside" the op (streaming/blocking candidates).
+    pub inline: Box<dyn Sparsifier>,
+    /// Layout the inline sparsifier materializes.
+    pub tmp: Layout,
+    /// Applied to the materialized temporary.
+    pub external: Box<dyn Sparsifier>,
+    /// Final output layout.
+    pub out: Layout,
+}
+
+impl OutputFormat {
+    /// Keep-all into dense: the default output format of a dense operator.
+    pub fn dense() -> Self {
+        OutputFormat {
+            inline: Box::new(crate::sparsify::KeepAll),
+            tmp: Layout::Dense,
+            external: Box::new(crate::sparsify::KeepAll),
+            out: Layout::Dense,
+        }
+    }
+
+    /// Single-sparsifier shorthand: keep-all inline, `s` external into `out`.
+    pub fn external(s: Box<dyn Sparsifier>, out: Layout) -> Self {
+        OutputFormat {
+            inline: Box::new(crate::sparsify::KeepAll),
+            tmp: Layout::Dense,
+            external: s,
+            out,
+        }
+    }
+
+    /// Apply the two-stage sparsification chain to an op output.
+    pub fn apply(&self, raw: &AnyTensor) -> Result<AnyTensor> {
+        let reg = sparsifier_registry();
+        let tmp = reg.apply(self.inline.as_ref(), raw, self.tmp)?;
+        reg.apply(self.external.as_ref(), &tmp, self.out)
+    }
+}
+
+/// The process-wide dispatcher with builtins registered.
+pub fn global() -> &'static Dispatcher {
+    static D: OnceLock<Dispatcher> = OnceLock::new();
+    D.get_or_init(Dispatcher::with_builtins)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{CsrTensor, NmgTensor};
+    use crate::sparsify::{RandomFraction, ScalarThreshold};
+    use crate::tensor::DenseTensor;
+    use crate::util::rng::Pcg64;
+
+    fn dense(shape: &[usize], seed: u64) -> DenseTensor {
+        let mut rng = Pcg64::seeded(seed);
+        DenseTensor::randn(shape, &mut rng)
+    }
+
+    #[test]
+    fn exact_hit_path() {
+        let d = Dispatcher::with_builtins();
+        let a = AnyTensor::Dense(dense(&[4, 6], 1));
+        let b = AnyTensor::Dense(dense(&[6, 3], 2));
+        let out = d.call(OpKind::MatMul, &[a, b]).unwrap();
+        assert_eq!(out.shape(), &[4, 3]);
+        let (h, c, f) = d.stats.counts();
+        assert_eq!((h, c, f), (1, 0, 0));
+    }
+
+    #[test]
+    fn sparse_hit_path_nmg() {
+        let d = Dispatcher::with_builtins();
+        let w = dense(&[8, 24], 3);
+        let a = AnyTensor::Nmg(NmgTensor::from_dense(&w, 2, 4, 2));
+        let b = AnyTensor::Dense(dense(&[24, 5], 4));
+        let out = d.call(OpKind::MatMul, &[a.clone(), b.clone()]).unwrap();
+        let want = crate::kernels::dense_gemm::matmul_naive(&a.to_dense(), b.as_dense().unwrap());
+        assert!(out.to_dense().allclose(&want, 1e-4, 1e-4));
+        assert_eq!(d.stats.counts().0, 1);
+    }
+
+    #[test]
+    fn conversion_path_coo_matmul() {
+        // COO x Dense matmul has no direct impl; it converts COO -> CSR.
+        let d = Dispatcher::with_builtins();
+        let mut w = dense(&[6, 6], 5);
+        for (i, x) in w.data_mut().iter_mut().enumerate() {
+            if i % 2 == 0 {
+                *x = 0.0;
+            }
+        }
+        let a = AnyTensor::Coo(crate::formats::CooTensor::from_dense(&w));
+        let b = AnyTensor::Dense(dense(&[6, 4], 6));
+        let out = d.call(OpKind::MatMul, &[a, b.clone()]).unwrap();
+        let want = crate::kernels::dense_gemm::matmul_naive(&w, b.as_dense().unwrap());
+        assert!(out.to_dense().allclose(&want, 1e-4, 1e-4));
+        let (h, c, f) = d.stats.counts();
+        assert_eq!((h, c, f), (0, 1, 0));
+    }
+
+    #[test]
+    fn fallback_path_softmax_on_csr() {
+        let d = Dispatcher::with_builtins();
+        let w = dense(&[4, 4], 7).map(|x| x.max(0.0));
+        let a = AnyTensor::Csr(CsrTensor::from_dense(&w));
+        let out = d.call(OpKind::Softmax, &[a]).unwrap();
+        assert_eq!(out.layout(), Layout::Dense);
+        let (_, _, f) = d.stats.counts();
+        assert_eq!(f, 1);
+    }
+
+    #[test]
+    fn all_ops_dispatch_on_all_layout_combos() {
+        // The §4.4 guarantee: every PyTorch operator works with sparse
+        // inputs, possibly through the dense fallback.
+        let d = Dispatcher::with_builtins();
+        let base = dense(&[8, 8], 8).map(|x| if x > 0.0 { x } else { 0.0 });
+        let variants: Vec<AnyTensor> = vec![
+            AnyTensor::Dense(base.clone()),
+            AnyTensor::Csr(CsrTensor::from_dense(&base)),
+            AnyTensor::Coo(crate::formats::CooTensor::from_dense(&base)),
+            AnyTensor::Masked(crate::formats::MaskedTensor::from_dense(&base)),
+            AnyTensor::Nmg(NmgTensor::from_dense(&base, 2, 4, 1)),
+        ];
+        for a in &variants {
+            for b in &variants {
+                for op in [OpKind::MatMul, OpKind::Add, OpKind::Mul] {
+                    let out = d.call(op, &[a.clone(), b.clone()]).unwrap();
+                    assert_eq!(out.shape(), &[8, 8], "{op} {:?}x{:?}", a.layout(), b.layout());
+                }
+            }
+            for op in [OpKind::Relu, OpKind::Gelu, OpKind::Softmax, OpKind::Transpose] {
+                d.call(op, &[a.clone()]).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_operator_output_format_chain() {
+        let d = Dispatcher::with_builtins();
+        let a = AnyTensor::Dense(dense(&[6, 6], 9));
+        let b = AnyTensor::Dense(dense(&[6, 6], 10));
+        // add -> random-fraction(0.5) -> CSR: the paper's §3.3 example.
+        let fmt = OutputFormat::external(Box::new(RandomFraction::new(0.5, 11)), Layout::Csr);
+        let out = d.call_sparse(OpKind::Add, &[a.clone(), b.clone()], &fmt).unwrap();
+        assert_eq!(out.layout(), Layout::Csr);
+        let frac = out.nnz() as f64 / 36.0;
+        assert!(frac < 0.85, "some values must be dropped, kept {frac}");
+    }
+
+    #[test]
+    fn inline_plus_external_chain() {
+        let d = Dispatcher::with_builtins();
+        let a = AnyTensor::Dense(dense(&[4, 4], 12));
+        let b = AnyTensor::Dense(dense(&[4, 4], 13));
+        let fmt = OutputFormat {
+            inline: Box::new(ScalarThreshold { threshold: 0.5 }),
+            tmp: Layout::Masked,
+            external: Box::new(crate::sparsify::KeepAll),
+            out: Layout::Csc,
+        };
+        let out = d.call_sparse(OpKind::Add, &[a.clone(), b.clone()], &fmt).unwrap();
+        assert_eq!(out.layout(), Layout::Csc);
+        // Every surviving value exceeds the threshold.
+        for &v in out.to_dense().data() {
+            assert!(v == 0.0 || v.abs() >= 0.5);
+        }
+    }
+
+    #[test]
+    fn arity_mismatch_rejected() {
+        let d = Dispatcher::with_builtins();
+        let a = AnyTensor::Dense(dense(&[2, 2], 14));
+        assert!(d.call(OpKind::MatMul, &[a]).is_err());
+    }
+
+    #[test]
+    fn stats_times_split() {
+        let d = Dispatcher::with_builtins();
+        let a = AnyTensor::Dense(dense(&[32, 32], 15));
+        let b = AnyTensor::Dense(dense(&[32, 32], 16));
+        for _ in 0..4 {
+            d.call(OpKind::MatMul, &[a.clone(), b.clone()]).unwrap();
+        }
+        let (dispatch, kernel) = d.stats.times();
+        assert!(dispatch > 0.0 && kernel > 0.0);
+        d.stats.reset();
+        assert_eq!(d.stats.counts(), (0, 0, 0));
+    }
+}

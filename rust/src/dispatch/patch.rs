@@ -1,0 +1,160 @@
+//! Operator patching (§4.4): redirect arbitrary functions through the
+//! dispatcher when any argument is sparse.
+//!
+//! STen patches Python callables from external libraries (e.g. Apex) so
+//! calls with sparse tensors reach the sparse dispatcher. The Rust analog:
+//! a [`PatchTable`] maps function names to [`Patched`] entries holding the
+//! original dense function and the dispatcher route; `call` picks the route
+//! based on operand layouts.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Result};
+
+use crate::formats::{AnyTensor, Layout};
+use crate::ops::OpKind;
+
+use super::Dispatcher;
+
+/// Original (dense-only) function type: the "native extension" being patched.
+pub type DenseFn = fn(&[AnyTensor]) -> Result<AnyTensor>;
+
+/// A patched function: dense original + sparse dispatcher route.
+pub struct Patched {
+    /// The pre-existing dense implementation.
+    pub original: DenseFn,
+    /// The op the dispatcher should route sparse calls to.
+    pub op: OpKind,
+    /// How often the sparse route was taken.
+    pub sparse_calls: AtomicU64,
+    /// How often the original was called directly.
+    pub dense_calls: AtomicU64,
+}
+
+/// Table of patched functions, keyed by name.
+#[derive(Default)]
+pub struct PatchTable {
+    entries: Mutex<HashMap<String, Patched>>,
+}
+
+impl PatchTable {
+    /// Empty table.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Patch `name`: subsequent `call(name, ...)` goes through `dispatcher`
+    /// whenever any argument is sparse.
+    pub fn patch(&self, name: &str, original: DenseFn, op: OpKind) {
+        self.entries.lock().unwrap().insert(
+            name.to_string(),
+            Patched {
+                original,
+                op,
+                sparse_calls: AtomicU64::new(0),
+                dense_calls: AtomicU64::new(0),
+            },
+        );
+    }
+
+    /// Remove a patch.
+    pub fn unpatch(&self, name: &str) -> bool {
+        self.entries.lock().unwrap().remove(name).is_some()
+    }
+
+    /// Call a patched function: dense arguments use the original, any sparse
+    /// argument reroutes through the dispatcher.
+    pub fn call(
+        &self,
+        dispatcher: &Dispatcher,
+        name: &str,
+        inputs: &[AnyTensor],
+    ) -> Result<AnyTensor> {
+        let entries = self.entries.lock().unwrap();
+        let p = entries
+            .get(name)
+            .ok_or_else(|| anyhow!("function {name:?} is not patched"))?;
+        let any_sparse = inputs.iter().any(|t| t.layout() != Layout::Dense);
+        if any_sparse {
+            p.sparse_calls.fetch_add(1, Ordering::Relaxed);
+            let op = p.op;
+            drop(entries);
+            dispatcher.call(op, inputs)
+        } else {
+            p.dense_calls.fetch_add(1, Ordering::Relaxed);
+            (p.original)(inputs)
+        }
+    }
+
+    /// (sparse, dense) call counts for a patched function.
+    pub fn counts(&self, name: &str) -> Option<(u64, u64)> {
+        self.entries.lock().unwrap().get(name).map(|p| {
+            (
+                p.sparse_calls.load(Ordering::Relaxed),
+                p.dense_calls.load(Ordering::Relaxed),
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::CsrTensor;
+    use crate::tensor::DenseTensor;
+    use crate::util::rng::Pcg64;
+
+    /// Simulated "external library" matmul that only understands dense.
+    fn apex_matmul(inputs: &[AnyTensor]) -> Result<AnyTensor> {
+        let a = inputs[0].as_dense().ok_or_else(|| anyhow!("apex: dense only"))?;
+        let b = inputs[1].as_dense().ok_or_else(|| anyhow!("apex: dense only"))?;
+        Ok(AnyTensor::Dense(crate::kernels::dense_gemm::matmul(a, b)))
+    }
+
+    #[test]
+    fn dense_calls_use_original() {
+        let table = PatchTable::new();
+        let d = Dispatcher::with_builtins();
+        table.patch("apex.matmul", apex_matmul, OpKind::MatMul);
+        let mut rng = Pcg64::seeded(1);
+        let a = AnyTensor::Dense(DenseTensor::randn(&[3, 3], &mut rng));
+        let b = AnyTensor::Dense(DenseTensor::randn(&[3, 3], &mut rng));
+        table.call(&d, "apex.matmul", &[a, b]).unwrap();
+        assert_eq!(table.counts("apex.matmul"), Some((0, 1)));
+        // The dispatcher saw nothing.
+        assert_eq!(d.stats.counts(), (0, 0, 0));
+    }
+
+    #[test]
+    fn sparse_calls_reroute_through_dispatcher() {
+        let table = PatchTable::new();
+        let d = Dispatcher::with_builtins();
+        table.patch("apex.matmul", apex_matmul, OpKind::MatMul);
+        let mut rng = Pcg64::seeded(2);
+        let w = DenseTensor::randn(&[4, 4], &mut rng).map(|x| if x > 0.0 { x } else { 0.0 });
+        let a = AnyTensor::Csr(CsrTensor::from_dense(&w));
+        let b = AnyTensor::Dense(DenseTensor::randn(&[4, 4], &mut rng));
+        let out = table.call(&d, "apex.matmul", &[a, b.clone()]).unwrap();
+        assert_eq!(table.counts("apex.matmul"), Some((1, 0)));
+        assert_eq!(d.stats.counts().0, 1); // dispatcher hit (Csr, Dense)
+        let want = crate::kernels::dense_gemm::matmul_naive(&w, b.as_dense().unwrap());
+        assert!(out.to_dense().allclose(&want, 1e-4, 1e-4));
+    }
+
+    #[test]
+    fn unpatched_function_errors() {
+        let table = PatchTable::new();
+        let d = Dispatcher::with_builtins();
+        assert!(table.call(&d, "unknown.fn", &[]).is_err());
+    }
+
+    #[test]
+    fn unpatch_restores_nothing_silently() {
+        let table = PatchTable::new();
+        table.patch("f", apex_matmul, OpKind::MatMul);
+        assert!(table.unpatch("f"));
+        assert!(!table.unpatch("f"));
+    }
+}

@@ -1,0 +1,106 @@
+//! The paper's *energy* metric (§6.1, Fig. 7): `||pruned||_1 / ||dense||_1`.
+//!
+//! Energy in [0, 1] captures how much of a tensor's magnitude a pruning
+//! preserves; Fig. 7 compares it across sparsity structures (unstructured,
+//! n:m, n:m:g with varying g, blocked).
+
+use crate::formats::{BcsrTensor, NmTensor, NmgTensor};
+use crate::sparsify::{BlockFraction, ScalarFraction, Sparsifier};
+use crate::tensor::DenseTensor;
+
+/// Energy of a pruned tensor relative to the original.
+pub fn energy(dense: &DenseTensor, pruned: &DenseTensor) -> f64 {
+    assert_eq!(dense.shape(), pruned.shape(), "energy shape mismatch");
+    let denom = dense.l1_norm() as f64;
+    if denom == 0.0 {
+        return 1.0;
+    }
+    pruned.l1_norm() as f64 / denom
+}
+
+/// Energy of unstructured magnitude pruning at `sparsity`.
+pub fn energy_unstructured(dense: &DenseTensor, sparsity: f32) -> f64 {
+    energy(dense, &ScalarFraction { fraction: sparsity }.prune(dense))
+}
+
+/// Energy of plain n:m pruning.
+pub fn energy_nm(dense: &DenseTensor, n: usize, m: usize) -> f64 {
+    energy(dense, &NmTensor::from_dense(dense, n, m).to_dense())
+}
+
+/// Energy of n:m:g pruning.
+pub fn energy_nmg(dense: &DenseTensor, n: usize, m: usize, g: usize) -> f64 {
+    energy(dense, &NmgTensor::from_dense(dense, n, m, g).to_dense())
+}
+
+/// Energy of block-magnitude pruning at `sparsity` with `bh x bw` blocks.
+pub fn energy_blocked(dense: &DenseTensor, sparsity: f32, bh: usize, bw: usize) -> f64 {
+    energy(dense, &BlockFraction { fraction: sparsity, bh, bw }.prune(dense))
+}
+
+/// Storage bytes of each layout at the same sparsity (context for Fig. 7).
+pub fn storage_report(dense: &DenseTensor, n: usize, m: usize, g: usize) -> Vec<(&'static str, usize)> {
+    let pruned = ScalarFraction { fraction: 1.0 - n as f32 / m as f32 }.prune(dense);
+    vec![
+        ("dense", dense.numel() * 4),
+        ("csr", crate::formats::CsrTensor::from_dense(&pruned).bytes()),
+        ("nm", NmTensor::from_dense(dense, n, m).bytes()),
+        ("nmg", NmgTensor::from_dense(dense, n, m, g).bytes()),
+        ("bcsr", BcsrTensor::from_dense(&BlockFraction { fraction: 1.0 - n as f32 / m as f32, bh: 4, bw: 4 }.prune(dense), 4, 4).bytes()),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn weight() -> DenseTensor {
+        let mut rng = Pcg64::seeded(200);
+        DenseTensor::randn(&[64, 96], &mut rng)
+    }
+
+    #[test]
+    fn energy_bounds() {
+        let w = weight();
+        for s in [0.5, 0.75, 0.9] {
+            let e = energy_unstructured(&w, s);
+            assert!((0.0..=1.0).contains(&e), "{e}");
+        }
+        assert_eq!(energy(&w, &w), 1.0);
+        assert_eq!(energy(&w, &DenseTensor::zeros(w.shape())), 0.0);
+    }
+
+    #[test]
+    fn fig7_structure_ordering() {
+        // Fig. 7's qualitative result: unstructured >= n:m >= n:m:g(g) >= blocked,
+        // with n:m:g approaching n:m as g grows.
+        let w = weight();
+        let unstructured = energy_unstructured(&w, 0.5);
+        let nm = energy_nm(&w, 2, 4);
+        let nmg16 = energy_nmg(&w, 2, 4, 16);
+        let nmg1 = energy_nmg(&w, 2, 4, 1);
+        let blocked = energy_blocked(&w, 0.5, 4, 4);
+        assert!(unstructured >= nm - 1e-9, "unstructured {unstructured} vs nm {nm}");
+        assert!(nm >= nmg16 - 1e-6, "nm {nm} vs nmg16 {nmg16}");
+        assert!(nmg16 >= nmg1 - 0.02, "nmg16 {nmg16} vs nmg1 {nmg1}");
+        assert!(nmg1 > blocked, "nmg1 {nmg1} vs blocked {blocked}");
+        // n:m:g with g=16 should be within a few percent of n:m (paper claim).
+        assert!(nm - nmg16 < 0.05, "gap {}", nm - nmg16);
+    }
+
+    #[test]
+    fn zero_tensor_energy_is_one() {
+        let z = DenseTensor::zeros(&[4, 4]);
+        assert_eq!(energy(&z, &z), 1.0);
+    }
+
+    #[test]
+    fn storage_report_nmg_beats_csr_at_50pct() {
+        let w = weight();
+        let report = storage_report(&w, 2, 4, 4);
+        let get = |name: &str| report.iter().find(|(n, _)| *n == name).unwrap().1;
+        assert!(get("nmg") < get("dense"));
+        assert!(get("nmg") < get("csr"), "nmg {} csr {}", get("nmg"), get("csr"));
+    }
+}

@@ -1,0 +1,141 @@
+//! Block CSR format: CSR over dense `bh x bw` blocks.
+//!
+//! This is the "more structure than n:m:g" comparator of Fig. 7 (block
+//! magnitude pruning) and the substrate of the TVM-block-style GEMM
+//! ([`crate::kernels::bcsr_gemm`]).
+
+use crate::tensor::DenseTensor;
+
+/// BCSR matrix: nonzero blocks of shape `bh x bw`, CSR-indexed by block row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BcsrTensor {
+    shape: [usize; 2],
+    /// Block height.
+    pub bh: usize,
+    /// Block width.
+    pub bw: usize,
+    /// Block-row pointers (len = rows/bh + 1).
+    pub indptr: Vec<usize>,
+    /// Block-column index per stored block.
+    pub indices: Vec<u32>,
+    /// Dense block payloads, each `bh * bw`, row-major per block.
+    pub blocks: Vec<f32>,
+}
+
+impl BcsrTensor {
+    /// Compress a dense matrix, storing every block containing a nonzero.
+    /// Requires `rows % bh == 0 && cols % bw == 0`.
+    pub fn from_dense(d: &DenseTensor, bh: usize, bw: usize) -> Self {
+        assert_eq!(d.rank(), 2, "BCSR requires 2-D");
+        let (rows, cols) = (d.rows(), d.cols());
+        assert!(rows % bh == 0 && cols % bw == 0, "shape {rows}x{cols} not divisible by block {bh}x{bw}");
+        let (brows, bcols) = (rows / bh, cols / bw);
+        let mut indptr = vec![0usize];
+        let mut indices = Vec::new();
+        let mut blocks = Vec::new();
+        for br in 0..brows {
+            for bc in 0..bcols {
+                let mut any = false;
+                'scan: for i in 0..bh {
+                    for j in 0..bw {
+                        if d.get2(br * bh + i, bc * bw + j) != 0.0 {
+                            any = true;
+                            break 'scan;
+                        }
+                    }
+                }
+                if any {
+                    indices.push(bc as u32);
+                    for i in 0..bh {
+                        for j in 0..bw {
+                            blocks.push(d.get2(br * bh + i, bc * bw + j));
+                        }
+                    }
+                }
+            }
+            indptr.push(indices.len());
+        }
+        BcsrTensor { shape: [rows, cols], bh, bw, indptr, indices, blocks }
+    }
+
+    /// Materialize as dense.
+    pub fn to_dense(&self) -> DenseTensor {
+        let mut out = DenseTensor::zeros(&self.shape);
+        let bsz = self.bh * self.bw;
+        for br in 0..self.indptr.len() - 1 {
+            for (bi, &bc) in self.indices[self.indptr[br]..self.indptr[br + 1]]
+                .iter()
+                .enumerate()
+            {
+                let blk = self.indptr[br] + bi;
+                for i in 0..self.bh {
+                    for j in 0..self.bw {
+                        out.set2(
+                            br * self.bh + i,
+                            bc as usize * self.bw + j,
+                            self.blocks[blk * bsz + i * self.bw + j],
+                        );
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Shape as a slice.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Number of stored blocks.
+    pub fn nblocks(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Stored values (block slots; includes explicit zeros inside blocks).
+    pub fn nnz(&self) -> usize {
+        self.blocks.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Storage bytes.
+    pub fn bytes(&self) -> usize {
+        self.blocks.len() * 4 + self.indices.len() * 4 + self.indptr.len() * 8
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn roundtrip_exact() {
+        let mut rng = Pcg64::seeded(7);
+        let mut d = DenseTensor::randn(&[8, 12], &mut rng);
+        for (i, x) in d.data_mut().iter_mut().enumerate() {
+            if (i / 16) % 2 == 0 {
+                *x = 0.0;
+            }
+        }
+        let b = BcsrTensor::from_dense(&d, 4, 4);
+        assert_eq!(b.to_dense(), d);
+    }
+
+    #[test]
+    fn block_count_reflects_structure() {
+        // 8x8 matrix with nonzeros only in the top-left 4x4 block.
+        let mut d = DenseTensor::zeros(&[8, 8]);
+        d.set2(1, 2, 5.0);
+        d.set2(3, 3, -1.0);
+        let b = BcsrTensor::from_dense(&d, 4, 4);
+        assert_eq!(b.nblocks(), 1);
+        assert_eq!(b.nnz(), 2);
+        assert_eq!(b.to_dense(), d);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn indivisible_shape_rejected() {
+        BcsrTensor::from_dense(&DenseTensor::zeros(&[6, 6]), 4, 4);
+    }
+}

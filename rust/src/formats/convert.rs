@@ -1,0 +1,114 @@
+//! Lossless layout conversion (§4.4).
+//!
+//! The dispatcher may convert operands to find a registered implementation,
+//! but "conversion is only attempted when STen can guarantee that it is
+//! lossless, to prevent any information loss". Exact-compression formats
+//! (CSR/CSC/COO/ELL/BCSR/Masked/Dense) convert freely among themselves;
+//! structured formats (n:m, n:m:g) convert *out* losslessly but never *in*
+//! (going in requires a sparsifier, which may drop values).
+
+use super::{AnyTensor, BcsrTensor, CooTensor, CscTensor, CsrTensor, EllTensor, Layout, MaskedTensor};
+
+/// True when `from -> to` is guaranteed lossless.
+pub fn is_lossless(from: Layout, to: Layout) -> bool {
+    use Layout::*;
+    if from == to {
+        return true;
+    }
+    let exact_target = matches!(to, Dense | Csr | Csc | Coo | Ell | Masked);
+    match from {
+        // Exact-compression sources convert to any exact-compression target.
+        Dense | Csr | Csc | Coo | Ell | Bcsr | Masked => exact_target,
+        // Structured and custom formats escape losslessly to exact formats
+        // (their stored values are preserved verbatim).
+        Nm | Nmg | Custom => exact_target,
+    }
+}
+
+/// Convert losslessly, or return `None` when the conversion could lose
+/// information (the caller then falls back to dense-with-mask or errors).
+pub fn lossless(t: &AnyTensor, target: Layout) -> Option<AnyTensor> {
+    if t.layout() == target {
+        return Some(t.clone());
+    }
+    if !is_lossless(t.layout(), target) {
+        return None;
+    }
+    let dense = t.to_dense();
+    Some(match target {
+        Layout::Dense => AnyTensor::Dense(dense),
+        Layout::Csr => AnyTensor::Csr(CsrTensor::from_dense(&dense)),
+        Layout::Csc => AnyTensor::Csc(CscTensor::from_dense(&dense)),
+        Layout::Coo => AnyTensor::Coo(CooTensor::from_dense(&dense)),
+        Layout::Ell => AnyTensor::Ell(EllTensor::from_dense(&dense)),
+        Layout::Masked => AnyTensor::Masked(MaskedTensor::from_dense(&dense)),
+        // Bcsr target needs block-size parameters; not offered as an
+        // automatic conversion target. Nm/Nmg/Custom require sparsifiers.
+        _ => return None,
+    })
+}
+
+/// Exact BCSR conversion with explicit block shape (all nonzero blocks kept).
+pub fn to_bcsr(t: &AnyTensor, bh: usize, bw: usize) -> AnyTensor {
+    AnyTensor::Bcsr(BcsrTensor::from_dense(&t.to_dense(), bh, bw))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DenseTensor;
+    use crate::util::rng::Pcg64;
+
+    fn sample() -> AnyTensor {
+        let mut rng = Pcg64::seeded(21);
+        let d = DenseTensor::randn(&[8, 8], &mut rng)
+            .map(|x| if x > 0.3 { x } else { 0.0 });
+        AnyTensor::Csr(CsrTensor::from_dense(&d))
+    }
+
+    #[test]
+    fn lossless_roundtrips_preserve_values() {
+        let t = sample();
+        let want = t.to_dense();
+        for target in [Layout::Dense, Layout::Csc, Layout::Coo, Layout::Ell, Layout::Masked] {
+            let converted = lossless(&t, target).unwrap();
+            assert_eq!(converted.layout(), target);
+            assert!(converted.to_dense().allclose(&want, 0.0, 0.0), "{target}");
+        }
+    }
+
+    #[test]
+    fn structured_targets_refused() {
+        let t = sample();
+        assert!(lossless(&t, Layout::Nm).is_none());
+        assert!(lossless(&t, Layout::Nmg).is_none());
+        assert!(lossless(&t, Layout::Bcsr).is_none());
+        assert!(lossless(&t, Layout::Custom).is_none());
+    }
+
+    #[test]
+    fn identity_conversion_is_always_allowed() {
+        let t = sample();
+        let same = lossless(&t, Layout::Csr).unwrap();
+        assert_eq!(same.layout(), Layout::Csr);
+    }
+
+    #[test]
+    fn structured_sources_escape_losslessly() {
+        use crate::formats::NmgTensor;
+        let mut rng = Pcg64::seeded(22);
+        let d = DenseTensor::randn(&[8, 24], &mut rng);
+        let t = AnyTensor::Nmg(NmgTensor::from_dense(&d, 2, 4, 2));
+        let pruned = t.to_dense();
+        let csr = lossless(&t, Layout::Csr).unwrap();
+        assert!(csr.to_dense().allclose(&pruned, 0.0, 0.0));
+    }
+
+    #[test]
+    fn explicit_bcsr_conversion() {
+        let t = sample();
+        let b = to_bcsr(&t, 4, 4);
+        assert_eq!(b.layout(), Layout::Bcsr);
+        assert!(b.to_dense().allclose(&t.to_dense(), 0.0, 0.0));
+    }
+}

@@ -1,0 +1,95 @@
+//! Coordinate (COO) format: nonzeros with absolute offsets.
+
+use crate::tensor::DenseTensor;
+
+/// COO tensor: parallel arrays of (row, col, value), sorted row-major.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CooTensor {
+    shape: [usize; 2],
+    /// Row coordinate per nonzero.
+    pub rows: Vec<u32>,
+    /// Column coordinate per nonzero.
+    pub cols: Vec<u32>,
+    /// Nonzero values.
+    pub values: Vec<f32>,
+}
+
+impl CooTensor {
+    /// Compress a dense matrix (exact, row-major sorted).
+    pub fn from_dense(d: &DenseTensor) -> Self {
+        assert_eq!(d.rank(), 2, "COO requires 2-D");
+        let (nr, nc) = (d.rows(), d.cols());
+        let mut rows = Vec::new();
+        let mut cols = Vec::new();
+        let mut values = Vec::new();
+        for r in 0..nr {
+            for c in 0..nc {
+                let v = d.get2(r, c);
+                if v != 0.0 {
+                    rows.push(r as u32);
+                    cols.push(c as u32);
+                    values.push(v);
+                }
+            }
+        }
+        CooTensor { shape: [nr, nc], rows, cols, values }
+    }
+
+    /// Materialize as dense (duplicate coordinates accumulate).
+    pub fn to_dense(&self) -> DenseTensor {
+        let mut out = DenseTensor::zeros(&self.shape);
+        for ((&r, &c), &v) in self.rows.iter().zip(&self.cols).zip(&self.values) {
+            let cur = out.get2(r as usize, c as usize);
+            out.set2(r as usize, c as usize, cur + v);
+        }
+        out
+    }
+
+    /// Shape as a slice.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Number of stored entries.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Storage bytes.
+    pub fn bytes(&self) -> usize {
+        self.values.len() * 4 + self.rows.len() * 4 + self.cols.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn roundtrip_exact() {
+        let mut rng = Pcg64::seeded(5);
+        let mut d = DenseTensor::randn(&[6, 7], &mut rng);
+        for (i, x) in d.data_mut().iter_mut().enumerate() {
+            if i % 3 != 0 {
+                *x = 0.0;
+            }
+        }
+        let coo = CooTensor::from_dense(&d);
+        assert_eq!(coo.to_dense(), d);
+        assert_eq!(coo.nnz(), d.numel() - d.count_zeros());
+    }
+
+    #[test]
+    fn duplicates_accumulate() {
+        let coo = CooTensor {
+            shape: [2, 2],
+            rows: vec![0, 0, 1],
+            cols: vec![1, 1, 0],
+            values: vec![1.5, 2.5, -1.0],
+        };
+        let d = coo.to_dense();
+        assert_eq!(d.get2(0, 1), 4.0);
+        assert_eq!(d.get2(1, 0), -1.0);
+    }
+}

@@ -1,0 +1,115 @@
+//! Compressed Sparse Column format.
+
+use crate::tensor::DenseTensor;
+
+/// CSC matrix: `indptr[c]..indptr[c+1]` indexes `indices`/`values` for column `c`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CscTensor {
+    shape: [usize; 2],
+    /// Column pointers, length cols + 1.
+    pub indptr: Vec<usize>,
+    /// Row index per nonzero.
+    pub indices: Vec<u32>,
+    /// Nonzero values (column-major order).
+    pub values: Vec<f32>,
+}
+
+impl CscTensor {
+    /// Compress a dense matrix (exact).
+    pub fn from_dense(d: &DenseTensor) -> Self {
+        assert_eq!(d.rank(), 2, "CSC requires 2-D");
+        let (rows, cols) = (d.rows(), d.cols());
+        let mut indptr = Vec::with_capacity(cols + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for c in 0..cols {
+            for r in 0..rows {
+                let v = d.get2(r, c);
+                if v != 0.0 {
+                    indices.push(r as u32);
+                    values.push(v);
+                }
+            }
+            indptr.push(values.len());
+        }
+        CscTensor { shape: [rows, cols], indptr, indices, values }
+    }
+
+    /// Materialize as dense.
+    pub fn to_dense(&self) -> DenseTensor {
+        let mut out = DenseTensor::zeros(&self.shape);
+        for c in 0..self.shape[1] {
+            for i in self.indptr[c]..self.indptr[c + 1] {
+                out.set2(self.indices[i] as usize, c, self.values[i]);
+            }
+        }
+        out
+    }
+
+    /// Shape as a slice.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Storage bytes.
+    pub fn bytes(&self) -> usize {
+        self.values.len() * 4 + self.indices.len() * 4 + self.indptr.len() * 8
+    }
+
+    /// Iterate nonzeros of one column as `(row, value)`.
+    pub fn col(&self, c: usize) -> impl Iterator<Item = (usize, f32)> + '_ {
+        let lo = self.indptr[c];
+        let hi = self.indptr[c + 1];
+        self.indices[lo..hi]
+            .iter()
+            .zip(&self.values[lo..hi])
+            .map(|(&r, &v)| (r as usize, v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::csr::CsrTensor;
+    use crate::util::rng::Pcg64;
+
+    fn sparse_dense(rng: &mut Pcg64, rows: usize, cols: usize, density: f32) -> DenseTensor {
+        let data = (0..rows * cols)
+            .map(|_| if rng.next_f32() < density { rng.normal() } else { 0.0 })
+            .collect();
+        DenseTensor::from_vec(&[rows, cols], data)
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let mut rng = Pcg64::seeded(3);
+        let d = sparse_dense(&mut rng, 9, 5, 0.4);
+        let csc = CscTensor::from_dense(&d);
+        assert_eq!(csc.to_dense(), d);
+    }
+
+    #[test]
+    fn csc_agrees_with_csr_transpose_structure() {
+        let mut rng = Pcg64::seeded(4);
+        let d = sparse_dense(&mut rng, 6, 8, 0.3);
+        let csc = CscTensor::from_dense(&d);
+        let csr_t = CsrTensor::from_dense(&d.transpose2());
+        assert_eq!(csc.values, csr_t.values);
+        assert_eq!(csc.indices, csr_t.indices);
+        assert_eq!(csc.indptr, csr_t.indptr);
+    }
+
+    #[test]
+    fn col_iteration() {
+        let d = DenseTensor::from_vec(&[3, 2], vec![1.0, 0.0, 0.0, 2.0, 3.0, 0.0]);
+        let csc = CscTensor::from_dense(&d);
+        assert_eq!(csc.col(0).collect::<Vec<_>>(), vec![(0, 1.0), (2, 3.0)]);
+        assert_eq!(csc.col(1).collect::<Vec<_>>(), vec![(1, 2.0)]);
+    }
+}

@@ -1,0 +1,158 @@
+//! Compressed Sparse Row format.
+
+use crate::tensor::DenseTensor;
+
+/// CSR matrix: `indptr[r]..indptr[r+1]` indexes `indices`/`values` for row `r`.
+///
+/// This is also the substrate of the DeepSparse-style unstructured comparator
+/// kernel ([`crate::kernels::csr_gemm`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrTensor {
+    shape: [usize; 2],
+    /// Row pointers, length rows + 1.
+    pub indptr: Vec<usize>,
+    /// Column index per nonzero.
+    pub indices: Vec<u32>,
+    /// Nonzero values.
+    pub values: Vec<f32>,
+}
+
+impl CsrTensor {
+    /// Build from raw arrays (validates invariants).
+    pub fn new(shape: [usize; 2], indptr: Vec<usize>, indices: Vec<u32>, values: Vec<f32>) -> Self {
+        assert_eq!(indptr.len(), shape[0] + 1, "indptr length");
+        assert_eq!(indices.len(), values.len(), "indices/values length");
+        assert_eq!(*indptr.last().unwrap(), values.len(), "indptr total");
+        debug_assert!(indptr.windows(2).all(|w| w[0] <= w[1]), "indptr monotone");
+        debug_assert!(indices.iter().all(|&c| (c as usize) < shape[1]), "col bounds");
+        CsrTensor { shape, indptr, indices, values }
+    }
+
+    /// Compress a dense matrix (exact: keeps every nonzero).
+    pub fn from_dense(d: &DenseTensor) -> Self {
+        assert_eq!(d.rank(), 2, "CSR requires 2-D");
+        let (rows, cols) = (d.rows(), d.cols());
+        let mut indptr = Vec::with_capacity(rows + 1);
+        let mut indices = Vec::new();
+        let mut values = Vec::new();
+        indptr.push(0);
+        for r in 0..rows {
+            for c in 0..cols {
+                let v = d.get2(r, c);
+                if v != 0.0 {
+                    indices.push(c as u32);
+                    values.push(v);
+                }
+            }
+            indptr.push(values.len());
+        }
+        CsrTensor { shape: [rows, cols], indptr, indices, values }
+    }
+
+    /// Materialize as dense.
+    pub fn to_dense(&self) -> DenseTensor {
+        let mut out = DenseTensor::zeros(&self.shape);
+        for r in 0..self.shape[0] {
+            for i in self.indptr[r]..self.indptr[r + 1] {
+                out.set2(r, self.indices[i] as usize, self.values[i]);
+            }
+        }
+        out
+    }
+
+    /// Shape as a slice.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Number of stored nonzeros.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Storage bytes: values + column indices + row pointers.
+    pub fn bytes(&self) -> usize {
+        self.values.len() * 4 + self.indices.len() * 4 + self.indptr.len() * 8
+    }
+
+    /// Iterate nonzeros of one row as `(col, value)`.
+    pub fn row(&self, r: usize) -> impl Iterator<Item = (usize, f32)> + '_ {
+        let lo = self.indptr[r];
+        let hi = self.indptr[r + 1];
+        self.indices[lo..hi]
+            .iter()
+            .zip(&self.values[lo..hi])
+            .map(|(&c, &v)| (c as usize, v))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+    use crate::util::rng::Pcg64;
+
+    fn sparse_dense(rng: &mut Pcg64, rows: usize, cols: usize, density: f32) -> DenseTensor {
+        let data = (0..rows * cols)
+            .map(|_| if rng.next_f32() < density { rng.normal() } else { 0.0 })
+            .collect();
+        DenseTensor::from_vec(&[rows, cols], data)
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let mut rng = Pcg64::seeded(1);
+        let d = sparse_dense(&mut rng, 7, 9, 0.3);
+        let csr = CsrTensor::from_dense(&d);
+        assert_eq!(csr.to_dense(), d);
+        assert_eq!(csr.nnz(), d.numel() - d.count_zeros());
+    }
+
+    #[test]
+    fn empty_matrix() {
+        let d = DenseTensor::zeros(&[3, 3]);
+        let csr = CsrTensor::from_dense(&d);
+        assert_eq!(csr.nnz(), 0);
+        assert_eq!(csr.to_dense(), d);
+    }
+
+    #[test]
+    fn row_iteration() {
+        let d = DenseTensor::from_vec(&[2, 3], vec![1.0, 0.0, 2.0, 0.0, 3.0, 0.0]);
+        let csr = CsrTensor::from_dense(&d);
+        let row0: Vec<_> = csr.row(0).collect();
+        assert_eq!(row0, vec![(0, 1.0), (2, 2.0)]);
+        let row1: Vec<_> = csr.row(1).collect();
+        assert_eq!(row1, vec![(1, 3.0)]);
+    }
+
+    #[test]
+    fn bytes_smaller_than_dense_when_sparse() {
+        let mut rng = Pcg64::seeded(2);
+        let d = sparse_dense(&mut rng, 64, 64, 0.05);
+        let csr = CsrTensor::from_dense(&d);
+        assert!(csr.bytes() < d.numel() * 4);
+    }
+
+    #[test]
+    fn prop_roundtrip() {
+        proptest::check(
+            "csr-roundtrip",
+            50,
+            |rng| {
+                let rows = 1 + rng.below(12) as usize;
+                let cols = 1 + rng.below(12) as usize;
+                let density = rng.next_f32();
+                let mut r2 = Pcg64::seeded(rng.next_u64());
+                sparse_dense(&mut r2, rows, cols, density)
+            },
+            |d| CsrTensor::from_dense(d).to_dense() == *d,
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "indptr length")]
+    fn invalid_indptr_rejected() {
+        CsrTensor::new([2, 2], vec![0, 1], vec![0], vec![1.0]);
+    }
+}

@@ -1,0 +1,118 @@
+//! ELLPACK format: fixed number of stored entries per row.
+
+use crate::tensor::DenseTensor;
+
+/// ELL tensor: `width` entries per row, padded with explicit zeros.
+///
+/// `indices[r * width + j]` / `values[r * width + j]` is entry `j` of row `r`;
+/// padding entries carry value 0 and repeat the last valid column index.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EllTensor {
+    shape: [usize; 2],
+    /// Entries stored per row.
+    pub width: usize,
+    /// Column index per slot (rows * width).
+    pub indices: Vec<u32>,
+    /// Value per slot (rows * width).
+    pub values: Vec<f32>,
+}
+
+impl EllTensor {
+    /// Compress a dense matrix; width = max row nnz.
+    pub fn from_dense(d: &DenseTensor) -> Self {
+        assert_eq!(d.rank(), 2, "ELL requires 2-D");
+        let (rows, cols) = (d.rows(), d.cols());
+        let width = (0..rows)
+            .map(|r| (0..cols).filter(|&c| d.get2(r, c) != 0.0).count())
+            .max()
+            .unwrap_or(0);
+        let mut indices = vec![0u32; rows * width];
+        let mut values = vec![0f32; rows * width];
+        for r in 0..rows {
+            let mut j = 0;
+            for c in 0..cols {
+                let v = d.get2(r, c);
+                if v != 0.0 {
+                    indices[r * width + j] = c as u32;
+                    values[r * width + j] = v;
+                    j += 1;
+                }
+            }
+            // Pad with the last valid index (value 0).
+            let pad_col = if j > 0 { indices[r * width + j - 1] } else { 0 };
+            for k in j..width {
+                indices[r * width + k] = pad_col;
+            }
+        }
+        EllTensor { shape: [rows, cols], width, indices, values }
+    }
+
+    /// Materialize as dense (accumulating, so zero padding is harmless).
+    pub fn to_dense(&self) -> DenseTensor {
+        let mut out = DenseTensor::zeros(&self.shape);
+        for r in 0..self.shape[0] {
+            for j in 0..self.width {
+                let c = self.indices[r * self.width + j] as usize;
+                let v = self.values[r * self.width + j];
+                if v != 0.0 {
+                    out.set2(r, c, v);
+                }
+            }
+        }
+        out
+    }
+
+    /// Shape as a slice.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Stored slots (including padding).
+    pub fn nnz(&self) -> usize {
+        self.values.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Storage bytes (slots are stored even when padding).
+    pub fn bytes(&self) -> usize {
+        self.values.len() * 4 + self.indices.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn roundtrip_exact() {
+        let mut rng = Pcg64::seeded(6);
+        let mut d = DenseTensor::randn(&[5, 8], &mut rng);
+        for (i, x) in d.data_mut().iter_mut().enumerate() {
+            if i % 4 != 1 {
+                *x = 0.0;
+            }
+        }
+        let ell = EllTensor::from_dense(&d);
+        assert_eq!(ell.to_dense(), d);
+    }
+
+    #[test]
+    fn width_is_max_row_nnz() {
+        let d = DenseTensor::from_vec(
+            &[2, 4],
+            vec![1.0, 2.0, 3.0, 0.0, 0.0, 4.0, 0.0, 0.0],
+        );
+        let ell = EllTensor::from_dense(&d);
+        assert_eq!(ell.width, 3);
+        assert_eq!(ell.nnz(), 4);
+        assert_eq!(ell.to_dense(), d);
+    }
+
+    #[test]
+    fn all_zero_rows() {
+        let d = DenseTensor::zeros(&[3, 4]);
+        let ell = EllTensor::from_dense(&d);
+        assert_eq!(ell.width, 0);
+        assert_eq!(ell.to_dense(), d);
+    }
+}

@@ -1,0 +1,118 @@
+//! Dense tensor + 0/1 mask: the training-path "emulated sparsity" layout.
+//!
+//! Offers no storage savings (the paper is explicit about this) but keeps
+//! the sparsity pattern as data, which is what sparse fine-tuning needs when
+//! the pattern changes over time (§2, §6.1). `FixedMaskTensor` in the paper.
+
+use crate::tensor::DenseTensor;
+
+/// Dense values with an explicit 0/1 mask; values are kept pre-masked
+/// (invariant: `values[i] == 0` wherever `mask[i] == 0`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MaskedTensor {
+    values: DenseTensor,
+    mask: DenseTensor,
+}
+
+impl MaskedTensor {
+    /// Wrap a dense tensor; the mask marks its current nonzeros.
+    pub fn from_dense(d: &DenseTensor) -> Self {
+        let mask = d.map(|x| if x != 0.0 { 1.0 } else { 0.0 });
+        MaskedTensor { values: d.clone(), mask }
+    }
+
+    /// Build from values and an explicit mask (applies the mask).
+    pub fn new(values: DenseTensor, mask: DenseTensor) -> Self {
+        assert_eq!(values.shape(), mask.shape(), "mask shape mismatch");
+        debug_assert!(mask.data().iter().all(|&m| m == 0.0 || m == 1.0), "mask must be 0/1");
+        let masked = values.zip(&mask, |v, m| v * m);
+        MaskedTensor { values: masked, mask }
+    }
+
+    /// The (pre-masked) dense values.
+    pub fn values(&self) -> &DenseTensor {
+        &self.values
+    }
+
+    /// The 0/1 mask.
+    pub fn mask(&self) -> &DenseTensor {
+        &self.mask
+    }
+
+    /// Re-apply this tensor's mask to new dense values (the
+    /// `SameFormatSparsifier` fast path: pattern unchanged, data replaced).
+    pub fn with_values(&self, values: &DenseTensor) -> MaskedTensor {
+        MaskedTensor::new(values.clone(), self.mask.clone())
+    }
+
+    /// Materialize as dense (already materialized; returns the masked values).
+    pub fn to_dense(&self) -> DenseTensor {
+        self.values.clone()
+    }
+
+    /// Shape as a slice.
+    pub fn shape(&self) -> &[usize] {
+        self.values.shape()
+    }
+
+    /// Number of mask-enabled positions.
+    pub fn nnz(&self) -> usize {
+        self.mask.data().iter().filter(|&&m| m != 0.0).count()
+    }
+
+    /// Storage bytes: values + mask (no savings — by design).
+    pub fn bytes(&self) -> usize {
+        self.values.numel() * 4 + self.mask.numel() * 4
+    }
+
+    /// Sparsity of the mask.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.nnz() as f64 / self.mask.numel().max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn mask_applied_on_construction() {
+        let v = DenseTensor::from_vec(&[4], vec![1.0, 2.0, 3.0, 4.0]);
+        let m = DenseTensor::from_vec(&[4], vec![1.0, 0.0, 1.0, 0.0]);
+        let t = MaskedTensor::new(v, m);
+        assert_eq!(t.to_dense().data(), &[1.0, 0.0, 3.0, 0.0]);
+        assert_eq!(t.nnz(), 2);
+        assert_eq!(t.sparsity(), 0.5);
+    }
+
+    #[test]
+    fn from_dense_marks_nonzeros() {
+        let d = DenseTensor::from_vec(&[3], vec![0.0, 5.0, 0.0]);
+        let t = MaskedTensor::from_dense(&d);
+        assert_eq!(t.mask().data(), &[0.0, 1.0, 0.0]);
+        assert_eq!(t.to_dense(), d);
+    }
+
+    #[test]
+    fn with_values_keeps_pattern() {
+        let mut rng = Pcg64::seeded(15);
+        let d = DenseTensor::randn(&[4, 4], &mut rng).map(|x| if x > 0.0 { x } else { 0.0 });
+        let t = MaskedTensor::from_dense(&d);
+        let fresh = DenseTensor::ones(&[4, 4]);
+        let t2 = t.with_values(&fresh);
+        assert_eq!(t2.mask(), t.mask());
+        assert_eq!(t2.nnz(), t.nnz());
+        // New values masked by old pattern.
+        for (v, m) in t2.to_dense().data().iter().zip(t.mask().data()) {
+            assert_eq!(*v, *m);
+        }
+    }
+
+    #[test]
+    fn no_storage_savings() {
+        let d = DenseTensor::zeros(&[8, 8]);
+        let t = MaskedTensor::from_dense(&d);
+        assert_eq!(t.bytes(), 2 * 8 * 8 * 4);
+    }
+}

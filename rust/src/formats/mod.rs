@@ -1,0 +1,269 @@
+//! Sparsity layouts (§3.1 of STen).
+//!
+//! A *sparsity layout* annotates how a tensor's values are stored: classic
+//! formats (CSR, CSC, COO), blocked formats (ELL, BCSR), DL-specialized
+//! formats (n:m, the paper's novel n:m:g), or dense-with-mask emulation.
+//!
+//! [`AnyTensor`] is the dynamic tensor type the dispatcher routes on; the
+//! closed set of built-in layouts is extended by [`AnyTensor::Custom`], which
+//! carries any user type implementing [`CustomTensor`] — mirroring how STen
+//! lets users register e.g. a SciPy CSC tensor from Python with just a
+//! `to_dense` method.
+
+pub mod csr;
+pub mod csc;
+pub mod coo;
+pub mod ell;
+pub mod bcsr;
+pub mod nm;
+pub mod nmg;
+pub mod masked;
+pub mod convert;
+
+pub use bcsr::BcsrTensor;
+pub use coo::CooTensor;
+pub use csc::CscTensor;
+pub use csr::CsrTensor;
+pub use ell::EllTensor;
+pub use masked::MaskedTensor;
+pub use nm::NmTensor;
+pub use nmg::NmgTensor;
+
+use crate::tensor::DenseTensor;
+
+/// The sparsity layout tag used for dispatch (§4.4 signature hashing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Layout {
+    /// Plain dense tensor.
+    Dense,
+    /// Compressed sparse row.
+    Csr,
+    /// Compressed sparse column.
+    Csc,
+    /// Coordinate (absolute-offset) format.
+    Coo,
+    /// ELLPACK: fixed nonzeros per row.
+    Ell,
+    /// Block CSR.
+    Bcsr,
+    /// Plain n:m (per-block fraction) format.
+    Nm,
+    /// The paper's grouped n:m format (§5).
+    Nmg,
+    /// Dense tensor + 0/1 mask (training emulation).
+    Masked,
+    /// User-registered custom format.
+    Custom,
+}
+
+impl std::fmt::Display for Layout {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+/// User-extensible tensor format: the minimal contract STen demands (§3.1) —
+/// a dense conversion plus self-description.
+pub trait CustomTensor: std::fmt::Debug + Send + Sync {
+    /// Human-readable format name (used in dispatch errors).
+    fn format_name(&self) -> &'static str;
+    /// Tensor shape.
+    fn shape(&self) -> &[usize];
+    /// Number of explicitly stored values.
+    fn nnz(&self) -> usize;
+    /// Materialize as dense.
+    fn to_dense(&self) -> DenseTensor;
+    /// Re-sparsify from a dense tensor, preserving this format's structure
+    /// parameters (the `SameFormatSparsifier` hook of §4).
+    fn same_format_from_dense(&self, dense: &DenseTensor) -> Box<dyn CustomTensor>;
+    /// Clone into a box.
+    fn boxed_clone(&self) -> Box<dyn CustomTensor>;
+}
+
+/// A tensor in any sparsity layout — the operand type of the dispatcher.
+#[derive(Debug)]
+pub enum AnyTensor {
+    /// Dense.
+    Dense(DenseTensor),
+    /// CSR.
+    Csr(CsrTensor),
+    /// CSC.
+    Csc(CscTensor),
+    /// COO.
+    Coo(CooTensor),
+    /// ELLPACK.
+    Ell(EllTensor),
+    /// Block CSR.
+    Bcsr(BcsrTensor),
+    /// n:m.
+    Nm(NmTensor),
+    /// n:m:g.
+    Nmg(NmgTensor),
+    /// Dense + mask.
+    Masked(MaskedTensor),
+    /// User format.
+    Custom(Box<dyn CustomTensor>),
+}
+
+impl Clone for AnyTensor {
+    fn clone(&self) -> Self {
+        match self {
+            AnyTensor::Dense(t) => AnyTensor::Dense(t.clone()),
+            AnyTensor::Csr(t) => AnyTensor::Csr(t.clone()),
+            AnyTensor::Csc(t) => AnyTensor::Csc(t.clone()),
+            AnyTensor::Coo(t) => AnyTensor::Coo(t.clone()),
+            AnyTensor::Ell(t) => AnyTensor::Ell(t.clone()),
+            AnyTensor::Bcsr(t) => AnyTensor::Bcsr(t.clone()),
+            AnyTensor::Nm(t) => AnyTensor::Nm(t.clone()),
+            AnyTensor::Nmg(t) => AnyTensor::Nmg(t.clone()),
+            AnyTensor::Masked(t) => AnyTensor::Masked(t.clone()),
+            AnyTensor::Custom(t) => AnyTensor::Custom(t.boxed_clone()),
+        }
+    }
+}
+
+impl AnyTensor {
+    /// Dispatch tag.
+    pub fn layout(&self) -> Layout {
+        match self {
+            AnyTensor::Dense(_) => Layout::Dense,
+            AnyTensor::Csr(_) => Layout::Csr,
+            AnyTensor::Csc(_) => Layout::Csc,
+            AnyTensor::Coo(_) => Layout::Coo,
+            AnyTensor::Ell(_) => Layout::Ell,
+            AnyTensor::Bcsr(_) => Layout::Bcsr,
+            AnyTensor::Nm(_) => Layout::Nm,
+            AnyTensor::Nmg(_) => Layout::Nmg,
+            AnyTensor::Masked(_) => Layout::Masked,
+            AnyTensor::Custom(_) => Layout::Custom,
+        }
+    }
+
+    /// Tensor shape.
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            AnyTensor::Dense(t) => t.shape(),
+            AnyTensor::Csr(t) => t.shape(),
+            AnyTensor::Csc(t) => t.shape(),
+            AnyTensor::Coo(t) => t.shape(),
+            AnyTensor::Ell(t) => t.shape(),
+            AnyTensor::Bcsr(t) => t.shape(),
+            AnyTensor::Nm(t) => t.shape(),
+            AnyTensor::Nmg(t) => t.shape(),
+            AnyTensor::Masked(t) => t.shape(),
+            AnyTensor::Custom(t) => t.shape(),
+        }
+    }
+
+    /// Number of explicitly stored (potentially nonzero) values.
+    pub fn nnz(&self) -> usize {
+        match self {
+            AnyTensor::Dense(t) => t.numel(),
+            AnyTensor::Csr(t) => t.nnz(),
+            AnyTensor::Csc(t) => t.nnz(),
+            AnyTensor::Coo(t) => t.nnz(),
+            AnyTensor::Ell(t) => t.nnz(),
+            AnyTensor::Bcsr(t) => t.nnz(),
+            AnyTensor::Nm(t) => t.nnz(),
+            AnyTensor::Nmg(t) => t.nnz(),
+            AnyTensor::Masked(t) => t.nnz(),
+            AnyTensor::Custom(t) => t.nnz(),
+        }
+    }
+
+    /// Materialize as dense (the universal fallback of §4.4).
+    pub fn to_dense(&self) -> DenseTensor {
+        match self {
+            AnyTensor::Dense(t) => t.clone(),
+            AnyTensor::Csr(t) => t.to_dense(),
+            AnyTensor::Csc(t) => t.to_dense(),
+            AnyTensor::Coo(t) => t.to_dense(),
+            AnyTensor::Ell(t) => t.to_dense(),
+            AnyTensor::Bcsr(t) => t.to_dense(),
+            AnyTensor::Nm(t) => t.to_dense(),
+            AnyTensor::Nmg(t) => t.to_dense(),
+            AnyTensor::Masked(t) => t.to_dense(),
+            AnyTensor::Custom(t) => t.to_dense(),
+        }
+    }
+
+    /// Storage bytes of the representation (values + metadata).
+    pub fn bytes(&self) -> usize {
+        match self {
+            AnyTensor::Dense(t) => t.numel() * 4,
+            AnyTensor::Csr(t) => t.bytes(),
+            AnyTensor::Csc(t) => t.bytes(),
+            AnyTensor::Coo(t) => t.bytes(),
+            AnyTensor::Ell(t) => t.bytes(),
+            AnyTensor::Bcsr(t) => t.bytes(),
+            AnyTensor::Nm(t) => t.bytes(),
+            AnyTensor::Nmg(t) => t.bytes(),
+            AnyTensor::Masked(t) => t.bytes(),
+            AnyTensor::Custom(t) => t.nnz() * 4,
+        }
+    }
+
+    /// Borrow the dense payload, if this is a dense tensor.
+    pub fn as_dense(&self) -> Option<&DenseTensor> {
+        match self {
+            AnyTensor::Dense(t) => Some(t),
+            _ => None,
+        }
+    }
+}
+
+impl From<DenseTensor> for AnyTensor {
+    fn from(t: DenseTensor) -> Self {
+        AnyTensor::Dense(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn dense_anytensor_basics() {
+        let t = AnyTensor::Dense(DenseTensor::zeros(&[3, 4]));
+        assert_eq!(t.layout(), Layout::Dense);
+        assert_eq!(t.shape(), &[3, 4]);
+        assert_eq!(t.nnz(), 12);
+        assert_eq!(t.bytes(), 48);
+        assert!(t.as_dense().is_some());
+    }
+
+    #[test]
+    fn all_layouts_roundtrip_to_dense() {
+        let mut rng = Pcg64::seeded(42);
+        let mut d = DenseTensor::randn(&[8, 12], &mut rng);
+        // Zero half the entries so sparse formats have real structure.
+        for (i, x) in d.data_mut().iter_mut().enumerate() {
+            if i % 2 == 0 {
+                *x = 0.0;
+            }
+        }
+        let candidates: Vec<AnyTensor> = vec![
+            AnyTensor::Csr(CsrTensor::from_dense(&d)),
+            AnyTensor::Csc(CscTensor::from_dense(&d)),
+            AnyTensor::Coo(CooTensor::from_dense(&d)),
+            AnyTensor::Ell(EllTensor::from_dense(&d)),
+            AnyTensor::Bcsr(BcsrTensor::from_dense(&d, 4, 4)),
+            AnyTensor::Masked(MaskedTensor::from_dense(&d)),
+        ];
+        for t in candidates {
+            let back = t.to_dense();
+            assert!(
+                back.allclose(&d, 0.0, 0.0),
+                "{:?} lossy roundtrip, max diff {}",
+                t.layout(),
+                back.max_abs_diff(&d)
+            );
+        }
+    }
+
+    #[test]
+    fn layout_display() {
+        assert_eq!(Layout::Nmg.to_string(), "Nmg");
+    }
+}

@@ -1,0 +1,162 @@
+//! Plain n:m sparsity (NVIDIA-style): each block of `m` consecutive elements
+//! along the sparse (row) dimension keeps `n` values.
+//!
+//! This is the "less structure than n:m:g" comparator of Fig. 7. Storage is
+//! per-column blocks of `n` values plus an `m`-bit (here: byte) row selector.
+
+use crate::tensor::DenseTensor;
+
+/// n:m tensor over a (M, K) matrix, sparse along the row dimension: for each
+/// column and each block of `m` consecutive rows, the `n` largest-magnitude
+/// values are kept.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NmTensor {
+    shape: [usize; 2],
+    /// Values kept per (row-block, column): `(M/m) * K * n`, block-major.
+    pub values: Vec<f32>,
+    /// Kept row offsets within each block (same indexing as `values`).
+    pub offsets: Vec<u8>,
+    /// n (kept per block).
+    pub n: usize,
+    /// m (block size).
+    pub m: usize,
+}
+
+impl NmTensor {
+    /// Magnitude-prune a dense matrix into n:m. Requires `M % m == 0`.
+    pub fn from_dense(d: &DenseTensor, n: usize, m: usize) -> Self {
+        assert_eq!(d.rank(), 2, "n:m requires 2-D");
+        assert!(n <= m && n > 0, "need 0 < n <= m");
+        let (rows, cols) = (d.rows(), d.cols());
+        assert_eq!(rows % m, 0, "rows {rows} not divisible by m={m}");
+        let blocks = rows / m;
+        let mut values = Vec::with_capacity(blocks * cols * n);
+        let mut offsets = Vec::with_capacity(blocks * cols * n);
+        let mut mags: Vec<(f32, usize)> = Vec::with_capacity(m);
+        for b in 0..blocks {
+            for c in 0..cols {
+                mags.clear();
+                for i in 0..m {
+                    mags.push((d.get2(b * m + i, c).abs(), i));
+                }
+                // Keep the n largest magnitudes; stable on ties by row order.
+                mags.sort_by(|a, bb| bb.0.total_cmp(&a.0).then(a.1.cmp(&bb.1)));
+                let mut kept: Vec<usize> = mags[..n].iter().map(|&(_, i)| i).collect();
+                kept.sort_unstable();
+                for &i in &kept {
+                    values.push(d.get2(b * m + i, c));
+                    offsets.push(i as u8);
+                }
+            }
+        }
+        NmTensor { shape: [rows, cols], values, offsets, n, m }
+    }
+
+    /// Materialize as dense.
+    pub fn to_dense(&self) -> DenseTensor {
+        let mut out = DenseTensor::zeros(&self.shape);
+        let cols = self.shape[1];
+        let blocks = self.shape[0] / self.m;
+        for b in 0..blocks {
+            for c in 0..cols {
+                let base = (b * cols + c) * self.n;
+                for j in 0..self.n {
+                    let r = b * self.m + self.offsets[base + j] as usize;
+                    out.set2(r, c, self.values[base + j]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Shape as a slice.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Stored values.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Storage bytes: values + 1-byte offsets.
+    pub fn bytes(&self) -> usize {
+        self.values.len() * 4 + self.offsets.len()
+    }
+
+    /// Nominal sparsity 1 - n/m.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.n as f64 / self.m as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn keeps_largest_per_block() {
+        let d = DenseTensor::from_vec(&[4, 1], vec![0.1, -5.0, 3.0, 0.2]);
+        let t = NmTensor::from_dense(&d, 2, 4);
+        let back = t.to_dense();
+        assert_eq!(back.data(), &[0.0, -5.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn block_structure_invariant() {
+        proptest::check(
+            "nm-structure",
+            40,
+            |rng| {
+                let blocks = 1 + rng.below(4) as usize;
+                let cols = 1 + rng.below(10) as usize;
+                let seed = rng.next_u64();
+                let mut r2 = Pcg64::seeded(seed);
+                DenseTensor::randn(&[blocks * 4, cols], &mut r2)
+            },
+            |d| {
+                let t = NmTensor::from_dense(d, 2, 4);
+                let back = t.to_dense();
+                // Exactly 2 nonzeros per (4-row block, column), values match original.
+                for b in 0..d.rows() / 4 {
+                    for c in 0..d.cols() {
+                        let nnz = (0..4).filter(|&i| back.get2(b * 4 + i, c) != 0.0).count();
+                        if nnz > 2 {
+                            return false;
+                        }
+                        for i in 0..4 {
+                            let v = back.get2(b * 4 + i, c);
+                            if v != 0.0 && v != d.get2(b * 4 + i, c) {
+                                return false;
+                            }
+                        }
+                    }
+                }
+                true
+            },
+        );
+    }
+
+    #[test]
+    fn energy_at_least_n_over_m() {
+        let mut rng = Pcg64::seeded(8);
+        let d = DenseTensor::randn(&[16, 20], &mut rng);
+        let t = NmTensor::from_dense(&d, 2, 4);
+        let kept = t.to_dense().l1_norm();
+        assert!(kept >= d.l1_norm() * 0.5, "magnitude pruning keeps >= n/m of L1 mass");
+    }
+
+    #[test]
+    fn sparsity_reported() {
+        let d = DenseTensor::ones(&[8, 2]);
+        assert_eq!(NmTensor::from_dense(&d, 1, 4).sparsity(), 0.75);
+    }
+
+    #[test]
+    #[should_panic(expected = "not divisible")]
+    fn bad_rows_rejected() {
+        NmTensor::from_dense(&DenseTensor::zeros(&[6, 2]), 2, 4);
+    }
+}

@@ -1,0 +1,487 @@
+//! Grouped n:m (n:m:g) sparsity — the paper's novel layout (§5).
+//!
+//! See `python/compile/kernels/nmg.py` for the format definition; the Rust
+//! and Python implementations share semantics (same pattern order, same
+//! greedy conversion) so artifacts and native kernels interoperate.
+//!
+//! Layout recap: a (M, K) matrix with `M % m == 0` is split into slabs of
+//! `m` rows. Within a slab, columns are processed in chunks of
+//! `C(m,n) * g` columns; each column keeps `n` of its `m` values, and the
+//! chunk stores its columns permuted so the `C(m,n)` nonzero patterns appear
+//! in a fixed Gray-code-like order, `g` columns per pattern ("group"). The
+//! original column of each slot is stored in `idx`. Partial trailing chunks
+//! pad with `val = 0` slots.
+
+use crate::tensor::DenseTensor;
+use crate::util::threadpool;
+
+/// Binomial coefficient C(m, n).
+pub fn binomial(m: usize, n: usize) -> usize {
+    if n > m {
+        return 0;
+    }
+    let n = n.min(m - n);
+    let mut num = 1usize;
+    let mut den = 1usize;
+    for i in 0..n {
+        num *= m - i;
+        den *= i + 1;
+    }
+    num / den
+}
+
+/// All C(m, n) patterns (sorted row-index tuples) in greedy revolving-door
+/// order: adjacent patterns differ in as few positions as possible, the
+/// property the paper's kernel exploits to save/init a single register at
+/// group boundaries.
+pub fn patterns(m: usize, n: usize) -> Vec<Vec<u8>> {
+    assert!(n > 0 && n <= m && m <= 16, "unsupported n:m = {n}:{m}");
+    // Lexicographic combinations.
+    let mut combos: Vec<Vec<u8>> = Vec::new();
+    let mut cur: Vec<u8> = (0..n as u8).collect();
+    loop {
+        combos.push(cur.clone());
+        // Next combination.
+        let mut i = n;
+        loop {
+            if i == 0 {
+                return order_greedy(combos);
+            }
+            i -= 1;
+            if cur[i] < (m - n + i) as u8 {
+                cur[i] += 1;
+                for j in i + 1..n {
+                    cur[j] = cur[j - 1] + 1;
+                }
+                break;
+            }
+        }
+    }
+}
+
+fn order_greedy(mut combos: Vec<Vec<u8>>) -> Vec<Vec<u8>> {
+    let mut order = vec![combos.remove(0)];
+    while !combos.is_empty() {
+        let cur = order.last().unwrap();
+        let cur_set: u32 = cur.iter().fold(0, |acc, &r| acc | 1 << r);
+        // Min by (symmetric difference size, lexicographic tuple) — matches
+        // the Python tie-breaking exactly.
+        let best = combos
+            .iter()
+            .enumerate()
+            .min_by(|(_, a), (_, b)| {
+                let da = (cur_set ^ a.iter().fold(0u32, |acc, &r| acc | 1 << r)).count_ones();
+                let db = (cur_set ^ b.iter().fold(0u32, |acc, &r| acc | 1 << r)).count_ones();
+                da.cmp(&db).then_with(|| a.cmp(b))
+            })
+            .map(|(i, _)| i)
+            .unwrap();
+        order.push(combos.remove(best));
+    }
+    order
+}
+
+/// The n:m:g sparse tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NmgTensor {
+    shape: [usize; 2],
+    /// n values kept per column.
+    pub n: usize,
+    /// Block (pattern) size.
+    pub m: usize,
+    /// Group size: columns per pattern per chunk.
+    pub g: usize,
+    /// Number of patterns C(m, n).
+    pub c: usize,
+    /// Chunks per slab.
+    pub chunks: usize,
+    /// Slabs (M / m).
+    pub slabs: usize,
+    /// Kept values, shape (slabs, chunks, C, g, n) flattened.
+    pub val: Vec<f32>,
+    /// Original column per slot, shape (slabs, chunks, C, g) flattened.
+    pub idx: Vec<u32>,
+    /// Pattern table (C x n row offsets), chunk order.
+    pub pats: Vec<Vec<u8>>,
+}
+
+impl NmgTensor {
+    /// Columns per chunk.
+    pub fn chunk_cols(&self) -> usize {
+        self.c * self.g
+    }
+
+    /// Greedy magnitude conversion (§5.2, CPU algorithm), parallel over slabs.
+    pub fn from_dense(d: &DenseTensor, n: usize, m: usize, g: usize) -> Self {
+        assert_eq!(d.rank(), 2, "n:m:g requires 2-D");
+        let (rows, k) = (d.rows(), d.cols());
+        assert_eq!(rows % m, 0, "rows {rows} not divisible by m={m}");
+        let pats = patterns(m, n);
+        let c = pats.len();
+        let cc = c * g;
+        let slabs = rows / m;
+        let chunks = k.div_ceil(cc);
+        let slot_count = slabs * chunks * c * g;
+        let mut val = vec![0f32; slot_count * n];
+        let mut idx = vec![0u32; slot_count];
+
+        // Parallel over slabs: each slab writes a disjoint range.
+        let val_ptr = threadpool::SyncPtr::new(val.as_mut_ptr());
+        let idx_ptr = threadpool::SyncPtr::new(idx.as_mut_ptr());
+        threadpool::parallel_for(slabs, 1, |s0, s1| {
+            for s in s0..s1 {
+                let vbase = s * chunks * c * g * n;
+                let ibase = s * chunks * c * g;
+                // SAFETY: slabs write disjoint [vbase, vbase + chunks*c*g*n).
+                let val_s = unsafe {
+                    std::slice::from_raw_parts_mut(val_ptr.get().add(vbase), chunks * c * g * n)
+                };
+                let idx_s = unsafe {
+                    std::slice::from_raw_parts_mut(idx_ptr.get().add(ibase), chunks * c * g)
+                };
+                convert_slab(d, s, n, m, g, &pats, val_s, idx_s);
+            }
+        });
+
+        NmgTensor { shape: [rows, k], n, m, g, c, chunks, slabs, val, idx, pats }
+    }
+
+    /// Swap-refinement conversion (§5.2, "GPU" algorithm analog): arbitrary
+    /// initial assignment, then pairwise pattern swaps while they improve the
+    /// preserved magnitude. Deterministic and typically faster than greedy
+    /// for large chunks; slightly lower energy.
+    pub fn from_dense_swap(d: &DenseTensor, n: usize, m: usize, g: usize) -> Self {
+        let mut t = Self::template(d, n, m, g);
+        let pats = t.pats.clone();
+        let (c, chunks, g_, nn) = (t.c, t.chunks, t.g, t.n);
+        let cc = c * g_;
+        let k = d.cols();
+        for s in 0..t.slabs {
+            for ch in 0..chunks {
+                let lo = ch * cc;
+                let hi = (lo + cc).min(k);
+                let ncols = hi - lo;
+                // assignment[slot] = column (or None for pad).
+                let mut assign: Vec<Option<usize>> =
+                    (0..cc).map(|i| if i < ncols { Some(lo + i) } else { None }).collect();
+                let score = |slot: usize, col: usize| -> f32 {
+                    let p = slot / g_;
+                    pats[p].iter().map(|&r| d.get2(s * m + r as usize, col).abs()).sum()
+                };
+                // Sweep until no improving swap. Bounded by cc^2 per sweep and
+                // monotone improvement, so termination is guaranteed.
+                let mut improved = true;
+                let mut sweeps = 0;
+                while improved && sweeps < 64 {
+                    improved = false;
+                    sweeps += 1;
+                    for a in 0..cc {
+                        for b in a + 1..cc {
+                            let (ca, cb) = (assign[a], assign[b]);
+                            let cur = ca.map_or(0.0, |x| score(a, x)) + cb.map_or(0.0, |x| score(b, x));
+                            let alt = ca.map_or(0.0, |x| score(b, x)) + cb.map_or(0.0, |x| score(a, x));
+                            if alt > cur + 1e-7 {
+                                assign.swap(a, b);
+                                improved = true;
+                            }
+                        }
+                    }
+                }
+                for (slot, colopt) in assign.iter().enumerate() {
+                    if let Some(col) = *colopt {
+                        let p = slot / g_;
+                        let slot_idx = ((s * chunks + ch) * c * g_) + slot;
+                        t.idx[slot_idx] = col as u32;
+                        for (j, &r) in pats[p].iter().enumerate() {
+                            t.val[slot_idx * nn + j] = d.get2(s * m + r as usize, col);
+                        }
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    fn template(d: &DenseTensor, n: usize, m: usize, g: usize) -> Self {
+        let (rows, k) = (d.rows(), d.cols());
+        assert_eq!(rows % m, 0, "rows {rows} not divisible by m={m}");
+        let pats = patterns(m, n);
+        let c = pats.len();
+        let slabs = rows / m;
+        let chunks = k.div_ceil(c * g);
+        let slot_count = slabs * chunks * c * g;
+        NmgTensor {
+            shape: [rows, k],
+            n,
+            m,
+            g,
+            c,
+            chunks,
+            slabs,
+            val: vec![0f32; slot_count * n],
+            idx: vec![0u32; slot_count],
+            pats,
+        }
+    }
+
+    /// Materialize as dense. Accumulating writes make pad slots harmless.
+    pub fn to_dense(&self) -> DenseTensor {
+        let mut out = DenseTensor::zeros(&self.shape);
+        let slots_per_slab = self.chunks * self.c * self.g;
+        for s in 0..self.slabs {
+            for slot in 0..slots_per_slab {
+                let gi = s * slots_per_slab + slot;
+                let col = self.idx[gi] as usize;
+                let p = (slot / self.g) % self.c;
+                for (j, &r) in self.pats[p].iter().enumerate() {
+                    let v = self.val[gi * self.n + j];
+                    if v != 0.0 {
+                        let row = s * self.m + r as usize;
+                        let cur = out.get2(row, col);
+                        out.set2(row, col, cur + v);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Shape as a slice.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Stored nonzero values (excludes pad-slot zeros).
+    pub fn nnz(&self) -> usize {
+        self.val.iter().filter(|&&v| v != 0.0).count()
+    }
+
+    /// Storage bytes: values + u32 per-slot index.
+    pub fn bytes(&self) -> usize {
+        self.val.len() * 4 + self.idx.len() * 4
+    }
+
+    /// Nominal sparsity 1 - n/m.
+    pub fn sparsity(&self) -> f64 {
+        1.0 - self.n as f64 / self.m as f64
+    }
+
+    /// Flat value array (S, CH, C, g, n) — artifact input layout.
+    pub fn val_flat(&self) -> &[f32] {
+        &self.val
+    }
+
+    /// Flat index array (S, CH, C, g) — artifact input layout.
+    pub fn idx_flat(&self) -> &[u32] {
+        &self.idx
+    }
+}
+
+
+/// Greedy assignment for one slab (writes this slab's val/idx slices).
+fn convert_slab(
+    d: &DenseTensor,
+    s: usize,
+    n: usize,
+    m: usize,
+    g: usize,
+    pats: &[Vec<u8>],
+    val: &mut [f32],
+    idx: &mut [u32],
+) {
+    let c = pats.len();
+    let cc = c * g;
+    let k = d.cols();
+    let chunks = k.div_ceil(cc);
+    let mut scores: Vec<f32> = Vec::new();
+    let mut order: Vec<u32> = Vec::new();
+    for ch in 0..chunks {
+        let lo = ch * cc;
+        let hi = (lo + cc).min(k);
+        let ncols = hi - lo;
+        // scores[j * c + p] = L1 mass kept if column lo+j uses pattern p.
+        scores.clear();
+        scores.reserve(ncols * c);
+        for j in 0..ncols {
+            let col = lo + j;
+            for pat in pats {
+                let mut acc = 0f32;
+                for &r in pat {
+                    acc += d.get2(s * m + r as usize, col).abs();
+                }
+                scores.push(acc);
+            }
+        }
+        // Stable sort by descending score (ties: ascending flat index).
+        order.clear();
+        order.extend(0..(ncols * c) as u32);
+        order.sort_by(|&a, &b| {
+            scores[b as usize]
+                .total_cmp(&scores[a as usize])
+                .then(a.cmp(&b))
+        });
+        let mut col_assigned = vec![false; ncols];
+        let mut pat_fill = vec![0usize; c];
+        let mut assigned = 0usize;
+        for &flat in &order {
+            let j = flat as usize / c;
+            let p = flat as usize % c;
+            if col_assigned[j] || pat_fill[p] >= g {
+                continue;
+            }
+            col_assigned[j] = true;
+            let slot = pat_fill[p];
+            pat_fill[p] += 1;
+            let col = lo + j;
+            let slot_idx = ch * cc + p * g + slot;
+            idx[slot_idx] = col as u32;
+            for (jj, &r) in pats[p].iter().enumerate() {
+                val[slot_idx * n + jj] = d.get2(s * m + r as usize, col);
+            }
+            assigned += 1;
+            if assigned == ncols {
+                break;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn binomial_values() {
+        assert_eq!(binomial(4, 2), 6);
+        assert_eq!(binomial(4, 1), 4);
+        assert_eq!(binomial(10, 1), 10);
+        assert_eq!(binomial(8, 2), 28);
+        assert_eq!(binomial(3, 5), 0);
+    }
+
+    #[test]
+    fn patterns_cover_and_adjacent_differ_by_one_swap() {
+        for (m, n) in [(4, 2), (4, 1), (8, 2), (10, 1), (6, 3)] {
+            let pats = patterns(m, n);
+            assert_eq!(pats.len(), binomial(m, n));
+            let mut dedup = pats.clone();
+            dedup.sort();
+            dedup.dedup();
+            assert_eq!(dedup.len(), pats.len());
+            for w in pats.windows(2) {
+                let a: u32 = w[0].iter().fold(0, |acc, &r| acc | 1 << r);
+                let b: u32 = w[1].iter().fold(0, |acc, &r| acc | 1 << r);
+                assert_eq!((a ^ b).count_ones(), 2, "{:?} -> {:?}", w[0], w[1]);
+            }
+        }
+    }
+
+    #[test]
+    fn roundtrip_values_match_original() {
+        let mut rng = Pcg64::seeded(9);
+        let d = DenseTensor::randn(&[8, 30], &mut rng); // partial trailing chunk
+        let t = NmgTensor::from_dense(&d, 2, 4, 2);
+        let back = t.to_dense();
+        assert_eq!(back.shape(), d.shape());
+        for r in 0..8 {
+            for c in 0..30 {
+                let v = back.get2(r, c);
+                assert!(v == 0.0 || v == d.get2(r, c), "invented value at ({r},{c})");
+            }
+        }
+    }
+
+    #[test]
+    fn per_column_block_has_at_most_n_nonzeros() {
+        proptest::check(
+            "nmg-n-per-block",
+            25,
+            |rng| {
+                let slabs = 1 + rng.below(3) as usize;
+                let k = 1 + rng.below(40) as usize;
+                let seed = rng.next_u64();
+                let mut r2 = Pcg64::seeded(seed);
+                DenseTensor::randn(&[slabs * 4, k], &mut r2)
+            },
+            |d| {
+                let t = NmgTensor::from_dense(d, 2, 4, 4);
+                let back = t.to_dense();
+                (0..d.rows() / 4).all(|s| {
+                    (0..d.cols()).all(|c| {
+                        (0..4).filter(|&i| back.get2(s * 4 + i, c) != 0.0).count() <= 2
+                    })
+                })
+            },
+        );
+    }
+
+    #[test]
+    fn every_column_is_assigned_exactly_once() {
+        let mut rng = Pcg64::seeded(10);
+        let d = DenseTensor::randn(&[4, 48], &mut rng);
+        let t = NmgTensor::from_dense(&d, 2, 4, 4);
+        let mut seen = vec![0usize; 48];
+        for slot in 0..t.idx.len() {
+            let real = (0..t.n).any(|j| t.val[slot * t.n + j] != 0.0);
+            if real {
+                seen[t.idx[slot] as usize] += 1;
+            }
+        }
+        assert!(seen.iter().all(|&s| s <= 1));
+        // With random data, nearly all columns should be kept (non-empty).
+        assert!(seen.iter().filter(|&&s| s == 1).count() >= 40);
+    }
+
+    #[test]
+    fn idx_stays_within_chunk_range() {
+        let mut rng = Pcg64::seeded(11);
+        let d = DenseTensor::randn(&[8, 50], &mut rng);
+        let t = NmgTensor::from_dense(&d, 1, 4, 3); // cc = 12, partial chunk at end
+        let cc = t.chunk_cols();
+        for s in 0..t.slabs {
+            for ch in 0..t.chunks {
+                for slot in 0..cc {
+                    let gi = (s * t.chunks + ch) * cc + slot;
+                    let real = (0..t.n).any(|j| t.val[gi * t.n + j] != 0.0);
+                    if real {
+                        let col = t.idx[gi] as usize;
+                        assert!(col >= ch * cc && col < ((ch + 1) * cc).min(50));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn greedy_energy_beats_or_matches_swap_within_tolerance() {
+        let mut rng = Pcg64::seeded(12);
+        let d = DenseTensor::randn(&[16, 48], &mut rng);
+        let g_greedy = NmgTensor::from_dense(&d, 2, 4, 4).to_dense().l1_norm();
+        let g_swap = NmgTensor::from_dense_swap(&d, 2, 4, 4).to_dense().l1_norm();
+        let total = d.l1_norm();
+        assert!(g_greedy / total > 0.5);
+        assert!(g_swap / total > 0.5);
+        // Both heuristics should be within 10% of each other.
+        assert!((g_greedy - g_swap).abs() / total < 0.1, "greedy {g_greedy} swap {g_swap}");
+    }
+
+    #[test]
+    fn larger_group_preserves_no_less_energy() {
+        let mut rng = Pcg64::seeded(13);
+        let d = DenseTensor::randn(&[8, 96], &mut rng);
+        let e1 = NmgTensor::from_dense(&d, 2, 4, 1).to_dense().l1_norm();
+        let e16 = NmgTensor::from_dense(&d, 2, 4, 16).to_dense().l1_norm();
+        assert!(e16 >= e1 * 0.98, "g=16 {e16} vs g=1 {e1}");
+    }
+
+    #[test]
+    fn storage_is_half_plus_metadata_at_2_4() {
+        let mut rng = Pcg64::seeded(14);
+        let d = DenseTensor::randn(&[64, 96], &mut rng);
+        let t = NmgTensor::from_dense(&d, 2, 4, 4);
+        // values: numel/2 * 4 bytes; idx: numel/(m) * ... — well under dense.
+        assert!(t.bytes() < d.numel() * 4);
+    }
+}

@@ -1,0 +1,82 @@
+//! Dense-sparse GEMM over CSC: `C = A_dense · B_csc`.
+//!
+//! The activation-times-sparse-weight orientation (`y = x · W` with sparse
+//! `W`), complementing [`super::csr_gemm`]'s sparse-times-dense. Column-major
+//! sparsity makes each output column a sparse dot accumulation: for output
+//! column `j`, only `W`'s stored entries `(k, j)` contribute `A[:, k]`.
+
+use crate::formats::csc::CscTensor;
+use crate::tensor::DenseTensor;
+use crate::util::threadpool;
+
+/// Rows of A processed per panel (accumulator tile height).
+const MR: usize = 8;
+
+/// Dense-sparse GEMM: `C = A · B_csc`, A (M, K), B (K, N) in CSC.
+pub fn spmm_dense_csc(a: &DenseTensor, b: &CscTensor) -> DenseTensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.shape()[0], b.shape()[1]);
+    assert_eq!(k, k2, "spmm inner dim mismatch: {k} vs {k2}");
+    let mut out = DenseTensor::zeros(&[m, n]);
+    let ad = a.data();
+    let od_ptr = threadpool::SyncPtr::new(out.data_mut().as_mut_ptr());
+    let panels = m.div_ceil(MR);
+    threadpool::parallel_for(panels, 1, |p0, p1| {
+        for panel in p0..p1 {
+            let i0 = panel * MR;
+            let i1 = (i0 + MR).min(m);
+            // SAFETY: each panel owns disjoint C rows [i0, i1).
+            let c_panel = unsafe {
+                std::slice::from_raw_parts_mut(od_ptr.get().add(i0 * n), (i1 - i0) * n)
+            };
+            for j in 0..n {
+                for (kk, v) in b.col(j) {
+                    for i in i0..i1 {
+                        c_panel[(i - i0) * n + j] += ad[i * k + kk] * v;
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dense_gemm;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn matches_dense_reference() {
+        let mut rng = Pcg64::seeded(70);
+        let a = DenseTensor::randn(&[13, 17], &mut rng);
+        let mut w = DenseTensor::randn(&[17, 9], &mut rng);
+        for (i, x) in w.data_mut().iter_mut().enumerate() {
+            if i % 3 != 0 {
+                *x = 0.0;
+            }
+        }
+        let b = CscTensor::from_dense(&w);
+        let got = spmm_dense_csc(&a, &b);
+        let want = dense_gemm::matmul_naive(&a, &w);
+        assert!(got.allclose(&want, 1e-4, 1e-4), "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn empty_sparse_weight() {
+        let a = DenseTensor::ones(&[4, 6]);
+        let b = CscTensor::from_dense(&DenseTensor::zeros(&[6, 3]));
+        assert_eq!(spmm_dense_csc(&a, &b).max_abs(), 0.0);
+    }
+
+    #[test]
+    fn single_column() {
+        let mut rng = Pcg64::seeded(71);
+        let a = DenseTensor::randn(&[5, 4], &mut rng);
+        let w = DenseTensor::from_vec(&[4, 1], vec![1.0, 0.0, 2.0, 0.0]);
+        let got = spmm_dense_csc(&a, &CscTensor::from_dense(&w));
+        let want = dense_gemm::matmul_naive(&a, &w);
+        assert!(got.allclose(&want, 1e-5, 1e-5));
+    }
+}

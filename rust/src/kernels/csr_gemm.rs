@@ -1,0 +1,86 @@
+//! Unstructured sparse-dense GEMM over CSR — the DeepSparse stand-in.
+//!
+//! DeepSparse is closed-source; per DESIGN.md §Substitutions this kernel is
+//! the canonical tuned unstructured comparator: row-parallel, NR-wide
+//! register-tiled inner loop over each row's nonzeros.
+
+use crate::formats::csr::CsrTensor;
+use crate::tensor::DenseTensor;
+use crate::util::threadpool;
+
+const NR: usize = 16;
+
+/// Sparse-dense GEMM: `C = A_csr · B`.
+pub fn spmm(a: &CsrTensor, b: &DenseTensor) -> DenseTensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "spmm inner dim mismatch");
+    let mut out = DenseTensor::zeros(&[m, n]);
+    let bd = b.data();
+    let od_ptr = threadpool::SyncPtr::new(out.data_mut().as_mut_ptr());
+    threadpool::parallel_for(m, 8, |r0, r1| {
+        for r in r0..r1 {
+            // SAFETY: row r of C is written only by this iteration.
+            let crow = unsafe { std::slice::from_raw_parts_mut(od_ptr.get().add(r * n), n) };
+            let lo = a.indptr[r];
+            let hi = a.indptr[r + 1];
+            for jj in (0..n).step_by(NR) {
+                let jw = (n - jj).min(NR);
+                let mut acc = [0f32; NR];
+                for i in lo..hi {
+                    let av = a.values[i];
+                    let kk = a.indices[i] as usize;
+                    let brow = &bd[kk * n + jj..kk * n + jj + jw];
+                    for (x, &bv) in acc[..jw].iter_mut().zip(brow) {
+                        *x += av * bv;
+                    }
+                }
+                crow[jj..jj + jw].copy_from_slice(&acc[..jw]);
+            }
+        }
+    });
+    out
+}
+
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::dense_gemm;
+    use crate::util::rng::Pcg64;
+
+    fn random_sparse(rng: &mut Pcg64, rows: usize, cols: usize, density: f32) -> DenseTensor {
+        let data = (0..rows * cols)
+            .map(|_| if rng.next_f32() < density { rng.normal() } else { 0.0 })
+            .collect();
+        DenseTensor::from_vec(&[rows, cols], data)
+    }
+
+    #[test]
+    fn matches_dense_reference() {
+        let mut rng = Pcg64::seeded(50);
+        let d = random_sparse(&mut rng, 31, 45, 0.2);
+        let a = CsrTensor::from_dense(&d);
+        let b = DenseTensor::randn(&[45, 27], &mut rng);
+        let got = spmm(&a, &b);
+        let want = dense_gemm::matmul_naive(&d, &b);
+        assert!(got.allclose(&want, 1e-4, 1e-4), "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn empty_rows_give_zero_output() {
+        let d = DenseTensor::zeros(&[4, 6]);
+        let a = CsrTensor::from_dense(&d);
+        let b = DenseTensor::ones(&[6, 5]);
+        assert_eq!(spmm(&a, &b).max_abs(), 0.0);
+    }
+
+    #[test]
+    fn single_element() {
+        let mut d = DenseTensor::zeros(&[1, 1]);
+        d.set2(0, 0, 3.0);
+        let a = CsrTensor::from_dense(&d);
+        let b = DenseTensor::from_vec(&[1, 1], vec![4.0]);
+        assert_eq!(spmm(&a, &b).data(), &[12.0]);
+    }
+}

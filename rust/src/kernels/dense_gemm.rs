@@ -1,0 +1,198 @@
+//! Dense GEMM: naive reference + blocked/threaded optimized version.
+//!
+//! The optimized path follows the OpenBLAS-style structure the paper cites
+//! for its own kernel (§5.1): pack a K×NR panel of B, run an MR×NR
+//! register-blocked microkernel over M, parallelize across M panels.
+
+use crate::tensor::DenseTensor;
+use crate::util::threadpool;
+
+/// Microkernel tile height (rows of C per inner call).
+const MR: usize = 8;
+/// Microkernel tile width (columns of C per inner call).
+const NR: usize = 16;
+/// K-blocking for L2-cache residency of the packed B panel.
+const KC: usize = 256;
+
+/// Naive triple loop — the correctness oracle for everything else.
+pub fn matmul_naive(a: &DenseTensor, b: &DenseTensor) -> DenseTensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "gemm inner dim mismatch: {k} vs {k2}");
+    let mut out = DenseTensor::zeros(&[m, n]);
+    let (ad, bd) = (a.data(), b.data());
+    let od = out.data_mut();
+    for i in 0..m {
+        for p in 0..k {
+            let av = ad[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &bd[p * n..(p + 1) * n];
+            let orow = &mut od[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    out
+}
+
+/// Optimized blocked + threaded GEMM.
+pub fn matmul(a: &DenseTensor, b: &DenseTensor) -> DenseTensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "gemm inner dim mismatch: {k} vs {k2}");
+    let mut out = DenseTensor::zeros(&[m, n]);
+    matmul_into(a.data(), b.data(), out.data_mut(), m, k, n);
+    out
+}
+
+/// GEMM into a preallocated output (C = A·B, overwriting C).
+pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: usize) {
+    c.fill(0.0);
+    // Parallelize over M panels of MR rows; each panel owns disjoint C rows.
+    let panels = m.div_ceil(MR);
+    let c_ptr = threadpool::SyncPtr::new(c.as_mut_ptr());
+    threadpool::parallel_for(panels, 1, |p0, p1| {
+        for panel in p0..p1 {
+            let i0 = panel * MR;
+            let i1 = (i0 + MR).min(m);
+            // SAFETY: rows [i0, i1) of C are written only by this panel.
+            let c_panel =
+                unsafe { std::slice::from_raw_parts_mut(c_ptr.get().add(i0 * n), (i1 - i0) * n) };
+            for kk in (0..k).step_by(KC) {
+                let kend = (kk + KC).min(k);
+                for jj in (0..n).step_by(NR) {
+                    let jend = (jj + NR).min(n);
+                    micro_kernel(a, b, c_panel, i0, i1, kk, kend, jj, jend, k, n);
+                }
+            }
+        }
+    });
+}
+
+
+/// MRxNR register-blocked microkernel over a K stripe.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn micro_kernel(
+    a: &[f32],
+    b: &[f32],
+    c_panel: &mut [f32],
+    i0: usize,
+    i1: usize,
+    k0: usize,
+    k1: usize,
+    j0: usize,
+    j1: usize,
+    k: usize,
+    n: usize,
+) {
+    let jw = j1 - j0;
+    if jw == NR {
+        // Fast path: full-width tile with fixed-size accumulators that LLVM
+        // keeps in vector registers.
+        for i in i0..i1 {
+            let mut acc = [0f32; NR];
+            let arow = &a[i * k..];
+            for p in k0..k1 {
+                let av = arow[p];
+                let brow = &b[p * n + j0..p * n + j0 + NR];
+                for (x, &bv) in acc.iter_mut().zip(brow) {
+                    *x += av * bv;
+                }
+            }
+            let crow = &mut c_panel[(i - i0) * n + j0..(i - i0) * n + j0 + NR];
+            for (co, x) in crow.iter_mut().zip(acc) {
+                *co += x;
+            }
+        }
+    } else {
+        for i in i0..i1 {
+            let arow = &a[i * k..];
+            for p in k0..k1 {
+                let av = arow[p];
+                let brow = &b[p * n..];
+                let crow = &mut c_panel[(i - i0) * n..];
+                for j in j0..j1 {
+                    crow[j] += av * brow[j];
+                }
+            }
+        }
+    }
+}
+
+/// Masked GEMM: C = (A .* mask) · B — the training-emulation operator.
+pub fn matmul_masked(a: &DenseTensor, mask: &DenseTensor, b: &DenseTensor) -> DenseTensor {
+    assert_eq!(a.shape(), mask.shape(), "mask shape mismatch");
+    let masked = a.zip(mask, |x, m| x * m);
+    matmul(&masked, b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn blocked_matches_naive_square() {
+        let mut rng = Pcg64::seeded(30);
+        let a = DenseTensor::randn(&[33, 47], &mut rng);
+        let b = DenseTensor::randn(&[47, 29], &mut rng);
+        let got = matmul(&a, &b);
+        let want = matmul_naive(&a, &b);
+        assert!(got.allclose(&want, 1e-4, 1e-4), "diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn identity_matmul() {
+        let mut eye = DenseTensor::zeros(&[5, 5]);
+        for i in 0..5 {
+            eye.set2(i, i, 1.0);
+        }
+        let mut rng = Pcg64::seeded(31);
+        let x = DenseTensor::randn(&[5, 7], &mut rng);
+        assert!(matmul(&eye, &x).allclose(&x, 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn prop_blocked_equals_naive() {
+        proptest::check(
+            "gemm-blocked-vs-naive",
+            20,
+            |rng| {
+                let m = 1 + rng.below(40) as usize;
+                let k = 1 + rng.below(64) as usize;
+                let n = 1 + rng.below(40) as usize;
+                let seed = rng.next_u64();
+                (m, k, n, seed)
+            },
+            |&(m, k, n, seed)| {
+                let mut rng = Pcg64::seeded(seed);
+                let a = DenseTensor::randn(&[m, k], &mut rng);
+                let b = DenseTensor::randn(&[k, n], &mut rng);
+                matmul(&a, &b).allclose(&matmul_naive(&a, &b), 1e-3, 1e-3)
+            },
+        );
+    }
+
+    #[test]
+    fn masked_gemm_zeroes_contributions() {
+        let mut rng = Pcg64::seeded(32);
+        let a = DenseTensor::randn(&[8, 8], &mut rng);
+        let b = DenseTensor::randn(&[8, 8], &mut rng);
+        let zero_mask = DenseTensor::zeros(&[8, 8]);
+        let out = matmul_masked(&a, &zero_mask, &b);
+        assert_eq!(out.max_abs(), 0.0);
+        let ones = DenseTensor::ones(&[8, 8]);
+        let full = matmul_masked(&a, &ones, &b);
+        assert!(full.allclose(&matmul(&a, &b), 1e-6, 1e-6));
+    }
+
+    #[test]
+    fn flops_helper() {
+        assert_eq!(super::super::gemm_flops(2, 3, 4), 48.0);
+    }
+}

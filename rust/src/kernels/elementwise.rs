@@ -1,0 +1,159 @@
+//! Elementwise / normalization kernels shared by the op implementations.
+//!
+//! Numerics match the JAX L2 model (`python/compile/kernels/ref.py`) exactly
+//! so the native path and the PJRT artifact path are interchangeable.
+
+use crate::tensor::DenseTensor;
+
+/// ReLU.
+pub fn relu(x: &DenseTensor) -> DenseTensor {
+    x.map(|v| v.max(0.0))
+}
+
+/// tanh-approximated GeLU (matches `ref_gelu`).
+pub fn gelu(x: &DenseTensor) -> DenseTensor {
+    let c = (2.0f32 / std::f32::consts::PI).sqrt();
+    x.map(|v| 0.5 * v * (1.0 + (c * (v + 0.044715 * v * v * v)).tanh()))
+}
+
+/// Derivative of the tanh-approximated GeLU.
+pub fn gelu_grad(x: &DenseTensor) -> DenseTensor {
+    let c = (2.0f32 / std::f32::consts::PI).sqrt();
+    x.map(|v| {
+        let inner = c * (v + 0.044715 * v * v * v);
+        let t = inner.tanh();
+        let dinner = c * (1.0 + 3.0 * 0.044715 * v * v);
+        0.5 * (1.0 + t) + 0.5 * v * (1.0 - t * t) * dinner
+    })
+}
+
+/// Row-wise numerically-stable softmax over the last dim of a 2-D tensor.
+pub fn softmax_rows(x: &DenseTensor) -> DenseTensor {
+    assert_eq!(x.rank(), 2);
+    let (r, c) = (x.rows(), x.cols());
+    let mut out = DenseTensor::zeros(&[r, c]);
+    for i in 0..r {
+        let row = &x.data()[i * c..(i + 1) * c];
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let mut sum = 0.0;
+        let orow = &mut out.data_mut()[i * c..(i + 1) * c];
+        for (o, &v) in orow.iter_mut().zip(row) {
+            *o = (v - mx).exp();
+            sum += *o;
+        }
+        for o in orow.iter_mut() {
+            *o /= sum;
+        }
+    }
+    out
+}
+
+/// Row-wise LayerNorm (gamma/beta broadcast over rows) with eps = 1e-5.
+pub fn layernorm_rows(x: &DenseTensor, gamma: &[f32], beta: &[f32]) -> DenseTensor {
+    assert_eq!(x.rank(), 2);
+    let (r, c) = (x.rows(), x.cols());
+    assert_eq!(gamma.len(), c);
+    assert_eq!(beta.len(), c);
+    let mut out = DenseTensor::zeros(&[r, c]);
+    for i in 0..r {
+        let row = &x.data()[i * c..(i + 1) * c];
+        let mean = row.iter().sum::<f32>() / c as f32;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / c as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        let orow = &mut out.data_mut()[i * c..(i + 1) * c];
+        for j in 0..c {
+            orow[j] = (row[j] - mean) * inv * gamma[j] + beta[j];
+        }
+    }
+    out
+}
+
+/// Bias add: each row of `x` += `bias`.
+pub fn bias_add(x: &DenseTensor, bias: &[f32]) -> DenseTensor {
+    assert_eq!(x.rank(), 2);
+    let c = x.cols();
+    assert_eq!(bias.len(), c);
+    let mut out = x.clone();
+    for (i, v) in out.data_mut().iter_mut().enumerate() {
+        *v += bias[i % c];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn relu_clamps() {
+        let x = DenseTensor::from_vec(&[3], vec![-1.0, 0.0, 2.0]);
+        assert_eq!(relu(&x).data(), &[0.0, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn gelu_known_values() {
+        let x = DenseTensor::from_vec(&[3], vec![0.0, 1.0, -1.0]);
+        let y = gelu(&x);
+        assert_eq!(y.data()[0], 0.0);
+        assert!((y.data()[1] - 0.8412).abs() < 1e-3);
+        assert!((y.data()[2] + 0.1588).abs() < 1e-3);
+    }
+
+    #[test]
+    fn gelu_grad_matches_finite_difference() {
+        let mut rng = Pcg64::seeded(70);
+        let x = DenseTensor::randn(&[32], &mut rng);
+        let g = gelu_grad(&x);
+        let eps = 1e-3;
+        let up = gelu(&x.map(|v| v + eps));
+        let dn = gelu(&x.map(|v| v - eps));
+        for i in 0..32 {
+            let fd = (up.data()[i] - dn.data()[i]) / (2.0 * eps);
+            assert!((fd - g.data()[i]).abs() < 1e-2, "at {i}: fd {fd} vs {}", g.data()[i]);
+        }
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let mut rng = Pcg64::seeded(71);
+        let x = DenseTensor::randn(&[4, 7], &mut rng);
+        let s = softmax_rows(&x);
+        for i in 0..4 {
+            let sum: f32 = s.data()[i * 7..(i + 1) * 7].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn softmax_handles_large_values() {
+        let x = DenseTensor::from_vec(&[1, 3], vec![1000.0, 1000.0, 1000.0]);
+        let s = softmax_rows(&x);
+        for &v in s.data() {
+            assert!((v - 1.0 / 3.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut rng = Pcg64::seeded(72);
+        let x = DenseTensor::randn(&[3, 64], &mut rng);
+        let gamma = vec![1.0; 64];
+        let beta = vec![0.0; 64];
+        let y = layernorm_rows(&x, &gamma, &beta);
+        for i in 0..3 {
+            let row = &y.data()[i * 64..(i + 1) * 64];
+            let mean: f32 = row.iter().sum::<f32>() / 64.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 64.0;
+            assert!(mean.abs() < 1e-4);
+            assert!((var - 1.0).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn bias_add_broadcasts() {
+        let x = DenseTensor::zeros(&[2, 3]);
+        let y = bias_add(&x, &[1.0, 2.0, 3.0]);
+        assert_eq!(y.data(), &[1.0, 2.0, 3.0, 1.0, 2.0, 3.0]);
+    }
+}

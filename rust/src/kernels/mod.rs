@@ -1,0 +1,27 @@
+//! Native CPU compute kernels — the Layer-3 hot path.
+//!
+//! The paper's n:m:g sparse-dense GEMM (§5.1) plus the baselines its
+//! evaluation compares against:
+//!
+//! * [`dense_gemm`] — blocked, threaded dense GEMM (the "dense PyTorch"
+//!   stand-in of Figs. 10–11).
+//! * [`nmg_gemm`] — the paper's kernel: chunk-ordered, branch-free inner
+//!   loop, register-blocked microkernel, parallel over row panels.
+//! * [`csr_gemm`] — unstructured sparse-dense GEMM (DeepSparse stand-in).
+//! * [`csc_gemm`] — dense-sparse GEMM (activation x sparse-weight orientation).
+//! * [`ell_gemm`] — ELLPACK sparse-dense GEMM (fixed-width classic format).
+//! * [`bcsr_gemm`] — block-sparse GEMM (TVM block-sparse stand-in).
+//! * [`elementwise`] — activation / normalization kernels shared by ops.
+
+pub mod dense_gemm;
+pub mod nmg_gemm;
+pub mod csr_gemm;
+pub mod csc_gemm;
+pub mod ell_gemm;
+pub mod bcsr_gemm;
+pub mod elementwise;
+
+/// FLOP count of an (M, K) x (K, N) GEMM.
+pub fn gemm_flops(m: usize, k: usize, n: usize) -> f64 {
+    2.0 * m as f64 * k as f64 * n as f64
+}

@@ -1,0 +1,335 @@
+//! The paper's n:m:g sparse-dense GEMM (§5.1, Fig. 6), CPU implementation.
+//!
+//! Design, mirroring the paper:
+//!
+//! 1. values are loaded per column slot and broadcast (scalar FMA operands
+//!    the compiler hoists into vector registers);
+//! 2. the chunk's fixed pattern order makes the inner loop **branch-free**:
+//!    pattern changes are compile-time-known strides, never data-dependent
+//!    branches;
+//! 3. the needed rows of B are fetched by **indirect loads** through the
+//!    stored per-slot column index;
+//! 4. the paper saves/inits one vector register per pattern boundary (Gray
+//!    order); on a modern register file we go further and keep the *entire*
+//!    m x NR slab accumulator tile resident for the whole K traversal
+//!    (`const M` specializations for m in {4, 8, 10}), so pattern boundaries
+//!    cost nothing at all;
+//! 5. the N-tile loop is outermost (and is the parallel axis), so the K x NR
+//!    panel of B stays cache-resident while *all* slabs traverse it — B
+//!    traffic matches a dense kernel with panel height m * slabs instead of
+//!    being multiplied by the slab count.
+//!
+//! See EXPERIMENTS.md §Perf for the measured iteration log of these choices.
+
+use crate::formats::nmg::NmgTensor;
+use crate::tensor::DenseTensor;
+use crate::util::threadpool;
+
+/// Output-column tile width (vector-register footprint of the inner loop).
+const NR: usize = 16;
+
+/// Sparse-dense GEMM: `C = A_nmg · B`, with `A` (M, K) in n:m:g and `B` (K, N).
+pub fn spmm(a: &NmgTensor, b: &DenseTensor) -> DenseTensor {
+    let (mrows, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, ncols) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "spmm inner dim mismatch: {k} vs {k2}");
+    let mut out = DenseTensor::zeros(&[mrows, ncols]);
+    spmm_into(a, b.data(), out.data_mut(), ncols);
+    out
+}
+
+/// SpMM into a preallocated output buffer.
+pub fn spmm_into(a: &NmgTensor, b: &[f32], c: &mut [f32], ncols: usize) {
+    // Flattened pattern rows: pattern p occupies pats_flat[p*n .. p*n+n].
+    let pats_flat: Vec<usize> =
+        a.pats.iter().flat_map(|p| p.iter().map(|&r| r as usize)).collect();
+    let jtiles = ncols.div_ceil(NR);
+    let c_ptr = threadpool::SyncPtr::new(c.as_mut_ptr());
+    // Parallelize over N tiles: threads own disjoint column stripes of C,
+    // and each stripe's K x NR panel of B stays cache-hot across slabs.
+    threadpool::parallel_for(jtiles, 1, |t0, t1| {
+        for tile in t0..t1 {
+            let jj = tile * NR;
+            let jw = (ncols - jj).min(NR);
+            for s in 0..a.slabs {
+                // SAFETY: tile stripes are disjoint columns; slabs are
+                // disjoint rows; each (tile, slab) region is written once.
+                let c_all = unsafe {
+                    std::slice::from_raw_parts_mut(c_ptr.get(), a.slabs * a.m * ncols)
+                };
+                match (a.m, jw == NR) {
+                    (4, true) => slab_tile::<4, true>(a, s, b, c_all, ncols, jj, jw, &pats_flat),
+                    (4, false) => slab_tile::<4, false>(a, s, b, c_all, ncols, jj, jw, &pats_flat),
+                    (8, true) => slab_tile::<8, true>(a, s, b, c_all, ncols, jj, jw, &pats_flat),
+                    (8, false) => slab_tile::<8, false>(a, s, b, c_all, ncols, jj, jw, &pats_flat),
+                    (10, true) => slab_tile::<10, true>(a, s, b, c_all, ncols, jj, jw, &pats_flat),
+                    (10, false) => slab_tile::<10, false>(a, s, b, c_all, ncols, jj, jw, &pats_flat),
+                    (16, true) => slab_tile::<16, true>(a, s, b, c_all, ncols, jj, jw, &pats_flat),
+                    (16, false) => slab_tile::<16, false>(a, s, b, c_all, ncols, jj, jw, &pats_flat),
+                    _ => slab_tile_generic(a, s, b, c_all, ncols, jj, jw, &pats_flat),
+                }
+            }
+        }
+    });
+}
+
+/// One (slab, N-tile) pass with the full m x NR accumulator tile resident.
+///
+/// `FULL` selects the fixed-width fast path (jw == NR), letting LLVM keep
+/// the accumulators in vector registers with no tail masking.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn slab_tile<const M: usize, const FULL: bool>(
+    a: &NmgTensor,
+    s: usize,
+    b: &[f32],
+    c: &mut [f32],
+    ncols: usize,
+    jj: usize,
+    jw: usize,
+    pats_flat: &[usize],
+) {
+    debug_assert_eq!(a.m, M);
+    let n = a.n;
+    let g = a.g;
+    let slots_per_slab = a.chunks * a.c * g;
+    let val = &a.val[s * slots_per_slab * n..(s + 1) * slots_per_slab * n];
+    let idx = &a.idx[s * slots_per_slab..(s + 1) * slots_per_slab];
+
+    let mut acc = [[0f32; NR]; M];
+    let cg = a.c * g;
+    // Banded pattern-major traversal: within a band of BAND chunks, iterate
+    // patterns with their n accumulator rows resident in vector registers
+    // (the paper's one-register save/init per boundary, amortized over the
+    // band). Banding keeps the B sub-panel touched per pattern pass
+    // L1-resident even at BERT-scale K. Patterns are row-disjoint
+    // contributions, so the reordering is exact.
+    const BAND: usize = 8;
+    for ch0 in (0..a.chunks).step_by(BAND) {
+        let ch1 = (ch0 + BAND).min(a.chunks);
+    for p in 0..a.c {
+        let rows = &pats_flat[p * n..p * n + n];
+        match n {
+            1 => {
+                let mut acc0 = [0f32; NR];
+                for ch in ch0..ch1 {
+                    let base = ch * cg + p * g;
+                    for gi in 0..g {
+                        let slot = base + gi;
+                        let v0 = val[slot];
+                        let kk = idx[slot] as usize;
+                        if v0 == 0.0 {
+                            continue; // pad slot (partial trailing chunk)
+                        }
+                        let brow = &b[kk * ncols + jj..kk * ncols + jj + jw];
+                        if FULL {
+                            for (x, &bv) in acc0.iter_mut().zip(&brow[..NR]) {
+                                *x += v0 * bv;
+                            }
+                        } else {
+                            for (x, &bv) in acc0[..jw].iter_mut().zip(brow) {
+                                *x += v0 * bv;
+                            }
+                        }
+                    }
+                }
+                for (x, v) in acc[rows[0]].iter_mut().zip(acc0) {
+                    *x += v;
+                }
+            }
+            2 => {
+                let (r0, r1) = (rows[0], rows[1]);
+                let mut acc0 = [0f32; NR];
+                let mut acc1 = [0f32; NR];
+                for ch in ch0..ch1 {
+                    let base = ch * cg + p * g;
+                    for gi in 0..g {
+                        let slot = base + gi;
+                        let v0 = val[slot * 2];
+                        let v1 = val[slot * 2 + 1];
+                        let kk = idx[slot] as usize;
+                        if v0 == 0.0 && v1 == 0.0 {
+                            continue;
+                        }
+                        let brow = &b[kk * ncols + jj..kk * ncols + jj + jw];
+                        if FULL {
+                            for j in 0..NR {
+                                let bv = brow[j];
+                                acc0[j] += v0 * bv;
+                                acc1[j] += v1 * bv;
+                            }
+                        } else {
+                            for j in 0..jw {
+                                let bv = brow[j];
+                                acc0[j] += v0 * bv;
+                                acc1[j] += v1 * bv;
+                            }
+                        }
+                    }
+                }
+                for (x, v) in acc[r0].iter_mut().zip(acc0) {
+                    *x += v;
+                }
+                for (x, v) in acc[r1].iter_mut().zip(acc1) {
+                    *x += v;
+                }
+            }
+            _ => {
+                for ch in ch0..ch1 {
+                    let base = ch * cg + p * g;
+                    for gi in 0..g {
+                        let slot = base + gi;
+                        let kk = idx[slot] as usize;
+                        let vslot = &val[slot * n..slot * n + n];
+                        let brow = &b[kk * ncols + jj..kk * ncols + jj + jw];
+                        for (t, &row) in rows.iter().enumerate() {
+                            let av = vslot[t];
+                            if av == 0.0 {
+                                continue;
+                            }
+                            for j in 0..jw {
+                                acc[row][j] += av * brow[j];
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    }
+    // Single store of the whole slab tile.
+    for (r, acc_row) in acc.iter().enumerate() {
+        let crow = &mut c[(s * M + r) * ncols + jj..(s * M + r) * ncols + jj + jw];
+        crow.copy_from_slice(&acc_row[..jw]);
+    }
+}
+
+/// Fallback for m values without a const specialization.
+#[allow(clippy::too_many_arguments)]
+fn slab_tile_generic(
+    a: &NmgTensor,
+    s: usize,
+    b: &[f32],
+    c: &mut [f32],
+    ncols: usize,
+    jj: usize,
+    jw: usize,
+    pats_flat: &[usize],
+) {
+    let (m, n, g) = (a.m, a.n, a.g);
+    let slots_per_slab = a.chunks * a.c * g;
+    let val = &a.val[s * slots_per_slab * n..(s + 1) * slots_per_slab * n];
+    let idx = &a.idx[s * slots_per_slab..(s + 1) * slots_per_slab];
+    let mut acc = vec![[0f32; NR]; m];
+    let mut slot = 0usize;
+    for _ch in 0..a.chunks {
+        for p in 0..a.c {
+            let rows = &pats_flat[p * n..p * n + n];
+            for _gi in 0..g {
+                let kk = idx[slot] as usize;
+                let vslot = &val[slot * n..slot * n + n];
+                slot += 1;
+                let brow = &b[kk * ncols + jj..kk * ncols + jj + jw];
+                for (t, &row) in rows.iter().enumerate() {
+                    let av = vslot[t];
+                    if av == 0.0 {
+                        continue;
+                    }
+                    for j in 0..jw {
+                        acc[row][j] += av * brow[j];
+                    }
+                }
+            }
+        }
+    }
+    for (r, acc_row) in acc.iter().enumerate() {
+        let crow = &mut c[(s * m + r) * ncols + jj..(s * m + r) * ncols + jj + jw];
+        crow.copy_from_slice(&acc_row[..jw]);
+    }
+}
+
+/// Reference SpMM via densification (correctness oracle).
+pub fn spmm_ref(a: &NmgTensor, b: &DenseTensor) -> DenseTensor {
+    super::dense_gemm::matmul_naive(&a.to_dense(), b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest;
+    use crate::util::rng::Pcg64;
+
+    fn check_format(m: usize, n: usize, g: usize, slabs: usize, k: usize, ncols: usize, seed: u64) {
+        let mut rng = Pcg64::seeded(seed);
+        let dense = DenseTensor::randn(&[slabs * m, k], &mut rng);
+        let a = NmgTensor::from_dense(&dense, n, m, g);
+        let b = DenseTensor::randn(&[k, ncols], &mut rng);
+        let got = spmm(&a, &b);
+        let want = spmm_ref(&a, &b);
+        assert!(
+            got.allclose(&want, 1e-4, 1e-4),
+            "{n}:{m}:{g} mismatch, diff {}",
+            got.max_abs_diff(&want)
+        );
+    }
+
+    #[test]
+    fn matches_ref_2_4() {
+        check_format(4, 2, 4, 3, 48, 33, 40);
+    }
+
+    #[test]
+    fn matches_ref_1_4() {
+        check_format(4, 1, 2, 2, 30, 17, 41);
+    }
+
+    #[test]
+    fn matches_ref_2_8() {
+        check_format(8, 2, 2, 2, 56, 20, 42);
+    }
+
+    #[test]
+    fn matches_ref_1_10() {
+        check_format(10, 1, 4, 2, 85, 16, 43);
+    }
+
+    #[test]
+    fn matches_ref_3_6_generic_path() {
+        check_format(6, 3, 2, 2, 45, 19, 44);
+    }
+
+    #[test]
+    fn partial_chunk_and_small_n() {
+        check_format(4, 2, 4, 1, 5, 3, 45);
+        check_format(4, 2, 1, 1, 1, 1, 46);
+    }
+
+    #[test]
+    fn wide_n_exercises_multiple_tiles() {
+        check_format(4, 2, 4, 2, 48, 100, 47);
+        check_format(8, 2, 4, 2, 64, NR * 3 + 5, 48);
+    }
+
+    #[test]
+    fn prop_matches_ref() {
+        proptest::check(
+            "nmg-spmm-vs-ref",
+            15,
+            |rng| {
+                let fmts = [(4usize, 2usize, 2usize), (4, 1, 4), (8, 2, 1), (10, 1, 2)];
+                let (m, n, g) = fmts[rng.below(4) as usize];
+                let slabs = 1 + rng.below(3) as usize;
+                let k = 1 + rng.below(60) as usize;
+                let ncols = 1 + rng.below(40) as usize;
+                (m, n, g, slabs, k, ncols, rng.next_u64())
+            },
+            |&(m, n, g, slabs, k, ncols, seed)| {
+                let mut rng = Pcg64::seeded(seed);
+                let dense = DenseTensor::randn(&[slabs * m, k], &mut rng);
+                let a = NmgTensor::from_dense(&dense, n, m, g);
+                let b = DenseTensor::randn(&[k, ncols], &mut rng);
+                spmm(&a, &b).allclose(&spmm_ref(&a, &b), 1e-3, 1e-3)
+            },
+        );
+    }
+}

@@ -1,0 +1,44 @@
+//! # STen — productive and efficient sparsity (Rust + JAX + Pallas reproduction)
+//!
+//! This crate reimplements the STen sparsity programming model (Ivanov et al.,
+//! 2023) as the Layer-3 coordinator of a three-layer Rust + JAX + Pallas stack:
+//!
+//! * [`formats`] — sparsity layouts (CSR, CSC, COO, ELL, BCSR, n:m, n:m:g, masked).
+//! * [`sparsify`] — sparsifiers (keep-all, random fraction, threshold, per-block
+//!   n:m, magnitude, block magnitude, same-format), classified streaming /
+//!   blocking / materializing per Table 1 of the paper.
+//! * [`ops`] + [`dispatch`] — operators with per-layout-signature implementations
+//!   and the dispatch engine (registry lookup → lossless conversion → dense
+//!   fallback) of §4.4.
+//! * [`autograd`] — reverse-mode tape with per-tensor gradient output formats
+//!   (inline sparsifier, temporary layout, external sparsifier, final layout).
+//! * [`kernels`] — native CPU kernels: the paper's §5.1 n:m:g sparse-dense GEMM,
+//!   a DeepSparse-style CSR comparator, a TVM-style BCSR comparator, a blocked
+//!   dense GEMM baseline and the §5.2 dense→n:m:g conversion algorithms.
+//! * [`model`] — module graph, transformer encoder, and the `SparsityBuilder`
+//!   tracing API of §3.4.
+//! * [`train`] — optimizers, masked sparse training, pruning schedules (§6.2).
+//! * [`dist`] — data-parallel gradient synchronization with sparse handling (§4.6).
+//! * [`runtime`] — PJRT executor for AOT-lowered JAX/Pallas artifacts (L2/L1).
+//! * [`coordinator`] — batched sparse inference engine with dispatch/runtime
+//!   timing breakdown (Fig 11).
+
+pub mod util;
+pub mod tensor;
+pub mod formats;
+pub mod sparsify;
+pub mod ops;
+pub mod dispatch;
+pub mod autograd;
+pub mod kernels;
+pub mod model;
+pub mod train;
+pub mod dist;
+pub mod runtime;
+pub mod coordinator;
+pub mod energy;
+
+pub use tensor::DenseTensor;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,140 @@
+//! `sten` CLI — leader entrypoint for the coordinator.
+//!
+//! Subcommands:
+//!
+//! * `info`     — print artifact manifest + dispatcher summary.
+//! * `infer`    — run sparse/dense encoder inference over the AOT artifacts.
+//! * `serve`    — run the dynamic batcher over synthetic requests.
+//! * `energy`   — print the Fig. 7 energy table for a random weight.
+//! * `sparsify` — demonstrate the SparsityBuilder on an MLP.
+
+use std::time::Duration;
+
+use anyhow::Result;
+use sten::coordinator::{BatchServer, Engine, FfnMode};
+use sten::formats::Layout;
+use sten::model::{MlpSpec, SparsityBuilder};
+use sten::runtime::ArtifactRuntime;
+use sten::sparsify::GroupedNm;
+use sten::tensor::DenseTensor;
+use sten::util::cli::Args;
+use sten::util::rng::Pcg64;
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
+    match cmd {
+        "info" => info(&args),
+        "infer" => infer(&args),
+        "serve" => serve(&args),
+        "energy" => energy(&args),
+        "sparsify" => sparsify(&args),
+        other => {
+            eprintln!("unknown command {other:?}; try info|infer|serve|energy|sparsify");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn info(_args: &Args) -> Result<()> {
+    let rt = ArtifactRuntime::open_default()?;
+    println!("artifacts ({}):", rt.manifest().len());
+    for name in rt.manifest().names() {
+        let spec = rt.spec(name)?;
+        println!("  {name}: {} inputs, {} outputs", spec.inputs.len(), spec.outputs.len());
+    }
+    let d = sten::dispatch::global();
+    println!("dispatcher: {} registered op implementations", d.len());
+    Ok(())
+}
+
+fn infer(args: &Args) -> Result<()> {
+    let tag = args.get_or("tag", "tiny");
+    let mode = match args.get_or("ffn", "nmg").as_str() {
+        "dense" => FfnMode::DenseArtifact,
+        "native" => FfnMode::NativeDense,
+        _ => FfnMode::NativeNmg { n: 2, m: 4, g: 4 },
+    };
+    let iters: usize = args.num("iters", 3);
+    let rt = ArtifactRuntime::open_default()?;
+    let mut engine = Engine::new(rt, &tag, mode, 42)?;
+    let mut rng = Pcg64::seeded(7);
+    let tokens = engine.random_tokens(&mut rng);
+    for i in 0..iters {
+        let t = std::time::Instant::now();
+        let logits = engine.forward(&tokens)?;
+        println!(
+            "iter {i}: {:?} logits in {:.3} ms",
+            logits.shape(),
+            t.elapsed().as_secs_f64() * 1e3
+        );
+    }
+    println!("breakdown: {:?}", engine.timing().sorted());
+    Ok(())
+}
+
+fn serve(args: &Args) -> Result<()> {
+    let tag = args.get_or("tag", "tiny");
+    let requests: usize = args.num("requests", 32);
+    let rt = ArtifactRuntime::open_default()?;
+    let engine = Engine::new(rt, &tag, FfnMode::NativeNmg { n: 2, m: 4, g: 4 }, 42)?;
+    let mut server = BatchServer::new(engine, Duration::from_millis(5));
+    let mut rng = Pcg64::seeded(11);
+    let seq = server.engine().dims.seq;
+    let vocab = server.engine().dims.vocab as u32;
+    for _ in 0..requests {
+        let toks: Vec<i32> = (0..seq).map(|_| rng.below(vocab) as i32).collect();
+        server.submit(&toks);
+    }
+    server.run_until_drained()?;
+    println!(
+        "served {} requests; median latency {:.3} ms; throughput {:.1} req/s",
+        server.completed.len(),
+        server.median_latency().unwrap_or(0.0) * 1e3,
+        server.throughput().unwrap_or(0.0),
+    );
+    Ok(())
+}
+
+fn energy(args: &Args) -> Result<()> {
+    let rows: usize = args.num("rows", 768);
+    let cols: usize = args.num("cols", 3072);
+    let mut rng = Pcg64::seeded(1);
+    let w = DenseTensor::randn(&[rows, cols], &mut rng);
+    println!("format\tsparsity\tenergy");
+    for (n, m) in [(2usize, 4usize), (1, 4), (1, 10)] {
+        let s = 1.0 - n as f32 / m as f32;
+        println!("unstructured\t{s:.2}\t{:.4}", sten::energy::energy_unstructured(&w, s));
+        println!("{n}:{m}\t{s:.2}\t{:.4}", sten::energy::energy_nm(&w, n, m));
+        for g in [1usize, 4, 16] {
+            println!("{n}:{m}:{g}\t{s:.2}\t{:.4}", sten::energy::energy_nmg(&w, n, m, g));
+        }
+        println!("blocked4x4\t{s:.2}\t{:.4}", sten::energy::energy_blocked(&w, s, 4, 4));
+    }
+    Ok(())
+}
+
+fn sparsify(_args: &Args) -> Result<()> {
+    let spec = MlpSpec { input_dim: 64, hidden: vec![128, 128], classes: 10 };
+    let mut rng = Pcg64::seeded(3);
+    let params = spec.init(&mut rng);
+    let model = spec.build_graph(&params);
+    println!("dense model: {} params, {} bytes", model.num_params(), model.param_bytes());
+
+    let mut sb = SparsityBuilder::new();
+    for w in spec.prunable_weights() {
+        sb.set_weight(&w, Box::new(GroupedNm { n: 2, m: 4, g: 4 }), Layout::Nmg);
+    }
+    let sparse = sb.get_sparse_model(model)?;
+    println!("sparse model: {} params, {} bytes", sparse.num_params(), sparse.param_bytes());
+
+    let d = sten::dispatch::global();
+    let x = sten::formats::AnyTensor::Dense(DenseTensor::randn(&[8, 64], &mut rng));
+    let y = sparse.forward(d, &[x])?;
+    println!(
+        "forward ok: {:?}; dispatch (hit, convert, fallback) = {:?}",
+        y.shape(),
+        d.stats.counts()
+    );
+    Ok(())
+}

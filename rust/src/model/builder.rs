@@ -1,0 +1,192 @@
+//! `SparsityBuilder` (§3.4): sparsify an existing model by traced names.
+//!
+//! ```text
+//! let mut sb = SparsityBuilder::new();
+//! sb.set_weight("fc1.w", Box::new(GroupedNm{n:2, m:4, g:4}), Layout::Nmg);
+//! sb.set_interm("gelu1", Box::new(RandomFraction::new(0.9, 0)), Layout::Masked,
+//!               Box::new(KeepAll), Layout::Csr);
+//! sb.set_weight_grad("fc1.w", OutputFormat::external(..., Layout::Csr));
+//! let sparse = sb.get_sparse_model(model)?;
+//! ```
+//!
+//! Weights are sparsified immediately (they exist ahead of time); intermediate
+//! tensors are sparsified at runtime by attaching an output format to the
+//! producing node — exactly the paper's split.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::dispatch::OutputFormat;
+use crate::formats::Layout;
+use crate::sparsify::{sparsifier_registry, Sparsifier};
+
+use super::graph::GraphModel;
+
+struct WeightMark {
+    sparsifier: Box<dyn Sparsifier>,
+    out: Layout,
+}
+
+/// Builder collecting sparsification marks, applied by
+/// [`SparsityBuilder::get_sparse_model`].
+#[derive(Default)]
+pub struct SparsityBuilder {
+    weights: BTreeMap<String, WeightMark>,
+    interms: BTreeMap<String, OutputFormat>,
+    weight_grads: BTreeMap<String, OutputFormat>,
+}
+
+impl SparsityBuilder {
+    /// Empty builder.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mark a weight for initial sparsification into `out` layout.
+    pub fn set_weight(&mut self, name: &str, initial_sparsifier: Box<dyn Sparsifier>, out: Layout) {
+        self.weights.insert(name.to_string(), WeightMark { sparsifier: initial_sparsifier, out });
+    }
+
+    /// Mark an intermediate tensor (by producing node name) with an output
+    /// format: inline sparsifier -> tmp layout -> external sparsifier -> out.
+    pub fn set_interm(
+        &mut self,
+        node: &str,
+        inline: Box<dyn Sparsifier>,
+        tmp: Layout,
+        external: Box<dyn Sparsifier>,
+        out: Layout,
+    ) {
+        self.interms.insert(node.to_string(), OutputFormat { inline, tmp, external, out });
+    }
+
+    /// Attach a gradient output format to a weight (used during training).
+    pub fn set_weight_grad(&mut self, name: &str, fmt: OutputFormat) {
+        self.weight_grads.insert(name.to_string(), fmt);
+    }
+
+    /// Apply all marks, producing the sparse model. Errors on unknown traced
+    /// names (catching typos early, like STen).
+    pub fn get_sparse_model(self, mut model: GraphModel) -> Result<GraphModel> {
+        let reg = sparsifier_registry();
+        for (name, mark) in self.weights {
+            let Some(w) = model.weights.get(&name) else {
+                bail!(
+                    "set_weight: unknown weight {name:?} (have {:?})",
+                    model.weight_names()
+                );
+            };
+            let sparse = reg.apply(mark.sparsifier.as_ref(), w, mark.out)?;
+            model.weights.insert(name, sparse);
+        }
+        for (name, fmt) in self.interms {
+            let Some(node) = model.nodes.iter_mut().find(|n| n.name == name) else {
+                bail!(
+                    "set_interm: unknown node {name:?} (have {:?})",
+                    model.nodes.iter().map(|n| n.name.clone()).collect::<Vec<_>>()
+                );
+            };
+            node.out_fmt = Some(fmt);
+        }
+        for (name, fmt) in self.weight_grads {
+            if !model.weights.contains_key(&name) {
+                bail!("set_weight_grad: unknown weight {name:?}");
+            }
+            model.weight_grad_fmts.insert(name, fmt);
+        }
+        Ok(model)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::Dispatcher;
+    use crate::formats::AnyTensor;
+    use crate::model::graph::NodeInput;
+    use crate::ops::OpKind;
+    use crate::sparsify::{GroupedNm, KeepAll, RandomFraction, ScalarFraction};
+    use crate::tensor::DenseTensor;
+    use crate::util::rng::Pcg64;
+
+    fn model() -> GraphModel {
+        let mut rng = Pcg64::seeded(500);
+        let mut m = GraphModel::new();
+        m.add_weight("fc1.w", AnyTensor::Dense(DenseTensor::kaiming(&[8, 24], &mut rng)));
+        m.add_weight("fc2.w", AnyTensor::Dense(DenseTensor::kaiming(&[24, 4], &mut rng)));
+        m.add_node("fc1", OpKind::MatMul, vec![NodeInput::Input(0), NodeInput::Weight("fc1.w".into())]);
+        m.add_node("gelu1", OpKind::Gelu, vec![NodeInput::Node("fc1".into())]);
+        m.add_node("fc2", OpKind::MatMul, vec![NodeInput::Node("gelu1".into()), NodeInput::Weight("fc2.w".into())]);
+        m
+    }
+
+    #[test]
+    fn sparsifies_marked_weight() {
+        let mut sb = SparsityBuilder::new();
+        sb.set_weight("fc1.w", Box::new(ScalarFraction { fraction: 0.75 }), Layout::Csr);
+        let sparse = sb.get_sparse_model(model()).unwrap();
+        let w = &sparse.weights["fc1.w"];
+        assert_eq!(w.layout(), Layout::Csr);
+        assert_eq!(w.nnz(), 8 * 24 / 4);
+        // Unmarked weight untouched.
+        assert_eq!(sparse.weights["fc2.w"].layout(), Layout::Dense);
+    }
+
+    #[test]
+    fn forward_still_works_after_sparsification() {
+        let mut sb = SparsityBuilder::new();
+        sb.set_weight("fc1.w", Box::new(ScalarFraction { fraction: 0.5 }), Layout::Csr);
+        sb.set_interm(
+            "gelu1",
+            Box::new(RandomFraction::new(0.5, 7)),
+            Layout::Masked,
+            Box::new(KeepAll),
+            Layout::Dense,
+        );
+        let sparse = sb.get_sparse_model(model()).unwrap();
+        let d = Dispatcher::with_builtins();
+        let mut rng = Pcg64::seeded(501);
+        let x = AnyTensor::Dense(DenseTensor::randn(&[2, 8], &mut rng));
+        let y = sparse.forward(&d, &[x]).unwrap();
+        assert_eq!(y.shape(), &[2, 4]);
+    }
+
+    #[test]
+    fn nmg_weight_with_structured_sparsifier() {
+        let mut sb = SparsityBuilder::new();
+        sb.set_weight("fc1.w", Box::new(GroupedNm { n: 2, m: 4, g: 2 }), Layout::Nmg);
+        let sparse = sb.get_sparse_model(model()).unwrap();
+        assert_eq!(sparse.weights["fc1.w"].layout(), Layout::Nmg);
+    }
+
+    #[test]
+    fn unknown_names_rejected() {
+        let mut sb = SparsityBuilder::new();
+        sb.set_weight("typo.w", Box::new(KeepAll), Layout::Dense);
+        let err = sb.get_sparse_model(model()).err().unwrap().to_string();
+        assert!(err.contains("typo.w"), "{err}");
+
+        let mut sb = SparsityBuilder::new();
+        sb.set_interm("typo", Box::new(KeepAll), Layout::Dense, Box::new(KeepAll), Layout::Dense);
+        assert!(sb.get_sparse_model(model()).is_err());
+
+        let mut sb = SparsityBuilder::new();
+        sb.set_weight_grad("typo.w", crate::dispatch::OutputFormat::dense());
+        assert!(sb.get_sparse_model(model()).is_err());
+    }
+
+    #[test]
+    fn weight_grad_fmt_recorded() {
+        let mut sb = SparsityBuilder::new();
+        sb.set_weight_grad(
+            "fc1.w",
+            crate::dispatch::OutputFormat::external(
+                Box::new(ScalarFraction { fraction: 0.9 }),
+                Layout::Csr,
+            ),
+        );
+        let sparse = sb.get_sparse_model(model()).unwrap();
+        assert!(sparse.weight_grad_fmts.contains_key("fc1.w"));
+    }
+}

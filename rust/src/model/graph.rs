@@ -1,0 +1,226 @@
+//! Traced computation graph: named operators over named weights.
+//!
+//! STen sparsifies *existing* models by tracing them (torch.fx) and marking
+//! traced names (§4.1). [`GraphModel`] is that trace: a topologically-ordered
+//! node list where every node has a stable name, an op, and inputs referring
+//! to model inputs, previous nodes, or named weights. Execution routes every
+//! node through a [`Dispatcher`], so sparsified weights automatically hit
+//! sparse kernels and unsupported combinations fall back per §4.4.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::dispatch::{Dispatcher, OutputFormat};
+use crate::formats::AnyTensor;
+use crate::ops::OpKind;
+
+/// Reference to a node input.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NodeInput {
+    /// The i-th model input.
+    Input(usize),
+    /// Output of a previous node, by traced name.
+    Node(String),
+    /// A named weight.
+    Weight(String),
+}
+
+/// One traced operator application.
+pub struct GraphNode {
+    /// Traced name (unique).
+    pub name: String,
+    /// The operator.
+    pub op: OpKind,
+    /// Inputs in argument order.
+    pub inputs: Vec<NodeInput>,
+    /// Output format (attached by `SparsityBuilder::set_interm`).
+    pub out_fmt: Option<OutputFormat>,
+}
+
+/// A traced model: ordered nodes + named weights.
+#[derive(Default)]
+pub struct GraphModel {
+    /// Topologically ordered nodes.
+    pub nodes: Vec<GraphNode>,
+    /// Named weights in any layout.
+    pub weights: BTreeMap<String, AnyTensor>,
+    /// Gradient output formats attached by `set_weight_grad`.
+    pub weight_grad_fmts: BTreeMap<String, OutputFormat>,
+}
+
+impl GraphModel {
+    /// Empty model.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add a weight tensor.
+    pub fn add_weight(&mut self, name: &str, w: AnyTensor) {
+        self.weights.insert(name.to_string(), w);
+    }
+
+    /// Append a traced node.
+    pub fn add_node(&mut self, name: &str, op: OpKind, inputs: Vec<NodeInput>) {
+        assert!(
+            !self.nodes.iter().any(|n| n.name == name),
+            "duplicate node name {name}"
+        );
+        self.nodes.push(GraphNode { name: name.to_string(), op, inputs, out_fmt: None });
+    }
+
+    /// Traced names of all nodes (the names `SparsityBuilder` accepts).
+    pub fn node_names(&self) -> Vec<&str> {
+        self.nodes.iter().map(|n| n.name.as_str()).collect()
+    }
+
+    /// Traced names of all weights.
+    pub fn weight_names(&self) -> Vec<&str> {
+        self.weights.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute the graph; returns the output of the final node.
+    pub fn forward(&self, dispatcher: &Dispatcher, inputs: &[AnyTensor]) -> Result<AnyTensor> {
+        let mut env: BTreeMap<&str, AnyTensor> = BTreeMap::new();
+        let mut last: Option<AnyTensor> = None;
+        for node in &self.nodes {
+            let args: Vec<AnyTensor> = node
+                .inputs
+                .iter()
+                .map(|r| -> Result<AnyTensor> {
+                    Ok(match r {
+                        NodeInput::Input(i) => inputs
+                            .get(*i)
+                            .cloned()
+                            .ok_or_else(|| anyhow!("missing model input {i}"))?,
+                        NodeInput::Node(n) => env
+                            .get(n.as_str())
+                            .cloned()
+                            .ok_or_else(|| anyhow!("node {n:?} not yet computed"))?,
+                        NodeInput::Weight(w) => self
+                            .weights
+                            .get(w)
+                            .cloned()
+                            .ok_or_else(|| anyhow!("unknown weight {w:?}"))?,
+                    })
+                })
+                .collect::<Result<_>>()?;
+            let out = match &node.out_fmt {
+                Some(fmt) => dispatcher.call_sparse(node.op, &args, fmt)?,
+                None => dispatcher.call(node.op, &args)?,
+            };
+            env.insert(node.name.as_str(), out.clone());
+            last = Some(out);
+        }
+        last.ok_or_else(|| bail_empty())
+    }
+
+    /// Total parameter count (dense-equivalent elements).
+    pub fn num_params(&self) -> usize {
+        self.weights.values().map(|w| w.shape().iter().product::<usize>()).sum()
+    }
+
+    /// Total parameter storage in bytes under current layouts.
+    pub fn param_bytes(&self) -> usize {
+        self.weights.values().map(|w| w.bytes()).sum()
+    }
+}
+
+fn bail_empty() -> anyhow::Error {
+    anyhow!("empty graph")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::Layout;
+    use crate::tensor::DenseTensor;
+    use crate::util::rng::Pcg64;
+
+    fn linear_graph() -> GraphModel {
+        let mut rng = Pcg64::seeded(400);
+        let mut m = GraphModel::new();
+        m.add_weight("w", AnyTensor::Dense(DenseTensor::kaiming(&[4, 3], &mut rng)));
+        m.add_weight("b", AnyTensor::Dense(DenseTensor::zeros(&[3])));
+        m.add_node("fc", OpKind::MatMul, vec![NodeInput::Input(0), NodeInput::Weight("w".into())]);
+        m.add_node("bias", OpKind::BiasAdd, vec![NodeInput::Node("fc".into()), NodeInput::Weight("b".into())]);
+        m.add_node("act", OpKind::Relu, vec![NodeInput::Node("bias".into())]);
+        m
+    }
+
+    #[test]
+    fn forward_executes_topologically() {
+        let m = linear_graph();
+        let d = Dispatcher::with_builtins();
+        let mut rng = Pcg64::seeded(401);
+        let x = AnyTensor::Dense(DenseTensor::randn(&[2, 4], &mut rng));
+        let y = m.forward(&d, &[x]).unwrap();
+        assert_eq!(y.shape(), &[2, 3]);
+        // ReLU output is non-negative.
+        assert!(y.to_dense().data().iter().all(|&v| v >= 0.0));
+    }
+
+    #[test]
+    fn missing_weight_errors() {
+        let mut m = linear_graph();
+        m.add_node("bad", OpKind::MatMul, vec![NodeInput::Node("act".into()), NodeInput::Weight("nope".into())]);
+        let d = Dispatcher::with_builtins();
+        let x = AnyTensor::Dense(DenseTensor::ones(&[2, 4]));
+        let err = m.forward(&d, &[x]).unwrap_err().to_string();
+        assert!(err.contains("nope"), "{err}");
+    }
+
+    #[test]
+    fn sparse_weight_dispatches_sparse_kernel() {
+        let mut m = linear_graph();
+        // Replace w with an n:m:g weight: (4,3) -> transpose story aside,
+        // use a (4, 24) weight to satisfy chunking.
+        let mut rng = Pcg64::seeded(402);
+        let w = DenseTensor::randn(&[4, 24], &mut rng);
+        m.weights.insert(
+            "w".into(),
+            AnyTensor::Nmg(crate::formats::NmgTensor::from_dense(&w, 2, 4, 2)),
+        );
+        // MatMul(x [2,4] ... shapes: x [2,4] @ w [4,24] — but Nmg matmul wants
+        // Nmg lhs. Build a graph with the weight first: w^T x^T pattern is
+        // what the FFN uses; here simply call MatMul(weight, input).
+        let mut m2 = GraphModel::new();
+        m2.weights.insert("w".into(), m.weights["w"].clone());
+        m2.add_node("mm", OpKind::MatMul, vec![NodeInput::Weight("w".into()), NodeInput::Input(0)]);
+        let d = Dispatcher::with_builtins();
+        let x = AnyTensor::Dense(DenseTensor::randn(&[24, 5], &mut rng));
+        let y = m2.forward(&d, &[x]).unwrap();
+        assert_eq!(y.shape(), &[4, 5]);
+        assert_eq!(d.stats.counts().0, 1, "expected exact Nmg kernel hit");
+    }
+
+    #[test]
+    fn param_accounting() {
+        let m = linear_graph();
+        assert_eq!(m.num_params(), 4 * 3 + 3);
+        assert_eq!(m.param_bytes(), (4 * 3 + 3) * 4);
+        assert_eq!(m.node_names(), vec!["fc", "bias", "act"]);
+        assert_eq!(m.weight_names(), vec!["b", "w"]);
+    }
+
+    #[test]
+    #[should_panic(expected = "duplicate node name")]
+    fn duplicate_names_rejected() {
+        let mut m = linear_graph();
+        m.add_node("fc", OpKind::Relu, vec![NodeInput::Input(0)]);
+    }
+
+    #[test]
+    fn out_fmt_applies_to_node_output() {
+        let mut m = linear_graph();
+        m.nodes[2].out_fmt = Some(OutputFormat::external(
+            Box::new(crate::sparsify::ScalarFraction { fraction: 0.5 }),
+            Layout::Csr,
+        ));
+        let d = Dispatcher::with_builtins();
+        let mut rng = Pcg64::seeded(403);
+        let x = AnyTensor::Dense(DenseTensor::randn(&[2, 4], &mut rng));
+        let y = m.forward(&d, &[x]).unwrap();
+        assert_eq!(y.layout(), Layout::Csr);
+    }
+}

@@ -1,0 +1,177 @@
+//! MLP model: graph construction + tape-autograd training forward.
+//!
+//! The §6.2 productivity study fine-tunes a pruned vision model; our
+//! substitute (see DESIGN.md §Substitutions) is an MLP classifier on a
+//! synthetic CIFAR-shaped dataset. The same weight set powers both the
+//! dispatcher-routed inference graph ([`MlpSpec::build_graph`]) and the
+//! autograd training pass ([`MlpSpec::forward_tape`]).
+
+use std::collections::BTreeMap;
+
+use crate::autograd::{Tape, Var};
+use crate::formats::AnyTensor;
+use crate::ops::OpKind;
+use crate::tensor::DenseTensor;
+use crate::util::rng::Pcg64;
+
+use super::graph::{GraphModel, NodeInput};
+
+/// MLP hyperparameters.
+#[derive(Debug, Clone)]
+pub struct MlpSpec {
+    /// Input feature dimension.
+    pub input_dim: usize,
+    /// Hidden layer widths.
+    pub hidden: Vec<usize>,
+    /// Number of classes.
+    pub classes: usize,
+}
+
+impl MlpSpec {
+    /// Layer dimensions as (in, out) pairs.
+    pub fn layer_dims(&self) -> Vec<(usize, usize)> {
+        let mut dims = Vec::new();
+        let mut prev = self.input_dim;
+        for &h in &self.hidden {
+            dims.push((prev, h));
+            prev = h;
+        }
+        dims.push((prev, self.classes));
+        dims
+    }
+
+    /// Weight names in layer order: `fcN.w`, `fcN.b`.
+    pub fn weight_names(&self) -> Vec<String> {
+        (0..self.layer_dims().len())
+            .flat_map(|i| [format!("fc{i}.w"), format!("fc{i}.b")])
+            .collect()
+    }
+
+    /// Names of the 2-D (prunable) weights, layer order — the unit the
+    /// layer-wise schedule walks (§6.2).
+    pub fn prunable_weights(&self) -> Vec<String> {
+        (0..self.layer_dims().len()).map(|i| format!("fc{i}.w")).collect()
+    }
+
+    /// Initialize dense parameters.
+    pub fn init(&self, rng: &mut Pcg64) -> BTreeMap<String, DenseTensor> {
+        let mut params = BTreeMap::new();
+        for (i, (din, dout)) in self.layer_dims().into_iter().enumerate() {
+            params.insert(format!("fc{i}.w"), DenseTensor::kaiming(&[din, dout], rng));
+            params.insert(format!("fc{i}.b"), DenseTensor::zeros(&[dout]));
+        }
+        params
+    }
+
+    /// Build the dispatcher-routed inference graph from parameters.
+    pub fn build_graph(&self, params: &BTreeMap<String, DenseTensor>) -> GraphModel {
+        let mut m = GraphModel::new();
+        for (name, w) in params {
+            m.add_weight(name, AnyTensor::Dense(w.clone()));
+        }
+        let layers = self.layer_dims().len();
+        let mut prev: Option<String> = None;
+        for i in 0..layers {
+            let x_ref = match &prev {
+                None => NodeInput::Input(0),
+                Some(p) => NodeInput::Node(p.clone()),
+            };
+            m.add_node(&format!("fc{i}"), OpKind::MatMul, vec![x_ref, NodeInput::Weight(format!("fc{i}.w"))]);
+            m.add_node(
+                &format!("bias{i}"),
+                OpKind::BiasAdd,
+                vec![NodeInput::Node(format!("fc{i}")), NodeInput::Weight(format!("fc{i}.b"))],
+            );
+            if i + 1 < layers {
+                m.add_node(&format!("gelu{i}"), OpKind::Gelu, vec![NodeInput::Node(format!("bias{i}"))]);
+                prev = Some(format!("gelu{i}"));
+            } else {
+                prev = Some(format!("bias{i}"));
+            }
+        }
+        m
+    }
+
+    /// Tape forward: returns (logit var, param vars by name).
+    pub fn forward_tape(
+        &self,
+        tape: &Tape,
+        params: &BTreeMap<String, DenseTensor>,
+        x: DenseTensor,
+    ) -> (Var, BTreeMap<String, Var>) {
+        let mut vars = BTreeMap::new();
+        let mut h = tape.input(x);
+        let layers = self.layer_dims().len();
+        for i in 0..layers {
+            let w = tape.param(params[&format!("fc{i}.w")].clone());
+            let b = tape.param(params[&format!("fc{i}.b")].clone());
+            vars.insert(format!("fc{i}.w"), w);
+            vars.insert(format!("fc{i}.b"), b);
+            h = tape.bias_add(tape.matmul(h, w), b);
+            if i + 1 < layers {
+                h = tape.gelu(h);
+            }
+        }
+        (h, vars)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::Dispatcher;
+
+    fn spec() -> MlpSpec {
+        MlpSpec { input_dim: 12, hidden: vec![16, 8], classes: 4 }
+    }
+
+    #[test]
+    fn layer_dims_chain() {
+        assert_eq!(spec().layer_dims(), vec![(12, 16), (16, 8), (8, 4)]);
+        assert_eq!(spec().prunable_weights(), vec!["fc0.w", "fc1.w", "fc2.w"]);
+    }
+
+    #[test]
+    fn graph_and_tape_forward_agree() {
+        let s = spec();
+        let mut rng = Pcg64::seeded(600);
+        let params = s.init(&mut rng);
+        let x = DenseTensor::randn(&[3, 12], &mut rng);
+
+        let graph = s.build_graph(&params);
+        let d = Dispatcher::with_builtins();
+        let y_graph = graph.forward(&d, &[AnyTensor::Dense(x.clone())]).unwrap().to_dense();
+
+        let tape = Tape::new();
+        let (logits, _) = s.forward_tape(&tape, &params, x);
+        let y_tape = tape.value(logits);
+
+        assert!(y_graph.allclose(&y_tape, 1e-4, 1e-4), "diff {}", y_graph.max_abs_diff(&y_tape));
+        assert_eq!(y_graph.shape(), &[3, 4]);
+    }
+
+    #[test]
+    fn training_reduces_loss() {
+        let s = MlpSpec { input_dim: 8, hidden: vec![16], classes: 3 };
+        let mut rng = Pcg64::seeded(601);
+        let mut params = s.init(&mut rng);
+        let x = DenseTensor::randn(&[12, 8], &mut rng);
+        let labels: Vec<usize> = (0..12).map(|i| i % 3).collect();
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..30 {
+            let tape = Tape::new();
+            let (logits, vars) = s.forward_tape(&tape, &params, x.clone());
+            let loss = tape.softmax_cross_entropy(logits, &labels);
+            last = tape.value(loss).data()[0];
+            first.get_or_insert(last);
+            tape.backward(loss).unwrap();
+            let pvars: Vec<_> = vars.values().copied().collect();
+            tape.sgd_step(&pvars, 0.5);
+            for (name, v) in &vars {
+                params.insert(name.clone(), tape.value(*v));
+            }
+        }
+        assert!(last < first.unwrap() * 0.5, "{} -> {last}", first.unwrap());
+    }
+}

@@ -1,0 +1,17 @@
+//! Model construction and sparsification (§3.4).
+//!
+//! * [`graph`] — a traced computation graph over named nodes and weights
+//!   (the `torch.fx` analog): the substrate [`builder::SparsityBuilder`]
+//!   marks tensors on.
+//! * [`builder`] — `SparsityBuilder`: `set_weight` / `set_interm` /
+//!   `set_weight_grad` / `get_sparse_model`, STen's model-sparsification API.
+//! * [`mlp`] — an MLP over the graph plus a tape-autograd forward for
+//!   training (the §6.2 productivity-study network).
+
+pub mod graph;
+pub mod builder;
+pub mod mlp;
+
+pub use builder::SparsityBuilder;
+pub use graph::{GraphModel, GraphNode, NodeInput};
+pub use mlp::MlpSpec;

@@ -1,0 +1,130 @@
+//! Operators (§3.2): functions over tensors with any sparsity layouts.
+//!
+//! [`OpKind`] enumerates the operator vocabulary; [`dense_reference`] gives
+//! every operator a dense implementation — the universal fallback of §4.4.
+//! Layout-specialized implementations are registered with the dispatcher
+//! (see [`crate::dispatch`]); the default registrations live in
+//! [`crate::dispatch::builtin`].
+
+use anyhow::{bail, Result};
+
+use crate::formats::AnyTensor;
+use crate::kernels::{dense_gemm, elementwise};
+use crate::tensor::DenseTensor;
+
+/// Operator vocabulary.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpKind {
+    /// C = A · B (2-D).
+    MatMul,
+    /// C = A + B (elementwise).
+    Add,
+    /// C = A ⊙ B (elementwise).
+    Mul,
+    /// ReLU.
+    Relu,
+    /// GeLU (tanh approximation).
+    Gelu,
+    /// Row-wise softmax (2-D).
+    Softmax,
+    /// Row-wise LayerNorm: inputs (x, gamma, beta).
+    LayerNorm,
+    /// Bias add: inputs (x 2-D, bias 1-D).
+    BiasAdd,
+    /// 2-D transpose.
+    Transpose,
+}
+
+impl OpKind {
+    /// Number of tensor inputs.
+    pub fn arity(&self) -> usize {
+        match self {
+            OpKind::MatMul | OpKind::Add | OpKind::Mul | OpKind::BiasAdd => 2,
+            OpKind::LayerNorm => 3,
+            OpKind::Relu | OpKind::Gelu | OpKind::Softmax | OpKind::Transpose => 1,
+        }
+    }
+
+    /// True for ops whose semantics are elementwise over the first input.
+    pub fn elementwise(&self) -> bool {
+        matches!(self, OpKind::Relu | OpKind::Gelu | OpKind::Add | OpKind::Mul)
+    }
+}
+
+impl std::fmt::Display for OpKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{self:?}")
+    }
+}
+
+/// Dense reference semantics for every operator. All layout-specialized
+/// implementations must agree with this (tested in `dispatch`).
+pub fn dense_reference(op: OpKind, inputs: &[DenseTensor]) -> Result<DenseTensor> {
+    if inputs.len() != op.arity() {
+        bail!("{op}: expected {} inputs, got {}", op.arity(), inputs.len());
+    }
+    Ok(match op {
+        OpKind::MatMul => dense_gemm::matmul(&inputs[0], &inputs[1]),
+        OpKind::Add => inputs[0].zip(&inputs[1], |a, b| a + b),
+        OpKind::Mul => inputs[0].zip(&inputs[1], |a, b| a * b),
+        OpKind::Relu => elementwise::relu(&inputs[0]),
+        OpKind::Gelu => elementwise::gelu(&inputs[0]),
+        OpKind::Softmax => elementwise::softmax_rows(&inputs[0]),
+        OpKind::LayerNorm => {
+            elementwise::layernorm_rows(&inputs[0], inputs[1].data(), inputs[2].data())
+        }
+        OpKind::BiasAdd => elementwise::bias_add(&inputs[0], inputs[1].data()),
+        OpKind::Transpose => inputs[0].transpose2(),
+    })
+}
+
+/// Dense reference over [`AnyTensor`] operands (densifies, computes, wraps).
+pub fn dense_reference_any(op: OpKind, inputs: &[AnyTensor]) -> Result<AnyTensor> {
+    let dense: Vec<DenseTensor> = inputs.iter().map(|t| t.to_dense()).collect();
+    Ok(AnyTensor::Dense(dense_reference(op, &dense)?))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn arity_checked() {
+        let x = DenseTensor::ones(&[2, 2]);
+        assert!(dense_reference(OpKind::Add, &[x]).is_err());
+    }
+
+    #[test]
+    fn add_mul_elementwise() {
+        let a = DenseTensor::from_vec(&[3], vec![1.0, 2.0, 3.0]);
+        let b = DenseTensor::from_vec(&[3], vec![10.0, 20.0, 30.0]);
+        assert_eq!(dense_reference(OpKind::Add, &[a.clone(), b.clone()]).unwrap().data(), &[11.0, 22.0, 33.0]);
+        assert_eq!(dense_reference(OpKind::Mul, &[a, b]).unwrap().data(), &[10.0, 40.0, 90.0]);
+    }
+
+    #[test]
+    fn matmul_shapes() {
+        let mut rng = Pcg64::seeded(90);
+        let a = DenseTensor::randn(&[3, 4], &mut rng);
+        let b = DenseTensor::randn(&[4, 5], &mut rng);
+        let c = dense_reference(OpKind::MatMul, &[a, b]).unwrap();
+        assert_eq!(c.shape(), &[3, 5]);
+    }
+
+    #[test]
+    fn transpose_reference() {
+        let a = DenseTensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let t = dense_reference(OpKind::Transpose, &[a]).unwrap();
+        assert_eq!(t.shape(), &[3, 2]);
+        assert_eq!(t.get2(2, 1), 6.0);
+    }
+
+    #[test]
+    fn op_metadata() {
+        assert_eq!(OpKind::LayerNorm.arity(), 3);
+        assert!(OpKind::Relu.elementwise());
+        assert!(!OpKind::MatMul.elementwise());
+        assert_eq!(OpKind::MatMul.to_string(), "MatMul");
+    }
+}

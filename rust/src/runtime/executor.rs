@@ -1,0 +1,272 @@
+//! The PJRT executor: compile-once, execute-many artifact runtime.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::manifest::{ArtifactSpec, DType, Manifest};
+use crate::tensor::DenseTensor;
+use crate::util::timer::TimeBreakdown;
+
+/// A typed host value crossing the Rust <-> PJRT boundary.
+#[derive(Debug, Clone)]
+pub enum Value {
+    /// Dense float tensor.
+    F32(DenseTensor),
+    /// Integer tensor (tokens, indices) with explicit shape.
+    I32(Vec<usize>, Vec<i32>),
+}
+
+impl Value {
+    /// Shape of the value.
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Value::F32(t) => t.shape(),
+            Value::I32(shape, _) => shape,
+        }
+    }
+
+    /// Dtype tag matching the manifest.
+    pub fn dtype(&self) -> DType {
+        match self {
+            Value::F32(_) => DType::F32,
+            Value::I32(..) => DType::I32,
+        }
+    }
+
+    /// Unwrap as a float tensor.
+    pub fn into_f32(self) -> Result<DenseTensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            other => bail!("expected f32 value, got {:?}", other.dtype()),
+        }
+    }
+
+    /// Borrow as a float tensor.
+    pub fn as_f32(&self) -> Result<&DenseTensor> {
+        match self {
+            Value::F32(t) => Ok(t),
+            other => bail!("expected f32 value, got {:?}", other.dtype()),
+        }
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            Value::F32(t) => {
+                if dims.is_empty() {
+                    xla::Literal::scalar(t.data()[0])
+                } else {
+                    xla::Literal::vec1(t.data()).reshape(&dims)?
+                }
+            }
+            Value::I32(_, data) => {
+                if dims.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    xla::Literal::vec1(data).reshape(&dims)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    fn from_literal(lit: &xla::Literal, dtype: DType, shape: &[usize]) -> Result<Value> {
+        Ok(match dtype {
+            DType::F32 => Value::F32(DenseTensor::from_vec(shape, lit.to_vec::<f32>()?)),
+            DType::I32 => Value::I32(shape.to_vec(), lit.to_vec::<i32>()?),
+        })
+    }
+}
+
+impl From<DenseTensor> for Value {
+    fn from(t: DenseTensor) -> Self {
+        Value::F32(t)
+    }
+}
+
+/// Compile-once, execute-many runtime over the artifacts directory.
+///
+/// Executables are compiled lazily on first call and cached. All timing is
+/// recorded in a [`TimeBreakdown`] under `compile` / `execute` / `transfer`
+/// buckets, which the coordinator folds into the Fig. 11 latency breakdown.
+pub struct ArtifactRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    times: Mutex<TimeBreakdown>,
+}
+
+impl ArtifactRuntime {
+    /// Open the default artifacts directory (`artifacts/` or `$STEN_ARTIFACTS`).
+    pub fn open_default() -> Result<Self> {
+        Self::open(super::default_artifacts_dir())
+    }
+
+    /// Open a specific artifacts directory.
+    pub fn open(dir: PathBuf) -> Result<Self> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(ArtifactRuntime {
+            client,
+            dir,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            times: Mutex::new(TimeBreakdown::new()),
+        })
+    }
+
+    /// The manifest describing all artifacts.
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Artifact spec lookup.
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.manifest.get(name)
+    }
+
+    /// Compile (or fetch from cache) an artifact's executable.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.cache.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let spec = self.manifest.get(name)?;
+        let path = self.dir.join(&spec.file);
+        let t = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?,
+        );
+        self.times.lock().unwrap().add("compile", t.elapsed());
+        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an artifact with typed, shape-checked inputs.
+    pub fn call(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
+        let spec = self.manifest.get(name)?.clone();
+        if inputs.len() != spec.inputs.len() {
+            bail!(
+                "artifact {name}: expected {} inputs, got {}",
+                spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (v, io) in inputs.iter().zip(&spec.inputs) {
+            if v.shape() != io.shape.as_slice() || v.dtype() != io.dtype {
+                bail!(
+                    "artifact {name}: input {:?} expects {:?} {:?}, got {:?} {:?}",
+                    io.name,
+                    io.dtype,
+                    io.shape,
+                    v.dtype(),
+                    v.shape()
+                );
+            }
+        }
+        let exe = self.load(name)?;
+
+        let t = Instant::now();
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
+        self.times.lock().unwrap().add("transfer", t.elapsed());
+
+        let t = Instant::now();
+        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        self.times.lock().unwrap().add("execute", t.elapsed());
+
+        let t = Instant::now();
+        // aot.py lowers with return_tuple=True: the result is always a tuple.
+        let parts = result.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            bail!(
+                "artifact {name}: expected {} outputs, got {}",
+                spec.outputs.len(),
+                parts.len()
+            );
+        }
+        let out = parts
+            .iter()
+            .zip(&spec.outputs)
+            .map(|(lit, io)| Value::from_literal(lit, io.dtype, &io.shape))
+            .collect::<Result<Vec<_>>>()?;
+        self.times.lock().unwrap().add("transfer", t.elapsed());
+        Ok(out)
+    }
+
+    /// Convenience: call and unwrap a single f32 output.
+    pub fn call1(&self, name: &str, inputs: &[Value]) -> Result<DenseTensor> {
+        let mut out = self.call(name, inputs)?;
+        if out.len() != 1 {
+            bail!("artifact {name} returned {} outputs, expected 1", out.len());
+        }
+        out.remove(0).into_f32()
+    }
+
+    /// Snapshot of accumulated timing.
+    pub fn timing(&self) -> TimeBreakdown {
+        self.times.lock().unwrap().clone()
+    }
+
+    /// Reset accumulated timing.
+    pub fn reset_timing(&self) {
+        *self.times.lock().unwrap() = TimeBreakdown::new();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn value_shape_dtype_roundtrip() {
+        let v = Value::F32(DenseTensor::zeros(&[2, 3]));
+        assert_eq!(v.shape(), &[2, 3]);
+        assert_eq!(v.dtype(), DType::F32);
+        let v = Value::I32(vec![4], vec![1, 2, 3, 4]);
+        assert_eq!(v.shape(), &[4]);
+        assert_eq!(v.dtype(), DType::I32);
+        assert!(v.into_f32().is_err());
+    }
+
+    #[test]
+    fn f32_literal_roundtrip() {
+        let t = DenseTensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
+        let lit = Value::F32(t.clone()).to_literal().unwrap();
+        let back = Value::from_literal(&lit, DType::F32, &[2, 2]).unwrap();
+        assert_eq!(back.into_f32().unwrap(), t);
+    }
+
+    #[test]
+    fn i32_literal_roundtrip() {
+        let v = Value::I32(vec![3], vec![7, -1, 9]);
+        let lit = v.to_literal().unwrap();
+        let back = Value::from_literal(&lit, DType::I32, &[3]).unwrap();
+        match back {
+            Value::I32(shape, data) => {
+                assert_eq!(shape, vec![3]);
+                assert_eq!(data, vec![7, -1, 9]);
+            }
+            _ => panic!("wrong dtype"),
+        }
+    }
+
+    #[test]
+    fn scalar_literal_roundtrip() {
+        let t = DenseTensor::from_vec(&[], vec![2.5]);
+        let lit = Value::F32(t).to_literal().unwrap();
+        let back = Value::from_literal(&lit, DType::F32, &[]).unwrap();
+        assert_eq!(back.into_f32().unwrap().data(), &[2.5]);
+    }
+}

@@ -1,0 +1,420 @@
+//! `artifacts/manifest.json` model + a minimal JSON parser.
+//!
+//! serde is not in the offline vendor set, so this module includes a small
+//! recursive-descent JSON parser sufficient for the manifest schema (objects,
+//! arrays, strings, integers/floats, booleans, null).
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(HashMap<String, Json>),
+}
+
+impl Json {
+    /// Parse a JSON document.
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+        p.skip_ws();
+        let v = p.value()?;
+        p.skip_ws();
+        if p.pos != p.bytes.len() {
+            bail!("trailing garbage at byte {}", p.pos);
+        }
+        Ok(v)
+    }
+
+    /// Object field lookup.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    /// Array view.
+    pub fn arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            other => bail!("expected array, got {other:?}"),
+        }
+    }
+
+    /// String view.
+    pub fn str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+
+    /// Numeric view as usize.
+    pub fn usize(&self) -> Result<usize> {
+        match self {
+            Json::Num(n) => Ok(*n as usize),
+            other => bail!("expected number, got {other:?}"),
+        }
+    }
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn skip_ws(&mut self) {
+        while self.pos < self.bytes.len() && self.bytes[self.pos].is_ascii_whitespace() {
+            self.pos += 1;
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            bail!("expected {:?} at byte {}, found {:?}", b as char, self.pos, self.peek().map(|c| c as char))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        self.skip_ws();
+        match self.peek().ok_or_else(|| anyhow!("unexpected end of input"))? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.keyword("true", Json::Bool(true)),
+            b'f' => self.keyword("false", Json::Bool(false)),
+            b'n' => self.keyword("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn keyword(&mut self, kw: &str, v: Json) -> Result<Json> {
+        if self.bytes[self.pos..].starts_with(kw.as_bytes()) {
+            self.pos += kw.len();
+            Ok(v)
+        } else {
+            bail!("invalid keyword at byte {}", self.pos)
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.expect(b'{')?;
+        let mut map = HashMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            map.insert(key, val);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(map));
+                }
+                other => bail!("expected ',' or '}}', found {other:?}"),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                other => bail!("expected ',' or ']', found {other:?}"),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek().ok_or_else(|| anyhow!("unterminated string"))? {
+                b'"' => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                b'\\' => {
+                    self.pos += 1;
+                    let esc = self.peek().ok_or_else(|| anyhow!("bad escape"))?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{8}'),
+                        b'f' => out.push('\u{c}'),
+                        b'u' => {
+                            let hex = std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])?;
+                            let code = u32::from_str_radix(hex, 16)?;
+                            self.pos += 4;
+                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
+                        }
+                        _ => bail!("unknown escape \\{}", esc as char),
+                    }
+                }
+                _ => {
+                    // Consume one UTF-8 scalar.
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..])?;
+                    let ch = rest.chars().next().unwrap();
+                    out.push(ch);
+                    self.pos += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.pos;
+        while let Some(b) = self.peek() {
+            if b.is_ascii_digit() || matches!(b, b'-' | b'+' | b'.' | b'e' | b'E') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos])?;
+        Ok(Json::Num(s.parse().with_context(|| format!("bad number {s:?}"))?))
+    }
+}
+
+/// Element dtype of an artifact input/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    fn parse(s: &str) -> Result<DType> {
+        match s {
+            "float32" => Ok(DType::F32),
+            "int32" => Ok(DType::I32),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+}
+
+/// One input or output of an artifact.
+#[derive(Debug, Clone)]
+pub struct IoSpec {
+    /// Input name (empty for outputs).
+    pub name: String,
+    /// Element type.
+    pub dtype: DType,
+    /// Shape (row-major).
+    pub shape: Vec<usize>,
+}
+
+impl IoSpec {
+    /// Number of elements.
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT artifact: an HLO computation plus its typed interface.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Artifact name (manifest key).
+    pub name: String,
+    /// HLO text file name, relative to the artifacts directory.
+    pub file: String,
+    /// Typed inputs, in call order.
+    pub inputs: Vec<IoSpec>,
+    /// Typed outputs, in tuple order.
+    pub outputs: Vec<IoSpec>,
+    /// Free-form metadata (config dims, n:m:g parameters, param names).
+    pub meta: Json,
+}
+
+impl ArtifactSpec {
+    /// Index of the named input.
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|i| i.name == name)
+            .ok_or_else(|| anyhow!("artifact {} has no input {name:?}", self.name))
+    }
+}
+
+/// The parsed manifest: every artifact the AOT step produced.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    artifacts: HashMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `manifest.json` from the artifacts directory.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?}; run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    /// Parse manifest JSON text.
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text)?;
+        let mut artifacts = HashMap::new();
+        for a in root.get("artifacts").ok_or_else(|| anyhow!("missing artifacts"))?.arr()? {
+            let spec = ArtifactSpec {
+                name: a.get("name").ok_or_else(|| anyhow!("missing name"))?.str()?.to_string(),
+                file: a.get("file").ok_or_else(|| anyhow!("missing file"))?.str()?.to_string(),
+                inputs: parse_ios(a.get("inputs"))?,
+                outputs: parse_ios(a.get("outputs"))?,
+                meta: a.get("meta").cloned().unwrap_or(Json::Null),
+            };
+            artifacts.insert(spec.name.clone(), spec);
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    /// Look up an artifact by name.
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow!(
+                "artifact {name:?} not in manifest (have: {:?})",
+                self.names()
+            )
+        })
+    }
+
+    /// All artifact names, sorted.
+    pub fn names(&self) -> Vec<&str> {
+        let mut names: Vec<&str> = self.artifacts.keys().map(|s| s.as_str()).collect();
+        names.sort_unstable();
+        names
+    }
+
+    /// Number of artifacts.
+    pub fn len(&self) -> usize {
+        self.artifacts.len()
+    }
+
+    /// True when no artifacts are present.
+    pub fn is_empty(&self) -> bool {
+        self.artifacts.is_empty()
+    }
+}
+
+fn parse_ios(v: Option<&Json>) -> Result<Vec<IoSpec>> {
+    let mut out = Vec::new();
+    for io in v.ok_or_else(|| anyhow!("missing io list"))?.arr()? {
+        let shape = io
+            .get("shape")
+            .ok_or_else(|| anyhow!("missing shape"))?
+            .arr()?
+            .iter()
+            .map(|d| d.usize())
+            .collect::<Result<Vec<_>>>()?;
+        out.push(IoSpec {
+            name: io.get("name").map(|n| n.str().unwrap_or("").to_string()).unwrap_or_default(),
+            dtype: DType::parse(io.get("dtype").ok_or_else(|| anyhow!("missing dtype"))?.str()?)?,
+            shape,
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": [
+        {"name": "toy", "file": "toy.hlo.txt",
+         "inputs": [{"name": "a", "dtype": "float32", "shape": [2, 3]},
+                    {"name": "tok", "dtype": "int32", "shape": [4]}],
+         "outputs": [{"dtype": "float32", "shape": []}],
+         "meta": {"m": 4, "tag": "x", "names": ["a", "b"]}}
+      ]
+    }"#;
+
+    #[test]
+    fn parses_sample_manifest() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.len(), 1);
+        let a = m.get("toy").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].shape, vec![2, 3]);
+        assert_eq!(a.inputs[1].dtype, DType::I32);
+        assert_eq!(a.outputs[0].shape, Vec::<usize>::new());
+        assert_eq!(a.meta.get("m").unwrap().usize().unwrap(), 4);
+        assert_eq!(a.input_index("tok").unwrap(), 1);
+        assert!(a.input_index("zzz").is_err());
+    }
+
+    #[test]
+    fn json_parses_nested_values() {
+        let v = Json::parse(r#"{"a": [1, 2.5, "s", true, null, {"b": -3e2}]}"#).unwrap();
+        let arr = v.get("a").unwrap().arr().unwrap();
+        assert_eq!(arr[0], Json::Num(1.0));
+        assert_eq!(arr[1], Json::Num(2.5));
+        assert_eq!(arr[2], Json::Str("s".into()));
+        assert_eq!(arr[3], Json::Bool(true));
+        assert_eq!(arr[4], Json::Null);
+        assert_eq!(arr[5].get("b"), Some(&Json::Num(-300.0)));
+    }
+
+    #[test]
+    fn json_string_escapes() {
+        let v = Json::parse(r#""a\n\t\"\\ A""#).unwrap();
+        assert_eq!(v, Json::Str("a\n\t\"\\ A".into()));
+    }
+
+    #[test]
+    fn json_rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("1 2").is_err());
+        assert!(Json::parse("{\"a\" 1}").is_err());
+    }
+
+    #[test]
+    fn missing_artifact_error_lists_names() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let err = m.get("nope").unwrap_err().to_string();
+        assert!(err.contains("toy"), "{err}");
+    }
+}

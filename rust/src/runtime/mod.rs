@@ -1,0 +1,23 @@
+//! PJRT runtime: load and execute AOT-lowered JAX/Pallas artifacts.
+//!
+//! The Python side (`python/compile/aot.py`) lowers each computation to HLO
+//! **text** and records its interface in `artifacts/manifest.json`. This
+//! module is manifest-driven: it never hard-codes shapes, it validates every
+//! call against the manifest, and it caches compiled executables so each
+//! artifact is compiled exactly once per process.
+//!
+//! Python never runs on this path — the Rust binary is self-contained once
+//! `make artifacts` has produced the HLO files.
+
+mod manifest;
+mod executor;
+
+pub use executor::{ArtifactRuntime, Value};
+pub use manifest::{ArtifactSpec, DType, IoSpec, Manifest};
+
+/// Default artifacts directory, overridable via `STEN_ARTIFACTS`.
+pub fn default_artifacts_dir() -> std::path::PathBuf {
+    std::env::var_os("STEN_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| std::path::PathBuf::from("artifacts"))
+}

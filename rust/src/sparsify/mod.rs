@@ -1,0 +1,584 @@
+//! Sparsifiers (§3.3, Table 1): decide which output values to keep.
+//!
+//! Each sparsifier is classified by how much data it needs before it can
+//! produce output:
+//!
+//! | Sparsifier          | Example           | Passes | Memory  | Kind          |
+//! |---------------------|-------------------|--------|---------|---------------|
+//! | [`KeepAll`]         | sparse add        | 1      | O(1)    | Streaming     |
+//! | [`RandomFraction`]  | dropout           | 1      | O(1)    | Streaming     |
+//! | [`ScalarThreshold`] | ReLU              | 1      | O(1)    | Streaming     |
+//! | [`PerBlockNm`]      | n:m               | 2      | O(b)    | Blocking      |
+//! | [`GroupedNm`]       | n:m:g (§5)        | 2      | O(b)    | Blocking      |
+//! | [`ScalarFraction`]  | magnitude pruning | 2      | O(nnz)  | Materializing |
+//! | [`BlockFraction`]   | block magnitude   | 2      | O(nnz)  | Materializing |
+//! | [`SameFormat`]      | in-place updates  | 1      | O(nnz)  | Materializing |
+
+mod registry;
+pub mod movement;
+pub use movement::MovementPruning;
+pub use registry::{register_sparsifier_impl, sparsifier_registry, SparsifierImplFn};
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Result};
+
+use crate::formats::{
+    AnyTensor, CooTensor, CscTensor, CsrTensor, EllTensor, Layout, MaskedTensor, NmTensor,
+    NmgTensor,
+};
+use crate::tensor::DenseTensor;
+use crate::util::rng::Pcg64;
+
+/// Classification by data requirements (Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SparsifierKind {
+    /// One value at a time; can be fused (inlined) into the producing operator.
+    Streaming,
+    /// Needs a small block of values.
+    Blocking,
+    /// Needs the fully materialized tensor.
+    Materializing,
+}
+
+/// Memory requirement class (Table 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemoryClass {
+    /// O(1).
+    Constant,
+    /// O(block size).
+    Block,
+    /// O(nnz).
+    Nnz,
+}
+
+/// A sparsifier: prunes a dense tensor (sets dropped values to zero) and
+/// reports its Table-1 characteristics. Conversion of the pruned result into
+/// a target layout happens in [`Sparsifier::apply`].
+pub trait Sparsifier: std::fmt::Debug + Send + Sync {
+    /// Stable name used as the dispatch-registry key.
+    fn name(&self) -> &'static str;
+    /// Streaming / blocking / materializing.
+    fn kind(&self) -> SparsifierKind;
+    /// Number of passes over the tensor (Table 1).
+    fn passes(&self) -> usize;
+    /// Memory requirement class (Table 1).
+    fn memory(&self) -> MemoryClass;
+    /// Prune: return a same-shape dense tensor with dropped values zeroed.
+    fn prune(&self, t: &DenseTensor) -> DenseTensor;
+
+    /// Sparsify `t` into `out` layout: prune, then compress.
+    ///
+    /// Structured output layouts (n:m, n:m:g) are only valid for sparsifiers
+    /// that produce conforming structure; other combinations error, exactly
+    /// like a missing registered implementation in STen (the caller may then
+    /// fall back through the dispatcher).
+    fn apply(&self, t: &AnyTensor, out: Layout) -> Result<AnyTensor> {
+        let pruned = self.prune(&t.to_dense());
+        dense_to_layout(&pruned, out, self.structure_params())
+    }
+
+    /// Structure parameters `(n, m, g)` if this sparsifier produces n:m(-like)
+    /// structure; used to build structured output layouts.
+    fn structure_params(&self) -> Option<(usize, usize, usize)> {
+        None
+    }
+}
+
+/// Compress an (already pruned) dense tensor into a layout.
+pub fn dense_to_layout(
+    pruned: &DenseTensor,
+    out: Layout,
+    structure: Option<(usize, usize, usize)>,
+) -> Result<AnyTensor> {
+    Ok(match out {
+        Layout::Dense => AnyTensor::Dense(pruned.clone()),
+        Layout::Csr => AnyTensor::Csr(CsrTensor::from_dense(pruned)),
+        Layout::Csc => AnyTensor::Csc(CscTensor::from_dense(pruned)),
+        Layout::Coo => AnyTensor::Coo(CooTensor::from_dense(pruned)),
+        Layout::Ell => AnyTensor::Ell(EllTensor::from_dense(pruned)),
+        Layout::Masked => AnyTensor::Masked(MaskedTensor::from_dense(pruned)),
+        Layout::Nm => {
+            let Some((n, m, _)) = structure else {
+                bail!("output layout Nm requires an n:m-structured sparsifier");
+            };
+            AnyTensor::Nm(NmTensor::from_dense(pruned, n, m))
+        }
+        Layout::Nmg => {
+            let Some((n, m, g)) = structure else {
+                bail!("output layout Nmg requires an n:m:g-structured sparsifier");
+            };
+            AnyTensor::Nmg(NmgTensor::from_dense(pruned, n, m, g))
+        }
+        Layout::Bcsr | Layout::Custom => {
+            bail!("no registered sparsifier implementation for output layout {out}")
+        }
+    })
+}
+
+/// Keep-all: the trivial sparsifier; default for dense outputs.
+#[derive(Debug, Clone, Default)]
+pub struct KeepAll;
+
+impl Sparsifier for KeepAll {
+    fn name(&self) -> &'static str {
+        "keep_all"
+    }
+    fn kind(&self) -> SparsifierKind {
+        SparsifierKind::Streaming
+    }
+    fn passes(&self) -> usize {
+        1
+    }
+    fn memory(&self) -> MemoryClass {
+        MemoryClass::Constant
+    }
+    fn prune(&self, t: &DenseTensor) -> DenseTensor {
+        t.clone()
+    }
+}
+
+/// Random-fraction sparsifier (dropout-style): drop each value with
+/// probability `fraction`. Deterministic per instance via an internal
+/// call counter.
+#[derive(Debug)]
+pub struct RandomFraction {
+    /// Drop probability in [0, 1].
+    pub fraction: f32,
+    seed: u64,
+    calls: AtomicU64,
+}
+
+impl RandomFraction {
+    /// New with an explicit RNG seed.
+    pub fn new(fraction: f32, seed: u64) -> Self {
+        assert!((0.0..=1.0).contains(&fraction), "fraction must be in [0,1]");
+        RandomFraction { fraction, seed, calls: AtomicU64::new(0) }
+    }
+}
+
+impl Sparsifier for RandomFraction {
+    fn name(&self) -> &'static str {
+        "random_fraction"
+    }
+    fn kind(&self) -> SparsifierKind {
+        SparsifierKind::Streaming
+    }
+    fn passes(&self) -> usize {
+        1
+    }
+    fn memory(&self) -> MemoryClass {
+        MemoryClass::Constant
+    }
+    fn prune(&self, t: &DenseTensor) -> DenseTensor {
+        let call = self.calls.fetch_add(1, Ordering::Relaxed);
+        let mut rng = Pcg64::new(self.seed, call.wrapping_add(1));
+        let data = t
+            .data()
+            .iter()
+            .map(|&v| if rng.next_f32() < self.fraction { 0.0 } else { v })
+            .collect();
+        DenseTensor::from_vec(t.shape(), data)
+    }
+}
+
+/// Scalar-threshold sparsifier (ReLU-style): drop |v| < threshold.
+#[derive(Debug, Clone)]
+pub struct ScalarThreshold {
+    /// Magnitude threshold.
+    pub threshold: f32,
+}
+
+impl Sparsifier for ScalarThreshold {
+    fn name(&self) -> &'static str {
+        "scalar_threshold"
+    }
+    fn kind(&self) -> SparsifierKind {
+        SparsifierKind::Streaming
+    }
+    fn passes(&self) -> usize {
+        1
+    }
+    fn memory(&self) -> MemoryClass {
+        MemoryClass::Constant
+    }
+    fn prune(&self, t: &DenseTensor) -> DenseTensor {
+        let tau = self.threshold;
+        t.map(|v| if v.abs() < tau { 0.0 } else { v })
+    }
+}
+
+/// Per-block n:m sparsifier (blocking): keep the `n` largest magnitudes in
+/// each block of `m` consecutive values along the row dimension.
+#[derive(Debug, Clone)]
+pub struct PerBlockNm {
+    /// Kept values per block.
+    pub n: usize,
+    /// Block size.
+    pub m: usize,
+}
+
+impl Sparsifier for PerBlockNm {
+    fn name(&self) -> &'static str {
+        "per_block_nm"
+    }
+    fn kind(&self) -> SparsifierKind {
+        SparsifierKind::Blocking
+    }
+    fn passes(&self) -> usize {
+        2
+    }
+    fn memory(&self) -> MemoryClass {
+        MemoryClass::Block
+    }
+    fn prune(&self, t: &DenseTensor) -> DenseTensor {
+        NmTensor::from_dense(t, self.n, self.m).to_dense()
+    }
+    fn structure_params(&self) -> Option<(usize, usize, usize)> {
+        Some((self.n, self.m, 1))
+    }
+}
+
+/// Grouped n:m sparsifier (§5): prune into n:m:g structure.
+#[derive(Debug, Clone)]
+pub struct GroupedNm {
+    /// Kept values per block.
+    pub n: usize,
+    /// Block size.
+    pub m: usize,
+    /// Group size.
+    pub g: usize,
+}
+
+impl Sparsifier for GroupedNm {
+    fn name(&self) -> &'static str {
+        "grouped_nm"
+    }
+    fn kind(&self) -> SparsifierKind {
+        SparsifierKind::Blocking
+    }
+    fn passes(&self) -> usize {
+        2
+    }
+    fn memory(&self) -> MemoryClass {
+        MemoryClass::Block
+    }
+    fn prune(&self, t: &DenseTensor) -> DenseTensor {
+        NmgTensor::from_dense(t, self.n, self.m, self.g).to_dense()
+    }
+    fn structure_params(&self) -> Option<(usize, usize, usize)> {
+        Some((self.n, self.m, self.g))
+    }
+}
+
+/// Scalar-fraction (magnitude) sparsifier: drop the smallest `fraction` of
+/// values by magnitude, tensor-wide. The workhorse of §6.2.
+#[derive(Debug, Clone)]
+pub struct ScalarFraction {
+    /// Fraction to drop in [0, 1].
+    pub fraction: f32,
+}
+
+impl Sparsifier for ScalarFraction {
+    fn name(&self) -> &'static str {
+        "scalar_fraction"
+    }
+    fn kind(&self) -> SparsifierKind {
+        SparsifierKind::Materializing
+    }
+    fn passes(&self) -> usize {
+        2
+    }
+    fn memory(&self) -> MemoryClass {
+        MemoryClass::Nnz
+    }
+    fn prune(&self, t: &DenseTensor) -> DenseTensor {
+        let drop = ((t.numel() as f64) * self.fraction as f64).round() as usize;
+        if drop == 0 {
+            return t.clone();
+        }
+        if drop >= t.numel() {
+            return DenseTensor::zeros(t.shape());
+        }
+        let mut mags: Vec<f32> = t.data().iter().map(|v| v.abs()).collect();
+        mags.sort_by(f32::total_cmp);
+        let tau = mags[drop - 1];
+        // Drop everything strictly below tau, then drop values == tau until
+        // the budget is exact (deterministic: first occurrences dropped).
+        let mut below = t.data().iter().filter(|v| v.abs() < tau).count();
+        let mut out = t.clone();
+        for v in out.data_mut().iter_mut() {
+            if v.abs() < tau {
+                *v = 0.0;
+            } else if v.abs() == tau && below < drop {
+                *v = 0.0;
+                below += 1;
+            }
+        }
+        out
+    }
+}
+
+/// Block-wise fraction sparsifier: drop the `fraction` of `bh x bw` blocks
+/// with the smallest combined absolute magnitude.
+#[derive(Debug, Clone)]
+pub struct BlockFraction {
+    /// Fraction of blocks to drop.
+    pub fraction: f32,
+    /// Block height.
+    pub bh: usize,
+    /// Block width.
+    pub bw: usize,
+}
+
+impl Sparsifier for BlockFraction {
+    fn name(&self) -> &'static str {
+        "block_fraction"
+    }
+    fn kind(&self) -> SparsifierKind {
+        SparsifierKind::Materializing
+    }
+    fn passes(&self) -> usize {
+        2
+    }
+    fn memory(&self) -> MemoryClass {
+        MemoryClass::Nnz
+    }
+    fn prune(&self, t: &DenseTensor) -> DenseTensor {
+        assert_eq!(t.rank(), 2, "block pruning requires 2-D");
+        let (rows, cols) = (t.rows(), t.cols());
+        assert!(
+            rows % self.bh == 0 && cols % self.bw == 0,
+            "shape {rows}x{cols} not divisible by block {}x{}",
+            self.bh,
+            self.bw
+        );
+        let (br, bc) = (rows / self.bh, cols / self.bw);
+        let mut mass: Vec<(f32, usize)> = (0..br * bc)
+            .map(|b| {
+                let (i0, j0) = ((b / bc) * self.bh, (b % bc) * self.bw);
+                let mut acc = 0f32;
+                for i in 0..self.bh {
+                    for j in 0..self.bw {
+                        acc += t.get2(i0 + i, j0 + j).abs();
+                    }
+                }
+                (acc, b)
+            })
+            .collect();
+        mass.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        let drop = ((mass.len() as f64) * self.fraction as f64).round() as usize;
+        let mut out = t.clone();
+        for &(_, b) in mass.iter().take(drop) {
+            let (i0, j0) = ((b / bc) * self.bh, (b % bc) * self.bw);
+            for i in 0..self.bh {
+                for j in 0..self.bw {
+                    out.set2(i0 + i, j0 + j, 0.0);
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Same-format sparsifier (§4): re-sparsify fresh dense values so they match
+/// the structure of an existing tensor — used after weight updates so the
+/// updated weight keeps its layout (Fig. 2, right).
+#[derive(Debug, Clone)]
+pub struct SameFormat;
+
+impl SameFormat {
+    /// Re-sparsify `fresh` to match the structure of `like`.
+    ///
+    /// For mask-style formats (Masked) the nonzero *pattern* is reused (the
+    /// optimized fixed-pattern path of §4.6); structured formats re-run their
+    /// structure-preserving conversion; exact formats recompress.
+    pub fn resparsify(&self, like: &AnyTensor, fresh: &DenseTensor) -> Result<AnyTensor> {
+        Ok(match like {
+            AnyTensor::Masked(mt) => AnyTensor::Masked(mt.with_values(fresh)),
+            AnyTensor::Nm(t) => AnyTensor::Nm(NmTensor::from_dense(fresh, t.n, t.m)),
+            AnyTensor::Nmg(t) => AnyTensor::Nmg(NmgTensor::from_dense(fresh, t.n, t.m, t.g)),
+            AnyTensor::Dense(_) => AnyTensor::Dense(fresh.clone()),
+            AnyTensor::Csr(_) => AnyTensor::Csr(CsrTensor::from_dense(fresh)),
+            AnyTensor::Csc(_) => AnyTensor::Csc(CscTensor::from_dense(fresh)),
+            AnyTensor::Coo(_) => AnyTensor::Coo(CooTensor::from_dense(fresh)),
+            AnyTensor::Ell(_) => AnyTensor::Ell(EllTensor::from_dense(fresh)),
+            AnyTensor::Bcsr(t) => {
+                AnyTensor::Bcsr(crate::formats::BcsrTensor::from_dense(fresh, t.bh, t.bw))
+            }
+            AnyTensor::Custom(t) => AnyTensor::Custom(t.same_format_from_dense(fresh)),
+        })
+    }
+}
+
+impl Sparsifier for SameFormat {
+    fn name(&self) -> &'static str {
+        "same_format"
+    }
+    fn kind(&self) -> SparsifierKind {
+        SparsifierKind::Materializing
+    }
+    fn passes(&self) -> usize {
+        1
+    }
+    fn memory(&self) -> MemoryClass {
+        MemoryClass::Nnz
+    }
+    fn prune(&self, t: &DenseTensor) -> DenseTensor {
+        t.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> DenseTensor {
+        DenseTensor::from_vec(&[4, 4], (1..=16).map(|i| i as f32 * if i % 2 == 0 { -1.0 } else { 1.0 }).collect())
+    }
+
+    #[test]
+    fn table1_classification() {
+        assert_eq!(KeepAll.kind(), SparsifierKind::Streaming);
+        assert_eq!(KeepAll.passes(), 1);
+        assert_eq!(RandomFraction::new(0.5, 1).kind(), SparsifierKind::Streaming);
+        assert_eq!(ScalarThreshold { threshold: 0.1 }.kind(), SparsifierKind::Streaming);
+        assert_eq!(PerBlockNm { n: 2, m: 4 }.kind(), SparsifierKind::Blocking);
+        assert_eq!(PerBlockNm { n: 2, m: 4 }.passes(), 2);
+        assert_eq!(PerBlockNm { n: 2, m: 4 }.memory(), MemoryClass::Block);
+        assert_eq!(ScalarFraction { fraction: 0.5 }.kind(), SparsifierKind::Materializing);
+        assert_eq!(ScalarFraction { fraction: 0.5 }.memory(), MemoryClass::Nnz);
+        assert_eq!(BlockFraction { fraction: 0.5, bh: 2, bw: 2 }.kind(), SparsifierKind::Materializing);
+        assert_eq!(GroupedNm { n: 2, m: 4, g: 4 }.kind(), SparsifierKind::Blocking);
+    }
+
+    #[test]
+    fn keep_all_is_identity() {
+        let t = sample();
+        assert_eq!(KeepAll.prune(&t), t);
+    }
+
+    #[test]
+    fn random_fraction_statistics() {
+        let t = DenseTensor::ones(&[100, 100]);
+        let s = RandomFraction::new(0.3, 7);
+        let pruned = s.prune(&t);
+        let frac = pruned.sparsity();
+        assert!((frac - 0.3).abs() < 0.02, "observed drop fraction {frac}");
+        // Different calls use different randomness.
+        let pruned2 = s.prune(&t);
+        assert_ne!(pruned.data(), pruned2.data());
+    }
+
+    #[test]
+    fn threshold_drops_small_values() {
+        let t = DenseTensor::from_vec(&[4], vec![0.05, -0.2, 0.0, 1.0]);
+        let s = ScalarThreshold { threshold: 0.1 };
+        assert_eq!(s.prune(&t).data(), &[0.0, -0.2, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn scalar_fraction_exact_budget() {
+        let t = sample();
+        for frac in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let pruned = ScalarFraction { fraction: frac }.prune(&t);
+            let dropped = pruned.count_zeros();
+            assert_eq!(dropped, (16.0 * frac) as usize, "frac {frac}");
+        }
+    }
+
+    #[test]
+    fn scalar_fraction_handles_ties() {
+        let t = DenseTensor::from_vec(&[4], vec![1.0, 1.0, 1.0, 1.0]);
+        let pruned = ScalarFraction { fraction: 0.5 }.prune(&t);
+        assert_eq!(pruned.count_zeros(), 2);
+    }
+
+    #[test]
+    fn scalar_fraction_drops_smallest() {
+        let t = sample();
+        let pruned = ScalarFraction { fraction: 0.5 }.prune(&t);
+        // Values 1..=8 dropped, 9..=16 kept (by magnitude).
+        for (i, v) in pruned.data().iter().enumerate() {
+            if i < 8 {
+                assert_eq!(*v, 0.0);
+            } else {
+                assert_ne!(*v, 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn block_fraction_drops_whole_blocks() {
+        let t = sample();
+        let pruned = BlockFraction { fraction: 0.5, bh: 2, bw: 2 }.prune(&t);
+        // Exactly 2 of the 4 2x2 blocks are zero.
+        let mut zero_blocks = 0;
+        for bi in 0..2 {
+            for bj in 0..2 {
+                let all_zero = (0..2).all(|i| (0..2).all(|j| pruned.get2(bi * 2 + i, bj * 2 + j) == 0.0));
+                if all_zero {
+                    zero_blocks += 1;
+                }
+            }
+        }
+        assert_eq!(zero_blocks, 2);
+    }
+
+    #[test]
+    fn per_block_nm_structure() {
+        let t = sample();
+        let pruned = PerBlockNm { n: 1, m: 4 }.prune(&t);
+        for c in 0..4 {
+            let nnz = (0..4).filter(|&r| pruned.get2(r, c) != 0.0).count();
+            assert_eq!(nnz, 1);
+        }
+    }
+
+    #[test]
+    fn apply_structured_layouts() {
+        let t = AnyTensor::Dense(sample());
+        let s = GroupedNm { n: 2, m: 4, g: 1 };
+        let out = s.apply(&t, Layout::Nmg).unwrap();
+        assert_eq!(out.layout(), Layout::Nmg);
+        // Mismatched sparsifier/layout combination errors (like STen's
+        // missing-implementation dispatch error).
+        let err = KeepAll.apply(&t, Layout::Nmg).unwrap_err().to_string();
+        assert!(err.contains("Nmg"), "{err}");
+    }
+
+    #[test]
+    fn apply_exact_layouts_preserve_pruned_values() {
+        let t = AnyTensor::Dense(sample());
+        let s = ScalarFraction { fraction: 0.5 };
+        let want = s.prune(&sample());
+        for layout in [Layout::Csr, Layout::Csc, Layout::Coo, Layout::Ell, Layout::Masked] {
+            let out = s.apply(&t, layout).unwrap();
+            assert!(out.to_dense().allclose(&want, 0.0, 0.0), "{layout}");
+        }
+    }
+
+    #[test]
+    fn same_format_keeps_mask_pattern() {
+        let d = DenseTensor::from_vec(&[4], vec![1.0, 0.0, 2.0, 0.0]);
+        let like = AnyTensor::Masked(MaskedTensor::from_dense(&d));
+        let fresh = DenseTensor::from_vec(&[4], vec![9.0, 9.0, 9.0, 9.0]);
+        let out = SameFormat.resparsify(&like, &fresh).unwrap();
+        assert_eq!(out.to_dense().data(), &[9.0, 0.0, 9.0, 0.0]);
+    }
+
+    #[test]
+    fn same_format_restructures_nmg() {
+        let mut rng = crate::util::rng::Pcg64::seeded(80);
+        let d = DenseTensor::randn(&[4, 24], &mut rng);
+        let like = AnyTensor::Nmg(NmgTensor::from_dense(&d, 2, 4, 2));
+        let fresh = DenseTensor::randn(&[4, 24], &mut rng);
+        let out = SameFormat.resparsify(&like, &fresh).unwrap();
+        match out {
+            AnyTensor::Nmg(t) => {
+                assert_eq!((t.n, t.m, t.g), (2, 4, 2));
+            }
+            _ => panic!("expected Nmg"),
+        }
+    }
+}

@@ -1,0 +1,152 @@
+//! Complex weight sparsifier (Table 1, last row): movement pruning.
+//!
+//! Movement pruning (Sanh et al., 2020) scores each weight by `-w * grad`
+//! (how much training is "moving" it toward zero) and drops the weights
+//! moving fastest toward zero. Unlike magnitude pruning it needs an
+//! *additional input* (the gradient), which STen models as a sparsifier
+//! whose application is delayed until its extra inputs are ready (§3.3).
+
+use anyhow::{anyhow, Result};
+
+use crate::formats::{AnyTensor, Layout};
+use crate::tensor::DenseTensor;
+
+use super::{dense_to_layout, MemoryClass, Sparsifier, SparsifierKind};
+
+/// Movement-pruning sparsifier: requires the gradient as a side input
+/// (provided via [`MovementPruning::with_grad`] before `prune` runs).
+#[derive(Debug)]
+pub struct MovementPruning {
+    /// Fraction of weights to drop.
+    pub fraction: f32,
+    grad: std::sync::Mutex<Option<DenseTensor>>,
+}
+
+impl MovementPruning {
+    /// New sparsifier; the gradient must be supplied before pruning.
+    pub fn new(fraction: f32) -> Self {
+        assert!((0.0..=1.0).contains(&fraction));
+        MovementPruning { fraction, grad: std::sync::Mutex::new(None) }
+    }
+
+    /// Provide the delayed input (the gradient of the loss w.r.t. the
+    /// tensor being sparsified).
+    pub fn with_grad(self, grad: DenseTensor) -> Self {
+        *self.grad.lock().unwrap() = Some(grad);
+        self
+    }
+
+    /// Set the delayed gradient input in place.
+    pub fn set_grad(&self, grad: DenseTensor) {
+        *self.grad.lock().unwrap() = Some(grad);
+    }
+
+    /// Movement score: `-w * g`. Most-negative movement (weight being pushed
+    /// toward zero) prunes first, so we *keep* the highest scores.
+    pub fn scores(&self, w: &DenseTensor) -> Result<DenseTensor> {
+        let guard = self.grad.lock().unwrap();
+        let g = guard
+            .as_ref()
+            .ok_or_else(|| anyhow!("movement pruning requires a gradient (set_grad)"))?;
+        if g.shape() != w.shape() {
+            return Err(anyhow!("gradient shape mismatch"));
+        }
+        Ok(w.zip(g, |wi, gi| -wi * gi))
+    }
+
+    /// Apply with explicit output layout (errors if the gradient is missing).
+    pub fn apply_checked(&self, t: &AnyTensor, out: Layout) -> Result<AnyTensor> {
+        let dense = t.to_dense();
+        let scores = self.scores(&dense)?;
+        let drop = ((dense.numel() as f64) * self.fraction as f64).round() as usize;
+        // Keep the `numel - drop` highest scores.
+        let mut order: Vec<usize> = (0..dense.numel()).collect();
+        order.sort_by(|&a, &b| scores.data()[a].total_cmp(&scores.data()[b]).then(a.cmp(&b)));
+        let mut pruned = dense.clone();
+        for &i in order.iter().take(drop) {
+            pruned.data_mut()[i] = 0.0;
+        }
+        dense_to_layout(&pruned, out, None)
+    }
+}
+
+impl Sparsifier for MovementPruning {
+    fn name(&self) -> &'static str {
+        "movement_pruning"
+    }
+    fn kind(&self) -> SparsifierKind {
+        SparsifierKind::Materializing
+    }
+    fn passes(&self) -> usize {
+        2
+    }
+    fn memory(&self) -> MemoryClass {
+        MemoryClass::Nnz
+    }
+    fn prune(&self, t: &DenseTensor) -> DenseTensor {
+        // The trait path panics without the gradient; prefer apply_checked.
+        let out = self
+            .apply_checked(&AnyTensor::Dense(t.clone()), Layout::Dense)
+            .expect("movement pruning: gradient not set (use set_grad / apply_checked)");
+        out.to_dense()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::autograd::Tape;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn drops_weights_moving_toward_zero() {
+        // w > 0 with g > 0 means the update w - lr*g shrinks w: movement
+        // score -w*g < 0, so those weights prune first.
+        let w = DenseTensor::from_vec(&[4], vec![1.0, 1.0, -1.0, -1.0]);
+        let g = DenseTensor::from_vec(&[4], vec![2.0, -2.0, 2.0, -2.0]);
+        let s = MovementPruning::new(0.5).with_grad(g);
+        let pruned = s.prune(&w);
+        // scores: [-2, 2, 2, -2] -> drop indices 0 and 3.
+        assert_eq!(pruned.data(), &[0.0, 1.0, -1.0, 0.0]);
+    }
+
+    #[test]
+    fn requires_gradient() {
+        let s = MovementPruning::new(0.5);
+        let t = AnyTensor::Dense(DenseTensor::ones(&[2, 2]));
+        assert!(s.apply_checked(&t, Layout::Csr).is_err());
+    }
+
+    #[test]
+    fn classification_is_materializing() {
+        let s = MovementPruning::new(0.5);
+        assert_eq!(s.kind(), SparsifierKind::Materializing);
+        assert_eq!(s.memory(), MemoryClass::Nnz);
+        assert_eq!(s.passes(), 2);
+    }
+
+    #[test]
+    fn integrates_with_autograd_gradients() {
+        // End-to-end: gradient from the tape feeds the sparsifier.
+        let mut rng = Pcg64::seeded(900);
+        let x0 = DenseTensor::randn(&[8, 6], &mut rng);
+        let w0 = DenseTensor::randn(&[6, 4], &mut rng);
+        let tape = Tape::new();
+        let x = tape.input(x0);
+        let w = tape.param(w0.clone());
+        let y = tape.matmul(x, w);
+        let l = tape.mse(y, &DenseTensor::zeros(&[8, 4]));
+        tape.backward(l).unwrap();
+        let grad = tape.grad(w).unwrap();
+
+        let s = MovementPruning::new(0.5).with_grad(grad);
+        let out = s.apply_checked(&AnyTensor::Dense(w0.clone()), Layout::Csr).unwrap();
+        assert_eq!(out.layout(), Layout::Csr);
+        assert_eq!(out.nnz(), w0.numel() / 2);
+        // Kept values match the original weight.
+        let d = out.to_dense();
+        for (a, b) in d.data().iter().zip(w0.data()) {
+            assert!(*a == 0.0 || a == b);
+        }
+    }
+}

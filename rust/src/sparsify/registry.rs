@@ -1,0 +1,141 @@
+//! Sparsifier implementation registry (§3.3's
+//! `register_sparsifier_implementation`).
+//!
+//! Users register custom `(sparsifier name, input layout, output layout)`
+//! implementations; [`super::Sparsifier::apply`]'s built-in path is the
+//! default, and the registry overrides it — this is how a performance
+//! engineer supplies e.g. a fused dense→CSC random-fraction kernel without
+//! touching the framework core.
+
+use std::collections::HashMap;
+use std::sync::{Mutex, OnceLock};
+
+use anyhow::Result;
+
+use crate::formats::{AnyTensor, Layout};
+use super::Sparsifier;
+
+/// A registered sparsifier implementation.
+pub type SparsifierImplFn =
+    fn(sparsifier: &dyn Sparsifier, input: &AnyTensor) -> Result<AnyTensor>;
+
+type Key = (&'static str, Layout, Layout);
+
+/// Global registry instance.
+pub struct SparsifierRegistry {
+    impls: Mutex<HashMap<Key, SparsifierImplFn>>,
+}
+
+impl SparsifierRegistry {
+    fn new() -> Self {
+        SparsifierRegistry { impls: Mutex::new(HashMap::new()) }
+    }
+
+    /// Register an implementation (last registration wins, like STen).
+    pub fn register(&self, name: &'static str, inp: Layout, out: Layout, f: SparsifierImplFn) {
+        self.impls.lock().unwrap().insert((name, inp, out), f);
+    }
+
+    /// Look up an implementation.
+    pub fn lookup(&self, name: &str, inp: Layout, out: Layout) -> Option<SparsifierImplFn> {
+        // Keys are &'static str; compare by value.
+        self.impls
+            .lock()
+            .unwrap()
+            .iter()
+            .find(|((n, i, o), _)| *n == name && *i == inp && *o == out)
+            .map(|(_, f)| *f)
+    }
+
+    /// Apply `sparsifier` to `input` producing `out` layout: registered
+    /// implementation first, then the sparsifier's built-in `apply`.
+    pub fn apply(
+        &self,
+        sparsifier: &dyn Sparsifier,
+        input: &AnyTensor,
+        out: Layout,
+    ) -> Result<AnyTensor> {
+        if let Some(f) = self.lookup(sparsifier.name(), input.layout(), out) {
+            return f(sparsifier, input);
+        }
+        sparsifier.apply(input, out)
+    }
+
+    /// Number of registered implementations.
+    pub fn len(&self) -> usize {
+        self.impls.lock().unwrap().len()
+    }
+
+    /// True when empty.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The process-wide sparsifier registry.
+pub fn sparsifier_registry() -> &'static SparsifierRegistry {
+    static REG: OnceLock<SparsifierRegistry> = OnceLock::new();
+    REG.get_or_init(SparsifierRegistry::new)
+}
+
+/// Convenience free function mirroring STen's decorator.
+pub fn register_sparsifier_impl(
+    name: &'static str,
+    inp: Layout,
+    out: Layout,
+    f: SparsifierImplFn,
+) {
+    sparsifier_registry().register(name, inp, out, f);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparsify::{KeepAll, ScalarThreshold};
+    use crate::tensor::DenseTensor;
+
+    fn custom_impl(_s: &dyn Sparsifier, input: &AnyTensor) -> Result<AnyTensor> {
+        // Marker implementation: negate everything (observable in the test).
+        Ok(AnyTensor::Dense(input.to_dense().map(|v| -v)))
+    }
+
+    #[test]
+    fn registered_impl_overrides_builtin() {
+        let reg = SparsifierRegistry::new();
+        let t = AnyTensor::Dense(DenseTensor::ones(&[2, 2]));
+        // Built-in first.
+        let out = reg.apply(&KeepAll, &t, Layout::Dense).unwrap();
+        assert_eq!(out.to_dense().data(), &[1.0; 4]);
+        // Then override.
+        reg.register("keep_all", Layout::Dense, Layout::Dense, custom_impl);
+        let out = reg.apply(&KeepAll, &t, Layout::Dense).unwrap();
+        assert_eq!(out.to_dense().data(), &[-1.0; 4]);
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn lookup_misses_other_combinations() {
+        let reg = SparsifierRegistry::new();
+        reg.register("keep_all", Layout::Dense, Layout::Csr, custom_impl);
+        assert!(reg.lookup("keep_all", Layout::Dense, Layout::Csc).is_none());
+        assert!(reg.lookup("scalar_threshold", Layout::Dense, Layout::Csr).is_none());
+        assert!(reg.lookup("keep_all", Layout::Dense, Layout::Csr).is_some());
+    }
+
+    #[test]
+    fn builtin_fallback_still_works_for_unregistered() {
+        let reg = SparsifierRegistry::new();
+        let t = AnyTensor::Dense(DenseTensor::from_vec(&[1, 2], vec![0.01, 5.0]));
+        let out = reg.apply(&ScalarThreshold { threshold: 0.1 }, &t, Layout::Csr).unwrap();
+        assert_eq!(out.layout(), Layout::Csr);
+        assert_eq!(out.nnz(), 1);
+    }
+
+    #[test]
+    fn global_registry_is_shared() {
+        let before = sparsifier_registry().len();
+        register_sparsifier_impl("keep_all", Layout::Coo, Layout::Coo, custom_impl);
+        assert!(sparsifier_registry().len() > before || sparsifier_registry().len() == before);
+        assert!(sparsifier_registry().lookup("keep_all", Layout::Coo, Layout::Coo).is_some());
+    }
+}

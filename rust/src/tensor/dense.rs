@@ -1,0 +1,321 @@
+//! The dense `f32` tensor.
+
+use super::{numel, strides_for};
+use crate::util::rng::Pcg64;
+
+/// A row-major dense `f32` tensor.
+///
+/// This is deliberately simple: contiguous storage, owned data, no autograd
+/// state (gradients are managed by [`crate::autograd`]). It plays the role of
+/// `torch.Tensor` in the original STen: the layout every sparsity format
+/// converts to and from, and the operand type of the dense fallback path.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DenseTensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl DenseTensor {
+    /// Create from raw data; `data.len()` must equal the product of `shape`.
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Self {
+        assert_eq!(
+            data.len(),
+            numel(shape),
+            "data length {} does not match shape {:?}",
+            data.len(),
+            shape
+        );
+        DenseTensor { shape: shape.to_vec(), data }
+    }
+
+    /// All-zeros tensor.
+    pub fn zeros(shape: &[usize]) -> Self {
+        DenseTensor { shape: shape.to_vec(), data: vec![0.0; numel(shape)] }
+    }
+
+    /// All-ones tensor.
+    pub fn ones(shape: &[usize]) -> Self {
+        Self::full(shape, 1.0)
+    }
+
+    /// Constant-filled tensor.
+    pub fn full(shape: &[usize], v: f32) -> Self {
+        DenseTensor { shape: shape.to_vec(), data: vec![v; numel(shape)] }
+    }
+
+    /// Standard-normal initialized tensor (deterministic via `rng`).
+    pub fn randn(shape: &[usize], rng: &mut Pcg64) -> Self {
+        let data = (0..numel(shape)).map(|_| rng.normal()).collect();
+        DenseTensor { shape: shape.to_vec(), data }
+    }
+
+    /// Uniform `[lo, hi)` initialized tensor.
+    pub fn rand_uniform(shape: &[usize], lo: f32, hi: f32, rng: &mut Pcg64) -> Self {
+        let data = (0..numel(shape)).map(|_| rng.uniform(lo, hi)).collect();
+        DenseTensor { shape: shape.to_vec(), data }
+    }
+
+    /// Kaiming-style init for a `[fan_in, fan_out]` weight.
+    pub fn kaiming(shape: &[usize], rng: &mut Pcg64) -> Self {
+        let fan_in = shape.first().copied().unwrap_or(1).max(1);
+        let std = (2.0 / fan_in as f32).sqrt();
+        let data = (0..numel(shape)).map(|_| rng.normal() * std).collect();
+        DenseTensor { shape: shape.to_vec(), data }
+    }
+
+    /// Tensor shape.
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    /// Number of elements.
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Rank (number of dimensions).
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Raw data slice.
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Raw mutable data slice.
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Consume into the raw data vector.
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// Rows of a 2-D tensor.
+    pub fn rows(&self) -> usize {
+        assert_eq!(self.rank(), 2, "rows() requires a 2-D tensor, got {:?}", self.shape);
+        self.shape[0]
+    }
+
+    /// Columns of a 2-D tensor.
+    pub fn cols(&self) -> usize {
+        assert_eq!(self.rank(), 2, "cols() requires a 2-D tensor, got {:?}", self.shape);
+        self.shape[1]
+    }
+
+    /// Element access by multi-index.
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        self.data[self.offset(idx)]
+    }
+
+    /// Mutable element access by multi-index.
+    pub fn at_mut(&mut self, idx: &[usize]) -> &mut f32 {
+        let off = self.offset(idx);
+        &mut self.data[off]
+    }
+
+    /// 2-D element access.
+    #[inline]
+    pub fn get2(&self, r: usize, c: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[r * self.shape[1] + c]
+    }
+
+    /// 2-D element assignment.
+    #[inline]
+    pub fn set2(&mut self, r: usize, c: usize, v: f32) {
+        debug_assert_eq!(self.rank(), 2);
+        let cols = self.shape[1];
+        self.data[r * cols + c] = v;
+    }
+
+    fn offset(&self, idx: &[usize]) -> usize {
+        assert_eq!(idx.len(), self.rank(), "index rank mismatch");
+        let strides = strides_for(&self.shape);
+        idx.iter().zip(&strides).zip(&self.shape).fold(0, |acc, ((&i, &s), &d)| {
+            assert!(i < d, "index {i} out of bounds for dim of size {d}");
+            acc + i * s
+        })
+    }
+
+    /// Reshape (same number of elements).
+    pub fn reshape(&self, shape: &[usize]) -> DenseTensor {
+        assert_eq!(numel(shape), self.numel(), "reshape {:?} -> {:?}", self.shape, shape);
+        DenseTensor { shape: shape.to_vec(), data: self.data.clone() }
+    }
+
+    /// 2-D transpose.
+    pub fn transpose2(&self) -> DenseTensor {
+        assert_eq!(self.rank(), 2);
+        let (r, c) = (self.shape[0], self.shape[1]);
+        let mut out = vec![0.0; r * c];
+        for i in 0..r {
+            for j in 0..c {
+                out[j * r + i] = self.data[i * c + j];
+            }
+        }
+        DenseTensor { shape: vec![c, r], data: out }
+    }
+
+    /// Elementwise map into a new tensor.
+    pub fn map(&self, f: impl Fn(f32) -> f32) -> DenseTensor {
+        DenseTensor { shape: self.shape.clone(), data: self.data.iter().map(|&x| f(x)).collect() }
+    }
+
+    /// Elementwise zip with another tensor of the same shape.
+    pub fn zip(&self, other: &DenseTensor, f: impl Fn(f32, f32) -> f32) -> DenseTensor {
+        assert_eq!(self.shape, other.shape, "zip shape mismatch");
+        let data = self.data.iter().zip(&other.data).map(|(&a, &b)| f(a, b)).collect();
+        DenseTensor { shape: self.shape.clone(), data }
+    }
+
+    /// In-place elementwise update.
+    pub fn map_inplace(&mut self, f: impl Fn(f32) -> f32) {
+        for x in &mut self.data {
+            *x = f(*x);
+        }
+    }
+
+    /// In-place `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &DenseTensor) {
+        assert_eq!(self.shape, other.shape, "axpy shape mismatch");
+        for (x, y) in self.data.iter_mut().zip(&other.data) {
+            *x += alpha * y;
+        }
+    }
+
+    /// Scale all elements.
+    pub fn scale(&mut self, alpha: f32) {
+        for x in &mut self.data {
+            *x *= alpha;
+        }
+    }
+
+    /// Sum of all elements.
+    pub fn sum(&self) -> f32 {
+        self.data.iter().sum()
+    }
+
+    /// L1 norm (sum of absolute values) — the paper's "energy" numerator/denominator.
+    pub fn l1_norm(&self) -> f32 {
+        self.data.iter().map(|x| x.abs()).sum()
+    }
+
+    /// L2 norm.
+    pub fn l2_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    /// Maximum absolute element.
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, x| m.max(x.abs()))
+    }
+
+    /// Count of exact zeros.
+    pub fn count_zeros(&self) -> usize {
+        self.data.iter().filter(|&&x| x == 0.0).count()
+    }
+
+    /// Sparsity ratio: zeros / numel.
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.count_zeros() as f64 / self.numel() as f64
+    }
+
+    /// Max-abs difference to another tensor (shape-checked).
+    pub fn max_abs_diff(&self, other: &DenseTensor) -> f32 {
+        assert_eq!(self.shape, other.shape, "compare shape mismatch");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// True if all elements are within `atol + rtol*|other|`.
+    pub fn allclose(&self, other: &DenseTensor, rtol: f32, atol: f32) -> bool {
+        self.shape == other.shape
+            && self
+                .data
+                .iter()
+                .zip(&other.data)
+                .all(|(a, b)| (a - b).abs() <= atol + rtol * b.abs())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_access() {
+        let t = DenseTensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.cols(), 3);
+        assert_eq!(t.get2(1, 2), 6.0);
+        assert_eq!(t.at(&[0, 1]), 2.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "does not match shape")]
+    fn bad_shape_panics() {
+        DenseTensor::from_vec(&[2, 2], vec![1.0; 3]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let mut rng = Pcg64::seeded(1);
+        let t = DenseTensor::randn(&[3, 5], &mut rng);
+        let tt = t.transpose2().transpose2();
+        assert_eq!(t, tt);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = DenseTensor::ones(&[4]);
+        let b = DenseTensor::full(&[4], 2.0);
+        a.axpy(0.5, &b);
+        assert_eq!(a.data(), &[2.0; 4]);
+        a.scale(2.0);
+        assert_eq!(a.data(), &[4.0; 4]);
+    }
+
+    #[test]
+    fn norms_and_sparsity() {
+        let t = DenseTensor::from_vec(&[4], vec![0.0, -3.0, 0.0, 4.0]);
+        assert_eq!(t.l1_norm(), 7.0);
+        assert_eq!(t.l2_norm(), 5.0);
+        assert_eq!(t.count_zeros(), 2);
+        assert!((t.sparsity() - 0.5).abs() < 1e-12);
+        assert_eq!(t.max_abs(), 4.0);
+    }
+
+    #[test]
+    fn allclose_tolerances() {
+        let a = DenseTensor::from_vec(&[2], vec![1.0, 2.0]);
+        let b = DenseTensor::from_vec(&[2], vec![1.0 + 1e-6, 2.0 - 1e-6]);
+        assert!(a.allclose(&b, 1e-5, 1e-5));
+        assert!(!a.allclose(&b, 0.0, 1e-8));
+    }
+
+    #[test]
+    fn reshape_preserves_data() {
+        let t = DenseTensor::from_vec(&[2, 2], vec![1., 2., 3., 4.]);
+        let r = t.reshape(&[4]);
+        assert_eq!(r.data(), t.data());
+        assert_eq!(r.shape(), &[4]);
+    }
+
+    #[test]
+    fn kaiming_scale_depends_on_fan_in() {
+        let mut rng = Pcg64::seeded(2);
+        let w = DenseTensor::kaiming(&[512, 64], &mut rng);
+        let var = w.data().iter().map(|x| x * x).sum::<f32>() / w.numel() as f32;
+        let expect = 2.0 / 512.0;
+        assert!((var - expect).abs() < expect * 0.2, "var {var} expect {expect}");
+    }
+}

@@ -1,0 +1,36 @@
+//! Dense tensor substrate.
+//!
+//! A minimal row-major `f32` tensor sufficient to host the STen programming
+//! model: shape bookkeeping, initialization, element access, elementwise maps
+//! and 2-D views. Heavy compute lives in [`crate::kernels`]; this type is the
+//! "plain dense layout" end of every sparsity conversion.
+
+mod dense;
+pub use dense::DenseTensor;
+
+/// Number of elements implied by a shape.
+pub fn numel(shape: &[usize]) -> usize {
+    shape.iter().product()
+}
+
+/// Row-major strides for a shape.
+pub fn strides_for(shape: &[usize]) -> Vec<usize> {
+    let mut strides = vec![1; shape.len()];
+    for i in (0..shape.len().saturating_sub(1)).rev() {
+        strides[i] = strides[i + 1] * shape[i + 1];
+    }
+    strides
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn numel_and_strides() {
+        assert_eq!(numel(&[2, 3, 4]), 24);
+        assert_eq!(strides_for(&[2, 3, 4]), vec![12, 4, 1]);
+        assert_eq!(strides_for(&[5]), vec![1]);
+        assert_eq!(strides_for(&[]), Vec::<usize>::new());
+    }
+}

@@ -1,0 +1,301 @@
+//! Masked sparse training (Fig. 9 semantics).
+//!
+//! Training uses dense weights + 0/1 masks (emulated sparsity, §2). Each
+//! step: forward/backward on the masked weights, SGD update, then re-apply
+//! masks (the `SameFormatSparsifier` of Fig. 2). Masks are *fixed* between
+//! pruning events (cheap) and *recomputed* by a sparsifier at events
+//! (expensive for structured formats) — the two bars of Fig. 9.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::autograd::Tape;
+use crate::formats::{MaskedTensor, NmTensor, NmgTensor};
+use crate::model::MlpSpec;
+use crate::sparsify::{ScalarFraction, Sparsifier};
+use crate::tensor::DenseTensor;
+use crate::train::schedule::PruneEvent;
+
+/// Mask format used when a pruning event recomputes masks — the Fig. 9
+/// format axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MaskFormat {
+    /// Unstructured magnitude (scalar fraction).
+    Unstructured,
+    /// Plain n:m (n chosen per sparsity: keep round(m*(1-s)) of m).
+    Nm {
+        /// Block size.
+        m: usize,
+    },
+    /// Grouped n:m (§5).
+    Nmg {
+        /// Block size.
+        m: usize,
+        /// Group size.
+        g: usize,
+    },
+}
+
+/// Masked-MLP trainer: dense params + masks, tape autograd, SGD.
+pub struct MaskedTrainer {
+    /// Model spec.
+    pub spec: MlpSpec,
+    /// Dense parameters by name.
+    pub params: BTreeMap<String, DenseTensor>,
+    /// Masks for prunable (2-D) weights.
+    pub masks: BTreeMap<String, MaskedTensor>,
+    /// Learning rate.
+    pub lr: f32,
+    /// Mask format used at pruning events.
+    pub format: MaskFormat,
+}
+
+impl MaskedTrainer {
+    /// New trainer with all-ones masks (dense start).
+    pub fn new(spec: MlpSpec, params: BTreeMap<String, DenseTensor>, lr: f32, format: MaskFormat) -> Self {
+        let masks = spec
+            .prunable_weights()
+            .into_iter()
+            .map(|name| {
+                let shape = params[&name].shape().to_vec();
+                (name, MaskedTensor::new(DenseTensor::ones(&shape), DenseTensor::ones(&shape)))
+            })
+            .collect();
+        MaskedTrainer { spec, params, masks, lr, format }
+    }
+
+    /// Current masked view of a weight.
+    fn masked_param(&self, name: &str) -> DenseTensor {
+        match self.masks.get(name) {
+            Some(m) => self.params[name].zip(m.mask(), |v, mk| v * mk),
+            None => self.params[name].clone(),
+        }
+    }
+
+    /// One training step: forward/backward/update with fixed masks.
+    /// Returns the loss.
+    pub fn step(&mut self, x: &DenseTensor, labels: &[usize]) -> Result<f32> {
+        // Build masked parameter set for the forward pass.
+        let mut masked: BTreeMap<String, DenseTensor> = BTreeMap::new();
+        for name in self.spec.weight_names() {
+            masked.insert(name.clone(), self.masked_param(&name));
+        }
+        let tape = Tape::new();
+        let (logits, vars) = self.spec.forward_tape(&tape, &masked, x.clone());
+        let loss = tape.softmax_cross_entropy(logits, labels);
+        let loss_val = tape.value(loss).data()[0];
+        tape.backward(loss)?;
+        let pvars: Vec<_> = vars.values().copied().collect();
+        tape.sgd_step(&pvars, self.lr);
+        // Write back, re-applying masks (SameFormatSparsifier semantics).
+        for (name, v) in &vars {
+            let updated = tape.value(*v);
+            let stored = match self.masks.get(name) {
+                Some(m) => updated.zip(m.mask(), |x, mk| x * mk),
+                None => updated,
+            };
+            self.params.insert(name.clone(), stored);
+        }
+        Ok(loss_val)
+    }
+
+    /// Apply a pruning event: recompute masks for the named layers (or all)
+    /// at `event.sparsity` using the configured format.
+    pub fn apply_event(&mut self, event: &PruneEvent) {
+        let names = self.spec.prunable_weights();
+        let targets: Vec<String> = if event.layers.is_empty() {
+            names
+        } else {
+            event.layers.iter().map(|&i| names[i].clone()).collect()
+        };
+        for name in targets {
+            let w = self.params[&name].clone();
+            let mask = compute_mask(&w, event.sparsity, self.format);
+            // Store pre-masked weights + mask.
+            self.masks.insert(name.clone(), MaskedTensor::new(w.clone(), mask));
+            self.params.insert(name.clone(), self.masked_param(&name));
+        }
+    }
+
+    /// Evaluation: logits for a batch (masked weights).
+    pub fn logits(&self, x: &DenseTensor) -> DenseTensor {
+        let mut masked: BTreeMap<String, DenseTensor> = BTreeMap::new();
+        for name in self.spec.weight_names() {
+            masked.insert(name.clone(), self.masked_param(&name));
+        }
+        let tape = Tape::new();
+        let (logits, _) = self.spec.forward_tape(&tape, &masked, x.clone());
+        tape.value(logits)
+    }
+
+    /// Overall sparsity of the prunable weights.
+    pub fn sparsity(&self) -> f64 {
+        let (mut zeros, mut total) = (0usize, 0usize);
+        for name in self.spec.prunable_weights() {
+            let w = self.masked_param(&name);
+            zeros += w.count_zeros();
+            total += w.numel();
+        }
+        zeros as f64 / total.max(1) as f64
+    }
+}
+
+/// Compute a 0/1 mask for `w` at `sparsity` under `format` — the Fig. 9
+/// "new sparsification" cost.
+pub fn compute_mask(w: &DenseTensor, sparsity: f32, format: MaskFormat) -> DenseTensor {
+    let pruned = match format {
+        MaskFormat::Unstructured => ScalarFraction { fraction: sparsity }.prune(w),
+        MaskFormat::Nm { m } => {
+            let n = keep_of(m, sparsity);
+            NmTensor::from_dense(&pad_rows(w, m), n, m).to_dense().reshape_back(w)
+        }
+        MaskFormat::Nmg { m, g } => {
+            let n = keep_of(m, sparsity);
+            NmgTensor::from_dense(&pad_rows(w, m), n, m, g).to_dense().reshape_back(w)
+        }
+    };
+    pruned.map(|v| if v != 0.0 { 1.0 } else { 0.0 })
+}
+
+fn keep_of(m: usize, sparsity: f32) -> usize {
+    (((1.0 - sparsity) * m as f32).round() as usize).clamp(1, m)
+}
+
+/// Zero-pad rows up to a multiple of `m` (structured formats need it).
+fn pad_rows(w: &DenseTensor, m: usize) -> DenseTensor {
+    let rows = w.rows();
+    let cols = w.cols();
+    let padded = rows.div_ceil(m) * m;
+    if padded == rows {
+        return w.clone();
+    }
+    let mut out = DenseTensor::zeros(&[padded, cols]);
+    out.data_mut()[..rows * cols].copy_from_slice(w.data());
+    out
+}
+
+trait ReshapeBack {
+    fn reshape_back(self, like: &DenseTensor) -> DenseTensor;
+}
+
+impl ReshapeBack for DenseTensor {
+    /// Drop padding rows to recover `like`'s shape.
+    fn reshape_back(self, like: &DenseTensor) -> DenseTensor {
+        if self.shape() == like.shape() {
+            return self;
+        }
+        let (rows, cols) = (like.rows(), like.cols());
+        DenseTensor::from_vec(&[rows, cols], self.data()[..rows * cols].to_vec())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::train::data::ClusterDataset;
+    use crate::train::schedule::PruneSchedule;
+    use crate::util::rng::Pcg64;
+
+    fn setup(format: MaskFormat) -> (MaskedTrainer, ClusterDataset, Pcg64) {
+        let spec = MlpSpec { input_dim: 16, hidden: vec![32], classes: 4 };
+        let mut rng = Pcg64::seeded(700);
+        let params = spec.init(&mut rng);
+        let trainer = MaskedTrainer::new(spec, params, 0.2, format);
+        let ds = ClusterDataset::new(16, 4, 0.3, 1);
+        (trainer, ds, rng)
+    }
+
+    #[test]
+    fn dense_training_learns() {
+        let (mut t, ds, mut rng) = setup(MaskFormat::Unstructured);
+        let mut losses = Vec::new();
+        for _ in 0..40 {
+            let (x, y) = ds.batch(32, &mut rng);
+            losses.push(t.step(&x, &y).unwrap());
+        }
+        assert!(losses.last().unwrap() < &(losses[0] * 0.5), "{losses:?}");
+        let (x, y) = ds.batch(128, &mut rng);
+        let acc = ClusterDataset::accuracy(&t.logits(&x), &y);
+        assert!(acc > 0.8, "accuracy {acc}");
+    }
+
+    #[test]
+    fn pruning_event_sets_sparsity_and_masks_hold() {
+        let (mut t, ds, mut rng) = setup(MaskFormat::Unstructured);
+        for _ in 0..10 {
+            let (x, y) = ds.batch(32, &mut rng);
+            t.step(&x, &y).unwrap();
+        }
+        t.apply_event(&PruneEvent { layers: Vec::new(), sparsity: 0.5 });
+        let s = t.sparsity();
+        assert!((s - 0.5).abs() < 0.02, "sparsity {s}");
+        // Masks survive further training steps.
+        for _ in 0..10 {
+            let (x, y) = ds.batch(32, &mut rng);
+            t.step(&x, &y).unwrap();
+        }
+        let s = t.sparsity();
+        assert!(s >= 0.49, "sparsity after steps {s}");
+    }
+
+    #[test]
+    fn sparse_fine_tuning_recovers_accuracy() {
+        let (mut t, ds, mut rng) = setup(MaskFormat::Unstructured);
+        for _ in 0..60 {
+            let (x, y) = ds.batch(32, &mut rng);
+            t.step(&x, &y).unwrap();
+        }
+        let (xe, ye) = ds.batch(256, &mut rng);
+        let dense_acc = ClusterDataset::accuracy(&t.logits(&xe), &ye);
+        t.apply_event(&PruneEvent { layers: Vec::new(), sparsity: 0.5 });
+        for _ in 0..60 {
+            let (x, y) = ds.batch(32, &mut rng);
+            t.step(&x, &y).unwrap();
+        }
+        let sparse_acc = ClusterDataset::accuracy(&t.logits(&xe), &ye);
+        assert!(
+            sparse_acc >= dense_acc - 0.08,
+            "sparse {sparse_acc} vs dense {dense_acc}"
+        );
+        assert!(t.sparsity() >= 0.49);
+    }
+
+    #[test]
+    fn nm_and_nmg_masks_have_block_structure() {
+        let mut rng = Pcg64::seeded(701);
+        let w = DenseTensor::randn(&[16, 24], &mut rng);
+        for format in [MaskFormat::Nm { m: 4 }, MaskFormat::Nmg { m: 4, g: 2 }] {
+            let mask = compute_mask(&w, 0.5, format);
+            assert_eq!(mask.shape(), w.shape());
+            for s in 0..4 {
+                for c in 0..24 {
+                    let nnz = (0..4).filter(|&i| mask.get2(s * 4 + i, c) != 0.0).count();
+                    assert!(nnz <= 2, "{format:?} block nnz {nnz}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mask_handles_non_divisible_rows() {
+        let mut rng = Pcg64::seeded(702);
+        let w = DenseTensor::randn(&[10, 8], &mut rng); // 10 % 4 != 0
+        let mask = compute_mask(&w, 0.5, MaskFormat::Nm { m: 4 });
+        assert_eq!(mask.shape(), &[10, 8]);
+    }
+
+    #[test]
+    fn layer_wise_schedule_drives_trainer() {
+        let (mut t, ds, mut rng) = setup(MaskFormat::Unstructured);
+        let sched = PruneSchedule::LayerWise { every: 15, sparsity: 0.5, layers: 2 };
+        for step in 0..45 {
+            if let Some(e) = sched.event_at(step) {
+                t.apply_event(&e);
+            }
+            let (x, y) = ds.batch(32, &mut rng);
+            t.step(&x, &y).unwrap();
+        }
+        assert!(t.sparsity() > 0.4, "sparsity {}", t.sparsity());
+    }
+}

@@ -1,0 +1,17 @@
+//! Sparse training (§2, §6): masked fine-tuning, pruning schedules, data.
+//!
+//! * [`data`] — deterministic synthetic datasets (CIFAR-shaped clusters for
+//!   the §6.2 study, token corpus for the transformer example).
+//! * [`schedule`] — one-shot / iterative / layer-wise magnitude pruning
+//!   schedules (§6.2, Table 2 / Fig. 12).
+//! * [`masked`] — masked sparse training of an MLP via tape autograd, with
+//!   fixed-mask vs recompute-mask step costs (Fig. 9).
+
+pub mod data;
+pub mod schedule;
+pub mod masked;
+pub mod optim;
+
+pub use masked::MaskedTrainer;
+pub use optim::{Adam, Sgd};
+pub use schedule::{PruneEvent, PruneSchedule};

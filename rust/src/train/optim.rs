@@ -1,0 +1,191 @@
+//! Optimizers: SGD with momentum and Adam, with mask-aware updates.
+//!
+//! The STen training path updates weights out-of-place and re-sparsifies
+//! (Fig. 2); these optimizers expose exactly that contract: `step` takes
+//! `(param, grad, mask)` and returns the updated, re-masked parameter.
+
+use std::collections::BTreeMap;
+
+use crate::tensor::DenseTensor;
+
+/// SGD with optional momentum.
+pub struct Sgd {
+    /// Learning rate.
+    pub lr: f32,
+    /// Momentum coefficient (0 disables).
+    pub momentum: f32,
+    velocity: BTreeMap<String, DenseTensor>,
+}
+
+impl Sgd {
+    /// Plain SGD.
+    pub fn new(lr: f32) -> Self {
+        Sgd { lr, momentum: 0.0, velocity: BTreeMap::new() }
+    }
+
+    /// SGD with momentum.
+    pub fn with_momentum(lr: f32, momentum: f32) -> Self {
+        Sgd { lr, momentum, velocity: BTreeMap::new() }
+    }
+
+    /// One update; `mask` (if any) re-sparsifies the result.
+    pub fn step(
+        &mut self,
+        name: &str,
+        param: &DenseTensor,
+        grad: &DenseTensor,
+        mask: Option<&DenseTensor>,
+    ) -> DenseTensor {
+        let update = if self.momentum > 0.0 {
+            let v = self
+                .velocity
+                .entry(name.to_string())
+                .or_insert_with(|| DenseTensor::zeros(param.shape()));
+            v.scale(self.momentum);
+            v.axpy(1.0, grad);
+            v.clone()
+        } else {
+            grad.clone()
+        };
+        let mut out = param.clone();
+        out.axpy(-self.lr, &update);
+        if let Some(m) = mask {
+            out = out.zip(m, |x, mk| x * mk);
+        }
+        out
+    }
+}
+
+/// Adam (Kingma & Ba) with bias correction.
+pub struct Adam {
+    /// Learning rate.
+    pub lr: f32,
+    /// First-moment decay.
+    pub beta1: f32,
+    /// Second-moment decay.
+    pub beta2: f32,
+    /// Numerical epsilon.
+    pub eps: f32,
+    m: BTreeMap<String, DenseTensor>,
+    v: BTreeMap<String, DenseTensor>,
+    t: BTreeMap<String, u32>,
+}
+
+impl Adam {
+    /// Adam with standard betas.
+    pub fn new(lr: f32) -> Self {
+        Adam {
+            lr,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            m: BTreeMap::new(),
+            v: BTreeMap::new(),
+            t: BTreeMap::new(),
+        }
+    }
+
+    /// One update; `mask` (if any) re-sparsifies the result.
+    pub fn step(
+        &mut self,
+        name: &str,
+        param: &DenseTensor,
+        grad: &DenseTensor,
+        mask: Option<&DenseTensor>,
+    ) -> DenseTensor {
+        let m = self
+            .m
+            .entry(name.to_string())
+            .or_insert_with(|| DenseTensor::zeros(param.shape()));
+        let v = self
+            .v
+            .entry(name.to_string())
+            .or_insert_with(|| DenseTensor::zeros(param.shape()));
+        let t = self.t.entry(name.to_string()).or_insert(0);
+        *t += 1;
+        let (b1, b2) = (self.beta1, self.beta2);
+        for ((mi, vi), &gi) in m.data_mut().iter_mut().zip(v.data_mut()).zip(grad.data()) {
+            *mi = b1 * *mi + (1.0 - b1) * gi;
+            *vi = b2 * *vi + (1.0 - b2) * gi * gi;
+        }
+        let bc1 = 1.0 - b1.powi(*t as i32);
+        let bc2 = 1.0 - b2.powi(*t as i32);
+        let mut out = param.clone();
+        for ((o, &mi), &vi) in out.data_mut().iter_mut().zip(m.data()).zip(v.data()) {
+            let mhat = mi / bc1;
+            let vhat = vi / bc2;
+            *o -= self.lr * mhat / (vhat.sqrt() + self.eps);
+        }
+        if let Some(mk) = mask {
+            out = out.zip(mk, |x, mv| x * mv);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    /// Minimize f(w) = ||w - target||^2 with each optimizer.
+    fn converges(mut step: impl FnMut(&DenseTensor, &DenseTensor) -> DenseTensor) -> f32 {
+        let mut rng = Pcg64::seeded(1);
+        let target = DenseTensor::randn(&[16], &mut rng);
+        let mut w = DenseTensor::zeros(&[16]);
+        for _ in 0..200 {
+            let grad = w.zip(&target, |wi, ti| 2.0 * (wi - ti));
+            w = step(&w, &grad);
+        }
+        w.max_abs_diff(&target)
+    }
+
+    #[test]
+    fn sgd_converges() {
+        let mut opt = Sgd::new(0.1);
+        let err = converges(|w, g| opt.step("w", w, g, None));
+        assert!(err < 1e-3, "err {err}");
+    }
+
+    #[test]
+    fn momentum_converges() {
+        let mut opt = Sgd::with_momentum(0.05, 0.9);
+        let err = converges(|w, g| opt.step("w", w, g, None));
+        assert!(err < 1e-2, "err {err}");
+    }
+
+    #[test]
+    fn adam_converges() {
+        let mut opt = Adam::new(0.1);
+        let err = converges(|w, g| opt.step("w", w, g, None));
+        assert!(err < 1e-2, "err {err}");
+    }
+
+    #[test]
+    fn masked_updates_stay_masked() {
+        let mask = DenseTensor::from_vec(&[4], vec![1.0, 0.0, 1.0, 0.0]);
+        let w = DenseTensor::from_vec(&[4], vec![1.0, 0.0, 1.0, 0.0]);
+        let g = DenseTensor::ones(&[4]);
+        let mut sgd = Sgd::new(0.5);
+        let out = sgd.step("w", &w, &g, Some(&mask));
+        assert_eq!(out.data()[1], 0.0);
+        assert_eq!(out.data()[3], 0.0);
+        assert!(out.data()[0] < 1.0);
+        let mut adam = Adam::new(0.5);
+        let out = adam.step("w", &w, &g, Some(&mask));
+        assert_eq!(out.data()[1], 0.0);
+        assert_eq!(out.data()[3], 0.0);
+    }
+
+    #[test]
+    fn adam_state_is_per_parameter() {
+        let mut adam = Adam::new(0.1);
+        let w = DenseTensor::ones(&[2]);
+        let g = DenseTensor::ones(&[2]);
+        adam.step("a", &w, &g, None);
+        adam.step("a", &w, &g, None);
+        adam.step("b", &w, &g, None);
+        assert_eq!(adam.t["a"], 2);
+        assert_eq!(adam.t["b"], 1);
+    }
+}

@@ -1,0 +1,123 @@
+//! Pruning schedules (§6.2): one-shot, iterative, and layer-wise magnitude
+//! pruning. Each schedule is a few lines of "when to re-sparsify what to
+//! which sparsity" — the paper's Table 2 measures exactly this brevity.
+
+/// A sparsification action at some step.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PruneEvent {
+    /// Which prunable weights to (re)prune: indices into the model's
+    /// prunable-weight list. Empty means "all".
+    pub layers: Vec<usize>,
+    /// Target sparsity for those weights.
+    pub sparsity: f32,
+}
+
+/// The three §6.2 schedules.
+#[derive(Debug, Clone)]
+pub enum PruneSchedule {
+    /// Prune everything to `sparsity` once at `at_step`, then fine-tune.
+    OneShot {
+        /// Step of the single pruning event.
+        at_step: usize,
+        /// Target sparsity.
+        sparsity: f32,
+    },
+    /// Start at `start` sparsity, add `step` every `every` steps until
+    /// `target` (pruning all layers each time).
+    Iterative {
+        /// Initial sparsity.
+        start: f32,
+        /// Sparsity increment per event.
+        step: f32,
+        /// Steps between events.
+        every: usize,
+        /// Final sparsity.
+        target: f32,
+    },
+    /// Prune layer `k` at step `k * every` to `sparsity`, in order.
+    LayerWise {
+        /// Steps between layers.
+        every: usize,
+        /// Per-layer target sparsity.
+        sparsity: f32,
+        /// Number of prunable layers.
+        layers: usize,
+    },
+}
+
+impl PruneSchedule {
+    /// The pruning event at `step`, if any.
+    pub fn event_at(&self, step: usize) -> Option<PruneEvent> {
+        match self {
+            PruneSchedule::OneShot { at_step, sparsity } => (step == *at_step)
+                .then(|| PruneEvent { layers: Vec::new(), sparsity: *sparsity }),
+            PruneSchedule::Iterative { start, step: inc, every, target } => {
+                if *every == 0 || step % every != 0 {
+                    return None;
+                }
+                let k = step / every;
+                let s = start + inc * k as f32;
+                if s > *target + 1e-6 {
+                    return None;
+                }
+                Some(PruneEvent { layers: Vec::new(), sparsity: s.min(*target) })
+            }
+            PruneSchedule::LayerWise { every, sparsity, layers } => {
+                if *every == 0 || step % every != 0 {
+                    return None;
+                }
+                let k = step / every;
+                (k < *layers).then(|| PruneEvent { layers: vec![k], sparsity: *sparsity })
+            }
+        }
+    }
+
+    /// Final sparsity the schedule reaches.
+    pub fn final_sparsity(&self) -> f32 {
+        match self {
+            PruneSchedule::OneShot { sparsity, .. } => *sparsity,
+            PruneSchedule::Iterative { target, .. } => *target,
+            PruneSchedule::LayerWise { sparsity, .. } => *sparsity,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn one_shot_fires_once() {
+        let s = PruneSchedule::OneShot { at_step: 5, sparsity: 0.5 };
+        assert_eq!(s.event_at(4), None);
+        let e = s.event_at(5).unwrap();
+        assert!(e.layers.is_empty());
+        assert_eq!(e.sparsity, 0.5);
+        assert_eq!(s.event_at(6), None);
+        assert_eq!(s.final_sparsity(), 0.5);
+    }
+
+    #[test]
+    fn iterative_ramps_to_target() {
+        let s = PruneSchedule::Iterative { start: 0.1, step: 0.1, every: 10, target: 0.5 };
+        let events: Vec<(usize, f32)> = (0..200)
+            .filter_map(|t| s.event_at(t).map(|e| (t, e.sparsity)))
+            .collect();
+        assert_eq!(events.len(), 5);
+        assert_eq!(events[0], (0, 0.1));
+        assert!((events[4].1 - 0.5).abs() < 1e-6);
+        assert_eq!(events[4].0, 40);
+        // No events past the target.
+        assert!(s.event_at(50).is_none());
+    }
+
+    #[test]
+    fn layer_wise_walks_layers_in_order() {
+        let s = PruneSchedule::LayerWise { every: 30, sparsity: 0.5, layers: 3 };
+        assert_eq!(s.event_at(0).unwrap().layers, vec![0]);
+        assert_eq!(s.event_at(30).unwrap().layers, vec![1]);
+        assert_eq!(s.event_at(60).unwrap().layers, vec![2]);
+        assert!(s.event_at(90).is_none());
+        assert!(s.event_at(31).is_none());
+    }
+}

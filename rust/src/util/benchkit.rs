@@ -1,0 +1,168 @@
+//! Minimal benchmark harness (criterion is unavailable offline).
+//!
+//! Each `rust/benches/*.rs` file is a `harness = false` binary that uses
+//! [`Bench`] to run warmup + timed iterations and report median / mean / p95,
+//! printing rows in the same shape as the paper's tables and figures.
+
+use std::time::{Duration, Instant};
+
+/// Result of a timed measurement.
+#[derive(Debug, Clone, Copy)]
+pub struct Sample {
+    /// Median iteration time, seconds.
+    pub median: f64,
+    /// Mean iteration time, seconds.
+    pub mean: f64,
+    /// 95th-percentile iteration time, seconds.
+    pub p95: f64,
+    /// Minimum iteration time, seconds.
+    pub min: f64,
+    /// Number of measured iterations.
+    pub iters: usize,
+}
+
+impl Sample {
+    /// GFLOP/s given a per-iteration flop count.
+    pub fn gflops(&self, flops: f64) -> f64 {
+        flops / self.median / 1e9
+    }
+}
+
+/// Benchmark configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct Bench {
+    /// Warmup iterations (not measured).
+    pub warmup: usize,
+    /// Measured iterations.
+    pub iters: usize,
+    /// Upper bound on total measured wall time; measurement stops early
+    /// (but after at least 3 iterations) once exceeded.
+    pub max_time: Duration,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench { warmup: 2, iters: 10, max_time: Duration::from_secs(20) }
+    }
+}
+
+impl Bench {
+    /// Quick preset for cheap microbenchmarks.
+    pub fn quick() -> Self {
+        Bench { warmup: 3, iters: 30, max_time: Duration::from_secs(5) }
+    }
+
+    /// Construct with explicit warmup/iters.
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bench { warmup, iters, ..Default::default() }
+    }
+
+    /// Run `f` under this configuration and collect a [`Sample`].
+    pub fn run<T>(&self, mut f: impl FnMut() -> T) -> Sample {
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        let budget = Instant::now();
+        for i in 0..self.iters {
+            let t = Instant::now();
+            std::hint::black_box(f());
+            times.push(t.elapsed().as_secs_f64());
+            if budget.elapsed() > self.max_time && i >= 2 {
+                break;
+            }
+        }
+        summarize(&times)
+    }
+}
+
+/// Summarize raw per-iteration timings into a [`Sample`].
+pub fn summarize(times: &[f64]) -> Sample {
+    assert!(!times.is_empty());
+    let mut sorted = times.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let n = sorted.len();
+    let median = if n % 2 == 1 {
+        sorted[n / 2]
+    } else {
+        0.5 * (sorted[n / 2 - 1] + sorted[n / 2])
+    };
+    let mean = sorted.iter().sum::<f64>() / n as f64;
+    let p95 = sorted[((n as f64 * 0.95) as usize).min(n - 1)];
+    Sample { median, mean, p95, min: sorted[0], iters: n }
+}
+
+/// Print a bench table header: `name` followed by columns.
+pub fn table_header(name: &str, cols: &[&str]) {
+    println!("\n## {name}");
+    println!("{}", cols.join("\t"));
+}
+
+/// Format seconds with an adaptive unit.
+pub fn fmt_time(secs: f64) -> String {
+    if secs < 1e-6 {
+        format!("{:.1}ns", secs * 1e9)
+    } else if secs < 1e-3 {
+        format!("{:.2}us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.3}ms", secs * 1e3)
+    } else {
+        format!("{secs:.3}s")
+    }
+}
+
+/// Parse `--quick` / `--full` style bench flags from argv.
+pub fn parse_mode() -> BenchMode {
+    let args: Vec<String> = std::env::args().collect();
+    if args.iter().any(|a| a == "--full") {
+        BenchMode::Full
+    } else if std::env::var("STEN_BENCH_FULL").is_ok() {
+        BenchMode::Full
+    } else {
+        BenchMode::Quick
+    }
+}
+
+/// Size preset for benches: quick (CI-friendly) or full (paper-scale shapes).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BenchMode {
+    /// Reduced problem sizes; finishes in seconds.
+    Quick,
+    /// Paper-scale problem sizes.
+    Full,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summarize_median_odd_even() {
+        let s = summarize(&[3.0, 1.0, 2.0]);
+        assert_eq!(s.median, 2.0);
+        let s = summarize(&[4.0, 1.0, 2.0, 3.0]);
+        assert_eq!(s.median, 2.5);
+    }
+
+    #[test]
+    fn run_counts_iterations() {
+        let b = Bench::new(1, 5);
+        let s = b.run(|| 1 + 1);
+        assert_eq!(s.iters, 5);
+        assert!(s.min <= s.median && s.median <= s.p95);
+    }
+
+    #[test]
+    fn fmt_time_units() {
+        assert!(fmt_time(5e-9).ends_with("ns"));
+        assert!(fmt_time(5e-6).ends_with("us"));
+        assert!(fmt_time(5e-3).ends_with("ms"));
+        assert!(fmt_time(5.0).ends_with('s'));
+    }
+
+    #[test]
+    fn gflops_computed_from_median() {
+        let s = Sample { median: 0.5, mean: 0.5, p95: 0.5, min: 0.5, iters: 1 };
+        assert!((s.gflops(1e9) - 2.0).abs() < 1e-12);
+    }
+}

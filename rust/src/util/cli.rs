@@ -1,0 +1,112 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional arguments.
+
+use std::collections::HashMap;
+
+/// Parsed command-line arguments.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// Positional arguments, in order.
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse_from<I: IntoIterator<Item = String>>(iter: I) -> Self {
+        let mut args = Args::default();
+        let items: Vec<String> = iter.into_iter().collect();
+        let mut i = 0;
+        while i < items.len() {
+            let a = &items[i];
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    args.flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < items.len() && !items[i + 1].starts_with("--") {
+                    args.flags.insert(stripped.to_string(), items[i + 1].clone());
+                    i += 1;
+                } else {
+                    args.flags.insert(stripped.to_string(), "true".to_string());
+                }
+            } else {
+                args.positional.push(a.clone());
+            }
+            i += 1;
+        }
+        args
+    }
+
+    /// Parse from the process arguments.
+    pub fn parse() -> Self {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    /// True if `--name` was given (as a bare flag or with a truthy value).
+    pub fn flag(&self, name: &str) -> bool {
+        matches!(self.flags.get(name).map(|s| s.as_str()), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// String value of `--name`, if present.
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    /// String value of `--name` or a default.
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    /// Parse `--name` as `T` or return `default`. Panics with a clear message
+    /// when the value is present but malformed.
+    pub fn num<T: std::str::FromStr>(&self, name: &str, default: T) -> T
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.get(name) {
+            None => default,
+            Some(v) => v
+                .parse()
+                .unwrap_or_else(|e| panic!("invalid value for --{name}: {v:?} ({e})")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse_from(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_key_value_pairs() {
+        let a = parse(&["--steps", "100", "--lr=0.5", "pos1"]);
+        assert_eq!(a.num::<usize>("steps", 0), 100);
+        assert_eq!(a.num::<f64>("lr", 0.0), 0.5);
+        assert_eq!(a.positional, vec!["pos1"]);
+    }
+
+    #[test]
+    fn bare_flags() {
+        let a = parse(&["--verbose", "--quick"]);
+        assert!(a.flag("verbose"));
+        assert!(a.flag("quick"));
+        assert!(!a.flag("absent"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&[]);
+        assert_eq!(a.num::<usize>("n", 7), 7);
+        assert_eq!(a.get_or("mode", "x"), "x");
+    }
+
+    #[test]
+    #[should_panic(expected = "invalid value")]
+    fn malformed_number_panics() {
+        let a = parse(&["--n", "abc"]);
+        let _ = a.num::<usize>("n", 0);
+    }
+}

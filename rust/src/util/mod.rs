@@ -1,0 +1,17 @@
+//! Small self-contained utilities: RNG, thread pool, timing, bench harness,
+//! CLI parsing and a mini property-testing helper.
+//!
+//! The build environment is fully offline with a fixed vendor set (the `xla`
+//! crate's dependency tree), so widely-used helpers such as `rand`, `rayon`,
+//! `clap` and `criterion` are re-implemented here in the small.
+
+pub mod rng;
+pub mod threadpool;
+pub mod timer;
+pub mod benchkit;
+pub mod cli;
+pub mod proptest;
+
+pub use rng::Pcg64;
+pub use threadpool::ThreadPool;
+pub use timer::{Stopwatch, TimeBreakdown};

@@ -1,0 +1,107 @@
+//! Mini property-based testing helper (proptest is unavailable offline).
+//!
+//! [`check`] runs a property over `cases` randomly-generated inputs and, on
+//! failure, greedily shrinks the failing input before panicking with a
+//! reproducible seed. Generators are plain closures over [`Pcg64`].
+
+use super::rng::Pcg64;
+
+/// Run `prop` on `cases` inputs drawn by `gen`. On failure, attempt to shrink
+/// via `shrink` (which yields candidate smaller inputs) and panic with the
+/// minimal failing case and the seed that reproduces it.
+pub fn check_with_shrink<T: Clone + std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Pcg64) -> T,
+    shrink: impl Fn(&T) -> Vec<T>,
+    prop: impl Fn(&T) -> bool,
+) {
+    let seed = std::env::var("STEN_PROPTEST_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xC0FFEE_u64);
+    let mut rng = Pcg64::seeded(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            // Greedy shrink loop.
+            let mut minimal = input.clone();
+            let mut progress = true;
+            while progress {
+                progress = false;
+                for cand in shrink(&minimal) {
+                    if !prop(&cand) {
+                        minimal = cand;
+                        progress = true;
+                        break;
+                    }
+                }
+            }
+            panic!(
+                "property {name} failed at case {case} (seed {seed}).\n original: {input:?}\n minimal: {minimal:?}"
+            );
+        }
+    }
+}
+
+/// [`check_with_shrink`] without shrinking.
+pub fn check<T: Clone + std::fmt::Debug>(
+    name: &str,
+    cases: usize,
+    gen: impl FnMut(&mut Pcg64) -> T,
+    prop: impl Fn(&T) -> bool,
+) {
+    check_with_shrink(name, cases, gen, |_| Vec::new(), prop);
+}
+
+/// Generator helper: random shape with each dim in `[1, max_dim]`.
+pub fn gen_shape(rng: &mut Pcg64, rank: usize, max_dim: usize) -> Vec<usize> {
+    (0..rank).map(|_| 1 + rng.below(max_dim as u32) as usize).collect()
+}
+
+/// Generator helper: vector of `n` uniform floats in `[-1, 1]`.
+pub fn gen_vec(rng: &mut Pcg64, n: usize) -> Vec<f32> {
+    (0..n).map(|_| rng.uniform(-1.0, 1.0)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("add-commutes", 100, |r| (r.next_f32(), r.next_f32()), |(a, b)| a + b == b + a);
+    }
+
+    #[test]
+    #[should_panic(expected = "property always-false failed")]
+    fn failing_property_panics() {
+        check("always-false", 10, |r| r.next_u32(), |_| false);
+    }
+
+    #[test]
+    fn shrinking_finds_smaller_case() {
+        let result = std::panic::catch_unwind(|| {
+            check_with_shrink(
+                "lt-100",
+                100,
+                |r| r.below(1000),
+                |&x| if x > 0 { vec![x / 2, x - 1] } else { vec![] },
+                |&x| x < 100,
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        // Greedy shrink should land exactly on the boundary.
+        assert!(msg.contains("minimal: 100"), "msg: {msg}");
+    }
+
+    #[test]
+    fn gen_helpers_in_bounds() {
+        let mut rng = Pcg64::seeded(1);
+        let shape = gen_shape(&mut rng, 3, 8);
+        assert_eq!(shape.len(), 3);
+        assert!(shape.iter().all(|&d| (1..=8).contains(&d)));
+        let v = gen_vec(&mut rng, 16);
+        assert!(v.iter().all(|x| (-1.0..=1.0).contains(x)));
+    }
+}

@@ -1,0 +1,168 @@
+//! A small work-stealing-free scoped thread pool.
+//!
+//! `rayon` is not available in the offline vendor set, so this provides the
+//! two primitives the kernels and the DDP simulator need:
+//!
+//! * [`ThreadPool::scope_chunks`] — split an index range into contiguous
+//!   chunks and run a closure per chunk on worker threads (used by the GEMM
+//!   kernels to parallelize over row panels).
+//! * [`parallel_for`] — one-shot convenience over a global pool.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// A persistent pool of worker threads executing closures.
+pub struct ThreadPool {
+    workers: usize,
+}
+
+impl ThreadPool {
+    /// Create a pool advertising `workers` workers. Threads are spawned per
+    /// `scope_chunks` call (scoped threads), which keeps the implementation
+    /// free of `'static` bounds while still amortizing well for the
+    /// millisecond-scale tasks the kernels submit.
+    pub fn new(workers: usize) -> Self {
+        ThreadPool { workers: workers.max(1) }
+    }
+
+    /// Number of workers.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `f(chunk_start, chunk_end)` over `[0, n)` split into contiguous
+    /// chunks, one logical task per worker, self-balancing via an atomic
+    /// cursor with step `grain`.
+    pub fn scope_chunks<F>(&self, n: usize, grain: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
+        if n == 0 {
+            return;
+        }
+        let grain = grain.max(1);
+        let nworkers = self.workers.min(n.div_ceil(grain));
+        if nworkers <= 1 {
+            f(0, n);
+            return;
+        }
+        let cursor = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..nworkers {
+                s.spawn(|| loop {
+                    let start = cursor.fetch_add(grain, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + grain).min(n);
+                    f(start, end);
+                });
+            }
+        });
+    }
+
+    /// Map `f` over `0..n`, collecting results in index order.
+    pub fn map<T: Send, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        F: Fn(usize) -> T + Sync,
+    {
+        let results: Vec<Mutex<Option<T>>> = (0..n).map(|_| Mutex::new(None)).collect();
+        self.scope_chunks(n, 1, |start, end| {
+            for i in start..end {
+                *results[i].lock().unwrap() = Some(f(i));
+            }
+        });
+        results
+            .into_iter()
+            .map(|m| m.into_inner().unwrap().expect("worker failed to produce value"))
+            .collect()
+    }
+}
+
+/// A raw mutable pointer wrapper that is `Sync`, for kernels whose threads
+/// provably write disjoint regions. The `get()` accessor forces closures to
+/// capture the whole wrapper (not the raw-pointer field) by reference.
+pub struct SyncPtr<T>(pub *mut T);
+
+unsafe impl<T> Sync for SyncPtr<T> {}
+
+impl<T> SyncPtr<T> {
+    /// New wrapper over a raw pointer.
+    pub fn new(p: *mut T) -> Self {
+        SyncPtr(p)
+    }
+
+    /// The wrapped pointer.
+    pub fn get(&self) -> *mut T {
+        self.0
+    }
+}
+
+/// The global pool, sized to available parallelism.
+pub fn global() -> &'static Arc<ThreadPool> {
+    static POOL: OnceLock<Arc<ThreadPool>> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let n = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+        Arc::new(ThreadPool::new(n))
+    })
+}
+
+/// Run `f(start, end)` over `[0, n)` chunks on the global pool.
+pub fn parallel_for<F>(n: usize, grain: usize, f: F)
+where
+    F: Fn(usize, usize) + Sync,
+{
+    global().scope_chunks(n, grain, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_all_indices_exactly_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..1000).map(|_| AtomicUsize::new(0)).collect();
+        pool.scope_chunks(1000, 7, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn sums_match_serial() {
+        let pool = ThreadPool::new(8);
+        let total = AtomicU64::new(0);
+        pool.scope_chunks(10_000, 128, |s, e| {
+            let local: u64 = (s..e).map(|i| i as u64).sum();
+            total.fetch_add(local, Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), (0..10_000u64).sum());
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.map(100, |i| i * i);
+        assert_eq!(out, (0..100).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_range_is_noop() {
+        let pool = ThreadPool::new(4);
+        pool.scope_chunks(0, 16, |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn single_worker_runs_inline() {
+        let pool = ThreadPool::new(1);
+        let count = AtomicUsize::new(0);
+        pool.scope_chunks(10, 100, |s, e| {
+            count.fetch_add(e - s, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 10);
+    }
+}

@@ -1,0 +1,137 @@
+//! Timing helpers: a stopwatch and a named time breakdown used by the
+//! coordinator to split end-to-end latency into "STen (dispatch) time" vs
+//! "runtime (kernel) time", the breakdown reported in Fig. 11 of the paper.
+
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// A simple restartable stopwatch.
+#[derive(Debug)]
+pub struct Stopwatch {
+    start: Instant,
+}
+
+impl Stopwatch {
+    /// Start a new stopwatch.
+    pub fn start() -> Self {
+        Stopwatch { start: Instant::now() }
+    }
+
+    /// Elapsed time since the (re)start.
+    pub fn elapsed(&self) -> Duration {
+        self.start.elapsed()
+    }
+
+    /// Elapsed seconds since the (re)start.
+    pub fn secs(&self) -> f64 {
+        self.elapsed().as_secs_f64()
+    }
+
+    /// Restart and return the lap duration.
+    pub fn lap(&mut self) -> Duration {
+        let d = self.start.elapsed();
+        self.start = Instant::now();
+        d
+    }
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::start()
+    }
+}
+
+/// Accumulates named durations, e.g. `dispatch`, `kernel`, `convert`,
+/// `runtime` — the per-component latency breakdown of Fig. 11.
+#[derive(Debug, Default, Clone)]
+pub struct TimeBreakdown {
+    buckets: HashMap<&'static str, Duration>,
+}
+
+impl TimeBreakdown {
+    /// New empty breakdown.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Add `d` to bucket `name`.
+    pub fn add(&mut self, name: &'static str, d: Duration) {
+        *self.buckets.entry(name).or_default() += d;
+    }
+
+    /// Time `f` and charge its duration to `name`.
+    pub fn time<T>(&mut self, name: &'static str, f: impl FnOnce() -> T) -> T {
+        let t = Instant::now();
+        let out = f();
+        self.add(name, t.elapsed());
+        out
+    }
+
+    /// Total across buckets.
+    pub fn total(&self) -> Duration {
+        self.buckets.values().sum()
+    }
+
+    /// Seconds in bucket `name` (0 if absent).
+    pub fn secs(&self, name: &str) -> f64 {
+        self.buckets.get(name).copied().unwrap_or_default().as_secs_f64()
+    }
+
+    /// Merge another breakdown into this one.
+    pub fn merge(&mut self, other: &TimeBreakdown) {
+        for (k, v) in &other.buckets {
+            *self.buckets.entry(k).or_default() += *v;
+        }
+    }
+
+    /// Buckets sorted by descending time, as `(name, seconds)`.
+    pub fn sorted(&self) -> Vec<(&'static str, f64)> {
+        let mut v: Vec<_> = self.buckets.iter().map(|(k, d)| (*k, d.as_secs_f64())).collect();
+        v.sort_by(|a, b| b.1.total_cmp(&a.1));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn breakdown_accumulates() {
+        let mut b = TimeBreakdown::new();
+        b.add("dispatch", Duration::from_millis(2));
+        b.add("dispatch", Duration::from_millis(3));
+        b.add("kernel", Duration::from_millis(10));
+        assert!((b.secs("dispatch") - 0.005).abs() < 1e-9);
+        assert!((b.total().as_secs_f64() - 0.015).abs() < 1e-9);
+    }
+
+    #[test]
+    fn time_charges_bucket() {
+        let mut b = TimeBreakdown::new();
+        let x = b.time("work", || 21 * 2);
+        assert_eq!(x, 42);
+        assert!(b.secs("work") >= 0.0);
+    }
+
+    #[test]
+    fn sorted_descending() {
+        let mut b = TimeBreakdown::new();
+        b.add("small", Duration::from_micros(1));
+        b.add("big", Duration::from_millis(1));
+        let order: Vec<_> = b.sorted().into_iter().map(|(k, _)| k).collect();
+        assert_eq!(order, vec!["big", "small"]);
+    }
+
+    #[test]
+    fn merge_sums() {
+        let mut a = TimeBreakdown::new();
+        a.add("x", Duration::from_millis(1));
+        let mut b = TimeBreakdown::new();
+        b.add("x", Duration::from_millis(2));
+        b.add("y", Duration::from_millis(4));
+        a.merge(&b);
+        assert!((a.secs("x") - 0.003).abs() < 1e-9);
+        assert!((a.secs("y") - 0.004).abs() < 1e-9);
+    }
+}

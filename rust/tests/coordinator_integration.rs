@@ -1,0 +1,104 @@
+//! Coordinator integration over the real AOT artifacts: the engine's three
+//! FFN modes agree numerically (modulo pruning), the batch server delivers
+//! every request, and the timing breakdown is populated.
+
+use std::time::Duration;
+
+use sten::coordinator::{BatchServer, Engine, FfnMode};
+use sten::runtime::ArtifactRuntime;
+use sten::util::rng::Pcg64;
+
+fn engine(mode: FfnMode) -> Engine {
+    let rt = ArtifactRuntime::open_default().expect("run `make artifacts` first");
+    Engine::new(rt, "tiny", mode, 42).unwrap()
+}
+
+#[test]
+fn native_dense_ffn_matches_dense_artifact() {
+    let mut a = engine(FfnMode::DenseArtifact);
+    let mut b = engine(FfnMode::NativeDense);
+    let mut rng = Pcg64::seeded(7);
+    let tokens = a.random_tokens(&mut rng);
+    let la = a.forward(&tokens).unwrap();
+    let lb = b.forward(&tokens).unwrap();
+    assert!(
+        la.allclose(&lb, 2e-2, 2e-2),
+        "native dense FFN diverges from artifact FFN: {}",
+        la.max_abs_diff(&lb)
+    );
+}
+
+#[test]
+fn block_forward_matches_monolithic_artifact() {
+    let mut e = engine(FfnMode::DenseArtifact);
+    let mut rng = Pcg64::seeded(8);
+    let tokens = e.random_tokens(&mut rng);
+    let block = e.forward(&tokens).unwrap();
+    let mono = e.forward_monolithic(&tokens).unwrap();
+    assert!(
+        block.allclose(&mono, 2e-2, 2e-2),
+        "block-composed forward diverges from monolithic: {}",
+        block.max_abs_diff(&mono)
+    );
+}
+
+#[test]
+fn nmg_mode_serves_the_pruned_network() {
+    // After set_ffn_mode(NativeNmg), the engine serves the *pruned* weights;
+    // running the same pruned weights through the dense path must agree.
+    let mut sparse = engine(FfnMode::NativeNmg { n: 2, m: 4, g: 4 });
+    let mut rng = Pcg64::seeded(9);
+    let tokens = sparse.random_tokens(&mut rng);
+    let ls = sparse.forward(&tokens).unwrap();
+    // NativeDense over the engine's (already pruned) parameters.
+    sparse.ffn_mode = FfnMode::NativeDense;
+    let ld = sparse.forward(&tokens).unwrap();
+    assert!(
+        ls.allclose(&ld, 2e-2, 2e-2),
+        "nmg kernel diverges from dense over pruned weights: {}",
+        ls.max_abs_diff(&ld)
+    );
+}
+
+#[test]
+fn timing_breakdown_populated_per_mode() {
+    let mut e = engine(FfnMode::NativeNmg { n: 2, m: 4, g: 4 });
+    let mut rng = Pcg64::seeded(10);
+    let tokens = e.random_tokens(&mut rng);
+    e.forward(&tokens).unwrap();
+    let t = e.timing();
+    assert!(t.secs("runtime") > 0.0, "runtime bucket empty");
+    assert!(t.secs("native") > 0.0, "native bucket empty");
+}
+
+#[test]
+fn batch_server_completes_all_requests() {
+    let e = engine(FfnMode::NativeNmg { n: 2, m: 4, g: 4 });
+    let batch = e.dims.batch;
+    let seq = e.dims.seq;
+    let mut server = BatchServer::new(e, Duration::from_millis(1));
+    let mut rng = Pcg64::seeded(11);
+    let total = batch * 2 + 1; // forces a padded final batch
+    for _ in 0..total {
+        let toks: Vec<i32> = (0..seq).map(|_| rng.below(100) as i32).collect();
+        server.submit(&toks);
+    }
+    server.run_until_drained().unwrap();
+    assert_eq!(server.completed.len(), total);
+    assert!(server.median_latency().unwrap() > 0.0);
+    assert!(server.throughput().unwrap() > 0.0);
+    // Batch sizes never exceed the artifact batch.
+    assert!(server.completed.iter().all(|r| r.batch_size <= batch));
+}
+
+#[test]
+fn server_clamps_and_pads_tokens() {
+    let e = engine(FfnMode::NativeDense);
+    let seq = e.dims.seq;
+    let mut server = BatchServer::new(e, Duration::from_millis(1));
+    // Out-of-vocab and short sequences must be handled.
+    server.submit(&[-5, 999_999]);
+    server.submit(&vec![3; seq * 2]);
+    server.run_until_drained().unwrap();
+    assert_eq!(server.completed.len(), 2);
+}

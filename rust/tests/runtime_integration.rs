@@ -1,0 +1,299 @@
+//! Integration: the Rust runtime executes real AOT artifacts (L1+L2 -> L3).
+//!
+//! Requires `make artifacts`. These tests prove the full interchange path:
+//! jax/pallas -> HLO text -> PJRT compile -> execute -> numerics match a
+//! pure-Rust reference.
+
+use sten::kernels::dense_gemm;
+use sten::runtime::{ArtifactRuntime, Value};
+use sten::tensor::DenseTensor;
+use sten::util::rng::Pcg64;
+
+fn runtime() -> ArtifactRuntime {
+    // Tests run from the crate root; artifacts/ lives beside Cargo.toml.
+    ArtifactRuntime::open_default().expect("run `make artifacts` before cargo test")
+}
+
+#[test]
+fn manifest_lists_expected_artifacts() {
+    let rt = runtime();
+    let names = rt.manifest().names();
+    for required in [
+        "gemm_dense_8x48x16",
+        "gemm_masked_8x48x16",
+        "gemm_nmg_8x48x16",
+        "encoder_fwd_tiny",
+        "attn_block_tiny",
+        "ffn_block_tiny",
+        "ffn_block_nmg_tiny",
+        "embed_tiny",
+        "lm_head_tiny",
+        "train_step_tiny",
+    ] {
+        assert!(names.contains(&required), "missing artifact {required}; have {names:?}");
+    }
+}
+
+#[test]
+fn dense_gemm_artifact_matches_rust_reference() {
+    let rt = runtime();
+    let mut rng = Pcg64::seeded(1);
+    let a = DenseTensor::randn(&[8, 48], &mut rng);
+    let b = DenseTensor::randn(&[48, 16], &mut rng);
+    let got = rt
+        .call1("gemm_dense_8x48x16", &[a.clone().into(), b.clone().into()])
+        .unwrap();
+    let want = dense_gemm::matmul_naive(&a, &b);
+    assert!(
+        got.allclose(&want, 1e-4, 1e-4),
+        "max diff {}",
+        got.max_abs_diff(&want)
+    );
+}
+
+#[test]
+fn masked_gemm_artifact_applies_mask() {
+    let rt = runtime();
+    let mut rng = Pcg64::seeded(2);
+    let a = DenseTensor::randn(&[8, 48], &mut rng);
+    let mask = DenseTensor::from_vec(
+        &[8, 48],
+        (0..8 * 48).map(|i| if i % 3 == 0 { 1.0 } else { 0.0 }).collect(),
+    );
+    let b = DenseTensor::randn(&[48, 16], &mut rng);
+    let got = rt
+        .call1(
+            "gemm_masked_8x48x16",
+            &[a.clone().into(), mask.clone().into(), b.clone().into()],
+        )
+        .unwrap();
+    let want = dense_gemm::matmul_naive(&a.zip(&mask, |x, m| x * m), &b);
+    assert!(got.allclose(&want, 1e-4, 1e-4));
+}
+
+#[test]
+fn nmg_gemm_artifact_matches_rust_nmg_kernel() {
+    use sten::formats::nmg::NmgTensor;
+
+    let rt = runtime();
+    let spec = rt.spec("gemm_nmg_8x48x16").unwrap().clone();
+    let (m, n, g) = (
+        spec.meta.get("m").unwrap().usize().unwrap(),
+        spec.meta.get("n").unwrap().usize().unwrap(),
+        spec.meta.get("g").unwrap().usize().unwrap(),
+    );
+    let (mm, k) = (
+        spec.meta.get("M").unwrap().usize().unwrap(),
+        spec.meta.get("K").unwrap().usize().unwrap(),
+    );
+    let nn = spec.inputs.iter().find(|i| i.name == "b").unwrap().shape[1];
+
+    let mut rng = Pcg64::seeded(3);
+    let a = DenseTensor::randn(&[mm, k], &mut rng);
+    let sparse = NmgTensor::from_dense(&a, n, m, g);
+    let b = DenseTensor::randn(&[k, nn], &mut rng);
+
+    // Feed the Rust-converted val/idx into the Pallas artifact.
+    let val_spec = &spec.inputs[spec.input_index("val").unwrap()];
+    let idx_spec = &spec.inputs[spec.input_index("idx").unwrap()];
+    let val = DenseTensor::from_vec(&val_spec.shape, sparse.val_flat().to_vec());
+    let idx = Value::I32(
+        idx_spec.shape.clone(),
+        sparse.idx_flat().iter().map(|&i| i as i32).collect(),
+    );
+    let got = rt
+        .call1("gemm_nmg_8x48x16", &[val.into(), idx, b.clone().into()])
+        .unwrap();
+
+    // Rust n:m:g GEMM must agree with the Pallas kernel bit-for-bit-ish.
+    let want = sten::kernels::nmg_gemm::spmm(&sparse, &b);
+    assert!(
+        got.allclose(&want, 1e-4, 1e-4),
+        "pallas vs rust n:m:g mismatch: {}",
+        got.max_abs_diff(&want)
+    );
+}
+
+#[test]
+fn encoder_blocks_compose_to_full_forward() {
+    let rt = runtime();
+    let spec = rt.spec("encoder_fwd_tiny").unwrap().clone();
+    let mut rng = Pcg64::seeded(4);
+
+    // Build params per manifest order; tokens last.
+    let mut inputs = Vec::new();
+    for io in &spec.inputs {
+        match io.name.as_str() {
+            "tokens" => {
+                let vocab = spec.meta.get("vocab").unwrap().usize().unwrap() as u32;
+                let data: Vec<i32> =
+                    (0..io.numel()).map(|_| rng.below(vocab) as i32).collect();
+                inputs.push(Value::I32(io.shape.clone(), data));
+            }
+            name => {
+                let t = if name.ends_with("_g") {
+                    DenseTensor::ones(&io.shape)
+                } else if io.shape.len() == 2 {
+                    let mut w = DenseTensor::randn(&io.shape, &mut rng);
+                    w.scale((2.0 / io.shape[0] as f32).sqrt());
+                    w
+                } else {
+                    DenseTensor::zeros(&io.shape)
+                };
+                inputs.push(Value::F32(t));
+            }
+        }
+    }
+    let full = rt.call1("encoder_fwd_tiny", &inputs).unwrap();
+
+    // Now compose embed -> (attn, ffn)* -> lm_head using the same params.
+    let names: Vec<String> = spec.inputs.iter().map(|i| i.name.clone()).collect();
+    let by_name = |n: &str| -> Value {
+        inputs[names.iter().position(|x| x == n).unwrap()].clone()
+    };
+    let n_layers = spec.meta.get("n_layers").unwrap().usize().unwrap();
+
+    let mut x = rt
+        .call1("embed_tiny", &[by_name("emb"), by_name("pos"), by_name("tokens")])
+        .unwrap();
+    for l in 0..n_layers {
+        let p = |s: &str| by_name(&format!("layer{l}.{s}"));
+        x = rt
+            .call1(
+                "attn_block_tiny",
+                &[
+                    x.clone().into(),
+                    p("ln1_g"), p("ln1_b"),
+                    p("wq"), p("bq"), p("wk"), p("bk"),
+                    p("wv"), p("bv"), p("wo"), p("bo"),
+                ],
+            )
+            .unwrap();
+        x = rt
+            .call1(
+                "ffn_block_tiny",
+                &[
+                    x.clone().into(),
+                    p("ln2_g"), p("ln2_b"),
+                    p("w1"), p("b1"), p("w2"), p("b2"),
+                ],
+            )
+            .unwrap();
+    }
+    let composed = rt
+        .call1(
+            "lm_head_tiny",
+            &[
+                x.into(),
+                by_name("lnf_g"), by_name("lnf_b"),
+                by_name("out_w"), by_name("out_b"),
+            ],
+        )
+        .unwrap();
+
+    assert!(
+        composed.allclose(&full, 1e-3, 1e-3),
+        "block composition diverges from full forward: {}",
+        composed.max_abs_diff(&full)
+    );
+}
+
+#[test]
+fn train_step_artifact_decreases_loss_and_keeps_masks() {
+    let rt = runtime();
+    let spec = rt.spec("train_step_tiny").unwrap().clone();
+    let mut rng = Pcg64::seeded(5);
+    let vocab = spec.meta.get("vocab").unwrap().usize().unwrap() as u32;
+
+    let mut inputs = Vec::new();
+    let mut mask_positions = Vec::new();
+    for (i, io) in spec.inputs.iter().enumerate() {
+        let v = match io.name.as_str() {
+            "tokens" | "targets" => Value::I32(
+                io.shape.clone(),
+                (0..io.numel()).map(|_| rng.below(vocab) as i32).collect(),
+            ),
+            "lr" => Value::F32(DenseTensor::from_vec(&[], vec![0.05])),
+            name if name.starts_with("mask.") => {
+                mask_positions.push(i);
+                // 50% random mask.
+                Value::F32(DenseTensor::from_vec(
+                    &io.shape,
+                    (0..io.numel())
+                        .map(|_| if rng.next_f32() < 0.5 { 1.0 } else { 0.0 })
+                        .collect(),
+                ))
+            }
+            name if name.ends_with("_g") => Value::F32(DenseTensor::ones(&io.shape)),
+            _ if io.shape.len() == 2 => {
+                let mut w = DenseTensor::randn(&io.shape, &mut rng);
+                w.scale(0.05);
+                Value::F32(w)
+            }
+            _ => Value::F32(DenseTensor::zeros(&io.shape)),
+        };
+        inputs.push(v);
+    }
+
+    // Run 4 steps, feeding updated params back in.
+    let n_params = spec.outputs.len() - 1;
+    let mut loss0 = None;
+    let mut loss = 0.0;
+    for _ in 0..4 {
+        let out = rt.call("train_step_tiny", &inputs).unwrap();
+        loss = out[0].as_f32().unwrap().data()[0];
+        if loss0.is_none() {
+            loss0 = Some(loss);
+        }
+        for (j, v) in out.into_iter().skip(1).enumerate() {
+            inputs[j] = v; // params come first in the input list, same order
+        }
+        assert_eq!(n_params + 1, spec.outputs.len());
+    }
+    assert!(
+        loss < loss0.unwrap(),
+        "loss did not decrease: {loss} !< {:?}",
+        loss0
+    );
+
+    // Masked params stay masked.
+    for &mi in &mask_positions {
+        let mask_name = spec.inputs[mi].name.strip_prefix("mask.").unwrap().to_string();
+        let pi = spec.input_index(&mask_name).unwrap();
+        let param = inputs[pi].as_f32().unwrap();
+        let mask = inputs[mi].as_f32().unwrap();
+        let leaked = param
+            .data()
+            .iter()
+            .zip(mask.data())
+            .filter(|&(p, m)| *m == 0.0 && *p != 0.0)
+            .count();
+        assert_eq!(leaked, 0, "param {mask_name} has {leaked} unmasked values");
+    }
+}
+
+#[test]
+fn call_rejects_wrong_shapes_and_counts() {
+    let rt = runtime();
+    let a = DenseTensor::zeros(&[2, 2]);
+    let err = rt.call("gemm_dense_8x48x16", &[a.clone().into()]).unwrap_err();
+    assert!(err.to_string().contains("expected 2 inputs"), "{err}");
+    let b = DenseTensor::zeros(&[48, 16]);
+    let err = rt
+        .call("gemm_dense_8x48x16", &[a.into(), b.into()])
+        .unwrap_err();
+    assert!(err.to_string().contains("expects"), "{err}");
+}
+
+#[test]
+fn timing_buckets_populated() {
+    let rt = runtime();
+    let mut rng = Pcg64::seeded(6);
+    let a = DenseTensor::randn(&[8, 48], &mut rng);
+    let b = DenseTensor::randn(&[48, 16], &mut rng);
+    rt.call1("gemm_dense_8x48x16", &[a.into(), b.into()]).unwrap();
+    let t = rt.timing();
+    assert!(t.secs("compile") > 0.0);
+    assert!(t.secs("execute") > 0.0);
+    assert!(t.secs("transfer") > 0.0);
+}
