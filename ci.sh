@@ -1,0 +1,34 @@
+#!/usr/bin/env bash
+# CI gate for the sten crate. Run from the repo root.
+#
+# Tier-1 (build + tests) is the hard gate that catches missing-manifest-class
+# regressions (the seed shipped without a Cargo.toml and could not build at
+# all). fmt/clippy run after it; export STEN_CI_LENIENT=1 to downgrade the
+# style gates to warnings while burning down legacy lint debt.
+set -euo pipefail
+cd "$(dirname "$0")/rust"
+
+echo "==> tier-1: cargo build --release"
+cargo build --release
+
+echo "==> tier-1: cargo test -q"
+cargo test -q
+
+echo "==> building bench targets"
+cargo build --release --benches
+
+style() {
+    if [[ "${STEN_CI_LENIENT:-0}" == "1" ]]; then
+        "$@" || echo "WARN (lenient): '$*' failed"
+    else
+        "$@"
+    fi
+}
+
+echo "==> cargo fmt --check"
+style cargo fmt --check
+
+echo "==> cargo clippy -- -D warnings"
+style cargo clippy --all-targets -- -D warnings
+
+echo "CI OK"

@@ -1,0 +1,122 @@
+//! Serving throughput: single-threaded drain loop vs the concurrent
+//! deadline-batching server.
+//!
+//! Submits a fixed request stream to (a) the synchronous `BatchServer`
+//! baseline and (b) `ConcurrentServer` swept over replicas x max_wait, and
+//! reports wall-clock requests/sec, latency percentiles, batch counts and
+//! the queue high-water mark. On a multi-core host >= 2 replicas should
+//! beat the drain loop: batches execute in parallel on engine replicas
+//! that share one Arc-held (pruned) weight set.
+//!
+//! Run: `cargo bench --bench serving_throughput [-- --full]`
+//! (full mode serves the `base` artifacts; quick mode serves `tiny`.)
+
+use std::time::{Duration, Instant};
+
+use sten::coordinator::{BatchServer, ConcurrentServer, Engine, FfnMode, ServeConfig};
+use sten::runtime::ArtifactRuntime;
+use sten::util::benchkit::{parse_mode, BenchMode};
+use sten::util::rng::Pcg64;
+
+const FFN: FfnMode = FfnMode::NativeNmg { n: 2, m: 4, g: 4 };
+
+fn engine(tag: &str) -> Engine {
+    let rt = ArtifactRuntime::open_default().expect("artifact runtime");
+    Engine::new(rt, tag, FFN, 42).unwrap()
+}
+
+fn requests(seq: usize, vocab: usize, count: usize) -> Vec<Vec<i32>> {
+    let mut rng = Pcg64::seeded(77);
+    (0..count)
+        .map(|_| (0..seq).map(|_| rng.below(vocab as u32) as i32).collect())
+        .collect()
+}
+
+/// Baseline: enqueue everything, drain on the caller thread.
+fn run_baseline(tag: &str, reqs: &[Vec<i32>]) -> (f64, f64) {
+    let mut server = BatchServer::new(engine(tag), Duration::from_millis(1));
+    let t = Instant::now();
+    for r in reqs {
+        server.submit(r);
+    }
+    server.run_until_drained().unwrap();
+    let wall = t.elapsed().as_secs_f64();
+    let p50 = server.latency_summary().map(|s| s.p50).unwrap_or(0.0);
+    (reqs.len() as f64 / wall, p50)
+}
+
+struct ConcRow {
+    rps: f64,
+    p50: f64,
+    p95: f64,
+    p99: f64,
+    batches: u64,
+    high_water: usize,
+}
+
+fn run_concurrent(tag: &str, reqs: &[Vec<i32>], replicas: usize, max_wait: Duration) -> ConcRow {
+    let cfg = ServeConfig { replicas, queue_cap: 64, max_wait };
+    let server = ConcurrentServer::start(engine(tag), cfg).unwrap();
+    let t = Instant::now();
+    for r in reqs {
+        server.submit(r).unwrap();
+    }
+    let report = server.finish().unwrap();
+    let wall = t.elapsed().as_secs_f64();
+    let lat = report.latency.expect("latency summary");
+    ConcRow {
+        rps: reqs.len() as f64 / wall,
+        p50: lat.p50,
+        p95: lat.p95,
+        p99: lat.p99,
+        batches: report.batches,
+        high_water: report.queue_high_water,
+    }
+}
+
+fn main() {
+    let mode = parse_mode();
+    let (tag, count) = match mode {
+        BenchMode::Full => ("base", 96),
+        BenchMode::Quick => ("tiny", 512),
+    };
+    let probe = engine(tag);
+    let (seq, vocab, batch) = (probe.dims.seq, probe.dims.vocab, probe.dims.batch);
+    drop(probe);
+    let reqs = requests(seq, vocab, count);
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    println!(
+        "# Serving throughput: artifacts `{tag}`, {count} requests, batch {batch}, \
+         {cores} cores (mode {mode:?})"
+    );
+
+    let (base_rps, base_p50) = run_baseline(tag, &reqs);
+    println!("\nserver\treplicas\tmax_wait_ms\treq_per_s\tspeedup\tp50_ms\tp95_ms\tp99_ms\tbatches\tqueue_hw");
+    println!(
+        "drain-loop\t1\t1\t{base_rps:.0}\t1.00\t{:.3}\t-\t-\t-\t-",
+        base_p50 * 1e3
+    );
+
+    for replicas in [1usize, 2, 4, 8] {
+        if replicas > cores.max(2) * 2 {
+            continue;
+        }
+        for wait_ms in [1u64, 5] {
+            let row = run_concurrent(tag, &reqs, replicas, Duration::from_millis(wait_ms));
+            println!(
+                "concurrent\t{replicas}\t{wait_ms}\t{:.0}\t{:.2}\t{:.3}\t{:.3}\t{:.3}\t{}\t{}",
+                row.rps,
+                row.rps / base_rps,
+                row.p50 * 1e3,
+                row.p95 * 1e3,
+                row.p99 * 1e3,
+                row.batches,
+                row.high_water
+            );
+        }
+    }
+    println!(
+        "\n(expect concurrent >= 2 replicas to beat the drain loop in req/s on a \
+         multi-core host; higher max_wait trades latency for fuller batches)"
+    );
+}

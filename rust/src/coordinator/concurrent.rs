@@ -1,0 +1,348 @@
+//! The concurrent serving front-end: bounded submission queue, deadline
+//! batcher, N engine replicas.
+//!
+//! Topology (all threads live on one [`WorkerPool`]):
+//!
+//! ```text
+//! submit() --bounded channel--> [batcher] --batch channel--> [worker 0..N)
+//!   (backpressure: send blocks    |  deadline batch formation   each owns an
+//!    when queue_cap is reached)   |  (full batch: dispatch now;  Engine replica
+//!                                 |   else: dispatch when the    sharing weights
+//!                                 |   oldest request has waited  via Arc
+//!                                 |   max_wait)
+//! ```
+//!
+//! Guarantees:
+//!
+//! * **Backpressure** — at most `queue_cap` requests are queued ahead of the
+//!   batcher; further `submit` calls block (no unbounded memory).
+//! * **Deadline batching** — a batch is dispatched the moment it is full,
+//!   or as soon as its oldest request has waited `max_wait`, whichever
+//!   comes first. Under light load no request waits in queue longer than
+//!   `max_wait` before its batch is formed.
+//! * **Shared weights** — replicas are [`Engine::replicate`] clones: one
+//!   `Arc`-held parameter set, n:m:g conversion done once.
+//! * **Metrics** — per-request latency records with real batch ids,
+//!   p50/p95/p99 summaries and a queue-depth gauge with high-water mark.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::util::channel::{self, Received};
+use crate::util::threadpool::WorkerPool;
+
+use super::engine::{EncoderDims, Engine};
+use super::metrics::{self, LatencySummary, QueueGauge};
+use super::serve::{canonical_tokens, pad_batch_tokens, Request, RequestResult};
+
+/// Configuration for [`ConcurrentServer`].
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Engine replicas (worker threads executing batches).
+    pub replicas: usize,
+    /// Submission queue bound; `submit` blocks past this depth.
+    pub queue_cap: usize,
+    /// Max time a request may wait for batch-mates before its (possibly
+    /// partial) batch is dispatched.
+    pub max_wait: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { replicas: 2, queue_cap: 256, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// A formed batch travelling from the batcher to a worker.
+struct Batch {
+    id: u64,
+    formed: Instant,
+    requests: Vec<Request>,
+}
+
+/// State shared by submitters, the batcher and the workers.
+struct Progress {
+    completed: Vec<RequestResult>,
+    errors: Vec<String>,
+    /// Requests accounted for (completed or failed).
+    finished: u64,
+}
+
+struct Shared {
+    progress: Mutex<Progress>,
+    done_cv: Condvar,
+    gauge: QueueGauge,
+    batches: AtomicU64,
+}
+
+/// Final report returned by [`ConcurrentServer::finish`].
+#[derive(Debug)]
+pub struct ServeReport {
+    /// One record per completed request.
+    pub results: Vec<RequestResult>,
+    /// p50/p95/p99 end-to-end latency summary.
+    pub latency: Option<LatencySummary>,
+    /// Batches dispatched.
+    pub batches: u64,
+    /// Server lifetime, start -> finish.
+    pub wall_s: f64,
+    /// Requests per second of wall-clock server lifetime.
+    pub wall_rps: f64,
+    /// Requests per second of (batch-deduplicated) compute time.
+    pub compute_rps: Option<f64>,
+    /// Deepest the submission queue has been.
+    pub queue_high_water: usize,
+}
+
+/// The concurrent, deadline-aware batch server.
+pub struct ConcurrentServer {
+    dims: EncoderDims,
+    submit_tx: Option<channel::Sender<Request>>,
+    pool: Option<WorkerPool>,
+    shared: Arc<Shared>,
+    next_id: AtomicU64,
+    submitted: AtomicU64,
+    started: Instant,
+}
+
+impl ConcurrentServer {
+    /// Start serving: replicates `engine` per `cfg.replicas` (sharing its
+    /// weights) and spawns the batcher plus one worker thread per replica.
+    pub fn start(engine: Engine, cfg: ServeConfig) -> Result<Self> {
+        if cfg.replicas == 0 {
+            bail!("ServeConfig.replicas must be at least 1");
+        }
+        let dims = engine.dims.clone();
+        let mut engines = Vec::with_capacity(cfg.replicas);
+        for _ in 1..cfg.replicas {
+            engines.push(engine.replicate());
+        }
+        engines.push(engine);
+
+        let shared = Arc::new(Shared {
+            progress: Mutex::new(Progress {
+                completed: Vec::new(),
+                errors: Vec::new(),
+                finished: 0,
+            }),
+            done_cv: Condvar::new(),
+            gauge: QueueGauge::new(),
+            batches: AtomicU64::new(0),
+        });
+
+        let (submit_tx, submit_rx) = channel::bounded::<Request>(cfg.queue_cap.max(1));
+        let (batch_tx, batch_rx) = channel::bounded::<Batch>(cfg.replicas * 2);
+        let pool = WorkerPool::named("sten-serve", cfg.replicas + 1);
+
+        // The batcher: deadline-driven batch formation.
+        {
+            let shared = shared.clone();
+            let batch_size = dims.batch;
+            let max_wait = cfg.max_wait;
+            pool.execute(move || {
+                let mut pending: VecDeque<Request> = VecDeque::new();
+                let mut open = true;
+                let mut next_batch = 0u64;
+                while open || !pending.is_empty() {
+                    if pending.is_empty() {
+                        match submit_rx.recv() {
+                            Some(r) => pending.push_back(r),
+                            None => {
+                                open = false;
+                                continue;
+                            }
+                        }
+                    }
+                    while open && pending.len() < batch_size {
+                        let deadline = pending.front().unwrap().arrived + max_wait;
+                        match submit_rx.recv_deadline(deadline) {
+                            Received::Item(r) => pending.push_back(r),
+                            Received::TimedOut => break,
+                            Received::Closed => open = false,
+                        }
+                    }
+                    let take = pending.len().min(batch_size);
+                    let requests: Vec<Request> = pending.drain(..take).collect();
+                    shared.gauge.exit(take);
+                    shared.batches.fetch_add(1, Ordering::SeqCst);
+                    let batch = Batch { id: next_batch, formed: Instant::now(), requests };
+                    next_batch += 1;
+                    if let Err(channel::SendError(batch)) = batch_tx.send(batch) {
+                        // All workers are gone (e.g. panicked): fail this
+                        // batch, everything still pending, and everything
+                        // that arrives until the queue closes, so drain()
+                        // and finish() never hang on requests nobody will
+                        // execute.
+                        let fail = |n: u64, msg: String| {
+                            let mut prog = shared.progress.lock().unwrap();
+                            prog.errors.push(msg);
+                            prog.finished += n;
+                            drop(prog);
+                            shared.done_cv.notify_all();
+                        };
+                        fail(
+                            batch.requests.len() as u64,
+                            format!("batch {}: no workers left", batch.id),
+                        );
+                        let stranded = pending.len();
+                        shared.gauge.exit(stranded);
+                        pending.clear();
+                        if stranded > 0 {
+                            fail(stranded as u64, format!("{stranded} pending requests: no workers left"));
+                        }
+                        while let Some(r) = submit_rx.recv() {
+                            shared.gauge.exit(1);
+                            fail(1, format!("request {}: no workers left", r.id));
+                        }
+                        break;
+                    }
+                }
+            });
+        }
+
+        // The workers: one engine replica each.
+        for mut engine in engines {
+            let rx = batch_rx.clone();
+            let shared = shared.clone();
+            let dims = dims.clone();
+            pool.execute(move || {
+                while let Some(batch) = rx.recv() {
+                    let tokens = pad_batch_tokens(&dims, &batch.requests);
+                    let t = Instant::now();
+                    // A panicking forward must not kill the worker: the
+                    // batch's requests would never be accounted and drain()
+                    // would hang. Weights are immutable, so continuing with
+                    // this engine after an unwind is safe.
+                    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+                        || engine.forward(&tokens),
+                    ))
+                    .unwrap_or_else(|_| Err(anyhow!("engine forward panicked")));
+                    let compute_s = t.elapsed().as_secs_f64();
+                    let done = Instant::now();
+                    let mut prog = shared.progress.lock().unwrap();
+                    match outcome {
+                        Ok(_) => {
+                            for r in &batch.requests {
+                                prog.completed.push(RequestResult {
+                                    id: r.id,
+                                    batch_id: batch.id,
+                                    queue_s: batch
+                                        .formed
+                                        .saturating_duration_since(r.arrived)
+                                        .as_secs_f64(),
+                                    compute_s,
+                                    total_s: done
+                                        .saturating_duration_since(r.arrived)
+                                        .as_secs_f64(),
+                                    batch_size: batch.requests.len(),
+                                });
+                            }
+                        }
+                        Err(e) => prog.errors.push(format!("batch {}: {e:#}", batch.id)),
+                    }
+                    prog.finished += batch.requests.len() as u64;
+                    drop(prog);
+                    shared.done_cv.notify_all();
+                }
+            });
+        }
+        drop(batch_rx);
+
+        Ok(ConcurrentServer {
+            dims,
+            submit_tx: Some(submit_tx),
+            pool: Some(pool),
+            shared,
+            next_id: AtomicU64::new(0),
+            submitted: AtomicU64::new(0),
+            started: Instant::now(),
+        })
+    }
+
+    /// Encoder dimensions of the served model.
+    pub fn dims(&self) -> &EncoderDims {
+        &self.dims
+    }
+
+    /// Enqueue a request (tokens clamped/padded); blocks while the
+    /// submission queue is at capacity. Returns the request id.
+    pub fn submit(&self, tokens: &[i32]) -> Result<u64> {
+        let t = canonical_tokens(&self.dims, tokens);
+        let id = self.next_id.fetch_add(1, Ordering::SeqCst);
+        self.shared.gauge.enter();
+        let tx = self.submit_tx.as_ref().ok_or_else(|| anyhow!("server is shut down"))?;
+        if tx.send(Request { id, tokens: t, arrived: Instant::now() }).is_err() {
+            self.shared.gauge.exit(1);
+            bail!("server is shut down");
+        }
+        self.submitted.fetch_add(1, Ordering::SeqCst);
+        Ok(id)
+    }
+
+    /// Requests currently waiting for batch formation.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.gauge.depth()
+    }
+
+    /// Deepest the submission queue has been.
+    pub fn queue_high_water(&self) -> usize {
+        self.shared.gauge.high_water()
+    }
+
+    /// Completion records so far (snapshot).
+    pub fn completed(&self) -> Vec<RequestResult> {
+        self.shared.progress.lock().unwrap().completed.clone()
+    }
+
+    /// Block until every request submitted so far has completed or failed.
+    pub fn drain(&self) {
+        let target = self.submitted.load(Ordering::SeqCst);
+        let mut prog = self.shared.progress.lock().unwrap();
+        while prog.finished < target {
+            prog = self.shared.done_cv.wait(prog).unwrap();
+        }
+    }
+
+    /// Stop accepting requests, flush everything in flight, join all
+    /// threads and return the final report. Fails if any batch errored.
+    pub fn finish(mut self) -> Result<ServeReport> {
+        self.submit_tx.take(); // closes the submission queue
+        if let Some(pool) = self.pool.take() {
+            pool.join();
+        }
+        let wall_s = self.started.elapsed().as_secs_f64();
+        let prog = self.shared.progress.lock().unwrap();
+        if !prog.errors.is_empty() {
+            bail!(
+                "{} batch(es) failed; first: {}",
+                prog.errors.len(),
+                prog.errors[0]
+            );
+        }
+        let results = prog.completed.clone();
+        drop(prog);
+        let latency = metrics::summarize(&results);
+        let compute_rps = metrics::compute_throughput(&results);
+        Ok(ServeReport {
+            wall_rps: results.len() as f64 / wall_s.max(1e-12),
+            latency,
+            batches: self.shared.batches.load(Ordering::SeqCst),
+            wall_s,
+            compute_rps,
+            queue_high_water: self.shared.gauge.high_water(),
+            results,
+        })
+    }
+}
+
+impl Drop for ConcurrentServer {
+    fn drop(&mut self) {
+        // Close the queue and join threads even when `finish` was skipped.
+        self.submit_tx.take();
+        self.pool.take(); // WorkerPool::drop joins
+    }
+}

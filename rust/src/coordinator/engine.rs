@@ -1,14 +1,24 @@
 //! The sparse-BERT inference engine.
 //!
 //! Weights live in Rust (so sparsifiers can transform them); attention /
-//! embedding / LM-head blocks run through the PJRT runtime; the FFN — the
-//! paper's sparse hot spot — runs either as a dense artifact or natively
+//! embedding / LM-head blocks run through the artifact runtime; the FFN —
+//! the paper's sparse hot spot — runs either as a dense artifact or natively
 //! via the n:m:g GEMM, selected by [`FfnMode`]. Latency is split into
-//! `runtime` (PJRT execute), `native` (Rust kernels) and `framework`
+//! `runtime` (artifact execute), `native` (Rust kernels) and `framework`
 //! (everything else: batching, transposes, dispatch) — the Fig. 11
 //! STen-vs-runtime breakdown.
+//!
+//! # Replication
+//!
+//! Weights are held behind an `Arc` ([`Engine::replicate`]): the serving
+//! layer runs N engine replicas on worker threads that all share one
+//! parameter set and one pre-converted n:m:g weight set, so FFN weights are
+//! sparsified exactly once per server no matter how many replicas serve
+//! traffic. Replicas keep private timing state; the runtime (also `Arc`-
+//! shared) aggregates its own buckets across replicas.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::{anyhow, Result};
@@ -40,7 +50,8 @@ pub struct EncoderDims {
 /// How the FFN blocks execute.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FfnMode {
-    /// PJRT dense artifact (the "dense PyTorch" baseline of Fig. 11).
+    /// Dense artifact through the runtime (the "dense PyTorch" baseline of
+    /// Fig. 11).
     DenseArtifact,
     /// Native Rust dense GEMM (framework-overhead-free dense baseline).
     NativeDense,
@@ -55,16 +66,27 @@ pub enum FfnMode {
     },
 }
 
-/// The engine: runtime + weights + execution mode.
-pub struct Engine {
-    rt: ArtifactRuntime,
-    tag: String,
-    /// Encoder dimensions.
-    pub dims: EncoderDims,
+/// The immutable weight set shared across engine replicas.
+#[derive(Clone)]
+struct EngineWeights {
     params: BTreeMap<String, DenseTensor>,
     /// Pre-converted W1^T n:m:g weights per layer (NativeNmg mode).
     nmg_w1t: Vec<NmgTensor>,
-    /// Execution mode for FFN blocks.
+}
+
+/// The engine: runtime + shared weights + execution mode.
+pub struct Engine {
+    rt: Arc<ArtifactRuntime>,
+    tag: String,
+    /// Encoder dimensions.
+    pub dims: EncoderDims,
+    weights: Arc<EngineWeights>,
+    /// Execution mode for FFN blocks. Mutating this field switches the
+    /// kernel path without touching the (shared, possibly pruned) weights —
+    /// useful to run the dense kernels over an already-pruned network. If
+    /// n:m:g weights were never converted (the engine was not in `NativeNmg`
+    /// mode), the native path falls back to the dense GEMM; use
+    /// [`Engine::set_ffn_mode`] to actually (re-)sparsify.
     pub ffn_mode: FfnMode,
     times: TimeBreakdown,
 }
@@ -73,6 +95,16 @@ impl Engine {
     /// Build an engine over artifact set `tag` ("tiny"/"base") with random
     /// (deterministic) weights.
     pub fn new(rt: ArtifactRuntime, tag: &str, ffn_mode: FfnMode, seed: u64) -> Result<Self> {
+        Self::with_runtime(Arc::new(rt), tag, ffn_mode, seed)
+    }
+
+    /// Build an engine over a shared runtime (serving-layer entry point).
+    pub fn with_runtime(
+        rt: Arc<ArtifactRuntime>,
+        tag: &str,
+        ffn_mode: FfnMode,
+        seed: u64,
+    ) -> Result<Self> {
         let spec = rt.spec(&format!("encoder_fwd_{tag}"))?.clone();
         let meta = &spec.meta;
         let dims = EncoderDims {
@@ -104,8 +136,7 @@ impl Engine {
             rt,
             tag: tag.to_string(),
             dims,
-            params,
-            nmg_w1t: Vec::new(),
+            weights: Arc::new(EngineWeights { params, nmg_w1t: Vec::new() }),
             ffn_mode,
             times: TimeBreakdown::new(),
         };
@@ -113,31 +144,59 @@ impl Engine {
         Ok(engine)
     }
 
+    /// A replica sharing this engine's runtime and (pruned) weights, with
+    /// fresh timing state. Conversion to n:m:g is *not* repeated: replicas
+    /// reference the same `Arc`-held weight set. Configure the FFN mode
+    /// before replicating; replicas made earlier keep the old weights.
+    pub fn replicate(&self) -> Engine {
+        Engine {
+            rt: self.rt.clone(),
+            tag: self.tag.clone(),
+            dims: self.dims.clone(),
+            weights: self.weights.clone(),
+            ffn_mode: self.ffn_mode,
+            times: TimeBreakdown::new(),
+        }
+    }
+
+    /// The shared artifact runtime.
+    pub fn runtime(&self) -> &Arc<ArtifactRuntime> {
+        &self.rt
+    }
+
+    /// True when two engines share one weight set (replicas of each other).
+    pub fn shares_weights_with(&self, other: &Engine) -> bool {
+        Arc::ptr_eq(&self.weights, &other.weights)
+    }
+
     /// Change the FFN execution mode (re-sparsifying weights as needed).
     ///
     /// In `NativeNmg` mode every layer's W1 is pruned into n:m:g — the
     /// engine thereafter *serves the pruned network*, exactly like loading
-    /// a sparse checkpoint in STen.
+    /// a sparse checkpoint in STen. When the weight set is shared with
+    /// replicas, this engine gets a private copy (copy-on-write); replicas
+    /// are unaffected.
     pub fn set_ffn_mode(&mut self, mode: FfnMode) {
         self.ffn_mode = mode;
-        self.nmg_w1t.clear();
+        let n_layers = self.dims.n_layers;
+        let w = Arc::make_mut(&mut self.weights);
+        w.nmg_w1t.clear();
         if let FfnMode::NativeNmg { n, m, g } = mode {
-            for l in 0..self.dims.n_layers {
-                let w1 = &self.params[&format!("layer{l}.w1")];
-                let w1t = w1.transpose2(); // (F, D)
+            for l in 0..n_layers {
+                let key = format!("layer{l}.w1");
+                let w1t = w.params[&key].transpose2(); // (F, D)
                 let nmg = NmgTensor::from_dense(&w1t, n, m, g);
                 // Keep the served dense weights consistent with the pruned
                 // sparse ones (weights are pruned, not approximated).
-                self.params
-                    .insert(format!("layer{l}.w1"), nmg.to_dense().transpose2());
-                self.nmg_w1t.push(nmg);
+                w.params.insert(key, nmg.to_dense().transpose2());
+                w.nmg_w1t.push(nmg);
             }
         }
     }
 
     /// Borrow a parameter.
     pub fn param(&self, name: &str) -> &DenseTensor {
-        &self.params[name]
+        &self.weights.params[name]
     }
 
     /// Accumulated timing (runtime / native / framework).
@@ -145,14 +204,14 @@ impl Engine {
         &self.times
     }
 
-    /// Reset timing.
+    /// Reset timing (including the shared runtime's buckets).
     pub fn reset_timing(&mut self) {
         self.times = TimeBreakdown::new();
         self.rt.reset_timing();
     }
 
     fn p(&self, name: &str) -> Value {
-        Value::F32(self.params[name].clone())
+        Value::F32(self.weights.params[name].clone())
     }
 
     /// Full forward via the single whole-encoder artifact (baseline).
@@ -252,22 +311,29 @@ impl Engine {
         let rows = b * s;
         let x2 = x.reshape(&[rows, d]);
         let pre = |n: &str| format!("layer{l}.{n}");
-        let ln_g = &self.params[&pre("ln2_g")];
-        let ln_b = &self.params[&pre("ln2_b")];
+        let params = &self.weights.params;
+        let ln_g = &params[&pre("ln2_g")];
+        let ln_b = &params[&pre("ln2_b")];
         let y = elementwise::layernorm_rows(&x2, ln_g.data(), ln_b.data());
 
-        let h = match self.ffn_mode {
-            FfnMode::NativeNmg { .. } => {
+        // Fall back to the dense GEMM when no converted weights exist (the
+        // mode was switched by field mutation rather than set_ffn_mode).
+        let nmg_w1t = match self.ffn_mode {
+            FfnMode::NativeNmg { .. } => self.weights.nmg_w1t.get(l),
+            _ => None,
+        };
+        let h = match nmg_w1t {
+            Some(w1t) => {
                 // (F, D) nmg @ (D, rows) -> (F, rows) -> transpose.
                 let yt = y.transpose2();
-                nmg_gemm::spmm(&self.nmg_w1t[l], &yt).transpose2()
+                nmg_gemm::spmm(w1t, &yt).transpose2()
             }
-            _ => dense_gemm::matmul(&y, &self.params[&pre("w1")]),
+            None => dense_gemm::matmul(&y, &params[&pre("w1")]),
         };
-        let h = elementwise::bias_add(&h, self.params[&pre("b1")].data());
+        let h = elementwise::bias_add(&h, params[&pre("b1")].data());
         let h = elementwise::gelu(&h);
-        let out = dense_gemm::matmul(&h, &self.params[&pre("w2")]);
-        let out = elementwise::bias_add(&out, self.params[&pre("b2")].data());
+        let out = dense_gemm::matmul(&h, &params[&pre("w2")]);
+        let out = elementwise::bias_add(&out, params[&pre("b2")].data());
         Ok(x2.zip(&out, |a, c| a + c).reshape(&[b, s, d]))
     }
 

@@ -1,0 +1,165 @@
+//! Serving metrics: latency percentiles, queue-depth gauges and
+//! batch-deduplicated throughput, shared by the synchronous drain-loop
+//! server and the concurrent server.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use super::serve::RequestResult;
+
+/// Latency distribution over completed requests, in seconds.
+#[derive(Debug, Clone, Copy)]
+pub struct LatencySummary {
+    /// Number of requests summarized.
+    pub count: usize,
+    /// Median end-to-end latency.
+    pub p50: f64,
+    /// 95th percentile.
+    pub p95: f64,
+    /// 99th percentile.
+    pub p99: f64,
+    /// Mean.
+    pub mean: f64,
+    /// Worst observed.
+    pub max: f64,
+}
+
+/// Nearest-rank percentile of an ascending-sorted slice; `q` in [0, 100].
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty slice");
+    let rank = (q / 100.0 * sorted.len() as f64).ceil() as usize;
+    sorted[rank.clamp(1, sorted.len()) - 1]
+}
+
+/// Summarize end-to-end latencies (`total_s`) of completed requests.
+pub fn summarize(results: &[RequestResult]) -> Option<LatencySummary> {
+    if results.is_empty() {
+        return None;
+    }
+    let mut v: Vec<f64> = results.iter().map(|r| r.total_s).collect();
+    v.sort_by(|a, b| a.total_cmp(b));
+    Some(LatencySummary {
+        count: v.len(),
+        p50: percentile(&v, 50.0),
+        p95: percentile(&v, 95.0),
+        p99: percentile(&v, 99.0),
+        mean: v.iter().sum::<f64>() / v.len() as f64,
+        max: *v.last().unwrap(),
+    })
+}
+
+/// Requests per second of compute: each batch's `compute_s` is counted once
+/// (keyed by `batch_id` — batches with bit-identical compute times used to
+/// be merged, undercounting total compute).
+pub fn compute_throughput(results: &[RequestResult]) -> Option<f64> {
+    if results.is_empty() {
+        return None;
+    }
+    let mut per_batch: HashMap<u64, f64> = HashMap::new();
+    for r in results {
+        per_batch.insert(r.batch_id, r.compute_s);
+    }
+    let total: f64 = per_batch.values().sum();
+    if total <= 0.0 {
+        return None;
+    }
+    Some(results.len() as f64 / total)
+}
+
+/// A queue-depth gauge with a high-water mark.
+#[derive(Debug, Default)]
+pub struct QueueGauge {
+    depth: AtomicUsize,
+    high_water: AtomicUsize,
+}
+
+impl QueueGauge {
+    /// New gauge at depth 0.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A request entered the queue.
+    pub fn enter(&self) {
+        let d = self.depth.fetch_add(1, Ordering::SeqCst) + 1;
+        self.high_water.fetch_max(d, Ordering::SeqCst);
+    }
+
+    /// `n` requests left the queue (were placed into a batch).
+    pub fn exit(&self, n: usize) {
+        self.depth.fetch_sub(n, Ordering::SeqCst);
+    }
+
+    /// Current depth.
+    pub fn depth(&self) -> usize {
+        self.depth.load(Ordering::SeqCst)
+    }
+
+    /// Deepest the queue has been.
+    pub fn high_water(&self) -> usize {
+        self.high_water.load(Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn result(total_s: f64, batch_id: u64, compute_s: f64) -> RequestResult {
+        RequestResult {
+            id: 0,
+            batch_id,
+            queue_s: 0.0,
+            compute_s,
+            total_s,
+            batch_size: 1,
+        }
+    }
+
+    #[test]
+    fn percentiles_are_monotone_and_exact_on_small_sets() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 50.0), 50.0);
+        assert_eq!(percentile(&v, 95.0), 95.0);
+        assert_eq!(percentile(&v, 99.0), 99.0);
+        assert_eq!(percentile(&v, 100.0), 100.0);
+        let one = [42.0];
+        for q in [50.0, 95.0, 99.0] {
+            assert_eq!(percentile(&one, q), 42.0);
+        }
+    }
+
+    #[test]
+    fn summary_orders_p50_p95_p99() {
+        let results: Vec<RequestResult> =
+            (0..57).map(|i| result(i as f64 * 0.01, i, 0.001)).collect();
+        let s = summarize(&results).unwrap();
+        assert_eq!(s.count, 57);
+        assert!(s.p50 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max);
+        assert!(summarize(&[]).is_none());
+    }
+
+    #[test]
+    fn throughput_counts_identical_compute_times_per_batch() {
+        // Two distinct batches with bit-identical compute_s: the old
+        // to_bits() dedup merged them; batch_id keying must not.
+        let results = vec![
+            result(0.1, 1, 0.5),
+            result(0.1, 1, 0.5),
+            result(0.1, 2, 0.5),
+        ];
+        let t = compute_throughput(&results).unwrap();
+        assert!((t - 3.0).abs() < 1e-9, "3 requests / 1.0s compute, got {t}");
+    }
+
+    #[test]
+    fn gauge_tracks_high_water() {
+        let g = QueueGauge::new();
+        g.enter();
+        g.enter();
+        g.enter();
+        g.exit(2);
+        assert_eq!(g.depth(), 1);
+        assert_eq!(g.high_water(), 3);
+    }
+}

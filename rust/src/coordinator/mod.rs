@@ -1,17 +1,53 @@
-//! The Layer-3 inference coordinator.
+//! The Layer-3 inference coordinator: engines, batching, concurrent serving.
 //!
 //! Composes the AOT-lowered encoder blocks (attention, embedding, LM head —
-//! executed through PJRT) with the FFN executed either as another artifact
-//! (dense baseline) or through the native n:m:g sparse kernels (the STen
-//! fast path). This is the end-to-end system of Fig. 11: a general framework
-//! runtime whose sparse operators are dispatched to specialized kernels,
-//! with the remaining graph falling back to the dense executor.
+//! executed through the artifact runtime) with the FFN executed either as
+//! another artifact (dense baseline) or through the native n:m:g sparse
+//! kernels (the STen fast path). This is the end-to-end system of Fig. 11:
+//! a general framework runtime whose sparse operators are dispatched to
+//! specialized kernels, with the remaining graph falling back to the dense
+//! executor.
+//!
+//! # Concurrency model
+//!
+//! Two serving modes share one request/result vocabulary ([`serve::Request`],
+//! [`RequestResult`]):
+//!
+//! * [`BatchServer`] — the single-threaded drain-loop baseline: callers
+//!   enqueue, then `run_until_drained` forms and executes batches inline.
+//! * [`ConcurrentServer`] — the production shape: a bounded submission
+//!   queue (blocking `submit` past `queue_cap` — backpressure, never
+//!   unbounded memory), a dedicated batcher thread, and N worker threads
+//!   each owning an [`Engine`] replica.
+//!
+//! **Replica sharing.** Replicas come from [`Engine::replicate`]: weight
+//! tensors (and the pre-converted n:m:g FFN weights) live behind one `Arc`,
+//! so sparsification happens once per server regardless of replica count,
+//! and replicas stay immutable while serving. Per-replica timing state is
+//! private; the `Arc`-shared runtime aggregates artifact-level buckets.
+//!
+//! **Deadline semantics.** Batch formation honors `max_wait`: a full batch
+//! (the artifact batch size) dispatches immediately; otherwise the batch is
+//! dispatched the moment its *oldest* request has waited `max_wait`, padded
+//! by repeating the last sequence. Under light load no request waits in
+//! queue longer than `max_wait` before its batch is formed; under overload
+//! the bounded queue pushes the wait back onto submitters.
+//!
+//! **Metrics.** Every completion carries its real `batch_id`; [`metrics`]
+//! derives p50/p95/p99 latency summaries, batch-deduplicated compute
+//! throughput and queue-depth gauges with high-water marks.
 //!
 //! * [`engine`] — the per-model engine with latency breakdown.
-//! * [`serve`] — request queue + dynamic batcher over the engine.
+//! * [`serve`] — request vocabulary + the synchronous dynamic batcher.
+//! * [`concurrent`] — the multi-replica deadline-batching front-end.
+//! * [`metrics`] — latency percentiles, throughput, queue gauges.
 
+pub mod concurrent;
 pub mod engine;
+pub mod metrics;
 pub mod serve;
 
+pub use concurrent::{ConcurrentServer, ServeConfig, ServeReport};
 pub use engine::{Engine, EncoderDims, FfnMode};
+pub use metrics::LatencySummary;
 pub use serve::{BatchServer, RequestResult};

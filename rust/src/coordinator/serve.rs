@@ -1,9 +1,16 @@
-//! Request queue + dynamic batcher over the engine.
+//! Request queue + synchronous dynamic batcher over one engine.
 //!
 //! Requests (one sequence each) arrive on a queue; the batcher groups up to
-//! the artifact batch size within a timeout, pads the batch, runs one engine
-//! forward and reports per-request latency — the serving shape of the
-//! Fig. 11 end-to-end evaluation.
+//! the artifact batch size within the `max_wait` timeout, pads the batch,
+//! runs one engine forward and reports per-request latency — the serving
+//! shape of the Fig. 11 end-to-end evaluation.
+//!
+//! Deadline semantics (honored since the `max_wait` regression fix): a
+//! *full* batch dispatches immediately; an underfull batch dispatches as
+//! soon as the oldest queued request has waited `max_wait`, padded with
+//! copies of the last sequence. [`BatchServer`] is the single-threaded
+//! drain-loop baseline; the concurrent, multi-replica front-end lives in
+//! [`super::concurrent`].
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -12,7 +19,8 @@ use anyhow::Result;
 
 use crate::tensor::DenseTensor;
 
-use super::engine::Engine;
+use super::engine::{EncoderDims, Engine};
+use super::metrics;
 
 /// One served request: a token sequence (padded/truncated to the model's
 /// sequence length).
@@ -31,24 +39,55 @@ pub struct Request {
 pub struct RequestResult {
     /// Request id.
     pub id: u64,
-    /// Queueing delay (arrival -> batch start).
+    /// Id of the batch this request rode in (unique per server).
+    pub batch_id: u64,
+    /// Queueing delay (arrival -> batch formation).
     pub queue_s: f64,
     /// Model execution time of the batch this request rode in.
     pub compute_s: f64,
     /// End-to-end latency.
     pub total_s: f64,
-    /// How many requests shared the batch.
+    /// How many real requests shared the batch (excluding padding).
     pub batch_size: usize,
 }
 
+/// Clamp tokens to the vocabulary and pad/truncate to the model sequence
+/// length.
+pub(super) fn canonical_tokens(dims: &EncoderDims, tokens: &[i32]) -> Vec<i32> {
+    let mut t: Vec<i32> = tokens
+        .iter()
+        .map(|&x| x.rem_euclid(dims.vocab as i32))
+        .take(dims.seq)
+        .collect();
+    t.resize(dims.seq, 0);
+    t
+}
+
+/// Concatenate the batch's sequences and pad to the fixed artifact batch by
+/// repeating the last sequence.
+pub(super) fn pad_batch_tokens(dims: &EncoderDims, batch: &[Request]) -> Vec<i32> {
+    assert!(!batch.is_empty() && batch.len() <= dims.batch);
+    let mut tokens = Vec::with_capacity(dims.batch * dims.seq);
+    for r in batch {
+        tokens.extend_from_slice(&r.tokens);
+    }
+    let last = &batch.last().unwrap().tokens;
+    for _ in batch.len()..dims.batch {
+        tokens.extend_from_slice(last);
+    }
+    tokens
+}
+
 /// Synchronous dynamic batcher: callers enqueue, `run_until_drained` forms
-/// batches and executes them in arrival order.
+/// batches and executes them in arrival order. This is the single-threaded
+/// baseline the concurrent server is benchmarked against.
 pub struct BatchServer {
     engine: Engine,
     queue: VecDeque<Request>,
     /// Max time a request may wait for batch-mates.
     pub max_wait: Duration,
     next_id: u64,
+    next_batch_id: u64,
     /// Completed request records.
     pub completed: Vec<RequestResult>,
 }
@@ -56,7 +95,14 @@ pub struct BatchServer {
 impl BatchServer {
     /// Server over an engine.
     pub fn new(engine: Engine, max_wait: Duration) -> Self {
-        BatchServer { engine, queue: VecDeque::new(), max_wait, next_id: 0, completed: Vec::new() }
+        BatchServer {
+            engine,
+            queue: VecDeque::new(),
+            max_wait,
+            next_id: 0,
+            next_batch_id: 0,
+            completed: Vec::new(),
+        }
     }
 
     /// The wrapped engine.
@@ -67,13 +113,7 @@ impl BatchServer {
     /// Enqueue a request; tokens are clamped to vocab and padded/truncated
     /// to the model sequence length. Returns the request id.
     pub fn submit(&mut self, tokens: &[i32]) -> u64 {
-        let dims = &self.engine.dims;
-        let mut t: Vec<i32> = tokens
-            .iter()
-            .map(|&x| x.rem_euclid(dims.vocab as i32))
-            .take(dims.seq)
-            .collect();
-        t.resize(dims.seq, 0);
+        let t = canonical_tokens(&self.engine.dims, tokens);
         let id = self.next_id;
         self.next_id += 1;
         self.queue.push_back(Request { id, tokens: t, arrived: Instant::now() });
@@ -88,34 +128,39 @@ impl BatchServer {
         Ok(())
     }
 
-    /// Execute a single batch (up to the artifact batch size; padded with
-    /// copies of the last request if underfull).
+    /// Execute a single batch honoring the `max_wait` contract: a full
+    /// batch (artifact batch size) dispatches immediately; an underfull
+    /// batch waits until the oldest request has aged `max_wait` (no
+    /// batch-mates can arrive while this single-threaded server runs, but
+    /// the deadline is the documented dispatch point and the latency
+    /// numbers must reflect it), then dispatches padded.
     pub fn run_one_batch(&mut self) -> Result<Option<DenseTensor>> {
         let dims = self.engine.dims.clone();
         if self.queue.is_empty() {
             return Ok(None);
         }
+        if self.queue.len() < dims.batch {
+            let deadline = self.queue.front().unwrap().arrived + self.max_wait;
+            let now = Instant::now();
+            if now < deadline {
+                std::thread::sleep(deadline - now);
+            }
+        }
         let take = self.queue.len().min(dims.batch);
-        let batch: Vec<Request> = (0..take).map(|_| self.queue.pop_front().unwrap()).collect();
-        let start = Instant::now();
+        let batch: Vec<Request> = self.queue.drain(..take).collect();
+        let batch_id = self.next_batch_id;
+        self.next_batch_id += 1;
+        let formed = Instant::now();
 
-        // Pad to the fixed artifact batch by repeating the last sequence.
-        let mut tokens = Vec::with_capacity(dims.batch * dims.seq);
-        for r in &batch {
-            tokens.extend_from_slice(&r.tokens);
-        }
-        let last = batch.last().unwrap().tokens.clone();
-        for _ in take..dims.batch {
-            tokens.extend_from_slice(&last);
-        }
-
+        let tokens = pad_batch_tokens(&dims, &batch);
         let logits = self.engine.forward(&tokens)?;
-        let compute_s = start.elapsed().as_secs_f64();
+        let compute_s = formed.elapsed().as_secs_f64();
         let done = Instant::now();
         for r in &batch {
             self.completed.push(RequestResult {
                 id: r.id,
-                queue_s: (start - r.arrived).as_secs_f64(),
+                batch_id,
+                queue_s: (formed - r.arrived).as_secs_f64(),
                 compute_s,
                 total_s: (done - r.arrived).as_secs_f64(),
                 batch_size: take,
@@ -126,29 +171,59 @@ impl BatchServer {
 
     /// Median end-to-end latency over completed requests.
     pub fn median_latency(&self) -> Option<f64> {
-        if self.completed.is_empty() {
-            return None;
-        }
-        let mut v: Vec<f64> = self.completed.iter().map(|r| r.total_s).collect();
-        v.sort_by(|a, b| a.total_cmp(b));
-        Some(v[v.len() / 2])
+        metrics::summarize(&self.completed).map(|s| s.p50)
     }
 
-    /// Requests per second over completed requests (compute time only).
+    /// Latency percentiles over completed requests.
+    pub fn latency_summary(&self) -> Option<metrics::LatencySummary> {
+        metrics::summarize(&self.completed)
+    }
+
+    /// Requests per second over completed requests (compute time only),
+    /// counting each batch's compute once (keyed by `batch_id`).
     pub fn throughput(&self) -> Option<f64> {
-        if self.completed.is_empty() {
-            return None;
-        }
-        // Each batch's compute time is shared by its riders.
-        let mut total_compute = 0.0;
-        let mut seen = std::collections::HashSet::new();
-        for r in &self.completed {
-            // compute_s is identical for batch-mates; count each batch once
-            // (keyed by bit pattern).
-            if seen.insert(r.compute_s.to_bits()) {
-                total_compute += r.compute_s;
-            }
-        }
-        Some(self.completed.len() as f64 / total_compute)
+        metrics::compute_throughput(&self.completed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dims() -> EncoderDims {
+        EncoderDims { vocab: 100, seq: 4, batch: 3, d_model: 8, d_ff: 16, n_layers: 1 }
+    }
+
+    fn req(id: u64, tokens: Vec<i32>) -> Request {
+        Request { id, tokens, arrived: Instant::now() }
+    }
+
+    #[test]
+    fn canonical_tokens_clamps_pads_and_truncates() {
+        let d = dims();
+        assert_eq!(canonical_tokens(&d, &[-5, 999, 1]), vec![95, 99, 1, 0]);
+        assert_eq!(canonical_tokens(&d, &[1, 2, 3, 4, 5, 6]), vec![1, 2, 3, 4]);
+        assert_eq!(canonical_tokens(&d, &[]), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn padding_repeats_the_last_sequence() {
+        let d = dims();
+        let batch = vec![req(0, vec![1, 2, 3, 4]), req(1, vec![5, 6, 7, 8])];
+        let tokens = pad_batch_tokens(&d, &batch);
+        assert_eq!(tokens.len(), d.batch * d.seq);
+        assert_eq!(&tokens[..4], &[1, 2, 3, 4]);
+        assert_eq!(&tokens[4..8], &[5, 6, 7, 8]);
+        // The pad slot repeats the last real sequence.
+        assert_eq!(&tokens[8..12], &[5, 6, 7, 8]);
+    }
+
+    #[test]
+    fn full_batch_needs_no_padding() {
+        let d = dims();
+        let batch: Vec<Request> =
+            (0..3).map(|i| req(i, vec![i as i32; 4])).collect();
+        let tokens = pad_batch_tokens(&d, &batch);
+        assert_eq!(&tokens[8..12], &[2, 2, 2, 2]);
     }
 }

@@ -1,0 +1,163 @@
+//! Ring allreduce over in-process worker buffers.
+//!
+//! The classic two-phase algorithm: w-1 reduce-scatter steps (each worker
+//! accumulates its neighbor's rotating segment) followed by w-1 allgather
+//! steps (the fully-reduced segments rotate back around), emulated over
+//! in-process buffers. Within a step, every segment is "in flight" between
+//! exactly one sender/receiver pair, so applying the sends sequentially is
+//! equivalent to the parallel execution.
+
+/// A ring of `workers` in-process replicas.
+#[derive(Debug, Clone, Copy)]
+pub struct RingAllreduce {
+    workers: usize,
+}
+
+impl RingAllreduce {
+    /// Ring over `workers` replicas (at least 1).
+    pub fn new(workers: usize) -> Self {
+        assert!(workers >= 1, "ring needs at least one worker");
+        RingAllreduce { workers }
+    }
+
+    /// Number of workers in the ring.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Segment bounds `[lo, hi)` of segment `s` for buffers of length `n`.
+    fn segment(&self, n: usize, s: usize) -> (usize, usize) {
+        let w = self.workers;
+        let q = n / w;
+        let r = n % w;
+        let lo = s * q + s.min(r);
+        let len = q + usize::from(s < r);
+        (lo, lo + len)
+    }
+
+    /// In-place mean-allreduce: every buffer ends up holding the
+    /// element-wise mean across workers. All buffers must share one length
+    /// and their count must match the ring size.
+    pub fn allreduce_mean(&self, bufs: &mut [Vec<f32>]) {
+        let w = self.workers;
+        assert_eq!(bufs.len(), w, "buffer count {} != ring size {w}", bufs.len());
+        if w == 1 {
+            return;
+        }
+        let n = bufs[0].len();
+        assert!(bufs.iter().all(|b| b.len() == n), "ragged allreduce buffers");
+
+        // Reduce-scatter: after step t, the accumulating copy of segment s
+        // sits at worker (s + t + 1) % w; after w-1 steps worker i holds
+        // the full sum of segment (i + 1) % w.
+        for t in 0..w - 1 {
+            for i in 0..w {
+                let s = (i + w - t) % w;
+                let (lo, hi) = self.segment(n, s);
+                let dst = (i + 1) % w;
+                // Segment s is only in flight between (i, dst) this step.
+                let (src_buf, dst_buf) = two_mut(bufs, i, dst);
+                for j in lo..hi {
+                    dst_buf[j] += src_buf[j];
+                }
+            }
+        }
+        // Scale the fully-reduced segments to means before sharing them.
+        for s in 0..w {
+            let owner = (s + w - 1) % w;
+            let (lo, hi) = self.segment(n, s);
+            for v in &mut bufs[owner][lo..hi] {
+                *v /= w as f32;
+            }
+        }
+        // Allgather: worker i starts owning segment (i + 1) % w; the
+        // reduced segments rotate around the ring, overwriting stale copies.
+        for t in 0..w - 1 {
+            for i in 0..w {
+                let s = (i + 1 + w - t) % w;
+                let (lo, hi) = self.segment(n, s);
+                let dst = (i + 1) % w;
+                let (src_buf, dst_buf) = two_mut(bufs, i, dst);
+                dst_buf[lo..hi].copy_from_slice(&src_buf[lo..hi]);
+            }
+        }
+    }
+}
+
+/// Disjoint mutable borrows of two distinct slots.
+fn two_mut<T>(v: &mut [T], a: usize, b: usize) -> (&T, &mut T) {
+    assert_ne!(a, b);
+    if a < b {
+        let (left, right) = v.split_at_mut(b);
+        (&left[a], &mut right[0])
+    } else {
+        let (left, right) = v.split_at_mut(a);
+        (&right[0], &mut left[b])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn naive_mean(bufs: &[Vec<f32>]) -> Vec<f32> {
+        let n = bufs[0].len();
+        let mut out = vec![0f32; n];
+        for b in bufs {
+            for (o, v) in out.iter_mut().zip(b) {
+                *o += v;
+            }
+        }
+        for o in &mut out {
+            *o /= bufs.len() as f32;
+        }
+        out
+    }
+
+    fn check(workers: usize, n: usize) {
+        let mut rng = Pcg64::seeded((workers * 1000 + n) as u64);
+        let mut bufs: Vec<Vec<f32>> =
+            (0..workers).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        let want = naive_mean(&bufs);
+        RingAllreduce::new(workers).allreduce_mean(&mut bufs);
+        for (w, b) in bufs.iter().enumerate() {
+            for (j, (&got, &expect)) in b.iter().zip(&want).enumerate() {
+                assert!(
+                    (got - expect).abs() < 1e-4 * (1.0 + expect.abs()),
+                    "worker {w} elem {j}: {got} vs {expect}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn matches_naive_mean_across_shapes() {
+        for workers in [1, 2, 3, 4, 8] {
+            for n in [1, 5, 16, 97, 1024] {
+                check(workers, n);
+            }
+        }
+    }
+
+    #[test]
+    fn short_buffers_with_empty_segments() {
+        // n < workers leaves some segments empty; must still be exact.
+        check(8, 3);
+        check(5, 1);
+    }
+
+    #[test]
+    fn single_worker_is_identity() {
+        let mut bufs = vec![vec![1.0, -2.0, 3.0]];
+        RingAllreduce::new(1).allreduce_mean(&mut bufs);
+        assert_eq!(bufs[0], vec![1.0, -2.0, 3.0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "buffer count")]
+    fn wrong_buffer_count_panics() {
+        let mut bufs = vec![vec![0.0; 4]; 3];
+        RingAllreduce::new(2).allreduce_mean(&mut bufs);
+    }
+}

@@ -1,0 +1,238 @@
+//! Distributed data-parallel gradient synchronization with sparse handling.
+//!
+//! Reproduces STen's §4.6 design space for synchronizing *sparse* gradients
+//! across data-parallel workers:
+//!
+//! * [`GradSyncMode::Dense`] — the baseline: gradients travel dense.
+//! * [`GradSyncMode::SparseResparsify`] — the conservative semantics:
+//!   densify each worker's masked gradient, allreduce, re-apply each
+//!   worker's mask to the mean (sum-then-resparsify, the paper's default).
+//! * [`GradSyncMode::SparseFixedPattern`] — the optimization when every
+//!   worker shares one mask (standard DDP): the nonzero *values* are
+//!   reduced directly, skipping densification and re-sparsification.
+//!
+//! The per-phase time split ([`GradSyncStats`]) is what the §6.1
+//! weak-scaling experiment reports: sparse handling must stay a small
+//! fraction of allreduce time.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::formats::{AnyTensor, MaskedTensor};
+use crate::tensor::DenseTensor;
+
+use super::collective::RingAllreduce;
+
+/// How gradients are synchronized across workers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GradSyncMode {
+    /// Densify everything; plain dense allreduce.
+    Dense,
+    /// Densify, allreduce, re-apply each worker's mask to the mean.
+    SparseResparsify,
+    /// Allreduce the masked values directly (requires one shared pattern).
+    SparseFixedPattern,
+}
+
+/// Seconds spent in each phase of one synchronization.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct GradSyncStats {
+    /// Sparse -> dense conversion.
+    pub to_dense_s: f64,
+    /// The allreduce itself.
+    pub allreduce_s: f64,
+    /// Re-sparsification of the reduced gradient.
+    pub resparsify_s: f64,
+}
+
+/// Synchronize one parameter's per-worker gradients; returns the synced
+/// gradient for every worker (all numerically identical) plus the phase
+/// time split. `per_worker.len()` must match the ring size and all
+/// gradients must share one shape.
+pub fn sync_gradients(
+    ring: &RingAllreduce,
+    per_worker: &[AnyTensor],
+    mode: GradSyncMode,
+) -> Result<(Vec<AnyTensor>, GradSyncStats)> {
+    if per_worker.is_empty() {
+        bail!("sync_gradients needs at least one worker gradient");
+    }
+    if per_worker.len() != ring.workers() {
+        bail!(
+            "got {} gradients for a ring of {} workers",
+            per_worker.len(),
+            ring.workers()
+        );
+    }
+    let shape = per_worker[0].shape().to_vec();
+    for g in per_worker {
+        if g.shape() != shape.as_slice() {
+            bail!("ragged gradient shapes: {:?} vs {:?}", g.shape(), shape);
+        }
+    }
+    let mut stats = GradSyncStats::default();
+    let all_masked = per_worker.iter().all(|g| matches!(g, AnyTensor::Masked(_)));
+
+    if mode == GradSyncMode::SparseFixedPattern && all_masked {
+        // Fixed shared pattern: reduce the pre-masked value arrays
+        // directly — no densify, no resparsify. (With one shared mask the
+        // mean of masked values *is* the masked mean.)
+        let t = Instant::now();
+        let mut bufs: Vec<Vec<f32>> = per_worker
+            .iter()
+            .map(|g| match g {
+                AnyTensor::Masked(m) => m.values().data().to_vec(),
+                _ => unreachable!("all_masked checked above"),
+            })
+            .collect();
+        ring.allreduce_mean(&mut bufs);
+        stats.allreduce_s = t.elapsed().as_secs_f64();
+        let synced = per_worker
+            .iter()
+            .zip(bufs)
+            .map(|(g, buf)| match g {
+                AnyTensor::Masked(m) => AnyTensor::Masked(
+                    m.with_values(&DenseTensor::from_vec(&shape, buf)),
+                ),
+                _ => unreachable!(),
+            })
+            .collect();
+        return Ok((synced, stats));
+    }
+
+    // Conservative path: densify, allreduce, optionally resparsify.
+    let t = Instant::now();
+    let mut bufs: Vec<Vec<f32>> =
+        per_worker.iter().map(|g| g.to_dense().into_vec()).collect();
+    stats.to_dense_s = t.elapsed().as_secs_f64();
+
+    let t = Instant::now();
+    ring.allreduce_mean(&mut bufs);
+    stats.allreduce_s = t.elapsed().as_secs_f64();
+
+    let t = Instant::now();
+    let resparsify = mode != GradSyncMode::Dense && all_masked;
+    let synced: Vec<AnyTensor> = per_worker
+        .iter()
+        .zip(bufs)
+        .map(|(g, buf)| {
+            let mean = DenseTensor::from_vec(&shape, buf);
+            match (resparsify, g) {
+                (true, AnyTensor::Masked(m)) => AnyTensor::Masked(m.with_values(&mean)),
+                _ => AnyTensor::Dense(mean),
+            }
+        })
+        .collect();
+    if resparsify {
+        stats.resparsify_s = t.elapsed().as_secs_f64();
+    }
+    Ok((synced, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn grads(workers: usize, n: usize, seed: u64) -> Vec<DenseTensor> {
+        let mut rng = Pcg64::seeded(seed);
+        (0..workers).map(|_| DenseTensor::randn(&[n], &mut rng)).collect()
+    }
+
+    fn mean_of(gs: &[DenseTensor]) -> DenseTensor {
+        let mut acc = DenseTensor::zeros(gs[0].shape());
+        for g in gs {
+            acc.axpy(1.0, g);
+        }
+        acc.scale(1.0 / gs.len() as f32);
+        acc
+    }
+
+    #[test]
+    fn dense_sync_averages_and_matches_all_replicas() {
+        let ring = RingAllreduce::new(4);
+        let gs = grads(4, 33, 1);
+        let per: Vec<AnyTensor> = gs.iter().map(|g| AnyTensor::Dense(g.clone())).collect();
+        let (synced, stats) = sync_gradients(&ring, &per, GradSyncMode::Dense).unwrap();
+        let want = mean_of(&gs);
+        assert_eq!(synced.len(), 4);
+        for s in &synced {
+            assert!(s.to_dense().allclose(&want, 1e-5, 1e-5));
+        }
+        assert!(stats.allreduce_s >= 0.0 && stats.resparsify_s == 0.0);
+    }
+
+    #[test]
+    fn resparsify_keeps_each_workers_mask() {
+        let ring = RingAllreduce::new(3);
+        let gs = grads(3, 24, 2);
+        let mut rng = Pcg64::seeded(3);
+        let mask = DenseTensor::from_vec(
+            &[24],
+            (0..24).map(|_| if rng.next_f32() < 0.5 { 1.0 } else { 0.0 }).collect(),
+        );
+        let per: Vec<AnyTensor> = gs
+            .iter()
+            .map(|g| AnyTensor::Masked(MaskedTensor::new(g.clone(), mask.clone())))
+            .collect();
+        let (synced, _) = sync_gradients(&ring, &per, GradSyncMode::SparseResparsify).unwrap();
+        // The mean of *masked* gradients, re-masked.
+        let masked: Vec<DenseTensor> = gs.iter().map(|g| g.zip(&mask, |v, m| v * m)).collect();
+        let want = mean_of(&masked).zip(&mask, |v, m| v * m);
+        for s in &synced {
+            assert!(matches!(s, AnyTensor::Masked(_)));
+            assert!(s.to_dense().allclose(&want, 1e-5, 1e-5));
+        }
+    }
+
+    #[test]
+    fn fixed_pattern_matches_resparsify_under_shared_mask() {
+        let ring = RingAllreduce::new(4);
+        let gs = grads(4, 40, 4);
+        let mask = DenseTensor::from_vec(
+            &[40],
+            (0..40).map(|i| if i % 4 < 2 { 1.0 } else { 0.0 }).collect(),
+        );
+        let per: Vec<AnyTensor> = gs
+            .iter()
+            .map(|g| AnyTensor::Masked(MaskedTensor::new(g.clone(), mask.clone())))
+            .collect();
+        let (a, sa) = sync_gradients(&ring, &per, GradSyncMode::SparseResparsify).unwrap();
+        let (b, sb) = sync_gradients(&ring, &per, GradSyncMode::SparseFixedPattern).unwrap();
+        for (x, y) in a.iter().zip(&b) {
+            assert!(x.to_dense().allclose(&y.to_dense(), 1e-5, 1e-5));
+        }
+        // The fixed-pattern path skips densification entirely.
+        assert!(sa.to_dense_s > 0.0);
+        assert_eq!(sb.to_dense_s, 0.0);
+        assert_eq!(sb.resparsify_s, 0.0);
+    }
+
+    #[test]
+    fn mixed_inputs_fall_back_to_dense() {
+        let ring = RingAllreduce::new(2);
+        let gs = grads(2, 8, 5);
+        let mask = DenseTensor::ones(&[8]);
+        let per = vec![
+            AnyTensor::Masked(MaskedTensor::new(gs[0].clone(), mask)),
+            AnyTensor::Dense(gs[1].clone()),
+        ];
+        let (synced, _) = sync_gradients(&ring, &per, GradSyncMode::SparseResparsify).unwrap();
+        assert!(synced.iter().all(|s| matches!(s, AnyTensor::Dense(_))));
+    }
+
+    #[test]
+    fn shape_and_count_validation() {
+        let ring = RingAllreduce::new(2);
+        let gs = grads(2, 8, 6);
+        let one = vec![AnyTensor::Dense(gs[0].clone())];
+        assert!(sync_gradients(&ring, &one, GradSyncMode::Dense).is_err());
+        let ragged = vec![
+            AnyTensor::Dense(gs[0].clone()),
+            AnyTensor::Dense(DenseTensor::zeros(&[9])),
+        ];
+        assert!(sync_gradients(&ring, &ragged, GradSyncMode::Dense).is_err());
+        assert!(sync_gradients(&ring, &[], GradSyncMode::Dense).is_err());
+    }
+}

@@ -202,6 +202,27 @@ impl NmgTensor {
         t
     }
 
+    /// Rebuild from the flat artifact layout: `val` shaped (S, CH, C, g, n)
+    /// and `idx` shaped (S, CH, C, g), as produced by [`Self::val_flat`] /
+    /// [`Self::idx_flat`] and consumed by the n:m:g GEMM artifacts.
+    pub fn from_flat(
+        shape: [usize; 2],
+        n: usize,
+        m: usize,
+        g: usize,
+        val: Vec<f32>,
+        idx: Vec<u32>,
+    ) -> Self {
+        assert_eq!(shape[0] % m, 0, "rows {} not divisible by m={m}", shape[0]);
+        let pats = patterns(m, n);
+        let c = pats.len();
+        let slabs = shape[0] / m;
+        let chunks = shape[1].div_ceil(c * g);
+        assert_eq!(idx.len(), slabs * chunks * c * g, "idx length mismatch");
+        assert_eq!(val.len(), idx.len() * n, "val length mismatch");
+        NmgTensor { shape, n, m, g, c, chunks, slabs, val, idx, pats }
+    }
+
     fn template(d: &DenseTensor, n: usize, m: usize, g: usize) -> Self {
         let (rows, k) = (d.rows(), d.cols());
         assert_eq!(rows % m, 0, "rows {rows} not divisible by m={m}");

@@ -19,9 +19,11 @@
 //!   tracing API of §3.4.
 //! * [`train`] — optimizers, masked sparse training, pruning schedules (§6.2).
 //! * [`dist`] — data-parallel gradient synchronization with sparse handling (§4.6).
-//! * [`runtime`] — PJRT executor for AOT-lowered JAX/Pallas artifacts (L2/L1).
+//! * [`runtime`] — manifest-driven executor for AOT-described JAX/Pallas
+//!   artifacts (L2/L1), currently backed by a hermetic native interpreter.
 //! * [`coordinator`] — batched sparse inference engine with dispatch/runtime
-//!   timing breakdown (Fig 11).
+//!   timing breakdown (Fig 11), plus the concurrent deadline-batching
+//!   serving front-end (bounded queue, N weight-sharing engine replicas).
 
 pub mod util;
 pub mod tensor;

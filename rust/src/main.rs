@@ -4,14 +4,15 @@
 //!
 //! * `info`     — print artifact manifest + dispatcher summary.
 //! * `infer`    — run sparse/dense encoder inference over the AOT artifacts.
-//! * `serve`    — run the dynamic batcher over synthetic requests.
+//! * `serve`    — run the dynamic batcher over synthetic requests
+//!   (`--replicas N` switches to the concurrent deadline-batching server).
 //! * `energy`   — print the Fig. 7 energy table for a random weight.
 //! * `sparsify` — demonstrate the SparsityBuilder on an MLP.
 
 use std::time::Duration;
 
 use anyhow::Result;
-use sten::coordinator::{BatchServer, Engine, FfnMode};
+use sten::coordinator::{BatchServer, ConcurrentServer, Engine, FfnMode, ServeConfig};
 use sten::formats::Layout;
 use sten::model::{MlpSpec, SparsityBuilder};
 use sten::runtime::ArtifactRuntime;
@@ -76,14 +77,44 @@ fn infer(args: &Args) -> Result<()> {
 fn serve(args: &Args) -> Result<()> {
     let tag = args.get_or("tag", "tiny");
     let requests: usize = args.num("requests", 32);
+    let replicas: usize = args.num("replicas", 0); // 0 = synchronous drain loop
+    let max_wait = Duration::from_millis(args.num("max-wait-ms", 5));
     let rt = ArtifactRuntime::open_default()?;
     let engine = Engine::new(rt, &tag, FfnMode::NativeNmg { n: 2, m: 4, g: 4 }, 42)?;
-    let mut server = BatchServer::new(engine, Duration::from_millis(5));
+    let seq = engine.dims.seq;
+    let vocab = engine.dims.vocab as u32;
     let mut rng = Pcg64::seeded(11);
-    let seq = server.engine().dims.seq;
-    let vocab = server.engine().dims.vocab as u32;
+    let next = |rng: &mut Pcg64| -> Vec<i32> {
+        (0..seq).map(|_| rng.below(vocab) as i32).collect()
+    };
+
+    if replicas > 0 {
+        let cfg = ServeConfig { replicas, queue_cap: args.num("queue-cap", 256), max_wait };
+        let server = ConcurrentServer::start(engine, cfg)?;
+        for _ in 0..requests {
+            server.submit(&next(&mut rng))?;
+        }
+        let report = server.finish()?;
+        match report.latency {
+            Some(lat) => println!(
+                "served {} requests on {replicas} replicas in {} batches; \
+                 p50/p95/p99 {:.3}/{:.3}/{:.3} ms; {:.1} req/s wall; queue high-water {}",
+                report.results.len(),
+                report.batches,
+                lat.p50 * 1e3,
+                lat.p95 * 1e3,
+                lat.p99 * 1e3,
+                report.wall_rps,
+                report.queue_high_water,
+            ),
+            None => println!("served 0 requests"),
+        }
+        return Ok(());
+    }
+
+    let mut server = BatchServer::new(engine, max_wait);
     for _ in 0..requests {
-        let toks: Vec<i32> = (0..seq).map(|_| rng.below(vocab) as i32).collect();
+        let toks = next(&mut rng);
         server.submit(&toks);
     }
     server.run_until_drained()?;

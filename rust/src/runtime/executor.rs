@@ -1,17 +1,28 @@
-//! The PJRT executor: compile-once, execute-many artifact runtime.
+//! The artifact executor: prepare-once, execute-many runtime.
+//!
+//! Executes manifest-described artifacts through the [`super::native`]
+//! backend — pure-Rust implementations of each artifact's semantics, driven
+//! entirely by the manifest so shapes are never hard-coded. The original
+//! PJRT path (`xla::PjRtClient` over HLO text from `make artifacts`) needs
+//! the `xla` crate from the full vendor set; restoring it as a second
+//! backend behind a cargo feature is tracked in ROADMAP.md. The timing
+//! contract is unchanged: `compile` (one-time artifact preparation),
+//! `execute` (kernel time) and `transfer` (validation + host marshalling)
+//! buckets feed the coordinator's Fig. 11 latency breakdown.
 
-use std::collections::HashMap;
+use std::collections::HashSet;
 use std::path::PathBuf;
 use std::sync::Mutex;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
 use super::manifest::{ArtifactSpec, DType, Manifest};
+use super::native;
 use crate::tensor::DenseTensor;
 use crate::util::timer::TimeBreakdown;
 
-/// A typed host value crossing the Rust <-> PJRT boundary.
+/// A typed host value crossing the Rust <-> runtime boundary.
 #[derive(Debug, Clone)]
 pub enum Value {
     /// Dense float tensor.
@@ -52,34 +63,6 @@ impl Value {
             other => bail!("expected f32 value, got {:?}", other.dtype()),
         }
     }
-
-    fn to_literal(&self) -> Result<xla::Literal> {
-        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
-        let lit = match self {
-            Value::F32(t) => {
-                if dims.is_empty() {
-                    xla::Literal::scalar(t.data()[0])
-                } else {
-                    xla::Literal::vec1(t.data()).reshape(&dims)?
-                }
-            }
-            Value::I32(_, data) => {
-                if dims.is_empty() {
-                    xla::Literal::scalar(data[0])
-                } else {
-                    xla::Literal::vec1(data).reshape(&dims)?
-                }
-            }
-        };
-        Ok(lit)
-    }
-
-    fn from_literal(lit: &xla::Literal, dtype: DType, shape: &[usize]) -> Result<Value> {
-        Ok(match dtype {
-            DType::F32 => Value::F32(DenseTensor::from_vec(shape, lit.to_vec::<f32>()?)),
-            DType::I32 => Value::I32(shape.to_vec(), lit.to_vec::<i32>()?),
-        })
-    }
 }
 
 impl From<DenseTensor> for Value {
@@ -88,36 +71,70 @@ impl From<DenseTensor> for Value {
     }
 }
 
-/// Compile-once, execute-many runtime over the artifacts directory.
+/// Prepare-once, execute-many runtime over the artifacts directory.
 ///
-/// Executables are compiled lazily on first call and cached. All timing is
-/// recorded in a [`TimeBreakdown`] under `compile` / `execute` / `transfer`
-/// buckets, which the coordinator folds into the Fig. 11 latency breakdown.
+/// When `<dir>/manifest.json` exists it is loaded (so real AOT artifact
+/// sets keep driving shapes and metadata); otherwise the built-in manifest
+/// mirroring `aot.py`'s output is synthesized and the runtime is fully
+/// hermetic. All methods take `&self`: the runtime is shared across engine
+/// replicas behind an `Arc` by the serving layer.
 pub struct ArtifactRuntime {
-    client: xla::PjRtClient,
     dir: PathBuf,
     manifest: Manifest,
-    cache: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    prepared: Mutex<HashSet<String>>,
     times: Mutex<TimeBreakdown>,
+}
+
+/// Clamp a measured duration away from zero so timing buckets are always
+/// strictly positive once touched (coarse clocks can round tiny spans to 0).
+fn nonzero(d: Duration) -> Duration {
+    d.max(Duration::from_nanos(1))
 }
 
 impl ArtifactRuntime {
     /// Open the default artifacts directory (`artifacts/` or `$STEN_ARTIFACTS`).
+    /// An explicitly-set `STEN_ARTIFACTS` must point at real artifacts: a
+    /// missing manifest there is an error, never a silent built-in fallback.
     pub fn open_default() -> Result<Self> {
-        Self::open(super::default_artifacts_dir())
+        let dir = super::default_artifacts_dir();
+        if std::env::var_os("STEN_ARTIFACTS").is_some() {
+            let manifest = Manifest::load(&dir)?;
+            return Ok(Self::with_manifest(dir, manifest));
+        }
+        Self::open(dir)
     }
 
-    /// Open a specific artifacts directory.
+    /// Open a specific artifacts directory. A *nonexistent* directory means
+    /// "no AOT artifacts": the built-in manifest is synthesized and the run
+    /// is fully hermetic. A directory that exists but lacks `manifest.json`
+    /// is a half-configured artifact set and fails loudly instead.
     pub fn open(dir: PathBuf) -> Result<Self> {
-        let manifest = Manifest::load(&dir)?;
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(ArtifactRuntime {
-            client,
+        let manifest = if dir.join("manifest.json").is_file() {
+            Manifest::load(&dir)?
+        } else if dir.is_dir() {
+            bail!(
+                "artifacts directory {dir:?} exists but has no manifest.json; \
+                 run `make artifacts` (or remove the directory to use the \
+                 built-in native manifest)"
+            )
+        } else {
+            native::builtin_manifest()
+        };
+        Ok(Self::with_manifest(dir, manifest))
+    }
+
+    fn with_manifest(dir: PathBuf, manifest: Manifest) -> Self {
+        ArtifactRuntime {
             dir,
             manifest,
-            cache: Mutex::new(HashMap::new()),
+            prepared: Mutex::new(HashSet::new()),
             times: Mutex::new(TimeBreakdown::new()),
-        })
+        }
+    }
+
+    /// The artifacts directory this runtime was opened over.
+    pub fn dir(&self) -> &PathBuf {
+        &self.dir
     }
 
     /// The manifest describing all artifacts.
@@ -130,32 +147,26 @@ impl ArtifactRuntime {
         self.manifest.get(name)
     }
 
-    /// Compile (or fetch from cache) an artifact's executable.
-    pub fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
-        if let Some(exe) = self.cache.lock().unwrap().get(name) {
-            return Ok(exe.clone());
-        }
+    /// Prepare an artifact (validated once per runtime, charged to the
+    /// `compile` bucket — the PJRT-compile analog). The prepared-set lock is
+    /// held across the check and the preparation so concurrent replicas
+    /// hitting one artifact for the first time charge compile exactly once.
+    pub fn load(&self, name: &str) -> Result<&ArtifactSpec> {
         let spec = self.manifest.get(name)?;
-        let path = self.dir.join(&spec.file);
-        let t = Instant::now();
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 artifact path")?,
-        )
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = std::sync::Arc::new(
-            self.client
-                .compile(&comp)
-                .with_context(|| format!("compiling artifact {name}"))?,
-        );
-        self.times.lock().unwrap().add("compile", t.elapsed());
-        self.cache.lock().unwrap().insert(name.to_string(), exe.clone());
-        Ok(exe)
+        let mut prepared = self.prepared.lock().unwrap();
+        if !prepared.contains(name) {
+            let t = Instant::now();
+            native::prepare(spec)?;
+            self.times.lock().unwrap().add("compile", nonzero(t.elapsed()));
+            prepared.insert(name.to_string());
+        }
+        Ok(spec)
     }
 
     /// Execute an artifact with typed, shape-checked inputs.
     pub fn call(&self, name: &str, inputs: &[Value]) -> Result<Vec<Value>> {
-        let spec = self.manifest.get(name)?.clone();
+        let spec = self.load(name)?;
+        let t = Instant::now();
         if inputs.len() != spec.inputs.len() {
             bail!(
                 "artifact {name}: expected {} inputs, got {}",
@@ -175,33 +186,32 @@ impl ArtifactRuntime {
                 );
             }
         }
-        let exe = self.load(name)?;
+        self.times.lock().unwrap().add("transfer", nonzero(t.elapsed()));
 
         let t = Instant::now();
-        let literals: Vec<xla::Literal> =
-            inputs.iter().map(|v| v.to_literal()).collect::<Result<_>>()?;
-        self.times.lock().unwrap().add("transfer", t.elapsed());
+        let out = native::execute(spec, inputs)?;
+        self.times.lock().unwrap().add("execute", nonzero(t.elapsed()));
 
         let t = Instant::now();
-        let result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        self.times.lock().unwrap().add("execute", t.elapsed());
-
-        let t = Instant::now();
-        // aot.py lowers with return_tuple=True: the result is always a tuple.
-        let parts = result.to_tuple()?;
-        if parts.len() != spec.outputs.len() {
+        if out.len() != spec.outputs.len() {
             bail!(
                 "artifact {name}: expected {} outputs, got {}",
                 spec.outputs.len(),
-                parts.len()
+                out.len()
             );
         }
-        let out = parts
-            .iter()
-            .zip(&spec.outputs)
-            .map(|(lit, io)| Value::from_literal(lit, io.dtype, &io.shape))
-            .collect::<Result<Vec<_>>>()?;
-        self.times.lock().unwrap().add("transfer", t.elapsed());
+        for (v, io) in out.iter().zip(&spec.outputs) {
+            if v.shape() != io.shape.as_slice() || v.dtype() != io.dtype {
+                bail!(
+                    "artifact {name}: output expects {:?} {:?}, produced {:?} {:?}",
+                    io.dtype,
+                    io.shape,
+                    v.dtype(),
+                    v.shape()
+                );
+            }
+        }
+        self.times.lock().unwrap().add("transfer", nonzero(t.elapsed()));
         Ok(out)
     }
 
@@ -228,6 +238,13 @@ impl ArtifactRuntime {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::kernels::dense_gemm;
+    use crate::util::rng::Pcg64;
+
+    fn runtime() -> ArtifactRuntime {
+        // A directory without manifest.json -> built-in manifest.
+        ArtifactRuntime::open(PathBuf::from("target/nonexistent-artifacts")).unwrap()
+    }
 
     #[test]
     fn value_shape_dtype_roundtrip() {
@@ -241,32 +258,56 @@ mod tests {
     }
 
     #[test]
-    fn f32_literal_roundtrip() {
-        let t = DenseTensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0]);
-        let lit = Value::F32(t.clone()).to_literal().unwrap();
-        let back = Value::from_literal(&lit, DType::F32, &[2, 2]).unwrap();
-        assert_eq!(back.into_f32().unwrap(), t);
+    fn builtin_gemm_matches_reference() {
+        let rt = runtime();
+        let mut rng = Pcg64::seeded(1);
+        let a = DenseTensor::randn(&[8, 48], &mut rng);
+        let b = DenseTensor::randn(&[48, 16], &mut rng);
+        let got = rt.call1("gemm_dense_8x48x16", &[a.clone().into(), b.clone().into()]).unwrap();
+        let want = dense_gemm::matmul_naive(&a, &b);
+        assert!(got.allclose(&want, 1e-4, 1e-4), "max diff {}", got.max_abs_diff(&want));
     }
 
     #[test]
-    fn i32_literal_roundtrip() {
-        let v = Value::I32(vec![3], vec![7, -1, 9]);
-        let lit = v.to_literal().unwrap();
-        let back = Value::from_literal(&lit, DType::I32, &[3]).unwrap();
-        match back {
-            Value::I32(shape, data) => {
-                assert_eq!(shape, vec![3]);
-                assert_eq!(data, vec![7, -1, 9]);
-            }
-            _ => panic!("wrong dtype"),
-        }
+    fn call_rejects_wrong_arity_and_shape() {
+        let rt = runtime();
+        let a = DenseTensor::zeros(&[2, 2]);
+        let err = rt.call("gemm_dense_8x48x16", &[a.clone().into()]).unwrap_err();
+        assert!(err.to_string().contains("expected 2 inputs"), "{err}");
+        let b = DenseTensor::zeros(&[48, 16]);
+        let err = rt.call("gemm_dense_8x48x16", &[a.into(), b.into()]).unwrap_err();
+        assert!(err.to_string().contains("expects"), "{err}");
     }
 
     #[test]
-    fn scalar_literal_roundtrip() {
-        let t = DenseTensor::from_vec(&[], vec![2.5]);
-        let lit = Value::F32(t).to_literal().unwrap();
-        let back = Value::from_literal(&lit, DType::F32, &[]).unwrap();
-        assert_eq!(back.into_f32().unwrap().data(), &[2.5]);
+    fn unknown_artifact_is_an_error() {
+        let rt = runtime();
+        assert!(rt.call("no_such_artifact", &[]).is_err());
+    }
+
+    #[test]
+    fn existing_dir_without_manifest_fails_loudly() {
+        // A half-configured artifact set must not silently fall back to the
+        // built-in manifest.
+        let dir = PathBuf::from("target/sten-empty-artifacts-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = ArtifactRuntime::open(dir).unwrap_err().to_string();
+        assert!(err.contains("manifest.json"), "{err}");
+    }
+
+    #[test]
+    fn timing_buckets_populated_and_compile_charged_once() {
+        let rt = runtime();
+        let mut rng = Pcg64::seeded(2);
+        let a = DenseTensor::randn(&[8, 48], &mut rng);
+        let b = DenseTensor::randn(&[48, 16], &mut rng);
+        rt.call1("gemm_dense_8x48x16", &[a.clone().into(), b.clone().into()]).unwrap();
+        let compile0 = rt.timing().secs("compile");
+        assert!(compile0 > 0.0);
+        assert!(rt.timing().secs("execute") > 0.0);
+        assert!(rt.timing().secs("transfer") > 0.0);
+        rt.call1("gemm_dense_8x48x16", &[a.into(), b.into()]).unwrap();
+        // Second call hits the prepared cache: no further compile time.
+        assert_eq!(rt.timing().secs("compile"), compile0);
     }
 }

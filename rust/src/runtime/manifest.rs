@@ -293,6 +293,12 @@ impl Manifest {
         Self::parse(&text)
     }
 
+    /// Build a manifest from in-memory specs (the native backend's built-in
+    /// artifact set when no `manifest.json` is on disk).
+    pub fn from_specs(specs: Vec<ArtifactSpec>) -> Manifest {
+        Manifest { artifacts: specs.into_iter().map(|s| (s.name.clone(), s)).collect() }
+    }
+
     /// Parse manifest JSON text.
     pub fn parse(text: &str) -> Result<Manifest> {
         let root = Json::parse(text)?;

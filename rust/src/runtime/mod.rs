@@ -1,19 +1,22 @@
-//! PJRT runtime: load and execute AOT-lowered JAX/Pallas artifacts.
+//! Artifact runtime: load and execute AOT-described computations.
 //!
 //! The Python side (`python/compile/aot.py`) lowers each computation to HLO
-//! **text** and records its interface in `artifacts/manifest.json`. This
-//! module is manifest-driven: it never hard-codes shapes, it validates every
-//! call against the manifest, and it caches compiled executables so each
-//! artifact is compiled exactly once per process.
-//!
-//! Python never runs on this path — the Rust binary is self-contained once
-//! `make artifacts` has produced the HLO files.
+//! text and records its interface in `artifacts/manifest.json`. This module
+//! is manifest-driven: it never hard-codes shapes and validates every call
+//! against the manifest. Execution goes through the [`native`] backend — a
+//! pure-Rust implementation of every artifact's semantics over the crate's
+//! own kernels — so the full pipeline runs hermetically, with or without
+//! `make artifacts` (when the manifest file is absent, a built-in manifest
+//! mirroring `aot.py`'s output is synthesized). The PJRT execution path
+//! (`xla` crate over the HLO text files) is planned as a second backend
+//! behind a cargo feature once the vendor set ships `xla`; see ROADMAP.md.
 
 mod manifest;
 mod executor;
+pub mod native;
 
 pub use executor::{ArtifactRuntime, Value};
-pub use manifest::{ArtifactSpec, DType, IoSpec, Manifest};
+pub use manifest::{ArtifactSpec, DType, IoSpec, Json, Manifest};
 
 /// Default artifacts directory, overridable via `STEN_ARTIFACTS`.
 pub fn default_artifacts_dir() -> std::path::PathBuf {

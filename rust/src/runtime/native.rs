@@ -1,0 +1,1207 @@
+//! Native artifact backend: executes every manifest artifact in pure Rust.
+//!
+//! The PJRT executor needs the `xla` crate plus AOT-lowered HLO files from
+//! `make artifacts` — neither is guaranteed offline. This module is the
+//! fallback (and currently the default) execution engine: it implements the
+//! *semantics* of each artifact (`python/compile/model.py`) on top of the
+//! crate's own kernels, keyed by artifact name and driven entirely by the
+//! manifest spec. When `artifacts/manifest.json` is absent a built-in
+//! manifest mirroring `aot.py`'s non-quick output is synthesized, so the
+//! coordinator, tests and benches run hermetically.
+//!
+//! Numerics are shared with the coordinator's native FFN path (same
+//! `elementwise` / `dense_gemm` kernels), so block-composed and monolithic
+//! forwards agree bit-for-bit. The train step implements the full
+//! hand-derived backward pass (embedding gather, pre-LN attention, masked
+//! FFN, LM head, mean token cross-entropy) with masked-SGD updates —
+//! `(p - lr * grad) * mask`, the paper's Fig. 2 semantics.
+
+use std::collections::{BTreeMap, HashMap};
+
+use anyhow::{anyhow, bail, Result};
+
+use super::executor::Value;
+use super::manifest::{ArtifactSpec, DType, IoSpec, Json, Manifest};
+use crate::formats::nmg::{binomial, NmgTensor};
+use crate::kernels::{dense_gemm, elementwise, nmg_gemm};
+use crate::tensor::DenseTensor;
+
+// ---------------------------------------------------------------------------
+// Built-in manifest (mirrors aot.py's non-quick artifact set)
+// ---------------------------------------------------------------------------
+
+/// Encoder hyperparameters fixed at "AOT" time (see `EncoderConfig` in
+/// `python/compile/model.py`).
+#[derive(Debug, Clone, Copy)]
+pub struct EncoderCfg {
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_layers: usize,
+}
+
+impl EncoderCfg {
+    /// The pytest/cargo-test scale configuration.
+    pub fn tiny() -> Self {
+        EncoderCfg { vocab: 256, seq: 16, batch: 2, d_model: 32, n_heads: 2, d_ff: 64, n_layers: 2 }
+    }
+
+    /// The example/bench scale configuration.
+    pub fn base() -> Self {
+        EncoderCfg {
+            vocab: 2048,
+            seq: 128,
+            batch: 8,
+            d_model: 256,
+            n_heads: 4,
+            d_ff: 1024,
+            n_layers: 4,
+        }
+    }
+
+    /// Canonical `(name, shape)` parameter list — the artifact input order.
+    pub fn param_list(&self) -> Vec<(String, Vec<usize>)> {
+        let (d, f, v, s) = (self.d_model, self.d_ff, self.vocab, self.seq);
+        let mut out: Vec<(String, Vec<usize>)> =
+            vec![("emb".into(), vec![v, d]), ("pos".into(), vec![s, d])];
+        for i in 0..self.n_layers {
+            let p = |n: &str| format!("layer{i}.{n}");
+            out.extend([
+                (p("ln1_g"), vec![d]),
+                (p("ln1_b"), vec![d]),
+                (p("wq"), vec![d, d]),
+                (p("bq"), vec![d]),
+                (p("wk"), vec![d, d]),
+                (p("bk"), vec![d]),
+                (p("wv"), vec![d, d]),
+                (p("bv"), vec![d]),
+                (p("wo"), vec![d, d]),
+                (p("bo"), vec![d]),
+                (p("ln2_g"), vec![d]),
+                (p("ln2_b"), vec![d]),
+                (p("w1"), vec![d, f]),
+                (p("b1"), vec![f]),
+                (p("w2"), vec![f, d]),
+                (p("b2"), vec![d]),
+            ]);
+        }
+        out.extend([
+            ("lnf_g".into(), vec![d]),
+            ("lnf_b".into(), vec![d]),
+            ("out_w".into(), vec![d, v]),
+            ("out_b".into(), vec![v]),
+        ]);
+        out
+    }
+
+    /// Parameters that carry sparsity masks in the train step (FFN weights).
+    pub fn masked_param_names(&self) -> Vec<String> {
+        (0..self.n_layers)
+            .flat_map(|i| [format!("layer{i}.w1"), format!("layer{i}.w2")])
+            .collect()
+    }
+}
+
+fn jnum(n: usize) -> Json {
+    Json::Num(n as f64)
+}
+
+fn jobj(pairs: &[(&str, Json)]) -> Json {
+    let mut m = HashMap::new();
+    for (k, v) in pairs {
+        m.insert((*k).to_string(), v.clone());
+    }
+    Json::Obj(m)
+}
+
+fn fio(name: &str, shape: &[usize]) -> IoSpec {
+    IoSpec { name: name.to_string(), dtype: DType::F32, shape: shape.to_vec() }
+}
+
+fn iio(name: &str, shape: &[usize]) -> IoSpec {
+    IoSpec { name: name.to_string(), dtype: DType::I32, shape: shape.to_vec() }
+}
+
+fn spec(name: &str, inputs: Vec<IoSpec>, outputs: Vec<IoSpec>, meta: Json) -> ArtifactSpec {
+    ArtifactSpec {
+        name: name.to_string(),
+        file: format!("{name}.hlo.txt"),
+        inputs,
+        outputs,
+        meta,
+    }
+}
+
+/// n:m:g metadata for an (M, K) operand, matching `aot.nmg_meta`.
+fn nmg_meta(m: usize, n: usize, g: usize, mdim: usize, k: usize) -> Vec<(&'static str, Json)> {
+    let c = binomial(m, n);
+    let ch = k.div_ceil(c * g);
+    vec![
+        ("m", jnum(m)),
+        ("n", jnum(n)),
+        ("g", jnum(g)),
+        ("C", jnum(c)),
+        ("CH", jnum(ch)),
+        ("S", jnum(mdim / m)),
+        ("M", jnum(mdim)),
+        ("K", jnum(k)),
+    ]
+}
+
+fn encoder_meta(cfg: &EncoderCfg) -> Vec<(&'static str, Json)> {
+    vec![
+        ("vocab", jnum(cfg.vocab)),
+        ("seq", jnum(cfg.seq)),
+        ("batch", jnum(cfg.batch)),
+        ("d_model", jnum(cfg.d_model)),
+        ("n_heads", jnum(cfg.n_heads)),
+        ("d_ff", jnum(cfg.d_ff)),
+        ("n_layers", jnum(cfg.n_layers)),
+    ]
+}
+
+fn push_gemm_specs(out: &mut Vec<ArtifactSpec>, mdim: usize, k: usize, n: usize) {
+    out.push(spec(
+        &format!("gemm_dense_{mdim}x{k}x{n}"),
+        vec![fio("a", &[mdim, k]), fio("b", &[k, n])],
+        vec![fio("", &[mdim, n])],
+        jobj(&[]),
+    ));
+    out.push(spec(
+        &format!("gemm_masked_{mdim}x{k}x{n}"),
+        vec![fio("a", &[mdim, k]), fio("mask", &[mdim, k]), fio("b", &[k, n])],
+        vec![fio("", &[mdim, n])],
+        jobj(&[]),
+    ));
+}
+
+fn push_nmg_gemm_spec(out: &mut Vec<ArtifactSpec>, mdim: usize, k: usize, n: usize) {
+    let (mm, nn, g) = (4usize, 2usize, 4usize);
+    let meta = nmg_meta(mm, nn, g, mdim, k);
+    let c = binomial(mm, nn);
+    let ch = k.div_ceil(c * g);
+    let s = mdim / mm;
+    let mut full = meta;
+    full.push(("N", jnum(n)));
+    out.push(spec(
+        &format!("gemm_nmg_{mdim}x{k}x{n}"),
+        vec![
+            fio("val", &[s, ch, c, g, nn]),
+            iio("idx", &[s, ch, c, g]),
+            fio("b", &[k, n]),
+        ],
+        vec![fio("", &[mdim, n])],
+        jobj(&full),
+    ));
+}
+
+fn push_encoder_specs(out: &mut Vec<ArtifactSpec>, cfg: &EncoderCfg, tag: &str) {
+    let (d, f, v, s, b) = (cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq, cfg.batch);
+    let meta = jobj(&encoder_meta(cfg));
+    let params = cfg.param_list();
+
+    let mut fwd_inputs: Vec<IoSpec> = params.iter().map(|(n, sh)| fio(n, sh)).collect();
+    fwd_inputs.push(iio("tokens", &[b, s]));
+    out.push(spec(
+        &format!("encoder_fwd_{tag}"),
+        fwd_inputs,
+        vec![fio("", &[b, s, v])],
+        meta.clone(),
+    ));
+
+    out.push(spec(
+        &format!("attn_block_{tag}"),
+        vec![
+            fio("x", &[b, s, d]),
+            fio("ln_g", &[d]),
+            fio("ln_b", &[d]),
+            fio("wq", &[d, d]),
+            fio("bq", &[d]),
+            fio("wk", &[d, d]),
+            fio("bk", &[d]),
+            fio("wv", &[d, d]),
+            fio("bv", &[d]),
+            fio("wo", &[d, d]),
+            fio("bo", &[d]),
+        ],
+        vec![fio("", &[b, s, d])],
+        meta.clone(),
+    ));
+
+    out.push(spec(
+        &format!("ffn_block_{tag}"),
+        vec![
+            fio("x", &[b, s, d]),
+            fio("ln_g", &[d]),
+            fio("ln_b", &[d]),
+            fio("w1", &[d, f]),
+            fio("b1", &[f]),
+            fio("w2", &[f, d]),
+            fio("b2", &[d]),
+        ],
+        vec![fio("", &[b, s, d])],
+        meta.clone(),
+    ));
+
+    out.push(spec(
+        &format!("embed_{tag}"),
+        vec![fio("emb", &[v, d]), fio("pos", &[s, d]), iio("tokens", &[b, s])],
+        vec![fio("", &[b, s, d])],
+        meta.clone(),
+    ));
+
+    out.push(spec(
+        &format!("lm_head_{tag}"),
+        vec![
+            fio("x", &[b, s, d]),
+            fio("lnf_g", &[d]),
+            fio("lnf_b", &[d]),
+            fio("out_w", &[d, v]),
+            fio("out_b", &[v]),
+        ],
+        vec![fio("", &[b, s, v])],
+        meta.clone(),
+    ));
+
+    // n:m:g FFN block: W1^T (f, d) in 2:4:4.
+    let (mm, nn, g) = (4usize, 2usize, 4usize);
+    let c = binomial(mm, nn);
+    let ch = d.div_ceil(c * g);
+    let slabs = f / mm;
+    let mut nmg_full = encoder_meta(cfg);
+    nmg_full.push(("nmg", jobj(&nmg_meta(mm, nn, g, f, d))));
+    out.push(spec(
+        &format!("ffn_block_nmg_{tag}"),
+        vec![
+            fio("x", &[b, s, d]),
+            fio("ln_g", &[d]),
+            fio("ln_b", &[d]),
+            fio("val", &[slabs, ch, c, g, nn]),
+            iio("idx", &[slabs, ch, c, g]),
+            fio("b1", &[f]),
+            fio("w2", &[f, d]),
+            fio("b2", &[d]),
+        ],
+        vec![fio("", &[b, s, d])],
+        jobj(&nmg_full),
+    ));
+
+    // Train step: params + masks + tokens/targets + lr -> (loss, *params').
+    let mut train_inputs: Vec<IoSpec> = params.iter().map(|(n, sh)| fio(n, sh)).collect();
+    for name in cfg.masked_param_names() {
+        let shape = params.iter().find(|(n, _)| *n == name).unwrap().1.clone();
+        train_inputs.push(fio(&format!("mask.{name}"), &shape));
+    }
+    train_inputs.push(iio("tokens", &[b, s]));
+    train_inputs.push(iio("targets", &[b, s]));
+    train_inputs.push(fio("lr", &[]));
+    let mut train_outputs: Vec<IoSpec> = vec![fio("", &[])];
+    train_outputs.extend(params.iter().map(|(_, sh)| fio("", sh)));
+    out.push(spec(&format!("train_step_{tag}"), train_inputs, train_outputs, meta));
+}
+
+/// The synthesized manifest used when no `artifacts/manifest.json` exists:
+/// the same artifact set `aot.py` emits in non-quick mode.
+pub fn builtin_manifest() -> Manifest {
+    let mut specs = Vec::new();
+    push_gemm_specs(&mut specs, 8, 48, 16);
+    push_gemm_specs(&mut specs, 64, 192, 128);
+    push_nmg_gemm_spec(&mut specs, 8, 48, 16);
+    push_nmg_gemm_spec(&mut specs, 16, 96, 64);
+    push_encoder_specs(&mut specs, &EncoderCfg::tiny(), "tiny");
+    push_encoder_specs(&mut specs, &EncoderCfg::base(), "base");
+    Manifest::from_specs(specs)
+}
+
+// ---------------------------------------------------------------------------
+// Execution
+// ---------------------------------------------------------------------------
+
+fn f32_in<'a>(inputs: &'a [Value], i: usize) -> Result<&'a DenseTensor> {
+    inputs[i].as_f32()
+}
+
+fn i32_in(inputs: &[Value], i: usize) -> Result<&[i32]> {
+    match &inputs[i] {
+        Value::I32(_, data) => Ok(data),
+        other => bail!("expected i32 input, got {:?}", other.dtype()),
+    }
+}
+
+fn meta_usize(meta: &Json, key: &str) -> Result<usize> {
+    meta.get(key).ok_or_else(|| anyhow!("missing meta.{key}"))?.usize()
+}
+
+fn cfg_from_meta(meta: &Json) -> Result<EncoderCfg> {
+    Ok(EncoderCfg {
+        vocab: meta_usize(meta, "vocab")?,
+        seq: meta_usize(meta, "seq")?,
+        batch: meta_usize(meta, "batch")?,
+        d_model: meta_usize(meta, "d_model")?,
+        n_heads: meta_usize(meta, "n_heads")?,
+        d_ff: meta_usize(meta, "d_ff")?,
+        n_layers: meta_usize(meta, "n_layers")?,
+    })
+}
+
+/// One-time per-artifact preparation (the "compile" analog): consistency
+/// checks over the spec so malformed manifests fail at load, not mid-call.
+pub fn prepare(spec: &ArtifactSpec) -> Result<()> {
+    let name = spec.name.as_str();
+    if name.starts_with("attn_block_") {
+        let cfg = cfg_from_meta(&spec.meta)?;
+        if cfg.d_model % cfg.n_heads != 0 {
+            bail!("{name}: d_model {} not divisible by n_heads {}", cfg.d_model, cfg.n_heads);
+        }
+    } else if name.starts_with("gemm_nmg_") || name.starts_with("ffn_block_nmg_") {
+        let nmg = if name.starts_with("ffn_block_nmg_") {
+            spec.meta.get("nmg").ok_or_else(|| anyhow!("{name}: missing meta.nmg"))?
+        } else {
+            &spec.meta
+        };
+        let (m, n) = (meta_usize(nmg, "m")?, meta_usize(nmg, "n")?);
+        if n == 0 || n > m || meta_usize(nmg, "M")? % m != 0 {
+            bail!("{name}: invalid n:m:g meta");
+        }
+    }
+    Ok(())
+}
+
+/// Execute one artifact. Inputs are already shape/dtype-validated against
+/// the spec by the caller.
+pub fn execute(spec: &ArtifactSpec, inputs: &[Value]) -> Result<Vec<Value>> {
+    let name = spec.name.as_str();
+    if name.starts_with("gemm_dense_") {
+        let out = dense_gemm::matmul(f32_in(inputs, 0)?, f32_in(inputs, 1)?);
+        return Ok(vec![Value::F32(out)]);
+    }
+    if name.starts_with("gemm_masked_") {
+        let out =
+            dense_gemm::matmul_masked(f32_in(inputs, 0)?, f32_in(inputs, 1)?, f32_in(inputs, 2)?);
+        return Ok(vec![Value::F32(out)]);
+    }
+    if name.starts_with("gemm_nmg_") {
+        let sparse = nmg_from_inputs(&spec.meta, f32_in(inputs, 0)?, i32_in(inputs, 1)?)?;
+        let out = nmg_gemm::spmm(&sparse, f32_in(inputs, 2)?);
+        return Ok(vec![Value::F32(out)]);
+    }
+    if name.starts_with("embed_") {
+        let cfg = cfg_from_meta(&spec.meta)?;
+        let x = embed_forward(f32_in(inputs, 0)?, f32_in(inputs, 1)?, i32_in(inputs, 2)?, &cfg);
+        return Ok(vec![Value::F32(x.reshape(&[cfg.batch, cfg.seq, cfg.d_model]))]);
+    }
+    if name.starts_with("attn_block_") {
+        let cfg = cfg_from_meta(&spec.meta)?;
+        let x = to_rows(f32_in(inputs, 0)?, cfg.d_model);
+        let w = AttnWeights {
+            ln_g: f32_in(inputs, 1)?,
+            ln_b: f32_in(inputs, 2)?,
+            wq: f32_in(inputs, 3)?,
+            bq: f32_in(inputs, 4)?,
+            wk: f32_in(inputs, 5)?,
+            bk: f32_in(inputs, 6)?,
+            wv: f32_in(inputs, 7)?,
+            bv: f32_in(inputs, 8)?,
+            wo: f32_in(inputs, 9)?,
+            bo: f32_in(inputs, 10)?,
+        };
+        let (out, _) = attn_forward(&x, &w, cfg.batch, cfg.seq, cfg.n_heads);
+        return Ok(vec![Value::F32(out.reshape(&[cfg.batch, cfg.seq, cfg.d_model]))]);
+    }
+    if name.starts_with("ffn_block_nmg_") {
+        let cfg = cfg_from_meta(&spec.meta)?;
+        let nmg_meta = spec.meta.get("nmg").ok_or_else(|| anyhow!("missing meta.nmg"))?;
+        let x = to_rows(f32_in(inputs, 0)?, cfg.d_model);
+        let y = elementwise::layernorm_rows(&x, f32_in(inputs, 1)?.data(), f32_in(inputs, 2)?.data());
+        let w1t = nmg_from_inputs(nmg_meta, f32_in(inputs, 3)?, i32_in(inputs, 4)?)?;
+        // (F, D) nmg @ (D, rows) -> (F, rows) -> transpose.
+        let h = nmg_gemm::spmm(&w1t, &y.transpose2()).transpose2();
+        let h = elementwise::gelu(&elementwise::bias_add(&h, f32_in(inputs, 5)?.data()));
+        let o = dense_gemm::matmul(&h, f32_in(inputs, 6)?);
+        let o = elementwise::bias_add(&o, f32_in(inputs, 7)?.data());
+        let out = x.zip(&o, |a, b| a + b);
+        return Ok(vec![Value::F32(out.reshape(&[cfg.batch, cfg.seq, cfg.d_model]))]);
+    }
+    if name.starts_with("ffn_block_") {
+        let cfg = cfg_from_meta(&spec.meta)?;
+        let x = to_rows(f32_in(inputs, 0)?, cfg.d_model);
+        let w = FfnWeights {
+            ln_g: f32_in(inputs, 1)?,
+            ln_b: f32_in(inputs, 2)?,
+            w1: f32_in(inputs, 3)?,
+            b1: f32_in(inputs, 4)?,
+            w2: f32_in(inputs, 5)?,
+            b2: f32_in(inputs, 6)?,
+        };
+        let (out, _) = ffn_forward(&x, &w, None);
+        return Ok(vec![Value::F32(out.reshape(&[cfg.batch, cfg.seq, cfg.d_model]))]);
+    }
+    if name.starts_with("lm_head_") {
+        let cfg = cfg_from_meta(&spec.meta)?;
+        let x = to_rows(f32_in(inputs, 0)?, cfg.d_model);
+        let y = elementwise::layernorm_rows(&x, f32_in(inputs, 1)?.data(), f32_in(inputs, 2)?.data());
+        let logits = elementwise::bias_add(
+            &dense_gemm::matmul(&y, f32_in(inputs, 3)?),
+            f32_in(inputs, 4)?.data(),
+        );
+        return Ok(vec![Value::F32(logits.reshape(&[cfg.batch, cfg.seq, cfg.vocab]))]);
+    }
+    if name.starts_with("encoder_fwd_") {
+        let cfg = cfg_from_meta(&spec.meta)?;
+        let params = named_f32_inputs(spec, inputs)?;
+        let tokens = i32_in(inputs, spec.input_index("tokens")?)?;
+        let logits = encoder_forward(&cfg, &params, tokens, None).logits;
+        return Ok(vec![Value::F32(logits.reshape(&[cfg.batch, cfg.seq, cfg.vocab]))]);
+    }
+    if name.starts_with("train_step_") {
+        return train_step(spec, inputs);
+    }
+    bail!("native backend has no implementation for artifact {name:?}")
+}
+
+/// Rebuild an [`NmgTensor`] from the flat artifact `val`/`idx` inputs.
+fn nmg_from_inputs(meta: &Json, val: &DenseTensor, idx: &[i32]) -> Result<NmgTensor> {
+    let (m, n, g) = (meta_usize(meta, "m")?, meta_usize(meta, "n")?, meta_usize(meta, "g")?);
+    let (mdim, k) = (meta_usize(meta, "M")?, meta_usize(meta, "K")?);
+    let idx_u32: Vec<u32> = idx
+        .iter()
+        .map(|&i| {
+            if i < 0 || i as usize >= k {
+                bail!("n:m:g idx entry {i} out of range for K={k}");
+            }
+            Ok(i as u32)
+        })
+        .collect::<Result<_>>()?;
+    Ok(NmgTensor::from_flat([mdim, k], n, m, g, val.data().to_vec(), idx_u32))
+}
+
+/// Collect the named f32 inputs of a spec into a name -> tensor map.
+fn named_f32_inputs<'a>(
+    spec: &ArtifactSpec,
+    inputs: &'a [Value],
+) -> Result<BTreeMap<String, &'a DenseTensor>> {
+    let mut map = BTreeMap::new();
+    for (io, v) in spec.inputs.iter().zip(inputs) {
+        if let Value::F32(t) = v {
+            map.insert(io.name.clone(), t);
+        }
+    }
+    Ok(map)
+}
+
+/// View a (B, S, D)-shaped tensor as (B*S, D) rows.
+fn to_rows(x: &DenseTensor, d: usize) -> DenseTensor {
+    x.reshape(&[x.numel() / d, d])
+}
+
+// ---------------------------------------------------------------------------
+// Encoder blocks (forward + caches)
+// ---------------------------------------------------------------------------
+
+struct AttnWeights<'a> {
+    ln_g: &'a DenseTensor,
+    ln_b: &'a DenseTensor,
+    wq: &'a DenseTensor,
+    bq: &'a DenseTensor,
+    wk: &'a DenseTensor,
+    bk: &'a DenseTensor,
+    wv: &'a DenseTensor,
+    bv: &'a DenseTensor,
+    wo: &'a DenseTensor,
+    bo: &'a DenseTensor,
+}
+
+struct AttnCache {
+    y: DenseTensor,
+    q: DenseTensor,
+    k: DenseTensor,
+    v: DenseTensor,
+    /// Softmax probabilities per (batch, head), each (S, S).
+    att: Vec<DenseTensor>,
+    o: DenseTensor,
+}
+
+/// Copy a rectangular block `rows [r0, r0+nr) x cols [c0, c0+nc)`.
+fn block(t: &DenseTensor, r0: usize, nr: usize, c0: usize, nc: usize) -> DenseTensor {
+    let cols = t.cols();
+    let mut out = vec![0f32; nr * nc];
+    for r in 0..nr {
+        let src = (r0 + r) * cols + c0;
+        out[r * nc..(r + 1) * nc].copy_from_slice(&t.data()[src..src + nc]);
+    }
+    DenseTensor::from_vec(&[nr, nc], out)
+}
+
+/// Accumulate `src` into `dst` at offset (r0, c0).
+fn add_block(dst: &mut DenseTensor, r0: usize, c0: usize, src: &DenseTensor) {
+    let (nr, nc) = (src.rows(), src.cols());
+    let cols = dst.cols();
+    for r in 0..nr {
+        let d0 = (r0 + r) * cols + c0;
+        for c in 0..nc {
+            dst.data_mut()[d0 + c] += src.data()[r * nc + c];
+        }
+    }
+}
+
+/// Column sums of a 2-D tensor (bias gradients).
+fn col_sum(t: &DenseTensor) -> DenseTensor {
+    let (r, c) = (t.rows(), t.cols());
+    let mut out = vec![0f32; c];
+    for i in 0..r {
+        for j in 0..c {
+            out[j] += t.data()[i * c + j];
+        }
+    }
+    DenseTensor::from_vec(&[c], out)
+}
+
+/// Pre-LN multi-head self-attention with residual over (B*S, D) rows.
+fn attn_forward(
+    x: &DenseTensor,
+    w: &AttnWeights,
+    b: usize,
+    s: usize,
+    heads: usize,
+) -> (DenseTensor, AttnCache) {
+    let d = x.cols();
+    let hd = d / heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let y = elementwise::layernorm_rows(x, w.ln_g.data(), w.ln_b.data());
+    let q = elementwise::bias_add(&dense_gemm::matmul(&y, w.wq), w.bq.data());
+    let k = elementwise::bias_add(&dense_gemm::matmul(&y, w.wk), w.bk.data());
+    let v = elementwise::bias_add(&dense_gemm::matmul(&y, w.wv), w.bv.data());
+    let mut o = DenseTensor::zeros(&[b * s, d]);
+    let mut att = Vec::with_capacity(b * heads);
+    for bi in 0..b {
+        for h in 0..heads {
+            let qb = block(&q, bi * s, s, h * hd, hd);
+            let kb = block(&k, bi * s, s, h * hd, hd);
+            let vb = block(&v, bi * s, s, h * hd, hd);
+            let mut scores = dense_gemm::matmul(&qb, &kb.transpose2());
+            scores.scale(scale);
+            let a = elementwise::softmax_rows(&scores);
+            let ob = dense_gemm::matmul(&a, &vb);
+            add_block(&mut o, bi * s, h * hd, &ob);
+            att.push(a);
+        }
+    }
+    let proj = elementwise::bias_add(&dense_gemm::matmul(&o, w.wo), w.bo.data());
+    let out = x.zip(&proj, |a, c| a + c);
+    (out, AttnCache { y, q, k, v, att, o })
+}
+
+struct FfnWeights<'a> {
+    ln_g: &'a DenseTensor,
+    ln_b: &'a DenseTensor,
+    w1: &'a DenseTensor,
+    b1: &'a DenseTensor,
+    w2: &'a DenseTensor,
+    b2: &'a DenseTensor,
+}
+
+struct FfnCache {
+    y: DenseTensor,
+    hpre: DenseTensor,
+    h: DenseTensor,
+    /// Effective (possibly masked) first/second weights.
+    w1e: DenseTensor,
+    w2e: DenseTensor,
+}
+
+/// Pre-LN GeLU FFN with residual; `masks` applies emulated sparsity to the
+/// two linear weights (the training-path form).
+fn ffn_forward(
+    x: &DenseTensor,
+    w: &FfnWeights,
+    masks: Option<(&DenseTensor, &DenseTensor)>,
+) -> (DenseTensor, FfnCache) {
+    let y = elementwise::layernorm_rows(x, w.ln_g.data(), w.ln_b.data());
+    let (w1e, w2e) = match masks {
+        Some((m1, m2)) => (w.w1.zip(m1, |v, m| v * m), w.w2.zip(m2, |v, m| v * m)),
+        None => (w.w1.clone(), w.w2.clone()),
+    };
+    let hpre = elementwise::bias_add(&dense_gemm::matmul(&y, &w1e), w.b1.data());
+    let h = elementwise::gelu(&hpre);
+    let o = elementwise::bias_add(&dense_gemm::matmul(&h, &w2e), w.b2.data());
+    let out = x.zip(&o, |a, c| a + c);
+    (out, FfnCache { y, hpre, h, w1e, w2e })
+}
+
+fn embed_forward(emb: &DenseTensor, pos: &DenseTensor, tokens: &[i32], cfg: &EncoderCfg) -> DenseTensor {
+    let (d, s, v) = (cfg.d_model, cfg.seq, cfg.vocab);
+    let rows = tokens.len();
+    let mut out = vec![0f32; rows * d];
+    for (r, &t) in tokens.iter().enumerate() {
+        let tok = (t.rem_euclid(v as i32)) as usize;
+        let e = &emb.data()[tok * d..(tok + 1) * d];
+        let p = &pos.data()[(r % s) * d..(r % s + 1) * d];
+        for j in 0..d {
+            out[r * d + j] = e[j] + p[j];
+        }
+    }
+    DenseTensor::from_vec(&[rows, d], out)
+}
+
+struct LayerCache {
+    x_attn: DenseTensor,
+    attn: AttnCache,
+    x_ffn: DenseTensor,
+    ffn: FfnCache,
+}
+
+struct ForwardResult {
+    logits: DenseTensor,
+    /// (B*S, D) input to the final LayerNorm.
+    x_final: DenseTensor,
+    ln_out: DenseTensor,
+    layers: Vec<LayerCache>,
+}
+
+/// Full encoder forward over (B*S) rows; `masks` (name -> mask) applies to
+/// FFN weights when present (the training-path network).
+fn encoder_forward(
+    cfg: &EncoderCfg,
+    p: &BTreeMap<String, &DenseTensor>,
+    tokens: &[i32],
+    masks: Option<&BTreeMap<String, &DenseTensor>>,
+) -> ForwardResult {
+    let mut x = embed_forward(p["emb"], p["pos"], tokens, cfg);
+    let mut layers = Vec::with_capacity(cfg.n_layers);
+    for l in 0..cfg.n_layers {
+        let n = |s: &str| format!("layer{l}.{s}");
+        let aw = AttnWeights {
+            ln_g: p[&n("ln1_g")],
+            ln_b: p[&n("ln1_b")],
+            wq: p[&n("wq")],
+            bq: p[&n("bq")],
+            wk: p[&n("wk")],
+            bk: p[&n("bk")],
+            wv: p[&n("wv")],
+            bv: p[&n("bv")],
+            wo: p[&n("wo")],
+            bo: p[&n("bo")],
+        };
+        let (x1, attn) = attn_forward(&x, &aw, cfg.batch, cfg.seq, cfg.n_heads);
+        let fw = FfnWeights {
+            ln_g: p[&n("ln2_g")],
+            ln_b: p[&n("ln2_b")],
+            w1: p[&n("w1")],
+            b1: p[&n("b1")],
+            w2: p[&n("w2")],
+            b2: p[&n("b2")],
+        };
+        let layer_masks = masks.map(|m| (m[&n("w1")], m[&n("w2")]));
+        let (x2, ffn) = ffn_forward(&x1, &fw, layer_masks);
+        layers.push(LayerCache { x_attn: x, attn, x_ffn: x1, ffn });
+        x = x2;
+    }
+    let ln_out = elementwise::layernorm_rows(&x, p["lnf_g"].data(), p["lnf_b"].data());
+    let logits =
+        elementwise::bias_add(&dense_gemm::matmul(&ln_out, p["out_w"]), p["out_b"].data());
+    ForwardResult { logits, x_final: x, ln_out, layers }
+}
+
+// ---------------------------------------------------------------------------
+// Backward pass
+// ---------------------------------------------------------------------------
+
+/// LayerNorm backward: recomputes row statistics from `x` and returns
+/// `(dx, dgamma, dbeta)`.
+fn layernorm_backward(
+    x: &DenseTensor,
+    gamma: &[f32],
+    dy: &DenseTensor,
+) -> (DenseTensor, DenseTensor, DenseTensor) {
+    let (r, c) = (x.rows(), x.cols());
+    let mut dx = vec![0f32; r * c];
+    let mut dgamma = vec![0f32; c];
+    let mut dbeta = vec![0f32; c];
+    for i in 0..r {
+        let row = &x.data()[i * c..(i + 1) * c];
+        let dyr = &dy.data()[i * c..(i + 1) * c];
+        let mean = row.iter().sum::<f32>() / c as f32;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / c as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        let mut m1 = 0f32; // mean of dxhat
+        let mut m2 = 0f32; // mean of dxhat * xhat
+        for j in 0..c {
+            let xhat = (row[j] - mean) * inv;
+            let dxhat = dyr[j] * gamma[j];
+            dgamma[j] += dyr[j] * xhat;
+            dbeta[j] += dyr[j];
+            m1 += dxhat;
+            m2 += dxhat * xhat;
+        }
+        m1 /= c as f32;
+        m2 /= c as f32;
+        for j in 0..c {
+            let xhat = (row[j] - mean) * inv;
+            let dxhat = dyr[j] * gamma[j];
+            dx[i * c + j] = inv * (dxhat - m1 - xhat * m2);
+        }
+    }
+    (
+        DenseTensor::from_vec(&[r, c], dx),
+        DenseTensor::from_vec(&[c], dgamma),
+        DenseTensor::from_vec(&[c], dbeta),
+    )
+}
+
+/// Gradient accumulation store keyed by parameter name.
+#[derive(Default)]
+struct GradStore {
+    grads: BTreeMap<String, DenseTensor>,
+}
+
+impl GradStore {
+    fn add(&mut self, name: &str, g: DenseTensor) {
+        self.grads
+            .entry(name.to_string())
+            .and_modify(|acc| acc.axpy(1.0, &g))
+            .or_insert(g);
+    }
+}
+
+/// Attention backward; returns dx and accumulates parameter grads under
+/// `layer{l}.` names.
+#[allow(clippy::too_many_arguments)]
+fn attn_backward(
+    w: &AttnWeights,
+    cache: &AttnCache,
+    x: &DenseTensor,
+    dout: &DenseTensor,
+    grads: &mut GradStore,
+    l: usize,
+    b: usize,
+    s: usize,
+    heads: usize,
+) -> DenseTensor {
+    let d = x.cols();
+    let hd = d / heads;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let n = |nm: &str| format!("layer{l}.{nm}");
+
+    // out = x + o @ wo + bo
+    let mut dx = dout.clone();
+    grads.add(&n("wo"), dense_gemm::matmul(&cache.o.transpose2(), dout));
+    grads.add(&n("bo"), col_sum(dout));
+    let do_ = dense_gemm::matmul(dout, &w.wo.transpose2());
+
+    let mut dq = DenseTensor::zeros(&[b * s, d]);
+    let mut dk = DenseTensor::zeros(&[b * s, d]);
+    let mut dv = DenseTensor::zeros(&[b * s, d]);
+    for bi in 0..b {
+        for h in 0..heads {
+            let a = &cache.att[bi * heads + h];
+            let qb = block(&cache.q, bi * s, s, h * hd, hd);
+            let kb = block(&cache.k, bi * s, s, h * hd, hd);
+            let vb = block(&cache.v, bi * s, s, h * hd, hd);
+            let dob = block(&do_, bi * s, s, h * hd, hd);
+            let da = dense_gemm::matmul(&dob, &vb.transpose2());
+            let dvb = dense_gemm::matmul(&a.transpose2(), &dob);
+            // Softmax backward per row: ds = a * (da - sum(da * a)).
+            let mut ds = DenseTensor::zeros(&[s, s]);
+            for i in 0..s {
+                let ar = &a.data()[i * s..(i + 1) * s];
+                let dar = &da.data()[i * s..(i + 1) * s];
+                let dot: f32 = ar.iter().zip(dar).map(|(&p, &g)| p * g).sum();
+                for j in 0..s {
+                    ds.data_mut()[i * s + j] = ar[j] * (dar[j] - dot);
+                }
+            }
+            let mut dqb = dense_gemm::matmul(&ds, &kb);
+            dqb.scale(scale);
+            let mut dkb = dense_gemm::matmul(&ds.transpose2(), &qb);
+            dkb.scale(scale);
+            add_block(&mut dq, bi * s, h * hd, &dqb);
+            add_block(&mut dk, bi * s, h * hd, &dkb);
+            add_block(&mut dv, bi * s, h * hd, &dvb);
+        }
+    }
+
+    // q = y @ wq + bq (and likewise k, v).
+    let yt = cache.y.transpose2();
+    grads.add(&n("wq"), dense_gemm::matmul(&yt, &dq));
+    grads.add(&n("bq"), col_sum(&dq));
+    grads.add(&n("wk"), dense_gemm::matmul(&yt, &dk));
+    grads.add(&n("bk"), col_sum(&dk));
+    grads.add(&n("wv"), dense_gemm::matmul(&yt, &dv));
+    grads.add(&n("bv"), col_sum(&dv));
+    let mut dy = dense_gemm::matmul(&dq, &w.wq.transpose2());
+    dy.axpy(1.0, &dense_gemm::matmul(&dk, &w.wk.transpose2()));
+    dy.axpy(1.0, &dense_gemm::matmul(&dv, &w.wv.transpose2()));
+
+    let (dx_ln, dg, db) = layernorm_backward(x, w.ln_g.data(), &dy);
+    grads.add(&n("ln1_g"), dg);
+    grads.add(&n("ln1_b"), db);
+    dx.axpy(1.0, &dx_ln);
+    dx
+}
+
+/// FFN backward (masked weights); returns dx, accumulates grads.
+fn ffn_backward(
+    w: &FfnWeights,
+    cache: &FfnCache,
+    x: &DenseTensor,
+    dout: &DenseTensor,
+    masks: Option<(&DenseTensor, &DenseTensor)>,
+    grads: &mut GradStore,
+    l: usize,
+) -> DenseTensor {
+    let n = |nm: &str| format!("layer{l}.{nm}");
+    // out = x + h @ w2e + b2
+    let mut dx = dout.clone();
+    let mut dw2 = dense_gemm::matmul(&cache.h.transpose2(), dout);
+    if let Some((_, m2)) = masks {
+        dw2 = dw2.zip(m2, |g, m| g * m);
+    }
+    grads.add(&n("w2"), dw2);
+    grads.add(&n("b2"), col_sum(dout));
+    let dh = dense_gemm::matmul(dout, &cache.w2e.transpose2());
+    let dhpre = dh.zip(&elementwise::gelu_grad(&cache.hpre), |g, d| g * d);
+    let mut dw1 = dense_gemm::matmul(&cache.y.transpose2(), &dhpre);
+    if let Some((m1, _)) = masks {
+        dw1 = dw1.zip(m1, |g, m| g * m);
+    }
+    grads.add(&n("w1"), dw1);
+    grads.add(&n("b1"), col_sum(&dhpre));
+    let dy = dense_gemm::matmul(&dhpre, &cache.w1e.transpose2());
+    let (dx_ln, dg, db) = layernorm_backward(x, w.ln_g.data(), &dy);
+    grads.add(&n("ln2_g"), dg);
+    grads.add(&n("ln2_b"), db);
+    dx.axpy(1.0, &dx_ln);
+    dx
+}
+
+/// Mean token-level cross-entropy and its logits gradient.
+fn cross_entropy(logits: &DenseTensor, targets: &[i32], vocab: usize) -> (f32, DenseTensor) {
+    let (rows, v) = (logits.rows(), logits.cols());
+    assert_eq!(rows, targets.len());
+    let mut loss = 0f64;
+    let mut dl = elementwise::softmax_rows(logits);
+    for (i, &t) in targets.iter().enumerate() {
+        let y = (t.rem_euclid(vocab as i32)) as usize;
+        let row = &logits.data()[i * v..(i + 1) * v];
+        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+        let lse = mx + row.iter().map(|&x| (x - mx).exp()).sum::<f32>().ln();
+        loss += (lse - row[y]) as f64;
+        let cur = dl.get2(i, y);
+        dl.set2(i, y, cur - 1.0);
+    }
+    dl.scale(1.0 / rows as f32);
+    ((loss / rows as f64) as f32, dl)
+}
+
+/// One masked-SGD train step: `(loss, *updated_params)`.
+fn train_step(spec: &ArtifactSpec, inputs: &[Value]) -> Result<Vec<Value>> {
+    let cfg = cfg_from_meta(&spec.meta)?;
+    let mut params: BTreeMap<String, &DenseTensor> = BTreeMap::new();
+    let mut masks: BTreeMap<String, &DenseTensor> = BTreeMap::new();
+    let mut param_order: Vec<String> = Vec::new();
+    for (io, v) in spec.inputs.iter().zip(inputs) {
+        match (io.name.as_str(), v) {
+            ("tokens", _) | ("targets", _) => {}
+            ("lr", Value::F32(_)) => {}
+            (name, Value::F32(t)) if name.starts_with("mask.") => {
+                masks.insert(name.trim_start_matches("mask.").to_string(), t);
+            }
+            (name, Value::F32(t)) => {
+                params.insert(name.to_string(), t);
+                param_order.push(name.to_string());
+            }
+            _ => {}
+        }
+    }
+    let tokens = i32_in(inputs, spec.input_index("tokens")?)?;
+    let targets = i32_in(inputs, spec.input_index("targets")?)?;
+    let lr = f32_in(inputs, spec.input_index("lr")?)?.data()[0];
+
+    let fwd = encoder_forward(&cfg, &params, tokens, Some(&masks));
+    let (loss, dlogits) = cross_entropy(&fwd.logits, targets, cfg.vocab);
+
+    let mut grads = GradStore::default();
+    // LM head: logits = ln_out @ out_w + out_b.
+    grads.add("out_w", dense_gemm::matmul(&fwd.ln_out.transpose2(), &dlogits));
+    grads.add("out_b", col_sum(&dlogits));
+    let d_ln_out = dense_gemm::matmul(&dlogits, &params["out_w"].transpose2());
+    let (mut dx, dg, db) = layernorm_backward(&fwd.x_final, params["lnf_g"].data(), &d_ln_out);
+    grads.add("lnf_g", dg);
+    grads.add("lnf_b", db);
+
+    for l in (0..cfg.n_layers).rev() {
+        let n = |s: &str| format!("layer{l}.{s}");
+        let cache = &fwd.layers[l];
+        let fw = FfnWeights {
+            ln_g: params[&n("ln2_g")],
+            ln_b: params[&n("ln2_b")],
+            w1: params[&n("w1")],
+            b1: params[&n("b1")],
+            w2: params[&n("w2")],
+            b2: params[&n("b2")],
+        };
+        let layer_masks = Some((masks[&n("w1")], masks[&n("w2")]));
+        dx = ffn_backward(&fw, &cache.ffn, &cache.x_ffn, &dx, layer_masks, &mut grads, l);
+        let aw = AttnWeights {
+            ln_g: params[&n("ln1_g")],
+            ln_b: params[&n("ln1_b")],
+            wq: params[&n("wq")],
+            bq: params[&n("bq")],
+            wk: params[&n("wk")],
+            bk: params[&n("bk")],
+            wv: params[&n("wv")],
+            bv: params[&n("bv")],
+            wo: params[&n("wo")],
+            bo: params[&n("bo")],
+        };
+        dx = attn_backward(
+            &aw, &cache.attn, &cache.x_attn, &dx, &mut grads, l, cfg.batch, cfg.seq, cfg.n_heads,
+        );
+    }
+
+    // Embedding backward: scatter-add token rows; positional sum over batch.
+    let d = cfg.d_model;
+    let mut demb = DenseTensor::zeros(&[cfg.vocab, d]);
+    let mut dpos = DenseTensor::zeros(&[cfg.seq, d]);
+    for (r, &t) in tokens.iter().enumerate() {
+        let tok = (t.rem_euclid(cfg.vocab as i32)) as usize;
+        let si = r % cfg.seq;
+        for j in 0..d {
+            let g = dx.data()[r * d + j];
+            demb.data_mut()[tok * d + j] += g;
+            dpos.data_mut()[si * d + j] += g;
+        }
+    }
+    grads.add("emb", demb);
+    grads.add("pos", dpos);
+
+    // Updates: q = p - lr * grad, re-masked for masked params (Fig. 2).
+    let mut out = vec![Value::F32(DenseTensor::from_vec(&[], vec![loss]))];
+    for name in &param_order {
+        let mut q = (*params[name]).clone();
+        if let Some(g) = grads.grads.get(name) {
+            q.axpy(-lr, g);
+        }
+        if let Some(mask) = masks.get(name) {
+            q = q.zip(mask, |v, m| v * m);
+        }
+        out.push(Value::F32(q));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn micro_cfg() -> EncoderCfg {
+        EncoderCfg { vocab: 11, seq: 3, batch: 2, d_model: 8, n_heads: 2, d_ff: 12, n_layers: 1 }
+    }
+
+    fn micro_train_spec() -> ArtifactSpec {
+        let mut specs = Vec::new();
+        push_encoder_specs(&mut specs, &micro_cfg(), "micro");
+        specs.into_iter().find(|s| s.name == "train_step_micro").unwrap()
+    }
+
+    /// Deterministic inputs for the micro train step (masks all ones unless
+    /// `sparse`, in which case every other mask element is zeroed).
+    fn micro_inputs(spec: &ArtifactSpec, sparse: bool) -> Vec<Value> {
+        let cfg = micro_cfg();
+        let mut rng = Pcg64::seeded(99);
+        let mut inputs = Vec::new();
+        for io in &spec.inputs {
+            let v = match io.name.as_str() {
+                "tokens" | "targets" => Value::I32(
+                    io.shape.clone(),
+                    (0..io.numel()).map(|_| rng.below(cfg.vocab as u32) as i32).collect(),
+                ),
+                "lr" => Value::F32(DenseTensor::from_vec(&[], vec![0.05])),
+                name if name.starts_with("mask.") => {
+                    let data = (0..io.numel())
+                        .map(|i| if sparse && i % 2 == 0 { 0.0 } else { 1.0 })
+                        .collect();
+                    Value::F32(DenseTensor::from_vec(&io.shape, data))
+                }
+                name if name.ends_with("_g") => Value::F32(DenseTensor::ones(&io.shape)),
+                _ if io.shape.len() == 2 => {
+                    let mut w = DenseTensor::randn(&io.shape, &mut rng);
+                    w.scale(0.15);
+                    Value::F32(w)
+                }
+                _ => Value::F32(DenseTensor::zeros(&io.shape)),
+            };
+            inputs.push(v);
+        }
+        inputs
+    }
+
+    fn loss_of(spec: &ArtifactSpec, inputs: &[Value]) -> f32 {
+        let mut zero_lr = inputs.to_vec();
+        let li = spec.input_index("lr").unwrap();
+        zero_lr[li] = Value::F32(DenseTensor::from_vec(&[], vec![0.0]));
+        let out = execute(spec, &zero_lr).unwrap();
+        out[0].as_f32().unwrap().data()[0]
+    }
+
+    #[test]
+    fn builtin_manifest_has_expected_artifacts() {
+        let m = builtin_manifest();
+        for name in [
+            "gemm_dense_8x48x16",
+            "gemm_masked_64x192x128",
+            "gemm_nmg_8x48x16",
+            "gemm_nmg_16x96x64",
+            "encoder_fwd_tiny",
+            "attn_block_base",
+            "ffn_block_nmg_tiny",
+            "train_step_tiny",
+            "embed_base",
+            "lm_head_tiny",
+        ] {
+            assert!(m.get(name).is_ok(), "missing {name}");
+        }
+    }
+
+    #[test]
+    fn embed_adds_positional() {
+        let cfg = micro_cfg();
+        let mut rng = Pcg64::seeded(3);
+        let emb = DenseTensor::randn(&[cfg.vocab, cfg.d_model], &mut rng);
+        let pos = DenseTensor::randn(&[cfg.seq, cfg.d_model], &mut rng);
+        let tokens: Vec<i32> = vec![1, 2, 3, 4, 5, 6];
+        let x = embed_forward(&emb, &pos, &tokens, &cfg);
+        let want = emb.data()[cfg.d_model] + pos.data()[0];
+        assert!((x.data()[0] - want).abs() < 1e-6);
+        // Row 4 is batch 1, position 1, token 5.
+        let want = emb.data()[5 * cfg.d_model + 2] + pos.data()[cfg.d_model + 2];
+        assert!((x.get2(4, 2) - want).abs() < 1e-6);
+    }
+
+    #[test]
+    fn attention_rows_are_convex_combinations() {
+        let cfg = micro_cfg();
+        let mut rng = Pcg64::seeded(5);
+        let d = cfg.d_model;
+        let x = DenseTensor::randn(&[cfg.batch * cfg.seq, d], &mut rng);
+        let ln_g = DenseTensor::ones(&[d]);
+        let ln_b = DenseTensor::zeros(&[d]);
+        let mk = |rng: &mut Pcg64| DenseTensor::randn(&[d, d], rng);
+        let (wq, wk, wv, wo) = (mk(&mut rng), mk(&mut rng), mk(&mut rng), mk(&mut rng));
+        let z = DenseTensor::zeros(&[d]);
+        let w = AttnWeights {
+            ln_g: &ln_g, ln_b: &ln_b,
+            wq: &wq, bq: &z, wk: &wk, bk: &z, wv: &wv, bv: &z, wo: &wo, bo: &z,
+        };
+        let (out, cache) = attn_forward(&x, &w, cfg.batch, cfg.seq, cfg.n_heads);
+        assert_eq!(out.shape(), x.shape());
+        for a in &cache.att {
+            for i in 0..cfg.seq {
+                let sum: f32 = a.data()[i * cfg.seq..(i + 1) * cfg.seq].iter().sum();
+                assert!((sum - 1.0).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn gemm_nmg_roundtrips_through_flat_layout() {
+        let m = builtin_manifest();
+        let spec = m.get("gemm_nmg_8x48x16").unwrap().clone();
+        let mut rng = Pcg64::seeded(7);
+        let a = DenseTensor::randn(&[8, 48], &mut rng);
+        let sparse = NmgTensor::from_dense(&a, 2, 4, 4);
+        let b = DenseTensor::randn(&[48, 16], &mut rng);
+        let val_spec = &spec.inputs[spec.input_index("val").unwrap()];
+        let idx_spec = &spec.inputs[spec.input_index("idx").unwrap()];
+        let inputs = vec![
+            Value::F32(DenseTensor::from_vec(&val_spec.shape, sparse.val_flat().to_vec())),
+            Value::I32(idx_spec.shape.clone(), sparse.idx_flat().iter().map(|&i| i as i32).collect()),
+            Value::F32(b.clone()),
+        ];
+        let got = execute(&spec, &inputs).unwrap().remove(0).into_f32().unwrap();
+        let want = nmg_gemm::spmm(&sparse, &b);
+        assert!(got.allclose(&want, 1e-5, 1e-5), "max diff {}", got.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn train_step_gradients_match_finite_difference() {
+        let spec = micro_train_spec();
+        let inputs = micro_inputs(&spec, false);
+        // lr = 1 makes the update read back the raw gradient: g = p - p'.
+        let mut lr1 = inputs.clone();
+        let li = spec.input_index("lr").unwrap();
+        lr1[li] = Value::F32(DenseTensor::from_vec(&[], vec![1.0]));
+        let out = execute(&spec, &lr1).unwrap();
+
+        let eps = 1e-2f32;
+        // Sample a few coordinates across qualitatively different params.
+        for (pname, coord) in [
+            ("emb", 13usize),
+            ("pos", 5),
+            ("layer0.wq", 17),
+            ("layer0.wo", 3),
+            ("layer0.w1", 29),
+            ("layer0.w2", 41),
+            ("layer0.ln1_g", 2),
+            ("out_w", 19),
+            ("layer0.b1", 4),
+        ] {
+            let pi = spec.input_index(pname).unwrap();
+            let p0 = inputs[pi].as_f32().unwrap().clone();
+            let coord = coord % p0.numel();
+            let grad = p0.data()[coord] - out[1 + pi].as_f32().unwrap().data()[coord];
+
+            let mut up = inputs.clone();
+            let mut t = p0.clone();
+            t.data_mut()[coord] += eps;
+            up[pi] = Value::F32(t);
+            let mut dn = inputs.clone();
+            let mut t = p0.clone();
+            t.data_mut()[coord] -= eps;
+            dn[pi] = Value::F32(t);
+            let fd = (loss_of(&spec, &up) - loss_of(&spec, &dn)) / (2.0 * eps);
+            assert!(
+                (fd - grad).abs() < 2e-2 * (1.0 + fd.abs()),
+                "{pname}[{coord}]: fd {fd} vs analytic {grad}"
+            );
+        }
+    }
+
+    #[test]
+    fn train_step_decreases_loss_and_keeps_masks() {
+        let spec = micro_train_spec();
+        let mut inputs = micro_inputs(&spec, true);
+        let n_params = spec.outputs.len() - 1;
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..5 {
+            let out = execute(&spec, &inputs).unwrap();
+            last = out[0].as_f32().unwrap().data()[0];
+            first.get_or_insert(last);
+            for (j, v) in out.into_iter().skip(1).enumerate() {
+                inputs[j] = v;
+            }
+            assert_eq!(n_params + 1, spec.outputs.len());
+        }
+        assert!(last < first.unwrap(), "loss did not decrease: {last} !< {first:?}");
+        // Masked params stay masked.
+        for (i, io) in spec.inputs.iter().enumerate() {
+            if let Some(pname) = io.name.strip_prefix("mask.") {
+                let pi = spec.input_index(pname).unwrap();
+                let p = inputs[pi].as_f32().unwrap();
+                let m = inputs[i].as_f32().unwrap();
+                let leaked = p
+                    .data()
+                    .iter()
+                    .zip(m.data())
+                    .filter(|&(v, mk)| *mk == 0.0 && *v != 0.0)
+                    .count();
+                assert_eq!(leaked, 0, "{pname} leaked {leaked} masked weights");
+            }
+        }
+    }
+}

@@ -1,0 +1,297 @@
+//! A small bounded multi-producer/multi-consumer channel.
+//!
+//! `std::sync::mpsc` receivers cannot be cloned, and crossbeam is not in
+//! the offline vendor set — but the serving front-end needs N engine
+//! workers pulling from one queue, blocking sends for backpressure, and
+//! deadline-aware receives for batch formation. This is the minimal
+//! Mutex + Condvar implementation of exactly that.
+//!
+//! Close semantics: the channel closes when every [`Sender`] *or* every
+//! [`Receiver`] is dropped. Closed sends fail; receives drain the queue
+//! first, then report closure.
+
+use std::collections::VecDeque;
+use std::fmt;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+struct State<T> {
+    queue: VecDeque<T>,
+    senders: usize,
+    receivers: usize,
+    closed: bool,
+}
+
+struct Shared<T> {
+    cap: usize,
+    state: Mutex<State<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+}
+
+impl<T> Shared<T> {
+    fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+/// Create a bounded channel with capacity `cap` (at least 1).
+pub fn bounded<T>(cap: usize) -> (Sender<T>, Receiver<T>) {
+    let shared = Arc::new(Shared {
+        cap: cap.max(1),
+        state: Mutex::new(State {
+            queue: VecDeque::new(),
+            senders: 1,
+            receivers: 1,
+            closed: false,
+        }),
+        not_empty: Condvar::new(),
+        not_full: Condvar::new(),
+    });
+    (Sender { shared: shared.clone() }, Receiver { shared })
+}
+
+/// The value returned to a sender whose channel has closed.
+pub struct SendError<T>(pub T);
+
+impl<T> fmt::Debug for SendError<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("SendError(channel closed)")
+    }
+}
+
+/// Outcome of a deadline-bounded receive.
+#[derive(Debug)]
+pub enum Received<T> {
+    /// An item arrived before the deadline.
+    Item(T),
+    /// The deadline passed with the queue empty.
+    TimedOut,
+    /// The channel is closed and drained.
+    Closed,
+}
+
+/// Producer half; cloneable.
+pub struct Sender<T> {
+    shared: Arc<Shared<T>>,
+}
+
+impl<T> Sender<T> {
+    /// Blocking send; parks while the queue is full (backpressure). Returns
+    /// the value if the channel closed before it could be enqueued.
+    pub fn send(&self, value: T) -> Result<(), SendError<T>> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if st.closed {
+                return Err(SendError(value));
+            }
+            if st.queue.len() < self.shared.cap {
+                st.queue.push_back(value);
+                drop(st);
+                self.shared.not_empty.notify_one();
+                return Ok(());
+            }
+            st = self.shared.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Items currently queued (a queue-depth gauge, racy by nature).
+    pub fn len(&self) -> usize {
+        self.shared.state.lock().unwrap().queue.len()
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Clone for Sender<T> {
+    fn clone(&self) -> Self {
+        self.shared.state.lock().unwrap().senders += 1;
+        Sender { shared: self.shared.clone() }
+    }
+}
+
+impl<T> Drop for Sender<T> {
+    fn drop(&mut self) {
+        let last = {
+            let mut st = self.shared.state.lock().unwrap();
+            st.senders -= 1;
+            st.senders == 0
+        };
+        if last {
+            self.shared.close();
+        }
+    }
+}
+
+/// Consumer half; cloneable (each item is delivered to exactly one receiver).
+pub struct Receiver<T> {
+    shared: Arc<Shared<T>>,
+}
+
+impl<T> Receiver<T> {
+    /// Blocking receive; `None` once the channel is closed and drained.
+    pub fn recv(&self) -> Option<T> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(v) = st.queue.pop_front() {
+                drop(st);
+                self.shared.not_full.notify_one();
+                return Some(v);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.shared.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Receive with a deadline: parks until an item arrives, the channel
+    /// closes, or `deadline` passes — whichever comes first.
+    pub fn recv_deadline(&self, deadline: Instant) -> Received<T> {
+        let mut st = self.shared.state.lock().unwrap();
+        loop {
+            if let Some(v) = st.queue.pop_front() {
+                drop(st);
+                self.shared.not_full.notify_one();
+                return Received::Item(v);
+            }
+            if st.closed {
+                return Received::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Received::TimedOut;
+            }
+            let (guard, _) = self.shared.not_empty.wait_timeout(st, deadline - now).unwrap();
+            st = guard;
+        }
+    }
+
+    /// Items currently queued.
+    pub fn len(&self) -> usize {
+        self.shared.state.lock().unwrap().queue.len()
+    }
+
+    /// True when nothing is queued.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+impl<T> Clone for Receiver<T> {
+    fn clone(&self) -> Self {
+        self.shared.state.lock().unwrap().receivers += 1;
+        Receiver { shared: self.shared.clone() }
+    }
+}
+
+impl<T> Drop for Receiver<T> {
+    fn drop(&mut self) {
+        let last = {
+            let mut st = self.shared.state.lock().unwrap();
+            st.receivers -= 1;
+            st.receivers == 0
+        };
+        if last {
+            self.shared.close();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::time::Duration;
+
+    #[test]
+    fn fifo_within_capacity() {
+        let (tx, rx) = bounded(4);
+        for i in 0..4 {
+            tx.send(i).unwrap();
+        }
+        assert_eq!(rx.len(), 4);
+        for i in 0..4 {
+            assert_eq!(rx.recv(), Some(i));
+        }
+    }
+
+    #[test]
+    fn recv_returns_none_after_senders_drop() {
+        let (tx, rx) = bounded(2);
+        tx.send(7).unwrap();
+        drop(tx);
+        assert_eq!(rx.recv(), Some(7)); // drains before reporting closure
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn send_fails_after_receivers_drop() {
+        let (tx, rx) = bounded::<u32>(2);
+        drop(rx);
+        assert!(tx.send(1).is_err());
+    }
+
+    #[test]
+    fn full_queue_blocks_sender_until_recv() {
+        let (tx, rx) = bounded(1);
+        tx.send(1).unwrap();
+        let t = std::thread::spawn(move || {
+            tx.send(2).unwrap(); // parks until the first item is consumed
+            tx.send(3).unwrap();
+        });
+        std::thread::sleep(Duration::from_millis(20));
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(rx.recv(), Some(3));
+        t.join().unwrap();
+    }
+
+    #[test]
+    fn recv_deadline_times_out_then_delivers() {
+        let (tx, rx) = bounded(1);
+        let got = rx.recv_deadline(Instant::now() + Duration::from_millis(15));
+        assert!(matches!(got, Received::TimedOut));
+        tx.send(9).unwrap();
+        let got = rx.recv_deadline(Instant::now() + Duration::from_secs(5));
+        assert!(matches!(got, Received::Item(9)));
+        drop(tx);
+        let got = rx.recv_deadline(Instant::now() + Duration::from_millis(5));
+        assert!(matches!(got, Received::Closed));
+    }
+
+    #[test]
+    fn multi_consumer_delivers_each_item_once() {
+        let (tx, rx) = bounded(8);
+        let total = Arc::new(AtomicUsize::new(0));
+        let count = Arc::new(AtomicUsize::new(0));
+        let consumers: Vec<_> = (0..3)
+            .map(|_| {
+                let rx = rx.clone();
+                let total = total.clone();
+                let count = count.clone();
+                std::thread::spawn(move || {
+                    while let Some(v) = rx.recv() {
+                        total.fetch_add(v, Ordering::SeqCst);
+                        count.fetch_add(1, Ordering::SeqCst);
+                    }
+                })
+            })
+            .collect();
+        drop(rx);
+        for i in 1..=100usize {
+            tx.send(i).unwrap();
+        }
+        drop(tx);
+        for c in consumers {
+            c.join().unwrap();
+        }
+        assert_eq!(count.load(Ordering::SeqCst), 100);
+        assert_eq!(total.load(Ordering::SeqCst), (1..=100).sum());
+    }
+}

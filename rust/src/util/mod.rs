@@ -1,10 +1,11 @@
-//! Small self-contained utilities: RNG, thread pool, timing, bench harness,
-//! CLI parsing and a mini property-testing helper.
+//! Small self-contained utilities: RNG, thread pools, channels, timing,
+//! bench harness, CLI parsing and a mini property-testing helper.
 //!
-//! The build environment is fully offline with a fixed vendor set (the `xla`
-//! crate's dependency tree), so widely-used helpers such as `rand`, `rayon`,
-//! `clap` and `criterion` are re-implemented here in the small.
+//! The build environment is fully offline with a minimal vendor set
+//! (`anyhow` only), so widely-used helpers such as `rand`, `rayon`,
+//! `crossbeam`, `clap` and `criterion` are re-implemented here in the small.
 
+pub mod channel;
 pub mod rng;
 pub mod threadpool;
 pub mod timer;
@@ -13,5 +14,5 @@ pub mod cli;
 pub mod proptest;
 
 pub use rng::Pcg64;
-pub use threadpool::ThreadPool;
+pub use threadpool::{ThreadPool, WorkerPool};
 pub use timer::{Stopwatch, TimeBreakdown};

@@ -1,15 +1,20 @@
-//! A small work-stealing-free scoped thread pool.
+//! A small work-stealing-free scoped thread pool + a persistent worker pool.
 //!
 //! `rayon` is not available in the offline vendor set, so this provides the
-//! two primitives the kernels and the DDP simulator need:
+//! primitives the kernels, the DDP simulator and the serving front-end need:
 //!
 //! * [`ThreadPool::scope_chunks`] — split an index range into contiguous
 //!   chunks and run a closure per chunk on worker threads (used by the GEMM
 //!   kernels to parallelize over row panels).
 //! * [`parallel_for`] — one-shot convenience over a global pool.
+//! * [`WorkerPool`] — named, persistent worker threads consuming boxed jobs
+//!   from a [`crate::util::channel`] queue (the serving subsystem runs its
+//!   batcher and engine replicas on one of these).
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
+
+use super::channel;
 
 /// A persistent pool of worker threads executing closures.
 pub struct ThreadPool {
@@ -98,6 +103,72 @@ impl<T> SyncPtr<T> {
     }
 }
 
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// Named, persistent worker threads executing boxed jobs in submission
+/// order. Unlike [`ThreadPool::scope_chunks`] (scoped, per-call threads for
+/// data parallelism), a `WorkerPool` owns long-lived threads for
+/// long-running tasks — the serving subsystem runs its batcher and each
+/// engine replica as one job. Dropping (or [`WorkerPool::join`]ing) the
+/// pool closes the queue and joins every worker.
+pub struct WorkerPool {
+    tx: Option<channel::Sender<Job>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers` threads named `{prefix}-{i}`.
+    pub fn named(prefix: &str, workers: usize) -> Self {
+        let workers = workers.max(1);
+        let (tx, rx) = channel::bounded::<Job>(workers * 2);
+        let handles = (0..workers)
+            .map(|i| {
+                let rx = rx.clone();
+                std::thread::Builder::new()
+                    .name(format!("{prefix}-{i}"))
+                    .spawn(move || {
+                        while let Some(job) = rx.recv() {
+                            job();
+                        }
+                    })
+                    .expect("failed to spawn worker thread")
+            })
+            .collect();
+        WorkerPool { tx: Some(tx), handles }
+    }
+
+    /// Number of worker threads.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Submit a job; blocks while the job queue is full. Jobs submitted
+    /// after the pool began shutting down are dropped.
+    pub fn execute(&self, f: impl FnOnce() + Send + 'static) {
+        if let Some(tx) = &self.tx {
+            let _ = tx.send(Box::new(f));
+        }
+    }
+
+    /// Close the queue and wait for all in-flight jobs to finish.
+    pub fn join(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.tx.take(); // closes the channel; workers drain and exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
 /// The global pool, sized to available parallelism.
 pub fn global() -> &'static Arc<ThreadPool> {
     static POOL: OnceLock<Arc<ThreadPool>> = OnceLock::new();
@@ -154,6 +225,21 @@ mod tests {
     fn empty_range_is_noop() {
         let pool = ThreadPool::new(4);
         pool.scope_chunks(0, 16, |_, _| panic!("must not run"));
+    }
+
+    #[test]
+    fn worker_pool_runs_all_jobs_then_joins() {
+        let pool = WorkerPool::named("tp-test", 3);
+        assert_eq!(pool.workers(), 3);
+        let count = Arc::new(AtomicUsize::new(0));
+        for _ in 0..20 {
+            let c = count.clone();
+            pool.execute(move || {
+                c.fetch_add(1, Ordering::SeqCst);
+            });
+        }
+        pool.join();
+        assert_eq!(count.load(Ordering::SeqCst), 20);
     }
 
     #[test]

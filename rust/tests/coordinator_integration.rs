@@ -1,16 +1,21 @@
-//! Coordinator integration over the real AOT artifacts: the engine's three
-//! FFN modes agree numerically (modulo pruning), the batch server delivers
-//! every request, and the timing breakdown is populated.
+//! Coordinator integration over the artifact runtime: the engine's three
+//! FFN modes agree numerically (modulo pruning), both servers deliver every
+//! request, batch formation honors `max_wait`, and replicas share weights.
 
-use std::time::Duration;
+use std::collections::HashSet;
+use std::time::{Duration, Instant};
 
-use sten::coordinator::{BatchServer, Engine, FfnMode};
+use sten::coordinator::{BatchServer, ConcurrentServer, Engine, FfnMode, ServeConfig};
 use sten::runtime::ArtifactRuntime;
 use sten::util::rng::Pcg64;
 
 fn engine(mode: FfnMode) -> Engine {
-    let rt = ArtifactRuntime::open_default().expect("run `make artifacts` first");
+    let rt = ArtifactRuntime::open_default().expect("artifact runtime");
     Engine::new(rt, "tiny", mode, 42).unwrap()
+}
+
+fn random_request(seq: usize, rng: &mut Pcg64) -> Vec<i32> {
+    (0..seq).map(|_| rng.below(100) as i32).collect()
 }
 
 #[test]
@@ -80,8 +85,7 @@ fn batch_server_completes_all_requests() {
     let mut rng = Pcg64::seeded(11);
     let total = batch * 2 + 1; // forces a padded final batch
     for _ in 0..total {
-        let toks: Vec<i32> = (0..seq).map(|_| rng.below(100) as i32).collect();
-        server.submit(&toks);
+        server.submit(&random_request(seq, &mut rng));
     }
     server.run_until_drained().unwrap();
     assert_eq!(server.completed.len(), total);
@@ -101,4 +105,178 @@ fn server_clamps_and_pads_tokens() {
     server.submit(&vec![3; seq * 2]);
     server.run_until_drained().unwrap();
     assert_eq!(server.completed.len(), 2);
+}
+
+#[test]
+fn sync_server_dispatches_lone_request_once_max_wait_elapses() {
+    // Regression: run_one_batch used to ignore max_wait entirely.
+    let e = engine(FfnMode::NativeDense);
+    let mut server = BatchServer::new(e, Duration::from_millis(80));
+    server.submit(&[1, 2, 3]);
+    let t = Instant::now();
+    let out = server.run_one_batch().unwrap();
+    assert!(out.is_some());
+    let waited = t.elapsed();
+    assert!(
+        waited >= Duration::from_millis(60),
+        "partial batch dispatched before max_wait: {waited:?}"
+    );
+    let r = &server.completed[0];
+    assert!(r.queue_s >= 0.06, "queue_s {} does not reflect the deadline wait", r.queue_s);
+    assert_eq!(r.batch_size, 1);
+}
+
+#[test]
+fn sync_server_throughput_counts_each_batch_by_id() {
+    // Regression: throughput() used to dedup batches by compute_s bit
+    // pattern, merging distinct batches with identical timings.
+    let e = engine(FfnMode::NativeDense);
+    let batch = e.dims.batch;
+    let seq = e.dims.seq;
+    let mut server = BatchServer::new(e, Duration::from_millis(1));
+    let mut rng = Pcg64::seeded(12);
+    for _ in 0..batch * 2 {
+        server.submit(&random_request(seq, &mut rng));
+    }
+    server.run_until_drained().unwrap();
+    let ids: HashSet<u64> = server.completed.iter().map(|r| r.batch_id).collect();
+    assert_eq!(ids.len(), 2, "expected two distinct batch ids");
+    assert!(server.throughput().unwrap() > 0.0);
+}
+
+#[test]
+fn replicas_share_weights_until_reconfigured() {
+    let mut a = engine(FfnMode::NativeNmg { n: 2, m: 4, g: 4 });
+    let mut b = a.replicate();
+    assert!(a.shares_weights_with(&b));
+    assert_eq!(a.param("layer0.w1"), b.param("layer0.w1"));
+
+    // Replicas produce identical logits over the shared pruned weights.
+    let mut rng = Pcg64::seeded(20);
+    let tokens = a.random_tokens(&mut rng);
+    let la = a.forward(&tokens).unwrap();
+    let lb = b.forward(&tokens).unwrap();
+    assert!(la.allclose(&lb, 0.0, 0.0), "replicas diverged: {}", la.max_abs_diff(&lb));
+
+    // Reconfiguring one replica copies-on-write; others keep sharing.
+    let mut c = a.replicate();
+    c.set_ffn_mode(FfnMode::NativeDense);
+    assert!(!a.shares_weights_with(&c));
+    assert!(a.shares_weights_with(&b));
+}
+
+#[test]
+fn concurrent_server_completes_every_request_exactly_once() {
+    let e = engine(FfnMode::NativeNmg { n: 2, m: 4, g: 4 });
+    let batch = e.dims.batch;
+    let seq = e.dims.seq;
+    // queue_cap below the request count exercises submit backpressure.
+    let cfg = ServeConfig {
+        replicas: 2,
+        queue_cap: batch.max(2),
+        max_wait: Duration::from_millis(5),
+    };
+    let server = ConcurrentServer::start(e, cfg).unwrap();
+    let total = batch * 3;
+    let mut rng = Pcg64::seeded(31);
+    let mut submitted = Vec::new();
+    for _ in 0..total {
+        submitted.push(server.submit(&random_request(seq, &mut rng)).unwrap());
+    }
+    let report = server.finish().unwrap();
+
+    assert_eq!(report.results.len(), total, "every request gets exactly one completion");
+    let mut seen: Vec<u64> = report.results.iter().map(|r| r.id).collect();
+    seen.sort_unstable();
+    submitted.sort_unstable();
+    assert_eq!(seen, submitted, "completion ids != submitted ids");
+
+    assert!(report.results.iter().all(|r| r.batch_size >= 1 && r.batch_size <= batch));
+    let riders: usize = {
+        let mut per_batch: std::collections::HashMap<u64, usize> = Default::default();
+        for r in &report.results {
+            per_batch.insert(r.batch_id, r.batch_size);
+        }
+        per_batch.values().sum()
+    };
+    assert_eq!(riders, total, "per-batch rider counts must partition the requests");
+
+    let lat = report.latency.expect("latency summary");
+    assert!(lat.p50 <= lat.p95 && lat.p95 <= lat.p99, "percentiles out of order: {lat:?}");
+    assert!(report.batches >= (total / batch) as u64);
+    assert!(report.queue_high_water >= 1);
+    assert!(report.wall_rps > 0.0);
+}
+
+#[test]
+fn concurrent_lone_request_dispatches_once_max_wait_elapses() {
+    let e = engine(FfnMode::NativeDense);
+    let cfg = ServeConfig { replicas: 2, queue_cap: 8, max_wait: Duration::from_millis(120) };
+    let server = ConcurrentServer::start(e, cfg).unwrap();
+    let t = Instant::now();
+    server.submit(&[1, 2, 3]).unwrap();
+    server.drain();
+    let elapsed = t.elapsed();
+    assert!(
+        elapsed >= Duration::from_millis(100),
+        "lone request dispatched before its deadline: {elapsed:?}"
+    );
+    let results = server.completed();
+    assert_eq!(results.len(), 1);
+    assert_eq!(results[0].batch_size, 1);
+    assert!(results[0].queue_s >= 0.1, "queue_s {}", results[0].queue_s);
+    assert!(results[0].queue_s <= 1.5, "waited far past max_wait: {}", results[0].queue_s);
+    server.finish().unwrap();
+}
+
+#[test]
+fn concurrent_full_batch_dispatches_immediately() {
+    let e = engine(FfnMode::NativeDense);
+    let batch = e.dims.batch;
+    let seq = e.dims.seq;
+    // Huge max_wait: only the full-batch fast path can finish quickly.
+    let cfg = ServeConfig { replicas: 1, queue_cap: 8, max_wait: Duration::from_secs(5) };
+    let server = ConcurrentServer::start(e, cfg).unwrap();
+    let mut rng = Pcg64::seeded(33);
+    let t = Instant::now();
+    for _ in 0..batch {
+        server.submit(&random_request(seq, &mut rng)).unwrap();
+    }
+    server.drain();
+    let elapsed = t.elapsed();
+    assert!(
+        elapsed < Duration::from_secs(2),
+        "full batch waited on the deadline: {elapsed:?}"
+    );
+    let report = server.finish().unwrap();
+    assert!(report.results.iter().all(|r| r.batch_size == batch));
+    assert!(report.results.iter().all(|r| r.queue_s < 2.5));
+}
+
+#[test]
+fn concurrent_queue_wait_bounded_by_max_wait() {
+    let e = engine(FfnMode::NativeNmg { n: 2, m: 4, g: 4 });
+    let batch = e.dims.batch;
+    let seq = e.dims.seq;
+    let max_wait = Duration::from_millis(40);
+    let cfg = ServeConfig { replicas: 2, queue_cap: 8, max_wait };
+    let server = ConcurrentServer::start(e, cfg).unwrap();
+    let mut rng = Pcg64::seeded(34);
+    for _ in 0..batch * 3 + 1 {
+        server.submit(&random_request(seq, &mut rng)).unwrap();
+        std::thread::sleep(Duration::from_millis(1));
+    }
+    let report = server.finish().unwrap();
+    // Under light load no request waits in queue longer than max_wait
+    // before its batch is formed (generous slack for loaded CI hosts).
+    let bound = max_wait.as_secs_f64() + 0.45;
+    for r in &report.results {
+        assert!(
+            r.queue_s <= bound,
+            "request {} waited {:.3}s for batch formation (max_wait {:?})",
+            r.id,
+            r.queue_s,
+            max_wait
+        );
+    }
 }
