@@ -14,6 +14,13 @@ cargo build --release
 echo "==> tier-1: cargo test -q"
 cargo test -q
 
+echo "==> timed serving stress test (release)"
+# Exactly-once completion under submitter contention, run optimized and
+# timed: a reintroduced global lock on the serving hot path (completion
+# store, runtime timing, prepared-artifact map) shows up here as a loud
+# wall-clock regression even while the assertions still pass.
+time cargo test --release --test serving_stress -- --nocapture
+
 echo "==> building bench targets"
 cargo build --release --benches
 

@@ -53,24 +53,24 @@ fn main() -> Result<()> {
     for (i, io) in spec.inputs.iter().enumerate() {
         let v = match io.name.as_str() {
             "tokens" | "targets" => Value::I32(io.shape.clone(), vec![0; io.numel()]),
-            "lr" => Value::F32(DenseTensor::from_vec(&[], vec![lr])),
+            "lr" => Value::from(DenseTensor::from_vec(&[], vec![lr])),
             nm if nm.starts_with("mask.") => {
                 mask_slots.push((i, nm.strip_prefix("mask.").unwrap().to_string()));
-                Value::F32(DenseTensor::ones(&io.shape))
+                Value::from(DenseTensor::ones(&io.shape))
             }
             nm if nm.ends_with("_g") => {
                 param_count += 1;
-                Value::F32(DenseTensor::ones(&io.shape))
+                Value::from(DenseTensor::ones(&io.shape))
             }
             _ if io.shape.len() == 2 => {
                 param_count += 1;
                 let mut w = DenseTensor::randn(&io.shape, &mut rng);
                 w.scale((2.0 / io.shape[0] as f32).sqrt() * 0.5);
-                Value::F32(w)
+                Value::from(w)
             }
             _ => {
                 param_count += 1;
-                Value::F32(DenseTensor::zeros(&io.shape))
+                Value::from(DenseTensor::zeros(&io.shape))
             }
         };
         inputs.push(v);
@@ -105,9 +105,9 @@ fn main() -> Result<()> {
                     .map(|v| if v != 0.0 { 1.0 } else { 0.0 });
                 let mask = mask_t.transpose2();
                 let mi = mask_slots.iter().find(|(_, p)| *p == wname).unwrap().0;
-                inputs[mi] = Value::F32(mask.clone());
+                inputs[mi] = Value::from(mask.clone());
                 // Apply immediately so the weight conforms from this step on.
-                inputs[wi] = Value::F32(w.zip(&mask, |x, mk| x * mk));
+                inputs[wi] = Value::from(w.zip(&mask, |x, mk| x * mk));
             }
             pruned_layers += 1;
             event = format!("prune layer{l} to {n}:{m}:{g}");

@@ -97,12 +97,17 @@ fn main() {
         base_p50 * 1e3
     );
 
+    // Best observed throughput per replica count (across max_wait settings),
+    // for the replica-scaling summary below.
+    let mut best_rps: Vec<(usize, f64)> = Vec::new();
     for replicas in [1usize, 2, 4, 8] {
         if replicas > cores.max(2) * 2 {
             continue;
         }
+        let mut best = 0f64;
         for wait_ms in [1u64, 5] {
             let row = run_concurrent(tag, &reqs, replicas, Duration::from_millis(wait_ms));
+            best = best.max(row.rps);
             println!(
                 "concurrent\t{replicas}\t{wait_ms}\t{:.0}\t{:.2}\t{:.3}\t{:.3}\t{:.3}\t{}\t{}",
                 row.rps,
@@ -113,6 +118,21 @@ fn main() {
                 row.batches,
                 row.high_water
             );
+        }
+        best_rps.push((replicas, best));
+    }
+
+    // Replica scaling: with Arc-shared weights (no per-forward memcpy),
+    // sharded runtime timing, per-worker completion buffers and the
+    // cores/replicas kernel-thread cap, adding replicas should raise
+    // throughput instead of staying flat on lock contention.
+    if let Some(&(_, one)) = best_rps.iter().find(|(r, _)| *r == 1) {
+        println!("\nreplica scaling (best req/s vs 1 replica):");
+        for &(replicas, rps) in &best_rps {
+            println!("  {replicas} replicas: {:.0} req/s ({:.2}x)", rps, rps / one);
+        }
+        if let Some(&(_, four)) = best_rps.iter().find(|(r, _)| *r == 4) {
+            println!("replica-scaling-4x-vs-1x: {:.2}", four / one);
         }
     }
     println!(

@@ -21,7 +21,14 @@
 //!   comes first. Under light load no request waits in queue longer than
 //!   `max_wait` before its batch is formed.
 //! * **Shared weights** — replicas are [`Engine::replicate`] clones: one
-//!   `Arc`-held parameter set, n:m:g conversion done once.
+//!   `Arc`-held parameter set, n:m:g conversion done once, and zero weight
+//!   bytes copied per forward (`Value::F32` carries `Arc` handles).
+//! * **De-contended completion** — each worker records results in its own
+//!   buffer (merged on snapshot/finish); the only cross-worker critical
+//!   section per batch is a counter bump under the completion condvar's
+//!   mutex. Kernel parallelism is divided among replicas via
+//!   [`crate::util::threadpool::register_kernel_users`], so R replicas
+//!   never oversubscribe the host by R x cores.
 //! * **Metrics** — per-request latency records with real batch ids,
 //!   p50/p95/p99 summaries and a queue-depth gauge with high-water mark.
 
@@ -33,7 +40,7 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, bail, Result};
 
 use crate::util::channel::{self, Received};
-use crate::util::threadpool::WorkerPool;
+use crate::util::threadpool::{self, WorkerPool};
 
 use super::engine::{EncoderDims, Engine};
 use super::metrics::{self, LatencySummary, QueueGauge};
@@ -65,18 +72,45 @@ struct Batch {
 }
 
 /// State shared by submitters, the batcher and the workers.
-struct Progress {
-    completed: Vec<RequestResult>,
-    errors: Vec<String>,
-    /// Requests accounted for (completed or failed).
-    finished: u64,
-}
-
 struct Shared {
-    progress: Mutex<Progress>,
+    /// One completion buffer per worker. Each worker appends only to its
+    /// own slot, so the result-recording hot path never contends with other
+    /// workers; snapshots and `finish` merge the buffers.
+    worker_results: Vec<Mutex<Vec<RequestResult>>>,
+    /// Batch/batcher failures (rare path; a plain shared lock is fine).
+    errors: Mutex<Vec<String>>,
+    /// Requests accounted for (completed or failed). The mutex exists for
+    /// the condvar; the critical section is a bare counter bump.
+    finished: Mutex<u64>,
     done_cv: Condvar,
     gauge: QueueGauge,
     batches: AtomicU64,
+}
+
+impl Shared {
+    /// Mark `n` requests accounted for and wake any drainer.
+    fn account(&self, n: u64) {
+        let mut fin = self.finished.lock().unwrap();
+        *fin += n;
+        drop(fin);
+        self.done_cv.notify_all();
+    }
+
+    /// Record a failure covering `n` requests.
+    fn fail(&self, n: u64, msg: String) {
+        self.errors.lock().unwrap().push(msg);
+        self.account(n);
+    }
+
+    /// Merge all per-worker buffers into one id-ordered result vector.
+    fn merged_results(&self) -> Vec<RequestResult> {
+        let mut out = Vec::new();
+        for buf in &self.worker_results {
+            out.extend(buf.lock().unwrap().iter().cloned());
+        }
+        out.sort_by_key(|r| r.id);
+        out
+    }
 }
 
 /// Final report returned by [`ConcurrentServer::finish`].
@@ -107,6 +141,9 @@ pub struct ConcurrentServer {
     next_id: AtomicU64,
     submitted: AtomicU64,
     started: Instant,
+    /// Divides the global kernel pool among this server's replicas for the
+    /// server's lifetime (released on drop).
+    _kernel_users: threadpool::KernelUsersGuard,
 }
 
 impl ConcurrentServer {
@@ -124,11 +161,9 @@ impl ConcurrentServer {
         engines.push(engine);
 
         let shared = Arc::new(Shared {
-            progress: Mutex::new(Progress {
-                completed: Vec::new(),
-                errors: Vec::new(),
-                finished: 0,
-            }),
+            worker_results: (0..cfg.replicas).map(|_| Mutex::new(Vec::new())).collect(),
+            errors: Mutex::new(Vec::new()),
+            finished: Mutex::new(0),
             done_cv: Condvar::new(),
             gauge: QueueGauge::new(),
             batches: AtomicU64::new(0),
@@ -177,14 +212,7 @@ impl ConcurrentServer {
                         // that arrives until the queue closes, so drain()
                         // and finish() never hang on requests nobody will
                         // execute.
-                        let fail = |n: u64, msg: String| {
-                            let mut prog = shared.progress.lock().unwrap();
-                            prog.errors.push(msg);
-                            prog.finished += n;
-                            drop(prog);
-                            shared.done_cv.notify_all();
-                        };
-                        fail(
+                        shared.fail(
                             batch.requests.len() as u64,
                             format!("batch {}: no workers left", batch.id),
                         );
@@ -192,11 +220,14 @@ impl ConcurrentServer {
                         shared.gauge.exit(stranded);
                         pending.clear();
                         if stranded > 0 {
-                            fail(stranded as u64, format!("{stranded} pending requests: no workers left"));
+                            shared.fail(
+                                stranded as u64,
+                                format!("{stranded} pending requests: no workers left"),
+                            );
                         }
                         while let Some(r) = submit_rx.recv() {
                             shared.gauge.exit(1);
-                            fail(1, format!("request {}: no workers left", r.id));
+                            shared.fail(1, format!("request {}: no workers left", r.id));
                         }
                         break;
                     }
@@ -204,8 +235,9 @@ impl ConcurrentServer {
             });
         }
 
-        // The workers: one engine replica each.
-        for mut engine in engines {
+        // The workers: one engine replica each, each with a private
+        // completion buffer so recording results never contends.
+        for (worker_idx, mut engine) in engines.into_iter().enumerate() {
             let rx = batch_rx.clone();
             let shared = shared.clone();
             let dims = dims.clone();
@@ -223,11 +255,11 @@ impl ConcurrentServer {
                     .unwrap_or_else(|_| Err(anyhow!("engine forward panicked")));
                     let compute_s = t.elapsed().as_secs_f64();
                     let done = Instant::now();
-                    let mut prog = shared.progress.lock().unwrap();
                     match outcome {
                         Ok(_) => {
+                            let mut buf = shared.worker_results[worker_idx].lock().unwrap();
                             for r in &batch.requests {
-                                prog.completed.push(RequestResult {
+                                buf.push(RequestResult {
                                     id: r.id,
                                     batch_id: batch.id,
                                     queue_s: batch
@@ -242,11 +274,11 @@ impl ConcurrentServer {
                                 });
                             }
                         }
-                        Err(e) => prog.errors.push(format!("batch {}: {e:#}", batch.id)),
+                        Err(e) => {
+                            shared.errors.lock().unwrap().push(format!("batch {}: {e:#}", batch.id))
+                        }
                     }
-                    prog.finished += batch.requests.len() as u64;
-                    drop(prog);
-                    shared.done_cv.notify_all();
+                    shared.account(batch.requests.len() as u64);
                 }
             });
         }
@@ -260,6 +292,7 @@ impl ConcurrentServer {
             next_id: AtomicU64::new(0),
             submitted: AtomicU64::new(0),
             started: Instant::now(),
+            _kernel_users: threadpool::register_kernel_users(cfg.replicas),
         })
     }
 
@@ -293,17 +326,18 @@ impl ConcurrentServer {
         self.shared.gauge.high_water()
     }
 
-    /// Completion records so far (snapshot).
+    /// Completion records so far (snapshot, merged across worker buffers,
+    /// ordered by request id).
     pub fn completed(&self) -> Vec<RequestResult> {
-        self.shared.progress.lock().unwrap().completed.clone()
+        self.shared.merged_results()
     }
 
     /// Block until every request submitted so far has completed or failed.
     pub fn drain(&self) {
         let target = self.submitted.load(Ordering::SeqCst);
-        let mut prog = self.shared.progress.lock().unwrap();
-        while prog.finished < target {
-            prog = self.shared.done_cv.wait(prog).unwrap();
+        let mut fin = self.shared.finished.lock().unwrap();
+        while *fin < target {
+            fin = self.shared.done_cv.wait(fin).unwrap();
         }
     }
 
@@ -315,16 +349,13 @@ impl ConcurrentServer {
             pool.join();
         }
         let wall_s = self.started.elapsed().as_secs_f64();
-        let prog = self.shared.progress.lock().unwrap();
-        if !prog.errors.is_empty() {
-            bail!(
-                "{} batch(es) failed; first: {}",
-                prog.errors.len(),
-                prog.errors[0]
-            );
+        {
+            let errors = self.shared.errors.lock().unwrap();
+            if !errors.is_empty() {
+                bail!("{} batch(es) failed; first: {}", errors.len(), errors[0]);
+            }
         }
-        let results = prog.completed.clone();
-        drop(prog);
+        let results = self.shared.merged_results();
         let latency = metrics::summarize(&results);
         let compute_rps = metrics::compute_throughput(&results);
         Ok(ServeReport {

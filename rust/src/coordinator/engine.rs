@@ -67,9 +67,16 @@ pub enum FfnMode {
 }
 
 /// The immutable weight set shared across engine replicas.
+///
+/// Each parameter is itself `Arc`-held so [`Engine::p`] can hand tensors to
+/// the artifact runtime as [`Value::F32`] handles without copying: every
+/// artifact call on every replica shares the one weight allocation. Cloning
+/// `EngineWeights` (the `Arc::make_mut` copy-on-write path of
+/// [`Engine::set_ffn_mode`]) clones only the `Arc` handles; the parameters
+/// that are then mutated get fresh allocations via `Arc::new`.
 #[derive(Clone)]
 struct EngineWeights {
-    params: BTreeMap<String, DenseTensor>,
+    params: BTreeMap<String, Arc<DenseTensor>>,
     /// Pre-converted W1^T n:m:g weights per layer (NativeNmg mode).
     nmg_w1t: Vec<NmgTensor>,
 }
@@ -130,7 +137,7 @@ impl Engine {
             } else {
                 DenseTensor::zeros(&io.shape)
             };
-            params.insert(io.name.clone(), t);
+            params.insert(io.name.clone(), Arc::new(t));
         }
         let mut engine = Engine {
             rt,
@@ -188,7 +195,7 @@ impl Engine {
                 let nmg = NmgTensor::from_dense(&w1t, n, m, g);
                 // Keep the served dense weights consistent with the pruned
                 // sparse ones (weights are pruned, not approximated).
-                w.params.insert(key, nmg.to_dense().transpose2());
+                w.params.insert(key, Arc::new(nmg.to_dense().transpose2()));
                 w.nmg_w1t.push(nmg);
             }
         }
@@ -210,8 +217,11 @@ impl Engine {
         self.rt.reset_timing();
     }
 
+    /// A parameter as a runtime [`Value`]: an `Arc` bump, never a tensor
+    /// copy — the hot-path guarantee that makes replica weight sharing real
+    /// on every artifact call.
     fn p(&self, name: &str) -> Value {
-        Value::F32(self.weights.params[name].clone())
+        Value::F32(Arc::clone(&self.weights.params[name]))
     }
 
     /// Full forward via the single whole-encoder artifact (baseline).
@@ -254,7 +264,7 @@ impl Engine {
             x = self.rt.call1(
                 &format!("attn_block_{tag}"),
                 &[
-                    Value::F32(x),
+                    Value::from(x),
                     self.p(&pre("ln1_g")), self.p(&pre("ln1_b")),
                     self.p(&pre("wq")), self.p(&pre("bq")),
                     self.p(&pre("wk")), self.p(&pre("bk")),
@@ -270,7 +280,7 @@ impl Engine {
                     x = self.rt.call1(
                         &format!("ffn_block_{tag}"),
                         &[
-                            Value::F32(x),
+                            Value::from(x),
                             self.p(&pre("ln2_g")), self.p(&pre("ln2_b")),
                             self.p(&pre("w1")), self.p(&pre("b1")),
                             self.p(&pre("w2")), self.p(&pre("b2")),
@@ -290,7 +300,7 @@ impl Engine {
         let logits = self.rt.call1(
             &format!("lm_head_{tag}"),
             &[
-                Value::F32(x),
+                Value::from(x),
                 self.p("lnf_g"), self.p("lnf_b"),
                 self.p("out_w"), self.p("out_b"),
             ],
@@ -342,5 +352,53 @@ impl Engine {
         (0..self.dims.batch * self.dims.seq)
             .map(|_| rng.below(self.dims.vocab as u32) as i32)
             .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_engine(mode: FfnMode) -> Engine {
+        let rt = ArtifactRuntime::open(std::path::PathBuf::from("target/nonexistent-artifacts"))
+            .unwrap();
+        Engine::new(rt, "tiny", mode, 7).unwrap()
+    }
+
+    #[test]
+    fn artifact_call_values_share_weight_storage() {
+        // Engine::p hands the runtime an Arc handle, not a copy: two calls
+        // for one parameter alias the identical allocation.
+        let e = tiny_engine(FfnMode::NativeDense);
+        let v1 = e.p("emb");
+        let v2 = e.p("emb");
+        let p1 = v1.as_f32().unwrap().data().as_ptr();
+        let p2 = v2.as_f32().unwrap().data().as_ptr();
+        assert_eq!(p1, p2, "Engine::p must not copy weight tensors");
+        assert_eq!(p1, e.param("emb").data().as_ptr());
+    }
+
+    #[test]
+    fn replicas_share_weights_by_pointer_identity_through_forwards() {
+        let mut a = tiny_engine(FfnMode::NativeNmg { n: 2, m: 4, g: 4 });
+        let mut b = a.replicate();
+        assert!(a.shares_weights_with(&b));
+        let before = a.param("layer0.w1").data().as_ptr();
+        assert_eq!(before, b.param("layer0.w1").data().as_ptr());
+
+        let mut rng = Pcg64::seeded(3);
+        let tokens = a.random_tokens(&mut rng);
+        a.forward(&tokens).unwrap();
+        b.forward(&tokens).unwrap();
+
+        // Zero per-forward weight copies on the artifact-call path: after
+        // serving traffic the same allocation still backs both replicas'
+        // parameters, and fresh Values still alias it.
+        assert!(a.shares_weights_with(&b));
+        assert_eq!(a.param("layer0.w1").data().as_ptr(), before);
+        assert_eq!(b.param("layer0.w1").data().as_ptr(), before);
+        let va = a.p("emb");
+        let vb = b.p("emb");
+        assert!(std::ptr::eq(va.as_f32().unwrap(), vb.as_f32().unwrap()));
     }
 }

@@ -9,10 +9,21 @@
 //! contract is unchanged: `compile` (one-time artifact preparation),
 //! `execute` (kernel time) and `transfer` (validation + host marshalling)
 //! buckets feed the coordinator's Fig. 11 latency breakdown.
+//!
+//! # Concurrency
+//!
+//! One runtime is shared by all engine replicas behind an `Arc`, so the
+//! per-call state is deliberately read-mostly: the prepared-artifact set is
+//! an `RwLock` taken for writing only on first preparation, and timing is
+//! sharded per thread (each replica worker charges its own shard; snapshots
+//! merge), so concurrent forwards never serialize on a single hot lock.
+//! `Value::F32` holds an `Arc<DenseTensor>`: producers that already share a
+//! tensor (engine replicas' weights) hand it to the runtime without copying
+//! a byte. See `src/runtime/README.md` for the value-sharing conventions.
 
 use std::collections::HashSet;
 use std::path::PathBuf;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
 
 use anyhow::{bail, Result};
@@ -23,10 +34,15 @@ use crate::tensor::DenseTensor;
 use crate::util::timer::TimeBreakdown;
 
 /// A typed host value crossing the Rust <-> runtime boundary.
+///
+/// Float tensors travel behind an `Arc`: cloning a `Value` (or building one
+/// from an already-shared tensor with `Value::from(arc)`) is a pointer bump,
+/// never a data copy. The owning converters ([`Value::into_f32`]) unwrap
+/// without copying when the handle is the sole owner.
 #[derive(Debug, Clone)]
 pub enum Value {
-    /// Dense float tensor.
-    F32(DenseTensor),
+    /// Dense float tensor (shared handle; clone is O(1)).
+    F32(Arc<DenseTensor>),
     /// Integer tensor (tokens, indices) with explicit shape.
     I32(Vec<usize>, Vec<i32>),
 }
@@ -48,8 +64,17 @@ impl Value {
         }
     }
 
-    /// Unwrap as a float tensor.
+    /// Unwrap as a float tensor. Zero-copy when this handle is the sole
+    /// owner; otherwise the data is cloned out of the shared allocation.
     pub fn into_f32(self) -> Result<DenseTensor> {
+        match self {
+            Value::F32(t) => Ok(Arc::try_unwrap(t).unwrap_or_else(|shared| (*shared).clone())),
+            other => bail!("expected f32 value, got {:?}", other.dtype()),
+        }
+    }
+
+    /// Unwrap the shared float-tensor handle without materializing a copy.
+    pub fn into_f32_shared(self) -> Result<Arc<DenseTensor>> {
         match self {
             Value::F32(t) => Ok(t),
             other => bail!("expected f32 value, got {:?}", other.dtype()),
@@ -59,7 +84,7 @@ impl Value {
     /// Borrow as a float tensor.
     pub fn as_f32(&self) -> Result<&DenseTensor> {
         match self {
-            Value::F32(t) => Ok(t),
+            Value::F32(t) => Ok(&**t),
             other => bail!("expected f32 value, got {:?}", other.dtype()),
         }
     }
@@ -67,7 +92,59 @@ impl Value {
 
 impl From<DenseTensor> for Value {
     fn from(t: DenseTensor) -> Self {
+        Value::F32(Arc::new(t))
+    }
+}
+
+impl From<Arc<DenseTensor>> for Value {
+    fn from(t: Arc<DenseTensor>) -> Self {
         Value::F32(t)
+    }
+}
+
+/// Shards for the per-thread timing accumulator. A small power of two well
+/// above any realistic replica count keeps the chance of two worker threads
+/// hashing to one shard low while bounding snapshot cost.
+const TIMING_SHARDS: usize = 16;
+
+/// Thread-sharded timing: each thread charges buckets to the shard its
+/// `ThreadId` hashes to, so concurrent replicas almost never contend on one
+/// breakdown lock. `snapshot` merges all shards.
+struct ShardedTimes {
+    shards: Vec<Mutex<TimeBreakdown>>,
+}
+
+impl ShardedTimes {
+    fn new() -> Self {
+        ShardedTimes {
+            shards: (0..TIMING_SHARDS).map(|_| Mutex::new(TimeBreakdown::new())).collect(),
+        }
+    }
+
+    /// The calling thread's shard.
+    fn shard(&self) -> &Mutex<TimeBreakdown> {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        std::thread::current().id().hash(&mut h);
+        &self.shards[(h.finish() as usize) % TIMING_SHARDS]
+    }
+
+    fn add(&self, name: &'static str, d: Duration) {
+        self.shard().lock().unwrap().add(name, d);
+    }
+
+    fn snapshot(&self) -> TimeBreakdown {
+        let mut out = TimeBreakdown::new();
+        for s in &self.shards {
+            out.merge(&s.lock().unwrap());
+        }
+        out
+    }
+
+    fn reset(&self) {
+        for s in &self.shards {
+            *s.lock().unwrap() = TimeBreakdown::new();
+        }
     }
 }
 
@@ -81,8 +158,9 @@ impl From<DenseTensor> for Value {
 pub struct ArtifactRuntime {
     dir: PathBuf,
     manifest: Manifest,
-    prepared: Mutex<HashSet<String>>,
-    times: Mutex<TimeBreakdown>,
+    /// Read-mostly: after warmup every call takes only the read lock.
+    prepared: RwLock<HashSet<String>>,
+    times: ShardedTimes,
 }
 
 /// Clamp a measured duration away from zero so timing buckets are always
@@ -127,8 +205,8 @@ impl ArtifactRuntime {
         ArtifactRuntime {
             dir,
             manifest,
-            prepared: Mutex::new(HashSet::new()),
-            times: Mutex::new(TimeBreakdown::new()),
+            prepared: RwLock::new(HashSet::new()),
+            times: ShardedTimes::new(),
         }
     }
 
@@ -148,16 +226,20 @@ impl ArtifactRuntime {
     }
 
     /// Prepare an artifact (validated once per runtime, charged to the
-    /// `compile` bucket — the PJRT-compile analog). The prepared-set lock is
-    /// held across the check and the preparation so concurrent replicas
-    /// hitting one artifact for the first time charge compile exactly once.
+    /// `compile` bucket — the PJRT-compile analog). Steady state takes only
+    /// the read lock; first use double-checks under the write lock so
+    /// concurrent replicas hitting one artifact for the first time charge
+    /// compile exactly once.
     pub fn load(&self, name: &str) -> Result<&ArtifactSpec> {
         let spec = self.manifest.get(name)?;
-        let mut prepared = self.prepared.lock().unwrap();
+        if self.prepared.read().unwrap().contains(name) {
+            return Ok(spec);
+        }
+        let mut prepared = self.prepared.write().unwrap();
         if !prepared.contains(name) {
             let t = Instant::now();
             native::prepare(spec)?;
-            self.times.lock().unwrap().add("compile", nonzero(t.elapsed()));
+            self.times.add("compile", nonzero(t.elapsed()));
             prepared.insert(name.to_string());
         }
         Ok(spec)
@@ -186,16 +268,16 @@ impl ArtifactRuntime {
                 );
             }
         }
-        self.times.lock().unwrap().add("transfer", nonzero(t.elapsed()));
+        let transfer_in = nonzero(t.elapsed());
 
         let t = Instant::now();
         let out = native::execute(spec, inputs)?;
-        self.times.lock().unwrap().add("execute", nonzero(t.elapsed()));
+        let execute = nonzero(t.elapsed());
 
         let t = Instant::now();
         if out.len() != spec.outputs.len() {
             bail!(
-                "artifact {name}: expected {} outputs, got {}",
+                "artifact {name}: expected {} outputs, produced {}",
                 spec.outputs.len(),
                 out.len()
             );
@@ -211,7 +293,14 @@ impl ArtifactRuntime {
                 );
             }
         }
-        self.times.lock().unwrap().add("transfer", nonzero(t.elapsed()));
+        let transfer_out = nonzero(t.elapsed());
+
+        // One shard-lock acquisition per call for all three buckets.
+        {
+            let mut times = self.times.shard().lock().unwrap();
+            times.add("transfer", transfer_in + transfer_out);
+            times.add("execute", execute);
+        }
         Ok(out)
     }
 
@@ -224,14 +313,14 @@ impl ArtifactRuntime {
         out.remove(0).into_f32()
     }
 
-    /// Snapshot of accumulated timing.
+    /// Snapshot of accumulated timing (merged across all thread shards).
     pub fn timing(&self) -> TimeBreakdown {
-        self.times.lock().unwrap().clone()
+        self.times.snapshot()
     }
 
     /// Reset accumulated timing.
     pub fn reset_timing(&self) {
-        *self.times.lock().unwrap() = TimeBreakdown::new();
+        self.times.reset();
     }
 }
 
@@ -248,13 +337,42 @@ mod tests {
 
     #[test]
     fn value_shape_dtype_roundtrip() {
-        let v = Value::F32(DenseTensor::zeros(&[2, 3]));
+        let v = Value::from(DenseTensor::zeros(&[2, 3]));
         assert_eq!(v.shape(), &[2, 3]);
         assert_eq!(v.dtype(), DType::F32);
         let v = Value::I32(vec![4], vec![1, 2, 3, 4]);
         assert_eq!(v.shape(), &[4]);
         assert_eq!(v.dtype(), DType::I32);
         assert!(v.into_f32().is_err());
+    }
+
+    #[test]
+    fn value_clone_shares_storage_and_sole_owner_unwraps_in_place() {
+        let v = Value::from(DenseTensor::ones(&[4, 4]));
+        let w = v.clone();
+        // Clones alias one allocation (zero-copy sharing).
+        let (pv, pw) = (v.as_f32().unwrap().data().as_ptr(), w.as_f32().unwrap().data().as_ptr());
+        assert_eq!(pv, pw, "cloned Value must share tensor storage");
+        drop(v);
+        // Sole owner: into_f32 returns the same allocation, no copy.
+        let t = w.into_f32().unwrap();
+        assert_eq!(t.data().as_ptr(), pw, "sole-owner unwrap must not copy");
+    }
+
+    #[test]
+    fn shared_value_into_f32_copies_out_but_shared_unwrap_does_not() {
+        let v = Value::from(DenseTensor::ones(&[2, 2]));
+        let w = v.clone();
+        let t = w.into_f32().unwrap(); // v still holds the original
+        assert_ne!(t.data().as_ptr(), v.as_f32().unwrap().data().as_ptr());
+        assert!(t.allclose(v.as_f32().unwrap(), 0.0, 0.0));
+        // The shared unwrap keeps aliasing the original allocation even
+        // while other handles exist, and round-trips back into a Value.
+        let arc = v.clone().into_f32_shared().unwrap();
+        assert_eq!(arc.data().as_ptr(), v.as_f32().unwrap().data().as_ptr());
+        assert_eq!(Value::from(arc).as_f32().unwrap().data().as_ptr(),
+                   v.as_f32().unwrap().data().as_ptr());
+        assert!(Value::I32(vec![1], vec![1]).into_f32_shared().is_err());
     }
 
     #[test]
@@ -309,5 +427,31 @@ mod tests {
         rt.call1("gemm_dense_8x48x16", &[a.into(), b.into()]).unwrap();
         // Second call hits the prepared cache: no further compile time.
         assert_eq!(rt.timing().secs("compile"), compile0);
+    }
+
+    #[test]
+    fn timing_merges_across_threads() {
+        // Calls from several threads land in different shards; the snapshot
+        // must still see all of them, and compile must be charged once.
+        let rt = std::sync::Arc::new(runtime());
+        let mut handles = Vec::new();
+        for seed in 0..4u64 {
+            let rt = rt.clone();
+            handles.push(std::thread::spawn(move || {
+                let mut rng = Pcg64::seeded(seed);
+                let a = DenseTensor::randn(&[8, 48], &mut rng);
+                let b = DenseTensor::randn(&[48, 16], &mut rng);
+                rt.call1("gemm_dense_8x48x16", &[a.into(), b.into()]).unwrap();
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let t = rt.timing();
+        assert!(t.secs("execute") > 0.0);
+        assert!(t.secs("transfer") > 0.0);
+        assert!(t.secs("compile") > 0.0);
+        rt.reset_timing();
+        assert_eq!(rt.timing().secs("execute"), 0.0);
     }
 }

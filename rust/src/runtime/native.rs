@@ -376,22 +376,22 @@ pub fn execute(spec: &ArtifactSpec, inputs: &[Value]) -> Result<Vec<Value>> {
     let name = spec.name.as_str();
     if name.starts_with("gemm_dense_") {
         let out = dense_gemm::matmul(f32_in(inputs, 0)?, f32_in(inputs, 1)?);
-        return Ok(vec![Value::F32(out)]);
+        return Ok(vec![Value::from(out)]);
     }
     if name.starts_with("gemm_masked_") {
         let out =
             dense_gemm::matmul_masked(f32_in(inputs, 0)?, f32_in(inputs, 1)?, f32_in(inputs, 2)?);
-        return Ok(vec![Value::F32(out)]);
+        return Ok(vec![Value::from(out)]);
     }
     if name.starts_with("gemm_nmg_") {
         let sparse = nmg_from_inputs(&spec.meta, f32_in(inputs, 0)?, i32_in(inputs, 1)?)?;
         let out = nmg_gemm::spmm(&sparse, f32_in(inputs, 2)?);
-        return Ok(vec![Value::F32(out)]);
+        return Ok(vec![Value::from(out)]);
     }
     if name.starts_with("embed_") {
         let cfg = cfg_from_meta(&spec.meta)?;
         let x = embed_forward(f32_in(inputs, 0)?, f32_in(inputs, 1)?, i32_in(inputs, 2)?, &cfg);
-        return Ok(vec![Value::F32(x.reshape(&[cfg.batch, cfg.seq, cfg.d_model]))]);
+        return Ok(vec![Value::from(x.reshape(&[cfg.batch, cfg.seq, cfg.d_model]))]);
     }
     if name.starts_with("attn_block_") {
         let cfg = cfg_from_meta(&spec.meta)?;
@@ -409,7 +409,7 @@ pub fn execute(spec: &ArtifactSpec, inputs: &[Value]) -> Result<Vec<Value>> {
             bo: f32_in(inputs, 10)?,
         };
         let (out, _) = attn_forward(&x, &w, cfg.batch, cfg.seq, cfg.n_heads);
-        return Ok(vec![Value::F32(out.reshape(&[cfg.batch, cfg.seq, cfg.d_model]))]);
+        return Ok(vec![Value::from(out.reshape(&[cfg.batch, cfg.seq, cfg.d_model]))]);
     }
     if name.starts_with("ffn_block_nmg_") {
         let cfg = cfg_from_meta(&spec.meta)?;
@@ -423,7 +423,7 @@ pub fn execute(spec: &ArtifactSpec, inputs: &[Value]) -> Result<Vec<Value>> {
         let o = dense_gemm::matmul(&h, f32_in(inputs, 6)?);
         let o = elementwise::bias_add(&o, f32_in(inputs, 7)?.data());
         let out = x.zip(&o, |a, b| a + b);
-        return Ok(vec![Value::F32(out.reshape(&[cfg.batch, cfg.seq, cfg.d_model]))]);
+        return Ok(vec![Value::from(out.reshape(&[cfg.batch, cfg.seq, cfg.d_model]))]);
     }
     if name.starts_with("ffn_block_") {
         let cfg = cfg_from_meta(&spec.meta)?;
@@ -437,7 +437,7 @@ pub fn execute(spec: &ArtifactSpec, inputs: &[Value]) -> Result<Vec<Value>> {
             b2: f32_in(inputs, 6)?,
         };
         let (out, _) = ffn_forward(&x, &w, None);
-        return Ok(vec![Value::F32(out.reshape(&[cfg.batch, cfg.seq, cfg.d_model]))]);
+        return Ok(vec![Value::from(out.reshape(&[cfg.batch, cfg.seq, cfg.d_model]))]);
     }
     if name.starts_with("lm_head_") {
         let cfg = cfg_from_meta(&spec.meta)?;
@@ -447,14 +447,14 @@ pub fn execute(spec: &ArtifactSpec, inputs: &[Value]) -> Result<Vec<Value>> {
             &dense_gemm::matmul(&y, f32_in(inputs, 3)?),
             f32_in(inputs, 4)?.data(),
         );
-        return Ok(vec![Value::F32(logits.reshape(&[cfg.batch, cfg.seq, cfg.vocab]))]);
+        return Ok(vec![Value::from(logits.reshape(&[cfg.batch, cfg.seq, cfg.vocab]))]);
     }
     if name.starts_with("encoder_fwd_") {
         let cfg = cfg_from_meta(&spec.meta)?;
         let params = named_f32_inputs(spec, inputs)?;
         let tokens = i32_in(inputs, spec.input_index("tokens")?)?;
         let logits = encoder_forward(&cfg, &params, tokens, None).logits;
-        return Ok(vec![Value::F32(logits.reshape(&[cfg.batch, cfg.seq, cfg.vocab]))]);
+        return Ok(vec![Value::from(logits.reshape(&[cfg.batch, cfg.seq, cfg.vocab]))]);
     }
     if name.starts_with("train_step_") {
         return train_step(spec, inputs);
@@ -486,7 +486,7 @@ fn named_f32_inputs<'a>(
     let mut map = BTreeMap::new();
     for (io, v) in spec.inputs.iter().zip(inputs) {
         if let Value::F32(t) = v {
-            map.insert(io.name.clone(), t);
+            map.insert(io.name.clone(), &**t);
         }
     }
     Ok(map)
@@ -907,10 +907,10 @@ fn train_step(spec: &ArtifactSpec, inputs: &[Value]) -> Result<Vec<Value>> {
             ("tokens", _) | ("targets", _) => {}
             ("lr", Value::F32(_)) => {}
             (name, Value::F32(t)) if name.starts_with("mask.") => {
-                masks.insert(name.trim_start_matches("mask.").to_string(), t);
+                masks.insert(name.trim_start_matches("mask.").to_string(), &**t);
             }
             (name, Value::F32(t)) => {
-                params.insert(name.to_string(), t);
+                params.insert(name.to_string(), &**t);
                 param_order.push(name.to_string());
             }
             _ => {}
@@ -979,7 +979,7 @@ fn train_step(spec: &ArtifactSpec, inputs: &[Value]) -> Result<Vec<Value>> {
     grads.add("pos", dpos);
 
     // Updates: q = p - lr * grad, re-masked for masked params (Fig. 2).
-    let mut out = vec![Value::F32(DenseTensor::from_vec(&[], vec![loss]))];
+    let mut out = vec![Value::from(DenseTensor::from_vec(&[], vec![loss]))];
     for name in &param_order {
         let mut q = (*params[name]).clone();
         if let Some(g) = grads.grads.get(name) {
@@ -988,7 +988,7 @@ fn train_step(spec: &ArtifactSpec, inputs: &[Value]) -> Result<Vec<Value>> {
         if let Some(mask) = masks.get(name) {
             q = q.zip(mask, |v, m| v * m);
         }
-        out.push(Value::F32(q));
+        out.push(Value::from(q));
     }
     Ok(out)
 }
@@ -1020,20 +1020,20 @@ mod tests {
                     io.shape.clone(),
                     (0..io.numel()).map(|_| rng.below(cfg.vocab as u32) as i32).collect(),
                 ),
-                "lr" => Value::F32(DenseTensor::from_vec(&[], vec![0.05])),
+                "lr" => Value::from(DenseTensor::from_vec(&[], vec![0.05])),
                 name if name.starts_with("mask.") => {
                     let data = (0..io.numel())
                         .map(|i| if sparse && i % 2 == 0 { 0.0 } else { 1.0 })
                         .collect();
-                    Value::F32(DenseTensor::from_vec(&io.shape, data))
+                    Value::from(DenseTensor::from_vec(&io.shape, data))
                 }
-                name if name.ends_with("_g") => Value::F32(DenseTensor::ones(&io.shape)),
+                name if name.ends_with("_g") => Value::from(DenseTensor::ones(&io.shape)),
                 _ if io.shape.len() == 2 => {
                     let mut w = DenseTensor::randn(&io.shape, &mut rng);
                     w.scale(0.15);
-                    Value::F32(w)
+                    Value::from(w)
                 }
-                _ => Value::F32(DenseTensor::zeros(&io.shape)),
+                _ => Value::from(DenseTensor::zeros(&io.shape)),
             };
             inputs.push(v);
         }
@@ -1043,7 +1043,7 @@ mod tests {
     fn loss_of(spec: &ArtifactSpec, inputs: &[Value]) -> f32 {
         let mut zero_lr = inputs.to_vec();
         let li = spec.input_index("lr").unwrap();
-        zero_lr[li] = Value::F32(DenseTensor::from_vec(&[], vec![0.0]));
+        zero_lr[li] = Value::from(DenseTensor::from_vec(&[], vec![0.0]));
         let out = execute(spec, &zero_lr).unwrap();
         out[0].as_f32().unwrap().data()[0]
     }
@@ -1118,9 +1118,9 @@ mod tests {
         let val_spec = &spec.inputs[spec.input_index("val").unwrap()];
         let idx_spec = &spec.inputs[spec.input_index("idx").unwrap()];
         let inputs = vec![
-            Value::F32(DenseTensor::from_vec(&val_spec.shape, sparse.val_flat().to_vec())),
+            Value::from(DenseTensor::from_vec(&val_spec.shape, sparse.val_flat().to_vec())),
             Value::I32(idx_spec.shape.clone(), sparse.idx_flat().iter().map(|&i| i as i32).collect()),
-            Value::F32(b.clone()),
+            Value::from(b.clone()),
         ];
         let got = execute(&spec, &inputs).unwrap().remove(0).into_f32().unwrap();
         let want = nmg_gemm::spmm(&sparse, &b);
@@ -1134,7 +1134,7 @@ mod tests {
         // lr = 1 makes the update read back the raw gradient: g = p - p'.
         let mut lr1 = inputs.clone();
         let li = spec.input_index("lr").unwrap();
-        lr1[li] = Value::F32(DenseTensor::from_vec(&[], vec![1.0]));
+        lr1[li] = Value::from(DenseTensor::from_vec(&[], vec![1.0]));
         let out = execute(&spec, &lr1).unwrap();
 
         let eps = 1e-2f32;
@@ -1158,11 +1158,11 @@ mod tests {
             let mut up = inputs.clone();
             let mut t = p0.clone();
             t.data_mut()[coord] += eps;
-            up[pi] = Value::F32(t);
+            up[pi] = Value::from(t);
             let mut dn = inputs.clone();
             let mut t = p0.clone();
             t.data_mut()[coord] -= eps;
-            dn[pi] = Value::F32(t);
+            dn[pi] = Value::from(t);
             let fd = (loss_of(&spec, &up) - loss_of(&spec, &dn)) / (2.0 * eps);
             assert!(
                 (fd - grad).abs() < 2e-2 * (1.0 + fd.abs()),

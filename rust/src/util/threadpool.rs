@@ -6,7 +6,9 @@
 //! * [`ThreadPool::scope_chunks`] — split an index range into contiguous
 //!   chunks and run a closure per chunk on worker threads (used by the GEMM
 //!   kernels to parallelize over row panels).
-//! * [`parallel_for`] — one-shot convenience over a global pool.
+//! * [`parallel_for`] — one-shot convenience over a global pool, capped by
+//!   the number of registered concurrent kernel users (engine replicas) so
+//!   R replicas don't oversubscribe the machine by ~R x cores.
 //! * [`WorkerPool`] — named, persistent worker threads consuming boxed jobs
 //!   from a [`crate::util::channel`] queue (the serving subsystem runs its
 //!   batcher and engine replicas on one of these).
@@ -15,6 +17,40 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
 
 use super::channel;
+
+/// Number of concurrently-registered kernel users (see
+/// [`register_kernel_users`]). 0 means "no serving layer active": kernels
+/// get the whole pool.
+static ACTIVE_KERNEL_USERS: AtomicUsize = AtomicUsize::new(0);
+
+/// RAII registration of `n` concurrent kernel users. While the guard lives,
+/// [`parallel_for`] divides the global pool among all registered users, so
+/// e.g. 4 engine replicas on an 8-core host each get 2 kernel threads
+/// instead of each GEMM trying to fan out over all 8 cores at once (which
+/// oversubscribes by ~replicas x cores and thrashes). Dropping the guard
+/// returns its share to the pool. Guards compose: two concurrent servers
+/// with 2 replicas each register 4 users total.
+#[derive(Debug)]
+pub struct KernelUsersGuard {
+    n: usize,
+}
+
+/// Register `n` concurrent kernel users (one per engine replica, typically).
+pub fn register_kernel_users(n: usize) -> KernelUsersGuard {
+    ACTIVE_KERNEL_USERS.fetch_add(n, Ordering::SeqCst);
+    KernelUsersGuard { n }
+}
+
+/// Currently registered kernel users.
+pub fn active_kernel_users() -> usize {
+    ACTIVE_KERNEL_USERS.load(Ordering::SeqCst)
+}
+
+impl Drop for KernelUsersGuard {
+    fn drop(&mut self) {
+        ACTIVE_KERNEL_USERS.fetch_sub(self.n, Ordering::SeqCst);
+    }
+}
 
 /// A persistent pool of worker threads executing closures.
 pub struct ThreadPool {
@@ -42,11 +78,21 @@ impl ThreadPool {
     where
         F: Fn(usize, usize) + Sync,
     {
+        self.scope_chunks_with(n, grain, self.workers, f)
+    }
+
+    /// [`ThreadPool::scope_chunks`] with an explicit worker cap for this
+    /// call. `max_workers <= 1` runs inline on the caller with no thread
+    /// spawns at all — the fast path for capped replicas.
+    pub fn scope_chunks_with<F>(&self, n: usize, grain: usize, max_workers: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
         if n == 0 {
             return;
         }
         let grain = grain.max(1);
-        let nworkers = self.workers.min(n.div_ceil(grain));
+        let nworkers = self.workers.min(max_workers.max(1)).min(n.div_ceil(grain));
         if nworkers <= 1 {
             f(0, n);
             return;
@@ -178,12 +224,18 @@ pub fn global() -> &'static Arc<ThreadPool> {
     })
 }
 
-/// Run `f(start, end)` over `[0, n)` chunks on the global pool.
+/// Run `f(start, end)` over `[0, n)` chunks on the global pool. When kernel
+/// users are registered (engine replicas serving concurrently), each call is
+/// capped to its fair share `cores / users` of the pool so replicas compose
+/// with kernel parallelism instead of multiplying against it.
 pub fn parallel_for<F>(n: usize, grain: usize, f: F)
 where
     F: Fn(usize, usize) + Sync,
 {
-    global().scope_chunks(n, grain, f)
+    let pool = global();
+    let users = active_kernel_users().max(1);
+    let cap = (pool.workers() / users).max(1);
+    pool.scope_chunks_with(n, grain, cap, f)
 }
 
 #[cfg(test)]
@@ -250,5 +302,41 @@ mod tests {
             count.fetch_add(e - s, Ordering::SeqCst);
         });
         assert_eq!(count.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn capped_scope_chunks_still_covers_range() {
+        let pool = ThreadPool::new(8);
+        let total = AtomicU64::new(0);
+        pool.scope_chunks_with(1000, 10, 2, |s, e| {
+            let local: u64 = (s..e).map(|i| i as u64).sum();
+            total.fetch_add(local, Ordering::SeqCst);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), (0..1000u64).sum());
+    }
+
+    #[test]
+    fn kernel_users_guard_caps_parallel_for_and_releases() {
+        // One test (not two) so the global ACTIVE_KERNEL_USERS assertions
+        // can't race against a sibling test's guard in the parallel harness;
+        // this is the only lib test touching the counter.
+        let before = active_kernel_users();
+        let g = register_kernel_users(3);
+        assert!(active_kernel_users() >= before + 3);
+        drop(g);
+        assert_eq!(active_kernel_users(), before);
+
+        // A user count far above any core count forces the inline path;
+        // coverage must be unchanged.
+        let _g = register_kernel_users(1024);
+        let hits: Vec<AtomicUsize> = (0..500).map(|_| AtomicUsize::new(0)).collect();
+        parallel_for(500, 7, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+        drop(_g);
+        assert_eq!(active_kernel_users(), before);
     }
 }

@@ -1,0 +1,256 @@
+//! Property-based round-trip tests for every sparse format.
+//!
+//! Sparse-format correctness bugs are subtle (Hoefler et al., 2021): an
+//! off-by-one in an indptr, a dropped explicit zero, or a mis-permuted
+//! chunk silently corrupts downstream numerics. These nets check, over
+//! randomized shapes and densities:
+//!
+//! * exact-compression formats (CSR/CSC/COO/ELL/BCSR/Masked): dense ->
+//!   format -> dense is bit-exact;
+//! * structured formats (n:m, n:m:g): pruning preserves kept values
+//!   verbatim, respects the structural budget, and (n:m) is idempotent —
+//!   a conforming dense round-trips exactly;
+//! * n:m:g flat (de)serialization (`val_flat`/`idx_flat` -> `from_flat`)
+//!   is exact;
+//! * `convert.rs` cross-format paths agree with the source's `to_dense`.
+
+use sten::formats::{
+    convert, AnyTensor, BcsrTensor, CooTensor, CscTensor, CsrTensor, EllTensor, Layout,
+    MaskedTensor, NmTensor, NmgTensor,
+};
+use sten::tensor::DenseTensor;
+use sten::util::proptest;
+use sten::util::rng::Pcg64;
+
+/// Random (rows x cols) dense matrix with ~`density` nonzero fraction.
+fn random_sparse(rng: &mut Pcg64, rows: usize, cols: usize, density: f32) -> DenseTensor {
+    let data = (0..rows * cols)
+        .map(|_| if rng.next_f32() < density { rng.normal() } else { 0.0 })
+        .collect();
+    DenseTensor::from_vec(&[rows, cols], data)
+}
+
+#[test]
+fn prop_exact_formats_roundtrip_exactly() {
+    proptest::check(
+        "exact-format-roundtrip",
+        40,
+        |rng| {
+            let rows = 1 + rng.below(24) as usize;
+            let cols = 1 + rng.below(24) as usize;
+            let density = rng.next_f32();
+            (rows, cols, density, rng.next_u64())
+        },
+        |&(rows, cols, density, seed)| {
+            let mut rng = Pcg64::seeded(seed);
+            let d = random_sparse(&mut rng, rows, cols, density);
+            let back = [
+                CsrTensor::from_dense(&d).to_dense(),
+                CscTensor::from_dense(&d).to_dense(),
+                CooTensor::from_dense(&d).to_dense(),
+                EllTensor::from_dense(&d).to_dense(),
+                MaskedTensor::from_dense(&d).to_dense(),
+            ];
+            back.iter().all(|b| b.allclose(&d, 0.0, 0.0))
+        },
+    );
+}
+
+#[test]
+fn prop_bcsr_roundtrips_exactly_on_divisible_shapes() {
+    proptest::check(
+        "bcsr-roundtrip",
+        30,
+        |rng| {
+            let bh = 1 + rng.below(4) as usize;
+            let bw = 1 + rng.below(4) as usize;
+            let rows = bh * (1 + rng.below(6) as usize);
+            let cols = bw * (1 + rng.below(6) as usize);
+            let density = rng.next_f32();
+            (bh, bw, rows, cols, density, rng.next_u64())
+        },
+        |&(bh, bw, rows, cols, density, seed)| {
+            let mut rng = Pcg64::seeded(seed);
+            let d = random_sparse(&mut rng, rows, cols, density);
+            BcsrTensor::from_dense(&d, bh, bw).to_dense().allclose(&d, 0.0, 0.0)
+        },
+    );
+}
+
+#[test]
+fn prop_nm_preserves_kept_values_and_is_idempotent() {
+    proptest::check(
+        "nm-roundtrip",
+        30,
+        |rng| {
+            let m = [2usize, 4, 8][rng.below(3) as usize];
+            let n = 1 + rng.below(m as u32) as usize;
+            let rows = m * (1 + rng.below(5) as usize);
+            let cols = 1 + rng.below(12) as usize;
+            (n, m, rows, cols, rng.next_u64())
+        },
+        |&(n, m, rows, cols, seed)| {
+            let mut rng = Pcg64::seeded(seed);
+            let d = random_sparse(&mut rng, rows, cols, 0.8);
+            let pruned = NmTensor::from_dense(&d, n, m).to_dense();
+            // Every surviving value is the original, untouched.
+            for r in 0..rows {
+                for c in 0..cols {
+                    let v = pruned.get2(r, c);
+                    if v != 0.0 && v != d.get2(r, c) {
+                        return false;
+                    }
+                }
+            }
+            // Structural budget: at most n nonzeros per (m-block, column).
+            for b in 0..rows / m {
+                for c in 0..cols {
+                    let nnz = (0..m).filter(|&i| pruned.get2(b * m + i, c) != 0.0).count();
+                    if nnz > n {
+                        return false;
+                    }
+                }
+            }
+            // A conforming dense round-trips exactly (idempotence).
+            NmTensor::from_dense(&pruned, n, m).to_dense().allclose(&pruned, 0.0, 0.0)
+        },
+    );
+}
+
+#[test]
+fn prop_nmg_preserves_kept_values_and_flat_roundtrip_is_exact() {
+    proptest::check(
+        "nmg-roundtrip",
+        25,
+        |rng| {
+            let fmts = [(2usize, 4usize, 2usize), (1, 4, 4), (2, 8, 2), (1, 8, 1)];
+            let (n, m, g) = fmts[rng.below(4) as usize];
+            let rows = m * (1 + rng.below(4) as usize);
+            let cols = 1 + rng.below(40) as usize;
+            (n, m, g, rows, cols, rng.next_u64())
+        },
+        |&(n, m, g, rows, cols, seed)| {
+            let mut rng = Pcg64::seeded(seed);
+            let d = random_sparse(&mut rng, rows, cols, 0.9);
+            let t = NmgTensor::from_dense(&d, n, m, g);
+            let pruned = t.to_dense();
+            // Kept values are verbatim; per-column budget holds per slab.
+            for r in 0..rows {
+                for c in 0..cols {
+                    let v = pruned.get2(r, c);
+                    if v != 0.0 && v != d.get2(r, c) {
+                        return false;
+                    }
+                }
+            }
+            for s in 0..rows / m {
+                for c in 0..cols {
+                    let nnz = (0..m).filter(|&i| pruned.get2(s * m + i, c) != 0.0).count();
+                    if nnz > n {
+                        return false;
+                    }
+                }
+            }
+            // Flat serialization round-trips the format exactly.
+            let idx: Vec<u32> = t.idx_flat().to_vec();
+            let rebuilt = NmgTensor::from_flat(
+                [rows, cols],
+                n,
+                m,
+                g,
+                t.val_flat().to_vec(),
+                idx,
+            );
+            rebuilt.to_dense().allclose(&pruned, 0.0, 0.0)
+        },
+    );
+}
+
+#[test]
+fn prop_lossless_conversions_agree_across_formats() {
+    proptest::check(
+        "convert-cross-format-agreement",
+        25,
+        |rng| {
+            let rows = 1 + rng.below(16) as usize;
+            let cols = 1 + rng.below(16) as usize;
+            let density = rng.next_f32();
+            (rows, cols, density, rng.next_u64())
+        },
+        |&(rows, cols, density, seed)| {
+            let mut rng = Pcg64::seeded(seed);
+            let d = random_sparse(&mut rng, rows, cols, density);
+            let sources: Vec<AnyTensor> = vec![
+                AnyTensor::Dense(d.clone()),
+                AnyTensor::Csr(CsrTensor::from_dense(&d)),
+                AnyTensor::Csc(CscTensor::from_dense(&d)),
+                AnyTensor::Coo(CooTensor::from_dense(&d)),
+                AnyTensor::Ell(EllTensor::from_dense(&d)),
+                AnyTensor::Masked(MaskedTensor::from_dense(&d)),
+            ];
+            let targets =
+                [Layout::Dense, Layout::Csr, Layout::Csc, Layout::Coo, Layout::Ell, Layout::Masked];
+            for src in &sources {
+                let want = src.to_dense();
+                for &target in &targets {
+                    match convert::lossless(src, target) {
+                        Some(conv) => {
+                            if conv.layout() != target
+                                || !conv.to_dense().allclose(&want, 0.0, 0.0)
+                            {
+                                return false;
+                            }
+                        }
+                        None => return false, // all exact targets must be offered
+                    }
+                }
+                // Structured targets need sparsifiers: never offered.
+                if convert::lossless(src, Layout::Nm).is_some()
+                    || convert::lossless(src, Layout::Nmg).is_some()
+                {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_structured_sources_escape_losslessly() {
+    proptest::check(
+        "nmg-escape-lossless",
+        20,
+        |rng| {
+            let rows = 4 * (1 + rng.below(4) as usize);
+            let cols = 1 + rng.below(24) as usize;
+            (rows, cols, rng.next_u64())
+        },
+        |&(rows, cols, seed)| {
+            let mut rng = Pcg64::seeded(seed);
+            let d = DenseTensor::randn(&[rows, cols], &mut rng);
+            let src = AnyTensor::Nmg(NmgTensor::from_dense(&d, 2, 4, 2));
+            let want = src.to_dense();
+            [Layout::Dense, Layout::Csr, Layout::Csc, Layout::Coo, Layout::Ell, Layout::Masked]
+                .iter()
+                .all(|&target| match convert::lossless(&src, target) {
+                    Some(conv) => conv.to_dense().allclose(&want, 0.0, 0.0),
+                    None => false,
+                })
+        },
+    );
+}
+
+#[test]
+fn all_zero_and_single_element_edge_cases() {
+    // Degenerate inputs exercise empty index arrays and width-0 ELL.
+    for d in [DenseTensor::zeros(&[4, 8]), DenseTensor::zeros(&[1, 1]), DenseTensor::ones(&[1, 1])]
+    {
+        assert!(CsrTensor::from_dense(&d).to_dense().allclose(&d, 0.0, 0.0));
+        assert!(CscTensor::from_dense(&d).to_dense().allclose(&d, 0.0, 0.0));
+        assert!(CooTensor::from_dense(&d).to_dense().allclose(&d, 0.0, 0.0));
+        assert!(EllTensor::from_dense(&d).to_dense().allclose(&d, 0.0, 0.0));
+        assert!(MaskedTensor::from_dense(&d).to_dense().allclose(&d, 0.0, 0.0));
+        assert!(BcsrTensor::from_dense(&d, 1, 1).to_dense().allclose(&d, 0.0, 0.0));
+    }
+}

@@ -1,0 +1,160 @@
+//! Property-based kernel equivalence: every sparse GEMM matches the naive
+//! dense reference on randomized shapes and sparsities within 1e-5,
+//! including empty-row and all-zero edge cases. This is the Nerva lesson
+//! (Wesselink et al., 2024): truly-sparse kernels only pay off if they are
+//! *exactly* as correct as the dense path they replace.
+
+use sten::formats::{BcsrTensor, CscTensor, CsrTensor, EllTensor, NmgTensor};
+use sten::kernels::{bcsr_gemm, csc_gemm, csr_gemm, dense_gemm, ell_gemm, nmg_gemm};
+use sten::tensor::DenseTensor;
+use sten::util::proptest;
+use sten::util::rng::Pcg64;
+
+const TOL: f32 = 1e-5;
+
+/// Random (rows x cols) dense matrix with ~`density` nonzero fraction.
+fn random_sparse(rng: &mut Pcg64, rows: usize, cols: usize, density: f32) -> DenseTensor {
+    let data = (0..rows * cols)
+        .map(|_| if rng.next_f32() < density { rng.normal() } else { 0.0 })
+        .collect();
+    DenseTensor::from_vec(&[rows, cols], data)
+}
+
+/// Zero out an entire row (the empty-row edge case every row-indexed kernel
+/// must survive: empty indptr span, zero ELL occupancy, missing blocks).
+fn clear_row(d: &mut DenseTensor, r: usize) {
+    let cols = d.cols();
+    for c in 0..cols {
+        d.set2(r, c, 0.0);
+    }
+}
+
+fn gen_case(rng: &mut Pcg64) -> (usize, usize, usize, f32, u64) {
+    let m = 1 + rng.below(32) as usize;
+    let k = 1 + rng.below(48) as usize;
+    let n = 1 + rng.below(32) as usize;
+    // Sweep the density range including fully-empty matrices.
+    let density = [0.0f32, 0.05, 0.3, 0.7, 1.0][rng.below(5) as usize];
+    (m, k, n, density, rng.next_u64())
+}
+
+#[test]
+fn prop_dense_blocked_matches_naive() {
+    proptest::check("dense-gemm-vs-naive", 25, gen_case, |&(m, k, n, density, seed)| {
+        let mut rng = Pcg64::seeded(seed);
+        let a = random_sparse(&mut rng, m, k, density);
+        let b = DenseTensor::randn(&[k, n], &mut rng);
+        dense_gemm::matmul(&a, &b).allclose(&dense_gemm::matmul_naive(&a, &b), TOL, TOL)
+    });
+}
+
+#[test]
+fn prop_csr_matches_dense() {
+    proptest::check("csr-gemm-vs-dense", 25, gen_case, |&(m, k, n, density, seed)| {
+        let mut rng = Pcg64::seeded(seed);
+        let mut a = random_sparse(&mut rng, m, k, density);
+        clear_row(&mut a, rng.below(m as u32) as usize);
+        let b = DenseTensor::randn(&[k, n], &mut rng);
+        let got = csr_gemm::spmm(&CsrTensor::from_dense(&a), &b);
+        got.allclose(&dense_gemm::matmul_naive(&a, &b), TOL, TOL)
+    });
+}
+
+#[test]
+fn prop_csc_matches_dense() {
+    proptest::check("csc-gemm-vs-dense", 25, gen_case, |&(m, k, n, density, seed)| {
+        let mut rng = Pcg64::seeded(seed);
+        let a = DenseTensor::randn(&[m, k], &mut rng);
+        let mut w = random_sparse(&mut rng, k, n, density);
+        clear_row(&mut w, rng.below(k as u32) as usize);
+        let got = csc_gemm::spmm_dense_csc(&a, &CscTensor::from_dense(&w));
+        got.allclose(&dense_gemm::matmul_naive(&a, &w), TOL, TOL)
+    });
+}
+
+#[test]
+fn prop_ell_matches_dense() {
+    proptest::check("ell-gemm-vs-dense", 25, gen_case, |&(m, k, n, density, seed)| {
+        let mut rng = Pcg64::seeded(seed);
+        let mut a = random_sparse(&mut rng, m, k, density);
+        // Skew the occupancy: one empty row plus one (possibly) full row.
+        clear_row(&mut a, rng.below(m as u32) as usize);
+        let b = DenseTensor::randn(&[k, n], &mut rng);
+        let got = ell_gemm::spmm(&EllTensor::from_dense(&a), &b);
+        got.allclose(&dense_gemm::matmul_naive(&a, &b), TOL, TOL)
+    });
+}
+
+#[test]
+fn prop_bcsr_matches_dense() {
+    proptest::check(
+        "bcsr-gemm-vs-dense",
+        25,
+        |rng| {
+            let bh = 1 + rng.below(4) as usize;
+            let bw = 1 + rng.below(4) as usize;
+            let m = bh * (1 + rng.below(6) as usize);
+            let k = bw * (1 + rng.below(6) as usize);
+            let n = 1 + rng.below(24) as usize;
+            let density = [0.0f32, 0.2, 0.8][rng.below(3) as usize];
+            (bh, bw, m, k, n, density, rng.next_u64())
+        },
+        |&(bh, bw, m, k, n, density, seed)| {
+            let mut rng = Pcg64::seeded(seed);
+            let mut a = random_sparse(&mut rng, m, k, density);
+            clear_row(&mut a, rng.below(m as u32) as usize);
+            let b = DenseTensor::randn(&[k, n], &mut rng);
+            let got = bcsr_gemm::spmm(&BcsrTensor::from_dense(&a, bh, bw), &b);
+            got.allclose(&dense_gemm::matmul_naive(&a, &b), TOL, TOL)
+        },
+    );
+}
+
+#[test]
+fn prop_nmg_matches_dense_over_pruned_weights() {
+    proptest::check(
+        "nmg-gemm-vs-dense",
+        20,
+        |rng| {
+            let fmts = [(2usize, 4usize, 4usize), (1, 4, 2), (2, 8, 2)];
+            let (nn, m, g) = fmts[rng.below(3) as usize];
+            let slabs = 1 + rng.below(3) as usize;
+            let k = 1 + rng.below(48) as usize;
+            let ncols = 1 + rng.below(32) as usize;
+            let density = [0.0f32, 0.4, 1.0][rng.below(3) as usize];
+            (nn, m, g, slabs, k, ncols, density, rng.next_u64())
+        },
+        |&(nn, m, g, slabs, k, ncols, density, seed)| {
+            let mut rng = Pcg64::seeded(seed);
+            let mut d = random_sparse(&mut rng, slabs * m, k, density);
+            clear_row(&mut d, rng.below((slabs * m) as u32) as usize);
+            // The n:m:g kernel reorders columns by pattern, so unlike the
+            // row-ordered kernels its summation order genuinely differs from
+            // the reference; halve the operand scale to keep accumulated
+            // rounding far inside the 1e-5 window.
+            d.scale(0.5);
+            let a = NmgTensor::from_dense(&d, nn, m, g);
+            let mut b = DenseTensor::randn(&[k, ncols], &mut rng);
+            b.scale(0.5);
+            // The kernel must match the dense GEMM over the *pruned* matrix.
+            let got = nmg_gemm::spmm(&a, &b);
+            got.allclose(&dense_gemm::matmul_naive(&a.to_dense(), &b), TOL, TOL)
+        },
+    );
+}
+
+#[test]
+fn all_zero_matrices_multiply_to_zero_everywhere() {
+    let mut rng = Pcg64::seeded(99);
+    let (m, k, n) = (8, 12, 5);
+    let a = DenseTensor::zeros(&[m, k]);
+    let b = DenseTensor::randn(&[k, n], &mut rng);
+    assert_eq!(dense_gemm::matmul(&a, &b).max_abs(), 0.0);
+    assert_eq!(csr_gemm::spmm(&CsrTensor::from_dense(&a), &b).max_abs(), 0.0);
+    assert_eq!(ell_gemm::spmm(&EllTensor::from_dense(&a), &b).max_abs(), 0.0);
+    assert_eq!(bcsr_gemm::spmm(&BcsrTensor::from_dense(&a, 4, 4), &b).max_abs(), 0.0);
+    assert_eq!(nmg_gemm::spmm(&NmgTensor::from_dense(&a, 2, 4, 4), &b).max_abs(), 0.0);
+    let w = DenseTensor::zeros(&[k, n]);
+    let x = DenseTensor::randn(&[m, k], &mut rng);
+    assert_eq!(csc_gemm::spmm_dense_csc(&x, &CscTensor::from_dense(&w)).max_abs(), 0.0);
+}

@@ -34,7 +34,7 @@ fn load_golden(rt: &ArtifactRuntime, name: &str) -> (Vec<Value>, Vec<DenseTensor
                     .chunks_exact(4)
                     .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
                     .collect();
-                inputs.push(Value::F32(DenseTensor::from_vec(&io.shape, f)));
+                inputs.push(Value::from(DenseTensor::from_vec(&io.shape, f)));
             }
             sten::runtime::DType::I32 => {
                 let ints: Vec<i32> = raw

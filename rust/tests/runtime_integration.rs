@@ -140,7 +140,7 @@ fn encoder_blocks_compose_to_full_forward() {
                 } else {
                     DenseTensor::zeros(&io.shape)
                 };
-                inputs.push(Value::F32(t));
+                inputs.push(Value::from(t));
             }
         }
     }
@@ -213,24 +213,24 @@ fn train_step_artifact_decreases_loss_and_keeps_masks() {
                 io.shape.clone(),
                 (0..io.numel()).map(|_| rng.below(vocab) as i32).collect(),
             ),
-            "lr" => Value::F32(DenseTensor::from_vec(&[], vec![0.05])),
+            "lr" => Value::from(DenseTensor::from_vec(&[], vec![0.05])),
             name if name.starts_with("mask.") => {
                 mask_positions.push(i);
                 // 50% random mask.
-                Value::F32(DenseTensor::from_vec(
+                Value::from(DenseTensor::from_vec(
                     &io.shape,
                     (0..io.numel())
                         .map(|_| if rng.next_f32() < 0.5 { 1.0 } else { 0.0 })
                         .collect(),
                 ))
             }
-            name if name.ends_with("_g") => Value::F32(DenseTensor::ones(&io.shape)),
+            name if name.ends_with("_g") => Value::from(DenseTensor::ones(&io.shape)),
             _ if io.shape.len() == 2 => {
                 let mut w = DenseTensor::randn(&io.shape, &mut rng);
                 w.scale(0.05);
-                Value::F32(w)
+                Value::from(w)
             }
-            _ => Value::F32(DenseTensor::zeros(&io.shape)),
+            _ => Value::from(DenseTensor::zeros(&io.shape)),
         };
         inputs.push(v);
     }

@@ -1,0 +1,105 @@
+//! Concurrency stress for `ConcurrentServer`: many submitter threads x a
+//! small (backpressuring) queue x several replicas, asserting exactly-once
+//! completion and no lost requests under the per-worker completion buffers.
+//!
+//! Kept as a single `#[test]` so the in-binary phases run sequentially and
+//! the global kernel-user accounting can be asserted without races. Sized
+//! to stay quick in debug `cargo test`; `ci.sh` also runs this binary under
+//! `--release` as a timed tripwire, so a reintroduced global lock on the
+//! completion path shows up as a wall-clock regression there.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::Arc;
+use std::time::Duration;
+
+use sten::coordinator::{ConcurrentServer, Engine, FfnMode, ServeConfig};
+use sten::runtime::ArtifactRuntime;
+use sten::util::rng::Pcg64;
+use sten::util::threadpool;
+
+fn tiny_engine() -> Engine {
+    let rt = ArtifactRuntime::open_default().expect("artifact runtime");
+    Engine::new(rt, "tiny", FfnMode::NativeNmg { n: 2, m: 4, g: 4 }, 42).unwrap()
+}
+
+#[test]
+fn stress_exactly_once_completion_under_contention() {
+    let users_before = threadpool::active_kernel_users();
+
+    let engine = tiny_engine();
+    let seq = engine.dims.seq;
+    let vocab = engine.dims.vocab as u32;
+    // Small queue forces submit backpressure; several replicas race on the
+    // batch channel and the completion accounting.
+    let cfg = ServeConfig { replicas: 3, queue_cap: 4, max_wait: Duration::from_millis(1) };
+    let server = Arc::new(ConcurrentServer::start(engine, cfg).unwrap());
+
+    let submitters = 8usize;
+    let per_thread = 24usize;
+    let total = submitters * per_thread;
+
+    let mut handles = Vec::new();
+    for t in 0..submitters {
+        let server = Arc::clone(&server);
+        handles.push(std::thread::spawn(move || {
+            let mut rng = Pcg64::new(1000 + t as u64, t as u64);
+            let mut ids = Vec::with_capacity(per_thread);
+            for _ in 0..per_thread {
+                let toks: Vec<i32> = (0..seq).map(|_| rng.below(vocab) as i32).collect();
+                ids.push(server.submit(&toks).unwrap());
+            }
+            ids
+        }));
+    }
+
+    // Poll snapshots while submitters run: merged per-worker buffers must
+    // always be a consistent prefix (no duplicates, never more than total).
+    loop {
+        let done = handles.iter().all(|h| h.is_finished());
+        let snap = server.completed();
+        let snap_ids: HashSet<u64> = snap.iter().map(|r| r.id).collect();
+        assert_eq!(snap_ids.len(), snap.len(), "duplicate ids in snapshot");
+        assert!(snap.len() <= total, "snapshot larger than the request stream");
+        if done {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(2));
+    }
+
+    let mut submitted: Vec<u64> = Vec::new();
+    for h in handles {
+        submitted.extend(h.join().unwrap());
+    }
+    assert_eq!(submitted.len(), total);
+
+    server.drain();
+    let server = Arc::try_unwrap(server).ok().expect("all submitter handles joined");
+    let report = server.finish().unwrap();
+
+    // Exactly-once completion: every submitted id completes exactly once.
+    assert_eq!(report.results.len(), total, "lost or duplicated completions");
+    let completed_ids: HashSet<u64> = report.results.iter().map(|r| r.id).collect();
+    assert_eq!(completed_ids.len(), total, "duplicate completion ids");
+    let submitted_ids: HashSet<u64> = submitted.into_iter().collect();
+    assert_eq!(completed_ids, submitted_ids, "completed ids != submitted ids");
+
+    // Per-batch rider counts partition the request stream.
+    let mut per_batch: HashMap<u64, usize> = HashMap::new();
+    for r in &report.results {
+        per_batch.insert(r.batch_id, r.batch_size);
+    }
+    let riders: usize = per_batch.values().sum();
+    assert_eq!(riders, total, "batch rider counts must partition the requests");
+    assert!(report.batches as usize >= per_batch.len());
+
+    // Backpressure held: the queue never grew past the channel cap plus one
+    // in-flight submission per submitter thread plus one forming batch.
+    assert!(
+        report.queue_high_water <= 4 + submitters + 8,
+        "queue high-water {} exceeded cap + submitters + batch slack",
+        report.queue_high_water
+    );
+
+    // The replicas' kernel-thread shares were returned on shutdown.
+    assert_eq!(threadpool::active_kernel_users(), users_before);
+}
