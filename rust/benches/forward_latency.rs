@@ -1,0 +1,195 @@
+//! Single-request forward latency breakdown: attention vs FFN vs LM head,
+//! swept over per-scope worker budgets 1..=cores, dense vs n:m:g weights.
+//!
+//! Proves the persistent-pool tentpole claims: block latency (attention
+//! above all — it was the last head-by-head serial path) scales with the
+//! worker budget, and the pool performs **zero thread spawns per request**
+//! in steady state (asserted in `--smoke` mode, which ci.sh runs under a
+//! wall-clock ceiling so a deadlocked parked worker fails loudly).
+//!
+//! Run: `cargo bench --bench forward_latency [-- --full | -- --smoke]`
+//! (quick/full serve the `base` artifacts; smoke serves `tiny`.)
+//!
+//! Emits `BENCH_forward_latency.json` (machine-readable points) so the perf
+//! trajectory is tracked across PRs.
+
+use std::sync::Arc;
+
+use sten::coordinator::{Engine, FfnMode};
+use sten::formats::NmgTensor;
+use sten::runtime::{ArtifactRuntime, ArtifactSpec, DType, Value};
+use sten::tensor::DenseTensor;
+use sten::util::benchkit::{table_header, Bench, JsonReport};
+use sten::util::rng::Pcg64;
+use sten::util::threadpool;
+
+/// Deterministic inputs for one artifact spec. The nmg FFN block needs a
+/// coherent `val`/`idx` encoding, built from a random dense weight.
+fn build_inputs(spec: &ArtifactSpec, rng: &mut Pcg64) -> Vec<Value> {
+    let nmg: Option<NmgTensor> = spec.meta.get("nmg").map(|meta| {
+        let f = meta.get("M").expect("nmg.M").usize().expect("nmg.M usize");
+        let k = meta.get("K").expect("nmg.K").usize().expect("nmg.K usize");
+        let dense = DenseTensor::randn(&[f, k], rng);
+        NmgTensor::from_dense(&dense, 2, 4, 4)
+    });
+    spec.inputs
+        .iter()
+        .map(|io| match io.name.as_str() {
+            "val" => {
+                let sparse = nmg.as_ref().expect("val input without nmg meta");
+                Value::from(DenseTensor::from_vec(&io.shape, sparse.val_flat().to_vec()))
+            }
+            "idx" => {
+                let sparse = nmg.as_ref().expect("idx input without nmg meta");
+                Value::I32(io.shape.clone(), sparse.idx_flat().iter().map(|&i| i as i32).collect())
+            }
+            name if name.ends_with("_g") => Value::from(DenseTensor::ones(&io.shape)),
+            _ if io.dtype == DType::I32 => Value::I32(
+                io.shape.clone(),
+                (0..io.numel()).map(|_| rng.below(1 << 15) as i32).collect(),
+            ),
+            _ if io.shape.len() >= 2 => {
+                let mut w = DenseTensor::randn(&io.shape, rng);
+                w.scale(0.1);
+                Value::from(w)
+            }
+            _ => Value::from(DenseTensor::zeros(&io.shape)),
+        })
+        .collect()
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let full = args.iter().any(|a| a == "--full");
+    let tag = if smoke { "tiny" } else { "base" };
+    let bench = if full { Bench::new(2, 8) } else { Bench::new(1, 3) };
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+    let rt = Arc::new(ArtifactRuntime::open_default().expect("artifact runtime"));
+
+    // Worker budgets swept: 1, powers of two, and the full machine.
+    let mut threads: Vec<usize> = vec![1];
+    let mut t = 2;
+    while t < cores {
+        threads.push(t);
+        t *= 2;
+    }
+    if cores > 1 {
+        threads.push(cores);
+    }
+    threads.dedup();
+
+    let mut rng = Pcg64::seeded(4242);
+    let blocks: Vec<(&str, String)> = vec![
+        ("embed", format!("embed_{tag}")),
+        ("attention", format!("attn_block_{tag}")),
+        ("ffn-dense", format!("ffn_block_{tag}")),
+        ("ffn-nmg", format!("ffn_block_nmg_{tag}")),
+        ("lm-head", format!("lm_head_{tag}")),
+    ];
+    let prepared: Vec<(&str, String, Vec<Value>)> = blocks
+        .into_iter()
+        .map(|(label, artifact)| {
+            let spec = rt.spec(&artifact).expect("artifact spec").clone();
+            let inputs = build_inputs(&spec, &mut rng);
+            (label, artifact, inputs)
+        })
+        .collect();
+
+    println!(
+        "# forward latency breakdown: artifacts `{tag}`, {cores} cores \
+         (smoke={smoke}, full={full})"
+    );
+    let mut json = JsonReport::new("forward_latency");
+    let mut attn_by_threads: Vec<(usize, f64)> = Vec::new();
+
+    table_header("block latency", &["block", "threads", "median_ms", "p95_ms", "speedup_vs_1"]);
+    for (label, artifact, inputs) in &prepared {
+        let mut base_median = 0.0f64;
+        for &nthreads in &threads {
+            threadpool::set_worker_cap(Some(nthreads));
+            let sample = bench.run(|| rt.call(artifact, inputs).expect("artifact call"));
+            if nthreads == 1 {
+                base_median = sample.median;
+            }
+            if *label == "attention" {
+                attn_by_threads.push((nthreads, sample.median));
+            }
+            println!(
+                "{label}\t{nthreads}\t{:.3}\t{:.3}\t{:.2}",
+                sample.median * 1e3,
+                sample.p95 * 1e3,
+                base_median / sample.median.max(1e-12),
+            );
+            json.row(&[
+                ("tag", tag.into()),
+                ("block", (*label).into()),
+                ("threads", nthreads.into()),
+                ("median_s", sample.median.into()),
+                ("p95_s", sample.p95.into()),
+            ]);
+        }
+    }
+    threadpool::set_worker_cap(None);
+
+    // End-to-end single request (all blocks composed), dense vs n:m:g FFN.
+    table_header("end-to-end forward", &["ffn", "threads", "median_ms", "p95_ms"]);
+    for (mode_label, mode) in
+        [("dense", FfnMode::NativeDense), ("nmg", FfnMode::NativeNmg { n: 2, m: 4, g: 4 })]
+    {
+        let mut engine = Engine::with_runtime(rt.clone(), tag, mode, 42).expect("engine");
+        let tokens = engine.random_tokens(&mut rng);
+        for &nthreads in &threads {
+            threadpool::set_worker_cap(Some(nthreads));
+            let sample = bench.run(|| engine.forward(&tokens).expect("forward"));
+            println!(
+                "{mode_label}\t{nthreads}\t{:.3}\t{:.3}",
+                sample.median * 1e3,
+                sample.p95 * 1e3
+            );
+            json.row(&[
+                ("tag", tag.into()),
+                ("block", "e2e".into()),
+                ("ffn", mode_label.into()),
+                ("threads", nthreads.into()),
+                ("median_s", sample.median.into()),
+                ("p95_s", sample.p95.into()),
+            ]);
+        }
+    }
+    threadpool::set_worker_cap(None);
+
+    // Attention scaling summary (the ROADMAP's last serial compute path).
+    if let Some(&(_, base)) = attn_by_threads.iter().find(|(t, _)| *t == 1) {
+        for &(nthreads, median) in &attn_by_threads {
+            if nthreads != 1 {
+                println!(
+                    "attention-scaling-{nthreads}v1: {:.2}",
+                    base / median.max(1e-12)
+                );
+            }
+        }
+    }
+
+    // Steady state must be spawn-free: the persistent pool was warmed up by
+    // the sweep above, so further requests may not create a single thread.
+    let requests = if smoke { 5 } else { 3 };
+    let spawns_before = threadpool::total_spawns();
+    for _ in 0..requests {
+        for (_, artifact, inputs) in &prepared {
+            rt.call(artifact, inputs).expect("artifact call");
+        }
+    }
+    let spawned = threadpool::total_spawns() - spawns_before;
+    println!("\nsteady-state thread spawns across {requests} requests: {spawned} (expect 0)");
+    json.row(&[("block", "steady_state".into()), ("spawns", spawned.into())]);
+    if smoke {
+        assert_eq!(spawned, 0, "steady-state requests must not spawn threads");
+        println!("smoke OK: persistent pool is spawn-free in steady state");
+    }
+
+    match json.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write bench json: {e}"),
+    }
+}

@@ -15,8 +15,9 @@ use std::time::{Duration, Instant};
 
 use sten::coordinator::{BatchServer, ConcurrentServer, Engine, FfnMode, ServeConfig};
 use sten::runtime::ArtifactRuntime;
-use sten::util::benchkit::{parse_mode, BenchMode};
+use sten::util::benchkit::{parse_mode, BenchMode, JsonReport};
 use sten::util::rng::Pcg64;
+use sten::util::threadpool;
 
 const FFN: FfnMode = FfnMode::NativeNmg { n: 2, m: 4, g: 4 };
 
@@ -90,12 +91,19 @@ fn main() {
          {cores} cores (mode {mode:?})"
     );
 
+    let mut json = JsonReport::new("serving_throughput");
     let (base_rps, base_p50) = run_baseline(tag, &reqs);
     println!("\nserver\treplicas\tmax_wait_ms\treq_per_s\tspeedup\tp50_ms\tp95_ms\tp99_ms\tbatches\tqueue_hw");
     println!(
         "drain-loop\t1\t1\t{base_rps:.0}\t1.00\t{:.3}\t-\t-\t-\t-",
         base_p50 * 1e3
     );
+    json.row(&[
+        ("server", "drain-loop".into()),
+        ("replicas", 1usize.into()),
+        ("req_per_s", base_rps.into()),
+        ("p50_s", base_p50.into()),
+    ]);
 
     // Best observed throughput per replica count (across max_wait settings),
     // for the replica-scaling summary below.
@@ -118,6 +126,15 @@ fn main() {
                 row.batches,
                 row.high_water
             );
+            json.row(&[
+                ("server", "concurrent".into()),
+                ("replicas", replicas.into()),
+                ("max_wait_ms", (wait_ms as usize).into()),
+                ("req_per_s", row.rps.into()),
+                ("p50_s", row.p50.into()),
+                ("p95_s", row.p95.into()),
+                ("p99_s", row.p99.into()),
+            ]);
         }
         best_rps.push((replicas, best));
     }
@@ -135,8 +152,54 @@ fn main() {
             println!("replica-scaling-4x-vs-1x: {:.2}", four / one);
         }
     }
+    // Spawn-free steady state: with a warm server (pool workers, replica
+    // threads and artifact preparation all up), a second wave of requests
+    // must not create a single thread — kernel parallelism comes entirely
+    // from the persistent pool.
+    let steady_replicas = 2usize.min(cores.max(1));
+    let steady_cfg =
+        ServeConfig { replicas: steady_replicas, queue_cap: 64, max_wait: Duration::from_millis(1) };
+    let server = ConcurrentServer::start(engine(tag), steady_cfg).unwrap();
+    for r in reqs.iter().take(reqs.len() / 4 + 1) {
+        server.submit(r).unwrap(); // warmup wave
+    }
+    server.drain();
+    let spawns_before = threadpool::total_spawns();
+    let t = Instant::now();
+    for r in &reqs {
+        server.submit(r).unwrap();
+    }
+    server.drain();
+    let steady_wall = t.elapsed().as_secs_f64();
+    let spawned = threadpool::total_spawns() - spawns_before;
+    let steady_rps = reqs.len() as f64 / steady_wall.max(1e-12);
+    println!(
+        "\nsteady-state (warm server, {steady_replicas} replicas): {steady_rps:.0} req/s, \
+         {spawned} thread spawns (expect 0)"
+    );
+    json.row(&[
+        ("server", "steady-state".into()),
+        ("replicas", steady_replicas.into()),
+        ("req_per_s", steady_rps.into()),
+        ("spawns", spawned.into()),
+    ]);
+    let report = server.finish().unwrap();
+    println!("per-replica runtime timing (cumulative over both waves):");
+    for (r, times) in report.replica_timing.iter().enumerate() {
+        println!(
+            "  replica {r}: execute {:.3}s, transfer {:.3}s",
+            times.secs("execute"),
+            times.secs("transfer")
+        );
+    }
+
+    match json.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write bench json: {e}"),
+    }
     println!(
         "\n(expect concurrent >= 2 replicas to beat the drain loop in req/s on a \
-         multi-core host; higher max_wait trades latency for fuller batches)"
+         multi-core host; higher max_wait trades latency for fuller batches; \
+         steady-state spawns must be 0 — the pool is persistent)"
     );
 }

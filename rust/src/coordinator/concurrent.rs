@@ -39,8 +39,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::runtime::ArtifactRuntime;
 use crate::util::channel::{self, Received};
 use crate::util::threadpool::{self, WorkerPool};
+use crate::util::timer::TimeBreakdown;
 
 use super::engine::{EncoderDims, Engine};
 use super::metrics::{self, LatencySummary, QueueGauge};
@@ -130,6 +132,10 @@ pub struct ServeReport {
     pub compute_rps: Option<f64>,
     /// Deepest the submission queue has been.
     pub queue_high_water: usize,
+    /// Per-replica runtime timing views (`execute`/`transfer`/`compile`
+    /// buckets charged by each replica's worker thread), indexed by replica
+    /// id.
+    pub replica_timing: Vec<TimeBreakdown>,
 }
 
 /// The concurrent, deadline-aware batch server.
@@ -138,6 +144,9 @@ pub struct ConcurrentServer {
     submit_tx: Option<channel::Sender<Request>>,
     pool: Option<WorkerPool>,
     shared: Arc<Shared>,
+    /// The replicas' shared artifact runtime (for per-replica timing views).
+    rt: Arc<ArtifactRuntime>,
+    replicas: usize,
     next_id: AtomicU64,
     submitted: AtomicU64,
     started: Instant,
@@ -154,6 +163,7 @@ impl ConcurrentServer {
             bail!("ServeConfig.replicas must be at least 1");
         }
         let dims = engine.dims.clone();
+        let rt = Arc::clone(engine.runtime());
         let mut engines = Vec::with_capacity(cfg.replicas);
         for _ in 1..cfg.replicas {
             engines.push(engine.replicate());
@@ -242,6 +252,9 @@ impl ConcurrentServer {
             let shared = shared.clone();
             let dims = dims.clone();
             pool.execute(move || {
+                // Tag this worker thread so the shared runtime charges its
+                // artifact time to this replica's timing view.
+                crate::runtime::set_replica_id(Some(worker_idx as u64));
                 while let Some(batch) = rx.recv() {
                     let tokens = pad_batch_tokens(&dims, &batch.requests);
                     let t = Instant::now();
@@ -280,6 +293,7 @@ impl ConcurrentServer {
                     }
                     shared.account(batch.requests.len() as u64);
                 }
+                crate::runtime::set_replica_id(None);
             });
         }
         drop(batch_rx);
@@ -289,6 +303,8 @@ impl ConcurrentServer {
             submit_tx: Some(submit_tx),
             pool: Some(pool),
             shared,
+            rt,
+            replicas: cfg.replicas,
             next_id: AtomicU64::new(0),
             submitted: AtomicU64::new(0),
             started: Instant::now(),
@@ -358,6 +374,8 @@ impl ConcurrentServer {
         let results = self.shared.merged_results();
         let latency = metrics::summarize(&results);
         let compute_rps = metrics::compute_throughput(&results);
+        let replica_timing =
+            (0..self.replicas as u64).map(|r| self.rt.timing_for_replica(r)).collect();
         Ok(ServeReport {
             wall_rps: results.len() as f64 / wall_s.max(1e-12),
             latency,
@@ -365,6 +383,7 @@ impl ConcurrentServer {
             wall_s,
             compute_rps,
             queue_high_water: self.shared.gauge.high_water(),
+            replica_timing,
             results,
         })
     }

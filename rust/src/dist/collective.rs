@@ -2,10 +2,16 @@
 //!
 //! The classic two-phase algorithm: w-1 reduce-scatter steps (each worker
 //! accumulates its neighbor's rotating segment) followed by w-1 allgather
-//! steps (the fully-reduced segments rotate back around), emulated over
-//! in-process buffers. Within a step, every segment is "in flight" between
-//! exactly one sender/receiver pair, so applying the sends sequentially is
-//! equivalent to the parallel execution.
+//! steps (the fully-reduced segments rotate back around), over in-process
+//! buffers. Within a step, every segment is "in flight" between exactly one
+//! sender/receiver pair, and the pair's read and write regions of any one
+//! buffer are *different* segments — so the w transfers of a step run
+//! concurrently on the persistent thread pool (real overlap, matching the
+//! wire-parallel behavior of a physical ring), with a barrier between
+//! steps. The per-segment accumulation order is unchanged, so results are
+//! bit-identical to the sequential emulation.
+
+use crate::util::threadpool;
 
 /// A ring of `workers` in-process replicas.
 #[derive(Debug, Clone, Copy)]
@@ -37,7 +43,8 @@ impl RingAllreduce {
 
     /// In-place mean-allreduce: every buffer ends up holding the
     /// element-wise mean across workers. All buffers must share one length
-    /// and their count must match the ring size.
+    /// and their count must match the ring size. Each ring step runs its w
+    /// transfers concurrently on the pool (barrier between steps).
     pub fn allreduce_mean(&self, bufs: &mut [Vec<f32>]) {
         let w = self.workers;
         assert_eq!(bufs.len(), w, "buffer count {} != ring size {w}", bufs.len());
@@ -46,53 +53,67 @@ impl RingAllreduce {
         }
         let n = bufs[0].len();
         assert!(bufs.iter().all(|b| b.len() == n), "ragged allreduce buffers");
+        let ptrs: Vec<threadpool::SyncPtr<f32>> =
+            bufs.iter_mut().map(|b| threadpool::SyncPtr::new(b.as_mut_ptr())).collect();
 
         // Reduce-scatter: after step t, the accumulating copy of segment s
         // sits at worker (s + t + 1) % w; after w-1 steps worker i holds
         // the full sum of segment (i + 1) % w.
         for t in 0..w - 1 {
-            for i in 0..w {
-                let s = (i + w - t) % w;
+            threadpool::parallel_for(w, 1, |i0, i1| {
+                for i in i0..i1 {
+                    let s = (i + w - t) % w;
+                    let (lo, hi) = self.segment(n, s);
+                    let dst = (i + 1) % w;
+                    // SAFETY: within this step, segment s is in flight only
+                    // between (i, dst), and dst's concurrently-read segment
+                    // is (s + 1) % w != s (w >= 2): the regions below are
+                    // disjoint from every other transfer's.
+                    unsafe {
+                        let src = std::slice::from_raw_parts(ptrs[i].get().add(lo), hi - lo);
+                        let out =
+                            std::slice::from_raw_parts_mut(ptrs[dst].get().add(lo), hi - lo);
+                        for (o, v) in out.iter_mut().zip(src) {
+                            *o += *v;
+                        }
+                    }
+                }
+            });
+        }
+        // Scale the fully-reduced segments to means before sharing them
+        // (each segment has exactly one owner: transfers are disjoint).
+        threadpool::parallel_for(w, 1, |s0, s1| {
+            for s in s0..s1 {
+                let owner = (s + w - 1) % w;
                 let (lo, hi) = self.segment(n, s);
-                let dst = (i + 1) % w;
-                // Segment s is only in flight between (i, dst) this step.
-                let (src_buf, dst_buf) = two_mut(bufs, i, dst);
-                for j in lo..hi {
-                    dst_buf[j] += src_buf[j];
+                // SAFETY: segment s of its owner is touched only here.
+                unsafe {
+                    let seg = std::slice::from_raw_parts_mut(ptrs[owner].get().add(lo), hi - lo);
+                    for v in seg {
+                        *v /= w as f32;
+                    }
                 }
             }
-        }
-        // Scale the fully-reduced segments to means before sharing them.
-        for s in 0..w {
-            let owner = (s + w - 1) % w;
-            let (lo, hi) = self.segment(n, s);
-            for v in &mut bufs[owner][lo..hi] {
-                *v /= w as f32;
-            }
-        }
+        });
         // Allgather: worker i starts owning segment (i + 1) % w; the
         // reduced segments rotate around the ring, overwriting stale copies.
         for t in 0..w - 1 {
-            for i in 0..w {
-                let s = (i + 1 + w - t) % w;
-                let (lo, hi) = self.segment(n, s);
-                let dst = (i + 1) % w;
-                let (src_buf, dst_buf) = two_mut(bufs, i, dst);
-                dst_buf[lo..hi].copy_from_slice(&src_buf[lo..hi]);
-            }
+            threadpool::parallel_for(w, 1, |i0, i1| {
+                for i in i0..i1 {
+                    let s = (i + 1 + w - t) % w;
+                    let (lo, hi) = self.segment(n, s);
+                    let dst = (i + 1) % w;
+                    // SAFETY: as above — dst's read segment differs from its
+                    // written segment, and segment s travels on one edge.
+                    unsafe {
+                        let src = std::slice::from_raw_parts(ptrs[i].get().add(lo), hi - lo);
+                        let out =
+                            std::slice::from_raw_parts_mut(ptrs[dst].get().add(lo), hi - lo);
+                        out.copy_from_slice(src);
+                    }
+                }
+            });
         }
-    }
-}
-
-/// Disjoint mutable borrows of two distinct slots.
-fn two_mut<T>(v: &mut [T], a: usize, b: usize) -> (&T, &mut T) {
-    assert_ne!(a, b);
-    if a < b {
-        let (left, right) = v.split_at_mut(b);
-        (&left[a], &mut right[0])
-    } else {
-        let (left, right) = v.split_at_mut(a);
-        (&right[0], &mut left[b])
     }
 }
 

@@ -298,7 +298,6 @@ impl NmgTensor {
     }
 }
 
-
 /// Greedy assignment for one slab (writes this slab's val/idx slices).
 fn convert_slab(
     d: &DenseTensor,

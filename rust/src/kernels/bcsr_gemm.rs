@@ -57,7 +57,6 @@ pub fn spmm(a: &BcsrTensor, b: &DenseTensor) -> DenseTensor {
     out
 }
 
-
 #[cfg(test)]
 mod tests {
     use super::*;

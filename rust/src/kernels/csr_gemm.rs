@@ -42,7 +42,6 @@ pub fn spmm(a: &CsrTensor, b: &DenseTensor) -> DenseTensor {
     out
 }
 
-
 #[cfg(test)]
 mod tests {
     use super::*;

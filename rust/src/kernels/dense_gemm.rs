@@ -61,17 +61,42 @@ pub fn matmul_into(a: &[f32], b: &[f32], c: &mut [f32], m: usize, k: usize, n: u
             // SAFETY: rows [i0, i1) of C are written only by this panel.
             let c_panel =
                 unsafe { std::slice::from_raw_parts_mut(c_ptr.get().add(i0 * n), (i1 - i0) * n) };
-            for kk in (0..k).step_by(KC) {
-                let kend = (kk + KC).min(k);
-                for jj in (0..n).step_by(NR) {
-                    let jend = (jj + NR).min(n);
-                    micro_kernel(a, b, c_panel, i0, i1, kk, kend, jj, jend, k, n);
-                }
-            }
+            run_panel(a, b, c_panel, i0, i1, k, n);
         }
     });
 }
 
+/// Blocked GEMM on the calling thread only — identical numerics and
+/// blocking to [`matmul`] (per-panel accumulation order is the same), but
+/// no pool interaction. This is the kernel for callers that are themselves
+/// a unit of pool work (e.g. the per-`(batch, head)` attention tasks in the
+/// native runtime), where the outer scope already saturates the machine and
+/// a nested scope would only add queueing overhead.
+pub fn matmul_serial(a: &DenseTensor, b: &DenseTensor) -> DenseTensor {
+    let (m, k) = (a.rows(), a.cols());
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "gemm inner dim mismatch: {k} vs {k2}");
+    let mut out = DenseTensor::zeros(&[m, n]);
+    let c = out.data_mut();
+    for panel in 0..m.div_ceil(MR) {
+        let i0 = panel * MR;
+        let i1 = (i0 + MR).min(m);
+        run_panel(a.data(), b.data(), &mut c[i0 * n..i1 * n], i0, i1, k, n);
+    }
+    out
+}
+
+/// One MR-row panel pass: full K traversal in KC blocks, NR-wide tiles.
+#[inline]
+fn run_panel(a: &[f32], b: &[f32], c_panel: &mut [f32], i0: usize, i1: usize, k: usize, n: usize) {
+    for kk in (0..k).step_by(KC) {
+        let kend = (kk + KC).min(k);
+        for jj in (0..n).step_by(NR) {
+            let jend = (jj + NR).min(n);
+            micro_kernel(a, b, c_panel, i0, i1, kk, kend, jj, jend, k, n);
+        }
+    }
+}
 
 /// MRxNR register-blocked microkernel over a K stripe.
 #[allow(clippy::too_many_arguments)]
@@ -176,6 +201,19 @@ mod tests {
                 matmul(&a, &b).allclose(&matmul_naive(&a, &b), 1e-3, 1e-3)
             },
         );
+    }
+
+    #[test]
+    fn serial_matches_threaded_bit_for_bit() {
+        let mut rng = Pcg64::seeded(33);
+        for (m, k, n) in [(1usize, 1usize, 1usize), (8, 48, 16), (33, 47, 29), (64, 192, 128)] {
+            let a = DenseTensor::randn(&[m, k], &mut rng);
+            let b = DenseTensor::randn(&[k, n], &mut rng);
+            let par = matmul(&a, &b);
+            let ser = matmul_serial(&a, &b);
+            // Same blocking, same per-panel accumulation order: identical.
+            assert_eq!(par.data(), ser.data(), "{m}x{k}x{n}");
+        }
     }
 
     #[test]

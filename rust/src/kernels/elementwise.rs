@@ -4,6 +4,16 @@
 //! so the native path and the PJRT artifact path are interchangeable.
 
 use crate::tensor::DenseTensor;
+use crate::util::threadpool;
+
+/// Element count below which the row-wise kernels stay on the calling
+/// thread (see [`threadpool::SERIAL_THRESHOLD`]: the per-(batch, head)
+/// attention softmaxes executed from inside pool tasks must not open
+/// nested scopes).
+const PAR_THRESHOLD: usize = threadpool::SERIAL_THRESHOLD;
+
+/// Rows per parallel chunk for the row-wise kernels.
+const ROW_GRAIN: usize = 16;
 
 /// ReLU.
 pub fn relu(x: &DenseTensor) -> DenseTensor {
@@ -28,43 +38,74 @@ pub fn gelu_grad(x: &DenseTensor) -> DenseTensor {
 }
 
 /// Row-wise numerically-stable softmax over the last dim of a 2-D tensor.
+/// Parallel over disjoint row blocks above [`PAR_THRESHOLD`] elements
+/// (results are identical to the serial path: rows are independent).
 pub fn softmax_rows(x: &DenseTensor) -> DenseTensor {
+    fn softmax_block(xd: &[f32], c: usize, od: &mut [f32], i0: usize, i1: usize) {
+        for i in i0..i1 {
+            let row = &xd[i * c..(i + 1) * c];
+            let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut sum = 0.0;
+            let orow = &mut od[(i - i0) * c..(i - i0 + 1) * c];
+            for (o, &v) in orow.iter_mut().zip(row) {
+                *o = (v - mx).exp();
+                sum += *o;
+            }
+            for o in orow.iter_mut() {
+                *o /= sum;
+            }
+        }
+    }
     assert_eq!(x.rank(), 2);
     let (r, c) = (x.rows(), x.cols());
     let mut out = DenseTensor::zeros(&[r, c]);
-    for i in 0..r {
-        let row = &x.data()[i * c..(i + 1) * c];
-        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-        let mut sum = 0.0;
-        let orow = &mut out.data_mut()[i * c..(i + 1) * c];
-        for (o, &v) in orow.iter_mut().zip(row) {
-            *o = (v - mx).exp();
-            sum += *o;
-        }
-        for o in orow.iter_mut() {
-            *o /= sum;
-        }
+    let xd = x.data();
+    if r * c < PAR_THRESHOLD {
+        softmax_block(xd, c, out.data_mut(), 0, r);
+        return out;
     }
+    let o_ptr = threadpool::SyncPtr::new(out.data_mut().as_mut_ptr());
+    threadpool::parallel_for(r, ROW_GRAIN, |i0, i1| {
+        // SAFETY: rows [i0, i1) are written only by this chunk.
+        let od = unsafe { std::slice::from_raw_parts_mut(o_ptr.get().add(i0 * c), (i1 - i0) * c) };
+        softmax_block(xd, c, od, i0, i1);
+    });
     out
 }
 
 /// Row-wise LayerNorm (gamma/beta broadcast over rows) with eps = 1e-5.
+/// Parallel over disjoint row blocks above [`PAR_THRESHOLD`] elements
+/// (results are identical to the serial path: rows are independent).
 pub fn layernorm_rows(x: &DenseTensor, gamma: &[f32], beta: &[f32]) -> DenseTensor {
+    fn ln_block(xd: &[f32], gamma: &[f32], beta: &[f32], od: &mut [f32], i0: usize, i1: usize) {
+        let c = gamma.len();
+        for i in i0..i1 {
+            let row = &xd[i * c..(i + 1) * c];
+            let mean = row.iter().sum::<f32>() / c as f32;
+            let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / c as f32;
+            let inv = 1.0 / (var + 1e-5).sqrt();
+            let orow = &mut od[(i - i0) * c..(i - i0 + 1) * c];
+            for j in 0..c {
+                orow[j] = (row[j] - mean) * inv * gamma[j] + beta[j];
+            }
+        }
+    }
     assert_eq!(x.rank(), 2);
     let (r, c) = (x.rows(), x.cols());
     assert_eq!(gamma.len(), c);
     assert_eq!(beta.len(), c);
     let mut out = DenseTensor::zeros(&[r, c]);
-    for i in 0..r {
-        let row = &x.data()[i * c..(i + 1) * c];
-        let mean = row.iter().sum::<f32>() / c as f32;
-        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / c as f32;
-        let inv = 1.0 / (var + 1e-5).sqrt();
-        let orow = &mut out.data_mut()[i * c..(i + 1) * c];
-        for j in 0..c {
-            orow[j] = (row[j] - mean) * inv * gamma[j] + beta[j];
-        }
+    let xd = x.data();
+    if r * c < PAR_THRESHOLD {
+        ln_block(xd, gamma, beta, out.data_mut(), 0, r);
+        return out;
     }
+    let o_ptr = threadpool::SyncPtr::new(out.data_mut().as_mut_ptr());
+    threadpool::parallel_for(r, ROW_GRAIN, |i0, i1| {
+        // SAFETY: rows [i0, i1) are written only by this chunk.
+        let od = unsafe { std::slice::from_raw_parts_mut(o_ptr.get().add(i0 * c), (i1 - i0) * c) };
+        ln_block(xd, gamma, beta, od, i0, i1);
+    });
     out
 }
 

@@ -109,6 +109,14 @@ fn serve(args: &Args) -> Result<()> {
             ),
             None => println!("served 0 requests"),
         }
+        for (r, t) in report.replica_timing.iter().enumerate() {
+            println!(
+                "  replica {r}: execute {:.3}s, transfer {:.3}s, compile {:.3}s",
+                t.secs("execute"),
+                t.secs("transfer"),
+                t.secs("compile"),
+            );
+        }
         return Ok(());
     }
 

@@ -21,7 +21,8 @@
 //! tensor (engine replicas' weights) hand it to the runtime without copying
 //! a byte. See `src/runtime/README.md` for the value-sharing conventions.
 
-use std::collections::HashSet;
+use std::cell::Cell;
+use std::collections::{HashMap, HashSet};
 use std::path::PathBuf;
 use std::sync::{Arc, Mutex, RwLock};
 use std::time::{Duration, Instant};
@@ -107,22 +108,41 @@ impl From<Arc<DenseTensor>> for Value {
 /// hashing to one shard low while bounding snapshot cost.
 const TIMING_SHARDS: usize = 16;
 
+thread_local! {
+    /// The engine-replica id the current thread charges runtime time to
+    /// (`None` outside the serving workers). See [`set_replica_id`].
+    static REPLICA_ID: Cell<Option<u64>> = const { Cell::new(None) };
+}
+
+/// Tag the calling thread with an engine-replica id: every subsequent
+/// [`ArtifactRuntime::call`] on this thread is charged to that replica's
+/// timing view in addition to the merged aggregate. The serving workers set
+/// this once at startup; pass `None` to untag.
+pub fn set_replica_id(id: Option<u64>) {
+    REPLICA_ID.with(|c| c.set(id));
+}
+
+/// The calling thread's replica tag, if any.
+pub fn current_replica_id() -> Option<u64> {
+    REPLICA_ID.with(|c| c.get())
+}
+
 /// Thread-sharded timing: each thread charges buckets to the shard its
 /// `ThreadId` hashes to, so concurrent replicas almost never contend on one
-/// breakdown lock. `snapshot` merges all shards.
+/// breakdown lock. Within a shard, buckets are keyed by the thread's
+/// replica tag so snapshots can be filtered per replica; `snapshot` merges
+/// everything.
 struct ShardedTimes {
-    shards: Vec<Mutex<TimeBreakdown>>,
+    shards: Vec<Mutex<HashMap<Option<u64>, TimeBreakdown>>>,
 }
 
 impl ShardedTimes {
     fn new() -> Self {
-        ShardedTimes {
-            shards: (0..TIMING_SHARDS).map(|_| Mutex::new(TimeBreakdown::new())).collect(),
-        }
+        ShardedTimes { shards: (0..TIMING_SHARDS).map(|_| Mutex::new(HashMap::new())).collect() }
     }
 
     /// The calling thread's shard.
-    fn shard(&self) -> &Mutex<TimeBreakdown> {
+    fn shard(&self) -> &Mutex<HashMap<Option<u64>, TimeBreakdown>> {
         use std::hash::{Hash, Hasher};
         let mut h = std::collections::hash_map::DefaultHasher::new();
         std::thread::current().id().hash(&mut h);
@@ -130,20 +150,33 @@ impl ShardedTimes {
     }
 
     fn add(&self, name: &'static str, d: Duration) {
-        self.shard().lock().unwrap().add(name, d);
+        self.shard().lock().unwrap().entry(current_replica_id()).or_default().add(name, d);
     }
 
     fn snapshot(&self) -> TimeBreakdown {
         let mut out = TimeBreakdown::new();
         for s in &self.shards {
-            out.merge(&s.lock().unwrap());
+            for b in s.lock().unwrap().values() {
+                out.merge(b);
+            }
+        }
+        out
+    }
+
+    /// Merge only the buckets charged under replica `id`.
+    fn snapshot_replica(&self, id: u64) -> TimeBreakdown {
+        let mut out = TimeBreakdown::new();
+        for s in &self.shards {
+            if let Some(b) = s.lock().unwrap().get(&Some(id)) {
+                out.merge(b);
+            }
         }
         out
     }
 
     fn reset(&self) {
         for s in &self.shards {
-            *s.lock().unwrap() = TimeBreakdown::new();
+            s.lock().unwrap().clear();
         }
     }
 }
@@ -297,7 +330,8 @@ impl ArtifactRuntime {
 
         // One shard-lock acquisition per call for all three buckets.
         {
-            let mut times = self.times.shard().lock().unwrap();
+            let mut shard = self.times.shard().lock().unwrap();
+            let times = shard.entry(current_replica_id()).or_default();
             times.add("transfer", transfer_in + transfer_out);
             times.add("execute", execute);
         }
@@ -316,6 +350,13 @@ impl ArtifactRuntime {
     /// Snapshot of accumulated timing (merged across all thread shards).
     pub fn timing(&self) -> TimeBreakdown {
         self.times.snapshot()
+    }
+
+    /// Timing charged by threads tagged with replica `id` (see
+    /// [`set_replica_id`]) — the per-replica view the `serve --replicas N`
+    /// summary reports.
+    pub fn timing_for_replica(&self, id: u64) -> TimeBreakdown {
+        self.times.snapshot_replica(id)
     }
 
     /// Reset accumulated timing.
@@ -427,6 +468,43 @@ mod tests {
         rt.call1("gemm_dense_8x48x16", &[a.into(), b.into()]).unwrap();
         // Second call hits the prepared cache: no further compile time.
         assert_eq!(rt.timing().secs("compile"), compile0);
+    }
+
+    #[test]
+    fn replica_tagged_timing_is_filterable() {
+        let rt = std::sync::Arc::new(runtime());
+        let mut handles = Vec::new();
+        for replica in 0..2u64 {
+            let rt = rt.clone();
+            handles.push(std::thread::spawn(move || {
+                set_replica_id(Some(replica));
+                let mut rng = Pcg64::seeded(replica + 10);
+                let a = DenseTensor::randn(&[8, 48], &mut rng);
+                let b = DenseTensor::randn(&[48, 16], &mut rng);
+                for _ in 0..1 + replica {
+                    rt.call1("gemm_dense_8x48x16", &[a.clone().into(), b.clone().into()])
+                        .unwrap();
+                }
+                set_replica_id(None);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        let (t0, t1) = (rt.timing_for_replica(0), rt.timing_for_replica(1));
+        assert!(t0.secs("execute") > 0.0);
+        assert!(t1.secs("execute") > 0.0);
+        // An untagged call is visible in the aggregate but in no replica
+        // view; the aggregate covers at least the per-replica views.
+        let mut rng = Pcg64::seeded(30);
+        let a = DenseTensor::randn(&[8, 48], &mut rng);
+        let b = DenseTensor::randn(&[48, 16], &mut rng);
+        rt.call1("gemm_dense_8x48x16", &[a.into(), b.into()]).unwrap();
+        let all = rt.timing();
+        assert!(all.secs("execute") >= t0.secs("execute") + t1.secs("execute"));
+        assert!(rt.timing_for_replica(7).secs("execute") == 0.0);
+        rt.reset_timing();
+        assert_eq!(rt.timing_for_replica(0).secs("execute"), 0.0);
     }
 
     #[test]

@@ -15,7 +15,7 @@ mod manifest;
 mod executor;
 pub mod native;
 
-pub use executor::{ArtifactRuntime, Value};
+pub use executor::{current_replica_id, set_replica_id, ArtifactRuntime, Value};
 pub use manifest::{ArtifactSpec, DType, IoSpec, Json, Manifest};
 
 /// Default artifacts directory, overridable via `STEN_ARTIFACTS`.

@@ -25,6 +25,7 @@ use super::manifest::{ArtifactSpec, DType, IoSpec, Json, Manifest};
 use crate::formats::nmg::{binomial, NmgTensor};
 use crate::kernels::{dense_gemm, elementwise, nmg_gemm};
 use crate::tensor::DenseTensor;
+use crate::util::threadpool;
 
 // ---------------------------------------------------------------------------
 // Built-in manifest (mirrors aot.py's non-quick artifact set)
@@ -535,31 +536,55 @@ fn block(t: &DenseTensor, r0: usize, nr: usize, c0: usize, nc: usize) -> DenseTe
     DenseTensor::from_vec(&[nr, nc], out)
 }
 
-/// Accumulate `src` into `dst` at offset (r0, c0).
-fn add_block(dst: &mut DenseTensor, r0: usize, c0: usize, src: &DenseTensor) {
+/// Accumulate `src` into the (r0, c0)-offset block of a row-major buffer
+/// with `dst_cols` columns.
+///
+/// # Safety
+///
+/// The caller must guarantee that no other thread touches the target block
+/// `rows [r0, r0 + src.rows()) x cols [c0, c0 + src.cols())` concurrently
+/// (the attention fan-out assigns each `(batch, head)` pair a disjoint
+/// block).
+unsafe fn add_block_raw(dst: *mut f32, dst_cols: usize, r0: usize, c0: usize, src: &DenseTensor) {
     let (nr, nc) = (src.rows(), src.cols());
-    let cols = dst.cols();
+    let sd = src.data();
     for r in 0..nr {
-        let d0 = (r0 + r) * cols + c0;
+        let base = (r0 + r) * dst_cols + c0;
         for c in 0..nc {
-            dst.data_mut()[d0 + c] += src.data()[r * nc + c];
+            *dst.add(base + c) += sd[r * nc + c];
         }
     }
 }
 
-/// Column sums of a 2-D tensor (bias gradients).
+/// Column sums of a 2-D tensor (bias gradients), parallel over disjoint
+/// column stripes. Each column accumulates its rows in ascending order, so
+/// the result is bit-identical to the serial loop.
 fn col_sum(t: &DenseTensor) -> DenseTensor {
     let (r, c) = (t.rows(), t.cols());
     let mut out = vec![0f32; c];
-    for i in 0..r {
-        for j in 0..c {
-            out[j] += t.data()[i * c + j];
+    let td = t.data();
+    let out_ptr = threadpool::SyncPtr::new(out.as_mut_ptr());
+    threadpool::parallel_for(c, 64, |c0, c1| {
+        // SAFETY: columns [c0, c1) of out are written only by this chunk.
+        let o = unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(c0), c1 - c0) };
+        for i in 0..r {
+            let row = &td[i * c + c0..i * c + c1];
+            for (oj, &v) in o.iter_mut().zip(row) {
+                *oj += v;
+            }
         }
-    }
+    });
     DenseTensor::from_vec(&[c], out)
 }
 
 /// Pre-LN multi-head self-attention with residual over (B*S, D) rows.
+///
+/// The score/softmax/value pipeline fans out over `(batch, head)` pairs as
+/// pool tasks: every pair writes a disjoint rows-x-columns block of `o` and
+/// its own `att` slot, so the fan-out is lock-free and the result is
+/// deterministic under any scheduling. The per-pair GEMMs use the serial
+/// blocked kernel — the pair fan-out is the parallel axis; a nested scope
+/// per tiny GEMM would only add queueing overhead.
 fn attn_forward(
     x: &DenseTensor,
     w: &AttnWeights,
@@ -575,20 +600,32 @@ fn attn_forward(
     let k = elementwise::bias_add(&dense_gemm::matmul(&y, w.wk), w.bk.data());
     let v = elementwise::bias_add(&dense_gemm::matmul(&y, w.wv), w.bv.data());
     let mut o = DenseTensor::zeros(&[b * s, d]);
-    let mut att = Vec::with_capacity(b * heads);
-    for bi in 0..b {
-        for h in 0..heads {
-            let qb = block(&q, bi * s, s, h * hd, hd);
-            let kb = block(&k, bi * s, s, h * hd, hd);
-            let vb = block(&v, bi * s, s, h * hd, hd);
-            let mut scores = dense_gemm::matmul(&qb, &kb.transpose2());
-            scores.scale(scale);
-            let a = elementwise::softmax_rows(&scores);
-            let ob = dense_gemm::matmul(&a, &vb);
-            add_block(&mut o, bi * s, h * hd, &ob);
-            att.push(a);
-        }
+    let pairs = b * heads;
+    let mut att: Vec<Option<DenseTensor>> = (0..pairs).map(|_| None).collect();
+    {
+        let o_ptr = threadpool::SyncPtr::new(o.data_mut().as_mut_ptr());
+        let att_ptr = threadpool::SyncPtr::new(att.as_mut_ptr());
+        threadpool::parallel_for(pairs, 1, |p0, p1| {
+            for pair in p0..p1 {
+                let (bi, h) = (pair / heads, pair % heads);
+                let qb = block(&q, bi * s, s, h * hd, hd);
+                let kb = block(&k, bi * s, s, h * hd, hd);
+                let vb = block(&v, bi * s, s, h * hd, hd);
+                let mut scores = dense_gemm::matmul_serial(&qb, &kb.transpose2());
+                scores.scale(scale);
+                let a = elementwise::softmax_rows(&scores);
+                let ob = dense_gemm::matmul_serial(&a, &vb);
+                // SAFETY: pair (bi, h) owns rows [bi*s, (bi+1)*s) x cols
+                // [h*hd, (h+1)*hd) of `o` and slot `pair` of `att`.
+                unsafe {
+                    add_block_raw(o_ptr.get(), d, bi * s, h * hd, &ob);
+                    *att_ptr.get().add(pair) = Some(a);
+                }
+            }
+        });
     }
+    let att: Vec<DenseTensor> =
+        att.into_iter().map(|a| a.expect("missing attention head")).collect();
     let proj = elementwise::bias_add(&dense_gemm::matmul(&o, w.wo), w.bo.data());
     let out = x.zip(&proj, |a, c| a + c);
     (out, AttnCache { y, q, k, v, att, o })
@@ -631,18 +668,32 @@ fn ffn_forward(
     (out, FfnCache { y, hpre, h, w1e, w2e })
 }
 
-fn embed_forward(emb: &DenseTensor, pos: &DenseTensor, tokens: &[i32], cfg: &EncoderCfg) -> DenseTensor {
+fn embed_forward(
+    emb: &DenseTensor,
+    pos: &DenseTensor,
+    tokens: &[i32],
+    cfg: &EncoderCfg,
+) -> DenseTensor {
     let (d, s, v) = (cfg.d_model, cfg.seq, cfg.vocab);
     let rows = tokens.len();
     let mut out = vec![0f32; rows * d];
-    for (r, &t) in tokens.iter().enumerate() {
-        let tok = (t.rem_euclid(v as i32)) as usize;
-        let e = &emb.data()[tok * d..(tok + 1) * d];
-        let p = &pos.data()[(r % s) * d..(r % s + 1) * d];
-        for j in 0..d {
-            out[r * d + j] = e[j] + p[j];
+    let embd = emb.data();
+    let posd = pos.data();
+    let out_ptr = threadpool::SyncPtr::new(out.as_mut_ptr());
+    threadpool::parallel_for(rows, 16, |r0, r1| {
+        // SAFETY: rows [r0, r1) are written only by this chunk.
+        let od =
+            unsafe { std::slice::from_raw_parts_mut(out_ptr.get().add(r0 * d), (r1 - r0) * d) };
+        for r in r0..r1 {
+            let tok = (tokens[r].rem_euclid(v as i32)) as usize;
+            let e = &embd[tok * d..(tok + 1) * d];
+            let p = &posd[(r % s) * d..(r % s + 1) * d];
+            let orow = &mut od[(r - r0) * d..(r - r0 + 1) * d];
+            for j in 0..d {
+                orow[j] = e[j] + p[j];
+            }
         }
-    }
+    });
     DenseTensor::from_vec(&[rows, d], out)
 }
 
@@ -710,38 +761,74 @@ fn encoder_forward(
 // ---------------------------------------------------------------------------
 
 /// LayerNorm backward: recomputes row statistics from `x` and returns
-/// `(dx, dgamma, dbeta)`.
+/// `(dx, dgamma, dbeta)`. Rows run in fixed blocks on the pool; per-block
+/// dgamma/dbeta partials are merged in block order afterwards, so the
+/// result is deterministic under any scheduling.
 fn layernorm_backward(
     x: &DenseTensor,
     gamma: &[f32],
     dy: &DenseTensor,
 ) -> (DenseTensor, DenseTensor, DenseTensor) {
+    const BLOCK_ROWS: usize = 32;
     let (r, c) = (x.rows(), x.cols());
+    let nblocks = r.div_ceil(BLOCK_ROWS);
     let mut dx = vec![0f32; r * c];
+    let mut partials: Vec<Option<(Vec<f32>, Vec<f32>)>> = (0..nblocks).map(|_| None).collect();
+    {
+        let xd = x.data();
+        let dyd = dy.data();
+        let dx_ptr = threadpool::SyncPtr::new(dx.as_mut_ptr());
+        let part_ptr = threadpool::SyncPtr::new(partials.as_mut_ptr());
+        threadpool::parallel_for(nblocks, 1, |b0, b1| {
+            for blk in b0..b1 {
+                let i0 = blk * BLOCK_ROWS;
+                let i1 = (i0 + BLOCK_ROWS).min(r);
+                let mut dgamma = vec![0f32; c];
+                let mut dbeta = vec![0f32; c];
+                // SAFETY: rows [i0, i1) of dx and partial slot blk are
+                // written only by this block.
+                let dxs = unsafe {
+                    std::slice::from_raw_parts_mut(dx_ptr.get().add(i0 * c), (i1 - i0) * c)
+                };
+                for i in i0..i1 {
+                    let row = &xd[i * c..(i + 1) * c];
+                    let dyr = &dyd[i * c..(i + 1) * c];
+                    let mean = row.iter().sum::<f32>() / c as f32;
+                    let var =
+                        row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / c as f32;
+                    let inv = 1.0 / (var + 1e-5).sqrt();
+                    let mut m1 = 0f32; // mean of dxhat
+                    let mut m2 = 0f32; // mean of dxhat * xhat
+                    for j in 0..c {
+                        let xhat = (row[j] - mean) * inv;
+                        let dxhat = dyr[j] * gamma[j];
+                        dgamma[j] += dyr[j] * xhat;
+                        dbeta[j] += dyr[j];
+                        m1 += dxhat;
+                        m2 += dxhat * xhat;
+                    }
+                    m1 /= c as f32;
+                    m2 /= c as f32;
+                    let dxrow = &mut dxs[(i - i0) * c..(i - i0 + 1) * c];
+                    for j in 0..c {
+                        let xhat = (row[j] - mean) * inv;
+                        let dxhat = dyr[j] * gamma[j];
+                        dxrow[j] = inv * (dxhat - m1 - xhat * m2);
+                    }
+                }
+                unsafe {
+                    *part_ptr.get().add(blk) = Some((dgamma, dbeta));
+                }
+            }
+        });
+    }
     let mut dgamma = vec![0f32; c];
     let mut dbeta = vec![0f32; c];
-    for i in 0..r {
-        let row = &x.data()[i * c..(i + 1) * c];
-        let dyr = &dy.data()[i * c..(i + 1) * c];
-        let mean = row.iter().sum::<f32>() / c as f32;
-        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / c as f32;
-        let inv = 1.0 / (var + 1e-5).sqrt();
-        let mut m1 = 0f32; // mean of dxhat
-        let mut m2 = 0f32; // mean of dxhat * xhat
+    for p in partials {
+        let (g, bt) = p.expect("missing layernorm backward block");
         for j in 0..c {
-            let xhat = (row[j] - mean) * inv;
-            let dxhat = dyr[j] * gamma[j];
-            dgamma[j] += dyr[j] * xhat;
-            dbeta[j] += dyr[j];
-            m1 += dxhat;
-            m2 += dxhat * xhat;
-        }
-        m1 /= c as f32;
-        m2 /= c as f32;
-        for j in 0..c {
-            let xhat = (row[j] - mean) * inv;
-            let dxhat = dyr[j] * gamma[j];
-            dx[i * c + j] = inv * (dxhat - m1 - xhat * m2);
+            dgamma[j] += g[j];
+            dbeta[j] += bt[j];
         }
     }
     (
@@ -794,33 +881,46 @@ fn attn_backward(
     let mut dq = DenseTensor::zeros(&[b * s, d]);
     let mut dk = DenseTensor::zeros(&[b * s, d]);
     let mut dv = DenseTensor::zeros(&[b * s, d]);
-    for bi in 0..b {
-        for h in 0..heads {
-            let a = &cache.att[bi * heads + h];
-            let qb = block(&cache.q, bi * s, s, h * hd, hd);
-            let kb = block(&cache.k, bi * s, s, h * hd, hd);
-            let vb = block(&cache.v, bi * s, s, h * hd, hd);
-            let dob = block(&do_, bi * s, s, h * hd, hd);
-            let da = dense_gemm::matmul(&dob, &vb.transpose2());
-            let dvb = dense_gemm::matmul(&a.transpose2(), &dob);
-            // Softmax backward per row: ds = a * (da - sum(da * a)).
-            let mut ds = DenseTensor::zeros(&[s, s]);
-            for i in 0..s {
-                let ar = &a.data()[i * s..(i + 1) * s];
-                let dar = &da.data()[i * s..(i + 1) * s];
-                let dot: f32 = ar.iter().zip(dar).map(|(&p, &g)| p * g).sum();
-                for j in 0..s {
-                    ds.data_mut()[i * s + j] = ar[j] * (dar[j] - dot);
+    // Mirror of the forward fan-out: one pool task per (batch, head) pair,
+    // each writing disjoint blocks of dq/dk/dv with serial per-pair GEMMs.
+    let pairs = b * heads;
+    {
+        let dq_ptr = threadpool::SyncPtr::new(dq.data_mut().as_mut_ptr());
+        let dk_ptr = threadpool::SyncPtr::new(dk.data_mut().as_mut_ptr());
+        let dv_ptr = threadpool::SyncPtr::new(dv.data_mut().as_mut_ptr());
+        threadpool::parallel_for(pairs, 1, |p0, p1| {
+            for pair in p0..p1 {
+                let (bi, h) = (pair / heads, pair % heads);
+                let a = &cache.att[pair];
+                let qb = block(&cache.q, bi * s, s, h * hd, hd);
+                let kb = block(&cache.k, bi * s, s, h * hd, hd);
+                let vb = block(&cache.v, bi * s, s, h * hd, hd);
+                let dob = block(&do_, bi * s, s, h * hd, hd);
+                let da = dense_gemm::matmul_serial(&dob, &vb.transpose2());
+                let dvb = dense_gemm::matmul_serial(&a.transpose2(), &dob);
+                // Softmax backward per row: ds = a * (da - sum(da * a)).
+                let mut ds = DenseTensor::zeros(&[s, s]);
+                for i in 0..s {
+                    let ar = &a.data()[i * s..(i + 1) * s];
+                    let dar = &da.data()[i * s..(i + 1) * s];
+                    let dot: f32 = ar.iter().zip(dar).map(|(&p, &g)| p * g).sum();
+                    for j in 0..s {
+                        ds.data_mut()[i * s + j] = ar[j] * (dar[j] - dot);
+                    }
+                }
+                let mut dqb = dense_gemm::matmul_serial(&ds, &kb);
+                dqb.scale(scale);
+                let mut dkb = dense_gemm::matmul_serial(&ds.transpose2(), &qb);
+                dkb.scale(scale);
+                // SAFETY: pair (bi, h) owns the disjoint block rows
+                // [bi*s, (bi+1)*s) x cols [h*hd, (h+1)*hd) of dq/dk/dv.
+                unsafe {
+                    add_block_raw(dq_ptr.get(), d, bi * s, h * hd, &dqb);
+                    add_block_raw(dk_ptr.get(), d, bi * s, h * hd, &dkb);
+                    add_block_raw(dv_ptr.get(), d, bi * s, h * hd, &dvb);
                 }
             }
-            let mut dqb = dense_gemm::matmul(&ds, &kb);
-            dqb.scale(scale);
-            let mut dkb = dense_gemm::matmul(&ds.transpose2(), &qb);
-            dkb.scale(scale);
-            add_block(&mut dq, bi * s, h * hd, &dqb);
-            add_block(&mut dk, bi * s, h * hd, &dkb);
-            add_block(&mut dv, bi * s, h * hd, &dvb);
-        }
+        });
     }
 
     // q = y @ wq + bq (and likewise k, v).
@@ -877,21 +977,44 @@ fn ffn_backward(
     dx
 }
 
-/// Mean token-level cross-entropy and its logits gradient.
+/// Mean token-level cross-entropy and its logits gradient. The per-row
+/// log-sum-exp and gradient adjustments run in fixed row blocks on the
+/// pool; block losses merge in block order (deterministic).
 fn cross_entropy(logits: &DenseTensor, targets: &[i32], vocab: usize) -> (f32, DenseTensor) {
+    const BLOCK_ROWS: usize = 64;
     let (rows, v) = (logits.rows(), logits.cols());
     assert_eq!(rows, targets.len());
-    let mut loss = 0f64;
     let mut dl = elementwise::softmax_rows(logits);
-    for (i, &t) in targets.iter().enumerate() {
-        let y = (t.rem_euclid(vocab as i32)) as usize;
-        let row = &logits.data()[i * v..(i + 1) * v];
-        let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
-        let lse = mx + row.iter().map(|&x| (x - mx).exp()).sum::<f32>().ln();
-        loss += (lse - row[y]) as f64;
-        let cur = dl.get2(i, y);
-        dl.set2(i, y, cur - 1.0);
+    let nblocks = rows.div_ceil(BLOCK_ROWS);
+    let mut block_loss = vec![0f64; nblocks];
+    {
+        let ld = logits.data();
+        let dl_ptr = threadpool::SyncPtr::new(dl.data_mut().as_mut_ptr());
+        let loss_ptr = threadpool::SyncPtr::new(block_loss.as_mut_ptr());
+        threadpool::parallel_for(nblocks, 1, |b0, b1| {
+            for blk in b0..b1 {
+                let i0 = blk * BLOCK_ROWS;
+                let i1 = (i0 + BLOCK_ROWS).min(rows);
+                let mut local = 0f64;
+                for i in i0..i1 {
+                    let y = (targets[i].rem_euclid(vocab as i32)) as usize;
+                    let row = &ld[i * v..(i + 1) * v];
+                    let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+                    let lse = mx + row.iter().map(|&x| (x - mx).exp()).sum::<f32>().ln();
+                    local += (lse - row[y]) as f64;
+                    // SAFETY: row i of dl and slot blk are owned by this
+                    // block.
+                    unsafe {
+                        *dl_ptr.get().add(i * v + y) -= 1.0;
+                    }
+                }
+                unsafe {
+                    *loss_ptr.get().add(blk) = local;
+                }
+            }
+        });
     }
+    let loss: f64 = block_loss.iter().sum();
     dl.scale(1.0 / rows as f32);
     ((loss / rows as f64) as f32, dl)
 }
@@ -962,18 +1085,32 @@ fn train_step(spec: &ArtifactSpec, inputs: &[Value]) -> Result<Vec<Value>> {
         );
     }
 
-    // Embedding backward: scatter-add token rows; positional sum over batch.
+    // Embedding backward: scatter-add token rows; positional sum over
+    // batch. Repeated tokens collide on demb rows, so the parallel axis is
+    // the *column* stripe: each thread owns columns [j0, j1) of demb/dpos
+    // and accumulates all rows in ascending order — race-free and
+    // bit-identical to the serial scatter.
     let d = cfg.d_model;
     let mut demb = DenseTensor::zeros(&[cfg.vocab, d]);
     let mut dpos = DenseTensor::zeros(&[cfg.seq, d]);
-    for (r, &t) in tokens.iter().enumerate() {
-        let tok = (t.rem_euclid(cfg.vocab as i32)) as usize;
-        let si = r % cfg.seq;
-        for j in 0..d {
-            let g = dx.data()[r * d + j];
-            demb.data_mut()[tok * d + j] += g;
-            dpos.data_mut()[si * d + j] += g;
-        }
+    {
+        let dxd = dx.data();
+        let demb_ptr = threadpool::SyncPtr::new(demb.data_mut().as_mut_ptr());
+        let dpos_ptr = threadpool::SyncPtr::new(dpos.data_mut().as_mut_ptr());
+        threadpool::parallel_for(d, 32, |j0, j1| {
+            for (r, &t) in tokens.iter().enumerate() {
+                let tok = (t.rem_euclid(cfg.vocab as i32)) as usize;
+                let si = r % cfg.seq;
+                for j in j0..j1 {
+                    let g = dxd[r * d + j];
+                    // SAFETY: columns [j0, j1) of demb/dpos are owned here.
+                    unsafe {
+                        *demb_ptr.get().add(tok * d + j) += g;
+                        *dpos_ptr.get().add(si * d + j) += g;
+                    }
+                }
+            }
+        });
     }
     grads.add("emb", demb);
     grads.add("pos", dpos);

@@ -2,6 +2,7 @@
 
 use super::{numel, strides_for};
 use crate::util::rng::Pcg64;
+use crate::util::threadpool;
 
 /// A row-major dense `f32` tensor.
 ///
@@ -146,15 +147,39 @@ impl DenseTensor {
         DenseTensor { shape: shape.to_vec(), data: self.data.clone() }
     }
 
-    /// 2-D transpose.
+    /// 2-D transpose. Large tensors (the train-step backward's per-layer
+    /// weight transposes) parallelize over output row blocks; the copy is
+    /// element-identical either way.
     pub fn transpose2(&self) -> DenseTensor {
         assert_eq!(self.rank(), 2);
         let (r, c) = (self.shape[0], self.shape[1]);
         let mut out = vec![0.0; r * c];
-        for i in 0..r {
-            for j in 0..c {
-                out[j * r + i] = self.data[i * c + j];
+        // Below the shared threshold the S x S attention transposes
+        // executed from inside per-(batch, head) pool tasks stay serial
+        // rather than opening nested scopes.
+        if r * c < threadpool::SERIAL_THRESHOLD {
+            for i in 0..r {
+                for j in 0..c {
+                    out[j * r + i] = self.data[i * c + j];
+                }
             }
+        } else {
+            let src = &self.data;
+            let out_ptr = threadpool::SyncPtr::new(out.as_mut_ptr());
+            // Output row j is source column j: chunks own disjoint output
+            // rows [j0, j1).
+            threadpool::parallel_for(c, 16, |j0, j1| {
+                let od = unsafe {
+                    // SAFETY: output rows [j0, j1) are written only here.
+                    std::slice::from_raw_parts_mut(out_ptr.get().add(j0 * r), (j1 - j0) * r)
+                };
+                for j in j0..j1 {
+                    let orow = &mut od[(j - j0) * r..(j - j0 + 1) * r];
+                    for (i, o) in orow.iter_mut().enumerate() {
+                        *o = src[i * c + j];
+                    }
+                }
+            });
         }
         DenseTensor { shape: vec![c, r], data: out }
     }

@@ -111,6 +111,125 @@ pub fn fmt_time(secs: f64) -> String {
     }
 }
 
+/// A JSON scalar for [`JsonReport`] rows.
+#[derive(Debug, Clone)]
+pub enum JsonValue {
+    /// Number field; non-finite values serialize as `null`.
+    Num(f64),
+    /// String field.
+    Str(String),
+}
+
+impl From<f64> for JsonValue {
+    fn from(v: f64) -> Self {
+        JsonValue::Num(v)
+    }
+}
+
+impl From<usize> for JsonValue {
+    fn from(v: usize) -> Self {
+        JsonValue::Num(v as f64)
+    }
+}
+
+impl From<&str> for JsonValue {
+    fn from(v: &str) -> Self {
+        JsonValue::Str(v.to_string())
+    }
+}
+
+/// Machine-readable bench output: a flat list of measurement points written
+/// to `BENCH_<name>.json` so the perf trajectory is diffable across PRs
+/// (each bench overwrites its own file on every run).
+#[derive(Debug)]
+pub struct JsonReport {
+    name: String,
+    rows: Vec<Vec<(String, JsonValue)>>,
+}
+
+impl JsonReport {
+    /// New empty report for bench `name`.
+    pub fn new(name: &str) -> Self {
+        JsonReport { name: name.to_string(), rows: Vec::new() }
+    }
+
+    /// Append one measurement point (a flat key -> scalar object).
+    pub fn row(&mut self, fields: &[(&str, JsonValue)]) {
+        self.rows.push(fields.iter().map(|(k, v)| ((*k).to_string(), v.clone())).collect());
+    }
+
+    /// Number of points recorded so far.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when no points have been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Serialize to a JSON array of flat objects.
+    pub fn to_json(&self) -> String {
+        let mut s = String::from("[\n");
+        for (i, row) in self.rows.iter().enumerate() {
+            s.push_str("  {");
+            for (j, (k, v)) in row.iter().enumerate() {
+                if j > 0 {
+                    s.push_str(", ");
+                }
+                s.push('"');
+                s.push_str(&json_escape(k));
+                s.push_str("\": ");
+                match v {
+                    JsonValue::Num(x) if x.is_finite() => s.push_str(&format!("{x}")),
+                    JsonValue::Num(_) => s.push_str("null"),
+                    JsonValue::Str(t) => {
+                        s.push('"');
+                        s.push_str(&json_escape(t));
+                        s.push('"');
+                    }
+                }
+            }
+            s.push('}');
+            if i + 1 < self.rows.len() {
+                s.push(',');
+            }
+            s.push('\n');
+        }
+        s.push_str("]\n");
+        s
+    }
+
+    /// Write `BENCH_<name>.json` into `dir`; returns the path.
+    pub fn write_in(&self, dir: &std::path::Path) -> std::io::Result<std::path::PathBuf> {
+        let path = dir.join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_json())?;
+        Ok(path)
+    }
+
+    /// Write `BENCH_<name>.json` into the current directory (the cargo
+    /// package root when run via `cargo bench`).
+    pub fn write(&self) -> std::io::Result<std::path::PathBuf> {
+        self.write_in(std::path::Path::new("."))
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
 /// Parse `--quick` / `--full` style bench flags from argv.
 pub fn parse_mode() -> BenchMode {
     let args: Vec<String> = std::env::args().collect();
@@ -164,5 +283,32 @@ mod tests {
     fn gflops_computed_from_median() {
         let s = Sample { median: 0.5, mean: 0.5, p95: 0.5, min: 0.5, iters: 1 };
         assert!((s.gflops(1e9) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_report_serializes_and_escapes() {
+        let mut r = JsonReport::new("unit");
+        assert!(r.is_empty());
+        r.row(&[("label", "a\"b\\c".into()), ("value", 1.5f64.into()), ("n", 3usize.into())]);
+        r.row(&[("value", f64::NAN.into())]);
+        assert_eq!(r.len(), 2);
+        let s = r.to_json();
+        assert!(s.starts_with("[\n"), "{s}");
+        assert!(s.contains("\"label\": \"a\\\"b\\\\c\""), "{s}");
+        assert!(s.contains("\"value\": 1.5"), "{s}");
+        assert!(s.contains("\"n\": 3"), "{s}");
+        assert!(s.contains("null"), "{s}");
+        assert!(s.trim_end().ends_with(']'), "{s}");
+    }
+
+    #[test]
+    fn json_report_writes_file() {
+        let dir = std::env::temp_dir();
+        let mut r = JsonReport::new("benchkit-test");
+        r.row(&[("x", 1.0f64.into())]);
+        let path = r.write_in(&dir).unwrap();
+        let body = std::fs::read_to_string(&path).unwrap();
+        assert!(body.contains("\"x\": 1"), "{body}");
+        let _ = std::fs::remove_file(path);
     }
 }

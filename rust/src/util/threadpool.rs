@@ -1,20 +1,32 @@
-//! A small work-stealing-free scoped thread pool + a persistent worker pool.
+//! Persistent work-stealing thread pool + a long-running-job worker pool.
 //!
 //! `rayon` is not available in the offline vendor set, so this provides the
 //! primitives the kernels, the DDP simulator and the serving front-end need:
 //!
-//! * [`ThreadPool::scope_chunks`] — split an index range into contiguous
-//!   chunks and run a closure per chunk on worker threads (used by the GEMM
-//!   kernels to parallelize over row panels).
-//! * [`parallel_for`] — one-shot convenience over a global pool, capped by
-//!   the number of registered concurrent kernel users (engine replicas) so
-//!   R replicas don't oversubscribe the machine by ~R x cores.
+//! * [`ThreadPool`] — **persistent** workers parked on per-worker deques.
+//!   [`ThreadPool::scope_chunks`] injects one *ticket* per budgeted worker
+//!   onto the deques (idle workers steal tickets from the back of other
+//!   deques); every ticket holder — the calling thread included — loops the
+//!   scope's shared cursor, claiming one grain-sized chunk per iteration,
+//!   so load balances at grain granularity while the per-scope worker
+//!   budget stays a hard bound. The caller executes chunks itself while it
+//!   waits, so nested scopes (a kernel called from inside a parallelized
+//!   block) cannot deadlock. No threads are spawned per call — workers are
+//!   spawned once at pool construction and live until drop (see
+//!   [`total_spawns`]).
+//! * [`parallel_for`] — one-shot convenience over the global pool, capped
+//!   by the per-scope worker budget derived from the number of registered
+//!   concurrent kernel users (engine replicas), so R replicas don't
+//!   oversubscribe the machine by ~R x cores.
 //! * [`WorkerPool`] — named, persistent worker threads consuming boxed jobs
 //!   from a [`crate::util::channel`] queue (the serving subsystem runs its
 //!   batcher and engine replicas on one of these).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, OnceLock};
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
+use std::time::Duration;
 
 use super::channel;
 
@@ -23,13 +35,45 @@ use super::channel;
 /// get the whole pool.
 static ACTIVE_KERNEL_USERS: AtomicUsize = AtomicUsize::new(0);
 
+/// Threads spawned by this module over the process lifetime ([`ThreadPool`]
+/// workers + [`WorkerPool`] workers). Benches assert this stays flat across
+/// steady-state requests: all kernel parallelism must come from the
+/// persistent pool, never from per-call spawns.
+static TOTAL_SPAWNS: AtomicUsize = AtomicUsize::new(0);
+
+/// Global override on the per-scope worker budget (0 = none). Benches use
+/// this to sweep kernel parallelism from 1 to `cores` on one process.
+static WORKER_CAP: AtomicUsize = AtomicUsize::new(0);
+
+/// Element count below which data-parallel tensor helpers (row-wise
+/// elementwise kernels, transposes) should stay on the calling thread:
+/// tiny tensors don't amortize even a spawn-free scope, and the S x S
+/// attention intermediates processed from *inside* per-(batch, head) pool
+/// tasks must not open nested scopes. Shared so the sites can't silently
+/// diverge.
+pub const SERIAL_THRESHOLD: usize = 32 * 1024;
+
+/// Threads spawned by this module so far (monotonic).
+pub fn total_spawns() -> usize {
+    TOTAL_SPAWNS.load(Ordering::SeqCst)
+}
+
+/// Cap every subsequent [`parallel_for`] at `cap` workers (`None` removes
+/// the cap). Composes with the kernel-users budget: the effective budget is
+/// the minimum of the two.
+pub fn set_worker_cap(cap: Option<usize>) {
+    WORKER_CAP.store(cap.map_or(0, |c| c.max(1)), Ordering::SeqCst);
+}
+
 /// RAII registration of `n` concurrent kernel users. While the guard lives,
 /// [`parallel_for`] divides the global pool among all registered users, so
-/// e.g. 4 engine replicas on an 8-core host each get 2 kernel threads
-/// instead of each GEMM trying to fan out over all 8 cores at once (which
-/// oversubscribes by ~replicas x cores and thrashes). Dropping the guard
-/// returns its share to the pool. Guards compose: two concurrent servers
-/// with 2 replicas each register 4 users total.
+/// e.g. 4 engine replicas on an 8-core host each get a per-scope budget of
+/// 2 workers instead of each GEMM trying to fan out over all 8 cores at
+/// once (which oversubscribes by ~replicas x cores and thrashes). The cap
+/// is a *budget on units injected per scope*, not a spawn count: a budget
+/// of 1 runs inline on the caller with no pool interaction at all.
+/// Dropping the guard returns its share to the pool. Guards compose: two
+/// concurrent servers with 2 replicas each register 4 users total.
 #[derive(Debug)]
 pub struct KernelUsersGuard {
     n: usize,
@@ -46,24 +90,235 @@ pub fn active_kernel_users() -> usize {
     ACTIVE_KERNEL_USERS.load(Ordering::SeqCst)
 }
 
+/// The per-scope worker budget [`parallel_for`] runs under right now:
+/// `pool workers / registered users`, clamped to at least 1 and further
+/// capped by [`set_worker_cap`].
+pub fn kernel_worker_budget() -> usize {
+    let users = active_kernel_users().max(1);
+    let mut budget = (global().workers() / users).max(1);
+    let cap = WORKER_CAP.load(Ordering::SeqCst);
+    if cap != 0 {
+        budget = budget.min(cap);
+    }
+    budget
+}
+
 impl Drop for KernelUsersGuard {
     fn drop(&mut self) {
         ACTIVE_KERNEL_USERS.fetch_sub(self.n, Ordering::SeqCst);
     }
 }
 
-/// A persistent pool of worker threads executing closures.
+/// Lifetime-erased pointer to a scope's chunk closure. Only invoked while
+/// the owning [`ThreadPool::scope_chunks_with`] call is blocked in
+/// `wait_done`, which guarantees the closure is still alive.
+type RawTask = *const (dyn Fn(usize, usize) + Sync);
+
+/// One in-flight scope: the erased closure plus completion bookkeeping.
+///
+/// Exactly `w` (the scope's worker budget) tickets reference a job: one
+/// held by the scope owner, `w - 1` queued on worker deques. Each ticket
+/// holder loops the shared `cursor`, claiming one grain-sized chunk per
+/// iteration — so at most `w` threads ever execute the scope (the budget
+/// is a hard bound, not a hint) while load still balances at grain
+/// granularity for the cost of one relaxed `fetch_add` per chunk.
+struct Job {
+    func: RawTask,
+    grain: usize,
+    n: usize,
+    /// Next index to claim (grain stride).
+    cursor: AtomicUsize,
+    /// Indices whose chunks have finished executing; 0 = scope complete.
+    remaining: AtomicUsize,
+    /// Pairs with `done` so the final decrement's wakeup can't be lost.
+    done_lock: Mutex<()>,
+    done: Condvar,
+    panicked: AtomicBool,
+    /// First caught panic payload, re-raised by the scope owner so the
+    /// original message (assertion text, kernel shapes) survives the pool.
+    panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+// SAFETY: `func` is only dereferenced while the scope owner keeps the
+// closure alive (it blocks until `remaining` hits 0); all other fields are
+// Send + Sync already.
+unsafe impl Send for Job {}
+unsafe impl Sync for Job {}
+
+/// Erase the lifetime of a scope closure reference so it can ride in an
+/// [`Arc<Job>`] on worker deques.
+///
+/// # Safety
+///
+/// The returned pointer must not be dereferenced after the scope that owns
+/// the closure returns; `scope_chunks_with` guarantees this by blocking
+/// until every chunk has finished executing.
+#[allow(clippy::useless_transmute, clippy::transmute_ptr_to_ptr)]
+unsafe fn erase_task_lifetime(f: &(dyn Fn(usize, usize) + Sync)) -> RawTask {
+    std::mem::transmute::<&(dyn Fn(usize, usize) + Sync), RawTask>(f)
+}
+
+/// A ticket for one job, queued on a worker deque: whoever pops it joins
+/// the job's cursor loop until the range is exhausted. Tickets left over
+/// after a job completes are popped and dropped without running anything.
+struct Unit {
+    job: Arc<Job>,
+}
+
+/// State shared between the pool handle and its workers.
+struct PoolShared {
+    /// Per-worker deques: owners pop from the front, thieves from the back.
+    queues: Vec<Mutex<VecDeque<Unit>>>,
+    /// Wake epoch: bumped on every injection so parked workers never miss
+    /// work pushed between their queue scan and their wait.
+    sleep: Mutex<u64>,
+    wake: Condvar,
+    shutdown: AtomicBool,
+    /// Round-robin injection cursor.
+    rr: AtomicUsize,
+}
+
+impl PoolShared {
+    fn push_unit(&self, q: usize, unit: Unit) {
+        self.queues[q].lock().unwrap().push_back(unit);
+    }
+
+    /// Bump the wake epoch and wake parked workers.
+    fn bump_and_wake(&self) {
+        let mut epoch = self.sleep.lock().unwrap();
+        *epoch += 1;
+        drop(epoch);
+        self.wake.notify_all();
+    }
+
+    /// Pop any unit: own deque front first, then steal from other backs.
+    fn try_pop(&self, home: usize) -> Option<Unit> {
+        if let Some(u) = self.queues[home].lock().unwrap().pop_front() {
+            return Some(u);
+        }
+        let nq = self.queues.len();
+        for off in 1..nq {
+            let q = (home + off) % nq;
+            if let Some(u) = self.queues[q].lock().unwrap().pop_back() {
+                return Some(u);
+            }
+        }
+        None
+    }
+
+    /// Join `job`'s cursor loop: claim and execute one grain-sized chunk
+    /// per iteration until the range is exhausted. This is the whole worker
+    /// share of a scope — one relaxed `fetch_add` and one `fetch_sub` per
+    /// chunk, no locks.
+    fn run_ticket(&self, job: &Arc<Job>) {
+        loop {
+            let start = job.cursor.fetch_add(job.grain, Ordering::Relaxed);
+            if start >= job.n {
+                return;
+            }
+            let end = (start + job.grain).min(job.n);
+            if !job.panicked.load(Ordering::SeqCst) {
+                // SAFETY: the scope owner is blocked until `remaining`
+                // reaches 0, so the closure behind `func` is alive here.
+                let call = || unsafe { (&*job.func)(start, end) };
+                if let Err(payload) = catch_unwind(AssertUnwindSafe(call)) {
+                    // Poison the job (remaining chunks are skipped, the
+                    // scope owner re-raises the original payload) but keep
+                    // this worker alive.
+                    let mut slot = job.panic_payload.lock().unwrap();
+                    if slot.is_none() {
+                        *slot = Some(payload);
+                    }
+                    drop(slot);
+                    job.panicked.store(true, Ordering::SeqCst);
+                }
+            }
+            if job.remaining.fetch_sub(end - start, Ordering::AcqRel) == end - start {
+                // Final chunk: wake the scope owner. Taking the (empty)
+                // critical section first pairs with the owner's locked
+                // check-then-wait, so the wakeup cannot be lost.
+                drop(job.done_lock.lock().unwrap());
+                job.done.notify_all();
+            }
+        }
+    }
+
+    /// Block until every index of `job` has finished executing.
+    fn wait_done(&self, job: &Arc<Job>) {
+        if job.remaining.load(Ordering::Acquire) == 0 {
+            return;
+        }
+        let mut guard = job.done_lock.lock().unwrap();
+        while job.remaining.load(Ordering::Acquire) != 0 {
+            // In-flight chunks run on workers holding tickets; the final
+            // decrement notifies `done`. The timeout is a lost-wakeup
+            // backstop only.
+            let (g, _) = job.done.wait_timeout(guard, Duration::from_millis(1)).unwrap();
+            guard = g;
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>, idx: usize) {
+    loop {
+        if let Some(unit) = shared.try_pop(idx) {
+            shared.run_ticket(&unit.job);
+            continue;
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        // Nothing queued: read the epoch, re-scan (an injection between the
+        // first scan and the epoch read would otherwise be missed while we
+        // sleep), then park until the epoch moves. The epoch lock is only
+        // touched on this idle edge, never in the busy pop/execute loop.
+        let seen = *shared.sleep.lock().unwrap();
+        if let Some(unit) = shared.try_pop(idx) {
+            shared.run_ticket(&unit.job);
+            continue;
+        }
+        let guard = shared.sleep.lock().unwrap();
+        if *guard == seen && !shared.shutdown.load(Ordering::SeqCst) {
+            // Park until the epoch moves; the timeout bounds any race
+            // between our queue scan and a concurrent injection.
+            let (guard, _) = shared.wake.wait_timeout(guard, Duration::from_millis(50)).unwrap();
+            drop(guard);
+        }
+    }
+}
+
+/// A persistent pool of worker threads executing scoped data-parallel work.
 pub struct ThreadPool {
+    shared: Arc<PoolShared>,
     workers: usize,
+    handles: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl ThreadPool {
-    /// Create a pool advertising `workers` workers. Threads are spawned per
-    /// `scope_chunks` call (scoped threads), which keeps the implementation
-    /// free of `'static` bounds while still amortizing well for the
-    /// millisecond-scale tasks the kernels submit.
+    /// Create a pool with `workers` persistent worker threads (spawned here,
+    /// once; `scope_chunks` never spawns). A 1-worker pool spawns no threads
+    /// at all — every scope runs inline on the caller.
     pub fn new(workers: usize) -> Self {
-        ThreadPool { workers: workers.max(1) }
+        let workers = workers.max(1);
+        let spawned = if workers >= 2 { workers } else { 0 };
+        let shared = Arc::new(PoolShared {
+            queues: (0..spawned.max(1)).map(|_| Mutex::new(VecDeque::new())).collect(),
+            sleep: Mutex::new(0),
+            wake: Condvar::new(),
+            shutdown: AtomicBool::new(false),
+            rr: AtomicUsize::new(0),
+        });
+        let handles = (0..spawned)
+            .map(|i| {
+                TOTAL_SPAWNS.fetch_add(1, Ordering::SeqCst);
+                let shared = Arc::clone(&shared);
+                std::thread::Builder::new()
+                    .name(format!("sten-pool-{i}"))
+                    .spawn(move || worker_loop(shared, i))
+                    .expect("failed to spawn pool worker")
+            })
+            .collect();
+        ThreadPool { shared, workers, handles }
     }
 
     /// Number of workers.
@@ -71,9 +326,15 @@ impl ThreadPool {
         self.workers
     }
 
+    /// Threads this pool has spawned (constant after construction — the
+    /// steady-state invariant the benches assert).
+    pub fn spawn_count(&self) -> usize {
+        self.handles.len()
+    }
+
     /// Run `f(chunk_start, chunk_end)` over `[0, n)` split into contiguous
-    /// chunks, one logical task per worker, self-balancing via an atomic
-    /// cursor with step `grain`.
+    /// grain-sized chunks, cooperatively balanced across the pool workers
+    /// and the calling thread.
     pub fn scope_chunks<F>(&self, n: usize, grain: usize, f: F)
     where
         F: Fn(usize, usize) + Sync,
@@ -81,9 +342,9 @@ impl ThreadPool {
         self.scope_chunks_with(n, grain, self.workers, f)
     }
 
-    /// [`ThreadPool::scope_chunks`] with an explicit worker cap for this
-    /// call. `max_workers <= 1` runs inline on the caller with no thread
-    /// spawns at all — the fast path for capped replicas.
+    /// [`ThreadPool::scope_chunks`] with an explicit worker budget for this
+    /// scope. `max_workers <= 1` runs inline on the caller with no pool
+    /// interaction at all — the fast path for capped replicas.
     pub fn scope_chunks_with<F>(&self, n: usize, grain: usize, max_workers: usize, f: F)
     where
         F: Fn(usize, usize) + Sync,
@@ -92,24 +353,47 @@ impl ThreadPool {
             return;
         }
         let grain = grain.max(1);
-        let nworkers = self.workers.min(max_workers.max(1)).min(n.div_ceil(grain));
-        if nworkers <= 1 {
+        let w = self.workers.min(max_workers.max(1)).min(n.div_ceil(grain));
+        if w <= 1 || self.handles.is_empty() {
             f(0, n);
             return;
         }
-        let cursor = AtomicUsize::new(0);
-        std::thread::scope(|s| {
-            for _ in 0..nworkers {
-                s.spawn(|| loop {
-                    let start = cursor.fetch_add(grain, Ordering::Relaxed);
-                    if start >= n {
-                        break;
-                    }
-                    let end = (start + grain).min(n);
-                    f(start, end);
-                });
-            }
+        let func_ref: &(dyn Fn(usize, usize) + Sync) = &f;
+        // SAFETY: `wait_done` below returns only once `remaining` hits 0,
+        // i.e. after the last chunk has finished executing; no worker
+        // dereferences `func` afterwards (stale tickets see the exhausted
+        // cursor before touching it).
+        let func: RawTask = unsafe { erase_task_lifetime(func_ref) };
+        let job = Arc::new(Job {
+            func,
+            grain,
+            n,
+            cursor: AtomicUsize::new(0),
+            remaining: AtomicUsize::new(n),
+            done_lock: Mutex::new(()),
+            done: Condvar::new(),
+            panicked: AtomicBool::new(false),
+            panic_payload: Mutex::new(None),
         });
+        // w - 1 stealable tickets round-robin across deques; the calling
+        // thread is the w-th participant. The budget is exact: no thread
+        // beyond these w can ever join the scope.
+        let nq = self.shared.queues.len();
+        let home = self.shared.rr.fetch_add(1, Ordering::Relaxed) % nq;
+        for t in 0..w - 1 {
+            self.shared.push_unit((home + t) % nq, Unit { job: Arc::clone(&job) });
+        }
+        self.shared.bump_and_wake();
+        self.shared.run_ticket(&job);
+        self.shared.wait_done(&job);
+        if job.panicked.load(Ordering::SeqCst) {
+            // Re-raise the first caught payload so the original panic
+            // message survives the pool (matching scoped-thread behavior).
+            match job.panic_payload.lock().unwrap().take() {
+                Some(payload) => std::panic::resume_unwind(payload),
+                None => panic!("threadpool: a scoped task panicked"),
+            }
+        }
     }
 
     /// Map `f` over `0..n`, collecting results in index order.
@@ -127,6 +411,16 @@ impl ThreadPool {
             .into_iter()
             .map(|m| m.into_inner().unwrap().expect("worker failed to produce value"))
             .collect()
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        self.shared.bump_and_wake();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
     }
 }
 
@@ -149,16 +443,16 @@ impl<T> SyncPtr<T> {
     }
 }
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
+type BoxedJob = Box<dyn FnOnce() + Send + 'static>;
 
 /// Named, persistent worker threads executing boxed jobs in submission
-/// order. Unlike [`ThreadPool::scope_chunks`] (scoped, per-call threads for
-/// data parallelism), a `WorkerPool` owns long-lived threads for
-/// long-running tasks — the serving subsystem runs its batcher and each
-/// engine replica as one job. Dropping (or [`WorkerPool::join`]ing) the
-/// pool closes the queue and joins every worker.
+/// order. Unlike [`ThreadPool::scope_chunks`] (grain-sized data-parallel
+/// chunks), a `WorkerPool` owns long-lived threads for long-running tasks —
+/// the serving subsystem runs its batcher and each engine replica as one
+/// job. Dropping (or [`WorkerPool::join`]ing) the pool closes the queue and
+/// joins every worker.
 pub struct WorkerPool {
-    tx: Option<channel::Sender<Job>>,
+    tx: Option<channel::Sender<BoxedJob>>,
     handles: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -166,9 +460,10 @@ impl WorkerPool {
     /// Spawn `workers` threads named `{prefix}-{i}`.
     pub fn named(prefix: &str, workers: usize) -> Self {
         let workers = workers.max(1);
-        let (tx, rx) = channel::bounded::<Job>(workers * 2);
+        let (tx, rx) = channel::bounded::<BoxedJob>(workers * 2);
         let handles = (0..workers)
             .map(|i| {
+                TOTAL_SPAWNS.fetch_add(1, Ordering::SeqCst);
                 let rx = rx.clone();
                 std::thread::Builder::new()
                     .name(format!("{prefix}-{i}"))
@@ -215,7 +510,8 @@ impl Drop for WorkerPool {
     }
 }
 
-/// The global pool, sized to available parallelism.
+/// The global pool, sized to available parallelism. Constructed (and its
+/// workers spawned) exactly once, on first use.
 pub fn global() -> &'static Arc<ThreadPool> {
     static POOL: OnceLock<Arc<ThreadPool>> = OnceLock::new();
     POOL.get_or_init(|| {
@@ -224,18 +520,18 @@ pub fn global() -> &'static Arc<ThreadPool> {
     })
 }
 
-/// Run `f(start, end)` over `[0, n)` chunks on the global pool. When kernel
-/// users are registered (engine replicas serving concurrently), each call is
-/// capped to its fair share `cores / users` of the pool so replicas compose
-/// with kernel parallelism instead of multiplying against it.
+/// Run `f(start, end)` over `[0, n)` chunks on the global pool under the
+/// current per-scope worker budget (see [`kernel_worker_budget`]): when
+/// kernel users are registered (engine replicas serving concurrently), each
+/// scope is capped to its fair share `cores / users` of the pool so
+/// replicas compose with kernel parallelism instead of multiplying against
+/// it. No threads are ever spawned here — work runs on the persistent pool
+/// workers (and inline on the caller).
 pub fn parallel_for<F>(n: usize, grain: usize, f: F)
 where
     F: Fn(usize, usize) + Sync,
 {
-    let pool = global();
-    let users = active_kernel_users().max(1);
-    let cap = (pool.workers() / users).max(1);
-    pool.scope_chunks_with(n, grain, cap, f)
+    global().scope_chunks_with(n, grain, kernel_worker_budget(), f)
 }
 
 #[cfg(test)]
@@ -295,8 +591,9 @@ mod tests {
     }
 
     #[test]
-    fn single_worker_runs_inline() {
+    fn single_worker_runs_inline_and_spawns_nothing() {
         let pool = ThreadPool::new(1);
+        assert_eq!(pool.spawn_count(), 0);
         let count = AtomicUsize::new(0);
         pool.scope_chunks(10, 100, |s, e| {
             count.fetch_add(e - s, Ordering::SeqCst);
@@ -316,15 +613,108 @@ mod tests {
     }
 
     #[test]
+    fn scopes_are_spawn_free_in_steady_state() {
+        let pool = ThreadPool::new(4);
+        let spawned = pool.spawn_count();
+        assert_eq!(spawned, 4);
+        for round in 0..50 {
+            let total = AtomicU64::new(0);
+            pool.scope_chunks(997, 13, |s, e| {
+                let local: u64 = (s..e).map(|i| i as u64).sum();
+                total.fetch_add(local, Ordering::SeqCst);
+            });
+            assert_eq!(total.load(Ordering::SeqCst), (0..997u64).sum(), "round {round}");
+        }
+        // Persistent workers only: repeated scopes never spawn.
+        assert_eq!(pool.spawn_count(), spawned);
+    }
+
+    #[test]
+    fn pool_survives_a_panicking_task() {
+        let pool = ThreadPool::new(4);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.scope_chunks(100, 1, |s, _| {
+                if s == 13 {
+                    panic!("boom");
+                }
+            });
+        }));
+        // The original payload must survive the pool (debuggability).
+        let payload = result.expect_err("scope must propagate the task panic");
+        assert_eq!(payload.downcast_ref::<&str>(), Some(&"boom"));
+        // The poisoned task was isolated: workers are alive and later
+        // scopes on the same pool run to completion.
+        let hits: Vec<AtomicUsize> = (0..500).map(|_| AtomicUsize::new(0)).collect();
+        pool.scope_chunks(500, 3, |s, e| {
+            for i in s..e {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn nested_scopes_complete_without_deadlock() {
+        let pool = ThreadPool::new(4);
+        let total = AtomicU64::new(0);
+        pool.scope_chunks(8, 1, |o0, o1| {
+            for _outer in o0..o1 {
+                // Nested scope on the same pool, executed from a worker (or
+                // the helping caller): waiters help with their own scope's
+                // units, so this must not deadlock.
+                let inner = AtomicU64::new(0);
+                pool.scope_chunks(256, 8, |s, e| {
+                    let local: u64 = (s..e).map(|i| i as u64).sum();
+                    inner.fetch_add(local, Ordering::SeqCst);
+                });
+                assert_eq!(inner.load(Ordering::SeqCst), (0..256u64).sum());
+                total.fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 8);
+    }
+
+    #[test]
+    fn clean_shutdown_on_drop() {
+        let before = total_spawns();
+        let pool = ThreadPool::new(3);
+        assert!(total_spawns() >= before + 3);
+        let count = AtomicUsize::new(0);
+        pool.scope_chunks(64, 4, |s, e| {
+            count.fetch_add(e - s, Ordering::SeqCst);
+        });
+        assert_eq!(count.load(Ordering::SeqCst), 64);
+        // Drop must join every worker promptly (a deadlocked parked worker
+        // would hang the test harness here and trip the CI time ceiling).
+        drop(pool);
+    }
+
+    #[test]
     fn kernel_users_guard_caps_parallel_for_and_releases() {
-        // One test (not two) so the global ACTIVE_KERNEL_USERS assertions
-        // can't race against a sibling test's guard in the parallel harness;
-        // this is the only lib test touching the counter.
+        // One test (not several) so the global ACTIVE_KERNEL_USERS and
+        // WORKER_CAP assertions can't race against a sibling test's guard
+        // in the parallel harness; this is the only lib test touching them.
+        let workers = global().workers();
         let before = active_kernel_users();
         let g = register_kernel_users(3);
         assert!(active_kernel_users() >= before + 3);
         drop(g);
         assert_eq!(active_kernel_users(), before);
+
+        // Budget arithmetic: users divide the pool, floor 1, cap composes.
+        if before == 0 {
+            assert_eq!(kernel_worker_budget(), workers);
+            let g2 = register_kernel_users(2);
+            assert_eq!(kernel_worker_budget(), (workers / 2).max(1));
+            drop(g2);
+            let g1024 = register_kernel_users(1024);
+            assert_eq!(kernel_worker_budget(), 1);
+            drop(g1024);
+            set_worker_cap(Some(1));
+            assert_eq!(kernel_worker_budget(), 1);
+            set_worker_cap(None);
+            assert_eq!(kernel_worker_budget(), workers);
+        }
 
         // A user count far above any core count forces the inline path;
         // coverage must be unchanged.
