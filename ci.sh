@@ -33,6 +33,13 @@ echo "==> forward_latency --smoke (pool regression gate, 300s ceiling)"
 # pool worker (or any scope that never completes) into a loud failure.
 timeout 300 cargo bench --bench forward_latency -- --smoke
 
+echo "==> serving_arrivals --smoke (open-loop scheduler gate, 300s ceiling)"
+# Paced Poisson arrivals at trivial load on a 1-model and a 2-model mix:
+# asserts zero steady-state thread spawns and a sane SLO-miss fraction, so
+# a registry/scheduler regression (starvation, a stalled batcher, queues
+# that never drain) fails loudly here instead of only under real traffic.
+timeout 300 cargo bench --bench serving_arrivals -- --smoke
+
 echo "==> cargo fmt --check"
 cargo fmt --check
 

@@ -1,0 +1,310 @@
+//! Open-loop Poisson arrivals: offered load vs SLO-miss fraction, for a
+//! 1-model and a 2-model registry mix.
+//!
+//! An open-loop generator submits on a precomputed arrival schedule —
+//! exponential inter-arrival gaps and per-request model picks drawn from a
+//! seeded [`Pcg64`], so the *workload* is fully deterministic (no wall
+//! clock anywhere in its construction; real time is only used to pace the
+//! schedule and to measure latency). Arrivals do not wait for completions,
+//! which is what makes overload visible: past the server's capacity the
+//! queue grows and the SLO-miss fraction climbs toward 1 — the Fig. 11
+//! serving story measured the way serving systems are actually loaded.
+//!
+//! Per mix, the bench calibrates achievable throughput with a closed-loop
+//! blast, then sweeps offered load as fractions of that capacity and
+//! reports achieved rps, p50/p95/p99 and SLO-miss (overall and per model).
+//!
+//! Run: `cargo bench --bench serving_arrivals [-- --full | -- --smoke]`
+//! (quick/smoke serve the `tiny` artifacts; full serves `base`.)
+//! `--smoke` runs one trivial-load point per mix and asserts zero
+//! steady-state thread spawns and a sane SLO-miss fraction (ci.sh gate).
+//!
+//! Emits `BENCH_serving_arrivals.json` via `benchkit::JsonReport`.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use sten::coordinator::metrics::{per_model, percentile, slo_miss_fraction};
+use sten::coordinator::{
+    ConcurrentServer, Engine, FfnMode, ModelRegistry, RequestResult, SchedPolicy, ServeConfig,
+};
+use sten::runtime::ArtifactRuntime;
+use sten::util::benchkit::JsonReport;
+use sten::util::rng::Pcg64;
+use sten::util::threadpool;
+
+const NMG: FfnMode = FfnMode::NativeNmg { n: 2, m: 4, g: 4 };
+
+/// A registry mix: (name, ffn mode, replicas, weight) per model.
+struct Mix {
+    label: &'static str,
+    models: Vec<(&'static str, FfnMode, usize, u64)>,
+    policy: SchedPolicy,
+}
+
+fn start_server(
+    rt: &Arc<ArtifactRuntime>,
+    tag: &str,
+    mix: &Mix,
+    cfg: ServeConfig,
+) -> ConcurrentServer {
+    let mut registry = ModelRegistry::new();
+    for (i, (name, mode, replicas, weight)) in mix.models.iter().enumerate() {
+        let engine = Engine::with_runtime(rt.clone(), tag, *mode, 42 + i as u64).expect("engine");
+        registry.register(name, engine, *replicas, *weight).expect("register model");
+    }
+    ConcurrentServer::start_registry(registry, cfg).expect("start server")
+}
+
+/// Seeded exponential inter-arrival gaps (seconds) for `rate_rps`.
+fn poisson_gaps(rng: &mut Pcg64, rate_rps: f64, n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|_| {
+            let u = (1.0 - rng.next_f32() as f64).max(1e-9); // in (0, 1]
+            -u.ln() / rate_rps
+        })
+        .collect()
+}
+
+/// Closed-loop blast to estimate the mix's achievable req/s.
+fn calibrate(rt: &Arc<ArtifactRuntime>, tag: &str, mix: &Mix, requests: usize) -> f64 {
+    let cfg = ServeConfig {
+        queue_cap: 64,
+        max_wait: Duration::from_millis(1),
+        policy: mix.policy,
+        ..ServeConfig::default()
+    };
+    let server = start_server(rt, tag, mix, cfg);
+    let seq = server.dims().seq;
+    let vocab = server.dims().vocab as u32;
+    let mut rng = Pcg64::seeded(5);
+    // Warm artifact preparation before timing.
+    for (name, ..) in &mix.models {
+        let toks: Vec<i32> = (0..seq).map(|_| rng.below(vocab) as i32).collect();
+        server.submit_to(name, &toks).unwrap();
+    }
+    server.drain();
+    let t = Instant::now();
+    for i in 0..requests {
+        let (name, ..) = mix.models[i % mix.models.len()];
+        let toks: Vec<i32> = (0..seq).map(|_| rng.below(vocab) as i32).collect();
+        server.submit_to(name, &toks).unwrap();
+    }
+    server.drain();
+    let rps = requests as f64 / t.elapsed().as_secs_f64().max(1e-9);
+    server.finish().expect("calibration finish");
+    rps
+}
+
+struct Point {
+    offered_rps: f64,
+    achieved_rps: f64,
+    p50_s: f64,
+    p95_s: f64,
+    p99_s: f64,
+    slo_miss: f64,
+    per_model_miss: Vec<(String, f64)>,
+    spawned: usize,
+}
+
+/// One open-loop load point: pace `n` arrivals at `offered_rps`, measure
+/// latency/SLO over the paced window only (warmup excluded).
+fn run_point(
+    rt: &Arc<ArtifactRuntime>,
+    tag: &str,
+    mix: &Mix,
+    offered_rps: f64,
+    n: usize,
+    slo: Duration,
+    seed: u64,
+) -> Point {
+    let cfg = ServeConfig {
+        // Open loop: the generator must never block on backpressure within
+        // the sweep sizes used here.
+        queue_cap: 16384,
+        max_wait: Duration::from_millis(2),
+        policy: mix.policy,
+        slo,
+        ..ServeConfig::default()
+    };
+    let server = start_server(rt, tag, mix, cfg);
+    let seq = server.dims().seq;
+    let vocab = server.dims().vocab as u32;
+    let names: Vec<&str> = mix.models.iter().map(|m| m.0).collect();
+
+    // The deterministic workload: gaps, model picks and token streams.
+    let mut rng = Pcg64::seeded(seed);
+    let gaps = poisson_gaps(&mut rng, offered_rps, n);
+    let picks: Vec<usize> = (0..n).map(|_| rng.below(names.len() as u32) as usize).collect();
+    let tokens: Vec<Vec<i32>> =
+        (0..n).map(|_| (0..seq).map(|_| rng.below(vocab) as i32).collect()).collect();
+
+    // Warmup wave (every model once, plus pool/artifact spin-up), drained
+    // and excluded from the measured window.
+    let mut warm_ids = Vec::new();
+    for (m, name) in names.iter().enumerate() {
+        warm_ids.push(server.submit_to(name, &tokens[m % n]).unwrap());
+    }
+    server.drain();
+    let spawns_before = threadpool::total_spawns();
+
+    let start = Instant::now();
+    let mut due = 0.0f64;
+    for i in 0..n {
+        due += gaps[i];
+        let target = start + Duration::from_secs_f64(due);
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        server.submit_to(names[picks[i]], &tokens[i]).unwrap();
+    }
+    server.drain();
+    // Achieved throughput includes the post-submission drain: under
+    // overload the backlog is served after the last arrival, and counting
+    // only the submission window would just echo the offered rate.
+    let served_wall = start.elapsed().as_secs_f64().max(1e-9);
+    let spawned = threadpool::total_spawns() - spawns_before;
+    let report = server.finish().expect("serve finish");
+
+    // Measured window = everything after the warmup ids.
+    let measured: Vec<RequestResult> =
+        report.results.iter().filter(|r| !warm_ids.contains(&r.id)).cloned().collect();
+    assert_eq!(measured.len(), n, "lost completions in the measured window");
+    let mut lat: Vec<f64> = measured.iter().map(|r| r.total_s).collect();
+    lat.sort_by(|a, b| a.total_cmp(b));
+    let slo_s = slo.as_secs_f64();
+    let per_model_miss = per_model(&measured, names.len(), slo_s)
+        .into_iter()
+        .zip(&names)
+        .map(|(mm, name)| ((*name).to_string(), mm.slo_miss.unwrap_or(0.0)))
+        .collect();
+    Point {
+        offered_rps,
+        achieved_rps: n as f64 / served_wall,
+        p50_s: percentile(&lat, 50.0),
+        p95_s: percentile(&lat, 95.0),
+        p99_s: percentile(&lat, 99.0),
+        slo_miss: slo_miss_fraction(&measured, slo_s).unwrap_or(0.0),
+        per_model_miss,
+        spawned,
+    }
+}
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let full = args.iter().any(|a| a == "--full");
+    let tag = if full { "base" } else { "tiny" };
+    let rt = Arc::new(ArtifactRuntime::open_default().expect("artifact runtime"));
+    let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
+
+    let mixes = vec![
+        Mix { label: "1-model-nmg", models: vec![("nmg", NMG, 2, 1)], policy: SchedPolicy::Fifo },
+        Mix {
+            label: "2-model-dense+nmg",
+            models: vec![("dense", FfnMode::NativeDense, 1, 1), ("nmg", NMG, 1, 3)],
+            policy: SchedPolicy::Wdrr,
+        },
+    ];
+    let load_fractions: Vec<f64> = if smoke {
+        vec![0.2]
+    } else if full {
+        vec![0.25, 0.5, 0.75, 1.0, 1.25, 1.5]
+    } else {
+        vec![0.25, 0.5, 1.0, 1.5]
+    };
+    let n_requests = if smoke {
+        64
+    } else if full {
+        512
+    } else {
+        256
+    };
+    let calib_requests = if smoke { 64 } else { 128 };
+
+    println!(
+        "# Open-loop Poisson arrivals: artifacts `{tag}`, {n_requests} requests/point, \
+         {cores} cores (smoke={smoke}, full={full})"
+    );
+    let mut json = JsonReport::new("serving_arrivals");
+    for mix in &mixes {
+        let capacity = calibrate(&rt, tag, mix, calib_requests);
+        // SLO: an order of magnitude above the per-request service time at
+        // capacity, floored for scheduler granularity — tight enough that
+        // overload shows, loose enough that trivial load sails under it.
+        let slo = Duration::from_secs_f64((10.0 / capacity).max(0.005));
+        println!(
+            "\n## mix {} ({:?}); calibrated capacity {:.0} req/s, slo {:.1} ms",
+            mix.label,
+            mix.policy,
+            capacity,
+            slo.as_secs_f64() * 1e3
+        );
+        println!("load\toffered_rps\tachieved_rps\tp50_ms\tp95_ms\tp99_ms\tslo_miss\tspawns");
+        for (pi, &frac) in load_fractions.iter().enumerate() {
+            let offered = (capacity * frac).max(1.0);
+            let p = run_point(&rt, tag, mix, offered, n_requests, slo, 900 + pi as u64);
+            println!(
+                "{frac:.2}x\t{:.0}\t{:.0}\t{:.3}\t{:.3}\t{:.3}\t{:.3}\t{}",
+                p.offered_rps,
+                p.achieved_rps,
+                p.p50_s * 1e3,
+                p.p95_s * 1e3,
+                p.p99_s * 1e3,
+                p.slo_miss,
+                p.spawned
+            );
+            for (name, miss) in &p.per_model_miss {
+                println!("  model {name}: slo_miss {miss:.3}");
+            }
+            json.row(&[
+                ("mix", mix.label.into()),
+                ("load_fraction", frac.into()),
+                ("offered_rps", p.offered_rps.into()),
+                ("achieved_rps", p.achieved_rps.into()),
+                ("p50_s", p.p50_s.into()),
+                ("p95_s", p.p95_s.into()),
+                ("p99_s", p.p99_s.into()),
+                ("slo_miss", p.slo_miss.into()),
+                ("slo_s", slo.as_secs_f64().into()),
+                ("spawns", p.spawned.into()),
+            ]);
+            for (name, miss) in &p.per_model_miss {
+                json.row(&[
+                    ("mix", mix.label.into()),
+                    ("load_fraction", frac.into()),
+                    ("model", name.as_str().into()),
+                    ("slo_miss", (*miss).into()),
+                ]);
+            }
+            if smoke {
+                assert_eq!(
+                    p.spawned, 0,
+                    "steady-state serving must not spawn threads (mix {})",
+                    mix.label
+                );
+                assert!(
+                    p.slo_miss <= 0.5,
+                    "slo-miss {:.3} at trivial load ({:.0} of {:.0} req/s capacity, mix {})",
+                    p.slo_miss,
+                    p.offered_rps,
+                    capacity,
+                    mix.label
+                );
+            }
+        }
+    }
+
+    match json.write() {
+        Ok(path) => println!("\nwrote {}", path.display()),
+        Err(e) => eprintln!("failed to write bench json: {e}"),
+    }
+    if smoke {
+        println!("smoke OK: spawn-free open-loop serving, sane SLO-miss at trivial load");
+    }
+    println!(
+        "\n(expect slo_miss ~0 below capacity and climbing past 1.0x offered load; \
+         the 2-model mix shares workers under weighted deficit round-robin)"
+    );
+}

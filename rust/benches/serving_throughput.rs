@@ -56,7 +56,7 @@ struct ConcRow {
 }
 
 fn run_concurrent(tag: &str, reqs: &[Vec<i32>], replicas: usize, max_wait: Duration) -> ConcRow {
-    let cfg = ServeConfig { replicas, queue_cap: 64, max_wait };
+    let cfg = ServeConfig { replicas, queue_cap: 64, max_wait, ..ServeConfig::default() };
     let server = ConcurrentServer::start(engine(tag), cfg).unwrap();
     let t = Instant::now();
     for r in reqs {
@@ -157,8 +157,12 @@ fn main() {
     // must not create a single thread — kernel parallelism comes entirely
     // from the persistent pool.
     let steady_replicas = 2usize.min(cores.max(1));
-    let steady_cfg =
-        ServeConfig { replicas: steady_replicas, queue_cap: 64, max_wait: Duration::from_millis(1) };
+    let steady_cfg = ServeConfig {
+        replicas: steady_replicas,
+        queue_cap: 64,
+        max_wait: Duration::from_millis(1),
+        ..ServeConfig::default()
+    };
     let server = ConcurrentServer::start(engine(tag), steady_cfg).unwrap();
     for r in reqs.iter().take(reqs.len() / 4 + 1) {
         server.submit(r).unwrap(); // warmup wave

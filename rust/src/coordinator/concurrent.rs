@@ -1,38 +1,49 @@
-//! The concurrent serving front-end: bounded submission queue, deadline
-//! batcher, N engine replicas.
+//! The concurrent serving front-end: model registry, pluggable scheduler,
+//! shared worker pool.
 //!
 //! Topology (all threads live on one [`WorkerPool`]):
 //!
 //! ```text
-//! submit() --bounded channel--> [batcher] --batch channel--> [worker 0..N)
-//!   (backpressure: send blocks    |  deadline batch formation   each owns an
-//!    when queue_cap is reached)   |  (full batch: dispatch now;  Engine replica
-//!                                 |   else: dispatch when the    sharing weights
-//!                                 |   oldest request has waited  via Arc
-//!                                 |   max_wait)
+//! submit_to(model, ..) --bounded channel--> [batcher] --batch channel--> [worker 0..W)
+//!   (backpressure: send blocks    |  drives a Scheduler:        each worker owns one
+//!    when queue_cap is reached;   |  per-model forming queues,  Engine replica of
+//!    per-model queue gauges)      |  FIFO-across-models or      EVERY model (weights
+//!                                 |  weighted deficit RR,       Arc-shared per model),
+//!                                 |  max_wait deadline batching |  executes whichever
+//!                                 |                             |  model's batch arrives
 //! ```
 //!
 //! Guarantees:
 //!
 //! * **Backpressure** — at most `queue_cap` requests are queued ahead of the
-//!   batcher; further `submit` calls block (no unbounded memory).
-//! * **Deadline batching** — a batch is dispatched the moment it is full,
-//!   or as soon as its oldest request has waited `max_wait`, whichever
-//!   comes first. Under light load no request waits in queue longer than
-//!   `max_wait` before its batch is formed.
-//! * **Shared weights** — replicas are [`Engine::replicate`] clones: one
-//!   `Arc`-held parameter set, n:m:g conversion done once, and zero weight
-//!   bytes copied per forward (`Value::F32` carries `Arc` handles).
+//!   batcher (global across models); further `submit` calls block. The
+//!   scheduler's per-model forming queues stay small because the batcher
+//!   dispatches every dispatchable batch before ingesting the next arrival.
+//! * **Deadline batching** — per model: a full batch (that model's artifact
+//!   batch size) dispatches immediately; otherwise a batch dispatches the
+//!   moment its oldest request has waited `max_wait`. Deadline-expired
+//!   batches bypass the weighted-scheduling deficit, so `max_wait` is a
+//!   latency promise no weight assignment can starve.
+//! * **Weighted sharing** — under saturation the WDRR policy serves models
+//!   proportionally to their registry weights; the FIFO policy serves the
+//!   globally-oldest request first and, with a single registered model,
+//!   reproduces the pre-registry server's batch formation exactly.
+//! * **Shared weights** — each worker holds an [`Engine::replicate`] clone
+//!   of every registered model: one `Arc`-held parameter set per model,
+//!   n:m:g conversion done once per model, zero weight bytes copied per
+//!   forward. Kernel parallelism is divided among the workers via
+//!   [`crate::util::threadpool::register_kernel_users`] (one registration
+//!   for the whole server, W workers), so the worker pool never
+//!   oversubscribes the host regardless of how many models it serves.
 //! * **De-contended completion** — each worker records results in its own
-//!   buffer (merged on snapshot/finish); the only cross-worker critical
-//!   section per batch is a counter bump under the completion condvar's
-//!   mutex. Kernel parallelism is divided among replicas via
-//!   [`crate::util::threadpool::register_kernel_users`], so R replicas
-//!   never oversubscribe the host by R x cores.
-//! * **Metrics** — per-request latency records with real batch ids,
-//!   p50/p95/p99 summaries and a queue-depth gauge with high-water mark.
+//!   buffer; snapshots merge by cloning, `finish` drains the buffers
+//!   without cloning. The only cross-worker critical section per batch is
+//!   a counter bump under the completion condvar's mutex.
+//! * **Metrics** — per-request records carry model and batch ids;
+//!   [`ServeReport`] summarizes p50/p95/p99 latency, SLO-miss fractions
+//!   and queue high-water marks globally and per model.
 
-use std::collections::VecDeque;
+use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -45,30 +56,68 @@ use crate::util::threadpool::{self, WorkerPool};
 use crate::util::timer::TimeBreakdown;
 
 use super::engine::{EncoderDims, Engine};
-use super::metrics::{self, LatencySummary, QueueGauge};
+use super::metrics::{self, LatencySummary, ModelMetrics, QueueGauge};
+use super::registry::ModelRegistry;
+use super::scheduler::{self, Decision, SchedModel, SchedPolicy, Scheduler};
 use super::serve::{canonical_tokens, pad_batch_tokens, Request, RequestResult};
 
 /// Configuration for [`ConcurrentServer`].
 #[derive(Debug, Clone, Copy)]
 pub struct ServeConfig {
-    /// Engine replicas (worker threads executing batches).
+    /// Engine replicas (worker threads) for the single-model
+    /// [`ConcurrentServer::start`] path. The registry path ignores this:
+    /// there, each model's registered replica count contributes workers.
     pub replicas: usize,
-    /// Submission queue bound; `submit` blocks past this depth.
+    /// Submission queue bound, global across models; `submit` blocks past
+    /// this depth. Per-model forming queues inside the scheduler are not
+    /// separately bounded — they hold less than one batch per model.
     pub queue_cap: usize,
     /// Max time a request may wait for batch-mates before its (possibly
     /// partial) batch is dispatched.
     pub max_wait: Duration,
+    /// Batch-formation policy across models.
+    pub policy: SchedPolicy,
+    /// End-to-end latency objective judged against each request's
+    /// `total_s`; reported as SLO-miss fractions, never enforced.
+    pub slo: Duration,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { replicas: 2, queue_cap: 256, max_wait: Duration::from_millis(2) }
+        ServeConfig {
+            replicas: 2,
+            queue_cap: 256,
+            max_wait: Duration::from_millis(2),
+            policy: SchedPolicy::Fifo,
+            slo: Duration::from_millis(25),
+        }
     }
 }
+
+/// Typed rejection from [`ConcurrentServer::submit_to`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The model name is not in the server's registry.
+    UnknownModel(String),
+    /// The server no longer accepts requests.
+    ShutDown,
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::UnknownModel(name) => write!(f, "unknown model {name:?}"),
+            SubmitError::ShutDown => write!(f, "server is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
 
 /// A formed batch travelling from the batcher to a worker.
 struct Batch {
     id: u64,
+    model: usize,
     formed: Instant,
     requests: Vec<Request>,
 }
@@ -77,7 +126,8 @@ struct Batch {
 struct Shared {
     /// One completion buffer per worker. Each worker appends only to its
     /// own slot, so the result-recording hot path never contends with other
-    /// workers; snapshots and `finish` merge the buffers.
+    /// workers; snapshots merge the buffers by cloning, `finish` drains
+    /// them.
     worker_results: Vec<Mutex<Vec<RequestResult>>>,
     /// Batch/batcher failures (rare path; a plain shared lock is fine).
     errors: Mutex<Vec<String>>,
@@ -86,6 +136,8 @@ struct Shared {
     finished: Mutex<u64>,
     done_cv: Condvar,
     gauge: QueueGauge,
+    /// Per-model queue gauges, indexed by registry order.
+    model_gauges: Vec<QueueGauge>,
     batches: AtomicU64,
 }
 
@@ -104,7 +156,14 @@ impl Shared {
         self.account(n);
     }
 
-    /// Merge all per-worker buffers into one id-ordered result vector.
+    /// A request left the queues (dispatched or failed).
+    fn exit_queues(&self, model: usize, n: usize) {
+        self.gauge.exit(n);
+        self.model_gauges[model].exit(n);
+    }
+
+    /// Merge all per-worker buffers into one id-ordered result vector,
+    /// leaving the buffers intact (mid-run snapshots).
     fn merged_results(&self) -> Vec<RequestResult> {
         let mut out = Vec::new();
         for buf in &self.worker_results {
@@ -113,6 +172,28 @@ impl Shared {
         out.sort_by_key(|r| r.id);
         out
     }
+
+    /// Drain all per-worker buffers into one id-ordered result vector
+    /// without cloning any record (the `finish` path: workers are done).
+    fn drain_results(&self) -> Vec<RequestResult> {
+        let mut out = Vec::new();
+        for buf in &self.worker_results {
+            out.append(&mut buf.lock().unwrap());
+        }
+        out.sort_by_key(|r| r.id);
+        out
+    }
+}
+
+/// Per-model slice of the final report.
+#[derive(Debug)]
+pub struct ModelReport {
+    /// Registered model name.
+    pub name: String,
+    /// Latency / SLO / batch rollup for this model's requests.
+    pub metrics: ModelMetrics,
+    /// Deepest this model's share of the submission queue has been.
+    pub queue_high_water: usize,
 }
 
 /// Final report returned by [`ConcurrentServer::finish`].
@@ -120,8 +201,12 @@ impl Shared {
 pub struct ServeReport {
     /// One record per completed request.
     pub results: Vec<RequestResult>,
-    /// p50/p95/p99 end-to-end latency summary.
+    /// p50/p95/p99 end-to-end latency summary over all models.
     pub latency: Option<LatencySummary>,
+    /// Fraction of all requests that exceeded `ServeConfig::slo`.
+    pub slo_miss: Option<f64>,
+    /// Per-model reports, in registry order.
+    pub per_model: Vec<ModelReport>,
     /// Batches dispatched.
     pub batches: u64,
     /// Server lifetime, start -> finish.
@@ -130,140 +215,179 @@ pub struct ServeReport {
     pub wall_rps: f64,
     /// Requests per second of (batch-deduplicated) compute time.
     pub compute_rps: Option<f64>,
-    /// Deepest the submission queue has been.
+    /// Deepest the submission queue has been (all models).
     pub queue_high_water: usize,
-    /// Per-replica runtime timing views (`execute`/`transfer`/`compile`
-    /// buckets charged by each replica's worker thread), indexed by replica
-    /// id.
+    /// Per-worker runtime timing views (`execute`/`transfer`/`compile`
+    /// buckets charged by each worker thread), indexed by worker id.
     pub replica_timing: Vec<TimeBreakdown>,
 }
 
-/// The concurrent, deadline-aware batch server.
+/// The concurrent, deadline-aware, multi-model batch server.
 pub struct ConcurrentServer {
-    dims: EncoderDims,
+    names: Vec<String>,
+    dims: Vec<EncoderDims>,
+    slo: Duration,
     submit_tx: Option<channel::Sender<Request>>,
     pool: Option<WorkerPool>,
     shared: Arc<Shared>,
-    /// The replicas' shared artifact runtime (for per-replica timing views).
+    /// The workers' shared artifact runtime (for per-worker timing views).
     rt: Arc<ArtifactRuntime>,
-    replicas: usize,
+    workers: usize,
     next_id: AtomicU64,
     submitted: AtomicU64,
     started: Instant,
-    /// Divides the global kernel pool among this server's replicas for the
-    /// server's lifetime (released on drop).
+    /// Divides the global kernel pool among this server's workers for the
+    /// server's lifetime (released on drop; a new server re-registers its
+    /// own worker count, so kernel budgets follow replica assignment).
     _kernel_users: threadpool::KernelUsersGuard,
 }
 
 impl ConcurrentServer {
-    /// Start serving: replicates `engine` per `cfg.replicas` (sharing its
-    /// weights) and spawns the batcher plus one worker thread per replica.
+    /// Start a single-model server: replicates `engine` per `cfg.replicas`
+    /// (sharing its weights) under the model name `"default"`. This is the
+    /// pre-registry entry point; with the (default) FIFO policy its batch
+    /// formation is identical to the old single-queue batcher.
     pub fn start(engine: Engine, cfg: ServeConfig) -> Result<Self> {
         if cfg.replicas == 0 {
             bail!("ServeConfig.replicas must be at least 1");
         }
-        let dims = engine.dims.clone();
-        let rt = Arc::clone(engine.runtime());
-        let mut engines = Vec::with_capacity(cfg.replicas);
-        for _ in 1..cfg.replicas {
-            engines.push(engine.replicate());
+        let mut registry = ModelRegistry::new();
+        registry.register("default", engine, cfg.replicas, 1)?;
+        Self::start_registry(registry, cfg)
+    }
+
+    /// Start serving every model in `registry` behind one front-end: one
+    /// scheduler (per `cfg.policy`), one batcher thread, and a shared pool
+    /// of `registry.total_replicas()` workers, each holding a replica of
+    /// every model so it can execute whichever model's batch the scheduler
+    /// forms next.
+    pub fn start_registry(registry: ModelRegistry, cfg: ServeConfig) -> Result<Self> {
+        if registry.is_empty() {
+            bail!("model registry has no models");
         }
-        engines.push(engine);
+        let entries = registry.into_entries();
+        let names: Vec<String> = entries.iter().map(|m| m.name.clone()).collect();
+        let dims: Vec<EncoderDims> = entries.iter().map(|m| m.engine.dims.clone()).collect();
+        let rt = Arc::clone(entries[0].engine.runtime());
+        // Per-worker timing views (and the compile-once guarantee) are read
+        // from one runtime; engines built over separate runtimes would
+        // silently charge their artifact time elsewhere. Require sharing
+        // (build registry engines with `Engine::with_runtime`).
+        if let Some(stray) = entries.iter().find(|m| !Arc::ptr_eq(m.engine.runtime(), &rt)) {
+            bail!(
+                "model {:?} uses a different ArtifactRuntime than {:?}; registry engines \
+                 must share one runtime (build them with Engine::with_runtime)",
+                stray.name,
+                entries[0].name
+            );
+        }
+        let workers: usize = entries.iter().map(|m| m.replicas).sum();
+        let sched_models: Vec<SchedModel> = entries
+            .iter()
+            .map(|m| SchedModel { batch: m.engine.dims.batch, weight: m.weight })
+            .collect();
+        let mut sched = scheduler::make(cfg.policy, sched_models, cfg.max_wait);
+
+        // One replica set per worker: every model, Arc-shared weights.
+        let worker_engines: Vec<Vec<Engine>> = (0..workers)
+            .map(|_| entries.iter().map(|m| m.engine.replicate()).collect())
+            .collect();
 
         let shared = Arc::new(Shared {
-            worker_results: (0..cfg.replicas).map(|_| Mutex::new(Vec::new())).collect(),
+            worker_results: (0..workers).map(|_| Mutex::new(Vec::new())).collect(),
             errors: Mutex::new(Vec::new()),
             finished: Mutex::new(0),
             done_cv: Condvar::new(),
             gauge: QueueGauge::new(),
+            model_gauges: (0..names.len()).map(|_| QueueGauge::new()).collect(),
             batches: AtomicU64::new(0),
         });
 
         let (submit_tx, submit_rx) = channel::bounded::<Request>(cfg.queue_cap.max(1));
-        let (batch_tx, batch_rx) = channel::bounded::<Batch>(cfg.replicas * 2);
-        let pool = WorkerPool::named("sten-serve", cfg.replicas + 1);
+        let (batch_tx, batch_rx) = channel::bounded::<Batch>(workers * 2);
+        let pool = WorkerPool::named("sten-serve", workers + 1);
 
-        // The batcher: deadline-driven batch formation.
+        // The batcher: drives the scheduler over the arrival stream.
         {
             let shared = shared.clone();
-            let batch_size = dims.batch;
-            let max_wait = cfg.max_wait;
             pool.execute(move || {
-                let mut pending: VecDeque<Request> = VecDeque::new();
                 let mut open = true;
-                let mut next_batch = 0u64;
-                while open || !pending.is_empty() {
-                    if pending.is_empty() {
-                        match submit_rx.recv() {
-                            Some(r) => pending.push_back(r),
-                            None => {
-                                open = false;
-                                continue;
+                loop {
+                    match sched.poll(Instant::now(), open) {
+                        Decision::Dispatch(formed) => {
+                            shared.exit_queues(formed.model, formed.requests.len());
+                            shared.batches.fetch_add(1, Ordering::SeqCst);
+                            let batch = Batch {
+                                id: formed.id,
+                                model: formed.model,
+                                formed: Instant::now(),
+                                requests: formed.requests,
+                            };
+                            if let Err(channel::SendError(batch)) = batch_tx.send(batch) {
+                                // All workers are gone (e.g. panicked): fail
+                                // this batch, everything still queued, and
+                                // everything that arrives until the queue
+                                // closes, so drain() and finish() never hang
+                                // on requests nobody will execute.
+                                shared.fail(
+                                    batch.requests.len() as u64,
+                                    format!("batch {}: no workers left", batch.id),
+                                );
+                                let stranded = sched.take_all();
+                                if !stranded.is_empty() {
+                                    for r in &stranded {
+                                        shared.exit_queues(r.model, 1);
+                                    }
+                                    shared.fail(
+                                        stranded.len() as u64,
+                                        format!(
+                                            "{} pending requests: no workers left",
+                                            stranded.len()
+                                        ),
+                                    );
+                                }
+                                while let Some(r) = submit_rx.recv() {
+                                    shared.exit_queues(r.model, 1);
+                                    shared.fail(1, format!("request {}: no workers left", r.id));
+                                }
+                                break;
                             }
                         }
-                    }
-                    while open && pending.len() < batch_size {
-                        let deadline = pending.front().unwrap().arrived + max_wait;
-                        match submit_rx.recv_deadline(deadline) {
-                            Received::Item(r) => pending.push_back(r),
-                            Received::TimedOut => break,
+                        Decision::WaitUntil(deadline) => match submit_rx.recv_deadline(deadline) {
+                            Received::Item(r) => sched.enqueue(r),
+                            Received::TimedOut => {}
                             Received::Closed => open = false,
-                        }
-                    }
-                    let take = pending.len().min(batch_size);
-                    let requests: Vec<Request> = pending.drain(..take).collect();
-                    shared.gauge.exit(take);
-                    shared.batches.fetch_add(1, Ordering::SeqCst);
-                    let batch = Batch { id: next_batch, formed: Instant::now(), requests };
-                    next_batch += 1;
-                    if let Err(channel::SendError(batch)) = batch_tx.send(batch) {
-                        // All workers are gone (e.g. panicked): fail this
-                        // batch, everything still pending, and everything
-                        // that arrives until the queue closes, so drain()
-                        // and finish() never hang on requests nobody will
-                        // execute.
-                        shared.fail(
-                            batch.requests.len() as u64,
-                            format!("batch {}: no workers left", batch.id),
-                        );
-                        let stranded = pending.len();
-                        shared.gauge.exit(stranded);
-                        pending.clear();
-                        if stranded > 0 {
-                            shared.fail(
-                                stranded as u64,
-                                format!("{stranded} pending requests: no workers left"),
-                            );
-                        }
-                        while let Some(r) = submit_rx.recv() {
-                            shared.gauge.exit(1);
-                            shared.fail(1, format!("request {}: no workers left", r.id));
-                        }
-                        break;
+                        },
+                        Decision::WaitForArrival => match submit_rx.recv() {
+                            Some(r) => sched.enqueue(r),
+                            None => open = false,
+                        },
+                        Decision::Idle => break,
                     }
                 }
             });
         }
 
-        // The workers: one engine replica each, each with a private
-        // completion buffer so recording results never contends.
-        for (worker_idx, mut engine) in engines.into_iter().enumerate() {
+        // The workers: each holds one engine replica per model and executes
+        // whatever the scheduler dispatched, recording results in a private
+        // buffer so completion never contends.
+        for (worker_idx, mut engines) in worker_engines.into_iter().enumerate() {
             let rx = batch_rx.clone();
             let shared = shared.clone();
-            let dims = dims.clone();
             pool.execute(move || {
                 // Tag this worker thread so the shared runtime charges its
-                // artifact time to this replica's timing view.
+                // artifact time to this worker's timing view.
                 crate::runtime::set_replica_id(Some(worker_idx as u64));
                 while let Some(batch) = rx.recv() {
-                    let tokens = pad_batch_tokens(&dims, &batch.requests);
+                    let model = batch.model;
+                    let tokens = pad_batch_tokens(&engines[model].dims, &batch.requests);
                     let t = Instant::now();
                     // A panicking forward must not kill the worker: the
                     // batch's requests would never be accounted and drain()
                     // would hang. Weights are immutable, so continuing with
                     // this engine after an unwind is safe.
                     let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                        || engine.forward(&tokens),
+                        || engines[model].forward(&tokens),
                     ))
                     .unwrap_or_else(|_| Err(anyhow!("engine forward panicked")));
                     let compute_s = t.elapsed().as_secs_f64();
@@ -274,6 +398,7 @@ impl ConcurrentServer {
                             for r in &batch.requests {
                                 buf.push(RequestResult {
                                     id: r.id,
+                                    model,
                                     batch_id: batch.id,
                                     queue_s: batch
                                         .formed
@@ -299,42 +424,80 @@ impl ConcurrentServer {
         drop(batch_rx);
 
         Ok(ConcurrentServer {
+            names,
             dims,
+            slo: cfg.slo,
             submit_tx: Some(submit_tx),
             pool: Some(pool),
             shared,
             rt,
-            replicas: cfg.replicas,
+            workers,
             next_id: AtomicU64::new(0),
             submitted: AtomicU64::new(0),
             started: Instant::now(),
-            _kernel_users: threadpool::register_kernel_users(cfg.replicas),
+            _kernel_users: threadpool::register_kernel_users(workers),
         })
     }
 
-    /// Encoder dimensions of the served model.
-    pub fn dims(&self) -> &EncoderDims {
-        &self.dims
+    /// Registered model names, in registry order.
+    pub fn models(&self) -> &[String] {
+        &self.names
     }
 
-    /// Enqueue a request (tokens clamped/padded); blocks while the
+    /// Encoder dimensions of the first registered model (the only one on
+    /// single-model servers).
+    pub fn dims(&self) -> &EncoderDims {
+        &self.dims[0]
+    }
+
+    /// Encoder dimensions of model `model` (registry order).
+    pub fn dims_of(&self, model: usize) -> &EncoderDims {
+        &self.dims[model]
+    }
+
+    /// Enqueue a request for the first registered model; blocks while the
     /// submission queue is at capacity. Returns the request id.
-    pub fn submit(&self, tokens: &[i32]) -> Result<u64> {
-        let t = canonical_tokens(&self.dims, tokens);
+    pub fn submit(&self, tokens: &[i32]) -> Result<u64, SubmitError> {
+        self.submit_idx(0, tokens)
+    }
+
+    /// Enqueue a request for the named model (tokens clamped/padded to that
+    /// model's dims); blocks while the submission queue is at capacity.
+    /// Returns [`SubmitError::UnknownModel`] for unregistered names.
+    pub fn submit_to(&self, model: &str, tokens: &[i32]) -> Result<u64, SubmitError> {
+        let idx = self
+            .names
+            .iter()
+            .position(|n| n == model)
+            .ok_or_else(|| SubmitError::UnknownModel(model.to_string()))?;
+        self.submit_idx(idx, tokens)
+    }
+
+    fn submit_idx(&self, model: usize, tokens: &[i32]) -> Result<u64, SubmitError> {
+        let t = canonical_tokens(&self.dims[model], tokens);
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
         self.shared.gauge.enter();
-        let tx = self.submit_tx.as_ref().ok_or_else(|| anyhow!("server is shut down"))?;
-        if tx.send(Request { id, tokens: t, arrived: Instant::now() }).is_err() {
-            self.shared.gauge.exit(1);
-            bail!("server is shut down");
+        self.shared.model_gauges[model].enter();
+        let Some(tx) = self.submit_tx.as_ref() else {
+            self.shared.exit_queues(model, 1);
+            return Err(SubmitError::ShutDown);
+        };
+        if tx.send(Request { id, tokens: t, model, arrived: Instant::now() }).is_err() {
+            self.shared.exit_queues(model, 1);
+            return Err(SubmitError::ShutDown);
         }
         self.submitted.fetch_add(1, Ordering::SeqCst);
         Ok(id)
     }
 
-    /// Requests currently waiting for batch formation.
+    /// Requests currently waiting for batch formation (all models).
     pub fn queue_depth(&self) -> usize {
         self.shared.gauge.depth()
+    }
+
+    /// Requests currently waiting for batch formation for one model.
+    pub fn queue_depth_of(&self, model: usize) -> usize {
+        self.shared.model_gauges[model].depth()
     }
 
     /// Deepest the submission queue has been.
@@ -371,14 +534,29 @@ impl ConcurrentServer {
                 bail!("{} batch(es) failed; first: {}", errors.len(), errors[0]);
             }
         }
-        let results = self.shared.merged_results();
+        // Workers are joined: drain their buffers instead of cloning every
+        // record (clones are reserved for mid-run snapshots).
+        let results = self.shared.drain_results();
         let latency = metrics::summarize(&results);
         let compute_rps = metrics::compute_throughput(&results);
+        let slo_s = self.slo.as_secs_f64();
+        let slo_miss = metrics::slo_miss_fraction(&results, slo_s);
+        let per_model = metrics::per_model(&results, self.names.len(), slo_s)
+            .into_iter()
+            .enumerate()
+            .map(|(m, rollup)| ModelReport {
+                name: self.names[m].clone(),
+                metrics: rollup,
+                queue_high_water: self.shared.model_gauges[m].high_water(),
+            })
+            .collect();
         let replica_timing =
-            (0..self.replicas as u64).map(|r| self.rt.timing_for_replica(r)).collect();
+            (0..self.workers as u64).map(|r| self.rt.timing_for_replica(r)).collect();
         Ok(ServeReport {
             wall_rps: results.len() as f64 / wall_s.max(1e-12),
             latency,
+            slo_miss,
+            per_model,
             batches: self.shared.batches.load(Ordering::SeqCst),
             wall_s,
             compute_rps,

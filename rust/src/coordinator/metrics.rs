@@ -1,8 +1,10 @@
-//! Serving metrics: latency percentiles, queue-depth gauges and
-//! batch-deduplicated throughput, shared by the synchronous drain-loop
-//! server and the concurrent server.
+//! Serving metrics: latency percentiles, SLO-miss fractions, queue-depth
+//! gauges and batch-deduplicated throughput, shared by the synchronous
+//! drain-loop server and the concurrent multi-model server. Every
+//! [`RequestResult`] carries its model index, so any aggregate here also
+//! has a per-model form (one [`ModelMetrics`] per registered model).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use super::serve::RequestResult;
@@ -46,6 +48,47 @@ pub fn summarize(results: &[RequestResult]) -> Option<LatencySummary> {
         mean: v.iter().sum::<f64>() / v.len() as f64,
         max: *v.last().unwrap(),
     })
+}
+
+/// Fraction of completed requests whose end-to-end latency (`total_s`)
+/// exceeded `slo_s` seconds; `None` when nothing completed.
+pub fn slo_miss_fraction(results: &[RequestResult], slo_s: f64) -> Option<f64> {
+    if results.is_empty() {
+        return None;
+    }
+    let misses = results.iter().filter(|r| r.total_s > slo_s).count();
+    Some(misses as f64 / results.len() as f64)
+}
+
+/// Per-model rollup of the request-level aggregates.
+#[derive(Debug, Clone)]
+pub struct ModelMetrics {
+    /// Completed requests for this model.
+    pub requests: usize,
+    /// p50/p95/p99 end-to-end latency over this model's requests.
+    pub latency: Option<LatencySummary>,
+    /// Fraction of this model's requests that missed the SLO.
+    pub slo_miss: Option<f64>,
+    /// Distinct batches this model's requests rode in.
+    pub batches: u64,
+}
+
+/// Roll `results` up per model (`0..n_models`, registration order),
+/// judging SLO misses against `slo_s` seconds.
+pub fn per_model(results: &[RequestResult], n_models: usize, slo_s: f64) -> Vec<ModelMetrics> {
+    (0..n_models)
+        .map(|m| {
+            let rs: Vec<RequestResult> =
+                results.iter().filter(|r| r.model == m).cloned().collect();
+            let batches = rs.iter().map(|r| r.batch_id).collect::<HashSet<u64>>().len() as u64;
+            ModelMetrics {
+                requests: rs.len(),
+                latency: summarize(&rs),
+                slo_miss: slo_miss_fraction(&rs, slo_s),
+                batches,
+            }
+        })
+        .collect()
 }
 
 /// Requests per second of compute: each batch's `compute_s` is counted once
@@ -108,6 +151,7 @@ mod tests {
     fn result(total_s: f64, batch_id: u64, compute_s: f64) -> RequestResult {
         RequestResult {
             id: 0,
+            model: 0,
             batch_id,
             queue_s: 0.0,
             compute_s,
@@ -150,6 +194,42 @@ mod tests {
         ];
         let t = compute_throughput(&results).unwrap();
         assert!((t - 3.0).abs() < 1e-9, "3 requests / 1.0s compute, got {t}");
+    }
+
+    #[test]
+    fn slo_miss_counts_strict_exceedances() {
+        let results =
+            vec![result(0.010, 0, 0.001), result(0.020, 0, 0.001), result(0.050, 1, 0.001)];
+        assert_eq!(slo_miss_fraction(&results, 0.020), Some(1.0 / 3.0));
+        assert_eq!(slo_miss_fraction(&results, 1.0), Some(0.0));
+        assert_eq!(slo_miss_fraction(&[], 0.02), None);
+    }
+
+    #[test]
+    fn per_model_rolls_up_by_model_index() {
+        let mut results = Vec::new();
+        // Model 0: two requests in one batch, both within SLO.
+        for _ in 0..2 {
+            let mut r = result(0.010, 0, 0.001);
+            r.model = 0;
+            results.push(r);
+        }
+        // Model 1: three requests over two batches, one SLO miss.
+        for (batch_id, total_s) in [(1u64, 0.010), (1, 0.015), (2, 0.090)] {
+            let mut r = result(total_s, batch_id, 0.001);
+            r.model = 1;
+            results.push(r);
+        }
+        let per = per_model(&results, 3, 0.050);
+        assert_eq!(per.len(), 3);
+        assert_eq!((per[0].requests, per[0].batches), (2, 1));
+        assert_eq!(per[0].slo_miss, Some(0.0));
+        assert_eq!((per[1].requests, per[1].batches), (3, 2));
+        assert!((per[1].slo_miss.unwrap() - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(per[1].latency.unwrap().count, 3);
+        // Model 2 never saw traffic.
+        assert_eq!(per[2].requests, 0);
+        assert!(per[2].latency.is_none() && per[2].slo_miss.is_none());
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! The Layer-3 inference coordinator: engines, batching, concurrent serving.
+//! The Layer-3 inference coordinator: engines, model registry, schedulers,
+//! concurrent serving.
 //!
 //! Composes the AOT-lowered encoder blocks (attention, embedding, LM head —
 //! executed through the artifact runtime) with the FFN executed either as
@@ -6,48 +7,79 @@
 //! kernels (the STen fast path). This is the end-to-end system of Fig. 11:
 //! a general framework runtime whose sparse operators are dispatched to
 //! specialized kernels, with the remaining graph falling back to the dense
-//! executor.
+//! executor — now serving *several* such models (dense vs n:m:g variants,
+//! different sparsity budgets) behind one front-end.
 //!
-//! # Concurrency model
+//! # Serving topology
 //!
-//! Two serving modes share one request/result vocabulary ([`serve::Request`],
-//! [`RequestResult`]):
+//! ```text
+//!                 ┌────────────────────── ConcurrentServer ──────────────────────┐
+//! submit_to(      │  [batcher thread]                       [worker 0..W)        │
+//!  "nmg", toks) ──┼─> bounded submit     ┌─ Scheduler ─┐     each worker holds   │
+//!  (blocks at     │   channel ─────────> │ per-model   │ ──> one Engine replica  │
+//!   queue_cap,    │                      │ queues;     │     of EVERY model      │
+//!   global)       │                      │ FIFO | WDRR │     (Arc-shared weights │
+//!                 │                      └─────────────┘     per model) and runs │
+//!                 │                        max_wait deadline  whichever model's  │
+//!                 │                        batching per model batch it receives  │
+//!                 └──────────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! Three serving modes share one request/result vocabulary
+//! ([`serve::Request`], [`RequestResult`] — both carry a model index):
 //!
 //! * [`BatchServer`] — the single-threaded drain-loop baseline: callers
 //!   enqueue, then `run_until_drained` forms and executes batches inline.
-//! * [`ConcurrentServer`] — the production shape: a bounded submission
-//!   queue (blocking `submit` past `queue_cap` — backpressure, never
-//!   unbounded memory), a dedicated batcher thread, and N worker threads
-//!   each owning an [`Engine`] replica.
+//! * [`ConcurrentServer::start`] — the single-model concurrent server:
+//!   bounded submission queue, batcher thread, N weight-sharing replicas.
+//!   With the default FIFO policy its batch formation is bit-for-bit the
+//!   pre-registry behavior (asserted by a scripted-trace equivalence test
+//!   in [`scheduler`]).
+//! * [`ConcurrentServer::start_registry`] — the multi-model front-end: a
+//!   [`registry::ModelRegistry`] of named engines (each with its own
+//!   `FfnMode`/sparsity config and replica count) served through a
+//!   pluggable [`scheduler::Scheduler`] — FIFO across models, or weighted
+//!   deficit round-robin with per-model weights and no starvation.
 //!
-//! **Replica sharing.** Replicas come from [`Engine::replicate`]: weight
-//! tensors (and the pre-converted n:m:g FFN weights) live behind one `Arc`,
-//! so sparsification happens once per server regardless of replica count,
-//! and replicas stay immutable while serving. Per-replica timing state is
-//! private; the `Arc`-shared runtime aggregates artifact-level buckets.
+//! **Replica sharing.** Worker replicas come from [`Engine::replicate`]:
+//! each model's weight tensors (and its pre-converted n:m:g FFN weights)
+//! live behind one `Arc`, so sparsification happens once per model
+//! regardless of worker count, and weights stay immutable while serving.
+//! Kernel parallelism is divided across the whole worker pool via
+//! `threadpool::register_kernel_users(workers)` — one registration per
+//! server, re-made when a server (re)starts with a different worker count.
 //!
-//! **Deadline semantics.** Batch formation honors `max_wait`: a full batch
-//! (the artifact batch size) dispatches immediately; otherwise the batch is
-//! dispatched the moment its *oldest* request has waited `max_wait`, padded
-//! by repeating the last sequence. Under light load no request waits in
-//! queue longer than `max_wait` before its batch is formed; under overload
-//! the bounded queue pushes the wait back onto submitters.
+//! **Deadline semantics.** Batch formation honors `max_wait` *per model*:
+//! a full batch (the model's artifact batch size) dispatches immediately;
+//! otherwise a batch dispatches the moment its oldest request has waited
+//! `max_wait`. Deadline-expired batches bypass WDRR deficits, so weights
+//! shape bandwidth under saturation but can never starve a model past its
+//! deadline. Under overload the bounded queue pushes the wait back onto
+//! submitters.
 //!
-//! **Metrics.** Every completion carries its real `batch_id`; [`metrics`]
-//! derives p50/p95/p99 latency summaries, batch-deduplicated compute
-//! throughput and queue-depth gauges with high-water marks.
+//! **Metrics.** Every completion carries its model index and real
+//! `batch_id`; [`metrics`] derives global and per-model p50/p95/p99
+//! latency summaries, SLO-miss fractions, batch-deduplicated compute
+//! throughput and queue-depth gauges with high-water marks, surfaced in
+//! [`ServeReport::per_model`].
 //!
 //! * [`engine`] — the per-model engine with latency breakdown.
+//! * [`registry`] — named models behind one front-end.
+//! * [`scheduler`] — batch-formation policies (FIFO, WDRR).
 //! * [`serve`] — request vocabulary + the synchronous dynamic batcher.
-//! * [`concurrent`] — the multi-replica deadline-batching front-end.
-//! * [`metrics`] — latency percentiles, throughput, queue gauges.
+//! * [`concurrent`] — the multi-model deadline-batching front-end.
+//! * [`metrics`] — latency percentiles, SLO misses, throughput, gauges.
 
 pub mod concurrent;
 pub mod engine;
 pub mod metrics;
+pub mod registry;
+pub mod scheduler;
 pub mod serve;
 
-pub use concurrent::{ConcurrentServer, ServeConfig, ServeReport};
+pub use concurrent::{ConcurrentServer, ModelReport, ServeConfig, ServeReport, SubmitError};
 pub use engine::{Engine, EncoderDims, FfnMode};
-pub use metrics::LatencySummary;
+pub use metrics::{LatencySummary, ModelMetrics};
+pub use registry::ModelRegistry;
+pub use scheduler::{SchedPolicy, Scheduler};
 pub use serve::{BatchServer, RequestResult};

@@ -1,0 +1,143 @@
+//! The model registry: named [`Engine`]s served behind one front-end.
+//!
+//! A registry entry is a *prototype* engine plus its serving parameters
+//! (replica count, scheduling weight). Each model keeps its own
+//! [`super::engine::FfnMode`] / sparsity configuration and its own weight
+//! set; when [`super::concurrent::ConcurrentServer::start_registry`] takes
+//! the registry, every worker thread receives an [`Engine::replicate`]
+//! clone of *every* model, so a model's replica set shares one `Arc`-held
+//! parameter allocation (n:m:g conversion done once per model, zero weight
+//! bytes copied per forward) and any worker can execute whichever model's
+//! batch the scheduler hands it.
+//!
+//! Model *indices* (registration order) are the scheduler's and the
+//! metrics' vocabulary; model *names* are the submit-side vocabulary
+//! (`submit_to("nmg", ..)` and the `serve --models` CLI).
+
+use anyhow::{bail, Result};
+
+use super::engine::{EncoderDims, Engine};
+
+/// One registered model: a prototype engine plus serving parameters.
+pub struct ModelEntry {
+    /// Unique model name (the `submit_to` key).
+    pub name: String,
+    /// Prototype engine; replicated per worker at server start.
+    pub engine: Engine,
+    /// Capacity contribution: how many worker threads this model adds to
+    /// the shared worker pool.
+    pub replicas: usize,
+    /// Scheduling weight (used by weighted policies; 1 = neutral).
+    pub weight: u64,
+}
+
+/// An ordered collection of named models; indices are registration order.
+#[derive(Default)]
+pub struct ModelRegistry {
+    models: Vec<ModelEntry>,
+}
+
+impl ModelRegistry {
+    /// New empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a model; returns its index (registration order). Fails on
+    /// an empty or duplicate name, zero replicas, or zero weight.
+    pub fn register(
+        &mut self,
+        name: &str,
+        engine: Engine,
+        replicas: usize,
+        weight: u64,
+    ) -> Result<usize> {
+        if name.is_empty() {
+            bail!("model name must be non-empty");
+        }
+        if self.index_of(name).is_some() {
+            bail!("model {name:?} is already registered");
+        }
+        if replicas == 0 {
+            bail!("model {name:?}: replicas must be at least 1");
+        }
+        if weight == 0 {
+            bail!("model {name:?}: weight must be at least 1");
+        }
+        self.models.push(ModelEntry { name: name.to_string(), engine, replicas, weight });
+        Ok(self.models.len() - 1)
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        self.models.len()
+    }
+
+    /// True when nothing is registered.
+    pub fn is_empty(&self) -> bool {
+        self.models.is_empty()
+    }
+
+    /// Index of the model named `name`, if registered.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.models.iter().position(|m| m.name == name)
+    }
+
+    /// The registered entries, in registration order.
+    pub fn entries(&self) -> &[ModelEntry] {
+        &self.models
+    }
+
+    /// Encoder dimensions of model `idx`.
+    pub fn dims(&self, idx: usize) -> &EncoderDims {
+        &self.models[idx].engine.dims
+    }
+
+    /// Total worker threads the registered models contribute.
+    pub fn total_replicas(&self) -> usize {
+        self.models.iter().map(|m| m.replicas).sum()
+    }
+
+    /// Consume the registry (server start).
+    pub(super) fn into_entries(self) -> Vec<ModelEntry> {
+        self.models
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::FfnMode;
+    use crate::runtime::ArtifactRuntime;
+
+    fn tiny_engine() -> Engine {
+        let rt = ArtifactRuntime::open(std::path::PathBuf::from("target/nonexistent-artifacts"))
+            .unwrap();
+        Engine::new(rt, "tiny", FfnMode::NativeDense, 7).unwrap()
+    }
+
+    #[test]
+    fn registers_in_order_and_indexes_by_name() {
+        let mut reg = ModelRegistry::new();
+        assert!(reg.is_empty());
+        assert_eq!(reg.register("dense", tiny_engine(), 2, 1).unwrap(), 0);
+        assert_eq!(reg.register("nmg", tiny_engine(), 1, 3).unwrap(), 1);
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.index_of("nmg"), Some(1));
+        assert_eq!(reg.index_of("missing"), None);
+        assert_eq!(reg.total_replicas(), 3);
+        assert_eq!(reg.entries()[1].weight, 3);
+        assert_eq!(reg.dims(0).batch, reg.dims(1).batch);
+    }
+
+    #[test]
+    fn rejects_duplicates_and_degenerate_parameters() {
+        let mut reg = ModelRegistry::new();
+        reg.register("m", tiny_engine(), 1, 1).unwrap();
+        assert!(reg.register("m", tiny_engine(), 1, 1).is_err(), "duplicate name");
+        assert!(reg.register("", tiny_engine(), 1, 1).is_err(), "empty name");
+        assert!(reg.register("r0", tiny_engine(), 0, 1).is_err(), "zero replicas");
+        assert!(reg.register("w0", tiny_engine(), 1, 0).is_err(), "zero weight");
+        assert_eq!(reg.len(), 1);
+    }
+}

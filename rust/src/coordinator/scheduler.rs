@@ -1,0 +1,612 @@
+//! Batch-formation policies over per-model queues.
+//!
+//! The batcher thread of [`super::concurrent::ConcurrentServer`] used to own
+//! batch formation inline; it is now split into a [`Scheduler`] the batcher
+//! *drives*: the batcher feeds arrivals in with [`Scheduler::enqueue`] and
+//! asks [`Scheduler::poll`] what to do next — dispatch a formed batch, wait
+//! for more arrivals (optionally with a deadline), or stop. Every decision
+//! is a pure function of the queues, the passed-in `now` and the `open`
+//! flag, so policies are unit-testable in *virtual time* against scripted
+//! arrival traces (no wall clock, no threads).
+//!
+//! Two policies:
+//!
+//! * [`SchedPolicy::Fifo`] — FIFO across models: the model owning the
+//!   globally-oldest pending request dispatches first (full batches
+//!   anywhere dispatch immediately). With a single registered model this
+//!   reproduces the pre-registry server's batch formation bit for bit —
+//!   asserted by `fifo_single_model_matches_pre_refactor_batcher` below
+//!   against a literal replay of the old batcher loop.
+//! * [`SchedPolicy::Wdrr`] — weighted deficit round-robin: under
+//!   saturation, models dispatch full batches proportionally to their
+//!   weights; deadline-expired partial batches bypass the deficit so the
+//!   `max_wait` latency contract holds for every model and a weight-1
+//!   model can never be starved by a heavier competitor.
+//!
+//! Queue-cap semantics: the scheduler's per-model queues are *forming*
+//! queues, not the backpressure bound. The server's bounded submission
+//! channel (`ServeConfig::queue_cap`, global across models) is what blocks
+//! submitters; the batcher dispatches every dispatchable batch before
+//! ingesting the next arrival, so each forming queue holds less than one
+//! full batch plus the arrival in flight.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use super::serve::Request;
+
+/// Scheduling policy selector (see module docs).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedPolicy {
+    /// FIFO across models; single-model behavior identical to the
+    /// pre-registry server.
+    Fifo,
+    /// Weighted deficit round-robin across models.
+    Wdrr,
+}
+
+/// Per-model scheduling configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedModel {
+    /// Batch size of the model's artifact (the dispatch unit).
+    pub batch: usize,
+    /// Scheduling weight (WDRR only; FIFO ignores it).
+    pub weight: u64,
+}
+
+/// A batch formed by the scheduler, ready for a worker.
+#[derive(Debug)]
+pub struct FormedBatch {
+    /// Index of the model in registration order.
+    pub model: usize,
+    /// Sequential batch id (unique per scheduler).
+    pub id: u64,
+    /// The requests riding in this batch (1..=batch of `model`).
+    pub requests: Vec<Request>,
+}
+
+/// What the batcher should do next.
+#[derive(Debug)]
+pub enum Decision {
+    /// Hand this batch to a worker, then poll again.
+    Dispatch(FormedBatch),
+    /// Wait for an arrival until the deadline, then poll again.
+    WaitUntil(Instant),
+    /// Nothing is pending: block for the next arrival.
+    WaitForArrival,
+    /// Nothing is pending and the arrival stream is closed: stop.
+    Idle,
+}
+
+/// A batch-formation policy over per-model queues. All methods take time as
+/// an explicit argument so policies can be driven in virtual time by tests.
+pub trait Scheduler: Send {
+    /// Accept an arrived request (`req.model` indexes registration order).
+    fn enqueue(&mut self, req: Request);
+    /// Decide the next action given the current time and whether more
+    /// arrivals may still come (`open`).
+    fn poll(&mut self, now: Instant, open: bool) -> Decision;
+    /// Requests currently queued across all models.
+    fn pending(&self) -> usize;
+    /// Requests currently queued for one model.
+    fn pending_for(&self, model: usize) -> usize;
+    /// Remove and return everything queued (shutdown/failure path).
+    fn take_all(&mut self) -> Vec<Request>;
+}
+
+/// Build a scheduler for `policy` over `models` (registration order).
+pub fn make(policy: SchedPolicy, models: Vec<SchedModel>, max_wait: Duration) -> Box<dyn Scheduler> {
+    match policy {
+        SchedPolicy::Fifo => Box::new(FifoScheduler { q: Queues::new(models, max_wait) }),
+        SchedPolicy::Wdrr => {
+            let n = models.len();
+            Box::new(WdrrScheduler {
+                q: Queues::new(models, max_wait),
+                current: 0,
+                entered: false,
+                deficit: vec![0; n],
+            })
+        }
+    }
+}
+
+/// The per-model queues and batch bookkeeping shared by all policies.
+struct Queues {
+    queues: Vec<VecDeque<Request>>,
+    models: Vec<SchedModel>,
+    max_wait: Duration,
+    next_batch: u64,
+    pending: usize,
+}
+
+impl Queues {
+    fn new(models: Vec<SchedModel>, max_wait: Duration) -> Self {
+        assert!(!models.is_empty(), "scheduler needs at least one model");
+        assert!(models.iter().all(|m| m.batch >= 1), "model batch sizes must be at least 1");
+        let queues = models.iter().map(|_| VecDeque::new()).collect();
+        Queues { queues, models, max_wait, next_batch: 0, pending: 0 }
+    }
+
+    fn enqueue(&mut self, req: Request) {
+        assert!(req.model < self.queues.len(), "request for unregistered model {}", req.model);
+        self.queues[req.model].push_back(req);
+        self.pending += 1;
+    }
+
+    /// Model whose front (oldest queued) request arrived earliest.
+    fn oldest_model(&self) -> Option<usize> {
+        self.queues
+            .iter()
+            .enumerate()
+            .filter_map(|(m, q)| q.front().map(|r| (m, r.arrived)))
+            .min_by_key(|&(_, t)| t)
+            .map(|(m, _)| m)
+    }
+
+    /// Model with a full batch queued, earliest front first.
+    fn full_model(&self) -> Option<usize> {
+        self.queues
+            .iter()
+            .enumerate()
+            .filter(|(m, q)| q.len() >= self.models[*m].batch)
+            .filter_map(|(m, q)| q.front().map(|r| (m, r.arrived)))
+            .min_by_key(|&(_, t)| t)
+            .map(|(m, _)| m)
+    }
+
+    /// Model whose front request has aged past `max_wait`, earliest first.
+    fn expired_model(&self, now: Instant) -> Option<usize> {
+        self.queues
+            .iter()
+            .enumerate()
+            .filter_map(|(m, q)| q.front().map(|r| (m, r.arrived)))
+            .filter(|&(_, t)| now >= t + self.max_wait)
+            .min_by_key(|&(_, t)| t)
+            .map(|(m, _)| m)
+    }
+
+    /// Earliest `max_wait` deadline over all queue fronts.
+    fn earliest_deadline(&self) -> Option<Instant> {
+        self.queues
+            .iter()
+            .filter_map(|q| q.front().map(|r| r.arrived + self.max_wait))
+            .min()
+    }
+
+    fn full(&self, model: usize) -> bool {
+        self.queues[model].len() >= self.models[model].batch
+    }
+
+    /// Pop up to one batch of `model`'s requests into a [`FormedBatch`].
+    fn form(&mut self, model: usize) -> FormedBatch {
+        let take = self.queues[model].len().min(self.models[model].batch);
+        debug_assert!(take >= 1, "forming an empty batch");
+        let requests: Vec<Request> = self.queues[model].drain(..take).collect();
+        self.pending -= take;
+        let id = self.next_batch;
+        self.next_batch += 1;
+        FormedBatch { model, id, requests }
+    }
+
+    fn take_all(&mut self) -> Vec<Request> {
+        let mut out = Vec::with_capacity(self.pending);
+        for q in &mut self.queues {
+            out.extend(q.drain(..));
+        }
+        self.pending = 0;
+        out
+    }
+}
+
+/// FIFO across models: serve the globally-oldest request's model next; a
+/// full batch anywhere dispatches immediately.
+struct FifoScheduler {
+    q: Queues,
+}
+
+impl Scheduler for FifoScheduler {
+    fn enqueue(&mut self, req: Request) {
+        self.q.enqueue(req);
+    }
+
+    fn poll(&mut self, now: Instant, open: bool) -> Decision {
+        let Some(oldest) = self.q.oldest_model() else {
+            return if open { Decision::WaitForArrival } else { Decision::Idle };
+        };
+        if !open {
+            // Drain: no more arrivals can come, so waiting is pointless.
+            return Decision::Dispatch(self.q.form(oldest));
+        }
+        // Expired deadlines outrank full batches: a saturated competitor
+        // model must not defer another model's `max_wait` promise. (With a
+        // single model the order is indistinguishable: an expired full
+        // queue forms the same full batch either way.)
+        if let Some(expired) = self.q.expired_model(now) {
+            return Decision::Dispatch(self.q.form(expired));
+        }
+        if let Some(full) = self.q.full_model() {
+            return Decision::Dispatch(self.q.form(full));
+        }
+        // Nothing full and nothing expired, so the oldest front's deadline
+        // is strictly in the future.
+        Decision::WaitUntil(self.q.queues[oldest].front().unwrap().arrived + self.q.max_wait)
+    }
+
+    fn pending(&self) -> usize {
+        self.q.pending
+    }
+
+    fn pending_for(&self, model: usize) -> usize {
+        self.q.queues[model].len()
+    }
+
+    fn take_all(&mut self) -> Vec<Request> {
+        self.q.take_all()
+    }
+}
+
+/// Weighted deficit round-robin: full batches are scheduled by a classic
+/// DRR rotation (quantum = `weight x batch` requests, credited once per
+/// visit, deficit capped at quantum + batch so an idle model cannot hoard
+/// service), while deadline-expired partial batches bypass the deficit —
+/// the `max_wait` promise is latency, not bandwidth, and honoring it is
+/// also what makes starvation impossible regardless of weights.
+struct WdrrScheduler {
+    q: Queues,
+    /// Model the rotation currently points at.
+    current: usize,
+    /// Whether `current` was already credited its quantum for this visit.
+    entered: bool,
+    /// Per-model deficit counters, in requests.
+    deficit: Vec<u64>,
+}
+
+impl WdrrScheduler {
+    fn quantum(&self, model: usize) -> u64 {
+        self.q.models[model].weight * self.q.models[model].batch as u64
+    }
+}
+
+impl Scheduler for WdrrScheduler {
+    fn enqueue(&mut self, req: Request) {
+        self.q.enqueue(req);
+    }
+
+    fn poll(&mut self, now: Instant, open: bool) -> Decision {
+        if self.q.pending == 0 {
+            return if open { Decision::WaitForArrival } else { Decision::Idle };
+        }
+        if !open {
+            // Drain in arrival order; weights only matter under contention.
+            let oldest = self.q.oldest_model().unwrap();
+            return Decision::Dispatch(self.q.form(oldest));
+        }
+        // Deadline pass: an expired oldest request dispatches now (possibly
+        // partial), regardless of its model's deficit.
+        if let Some(expired) = self.q.expired_model(now) {
+            return Decision::Dispatch(self.q.form(expired));
+        }
+        // DRR pass over full batches only, so quantum is credited only
+        // during productive rotations.
+        if self.q.full_model().is_some() {
+            let n = self.q.models.len();
+            let mut hops = 0;
+            while hops <= n {
+                let m = self.current;
+                let batch = self.q.models[m].batch as u64;
+                if !self.entered {
+                    self.entered = true;
+                    if self.q.queues[m].is_empty() {
+                        self.deficit[m] = 0;
+                    } else {
+                        let quantum = self.quantum(m);
+                        self.deficit[m] = (self.deficit[m] + quantum).min(quantum + batch);
+                    }
+                }
+                if self.q.full(m) && self.deficit[m] >= batch {
+                    self.deficit[m] -= batch;
+                    return Decision::Dispatch(self.q.form(m));
+                }
+                self.current = (m + 1) % n;
+                self.entered = false;
+                hops += 1;
+            }
+            // Unreachable (a credited visit to a full model always has
+            // deficit >= batch), but never livelock if the invariant breaks.
+            if let Some(full) = self.q.full_model() {
+                return Decision::Dispatch(self.q.form(full));
+            }
+        }
+        // Nothing full and nothing expired: wait for the earliest deadline.
+        Decision::WaitUntil(self.q.earliest_deadline().unwrap())
+    }
+
+    fn pending(&self) -> usize {
+        self.q.pending
+    }
+
+    fn pending_for(&self, model: usize) -> usize {
+        self.q.queues[model].len()
+    }
+
+    fn take_all(&mut self) -> Vec<Request> {
+        self.q.take_all()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, model: usize, at: Instant) -> Request {
+        Request { id, tokens: Vec::new(), model, arrived: at }
+    }
+
+    fn models(specs: &[(usize, u64)]) -> Vec<SchedModel> {
+        specs.iter().map(|&(batch, weight)| SchedModel { batch, weight }).collect()
+    }
+
+    /// Literal virtual-time replay of the pre-registry `ConcurrentServer`
+    /// batcher loop (bounded-channel recv/recv_deadline over one pending
+    /// queue), returning `(batch_id, batch_size)` per dispatched batch.
+    fn reference_old_batcher(
+        offsets_ms: &[u64],
+        batch: usize,
+        max_wait_ms: u64,
+    ) -> Vec<(u64, usize)> {
+        let mut out = Vec::new();
+        let mut pending: VecDeque<u64> = VecDeque::new();
+        let mut open = true;
+        let mut next_id = 0u64;
+        let mut i = 0usize;
+        while open || !pending.is_empty() {
+            if pending.is_empty() {
+                if i < offsets_ms.len() {
+                    pending.push_back(offsets_ms[i]); // blocking recv
+                    i += 1;
+                } else {
+                    open = false; // channel closed
+                    continue;
+                }
+            }
+            while open && pending.len() < batch {
+                let deadline = pending.front().unwrap() + max_wait_ms;
+                if i < offsets_ms.len() && offsets_ms[i] <= deadline {
+                    pending.push_back(offsets_ms[i]); // recv_deadline: Item
+                    i += 1;
+                } else if i < offsets_ms.len() {
+                    break; // recv_deadline: TimedOut
+                } else {
+                    open = false; // recv_deadline: Closed
+                }
+            }
+            let take = pending.len().min(batch);
+            pending.drain(..take);
+            out.push((next_id, take));
+            next_id += 1;
+        }
+        out
+    }
+
+    /// Drive a scheduler through a scripted single-model arrival trace in
+    /// virtual time, exactly as the batcher thread would: arrivals feed in
+    /// when the scheduler waits, the stream closes once the trace is
+    /// exhausted and a wait can no longer be satisfied.
+    fn drive(sched: &mut dyn Scheduler, offsets_ms: &[u64]) -> Vec<(u64, usize)> {
+        let base = Instant::now();
+        let at = |ms: u64| base + Duration::from_millis(ms);
+        let mut out = Vec::new();
+        let mut now = base;
+        let mut open = true;
+        let mut i = 0usize;
+        loop {
+            match sched.poll(now, open) {
+                Decision::Dispatch(b) => out.push((b.id, b.requests.len())),
+                Decision::WaitUntil(deadline) => {
+                    if i < offsets_ms.len() && at(offsets_ms[i]) <= deadline {
+                        now = now.max(at(offsets_ms[i]));
+                        sched.enqueue(req(i as u64, 0, at(offsets_ms[i])));
+                        i += 1;
+                    } else if i < offsets_ms.len() {
+                        now = deadline; // timed out waiting
+                    } else {
+                        open = false; // submitters done, channel closed
+                    }
+                }
+                Decision::WaitForArrival => {
+                    if i < offsets_ms.len() {
+                        now = now.max(at(offsets_ms[i]));
+                        sched.enqueue(req(i as u64, 0, at(offsets_ms[i])));
+                        i += 1;
+                    } else {
+                        open = false;
+                    }
+                }
+                Decision::Idle => break,
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn fifo_single_model_matches_pre_refactor_batcher() {
+        // Bursts, stragglers, deadline gaps and a trailing backlog: every
+        // case the old batcher loop distinguished.
+        let traces: [&[u64]; 4] = [
+            &[0, 1, 2, 3, 4, 20, 21, 40, 41, 42, 43, 44, 45, 100],
+            &[0, 50, 100, 150],
+            &[0, 0, 0, 0, 0, 0, 0, 0, 0],
+            &[7],
+        ];
+        for (batch, max_wait_ms) in [(4usize, 10u64), (3, 5), (2, 25)] {
+            for trace in traces {
+                let expected = reference_old_batcher(trace, batch, max_wait_ms);
+                let mut sched = make(
+                    SchedPolicy::Fifo,
+                    models(&[(batch, 1)]),
+                    Duration::from_millis(max_wait_ms),
+                );
+                let got = drive(sched.as_mut(), trace);
+                assert_eq!(
+                    got, expected,
+                    "batch formation diverged (batch={batch}, max_wait={max_wait_ms}ms, \
+                     trace={trace:?})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fifo_serves_models_in_global_arrival_order() {
+        let base = Instant::now();
+        let mut sched =
+            make(SchedPolicy::Fifo, models(&[(2, 1), (2, 1)]), Duration::from_millis(5));
+        // Model 1's pair arrives first, then model 0's pair.
+        sched.enqueue(req(0, 1, base));
+        sched.enqueue(req(1, 1, base + Duration::from_millis(1)));
+        sched.enqueue(req(2, 0, base + Duration::from_millis(2)));
+        sched.enqueue(req(3, 0, base + Duration::from_millis(3)));
+        let now = base + Duration::from_millis(4);
+        let first = match sched.poll(now, true) {
+            Decision::Dispatch(b) => b,
+            other => panic!("expected dispatch, got {other:?}"),
+        };
+        assert_eq!((first.model, first.requests.len()), (1, 2));
+        let second = match sched.poll(now, true) {
+            Decision::Dispatch(b) => b,
+            other => panic!("expected dispatch, got {other:?}"),
+        };
+        assert_eq!((second.model, second.requests.len()), (0, 2));
+        assert!(matches!(sched.poll(now, true), Decision::WaitForArrival));
+    }
+
+    #[test]
+    fn fifo_expired_request_preempts_full_batches() {
+        // A saturated competitor must not defer another model's max_wait
+        // promise: the lone expired model-0 request goes first.
+        let base = Instant::now();
+        let max_wait = Duration::from_millis(10);
+        let batch = 4;
+        let mut sched = make(SchedPolicy::Fifo, models(&[(batch, 1), (batch, 1)]), max_wait);
+        sched.enqueue(req(0, 0, base));
+        let later = base + Duration::from_millis(11);
+        for id in 1..=(batch as u64 * 8) {
+            sched.enqueue(req(id, 1, later));
+        }
+        let b = match sched.poll(later, true) {
+            Decision::Dispatch(b) => b,
+            other => panic!("expected dispatch, got {other:?}"),
+        };
+        assert_eq!((b.model, b.requests.len()), (0, 1), "expired request must go first");
+    }
+
+    /// Saturate every model's queue at `base`, then count which model each
+    /// full-batch dispatch goes to.
+    fn dispatch_counts(
+        sched: &mut dyn Scheduler,
+        per_model: usize,
+        batch: usize,
+        n_models: usize,
+        dispatches: usize,
+    ) -> Vec<usize> {
+        let base = Instant::now();
+        let mut id = 0u64;
+        for m in 0..n_models {
+            for _ in 0..per_model * batch {
+                sched.enqueue(req(id, m, base));
+                id += 1;
+            }
+        }
+        let mut counts = vec![0usize; n_models];
+        for _ in 0..dispatches {
+            match sched.poll(base, true) {
+                Decision::Dispatch(b) => {
+                    assert_eq!(b.requests.len(), batch, "saturated dispatches must be full");
+                    counts[b.model] += 1;
+                }
+                other => panic!("expected dispatch under saturation, got {other:?}"),
+            }
+        }
+        counts
+    }
+
+    #[test]
+    fn wdrr_serves_proportionally_to_weights_under_saturation() {
+        // Weights 1:3, both queues saturated: 32 dispatches = 8 rotations,
+        // each rotation serving exactly (1, 3) batches.
+        let batch = 4;
+        let mut sched =
+            make(SchedPolicy::Wdrr, models(&[(batch, 1), (batch, 3)]), Duration::from_secs(3600));
+        let counts = dispatch_counts(sched.as_mut(), 40, batch, 2, 32);
+        assert_eq!(counts, vec![8, 24], "weighted shares diverged from 1:3");
+    }
+
+    #[test]
+    fn wdrr_never_starves_a_weight_one_model() {
+        // Weight 1 vs weight 64: the light model still lands one full batch
+        // per rotation, i.e. at least 2 of the first 2 * (1 + 64) dispatches.
+        let batch = 2;
+        let mut sched =
+            make(SchedPolicy::Wdrr, models(&[(batch, 1), (batch, 64)]), Duration::from_secs(3600));
+        let counts = dispatch_counts(sched.as_mut(), 200, batch, 2, 130);
+        assert!(counts[0] >= 2, "weight-1 model starved: {counts:?}");
+        assert_eq!(counts.iter().sum::<usize>(), 130);
+    }
+
+    #[test]
+    fn wdrr_expired_deadline_bypasses_the_deficit() {
+        let base = Instant::now();
+        let max_wait = Duration::from_millis(10);
+        let batch = 4;
+        let mut sched = make(SchedPolicy::Wdrr, models(&[(batch, 1), (batch, 100)]), max_wait);
+        // A lone (partial) model-0 request past its deadline, while model 1
+        // has a mountain of fresh full batches.
+        sched.enqueue(req(0, 0, base));
+        let later = base + Duration::from_millis(11);
+        for id in 1..=(batch as u64 * 8) {
+            sched.enqueue(req(id, 1, later));
+        }
+        let b = match sched.poll(later, true) {
+            Decision::Dispatch(b) => b,
+            other => panic!("expected dispatch, got {other:?}"),
+        };
+        assert_eq!((b.model, b.requests.len()), (0, 1), "expired request must go first");
+    }
+
+    #[test]
+    fn drain_dispatches_everything_in_arrival_order() {
+        for policy in [SchedPolicy::Fifo, SchedPolicy::Wdrr] {
+            let base = Instant::now();
+            let mut sched = make(policy, models(&[(4, 1), (4, 2)]), Duration::from_secs(3600));
+            sched.enqueue(req(0, 0, base));
+            sched.enqueue(req(1, 1, base + Duration::from_millis(1)));
+            sched.enqueue(req(2, 0, base + Duration::from_millis(2)));
+            let mut sizes = Vec::new();
+            loop {
+                match sched.poll(base + Duration::from_millis(3), false) {
+                    Decision::Dispatch(b) => sizes.push((b.model, b.requests.len())),
+                    Decision::Idle => break,
+                    other => panic!("drain must dispatch or idle, got {other:?}"),
+                }
+            }
+            assert_eq!(sizes, vec![(0, 2), (1, 1)], "policy {policy:?}");
+            assert_eq!(sched.pending(), 0);
+        }
+    }
+
+    #[test]
+    fn take_all_empties_every_queue() {
+        let base = Instant::now();
+        let mut sched =
+            make(SchedPolicy::Fifo, models(&[(4, 1), (4, 1)]), Duration::from_millis(1));
+        for id in 0..5u64 {
+            sched.enqueue(req(id, (id % 2) as usize, base));
+        }
+        assert_eq!(sched.pending(), 5);
+        assert_eq!(sched.pending_for(0), 3);
+        let all = sched.take_all();
+        assert_eq!(all.len(), 5);
+        assert_eq!(sched.pending(), 0);
+        assert!(matches!(sched.poll(base, false), Decision::Idle));
+    }
+}

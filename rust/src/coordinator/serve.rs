@@ -30,6 +30,9 @@ pub struct Request {
     pub id: u64,
     /// Tokens.
     pub tokens: Vec<i32>,
+    /// Index of the target model in the server's registry (registration
+    /// order); always 0 on single-model servers like [`BatchServer`].
+    pub model: usize,
     /// Enqueue timestamp.
     pub arrived: Instant,
 }
@@ -39,6 +42,8 @@ pub struct Request {
 pub struct RequestResult {
     /// Request id.
     pub id: u64,
+    /// Index of the model that served the request (registry order).
+    pub model: usize,
     /// Id of the batch this request rode in (unique per server).
     pub batch_id: u64,
     /// Queueing delay (arrival -> batch formation).
@@ -116,7 +121,7 @@ impl BatchServer {
         let t = canonical_tokens(&self.engine.dims, tokens);
         let id = self.next_id;
         self.next_id += 1;
-        self.queue.push_back(Request { id, tokens: t, arrived: Instant::now() });
+        self.queue.push_back(Request { id, tokens: t, model: 0, arrived: Instant::now() });
         id
     }
 
@@ -159,6 +164,7 @@ impl BatchServer {
         for r in &batch {
             self.completed.push(RequestResult {
                 id: r.id,
+                model: r.model,
                 batch_id,
                 queue_s: (formed - r.arrived).as_secs_f64(),
                 compute_s,
@@ -195,7 +201,7 @@ mod tests {
     }
 
     fn req(id: u64, tokens: Vec<i32>) -> Request {
-        Request { id, tokens, arrived: Instant::now() }
+        Request { id, tokens, model: 0, arrived: Instant::now() }
     }
 
     #[test]

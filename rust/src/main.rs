@@ -5,14 +5,20 @@
 //! * `info`     — print artifact manifest + dispatcher summary.
 //! * `infer`    — run sparse/dense encoder inference over the AOT artifacts.
 //! * `serve`    — run the dynamic batcher over synthetic requests
-//!   (`--replicas N` switches to the concurrent deadline-batching server).
+//!   (`--replicas N` switches to the concurrent deadline-batching server;
+//!   `--models dense:2,nmg:2 --weights 1,3` serves a multi-model registry
+//!   with weighted scheduling and per-model latency/SLO reports).
 //! * `energy`   — print the Fig. 7 energy table for a random weight.
 //! * `sparsify` — demonstrate the SparsityBuilder on an MLP.
 
+use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::Result;
-use sten::coordinator::{BatchServer, ConcurrentServer, Engine, FfnMode, ServeConfig};
+use anyhow::{bail, Result};
+use sten::coordinator::{
+    BatchServer, ConcurrentServer, Engine, FfnMode, ModelRegistry, SchedPolicy, ServeConfig,
+    ServeReport,
+};
 use sten::formats::Layout;
 use sten::model::{MlpSpec, SparsityBuilder};
 use sten::runtime::ArtifactRuntime;
@@ -79,6 +85,10 @@ fn serve(args: &Args) -> Result<()> {
     let requests: usize = args.num("requests", 32);
     let replicas: usize = args.num("replicas", 0); // 0 = synchronous drain loop
     let max_wait = Duration::from_millis(args.num("max-wait-ms", 5));
+    let slo = Duration::from_millis(args.num("slo-ms", 25));
+    if args.get("models").is_some() {
+        return serve_multi(args, &tag, requests, max_wait, slo);
+    }
     let rt = ArtifactRuntime::open_default()?;
     let engine = Engine::new(rt, &tag, FfnMode::NativeNmg { n: 2, m: 4, g: 4 }, 42)?;
     let seq = engine.dims.seq;
@@ -89,7 +99,13 @@ fn serve(args: &Args) -> Result<()> {
     };
 
     if replicas > 0 {
-        let cfg = ServeConfig { replicas, queue_cap: args.num("queue-cap", 256), max_wait };
+        let cfg = ServeConfig {
+            replicas,
+            queue_cap: args.num("queue-cap", 256),
+            max_wait,
+            slo,
+            ..ServeConfig::default()
+        };
         let server = ConcurrentServer::start(engine, cfg)?;
         for _ in 0..requests {
             server.submit(&next(&mut rng))?;
@@ -98,25 +114,20 @@ fn serve(args: &Args) -> Result<()> {
         match report.latency {
             Some(lat) => println!(
                 "served {} requests on {replicas} replicas in {} batches; \
-                 p50/p95/p99 {:.3}/{:.3}/{:.3} ms; {:.1} req/s wall; queue high-water {}",
+                 p50/p95/p99 {:.3}/{:.3}/{:.3} ms; slo-miss {:.1}%; {:.1} req/s wall; \
+                 queue high-water {}",
                 report.results.len(),
                 report.batches,
                 lat.p50 * 1e3,
                 lat.p95 * 1e3,
                 lat.p99 * 1e3,
+                report.slo_miss.unwrap_or(0.0) * 100.0,
                 report.wall_rps,
                 report.queue_high_water,
             ),
             None => println!("served 0 requests"),
         }
-        for (r, t) in report.replica_timing.iter().enumerate() {
-            println!(
-                "  replica {r}: execute {:.3}s, transfer {:.3}s, compile {:.3}s",
-                t.secs("execute"),
-                t.secs("transfer"),
-                t.secs("compile"),
-            );
-        }
+        print_replica_timing(&report);
         return Ok(());
     }
 
@@ -133,6 +144,125 @@ fn serve(args: &Args) -> Result<()> {
         server.throughput().unwrap_or(0.0),
     );
     Ok(())
+}
+
+/// FFN execution mode for a `--models` entry name.
+fn ffn_mode_for(kind: &str) -> Result<FfnMode> {
+    Ok(match kind {
+        "dense" => FfnMode::NativeDense,
+        "dense-artifact" => FfnMode::DenseArtifact,
+        "nmg" => FfnMode::NativeNmg { n: 2, m: 4, g: 4 },
+        other => bail!("unknown model kind {other:?} (try dense|dense-artifact|nmg)"),
+    })
+}
+
+/// `serve --models dense:2,nmg:2 --weights 1,3 [--policy wdrr|fifo]`: a
+/// multi-model registry behind one front-end, mixed synthetic traffic, and
+/// per-model p50/p95/p99 + SLO-miss reporting.
+fn serve_multi(
+    args: &Args,
+    tag: &str,
+    requests: usize,
+    max_wait: Duration,
+    slo: Duration,
+) -> Result<()> {
+    let spec = args.get("models").unwrap();
+    let mut parts: Vec<(String, usize)> = Vec::new();
+    for item in spec.split(',').filter(|s| !s.is_empty()) {
+        match item.split_once(':') {
+            Some((name, n)) => {
+                let n: usize = n
+                    .parse()
+                    .map_err(|e| anyhow::anyhow!("bad replica count in {item:?}: {e}"))?;
+                parts.push((name.to_string(), n));
+            }
+            None => parts.push((item.to_string(), 1)),
+        }
+    }
+    if parts.is_empty() {
+        bail!("--models needs at least one name:replicas entry");
+    }
+    let weights: Vec<u64> = match args.get("weights") {
+        Some(w) => w
+            .split(',')
+            .map(|x| x.parse().map_err(|e| anyhow::anyhow!("bad weight {x:?}: {e}")))
+            .collect::<Result<_>>()?,
+        None => vec![1; parts.len()],
+    };
+    if weights.len() != parts.len() {
+        bail!("--weights has {} entries for {} models", weights.len(), parts.len());
+    }
+    let policy = match args.get_or("policy", "wdrr").as_str() {
+        "fifo" => SchedPolicy::Fifo,
+        "wdrr" => SchedPolicy::Wdrr,
+        other => bail!("unknown policy {other:?} (try fifo|wdrr)"),
+    };
+
+    let rt = Arc::new(ArtifactRuntime::open_default()?);
+    let mut registry = ModelRegistry::new();
+    for (i, ((name, replicas), weight)) in parts.iter().zip(&weights).enumerate() {
+        let engine = Engine::with_runtime(rt.clone(), tag, ffn_mode_for(name)?, 42 + i as u64)?;
+        registry.register(name, engine, *replicas, *weight)?;
+    }
+    let names: Vec<String> = parts.iter().map(|(name, _)| name.clone()).collect();
+    let workers = registry.total_replicas();
+    let cfg = ServeConfig {
+        queue_cap: args.num("queue-cap", 256),
+        max_wait,
+        policy,
+        slo,
+        ..ServeConfig::default()
+    };
+    let server = ConcurrentServer::start_registry(registry, cfg)?;
+    let seq = server.dims().seq;
+    let vocab = server.dims().vocab as u32;
+    let mut rng = Pcg64::seeded(11);
+    for _ in 0..requests {
+        let model = &names[rng.below(names.len() as u32) as usize];
+        let toks: Vec<i32> = (0..seq).map(|_| rng.below(vocab) as i32).collect();
+        server.submit_to(model, &toks)?;
+    }
+    let report = server.finish()?;
+    println!(
+        "served {} requests across {} models on {workers} workers ({policy:?}) in {} batches; \
+         {:.1} req/s wall; slo {:.1} ms; overall slo-miss {:.1}%",
+        report.results.len(),
+        names.len(),
+        report.batches,
+        report.wall_rps,
+        slo.as_secs_f64() * 1e3,
+        report.slo_miss.unwrap_or(0.0) * 100.0,
+    );
+    for m in &report.per_model {
+        match m.metrics.latency {
+            Some(lat) => println!(
+                "  model {}: {} requests in {} batches; p50/p95/p99 {:.3}/{:.3}/{:.3} ms; \
+                 slo-miss {:.1}%; queue high-water {}",
+                m.name,
+                m.metrics.requests,
+                m.metrics.batches,
+                lat.p50 * 1e3,
+                lat.p95 * 1e3,
+                lat.p99 * 1e3,
+                m.metrics.slo_miss.unwrap_or(0.0) * 100.0,
+                m.queue_high_water,
+            ),
+            None => println!("  model {}: no traffic", m.name),
+        }
+    }
+    print_replica_timing(&report);
+    Ok(())
+}
+
+fn print_replica_timing(report: &ServeReport) {
+    for (r, t) in report.replica_timing.iter().enumerate() {
+        println!(
+            "  replica {r}: execute {:.3}s, transfer {:.3}s, compile {:.3}s",
+            t.secs("execute"),
+            t.secs("transfer"),
+            t.secs("compile"),
+        );
+    }
 }
 
 fn energy(args: &Args) -> Result<()> {

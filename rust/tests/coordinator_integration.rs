@@ -1,11 +1,17 @@
 //! Coordinator integration over the artifact runtime: the engine's three
 //! FFN modes agree numerically (modulo pruning), both servers deliver every
-//! request, batch formation honors `max_wait`, and replicas share weights.
+//! request, batch formation honors `max_wait`, replicas share weights, and
+//! the multi-model registry path completes mixed traffic with per-model
+//! reports and typed submit errors.
 
 use std::collections::HashSet;
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use sten::coordinator::{BatchServer, ConcurrentServer, Engine, FfnMode, ServeConfig};
+use sten::coordinator::{
+    BatchServer, ConcurrentServer, Engine, FfnMode, ModelRegistry, SchedPolicy, ServeConfig,
+    SubmitError,
+};
 use sten::runtime::ArtifactRuntime;
 use sten::util::rng::Pcg64;
 
@@ -175,6 +181,7 @@ fn concurrent_server_completes_every_request_exactly_once() {
         replicas: 2,
         queue_cap: batch.max(2),
         max_wait: Duration::from_millis(5),
+        ..ServeConfig::default()
     };
     let server = ConcurrentServer::start(e, cfg).unwrap();
     let total = batch * 3;
@@ -211,7 +218,12 @@ fn concurrent_server_completes_every_request_exactly_once() {
 #[test]
 fn concurrent_lone_request_dispatches_once_max_wait_elapses() {
     let e = engine(FfnMode::NativeDense);
-    let cfg = ServeConfig { replicas: 2, queue_cap: 8, max_wait: Duration::from_millis(120) };
+    let cfg = ServeConfig {
+        replicas: 2,
+        queue_cap: 8,
+        max_wait: Duration::from_millis(120),
+        ..ServeConfig::default()
+    };
     let server = ConcurrentServer::start(e, cfg).unwrap();
     let t = Instant::now();
     server.submit(&[1, 2, 3]).unwrap();
@@ -235,7 +247,12 @@ fn concurrent_full_batch_dispatches_immediately() {
     let batch = e.dims.batch;
     let seq = e.dims.seq;
     // Huge max_wait: only the full-batch fast path can finish quickly.
-    let cfg = ServeConfig { replicas: 1, queue_cap: 8, max_wait: Duration::from_secs(5) };
+    let cfg = ServeConfig {
+        replicas: 1,
+        queue_cap: 8,
+        max_wait: Duration::from_secs(5),
+        ..ServeConfig::default()
+    };
     let server = ConcurrentServer::start(e, cfg).unwrap();
     let mut rng = Pcg64::seeded(33);
     let t = Instant::now();
@@ -254,12 +271,102 @@ fn concurrent_full_batch_dispatches_immediately() {
 }
 
 #[test]
+fn submit_to_unknown_model_is_a_typed_error() {
+    let e = engine(FfnMode::NativeDense);
+    let cfg = ServeConfig {
+        replicas: 1,
+        queue_cap: 8,
+        max_wait: Duration::from_millis(1),
+        ..ServeConfig::default()
+    };
+    let server = ConcurrentServer::start(e, cfg).unwrap();
+    let err = server.submit_to("nope", &[1, 2]).unwrap_err();
+    assert_eq!(err, SubmitError::UnknownModel("nope".to_string()));
+    // The single-model `start` path registers under "default"; both the
+    // named and the legacy submit keep working after the rejection.
+    assert_eq!(server.models().to_vec(), vec!["default".to_string()]);
+    server.submit_to("default", &[1, 2]).unwrap();
+    server.submit(&[3, 4]).unwrap();
+    let report = server.finish().unwrap();
+    assert_eq!(report.results.len(), 2, "rejected submits must not be counted");
+}
+
+#[test]
+fn multi_model_server_completes_mixed_traffic_with_per_model_reports() {
+    let rt = Arc::new(ArtifactRuntime::open_default().expect("artifact runtime"));
+    let dense = Engine::with_runtime(rt.clone(), "tiny", FfnMode::NativeDense, 42).unwrap();
+    let nmg =
+        Engine::with_runtime(rt.clone(), "tiny", FfnMode::NativeNmg { n: 2, m: 4, g: 4 }, 43)
+            .unwrap();
+    assert!(!dense.shares_weights_with(&nmg), "models keep separate weight sets");
+    let batch = dense.dims.batch;
+    let seq = dense.dims.seq;
+
+    let mut registry = ModelRegistry::new();
+    registry.register("dense", dense, 1, 1).unwrap();
+    registry.register("nmg", nmg, 1, 3).unwrap();
+    let cfg = ServeConfig {
+        queue_cap: 32,
+        max_wait: Duration::from_millis(2),
+        policy: SchedPolicy::Wdrr,
+        slo: Duration::from_secs(30),
+        ..ServeConfig::default()
+    };
+    let server = ConcurrentServer::start_registry(registry, cfg).unwrap();
+
+    let mut rng = Pcg64::seeded(51);
+    let total = batch * 6;
+    let mut dense_count = 0usize;
+    for i in 0..total {
+        let toks = random_request(seq, &mut rng);
+        if i % 3 == 0 {
+            dense_count += 1;
+            server.submit_to("dense", &toks).unwrap();
+        } else {
+            server.submit_to("nmg", &toks).unwrap();
+        }
+    }
+    let report = server.finish().unwrap();
+
+    assert_eq!(report.results.len(), total, "every request completes exactly once");
+    let ids: HashSet<u64> = report.results.iter().map(|r| r.id).collect();
+    assert_eq!(ids.len(), total, "duplicate completion ids");
+    // Batches never mix models, and sizes respect each model's batch.
+    let mut batch_models: std::collections::HashMap<u64, usize> = Default::default();
+    for r in &report.results {
+        assert!(r.batch_size >= 1 && r.batch_size <= batch);
+        let prev = batch_models.insert(r.batch_id, r.model);
+        if let Some(prev) = prev {
+            assert_eq!(prev, r.model, "batch {} mixed models", r.batch_id);
+        }
+    }
+
+    assert_eq!(report.per_model.len(), 2);
+    assert_eq!(report.per_model[0].name, "dense");
+    assert_eq!(report.per_model[1].name, "nmg");
+    assert_eq!(report.per_model[0].metrics.requests, dense_count);
+    assert_eq!(report.per_model[1].metrics.requests, total - dense_count);
+    for m in &report.per_model {
+        let lat = m.metrics.latency.expect("per-model latency");
+        assert!(lat.p50 <= lat.p95 && lat.p95 <= lat.p99);
+        let miss = m.metrics.slo_miss.expect("per-model slo-miss");
+        assert!((0.0..=1.0).contains(&miss));
+        assert!(m.metrics.batches >= 1);
+        assert!(m.queue_high_water >= 1);
+    }
+    // A 30s SLO is unmissable for tiny batches on a live host.
+    assert_eq!(report.slo_miss, Some(0.0));
+    // Two workers (one per registered replica), each with a timing view.
+    assert_eq!(report.replica_timing.len(), 2);
+}
+
+#[test]
 fn concurrent_queue_wait_bounded_by_max_wait() {
     let e = engine(FfnMode::NativeNmg { n: 2, m: 4, g: 4 });
     let batch = e.dims.batch;
     let seq = e.dims.seq;
     let max_wait = Duration::from_millis(40);
-    let cfg = ServeConfig { replicas: 2, queue_cap: 8, max_wait };
+    let cfg = ServeConfig { replicas: 2, queue_cap: 8, max_wait, ..ServeConfig::default() };
     let server = ConcurrentServer::start(e, cfg).unwrap();
     let mut rng = Pcg64::seeded(34);
     for _ in 0..batch * 3 + 1 {

@@ -31,7 +31,12 @@ fn stress_exactly_once_completion_under_contention() {
     let vocab = engine.dims.vocab as u32;
     // Small queue forces submit backpressure; several replicas race on the
     // batch channel and the completion accounting.
-    let cfg = ServeConfig { replicas: 3, queue_cap: 4, max_wait: Duration::from_millis(1) };
+    let cfg = ServeConfig {
+        replicas: 3,
+        queue_cap: 4,
+        max_wait: Duration::from_millis(1),
+        ..ServeConfig::default()
+    };
     let server = Arc::new(ConcurrentServer::start(engine, cfg).unwrap());
 
     let submitters = 8usize;
