@@ -10,11 +10,26 @@
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
+echo "==> xtask lint (unsafe/SAFETY, guard-across-scope, spawn, shim invariants)"
+# Fail-fast static gate: every `unsafe` carries a SAFETY comment, no lock
+# guard is held across a threadpool scope call, threads are only spawned
+# under util/, and shim-ported files never name std::sync directly.
+cargo run -q -p xtask -- lint
+
 echo "==> tier-1: cargo build --release"
 cargo build --release
 
 echo "==> tier-1: cargo test -q"
 cargo test -q
+
+echo "==> xtask self-tests"
+cargo test -q -p xtask
+
+echo "==> loom interleaving suite (model-checked sync primitives, 600s ceiling)"
+# Exhaustively explores bounded thread interleavings of the threadpool,
+# channel, and completion latch through the util::sync shim. The ceiling
+# turns a state-space blowup into a loud failure rather than a hung CI.
+timeout 600 cargo test --features loom --test loom
 
 echo "==> timed serving stress test (release, 600s ceiling)"
 # Exactly-once completion under submitter contention, run optimized and
@@ -44,6 +59,6 @@ echo "==> cargo fmt --check"
 cargo fmt --check
 
 echo "==> cargo clippy -- -D warnings"
-cargo clippy --all-targets -- -D warnings
+cargo clippy --workspace --all-targets -- -D warnings
 
 echo "CI OK"

@@ -44,9 +44,10 @@
 //!   and queue high-water marks globally and per model.
 
 use std::fmt;
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
+
+use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
@@ -114,6 +115,57 @@ impl fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
+/// Condvar-guarded completion counter: workers [`account`] finished
+/// requests, drainers [`wait`] for a submission-count target.
+///
+/// Extracted from [`ConcurrentServer`]'s shared state so the loom lane
+/// (`tests/loom.rs`) can model-check the accounting protocol directly:
+/// the counter bump and the wakeup must be indivisible enough that a
+/// drain racing the final completion can never sleep through it.
+///
+/// [`account`]: CompletionLatch::account
+/// [`wait`]: CompletionLatch::wait
+pub struct CompletionLatch {
+    /// The mutex exists for the condvar; the critical section is a bare
+    /// counter bump.
+    finished: Mutex<u64>,
+    done_cv: Condvar,
+}
+
+impl CompletionLatch {
+    /// New latch with nothing accounted.
+    pub fn new() -> Self {
+        CompletionLatch { finished: Mutex::new(0), done_cv: Condvar::new() }
+    }
+
+    /// Mark `n` requests accounted for and wake any waiting drainer.
+    pub fn account(&self, n: u64) {
+        let mut fin = self.finished.lock().unwrap();
+        *fin += n;
+        drop(fin);
+        self.done_cv.notify_all();
+    }
+
+    /// Requests accounted for so far.
+    pub fn count(&self) -> u64 {
+        *self.finished.lock().unwrap()
+    }
+
+    /// Block until at least `target` requests have been accounted for.
+    pub fn wait(&self, target: u64) {
+        let mut fin = self.finished.lock().unwrap();
+        while *fin < target {
+            fin = self.done_cv.wait(fin).unwrap();
+        }
+    }
+}
+
+impl Default for CompletionLatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
 /// A formed batch travelling from the batcher to a worker.
 struct Batch {
     id: u64,
@@ -131,10 +183,8 @@ struct Shared {
     worker_results: Vec<Mutex<Vec<RequestResult>>>,
     /// Batch/batcher failures (rare path; a plain shared lock is fine).
     errors: Mutex<Vec<String>>,
-    /// Requests accounted for (completed or failed). The mutex exists for
-    /// the condvar; the critical section is a bare counter bump.
-    finished: Mutex<u64>,
-    done_cv: Condvar,
+    /// Requests accounted for (completed or failed).
+    latch: CompletionLatch,
     gauge: QueueGauge,
     /// Per-model queue gauges, indexed by registry order.
     model_gauges: Vec<QueueGauge>,
@@ -144,10 +194,7 @@ struct Shared {
 impl Shared {
     /// Mark `n` requests accounted for and wake any drainer.
     fn account(&self, n: u64) {
-        let mut fin = self.finished.lock().unwrap();
-        *fin += n;
-        drop(fin);
-        self.done_cv.notify_all();
+        self.latch.account(n);
     }
 
     /// Record a failure covering `n` requests.
@@ -296,8 +343,7 @@ impl ConcurrentServer {
         let shared = Arc::new(Shared {
             worker_results: (0..workers).map(|_| Mutex::new(Vec::new())).collect(),
             errors: Mutex::new(Vec::new()),
-            finished: Mutex::new(0),
-            done_cv: Condvar::new(),
+            latch: CompletionLatch::new(),
             gauge: QueueGauge::new(),
             model_gauges: (0..names.len()).map(|_| QueueGauge::new()).collect(),
             batches: AtomicU64::new(0),
@@ -514,10 +560,7 @@ impl ConcurrentServer {
     /// Block until every request submitted so far has completed or failed.
     pub fn drain(&self) {
         let target = self.submitted.load(Ordering::SeqCst);
-        let mut fin = self.shared.finished.lock().unwrap();
-        while *fin < target {
-            fin = self.shared.done_cv.wait(fin).unwrap();
-        }
+        self.shared.latch.wait(target);
     }
 
     /// Stop accepting requests, flush everything in flight, join all

@@ -77,7 +77,9 @@ pub mod registry;
 pub mod scheduler;
 pub mod serve;
 
-pub use concurrent::{ConcurrentServer, ModelReport, ServeConfig, ServeReport, SubmitError};
+pub use concurrent::{
+    CompletionLatch, ConcurrentServer, ModelReport, ServeConfig, ServeReport, SubmitError,
+};
 pub use engine::{Engine, EncoderDims, FfnMode};
 pub use metrics::{LatencySummary, ModelMetrics};
 pub use registry::ModelRegistry;

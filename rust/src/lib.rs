@@ -24,6 +24,20 @@
 //! * [`coordinator`] — batched sparse inference engine with dispatch/runtime
 //!   timing breakdown (Fig 11), plus the concurrent deadline-batching
 //!   serving front-end (bounded queue, N weight-sharing engine replicas).
+//!
+//! # Concurrency soundness
+//!
+//! The hand-rolled sync primitives (`util::threadpool`, `util::channel`,
+//! the serving completion latch) go through the [`util::sync`] shim: plain
+//! `std` types by default, model-checked drop-ins from [`util::loom`] under
+//! `--features loom` (`cargo test --features loom --test loom` runs the
+//! exhaustive interleaving suite). See `src/runtime/README.md`
+//! § Concurrency invariants for the full lane matrix (loom / Miri / TSan /
+//! `xtask lint`).
+
+// Every `unsafe` operation inside an `unsafe fn` must carry its own
+// `unsafe {}` block (and, by repo lint, its own `// SAFETY:` argument).
+#![deny(unsafe_op_in_unsafe_fn)]
 
 pub mod util;
 pub mod tensor;

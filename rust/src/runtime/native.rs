@@ -551,7 +551,10 @@ unsafe fn add_block_raw(dst: *mut f32, dst_cols: usize, r0: usize, c0: usize, sr
     for r in 0..nr {
         let base = (r0 + r) * dst_cols + c0;
         for c in 0..nc {
-            *dst.add(base + c) += sd[r * nc + c];
+            // SAFETY: in-bounds by the caller's contract (the target block
+            // lies inside `dst`), and exclusive by the same contract (no
+            // other thread touches this block).
+            unsafe { *dst.add(base + c) += sd[r * nc + c] };
         }
     }
 }
@@ -816,6 +819,8 @@ fn layernorm_backward(
                         dxrow[j] = inv * (dxhat - m1 - xhat * m2);
                     }
                 }
+                // SAFETY: partial slot `blk` belongs to this block alone
+                // (one slot per chunk index, chunks are disjoint).
                 unsafe {
                     *part_ptr.get().add(blk) = Some((dgamma, dbeta));
                 }

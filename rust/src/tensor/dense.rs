@@ -169,8 +169,8 @@ impl DenseTensor {
             // Output row j is source column j: chunks own disjoint output
             // rows [j0, j1).
             threadpool::parallel_for(c, 16, |j0, j1| {
+                // SAFETY: output rows [j0, j1) are written only here.
                 let od = unsafe {
-                    // SAFETY: output rows [j0, j1) are written only here.
                     std::slice::from_raw_parts_mut(out_ptr.get().add(j0 * r), (j1 - j0) * r)
                 };
                 for j in j0..j1 {

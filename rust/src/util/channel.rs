@@ -12,8 +12,9 @@
 
 use std::collections::VecDeque;
 use std::fmt;
-use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
+
+use super::sync::{Arc, Condvar, Mutex};
 
 struct State<T> {
     queue: VecDeque<T>,
@@ -167,8 +168,26 @@ impl<T> Receiver<T> {
             if now >= deadline {
                 return Received::TimedOut;
             }
-            let (guard, _) = self.shared.not_empty.wait_timeout(st, deadline - now).unwrap();
+            let (guard, timeout) =
+                self.shared.not_empty.wait_timeout(st, deadline - now).unwrap();
             st = guard;
+            if timeout.timed_out() {
+                // The timeout and a racing send can both fire: the send
+                // wins if it already enqueued (exactly-once delivery must
+                // not drop it), otherwise report the timeout rather than
+                // re-deriving it from the wall clock — under the loom
+                // model, timeouts are scheduler decisions, not clock
+                // reads.
+                if let Some(v) = st.queue.pop_front() {
+                    drop(st);
+                    self.shared.not_full.notify_one();
+                    return Received::Item(v);
+                }
+                if st.closed {
+                    return Received::Closed;
+                }
+                return Received::TimedOut;
+            }
         }
     }
 

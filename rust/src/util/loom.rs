@@ -1,0 +1,1286 @@
+//! A minimal in-tree loom-style model checker for the crate's hand-rolled
+//! sync primitives.
+//!
+//! The real `loom` crate is not in the offline vendor set, so this module
+//! provides the subset the repo needs: drop-in `Mutex` / `Condvar` /
+//! `atomic` / `thread` types (re-exported through [`crate::util::sync`])
+//! plus a deterministic scheduler that explores thread interleavings
+//! exhaustively up to a preemption bound (CHESS-style).
+//!
+//! Outside a [`model`] run the types delegate straight to `std` — a
+//! `Mutex` is a `std::sync::Mutex` plus one cold pointer-sized id cell —
+//! so ordinary tests and production builds behave (and perform) exactly
+//! as before. Inside `model(|| ...)` every sync operation becomes a
+//! *scheduling point*: the checker serializes all threads onto one
+//! logical timeline, records each nondeterministic choice, and re-runs
+//! the closure under every distinct schedule (depth-first over the
+//! decision tree, bounded by [`ModelOptions`]).
+//!
+//! Known, deliberate limitations (documented in
+//! `runtime/README.md` § Concurrency invariants):
+//!
+//! * Sequential consistency only — weak-memory reorderings are not
+//!   modeled (all `Ordering`s are treated as `SeqCst`).
+//! * `notify_one` wakes the longest-waiting thread (FIFO) instead of
+//!   branching over every waiter — a state-space reduction.
+//! * No spurious condvar wakeups; `wait_timeout` *timeouts* are modeled
+//!   as scheduler choices instead (bounded by
+//!   [`ModelOptions::timeout_budget`], and always taken when nothing
+//!   else can run, so lost-wakeup bugs surface as deadlocks).
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64 as StdAtomicU64, Ordering as StdOrdering};
+use std::sync::{Arc as StdArc, Condvar as StdCondvar, Mutex as StdMutex, MutexGuard as StdMutexGuard};
+use std::time::{Duration, Instant};
+
+/// Monotonic execution generation, used to re-key model object ids when a
+/// `Mutex`/`Condvar` value outlives one exploration iteration.
+static EXEC_GEN: StdAtomicU64 = StdAtomicU64::new(1);
+
+/// Panic message used to tear threads down after the model records a
+/// failure; the runner re-raises the *real* message from [`Inner::failed`].
+const ABORT_MSG: &str = "loom model aborted";
+
+thread_local! {
+    static TLS: RefCell<Option<Ctx>> = const { RefCell::new(None) };
+}
+
+/// Per-thread handle onto the active model execution.
+#[derive(Clone)]
+struct Ctx {
+    exec: StdArc<Exec>,
+    tid: usize,
+}
+
+fn ctx() -> Option<Ctx> {
+    TLS.with(|t| t.borrow().clone())
+}
+
+/// Explicit scheduling point: inside a model run, yield to the scheduler
+/// (which may switch to any runnable thread); outside, a no-op.
+pub(crate) fn sched_point() {
+    if let Some(cx) = ctx() {
+        cx.exec.transition(cx.tid, None);
+    }
+}
+
+/// Bounds on the schedule exploration.
+#[derive(Clone, Debug)]
+pub struct ModelOptions {
+    /// Maximum number of *preemptive* context switches per execution
+    /// (switches away from a thread that could have kept running).
+    /// `None` = unbounded (full exhaustive search). CHESS showed small
+    /// bounds (2) find almost all real bugs while taming the state space.
+    pub preemption_bound: Option<usize>,
+    /// How many *optional* condvar-timeout wakeups the scheduler may
+    /// inject per execution. Forced timeouts (taken when no thread is
+    /// runnable) are always allowed and do not count.
+    pub timeout_budget: usize,
+    /// Stop exploring after this many schedules (a safety valve, not a
+    /// soundness bound — hitting it means coverage was truncated).
+    pub max_iterations: usize,
+    /// Abort an execution whose scheduling-point count exceeds this
+    /// (livelock guard).
+    pub max_steps: usize,
+    /// Optional wall-clock budget for the whole exploration; exceeded =>
+    /// stop early and return how many schedules were covered.
+    pub time_budget: Option<Duration>,
+}
+
+impl Default for ModelOptions {
+    fn default() -> Self {
+        ModelOptions {
+            preemption_bound: Some(2),
+            timeout_budget: 2,
+            max_iterations: 200_000,
+            max_steps: 20_000,
+            time_budget: None,
+        }
+    }
+}
+
+impl ModelOptions {
+    /// Run `f` under every schedule permitted by these bounds. Panics on
+    /// the first failing schedule (deadlock, livelock, nondeterminism, or
+    /// a panic inside `f`), printing the decision path that reached it.
+    /// Returns the number of schedules explored.
+    pub fn check<F>(&self, f: F) -> usize
+    where
+        F: Fn() + Send + Sync + 'static,
+    {
+        let f = StdArc::new(f);
+        let started = Instant::now();
+        let mut prefix: Vec<Choice> = Vec::new();
+        let mut iterations = 0usize;
+        loop {
+            iterations += 1;
+            let exec = Exec::new(self.clone(), prefix.clone());
+            let root_cx = Ctx { exec: StdArc::clone(&exec), tid: 0 };
+            let fr = StdArc::clone(&f);
+            let handle = std::thread::Builder::new()
+                .name("loom-root".into())
+                .spawn(move || {
+                    let _g = CtxGuard::install(root_cx);
+                    fr();
+                })
+                .expect("loom: failed to spawn root thread");
+            let root_res = handle.join();
+            exec.wait_all_done();
+            let (failed, path, any_panicked) = exec.outcome();
+            if let Some(msg) = failed {
+                panic!("loom model failed: {msg}\nschedule: {path:?}");
+            }
+            if let Err(payload) = root_res {
+                eprintln!("loom: root thread panicked on schedule {path:?}");
+                std::panic::resume_unwind(payload);
+            }
+            if any_panicked {
+                panic!("loom: a spawned thread panicked on schedule {path:?}");
+            }
+            if iterations >= self.max_iterations {
+                eprintln!(
+                    "loom: stopping after {iterations} schedules (max_iterations); \
+                     coverage truncated"
+                );
+                return iterations;
+            }
+            if let Some(budget) = self.time_budget {
+                if started.elapsed() >= budget {
+                    eprintln!(
+                        "loom: stopping after {iterations} schedules (time budget); \
+                         coverage truncated"
+                    );
+                    return iterations;
+                }
+            }
+            // Depth-first backtrack: advance the last choice that still has
+            // unexplored options; when none remains the space is exhausted.
+            prefix = path;
+            loop {
+                match prefix.last_mut() {
+                    Some(last) if last.chosen + 1 < last.total => {
+                        last.chosen += 1;
+                        break;
+                    }
+                    Some(_) => {
+                        prefix.pop();
+                    }
+                    None => return iterations,
+                }
+            }
+        }
+    }
+}
+
+/// Run `f` under [`ModelOptions::default`] bounds. See
+/// [`ModelOptions::check`].
+pub fn model<F>(f: F)
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    ModelOptions::default().check(f);
+}
+
+/// What a modeled thread is doing, from the scheduler's point of view.
+#[derive(Clone, Debug, PartialEq)]
+enum State {
+    /// Runnable (possibly the active thread).
+    Ready,
+    /// Blocked acquiring model mutex `.0`.
+    Mutex(usize),
+    /// Parked on model condvar `cv`; `timeoutable` waits may be woken by
+    /// a scheduler-injected timeout.
+    Condvar { cv: usize, timeoutable: bool },
+    /// Blocked joining thread `.0`.
+    Join(usize),
+    /// Exited (normally or by panic).
+    Finished,
+}
+
+struct ThreadState {
+    state: State,
+    /// Set when the scheduler wakes a `Condvar` wait via timeout; consumed
+    /// by the waiter to report `timed_out()`.
+    timed_out: bool,
+    panicked: bool,
+}
+
+fn new_thread_state() -> ThreadState {
+    ThreadState { state: State::Ready, timed_out: false, panicked: false }
+}
+
+struct MutexSt {
+    held: bool,
+}
+
+struct CvSt {
+    /// FIFO wait queue of thread ids.
+    waiters: Vec<usize>,
+}
+
+/// One recorded nondeterministic decision: option `chosen` out of `total`.
+#[derive(Clone, Debug)]
+struct Choice {
+    chosen: usize,
+    total: usize,
+}
+
+/// A schedulable option at a decision point.
+enum Opt {
+    /// Let thread `.0` (currently `Ready`) run.
+    Run(usize),
+    /// Wake thread `.0` from a timeoutable condvar wait via timeout.
+    Timeout(usize),
+}
+
+struct Inner {
+    threads: Vec<ThreadState>,
+    mutexes: Vec<MutexSt>,
+    condvars: Vec<CvSt>,
+    /// The one thread allowed to run right now (`usize::MAX` once all
+    /// threads have finished).
+    active: usize,
+    /// Replay prefix plus choices recorded so far this execution.
+    path: Vec<Choice>,
+    cursor: usize,
+    preemptions: usize,
+    timeouts: usize,
+    steps: usize,
+    failed: Option<String>,
+}
+
+/// One model execution: the scheduler state plus the master lock/condvar
+/// every modeled thread parks on.
+struct Exec {
+    opts: ModelOptions,
+    gen: u64,
+    m: StdMutex<Inner>,
+    cv: StdCondvar,
+}
+
+fn describe(g: &Inner) -> String {
+    use std::fmt::Write as _;
+    let mut s = String::new();
+    for (i, t) in g.threads.iter().enumerate() {
+        let _ = write!(s, "[t{} {:?}] ", i, t.state);
+    }
+    s
+}
+
+fn pop_front_vec(v: &mut Vec<usize>) -> Option<usize> {
+    if v.is_empty() {
+        None
+    } else {
+        Some(v.remove(0))
+    }
+}
+
+impl Exec {
+    fn new(opts: ModelOptions, path: Vec<Choice>) -> StdArc<Exec> {
+        let gen = EXEC_GEN.fetch_add(1, StdOrdering::SeqCst) + 1;
+        StdArc::new(Exec {
+            opts,
+            gen,
+            m: StdMutex::new(Inner {
+                threads: vec![new_thread_state()],
+                mutexes: Vec::new(),
+                condvars: Vec::new(),
+                active: 0,
+                path,
+                cursor: 0,
+                preemptions: 0,
+                timeouts: 0,
+                steps: 0,
+                failed: None,
+            }),
+            cv: StdCondvar::new(),
+        })
+    }
+
+    fn alloc_mutex(&self) -> usize {
+        let mut g = self.m.lock().unwrap();
+        g.mutexes.push(MutexSt { held: false });
+        g.mutexes.len() - 1
+    }
+
+    fn alloc_condvar(&self) -> usize {
+        let mut g = self.m.lock().unwrap();
+        g.condvars.push(CvSt { waiters: Vec::new() });
+        g.condvars.len() - 1
+    }
+
+    /// Record a failure, wake everyone, and unwind the calling thread.
+    /// Never double-panics: during unwinding it only sets the flag.
+    fn abort(&self, mut g: StdMutexGuard<'_, Inner>, msg: String) {
+        if g.failed.is_none() {
+            g.failed = Some(msg);
+        }
+        drop(g);
+        self.cv.notify_all();
+        if !std::thread::panicking() {
+            panic!("{}", ABORT_MSG);
+        }
+    }
+
+    /// Park until this thread is scheduled (active + Ready) or the
+    /// execution fails.
+    fn park(&self, mut g: StdMutexGuard<'_, Inner>, me: usize) {
+        loop {
+            if g.failed.is_some() {
+                drop(g);
+                if !std::thread::panicking() {
+                    panic!("{}", ABORT_MSG);
+                }
+                return;
+            }
+            if g.active == me && g.threads[me].state == State::Ready {
+                return;
+            }
+            g = self.cv.wait(g).unwrap();
+        }
+    }
+
+    /// Move `me` into `state`, pick the next thread to run, and park until
+    /// `me` is scheduled again. `State::Ready` = a pure scheduling point.
+    fn block_on(&self, mut g: StdMutexGuard<'_, Inner>, me: usize, state: State) {
+        if g.failed.is_some() {
+            drop(g);
+            if !std::thread::panicking() {
+                panic!("{}", ABORT_MSG);
+            }
+            return;
+        }
+        g.steps += 1;
+        if g.steps > self.opts.max_steps {
+            let max = self.opts.max_steps;
+            self.abort(g, format!("execution exceeded {max} scheduling points (livelock?)"));
+            return;
+        }
+        g.threads[me].state = state;
+        match self.pick_next(&mut g, me) {
+            Ok(()) => {
+                self.cv.notify_all();
+                self.park(g, me);
+            }
+            Err(msg) => self.abort(g, msg),
+        }
+    }
+
+    /// Scheduling point: optionally move `me` to `new_state` (default:
+    /// stay `Ready`) and let the scheduler choose who runs next.
+    fn transition(&self, me: usize, new_state: Option<State>) {
+        let g = self.m.lock().unwrap();
+        self.block_on(g, me, new_state.unwrap_or(State::Ready));
+    }
+
+    /// Choose the next active thread, consuming/extending the decision
+    /// path. `Err` = deadlock or nondeterministic replay.
+    fn pick_next(&self, g: &mut Inner, me: usize) -> Result<(), String> {
+        let mut opts: Vec<Opt> = Vec::new();
+        let mut timeout_opts: Vec<Opt> = Vec::new();
+        for (i, t) in g.threads.iter().enumerate() {
+            match t.state {
+                State::Ready => opts.push(Opt::Run(i)),
+                State::Condvar { timeoutable: true, .. } => timeout_opts.push(Opt::Timeout(i)),
+                _ => {}
+            }
+        }
+        let mut forced_timeout = false;
+        if opts.is_empty() {
+            forced_timeout = true;
+            opts = timeout_opts;
+        } else if g.timeouts < self.opts.timeout_budget {
+            opts.extend(timeout_opts);
+        }
+        if opts.is_empty() {
+            if g.threads.iter().all(|t| t.state == State::Finished) {
+                g.active = usize::MAX;
+                return Ok(());
+            }
+            return Err(format!("deadlock detected: {}", describe(g)));
+        }
+        let me_runnable = me < g.threads.len() && g.threads[me].state == State::Ready;
+        if me_runnable {
+            if let Some(bound) = self.opts.preemption_bound {
+                if g.preemptions >= bound {
+                    // Budget exhausted: keep running the current thread.
+                    g.active = me;
+                    return Ok(());
+                }
+            }
+        }
+        let total = opts.len();
+        let idx = if total == 1 {
+            0
+        } else {
+            let cursor = g.cursor;
+            if cursor < g.path.len() {
+                if g.path[cursor].total != total {
+                    return Err(format!(
+                        "nondeterministic execution: replay expected {} options at decision {}, \
+                         found {}",
+                        g.path[cursor].total, cursor, total
+                    ));
+                }
+                g.cursor += 1;
+                g.path[cursor].chosen
+            } else {
+                g.path.push(Choice { chosen: 0, total });
+                g.cursor += 1;
+                0
+            }
+        };
+        match opts[idx] {
+            Opt::Run(tid) => {
+                if me_runnable && tid != me {
+                    g.preemptions += 1;
+                }
+                g.active = tid;
+            }
+            Opt::Timeout(tid) => {
+                if me_runnable {
+                    g.preemptions += 1;
+                }
+                if !forced_timeout {
+                    g.timeouts += 1;
+                }
+                if let State::Condvar { cv, .. } = g.threads[tid].state {
+                    g.condvars[cv].waiters.retain(|&w| w != tid);
+                }
+                g.threads[tid].timed_out = true;
+                g.threads[tid].state = State::Ready;
+                g.active = tid;
+            }
+        }
+        Ok(())
+    }
+
+    /// Acquire model mutex `mid` for thread `me`. `first_yield` inserts a
+    /// scheduling point *before* the acquire (so lock order races are
+    /// explored); re-acquisition after a condvar wait skips it.
+    fn mutex_lock(&self, me: usize, mid: usize, first_yield: bool) {
+        if first_yield {
+            self.transition(me, None);
+        }
+        loop {
+            let mut g = self.m.lock().unwrap();
+            if g.failed.is_some() {
+                drop(g);
+                if !std::thread::panicking() {
+                    panic!("{}", ABORT_MSG);
+                }
+                return;
+            }
+            if !g.mutexes[mid].held {
+                g.mutexes[mid].held = true;
+                return;
+            }
+            self.block_on(g, me, State::Mutex(mid));
+        }
+    }
+
+    /// Release model mutex `mid`, making its blocked acquirers runnable.
+    fn mutex_unlock(&self, mid: usize) {
+        let mut g = match self.m.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        g.mutexes[mid].held = false;
+        for t in g.threads.iter_mut() {
+            if t.state == State::Mutex(mid) {
+                t.state = State::Ready;
+            }
+        }
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Atomically (under the master lock) register `me` on condvar `cvid`,
+    /// release mutex `mid`, and park — the indivisibility that makes lost
+    /// wakeups impossible for a correctly locked wait. Returns whether the
+    /// wake was a timeout.
+    fn condvar_wait(&self, me: usize, cvid: usize, mid: usize, timeoutable: bool) -> bool {
+        {
+            let mut g = self.m.lock().unwrap();
+            if g.failed.is_some() {
+                drop(g);
+                if !std::thread::panicking() {
+                    panic!("{}", ABORT_MSG);
+                }
+                return true;
+            }
+            g.condvars[cvid].waiters.push(me);
+            g.threads[me].timed_out = false;
+            g.mutexes[mid].held = false;
+            for t in g.threads.iter_mut() {
+                if t.state == State::Mutex(mid) {
+                    t.state = State::Ready;
+                }
+            }
+            self.block_on(g, me, State::Condvar { cv: cvid, timeoutable });
+        }
+        let mut g = match self.m.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        let timed_out = g.threads[me].timed_out;
+        g.threads[me].timed_out = false;
+        timed_out
+    }
+
+    /// Wake waiter(s) on condvar `cvid`. FIFO order (see module docs).
+    fn condvar_notify(&self, cvid: usize, all: bool) {
+        let mut g = match self.m.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        while let Some(tid) = pop_front_vec(&mut g.condvars[cvid].waiters) {
+            g.threads[tid].timed_out = false;
+            g.threads[tid].state = State::Ready;
+            if !all {
+                break;
+            }
+        }
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Register a new modeled thread (Ready but parked until scheduled).
+    fn register_thread(&self) -> usize {
+        let mut g = self.m.lock().unwrap();
+        g.threads.push(new_thread_state());
+        g.threads.len() - 1
+    }
+
+    /// First thing a freshly spawned modeled thread does: park until the
+    /// scheduler picks it.
+    fn thread_begin(&self, me: usize) {
+        let g = self.m.lock().unwrap();
+        self.park(g, me);
+    }
+
+    /// Mark `me` finished and hand the schedule to someone else. Runs in
+    /// drop/unwind context, so it must never panic.
+    fn thread_finish(&self, me: usize, panicked: bool) {
+        let mut g = match self.m.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        g.threads[me].panicked = panicked;
+        g.threads[me].state = State::Finished;
+        for t in g.threads.iter_mut() {
+            if t.state == State::Join(me) {
+                t.state = State::Ready;
+            }
+        }
+        if g.failed.is_none() {
+            if let Err(msg) = self.pick_next(&mut g, me) {
+                g.failed = Some(msg);
+            }
+        }
+        drop(g);
+        self.cv.notify_all();
+    }
+
+    /// Block `me` until `target` finishes.
+    fn join_thread(&self, me: usize, target: usize) {
+        loop {
+            let g = self.m.lock().unwrap();
+            if g.failed.is_some() {
+                drop(g);
+                if !std::thread::panicking() {
+                    panic!("{}", ABORT_MSG);
+                }
+                return;
+            }
+            if g.threads[target].state == State::Finished {
+                return;
+            }
+            self.block_on(g, me, State::Join(target));
+        }
+    }
+
+    /// Runner-side: wait until every modeled thread has finished (or the
+    /// execution failed, in which case threads unwind on their own).
+    fn wait_all_done(&self) {
+        let mut g = match self.m.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        loop {
+            if g.failed.is_some() {
+                return;
+            }
+            if g.threads.iter().all(|t| t.state == State::Finished) {
+                return;
+            }
+            g = match self.cv.wait(g) {
+                Ok(g) => g,
+                Err(poisoned) => poisoned.into_inner(),
+            };
+        }
+    }
+
+    fn outcome(&self) -> (Option<String>, Vec<Choice>, bool) {
+        let g = match self.m.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        };
+        (g.failed.clone(), g.path.clone(), g.threads.iter().any(|t| t.panicked))
+    }
+}
+
+/// Installs the thread-local model context on construction and reports
+/// thread completion (normal or panicking) on drop.
+struct CtxGuard;
+
+impl CtxGuard {
+    fn install(cx: Ctx) -> CtxGuard {
+        let exec = StdArc::clone(&cx.exec);
+        let tid = cx.tid;
+        TLS.with(|t| *t.borrow_mut() = Some(cx));
+        exec.thread_begin(tid);
+        CtxGuard
+    }
+}
+
+impl Drop for CtxGuard {
+    fn drop(&mut self) {
+        let cx = TLS.with(|t| t.borrow_mut().take());
+        if let Some(cx) = cx {
+            cx.exec.thread_finish(cx.tid, std::thread::panicking());
+        }
+    }
+}
+
+/// Model-aware drop-ins for the `std::sync` types the crate uses; see the
+/// module docs. Re-exported through [`crate::util::sync`] under
+/// `--features loom`.
+pub mod sync {
+    pub use std::sync::Arc;
+    use std::sync::{
+        Condvar as StdCondvar, LockResult, Mutex as StdMutex, MutexGuard as StdMutexGuard,
+        PoisonError,
+    };
+    use std::time::Duration;
+
+    use super::{ctx, Ctx};
+
+    /// Lazily assigned per-execution model object id (see `EXEC_GEN`).
+    struct ObjCell {
+        gen: u64,
+        id: usize,
+    }
+
+    const fn obj_cell() -> StdMutex<ObjCell> {
+        StdMutex::new(ObjCell { gen: 0, id: 0 })
+    }
+
+    /// Model-aware mutex: delegates to [`std::sync::Mutex`] outside a
+    /// model run.
+    pub struct Mutex<T> {
+        cell: StdMutex<ObjCell>,
+        inner: StdMutex<T>,
+    }
+
+    /// Guard for [`Mutex`]; releases the model lock (after the real one)
+    /// on drop.
+    pub struct MutexGuard<'a, T> {
+        lock: &'a Mutex<T>,
+        inner: Option<StdMutexGuard<'a, T>>,
+        model: Option<(Ctx, usize)>,
+    }
+
+    impl<T> Mutex<T> {
+        /// New unlocked mutex.
+        pub const fn new(value: T) -> Mutex<T> {
+            Mutex { cell: obj_cell(), inner: StdMutex::new(value) }
+        }
+
+        fn model_id(&self, cx: &Ctx) -> usize {
+            let mut c = self.cell.lock().unwrap();
+            if c.gen != cx.exec.gen {
+                c.id = cx.exec.alloc_mutex();
+                c.gen = cx.exec.gen;
+            }
+            c.id
+        }
+
+        /// Acquire; a scheduling point inside a model run.
+        pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+            let model = match ctx() {
+                Some(cx) => {
+                    let mid = self.model_id(&cx);
+                    cx.exec.mutex_lock(cx.tid, mid, true);
+                    Some((cx, mid))
+                }
+                None => None,
+            };
+            // The inner std lock is uncontended here: inside a model run
+            // only the logically active thread reaches it, outside one it
+            // is the real lock.
+            match self.inner.lock() {
+                Ok(g) => Ok(MutexGuard { lock: self, inner: Some(g), model }),
+                Err(poisoned) => Err(PoisonError::new(MutexGuard {
+                    lock: self,
+                    inner: Some(poisoned.into_inner()),
+                    model,
+                })),
+            }
+        }
+
+        /// Re-acquire after a condvar wait (no pre-acquire scheduling
+        /// point: the wait itself was one).
+        fn lock_after_wait(&self, cx: Ctx, mid: usize) -> LockResult<MutexGuard<'_, T>> {
+            cx.exec.mutex_lock(cx.tid, mid, false);
+            match self.inner.lock() {
+                Ok(g) => Ok(MutexGuard { lock: self, inner: Some(g), model: Some((cx, mid)) }),
+                Err(poisoned) => Err(PoisonError::new(MutexGuard {
+                    lock: self,
+                    inner: Some(poisoned.into_inner()),
+                    model: Some((cx, mid)),
+                })),
+            }
+        }
+
+        /// Consume the mutex, returning the value.
+        pub fn into_inner(self) -> LockResult<T> {
+            self.inner.into_inner()
+        }
+    }
+
+    impl<T: Default> Default for Mutex<T> {
+        fn default() -> Self {
+            Mutex::new(T::default())
+        }
+    }
+
+    impl<T> std::ops::Deref for MutexGuard<'_, T> {
+        type Target = T;
+        fn deref(&self) -> &T {
+            self.inner.as_ref().expect("loom MutexGuard used after dismantle")
+        }
+    }
+
+    impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+        fn deref_mut(&mut self) -> &mut T {
+            self.inner.as_mut().expect("loom MutexGuard used after dismantle")
+        }
+    }
+
+    impl<T> Drop for MutexGuard<'_, T> {
+        fn drop(&mut self) {
+            // Real unlock first, then the model unlock hands the mutex to
+            // the next modeled acquirer.
+            if let Some(g) = self.inner.take() {
+                drop(g);
+            }
+            if let Some((cx, mid)) = self.model.take() {
+                cx.exec.mutex_unlock(mid);
+            }
+        }
+    }
+
+    /// Result of [`Condvar::wait_timeout`].
+    pub struct WaitTimeoutResult(bool);
+
+    impl WaitTimeoutResult {
+        /// True when the wait ended by timeout rather than notification.
+        pub fn timed_out(&self) -> bool {
+            self.0
+        }
+    }
+
+    /// Model-aware condition variable; delegates to
+    /// [`std::sync::Condvar`] outside a model run.
+    pub struct Condvar {
+        cell: StdMutex<ObjCell>,
+        inner: StdCondvar,
+    }
+
+    impl Condvar {
+        /// New condvar.
+        pub const fn new() -> Condvar {
+            Condvar { cell: obj_cell(), inner: StdCondvar::new() }
+        }
+
+        fn model_id(&self, cx: &Ctx) -> usize {
+            let mut c = self.cell.lock().unwrap();
+            if c.gen != cx.exec.gen {
+                c.id = cx.exec.alloc_condvar();
+                c.gen = cx.exec.gen;
+            }
+            c.id
+        }
+
+        /// Atomically release the guard and park until notified.
+        pub fn wait<'a, T>(&self, mut guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+            let lock = guard.lock;
+            match guard.model.take() {
+                Some((cx, mid)) => {
+                    let cvid = self.model_id(&cx);
+                    drop(guard.inner.take());
+                    drop(guard);
+                    cx.exec.condvar_wait(cx.tid, cvid, mid, false);
+                    lock.lock_after_wait(cx, mid)
+                }
+                None => {
+                    let inner = guard.inner.take().expect("loom MutexGuard used after dismantle");
+                    drop(guard);
+                    match self.inner.wait(inner) {
+                        Ok(g) => Ok(MutexGuard { lock, inner: Some(g), model: None }),
+                        Err(poisoned) => Err(PoisonError::new(MutexGuard {
+                            lock,
+                            inner: Some(poisoned.into_inner()),
+                            model: None,
+                        })),
+                    }
+                }
+            }
+        }
+
+        /// [`Condvar::wait`] with a timeout. Inside a model run the
+        /// duration is ignored: timeouts are scheduler choices (see the
+        /// module docs).
+        pub fn wait_timeout<'a, T>(
+            &self,
+            mut guard: MutexGuard<'a, T>,
+            dur: Duration,
+        ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+            let lock = guard.lock;
+            match guard.model.take() {
+                Some((cx, mid)) => {
+                    let cvid = self.model_id(&cx);
+                    drop(guard.inner.take());
+                    drop(guard);
+                    let timed_out = cx.exec.condvar_wait(cx.tid, cvid, mid, true);
+                    match lock.lock_after_wait(cx, mid) {
+                        Ok(g) => Ok((g, WaitTimeoutResult(timed_out))),
+                        Err(poisoned) => Err(PoisonError::new((
+                            poisoned.into_inner(),
+                            WaitTimeoutResult(timed_out),
+                        ))),
+                    }
+                }
+                None => {
+                    let inner = guard.inner.take().expect("loom MutexGuard used after dismantle");
+                    drop(guard);
+                    match self.inner.wait_timeout(inner, dur) {
+                        Ok((g, to)) => Ok((
+                            MutexGuard { lock, inner: Some(g), model: None },
+                            WaitTimeoutResult(to.timed_out()),
+                        )),
+                        Err(poisoned) => {
+                            let (g, to) = poisoned.into_inner();
+                            Err(PoisonError::new((
+                                MutexGuard { lock, inner: Some(g), model: None },
+                                WaitTimeoutResult(to.timed_out()),
+                            )))
+                        }
+                    }
+                }
+            }
+        }
+
+        /// Wake one waiter (FIFO inside a model run).
+        pub fn notify_one(&self) {
+            match ctx() {
+                Some(cx) => {
+                    let cvid = self.model_id(&cx);
+                    cx.exec.condvar_notify(cvid, false);
+                }
+                None => self.inner.notify_one(),
+            }
+        }
+
+        /// Wake all waiters.
+        pub fn notify_all(&self) {
+            match ctx() {
+                Some(cx) => {
+                    let cvid = self.model_id(&cx);
+                    cx.exec.condvar_notify(cvid, true);
+                }
+                None => self.inner.notify_all(),
+            }
+        }
+    }
+
+    impl Default for Condvar {
+        fn default() -> Self {
+            Condvar::new()
+        }
+    }
+
+    /// Model-aware atomics: every operation is a scheduling point inside
+    /// a model run (sequential consistency — see the module docs).
+    pub mod atomic {
+        pub use std::sync::atomic::Ordering;
+
+        use std::sync::atomic as std_atomic;
+
+        use super::super::sched_point;
+
+        macro_rules! model_atomic {
+            ($name:ident, $std:ty, $prim:ty) => {
+                /// Model-aware atomic (see [`self`] module docs).
+                #[derive(Debug, Default)]
+                pub struct $name(pub(crate) $std);
+
+                impl $name {
+                    /// New atomic holding `v`.
+                    pub const fn new(v: $prim) -> Self {
+                        Self(<$std>::new(v))
+                    }
+
+                    /// Atomic load (a scheduling point in a model run).
+                    pub fn load(&self, o: Ordering) -> $prim {
+                        sched_point();
+                        self.0.load(o)
+                    }
+
+                    /// Atomic store (a scheduling point in a model run).
+                    pub fn store(&self, v: $prim, o: Ordering) {
+                        sched_point();
+                        self.0.store(v, o)
+                    }
+
+                    /// Atomic swap (a scheduling point in a model run).
+                    pub fn swap(&self, v: $prim, o: Ordering) -> $prim {
+                        sched_point();
+                        self.0.swap(v, o)
+                    }
+
+                    /// Atomic compare-exchange (a scheduling point in a
+                    /// model run).
+                    pub fn compare_exchange(
+                        &self,
+                        current: $prim,
+                        new: $prim,
+                        success: Ordering,
+                        failure: Ordering,
+                    ) -> Result<$prim, $prim> {
+                        sched_point();
+                        self.0.compare_exchange(current, new, success, failure)
+                    }
+                }
+            };
+        }
+
+        macro_rules! model_atomic_arith {
+            ($name:ident, $prim:ty) => {
+                impl $name {
+                    /// Atomic add (a scheduling point in a model run).
+                    pub fn fetch_add(&self, v: $prim, o: Ordering) -> $prim {
+                        sched_point();
+                        self.0.fetch_add(v, o)
+                    }
+
+                    /// Atomic sub (a scheduling point in a model run).
+                    pub fn fetch_sub(&self, v: $prim, o: Ordering) -> $prim {
+                        sched_point();
+                        self.0.fetch_sub(v, o)
+                    }
+
+                    /// Atomic max (a scheduling point in a model run).
+                    pub fn fetch_max(&self, v: $prim, o: Ordering) -> $prim {
+                        sched_point();
+                        self.0.fetch_max(v, o)
+                    }
+
+                    /// Atomic min (a scheduling point in a model run).
+                    pub fn fetch_min(&self, v: $prim, o: Ordering) -> $prim {
+                        sched_point();
+                        self.0.fetch_min(v, o)
+                    }
+                }
+            };
+        }
+
+        model_atomic!(AtomicUsize, std_atomic::AtomicUsize, usize);
+        model_atomic_arith!(AtomicUsize, usize);
+        model_atomic!(AtomicU64, std_atomic::AtomicU64, u64);
+        model_atomic_arith!(AtomicU64, u64);
+        model_atomic!(AtomicU32, std_atomic::AtomicU32, u32);
+        model_atomic_arith!(AtomicU32, u32);
+        model_atomic!(AtomicBool, std_atomic::AtomicBool, bool);
+
+        impl AtomicBool {
+            /// Atomic or (a scheduling point in a model run).
+            pub fn fetch_or(&self, v: bool, o: Ordering) -> bool {
+                sched_point();
+                self.0.fetch_or(v, o)
+            }
+
+            /// Atomic and (a scheduling point in a model run).
+            pub fn fetch_and(&self, v: bool, o: Ordering) -> bool {
+                sched_point();
+                self.0.fetch_and(v, o)
+            }
+        }
+    }
+}
+
+/// Model-aware drop-ins for the `std::thread` items the crate uses.
+/// Spawned threads are registered with the scheduler and park until it
+/// picks them; outside a model run everything delegates to `std`.
+pub mod thread {
+    pub use std::thread::available_parallelism;
+
+    use std::io;
+    use std::time::Duration;
+
+    use super::{ctx, sched_point, Ctx, CtxGuard};
+
+    /// Model-aware [`std::thread::Builder`].
+    pub struct Builder {
+        inner: std::thread::Builder,
+    }
+
+    impl Builder {
+        /// New builder.
+        pub fn new() -> Builder {
+            Builder { inner: std::thread::Builder::new() }
+        }
+
+        /// Name the thread.
+        pub fn name(self, name: String) -> Builder {
+            Builder { inner: self.inner.name(name) }
+        }
+
+        /// Set the stack size.
+        pub fn stack_size(self, size: usize) -> Builder {
+            Builder { inner: self.inner.stack_size(size) }
+        }
+
+        /// Spawn; inside a model run the child registers with the
+        /// scheduler and parks until first scheduled (so replay stays
+        /// deterministic).
+        pub fn spawn<F, T>(self, f: F) -> io::Result<JoinHandle<T>>
+        where
+            F: FnOnce() -> T + Send + 'static,
+            T: Send + 'static,
+        {
+            match ctx() {
+                Some(cx) => {
+                    let tid = cx.exec.register_thread();
+                    let child = Ctx { exec: std::sync::Arc::clone(&cx.exec), tid };
+                    let std = self.inner.spawn(move || {
+                        let _g = CtxGuard::install(child);
+                        f()
+                    })?;
+                    Ok(JoinHandle { std, model: Some(tid) })
+                }
+                None => {
+                    let std = self.inner.spawn(f)?;
+                    Ok(JoinHandle { std, model: None })
+                }
+            }
+        }
+    }
+
+    impl Default for Builder {
+        fn default() -> Self {
+            Builder::new()
+        }
+    }
+
+    /// Model-aware [`std::thread::JoinHandle`].
+    pub struct JoinHandle<T> {
+        std: std::thread::JoinHandle<T>,
+        /// Model thread id of the child, when spawned inside a model run.
+        model: Option<usize>,
+    }
+
+    impl<T> JoinHandle<T> {
+        /// Join; a blocking scheduling point inside a model run.
+        pub fn join(self) -> std::thread::Result<T> {
+            if let Some(target) = self.model {
+                if let Some(cur) = ctx() {
+                    cur.exec.join_thread(cur.tid, target);
+                }
+            }
+            self.std.join()
+        }
+
+        /// Whether the thread has finished.
+        pub fn is_finished(&self) -> bool {
+            self.std.is_finished()
+        }
+    }
+
+    /// Model-aware [`std::thread::spawn`].
+    pub fn spawn<F, T>(f: F) -> JoinHandle<T>
+    where
+        F: FnOnce() -> T + Send + 'static,
+        T: Send + 'static,
+    {
+        Builder::new().spawn(f).expect("failed to spawn thread")
+    }
+
+    /// Model-aware [`std::thread::yield_now`] (a scheduling point).
+    pub fn yield_now() {
+        if ctx().is_some() {
+            sched_point();
+        } else {
+            std::thread::yield_now();
+        }
+    }
+
+    /// Model-aware [`std::thread::sleep`]: inside a model run, just a
+    /// scheduling point (virtual time).
+    pub fn sleep(dur: Duration) {
+        if ctx().is_some() {
+            sched_point();
+        } else {
+            std::thread::sleep(dur);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::panic::catch_unwind;
+    use std::time::Duration;
+
+    use super::sync::atomic::{AtomicUsize, Ordering};
+    use super::sync::{Arc, Condvar, Mutex};
+    use super::{thread, ModelOptions};
+
+    fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+        if let Some(s) = payload.downcast_ref::<&str>() {
+            (*s).to_string()
+        } else if let Some(s) = payload.downcast_ref::<String>() {
+            s.clone()
+        } else {
+            String::new()
+        }
+    }
+
+    #[test]
+    fn finds_lost_update() {
+        // Unsynchronized load-then-store increment: the model must find
+        // the interleaving where one increment is lost.
+        let result = catch_unwind(|| {
+            ModelOptions::default().check(|| {
+                let a = Arc::new(AtomicUsize::new(0));
+                let b = Arc::clone(&a);
+                let t = thread::spawn(move || {
+                    let v = b.load(Ordering::SeqCst);
+                    b.store(v + 1, Ordering::SeqCst);
+                });
+                let v = a.load(Ordering::SeqCst);
+                a.store(v + 1, Ordering::SeqCst);
+                t.join().unwrap();
+                assert_eq!(a.load(Ordering::SeqCst), 2, "lost update");
+            });
+        });
+        assert!(result.is_err(), "model must find the lost-update interleaving");
+    }
+
+    #[test]
+    fn atomic_increment_explores_multiple_schedules_and_passes() {
+        let iterations = ModelOptions::default().check(|| {
+            let a = Arc::new(AtomicUsize::new(0));
+            let b = Arc::clone(&a);
+            let t = thread::spawn(move || {
+                b.fetch_add(1, Ordering::SeqCst);
+            });
+            a.fetch_add(1, Ordering::SeqCst);
+            t.join().unwrap();
+            assert_eq!(a.load(Ordering::SeqCst), 2);
+        });
+        assert!(iterations > 1, "expected >1 schedule, got {iterations}");
+    }
+
+    #[test]
+    fn detects_abba_deadlock() {
+        let result = catch_unwind(|| {
+            ModelOptions::default().check(|| {
+                let m1 = Arc::new(Mutex::new(()));
+                let m2 = Arc::new(Mutex::new(()));
+                let (a1, a2) = (Arc::clone(&m1), Arc::clone(&m2));
+                let t = thread::spawn(move || {
+                    let g1 = a1.lock().unwrap();
+                    let g2 = a2.lock().unwrap();
+                    drop(g2);
+                    drop(g1);
+                });
+                let g2 = m2.lock().unwrap();
+                let g1 = m1.lock().unwrap();
+                drop(g1);
+                drop(g2);
+                t.join().unwrap();
+            });
+        });
+        let payload = result.expect_err("model must find the ABBA deadlock");
+        assert!(
+            panic_message(payload.as_ref()).contains("deadlock"),
+            "expected a deadlock report"
+        );
+    }
+
+    #[test]
+    fn condvar_handshake_passes() {
+        // Correctly locked wait: registration and mutex release are
+        // indivisible, so no schedule loses the wakeup.
+        ModelOptions::default().check(|| {
+            let pair = Arc::new((Mutex::new(false), Condvar::new()));
+            let p2 = Arc::clone(&pair);
+            let t = thread::spawn(move || {
+                let (m, cv) = &*p2;
+                *m.lock().unwrap() = true;
+                cv.notify_one();
+            });
+            let (m, cv) = &*pair;
+            let mut g = m.lock().unwrap();
+            while !*g {
+                g = cv.wait(g).unwrap();
+            }
+            drop(g);
+            t.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn finds_lost_wakeup_in_check_then_wait_gap() {
+        // Classic bug: test the flag in one critical section, wait in a
+        // second one. The notify can land in the gap; the model must
+        // surface the resulting hang as a deadlock.
+        let result = catch_unwind(|| {
+            ModelOptions::default().check(|| {
+                let pair = Arc::new((Mutex::new(false), Condvar::new()));
+                let p2 = Arc::clone(&pair);
+                let t = thread::spawn(move || {
+                    let (m, cv) = &*p2;
+                    *m.lock().unwrap() = true;
+                    cv.notify_one();
+                });
+                let (m, cv) = &*pair;
+                let done = { *m.lock().unwrap() };
+                if !done {
+                    let g = m.lock().unwrap();
+                    let g = cv.wait(g).unwrap();
+                    assert!(*g);
+                }
+                t.join().unwrap();
+            });
+        });
+        let payload = result.expect_err("model must find the lost wakeup");
+        assert!(
+            panic_message(payload.as_ref()).contains("deadlock"),
+            "lost wakeup should surface as a deadlock"
+        );
+    }
+
+    #[test]
+    fn wait_timeout_without_notifier_times_out() {
+        ModelOptions::default().check(|| {
+            let m = Mutex::new(());
+            let cv = Condvar::new();
+            let g = m.lock().unwrap();
+            let (g, to) = cv.wait_timeout(g, Duration::from_millis(1)).unwrap();
+            assert!(to.timed_out(), "no notifier exists, so the wake must be a timeout");
+            drop(g);
+        });
+    }
+}

@@ -6,7 +6,9 @@
 //! `crossbeam`, `clap` and `criterion` are re-implemented here in the small.
 
 pub mod channel;
+pub mod loom;
 pub mod rng;
+pub mod sync;
 pub mod threadpool;
 pub mod timer;
 pub mod benchkit;

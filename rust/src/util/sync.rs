@@ -1,0 +1,32 @@
+//! Sync-primitive shim: `std::sync` / `std::thread` in normal builds,
+//! the in-tree [`crate::util::loom`] model-checked types under
+//! `--features loom`.
+//!
+//! Code ported to this shim (`util/threadpool.rs`, `util/channel.rs`,
+//! `coordinator/concurrent.rs`) imports `Arc`, `Mutex`, `Condvar`,
+//! `atomic::*` and `thread::*` from here instead of `std` directly — the
+//! `xtask lint` invariant `std-sync-in-ported-file` enforces it. In
+//! a default build every re-export below is *exactly* the `std` item
+//! (zero cost, no wrappers); with the `loom` feature the same names
+//! resolve to model-aware types that delegate to `std` outside a
+//! `loom::model(...)` run, so the full test suite still passes under
+//! `cargo test --features loom`.
+
+#[cfg(not(feature = "loom"))]
+pub use std::sync::atomic;
+#[cfg(not(feature = "loom"))]
+pub use std::sync::{Arc, Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+#[cfg(not(feature = "loom"))]
+pub use std::thread;
+
+#[cfg(feature = "loom")]
+pub use crate::util::loom::sync::atomic;
+#[cfg(feature = "loom")]
+pub use crate::util::loom::sync::{Arc, Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+#[cfg(feature = "loom")]
+pub use crate::util::loom::thread;
+
+// `OnceLock` is only used for lazily initialized globals (the global
+// thread pool); model executions never construct one, so the `std` type
+// serves both configurations.
+pub use std::sync::OnceLock;

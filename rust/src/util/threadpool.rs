@@ -24,11 +24,11 @@
 
 use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
-use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::Duration;
 
 use super::channel;
+use super::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use super::sync::{thread, Arc, Condvar, Mutex, OnceLock};
 
 /// Number of concurrently-registered kernel users (see
 /// [`register_kernel_users`]). 0 means "no serving layer active": kernels
@@ -155,7 +155,9 @@ unsafe impl Sync for Job {}
 /// until every chunk has finished executing.
 #[allow(clippy::useless_transmute, clippy::transmute_ptr_to_ptr)]
 unsafe fn erase_task_lifetime(f: &(dyn Fn(usize, usize) + Sync)) -> RawTask {
-    std::mem::transmute::<&(dyn Fn(usize, usize) + Sync), RawTask>(f)
+    // SAFETY: deferred to the caller's contract above — the pointer only
+    // outlives the borrow, never the referent.
+    unsafe { std::mem::transmute::<&(dyn Fn(usize, usize) + Sync), RawTask>(f) }
 }
 
 /// A ticket for one job, queued on a worker deque: whoever pops it joins
@@ -291,7 +293,7 @@ fn worker_loop(shared: Arc<PoolShared>, idx: usize) {
 pub struct ThreadPool {
     shared: Arc<PoolShared>,
     workers: usize,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    handles: Vec<thread::JoinHandle<()>>,
 }
 
 impl ThreadPool {
@@ -312,7 +314,7 @@ impl ThreadPool {
             .map(|i| {
                 TOTAL_SPAWNS.fetch_add(1, Ordering::SeqCst);
                 let shared = Arc::clone(&shared);
-                std::thread::Builder::new()
+                thread::Builder::new()
                     .name(format!("sten-pool-{i}"))
                     .spawn(move || worker_loop(shared, i))
                     .expect("failed to spawn pool worker")
@@ -429,6 +431,9 @@ impl Drop for ThreadPool {
 /// capture the whole wrapper (not the raw-pointer field) by reference.
 pub struct SyncPtr<T>(pub *mut T);
 
+// SAFETY: sharing the *pointer value* across threads is always sound; it
+// is each dereference site that must argue disjointness (every kernel
+// using `SyncPtr` carries that SAFETY comment on its unsafe block).
 unsafe impl<T> Sync for SyncPtr<T> {}
 
 impl<T> SyncPtr<T> {
@@ -453,7 +458,7 @@ type BoxedJob = Box<dyn FnOnce() + Send + 'static>;
 /// joins every worker.
 pub struct WorkerPool {
     tx: Option<channel::Sender<BoxedJob>>,
-    handles: Vec<std::thread::JoinHandle<()>>,
+    handles: Vec<thread::JoinHandle<()>>,
 }
 
 impl WorkerPool {
@@ -465,7 +470,7 @@ impl WorkerPool {
             .map(|i| {
                 TOTAL_SPAWNS.fetch_add(1, Ordering::SeqCst);
                 let rx = rx.clone();
-                std::thread::Builder::new()
+                thread::Builder::new()
                     .name(format!("{prefix}-{i}"))
                     .spawn(move || {
                         while let Some(job) = rx.recv() {
@@ -515,7 +520,7 @@ impl Drop for WorkerPool {
 pub fn global() -> &'static Arc<ThreadPool> {
     static POOL: OnceLock<Arc<ThreadPool>> = OnceLock::new();
     POOL.get_or_init(|| {
-        let n = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
+        let n = thread::available_parallelism().map(|p| p.get()).unwrap_or(4);
         Arc::new(ThreadPool::new(n))
     })
 }

@@ -1,0 +1,273 @@
+//! Exhaustive-interleaving suite for the hand-rolled sync primitives.
+//!
+//! Compiled only under `--features loom`, which routes the `util::sync`
+//! shim to the in-tree model checker (`util::loom`): every `Mutex`,
+//! `Condvar`, atomic, and spawned thread below becomes a scheduling point,
+//! and each `check` call replays its body under every interleaving the
+//! stated bounds permit (CHESS-style preemption bounding plus a budget of
+//! injected condvar timeouts). A test passes only if the invariant holds
+//! on *every* explored schedule; failures print the decision path.
+//!
+//! Run locally with:
+//!
+//! ```text
+//! cargo test --features loom --test loom
+//! ```
+//!
+//! The bounds keep each test to a few thousand schedules so the suite
+//! stays in CI budgets; `util::loom` prints a coverage-truncated notice if
+//! a cap is ever the binding constraint.
+
+#![cfg(feature = "loom")]
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::time::{Duration, Instant};
+
+use sten::coordinator::CompletionLatch;
+use sten::util::channel::{bounded, Received};
+use sten::util::loom::ModelOptions;
+use sten::util::sync::atomic::{AtomicUsize, Ordering};
+use sten::util::sync::{thread, Arc, Mutex};
+use sten::util::ThreadPool;
+
+/// Bounds for the threadpool models: they involve three-plus threads and a
+/// few hundred scheduling points per execution, so one preemption and one
+/// optional timeout per schedule keeps the space tractable.
+fn pool_bounds() -> ModelOptions {
+    ModelOptions {
+        preemption_bound: Some(1),
+        timeout_budget: 1,
+        max_iterations: 1500,
+        time_budget: Some(Duration::from_secs(15)),
+        ..ModelOptions::default()
+    }
+}
+
+/// Bounds for the smaller channel / latch models.
+fn channel_bounds() -> ModelOptions {
+    ModelOptions {
+        preemption_bound: Some(2),
+        timeout_budget: 2,
+        max_iterations: 4000,
+        time_budget: Some(Duration::from_secs(10)),
+        ..ModelOptions::default()
+    }
+}
+
+/// A deadline far enough out that it can only fire as a model-injected
+/// timeout, never as a wall-clock one.
+fn far_deadline() -> Instant {
+    Instant::now() + Duration::from_secs(3600)
+}
+
+// ---------------------------------------------------------------------------
+// ThreadPool: ticket steal vs cursor exhaustion, nesting, panic poisoning.
+// ---------------------------------------------------------------------------
+
+/// Every index of a scope is executed exactly once, whether the stealable
+/// ticket is claimed by a worker, raced by both workers, or left stale
+/// because the owner's cursor loop exhausted the range first.
+#[test]
+fn pool_scope_runs_every_chunk_exactly_once() {
+    pool_bounds().check(|| {
+        let pool = ThreadPool::new(2);
+        let seen = Arc::new(Mutex::new(Vec::new()));
+        {
+            let seen = Arc::clone(&seen);
+            pool.scope_chunks(4, 1, move |start, end| {
+                for i in start..end {
+                    seen.lock().unwrap().push(i);
+                }
+            });
+        }
+        let mut got = Arc::try_unwrap(seen)
+            .ok()
+            .expect("scope closure dropped")
+            .into_inner()
+            .unwrap();
+        got.sort_unstable();
+        assert_eq!(got, vec![0, 1, 2, 3], "lost or duplicated chunk");
+    });
+}
+
+/// A scope body may open a nested scope on the same pool; the outer owner
+/// drives its remaining chunks to completion even while workers are parked
+/// inside the inner scope's wait.
+#[test]
+fn pool_nested_scope_completes() {
+    pool_bounds().check(|| {
+        let pool = ThreadPool::new(2);
+        let hits = Arc::new(AtomicUsize::new(0));
+        {
+            let pool_ref = &pool;
+            let hits = Arc::clone(&hits);
+            pool.scope_chunks(2, 1, move |s, e| {
+                for _ in s..e {
+                    let hits = Arc::clone(&hits);
+                    pool_ref.scope_chunks(2, 1, move |is, ie| {
+                        hits.fetch_add(ie - is, Ordering::SeqCst);
+                    });
+                }
+            });
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 4, "nested scope lost chunks");
+    });
+}
+
+/// A panicking chunk poisons the job — the owner re-raises the original
+/// payload — but the workers survive and the pool keeps serving scopes.
+#[test]
+fn pool_scope_panic_poisons_job_but_not_workers() {
+    pool_bounds().check(|| {
+        let pool = ThreadPool::new(2);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pool.scope_chunks(2, 1, |start, _end| {
+                if start == 0 {
+                    panic!("boom");
+                }
+            });
+        }));
+        let payload = result.expect_err("scope owner must re-raise the chunk panic");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert_eq!(msg, "boom", "original panic payload must survive the pool");
+        // The pool is still functional: a fresh scope completes on the same
+        // workers that just caught the poisoned job.
+        let hits = Arc::new(AtomicUsize::new(0));
+        {
+            let hits = Arc::clone(&hits);
+            pool.scope_chunks(2, 1, move |s, e| {
+                hits.fetch_add(e - s, Ordering::SeqCst);
+            });
+        }
+        assert_eq!(hits.load(Ordering::SeqCst), 2, "pool dead after poisoned scope");
+    });
+}
+
+/// Dropping the pool always terminates and joins both workers, in every
+/// interleaving of the shutdown flag, the wake epoch, and worker parking.
+#[test]
+fn pool_drop_joins_workers() {
+    pool_bounds().check(|| {
+        let pool = ThreadPool::new(2);
+        drop(pool);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Channel: deadline recv vs send, close vs parked receivers, exactly-once.
+// ---------------------------------------------------------------------------
+
+/// A deadline recv racing a send may time out (the model can fire the
+/// timeout before the send lands), but it must never *lose* the item: if
+/// the send already enqueued, the timed-out wake delivers it; otherwise a
+/// follow-up recv does.
+#[test]
+fn channel_deadline_recv_never_loses_racing_send() {
+    channel_bounds().check(|| {
+        let (tx, rx) = bounded::<u32>(1);
+        let sender = thread::spawn(move || {
+            tx.send(7).unwrap();
+            // tx drops here: the channel closes once the item is consumed.
+        });
+        match rx.recv_deadline(far_deadline()) {
+            Received::Item(v) => assert_eq!(v, 7),
+            Received::TimedOut => {
+                // The model fired the timeout before the send enqueued; the
+                // item must still be consumable afterwards.
+                assert_eq!(rx.recv(), Some(7), "racing send lost its item");
+            }
+            Received::Closed => panic!("channel closed while an item was in flight"),
+        }
+        sender.join().unwrap();
+        assert_eq!(rx.recv(), None, "channel must report closed after drain");
+    });
+}
+
+/// Closing the channel (last sender drops) wakes every parked receiver; no
+/// receiver sleeps through the close or reports anything but `None`.
+#[test]
+fn channel_close_wakes_parked_receivers() {
+    channel_bounds().check(|| {
+        let (tx, rx) = bounded::<u32>(1);
+        let receivers: Vec<_> = (0..2)
+            .map(|_| {
+                let rx = rx.clone();
+                thread::spawn(move || rx.recv())
+            })
+            .collect();
+        drop(rx);
+        drop(tx); // receivers may already be parked, or not yet started
+        for handle in receivers {
+            assert_eq!(handle.join().unwrap(), None, "receiver missed the close");
+        }
+    });
+}
+
+/// Two receivers competing for one item: exactly one gets it, the other
+/// observes closure — never both, never neither.
+#[test]
+fn channel_two_receivers_deliver_exactly_once() {
+    channel_bounds().check(|| {
+        let (tx, rx) = bounded::<u32>(1);
+        let receivers: Vec<_> = (0..2)
+            .map(|_| {
+                let rx = rx.clone();
+                thread::spawn(move || rx.recv())
+            })
+            .collect();
+        drop(rx);
+        tx.send(9).unwrap();
+        drop(tx);
+        let outcomes: Vec<_> =
+            receivers.into_iter().map(|h| h.join().unwrap()).collect();
+        let delivered = outcomes.iter().filter(|o| **o == Some(9)).count();
+        let closed = outcomes.iter().filter(|o| o.is_none()).count();
+        assert_eq!(
+            (delivered, closed),
+            (1, 1),
+            "item must be delivered exactly once, got {outcomes:?}"
+        );
+    });
+}
+
+/// Backpressure: a sender parked on a full queue is woken by the consuming
+/// recv and FIFO order is preserved across the park.
+#[test]
+fn channel_full_queue_send_parks_until_recv() {
+    channel_bounds().check(|| {
+        let (tx, rx) = bounded::<u32>(1);
+        let sender = thread::spawn(move || {
+            tx.send(1).unwrap();
+            tx.send(2).unwrap(); // parks whenever the first item is still queued
+        });
+        assert_eq!(rx.recv(), Some(1));
+        assert_eq!(rx.recv(), Some(2));
+        sender.join().unwrap();
+        assert_eq!(rx.recv(), None);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// CompletionLatch: the serving drain() rendezvous.
+// ---------------------------------------------------------------------------
+
+/// `wait(target)` racing the final `account` never sleeps through the
+/// wakeup, whether the accounts land before the wait starts, between its
+/// check and its park, or after it parks.
+#[test]
+fn latch_wait_never_misses_final_account() {
+    channel_bounds().check(|| {
+        let latch = Arc::new(CompletionLatch::new());
+        let workers: Vec<_> = (0..2)
+            .map(|_| {
+                let latch = Arc::clone(&latch);
+                thread::spawn(move || latch.account(1))
+            })
+            .collect();
+        latch.wait(2);
+        assert_eq!(latch.count(), 2);
+        for w in workers {
+            w.join().unwrap();
+        }
+    });
+}

@@ -1,0 +1,175 @@
+//! Miri-sized exercise of the crate's unsafe disjoint-write paths.
+//!
+//! This file is the `cargo miri test --test miri_safe` lane: every test
+//! routes through at least one `unsafe` block — the `SyncPtr` output
+//! writes in `kernels/` and `tensor/dense.rs`, the lifetime-erased scope
+//! closures in `util/threadpool.rs` — with shapes small enough that the
+//! interpreter finishes in seconds. Miri needs
+//! `MIRIFLAGS="-Zmiri-disable-isolation"` because the threadpool's parked
+//! workers read the clock (`Condvar::wait_timeout`).
+//!
+//! The same tests run under plain `cargo test` too (they are ordinary
+//! correctness checks, just tiny), so the subset can never drift from the
+//! real kernels.
+
+use sten::formats::{
+    convert, AnyTensor, BcsrTensor, CscTensor, CsrTensor, EllTensor, Layout, NmgTensor,
+};
+use sten::kernels::{bcsr_gemm, csc_gemm, csr_gemm, dense_gemm, elementwise, ell_gemm, nmg_gemm};
+use sten::tensor::DenseTensor;
+use sten::util::{Pcg64, ThreadPool};
+
+/// A small random matrix with roughly half its entries forced to zero, so
+/// the sparse formats have real structure to compress.
+fn sparse_randn(rows: usize, cols: usize, seed: u64) -> DenseTensor {
+    let mut rng = Pcg64::seeded(seed);
+    DenseTensor::randn(&[rows, cols], &mut rng).map(|v| if v.abs() < 0.7 { 0.0 } else { v })
+}
+
+fn dense_randn(rows: usize, cols: usize, seed: u64) -> DenseTensor {
+    let mut rng = Pcg64::seeded(seed);
+    DenseTensor::randn(&[rows, cols], &mut rng)
+}
+
+#[test]
+fn csr_spmm_matches_naive() {
+    let a = sparse_randn(8, 6, 1);
+    let b = dense_randn(6, 5, 2);
+    let got = csr_gemm::spmm(&CsrTensor::from_dense(&a), &b);
+    let want = dense_gemm::matmul_naive(&a, &b);
+    assert!(got.allclose(&want, 1e-4, 1e-4), "diff {}", got.max_abs_diff(&want));
+}
+
+#[test]
+fn csc_spmm_matches_naive() {
+    let a = dense_randn(5, 6, 3);
+    let b = sparse_randn(6, 4, 4);
+    let got = csc_gemm::spmm_dense_csc(&a, &CscTensor::from_dense(&b));
+    let want = dense_gemm::matmul_naive(&a, &b);
+    assert!(got.allclose(&want, 1e-4, 1e-4), "diff {}", got.max_abs_diff(&want));
+}
+
+#[test]
+fn ell_spmm_matches_naive() {
+    let a = sparse_randn(7, 6, 5);
+    let b = dense_randn(6, 3, 6);
+    let got = ell_gemm::spmm(&EllTensor::from_dense(&a), &b);
+    let want = dense_gemm::matmul_naive(&a, &b);
+    assert!(got.allclose(&want, 1e-4, 1e-4), "diff {}", got.max_abs_diff(&want));
+}
+
+#[test]
+fn bcsr_spmm_matches_naive() {
+    let a = sparse_randn(8, 6, 7);
+    let b = dense_randn(6, 5, 8);
+    let got = bcsr_gemm::spmm(&BcsrTensor::from_dense(&a, 2, 2), &b);
+    let want = dense_gemm::matmul_naive(&a, &b);
+    assert!(got.allclose(&want, 1e-4, 1e-4), "diff {}", got.max_abs_diff(&want));
+}
+
+#[test]
+fn nmg_spmm_matches_naive() {
+    let dense = dense_randn(8, 16, 9);
+    for a in [NmgTensor::from_dense(&dense, 2, 4, 2), NmgTensor::from_dense_swap(&dense, 2, 4, 2)] {
+        let b = dense_randn(16, 5, 10);
+        let got = nmg_gemm::spmm(&a, &b);
+        let want = dense_gemm::matmul_naive(&a.to_dense(), &b);
+        assert!(got.allclose(&want, 1e-4, 1e-4), "diff {}", got.max_abs_diff(&want));
+    }
+}
+
+#[test]
+fn blocked_dense_gemm_matches_naive() {
+    // Odd shapes hit the partial-panel tails of the blocked kernel.
+    let a = dense_randn(9, 7, 11);
+    let b = dense_randn(7, 5, 12);
+    let got = dense_gemm::matmul(&a, &b);
+    let want = dense_gemm::matmul_naive(&a, &b);
+    assert!(got.allclose(&want, 1e-4, 1e-4), "diff {}", got.max_abs_diff(&want));
+}
+
+#[test]
+fn masked_gemm_matches_naive() {
+    let a = dense_randn(6, 6, 13);
+    let mask = sparse_randn(6, 6, 14).map(|v| if v != 0.0 { 1.0 } else { 0.0 });
+    let b = dense_randn(6, 4, 15);
+    let got = dense_gemm::matmul_masked(&a, &mask, &b);
+    let want = dense_gemm::matmul_naive(&a.zip(&mask, |x, m| x * m), &b);
+    assert!(got.allclose(&want, 1e-4, 1e-4), "diff {}", got.max_abs_diff(&want));
+}
+
+#[test]
+fn lossless_conversions_roundtrip() {
+    let original = sparse_randn(6, 8, 16);
+    let src = AnyTensor::Dense(original.clone());
+    for target in [Layout::Csr, Layout::Csc, Layout::Coo, Layout::Ell, Layout::Masked] {
+        let converted = convert::lossless(&src, target)
+            .unwrap_or_else(|| panic!("dense -> {target:?} must be lossless"));
+        assert_eq!(converted.layout(), target);
+        assert!(
+            converted.to_dense().allclose(&original, 0.0, 0.0),
+            "{target:?} roundtrip lost values"
+        );
+    }
+    // Structured formats escape losslessly to exact formats.
+    let nmg = AnyTensor::Nmg(NmgTensor::from_dense(&dense_randn(8, 16, 17), 2, 4, 2));
+    let escaped = convert::lossless(&nmg, Layout::Csr).expect("nmg -> csr escape");
+    assert!(escaped.to_dense().allclose(&nmg.to_dense(), 0.0, 0.0));
+    // But never back *into* a structured format.
+    assert!(convert::lossless(&src, Layout::Nmg).is_none());
+}
+
+#[test]
+fn explicit_bcsr_conversion_roundtrips() {
+    let original = sparse_randn(8, 8, 18);
+    let b = convert::to_bcsr(&AnyTensor::Dense(original.clone()), 4, 4);
+    assert_eq!(b.layout(), Layout::Bcsr);
+    assert!(b.to_dense().allclose(&original, 0.0, 0.0));
+}
+
+#[test]
+fn transpose2_involution() {
+    // `transpose2` writes its output rows through a `SyncPtr`.
+    let x = dense_randn(9, 5, 19);
+    let t = x.transpose2();
+    assert_eq!(t.shape(), &[5usize, 9][..]);
+    assert!(t.transpose2().allclose(&x, 0.0, 0.0));
+}
+
+#[test]
+fn elementwise_kernels_small() {
+    let x = dense_randn(4, 6, 20);
+    let r = elementwise::relu(&x);
+    assert!(r.data().iter().all(|&v| v >= 0.0));
+    let g = elementwise::gelu(&x);
+    assert!(g.data().iter().all(|v| v.is_finite()));
+    let s = elementwise::softmax_rows(&x);
+    for i in 0..4 {
+        let row_sum: f32 = s.data()[i * 6..(i + 1) * 6].iter().sum();
+        assert!((row_sum - 1.0).abs() < 1e-5, "softmax row {i} sums to {row_sum}");
+    }
+    let gamma = vec![1.0f32; 6];
+    let beta = vec![0.5f32; 6];
+    let ln = elementwise::layernorm_rows(&x, &gamma, &beta);
+    assert!(ln.data().iter().all(|v| v.is_finite()));
+    let biased = elementwise::bias_add(&x, &beta);
+    assert!((biased.data()[0] - (x.data()[0] + 0.5)).abs() < 1e-6);
+}
+
+#[test]
+fn scoped_pool_covers_every_index_once() {
+    // The lifetime-erased `RawTask` path with a pool small enough for Miri.
+    let pool = ThreadPool::new(2);
+    let hits: Vec<std::sync::atomic::AtomicU32> =
+        (0..16).map(|_| std::sync::atomic::AtomicU32::new(0)).collect();
+    pool.scope_chunks(16, 3, |start, end| {
+        for i in start..end {
+            hits[i].fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        }
+    });
+    for (i, h) in hits.iter().enumerate() {
+        assert_eq!(h.load(std::sync::atomic::Ordering::SeqCst), 1, "index {i}");
+    }
+    let squares = pool.map(8, |i| i * i);
+    assert_eq!(squares, vec![0, 1, 4, 9, 16, 25, 36, 49]);
+}

@@ -1,0 +1,634 @@
+//! Repo-invariant lints for the `sten` crate.
+//!
+//! Usage: `cargo run -p xtask -- lint [src-dir]`
+//!
+//! Four rules, all enforced over `rust/src` (test modules are exempt where
+//! noted). The checker is deliberately line-based and syntactic: it strips
+//! comments and string literals, then pattern-matches. That keeps it
+//! dependency-free (the build environment is offline) at the cost of some
+//! precision; every rule errs on the side of flagging, and the unit tests
+//! below pin both the positive and negative cases.
+//!
+//! 1. `unsafe-safety-comment` — every `unsafe` token in code must have a
+//!    `// SAFETY:` (or `// Safety:`) comment on the same line or within the
+//!    10 preceding lines.
+//! 2. `guard-across-scope` — a named `Mutex`/`RwLock` guard binding
+//!    (`let g = x.lock()...`) must not be live across a threadpool scope
+//!    call (`parallel_for` / `scope_chunks`): workers calling back into the
+//!    lock would deadlock against the parked owner.
+//! 3. `spawn-outside-util` — `thread::spawn(` is only allowed under
+//!    `src/util/`; everything else must go through the pool abstractions so
+//!    the loom lane models every thread in the system.
+//! 4. `std-sync-in-ported-file` — files ported to the `util::sync` shim must
+//!    not name `std::sync` / `std::thread` directly (outside `#[cfg(test)]`),
+//!    otherwise the loom lane silently stops covering them.
+
+use std::fmt;
+use std::path::{Path, PathBuf};
+
+/// Files that have been ported to the `util::sync` shim (rule 4).
+const PORTED_FILES: &[&str] = &[
+    "util/threadpool.rs",
+    "util/channel.rs",
+    "coordinator/concurrent.rs",
+];
+
+/// How many lines above an `unsafe` token a SAFETY comment may sit (rule 1).
+const SAFETY_WINDOW: usize = 10;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(String::as_str) {
+        Some("lint") => {
+            let root = args
+                .get(1)
+                .map(PathBuf::from)
+                .unwrap_or_else(default_src_root);
+            match lint_tree(&root) {
+                Ok(violations) if violations.is_empty() => {
+                    println!("xtask lint: OK ({})", root.display());
+                }
+                Ok(violations) => {
+                    for v in &violations {
+                        eprintln!("{v}");
+                    }
+                    eprintln!("xtask lint: {} violation(s)", violations.len());
+                    std::process::exit(1);
+                }
+                Err(e) => {
+                    eprintln!("xtask lint: i/o error: {e}");
+                    std::process::exit(2);
+                }
+            }
+        }
+        _ => {
+            eprintln!("usage: cargo run -p xtask -- lint [src-dir]");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// `rust/xtask` → sibling `rust/src`.
+fn default_src_root() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR"))
+        .parent()
+        .expect("xtask manifest dir has a parent")
+        .join("src")
+}
+
+/// One lint finding: `file:line: [rule] message`.
+#[derive(Debug, PartialEq, Eq)]
+struct Violation {
+    file: String,
+    /// 1-based.
+    line: usize,
+    rule: &'static str,
+    msg: String,
+}
+
+impl fmt::Display for Violation {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.file, self.line, self.rule, self.msg)
+    }
+}
+
+/// Walk `root` and lint every `.rs` file, in path order (deterministic output).
+fn lint_tree(root: &Path) -> std::io::Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    collect_rs_files(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for path in &files {
+        let text = std::fs::read_to_string(path)?;
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        out.extend(lint_source(&rel, &text));
+    }
+    Ok(out)
+}
+
+fn collect_rs_files(dir: &Path, out: &mut Vec<PathBuf>) -> std::io::Result<()> {
+    for entry in std::fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            collect_rs_files(&path, out)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            out.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Lint a single file's text. `rel` is the path relative to the src root,
+/// with forward slashes (it selects which rules apply).
+fn lint_source(rel: &str, text: &str) -> Vec<Violation> {
+    let raw: Vec<&str> = text.lines().collect();
+    let code = strip_comments_and_strings(&raw);
+    let in_test = mark_test_regions(&code);
+    let mut out = Vec::new();
+    check_safety_comments(rel, &raw, &code, &mut out);
+    check_guard_across_scope(rel, &code, &in_test, &mut out);
+    check_spawn_outside_util(rel, &code, &in_test, &mut out);
+    check_std_sync_in_ported(rel, &code, &in_test, &mut out);
+    out.sort_by_key(|v| v.line);
+    out
+}
+
+/// Per-line view of the source with comments and string/char literals
+/// blanked out. Block-comment state carries across lines; string state does
+/// not (multi-line string literals are rare enough in this tree to ignore,
+/// and ignoring them only risks over-flagging, never under-flagging rules
+/// 2–4).
+fn strip_comments_and_strings(lines: &[&str]) -> Vec<String> {
+    let mut out = Vec::with_capacity(lines.len());
+    let mut block_depth = 0usize;
+    for line in lines {
+        let chars: Vec<char> = line.chars().collect();
+        let mut code = String::with_capacity(line.len());
+        let mut i = 0;
+        while i < chars.len() {
+            let c = chars[i];
+            let next = chars.get(i + 1).copied();
+            if block_depth > 0 {
+                if c == '*' && next == Some('/') {
+                    block_depth -= 1;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    block_depth += 1;
+                    i += 2;
+                } else {
+                    i += 1;
+                }
+                continue;
+            }
+            match c {
+                '/' if next == Some('/') => break, // line or doc comment
+                '/' if next == Some('*') => {
+                    block_depth += 1;
+                    i += 2;
+                }
+                '"' => {
+                    // Skip to the unescaped closing quote (or end of line).
+                    code.push(' ');
+                    i += 1;
+                    while i < chars.len() {
+                        if chars[i] == '\\' {
+                            i += 2;
+                        } else if chars[i] == '"' {
+                            i += 1;
+                            break;
+                        } else {
+                            i += 1;
+                        }
+                    }
+                }
+                '\'' => {
+                    // Char literal ('x', '\n') vs lifetime ('a): a lifetime
+                    // never closes with a quote right after one character.
+                    let is_char_literal = match next {
+                        Some('\\') => true,
+                        Some(_) => chars.get(i + 2) == Some(&'\''),
+                        None => false,
+                    };
+                    if is_char_literal {
+                        code.push(' ');
+                        i += 2;
+                        while i < chars.len() && chars[i] != '\'' {
+                            i += 1;
+                        }
+                        i += 1; // closing quote
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                }
+                _ => {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+        }
+        out.push(code);
+    }
+    out
+}
+
+/// Mark lines belonging to a `#[cfg(test)]` item. The attribute's item is
+/// skipped as a whole brace scope; since those items are self-balanced, the
+/// surrounding depth bookkeeping in other checks stays consistent when the
+/// whole region is skipped.
+fn mark_test_regions(code: &[String]) -> Vec<bool> {
+    let mut in_test = vec![false; code.len()];
+    let mut i = 0;
+    while i < code.len() {
+        if !code[i].trim_start().starts_with("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        let mut depth: i64 = 0;
+        let mut opened = false;
+        let mut j = i;
+        while j < code.len() {
+            in_test[j] = true;
+            for ch in code[j].chars() {
+                match ch {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    _ => {}
+                }
+            }
+            if opened && depth <= 0 {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+    in_test
+}
+
+/// True if `code` contains `word` as a standalone token (not part of a
+/// longer identifier such as `unsafe_op_in_unsafe_fn`).
+fn has_word(code: &str, word: &str) -> bool {
+    let mut start = 0;
+    while let Some(pos) = code[start..].find(word) {
+        let p = start + pos;
+        let before_ok = match code[..p].chars().next_back() {
+            None => true,
+            Some(c) => !c.is_alphanumeric() && c != '_',
+        };
+        let after_ok = match code[p + word.len()..].chars().next() {
+            None => true,
+            Some(c) => !c.is_alphanumeric() && c != '_',
+        };
+        if before_ok && after_ok {
+            return true;
+        }
+        start = p + word.len();
+    }
+    false
+}
+
+/// Rule 1: every `unsafe` token needs a nearby SAFETY comment. Applies to
+/// test code too — unsafe is unsafe wherever it lives.
+fn check_safety_comments(rel: &str, raw: &[&str], code: &[String], out: &mut Vec<Violation>) {
+    for (i, c) in code.iter().enumerate() {
+        if !has_word(c, "unsafe") {
+            continue;
+        }
+        let lo = i.saturating_sub(SAFETY_WINDOW);
+        let annotated = raw[lo..=i]
+            .iter()
+            .any(|l| l.contains("SAFETY") || l.contains("Safety"));
+        if !annotated {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: i + 1,
+                rule: "unsafe-safety-comment",
+                msg: format!(
+                    "`unsafe` without a `// SAFETY:` comment on the same line \
+                     or within the {SAFETY_WINDOW} preceding lines"
+                ),
+            });
+        }
+    }
+}
+
+/// Rule 2: no named lock guard live across a threadpool scope call.
+///
+/// Tracks `let g = ...lock()/...read()/...write()` bindings together with
+/// their brace depth; a binding dies at `drop(g)` or when its scope closes.
+/// Temporaries (`x.lock().unwrap().push(..)`) and tuple patterns
+/// (`let (g, t) = cv.wait_timeout(..)`) are not tracked — the former die at
+/// the end of the statement, the latter are the condvar idiom where the
+/// guard is consumed by the wait loop itself.
+fn check_guard_across_scope(
+    rel: &str,
+    code: &[String],
+    in_test: &[bool],
+    out: &mut Vec<Violation>,
+) {
+    let mut depth: i64 = 0;
+    // (binding name, brace depth it lives at, 1-based decl line)
+    let mut guards: Vec<(String, i64, usize)> = Vec::new();
+    for (i, c) in code.iter().enumerate() {
+        if in_test[i] {
+            continue; // self-balanced region; depth unaffected
+        }
+        let trimmed = c.trim_start();
+        // Definition lines (`pub fn scope_chunks<F>(...)`) name the scope
+        // entry points without calling them.
+        let is_fn_def = has_word(c, "fn");
+        if !guards.is_empty()
+            && !is_fn_def
+            && (c.contains("parallel_for(") || c.contains("scope_chunks"))
+        {
+            let (name, _, decl) = &guards[0];
+            out.push(Violation {
+                file: rel.to_string(),
+                line: i + 1,
+                rule: "guard-across-scope",
+                msg: format!(
+                    "lock guard `{name}` (acquired on line {decl}) is live across a \
+                     threadpool scope call; drop it first — workers re-entering the \
+                     lock deadlock against the parked scope owner"
+                ),
+            });
+        }
+        if let Some(pos) = c.find("drop(") {
+            let dropped: String = c[pos + "drop(".len()..]
+                .chars()
+                .take_while(|ch| ch.is_alphanumeric() || *ch == '_')
+                .collect();
+            guards.retain(|(n, _, _)| *n != dropped);
+        }
+        if let Some(name) = guard_binding(trimmed) {
+            guards.push((name, depth, i + 1));
+        }
+        depth += c
+            .chars()
+            .map(|ch| match ch {
+                '{' => 1,
+                '}' => -1,
+                _ => 0,
+            })
+            .sum::<i64>();
+        guards.retain(|(_, d, _)| *d <= depth);
+    }
+}
+
+/// `let [mut] NAME = <rhs containing .lock()/.read()/.write()>` → `NAME`.
+fn guard_binding(trimmed: &str) -> Option<String> {
+    let rest = trimmed.strip_prefix("let ")?;
+    let eq = rest.find('=')?;
+    let (pat, rhs) = rest.split_at(eq);
+    if !(rhs.contains(".lock()") || rhs.contains(".read()") || rhs.contains(".write()")) {
+        return None;
+    }
+    let pat = pat.trim();
+    let pat = pat.strip_prefix("mut ").unwrap_or(pat).trim_start();
+    let name: String = pat
+        .chars()
+        .take_while(|ch| ch.is_alphanumeric() || *ch == '_')
+        .collect();
+    if name.is_empty() {
+        None // tuple/struct pattern — not a plain guard binding
+    } else {
+        Some(name)
+    }
+}
+
+/// Rule 3: `thread::spawn(` only under `src/util/` (tests exempt: they may
+/// spawn driver threads to exercise the public API from outside).
+fn check_spawn_outside_util(
+    rel: &str,
+    code: &[String],
+    in_test: &[bool],
+    out: &mut Vec<Violation>,
+) {
+    if rel.starts_with("util/") {
+        return;
+    }
+    for (i, c) in code.iter().enumerate() {
+        if in_test[i] {
+            continue;
+        }
+        if c.contains("thread::spawn(") {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: i + 1,
+                rule: "spawn-outside-util",
+                msg: "`thread::spawn` outside `util/`; route threads through \
+                      `util::threadpool` / `util::sync::thread` so the loom lane \
+                      models them"
+                    .to_string(),
+            });
+        }
+    }
+}
+
+/// Rule 4: shim-ported files must not reach for `std::sync` / `std::thread`
+/// directly (outside tests) — that would bypass the loom instrumentation.
+fn check_std_sync_in_ported(
+    rel: &str,
+    code: &[String],
+    in_test: &[bool],
+    out: &mut Vec<Violation>,
+) {
+    if !PORTED_FILES.contains(&rel) {
+        return;
+    }
+    for (i, c) in code.iter().enumerate() {
+        if in_test[i] {
+            continue;
+        }
+        for needle in ["std::sync", "std::thread"] {
+            if c.contains(needle) {
+                out.push(Violation {
+                    file: rel.to_string(),
+                    line: i + 1,
+                    rule: "std-sync-in-ported-file",
+                    msg: format!(
+                        "direct `{needle}` in a file ported to the `util::sync` shim; \
+                         import from `crate::util::sync` instead"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rules(violations: &[Violation]) -> Vec<&'static str> {
+        violations.iter().map(|v| v.rule).collect()
+    }
+
+    // ---- rule 1: unsafe-safety-comment -------------------------------
+
+    #[test]
+    fn unannotated_unsafe_is_flagged() {
+        let src = "fn f(p: *mut u8) {\n    unsafe { *p = 1 };\n}\n";
+        let v = lint_source("kernels/x.rs", src);
+        assert_eq!(rules(&v), ["unsafe-safety-comment"]);
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn safety_comment_within_window_passes() {
+        let src = "fn f(p: *mut u8) {\n    // SAFETY: caller guarantees p is valid.\n    \
+                   unsafe { *p = 1 };\n}\n";
+        assert!(lint_source("kernels/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_beyond_window_is_flagged() {
+        let mut src = String::from("// SAFETY: too far away.\n");
+        for _ in 0..SAFETY_WINDOW {
+            src.push_str("fn pad() {}\n");
+        }
+        src.push_str("fn f(p: *mut u8) { unsafe { *p = 1 }; }\n");
+        assert_eq!(rules(&lint_source("kernels/x.rs", &src)), ["unsafe-safety-comment"]);
+    }
+
+    #[test]
+    fn unsafe_inside_string_or_comment_is_ignored() {
+        let src = "fn f() {\n    let _ = \"unsafe\";\n    // unsafe in a comment\n}\n";
+        assert!(lint_source("kernels/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn unsafe_as_identifier_fragment_is_ignored() {
+        let src = "#![deny(unsafe_op_in_unsafe_fn)]\nfn f() {}\n";
+        assert!(lint_source("lib.rs", src).is_empty());
+    }
+
+    // ---- rule 2: guard-across-scope ----------------------------------
+
+    #[test]
+    fn guard_live_across_parallel_for_is_flagged() {
+        let src = "fn f(pool: &ThreadPool, m: &Mutex<u32>) {\n\
+                   \x20   let g = m.lock().unwrap();\n\
+                   \x20   pool.parallel_for(10, 1, |a, b| work(a, b));\n\
+                   \x20   drop(g);\n}\n";
+        let v = lint_source("ops/x.rs", src);
+        assert_eq!(rules(&v), ["guard-across-scope"]);
+        assert_eq!(v[0].line, 3);
+        assert!(v[0].msg.contains('g'));
+    }
+
+    #[test]
+    fn guard_dropped_before_scope_passes() {
+        let src = "fn f(pool: &ThreadPool, m: &Mutex<u32>) {\n\
+                   \x20   let g = m.lock().unwrap();\n\
+                   \x20   let n = *g;\n\
+                   \x20   drop(g);\n\
+                   \x20   pool.parallel_for(n as usize, 1, |a, b| work(a, b));\n}\n";
+        assert!(lint_source("ops/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn guard_scope_closed_before_scope_call_passes() {
+        let src = "fn f(pool: &ThreadPool, m: &Mutex<u32>) {\n\
+                   \x20   {\n\
+                   \x20       let g = m.lock().unwrap();\n\
+                   \x20       touch(&g);\n\
+                   \x20   }\n\
+                   \x20   pool.scope_chunks(4, 1, |a, b| work(a, b));\n}\n";
+        assert!(lint_source("ops/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn lock_temporary_passes() {
+        let src = "fn f(pool: &ThreadPool, m: &Mutex<Vec<u32>>) {\n\
+                   \x20   m.lock().unwrap().push(1);\n\
+                   \x20   pool.parallel_for(4, 1, |a, b| work(a, b));\n}\n";
+        assert!(lint_source("ops/x.rs", src).is_empty());
+    }
+
+    #[test]
+    fn scope_fn_definition_line_is_not_a_call_site() {
+        let src = "impl ThreadPool {\n\
+                   \x20   pub fn scope_chunks<F>(&self, n: usize, grain: usize, f: F) {\n\
+                   \x20       let g = self.state.lock().unwrap();\n\
+                   \x20       drop(g);\n\
+                   \x20   }\n}\n";
+        assert!(lint_source("util/threadpool.rs", src).is_empty());
+    }
+
+    #[test]
+    fn rwlock_read_guard_is_tracked() {
+        let src = "fn f(pool: &ThreadPool, m: &RwLock<u32>) {\n\
+                   \x20   let snapshot = m.read().unwrap();\n\
+                   \x20   pool.scope_chunks(4, 1, |a, b| work(a, b));\n}\n";
+        assert_eq!(rules(&lint_source("ops/x.rs", src)), ["guard-across-scope"]);
+    }
+
+    // ---- rule 3: spawn-outside-util ----------------------------------
+
+    #[test]
+    fn spawn_outside_util_is_flagged() {
+        let src = "fn f() {\n    let h = thread::spawn(|| {});\n    h.join().unwrap();\n}\n";
+        assert_eq!(rules(&lint_source("coordinator/x.rs", src)), ["spawn-outside-util"]);
+    }
+
+    #[test]
+    fn spawn_inside_util_passes() {
+        let src = "fn f() {\n    let h = thread::spawn(|| {});\n    h.join().unwrap();\n}\n";
+        assert!(lint_source("util/threadpool.rs", src).is_empty());
+    }
+
+    #[test]
+    fn spawn_in_test_module_passes() {
+        let src = "fn f() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   \x20   #[test]\n\
+                   \x20   fn t() {\n\
+                   \x20       let h = std::thread::spawn(|| {});\n\
+                   \x20       h.join().unwrap();\n\
+                   \x20   }\n}\n";
+        assert!(lint_source("runtime/executor.rs", src).is_empty());
+    }
+
+    // ---- rule 4: std-sync-in-ported-file -----------------------------
+
+    #[test]
+    fn std_sync_in_ported_file_is_flagged() {
+        let src = "use std::sync::Mutex;\nfn f() {}\n";
+        let v = lint_source("util/channel.rs", src);
+        assert_eq!(rules(&v), ["std-sync-in-ported-file"]);
+        assert_eq!(v[0].line, 1);
+    }
+
+    #[test]
+    fn std_thread_in_ported_file_is_flagged() {
+        let src = "fn f() { std::thread::yield_now(); }\n";
+        assert_eq!(
+            rules(&lint_source("util/threadpool.rs", src)),
+            ["std-sync-in-ported-file"]
+        );
+    }
+
+    #[test]
+    fn std_sync_in_unported_file_passes() {
+        let src = "use std::sync::Mutex;\nfn f() {}\n";
+        assert!(lint_source("runtime/executor.rs", src).is_empty());
+    }
+
+    #[test]
+    fn std_sync_in_ported_file_test_module_passes() {
+        let src = "use crate::util::sync::Mutex;\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   \x20   use std::sync::mpsc;\n\
+                   \x20   #[test]\n\
+                   \x20   fn t() { let (_tx, _rx) = mpsc::channel::<u32>(); }\n}\n";
+        assert!(lint_source("util/channel.rs", src).is_empty());
+    }
+
+    // ---- the tree itself ---------------------------------------------
+
+    #[test]
+    fn src_tree_is_clean() {
+        let root = default_src_root();
+        let violations = lint_tree(&root).expect("lint walk");
+        assert!(
+            violations.is_empty(),
+            "expected a clean tree, got:\n{}",
+            violations
+                .iter()
+                .map(|v| v.to_string())
+                .collect::<Vec<_>>()
+                .join("\n")
+        );
+    }
+}
