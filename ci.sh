@@ -48,11 +48,15 @@ echo "==> forward_latency --smoke (pool regression gate, 300s ceiling)"
 # pool worker (or any scope that never completes) into a loud failure.
 timeout 300 cargo bench --bench forward_latency -- --smoke
 
-echo "==> serving_arrivals --smoke (open-loop scheduler gate, 300s ceiling)"
-# Paced Poisson arrivals at trivial load on a 1-model and a 2-model mix:
-# asserts zero steady-state thread spawns and a sane SLO-miss fraction, so
-# a registry/scheduler regression (starvation, a stalled batcher, queues
-# that never drain) fails loudly here instead of only under real traffic.
+echo "==> serving_arrivals --smoke (open-loop scheduler + overload gate, 300s ceiling)"
+# Paced open-loop (non-blocking submit) arrivals on a 1-model and a 2-model
+# mix: a trivial-load point per mix asserts zero steady-state thread spawns
+# and a sane SLO-miss fraction, then one defended overload point (offered
+# >> capacity, admission + shedding on) asserts goodput holds a floor
+# instead of collapsing and that shed/reject/degrade counts surface in
+# BENCH_serving_arrivals.json — so a continuous-batching regression
+# (starvation, stalled workers, queues that never drain, silent drops)
+# fails loudly here instead of only under real traffic.
 timeout 300 cargo bench --bench serving_arrivals -- --smoke
 
 echo "==> cargo fmt --check"

@@ -1,32 +1,43 @@
-//! Open-loop Poisson arrivals: offered load vs SLO-miss fraction, for a
-//! 1-model and a 2-model registry mix.
+//! Open-loop arrivals: offered load vs SLO-miss and goodput, for 1-model,
+//! 2-model and bursty (Markov-modulated) registry mixes, with and without
+//! overload defense (admission control + sparse-degrade + load shedding).
 //!
 //! An open-loop generator submits on a precomputed arrival schedule —
-//! exponential inter-arrival gaps and per-request model picks drawn from a
-//! seeded [`Pcg64`], so the *workload* is fully deterministic (no wall
-//! clock anywhere in its construction; real time is only used to pace the
-//! schedule and to measure latency). Arrivals do not wait for completions,
-//! which is what makes overload visible: past the server's capacity the
-//! queue grows and the SLO-miss fraction climbs toward 1 — the Fig. 11
-//! serving story measured the way serving systems are actually loaded.
+//! inter-arrival gaps and per-request model picks drawn from a seeded
+//! [`Pcg64`], so the *workload* is fully deterministic (no wall clock
+//! anywhere in its construction; real time is only used to pace the
+//! schedule and to measure latency). Arrivals never wait for completions
+//! — submission is **non-blocking** (`try_submit_to`), and a failed
+//! submission (queue full, admission-rejected) is *counted as an SLO
+//! miss* rather than stalling the generator. Blocking here would silently
+//! turn the bench closed-loop at saturation (coordinated omission): the
+//! generator's own backpressure stall would pace arrivals down to
+//! capacity and hide the overload it exists to measure.
 //!
 //! Per mix, the bench calibrates achievable throughput with a closed-loop
-//! blast, then sweeps offered load as fractions of that capacity and
-//! reports achieved rps, p50/p95/p99 and SLO-miss (overall and per model).
+//! blast, then sweeps offered load as fractions of that capacity with
+//! overload defense ON (plus one undefended contrast point at the top
+//! fraction) and reports achieved rps, goodput (in-SLO completions/s),
+//! p50/p95/p99, SLO-miss (overall and per model) and per-model
+//! shed/reject/degrade counts. Past saturation, defended goodput must
+//! plateau near capacity instead of collapsing.
 //!
 //! Run: `cargo bench --bench serving_arrivals [-- --full | -- --smoke]`
 //! (quick/smoke serve the `tiny` artifacts; full serves `base`.)
-//! `--smoke` runs one trivial-load point per mix and asserts zero
-//! steady-state thread spawns and a sane SLO-miss fraction (ci.sh gate).
+//! `--smoke` (the ci.sh gate) runs per mix one trivial-load point
+//! (asserting zero steady-state thread spawns and a sane SLO-miss) and
+//! one defended overload point at ~6x capacity (asserting zero spawns, a
+//! goodput floor, and that shed/reject/degrade outcomes actually fired).
 //!
 //! Emits `BENCH_serving_arrivals.json` via `benchkit::JsonReport`.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
-use sten::coordinator::metrics::{per_model, percentile, slo_miss_fraction};
+use sten::coordinator::metrics::{goodput, per_model, percentile, slo_miss_fraction};
 use sten::coordinator::{
     ConcurrentServer, Engine, FfnMode, ModelRegistry, RequestResult, SchedPolicy, ServeConfig,
+    SubmitError,
 };
 use sten::runtime::ArtifactRuntime;
 use sten::util::benchkit::JsonReport;
@@ -35,11 +46,23 @@ use sten::util::threadpool;
 
 const NMG: FfnMode = FfnMode::NativeNmg { n: 2, m: 4, g: 4 };
 
-/// A registry mix: (name, ffn mode, replicas, weight) per model.
+/// Arrival process shape (same mean rate either way).
+#[derive(Clone, Copy)]
+enum Arrivals {
+    /// Memoryless: exponential inter-arrival gaps.
+    Poisson,
+    /// Bursty: two-state Markov-modulated Poisson process.
+    Mmpp,
+}
+
+/// A registry mix: (name, ffn mode, replicas, weight) per model, plus an
+/// optional admission-control degrade link (from, to).
 struct Mix {
     label: &'static str,
     models: Vec<(&'static str, FfnMode, usize, u64)>,
     policy: SchedPolicy,
+    arrivals: Arrivals,
+    degrade: Option<(&'static str, &'static str)>,
 }
 
 fn start_server(
@@ -53,6 +76,9 @@ fn start_server(
         let engine = Engine::with_runtime(rt.clone(), tag, *mode, 42 + i as u64).expect("engine");
         registry.register(name, engine, *replicas, *weight).expect("register model");
     }
+    if let Some((from, to)) = mix.degrade {
+        registry.set_degrade(from, to).expect("degrade link");
+    }
     ConcurrentServer::start_registry(registry, cfg).expect("start server")
 }
 
@@ -62,6 +88,27 @@ fn poisson_gaps(rng: &mut Pcg64, rate_rps: f64, n: usize) -> Vec<f64> {
         .map(|_| {
             let u = (1.0 - rng.next_f32() as f64).max(1e-9); // in (0, 1]
             -u.ln() / rate_rps
+        })
+        .collect()
+}
+
+/// Seeded two-state Markov-modulated Poisson gaps with overall mean rate
+/// `rate_rps`: a "hi" burst state (mean gap 0.25/rate) and a "lo" quiet
+/// state (mean gap 1.75/rate), switching with probability 1/8 per
+/// arrival. Symmetric switching gives the states equal occupancy, so the
+/// long-run mean gap is 1/rate — same offered load as Poisson, arriving
+/// in bursts that stress the queue and the shed path far harder.
+fn mmpp_gaps(rng: &mut Pcg64, rate_rps: f64, n: usize) -> Vec<f64> {
+    let mean_gap = 1.0 / rate_rps;
+    let mut hi = true;
+    (0..n)
+        .map(|_| {
+            if rng.next_f32() < 0.125 {
+                hi = !hi;
+            }
+            let mean = if hi { 0.25 * mean_gap } else { 1.75 * mean_gap };
+            let u = (1.0 - rng.next_f32() as f64).max(1e-9);
+            -u.ln() * mean
         })
         .collect()
 }
@@ -99,16 +146,25 @@ fn calibrate(rt: &Arc<ArtifactRuntime>, tag: &str, mix: &Mix, requests: usize) -
 struct Point {
     offered_rps: f64,
     achieved_rps: f64,
+    goodput_rps: f64,
     p50_s: f64,
     p95_s: f64,
     p99_s: f64,
     slo_miss: f64,
-    per_model_miss: Vec<(String, f64)>,
+    failed_submits: usize,
+    shed: u64,
+    rejected: u64,
+    degraded: u64,
+    /// (name, slo_miss, shed, rejected, degraded) per model.
+    per_model: Vec<(String, f64, u64, u64, u64)>,
     spawned: usize,
 }
 
 /// One open-loop load point: pace `n` arrivals at `offered_rps`, measure
-/// latency/SLO over the paced window only (warmup excluded).
+/// latency/SLO/goodput over the paced window only (warmup excluded).
+/// `defended` turns on admission control (with the mix's degrade link)
+/// and expired-entry shedding.
+#[allow(clippy::too_many_arguments)]
 fn run_point(
     rt: &Arc<ArtifactRuntime>,
     tag: &str,
@@ -117,14 +173,18 @@ fn run_point(
     n: usize,
     slo: Duration,
     seed: u64,
+    defended: bool,
 ) -> Point {
     let cfg = ServeConfig {
-        // Open loop: the generator must never block on backpressure within
-        // the sweep sizes used here.
-        queue_cap: 16384,
+        // Bounded, but deep enough that the undefended points in these
+        // sweep sizes never hit QueueFull: their failure accounting stays
+        // zero and overload shows up purely as latency/SLO collapse.
+        queue_cap: 1024,
         max_wait: Duration::from_millis(2),
         policy: mix.policy,
         slo,
+        admission: defended,
+        shed: defended,
         ..ServeConfig::default()
     };
     let server = start_server(rt, tag, mix, cfg);
@@ -134,22 +194,29 @@ fn run_point(
 
     // The deterministic workload: gaps, model picks and token streams.
     let mut rng = Pcg64::seeded(seed);
-    let gaps = poisson_gaps(&mut rng, offered_rps, n);
+    let gaps = match mix.arrivals {
+        Arrivals::Poisson => poisson_gaps(&mut rng, offered_rps, n),
+        Arrivals::Mmpp => mmpp_gaps(&mut rng, offered_rps, n),
+    };
     let picks: Vec<usize> = (0..n).map(|_| rng.below(names.len() as u32) as usize).collect();
     let tokens: Vec<Vec<i32>> =
         (0..n).map(|_| (0..seq).map(|_| rng.below(vocab) as i32).collect()).collect();
 
-    // Warmup wave (every model once, plus pool/artifact spin-up), drained
-    // and excluded from the measured window.
+    // Warmup wave (every model once, plus pool/artifact spin-up; primes
+    // the admission EWMA), drained and excluded from the measured window.
     let mut warm_ids = Vec::new();
     for (m, name) in names.iter().enumerate() {
         warm_ids.push(server.submit_to(name, &tokens[m % n]).unwrap());
     }
     server.drain();
+    // A warmup entry shed instead of served (possible only when slo is
+    // tighter than a cold first batch) must not be charged to the window.
+    let warm_shed = (warm_ids.len() - server.completed().len()) as u64;
     let spawns_before = threadpool::total_spawns();
 
     let start = Instant::now();
     let mut due = 0.0f64;
+    let mut failed_submits = 0usize;
     for i in 0..n {
         due += gaps[i];
         let target = start + Duration::from_secs_f64(due);
@@ -157,7 +224,13 @@ fn run_point(
         if target > now {
             std::thread::sleep(target - now);
         }
-        server.submit_to(names[picks[i]], &tokens[i]).unwrap();
+        // Non-blocking: a submission the server cannot take *now* is a
+        // failure the JSON accounts as an SLO miss, not a generator stall.
+        match server.try_submit_to(names[picks[i]], &tokens[i]) {
+            Ok(_) => {}
+            Err(SubmitError::QueueFull) | Err(SubmitError::Rejected { .. }) => failed_submits += 1,
+            Err(e) => panic!("submit failed: {e}"),
+        }
     }
     server.drain();
     // Achieved throughput includes the post-submission drain: under
@@ -170,24 +243,107 @@ fn run_point(
     // Measured window = everything after the warmup ids.
     let measured: Vec<RequestResult> =
         report.results.iter().filter(|r| !warm_ids.contains(&r.id)).cloned().collect();
-    assert_eq!(measured.len(), n, "lost completions in the measured window");
+    let window_shed = report.shed - warm_shed;
+    // Every paced arrival is accounted exactly once: completed, failed at
+    // submit (queue full / rejected), or shed from the queue.
+    assert_eq!(
+        measured.len() + failed_submits + window_shed as usize,
+        n,
+        "lost completions in the measured window"
+    );
     let mut lat: Vec<f64> = measured.iter().map(|r| r.total_s).collect();
     lat.sort_by(|a, b| a.total_cmp(b));
     let slo_s = slo.as_secs_f64();
-    let per_model_miss = per_model(&measured, names.len(), slo_s)
+    let pct = |q: f64| if lat.is_empty() { 0.0 } else { percentile(&lat, q) };
+    // SLO accounting: a failed submission and a shed entry are misses —
+    // the client got nothing inside the deadline.
+    let measured_misses =
+        slo_miss_fraction(&measured, slo_s).unwrap_or(0.0) * measured.len() as f64;
+    let slo_miss = (measured_misses + failed_submits as f64 + window_shed as f64) / n as f64;
+    let per_model_rows = per_model(&measured, names.len(), slo_s)
         .into_iter()
+        .zip(&report.per_model)
         .zip(&names)
-        .map(|(mm, name)| ((*name).to_string(), mm.slo_miss.unwrap_or(0.0)))
+        .map(|((mm, rep), name)| {
+            ((*name).to_string(), mm.slo_miss.unwrap_or(0.0), rep.shed, rep.rejected, rep.degraded)
+        })
         .collect();
     Point {
         offered_rps,
-        achieved_rps: n as f64 / served_wall,
-        p50_s: percentile(&lat, 50.0),
-        p95_s: percentile(&lat, 95.0),
-        p99_s: percentile(&lat, 99.0),
-        slo_miss: slo_miss_fraction(&measured, slo_s).unwrap_or(0.0),
-        per_model_miss,
+        achieved_rps: measured.len() as f64 / served_wall,
+        goodput_rps: goodput(&measured, slo_s, served_wall),
+        p50_s: pct(50.0),
+        p95_s: pct(95.0),
+        p99_s: pct(99.0),
+        slo_miss,
+        failed_submits,
+        shed: window_shed,
+        rejected: report.rejected,
+        degraded: report.degraded,
+        per_model: per_model_rows,
         spawned,
+    }
+}
+
+fn emit_point(
+    json: &mut JsonReport,
+    mix: &Mix,
+    frac: f64,
+    defended: bool,
+    slo: Duration,
+    p: &Point,
+) {
+    println!(
+        "{frac:.2}x{}\t{:.0}\t{:.0}\t{:.0}\t{:.3}\t{:.3}\t{:.3}\t{:.3}\t{}/{}/{}/{}\t{}",
+        if defended { "" } else { " (undefended)" },
+        p.offered_rps,
+        p.achieved_rps,
+        p.goodput_rps,
+        p.p50_s * 1e3,
+        p.p95_s * 1e3,
+        p.p99_s * 1e3,
+        p.slo_miss,
+        p.shed,
+        p.rejected,
+        p.degraded,
+        p.failed_submits,
+        p.spawned
+    );
+    for (name, miss, shed, rejected, degraded) in &p.per_model {
+        println!(
+            "  model {name}: slo_miss {miss:.3}, \
+             shed/rejected/degraded {shed}/{rejected}/{degraded}"
+        );
+    }
+    json.row(&[
+        ("mix", mix.label.into()),
+        ("load_fraction", frac.into()),
+        ("defended", usize::from(defended).into()),
+        ("offered_rps", p.offered_rps.into()),
+        ("achieved_rps", p.achieved_rps.into()),
+        ("goodput_rps", p.goodput_rps.into()),
+        ("p50_s", p.p50_s.into()),
+        ("p95_s", p.p95_s.into()),
+        ("p99_s", p.p99_s.into()),
+        ("slo_miss", p.slo_miss.into()),
+        ("slo_s", slo.as_secs_f64().into()),
+        ("failed_submits", p.failed_submits.into()),
+        ("shed", (p.shed as usize).into()),
+        ("rejected", (p.rejected as usize).into()),
+        ("degraded", (p.degraded as usize).into()),
+        ("spawns", p.spawned.into()),
+    ]);
+    for (name, miss, shed, rejected, degraded) in &p.per_model {
+        json.row(&[
+            ("mix", mix.label.into()),
+            ("load_fraction", frac.into()),
+            ("defended", usize::from(defended).into()),
+            ("model", name.as_str().into()),
+            ("slo_miss", (*miss).into()),
+            ("shed", (*shed as usize).into()),
+            ("rejected", (*rejected as usize).into()),
+            ("degraded", (*degraded as usize).into()),
+        ]);
     }
 }
 
@@ -200,19 +356,34 @@ fn main() {
     let cores = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1);
 
     let mixes = vec![
-        Mix { label: "1-model-nmg", models: vec![("nmg", NMG, 2, 1)], policy: SchedPolicy::Fifo },
+        Mix {
+            label: "1-model-nmg",
+            models: vec![("nmg", NMG, 2, 1)],
+            policy: SchedPolicy::Fifo,
+            arrivals: Arrivals::Poisson,
+            degrade: None,
+        },
         Mix {
             label: "2-model-dense+nmg",
             models: vec![("dense", FfnMode::NativeDense, 1, 1), ("nmg", NMG, 1, 3)],
             policy: SchedPolicy::Wdrr,
+            arrivals: Arrivals::Poisson,
+            degrade: Some(("dense", "nmg")),
+        },
+        Mix {
+            label: "2-model-bursty-mmpp",
+            models: vec![("dense", FfnMode::NativeDense, 1, 1), ("nmg", NMG, 1, 3)],
+            policy: SchedPolicy::Wdrr,
+            arrivals: Arrivals::Mmpp,
+            degrade: Some(("dense", "nmg")),
         },
     ];
     let load_fractions: Vec<f64> = if smoke {
         vec![0.2]
     } else if full {
-        vec![0.25, 0.5, 0.75, 1.0, 1.25, 1.5]
+        vec![0.25, 0.5, 0.75, 1.0, 1.25, 1.5, 2.0, 3.0]
     } else {
-        vec![0.25, 0.5, 1.0, 1.5]
+        vec![0.25, 0.5, 1.0, 1.5, 2.5]
     };
     let n_requests = if smoke {
         64
@@ -222,9 +393,10 @@ fn main() {
         256
     };
     let calib_requests = if smoke { 64 } else { 128 };
+    let overload_frac = 6.0;
 
     println!(
-        "# Open-loop Poisson arrivals: artifacts `{tag}`, {n_requests} requests/point, \
+        "# Open-loop arrivals: artifacts `{tag}`, {n_requests} requests/point, \
          {cores} cores (smoke={smoke}, full={full})"
     );
     let mut json = JsonReport::new("serving_arrivals");
@@ -241,43 +413,18 @@ fn main() {
             capacity,
             slo.as_secs_f64() * 1e3
         );
-        println!("load\toffered_rps\tachieved_rps\tp50_ms\tp95_ms\tp99_ms\tslo_miss\tspawns");
+        println!(
+            "load\toffered_rps\tachieved_rps\tgoodput_rps\tp50_ms\tp95_ms\tp99_ms\tslo_miss\
+             \tshed/rej/degr/failed\tspawns"
+        );
         for (pi, &frac) in load_fractions.iter().enumerate() {
             let offered = (capacity * frac).max(1.0);
-            let p = run_point(&rt, tag, mix, offered, n_requests, slo, 900 + pi as u64);
-            println!(
-                "{frac:.2}x\t{:.0}\t{:.0}\t{:.3}\t{:.3}\t{:.3}\t{:.3}\t{}",
-                p.offered_rps,
-                p.achieved_rps,
-                p.p50_s * 1e3,
-                p.p95_s * 1e3,
-                p.p99_s * 1e3,
-                p.slo_miss,
-                p.spawned
-            );
-            for (name, miss) in &p.per_model_miss {
-                println!("  model {name}: slo_miss {miss:.3}");
-            }
-            json.row(&[
-                ("mix", mix.label.into()),
-                ("load_fraction", frac.into()),
-                ("offered_rps", p.offered_rps.into()),
-                ("achieved_rps", p.achieved_rps.into()),
-                ("p50_s", p.p50_s.into()),
-                ("p95_s", p.p95_s.into()),
-                ("p99_s", p.p99_s.into()),
-                ("slo_miss", p.slo_miss.into()),
-                ("slo_s", slo.as_secs_f64().into()),
-                ("spawns", p.spawned.into()),
-            ]);
-            for (name, miss) in &p.per_model_miss {
-                json.row(&[
-                    ("mix", mix.label.into()),
-                    ("load_fraction", frac.into()),
-                    ("model", name.as_str().into()),
-                    ("slo_miss", (*miss).into()),
-                ]);
-            }
+            // The sweep runs defended: past saturation, goodput must
+            // plateau as admission/degrade/shed absorb the excess.
+            let defended = !smoke;
+            let p =
+                run_point(&rt, tag, mix, offered, n_requests, slo, 900 + pi as u64, defended);
+            emit_point(&mut json, mix, frac, defended, slo, &p);
             if smoke {
                 assert_eq!(
                     p.spawned, 0,
@@ -294,6 +441,34 @@ fn main() {
                 );
             }
         }
+        // One overload point at ~6x capacity: defended, so goodput holds a
+        // floor instead of collapsing. In the sweep modes, pair it with an
+        // undefended contrast point at the same load.
+        let offered = (capacity * overload_frac).max(1.0);
+        let p = run_point(&rt, tag, mix, offered, n_requests, slo, 990, true);
+        emit_point(&mut json, mix, overload_frac, true, slo, &p);
+        if smoke {
+            assert_eq!(
+                p.spawned, 0,
+                "overload must not spawn threads (mix {})",
+                mix.label
+            );
+            assert!(
+                p.goodput_rps >= 0.05 * capacity,
+                "defended goodput {:.0} collapsed below 5% of capacity {:.0} (mix {})",
+                p.goodput_rps,
+                capacity,
+                mix.label
+            );
+            assert!(
+                p.shed + p.rejected + p.degraded > 0,
+                "overload at {overload_frac}x fired no shed/reject/degrade (mix {})",
+                mix.label
+            );
+        } else {
+            let u = run_point(&rt, tag, mix, offered, n_requests, slo, 990, false);
+            emit_point(&mut json, mix, overload_frac, false, slo, &u);
+        }
     }
 
     match json.write() {
@@ -301,10 +476,14 @@ fn main() {
         Err(e) => eprintln!("failed to write bench json: {e}"),
     }
     if smoke {
-        println!("smoke OK: spawn-free open-loop serving, sane SLO-miss at trivial load");
+        println!(
+            "smoke OK: spawn-free open-loop serving, sane SLO-miss at trivial load, \
+             goodput floor held at {overload_frac}x overload"
+        );
     }
     println!(
-        "\n(expect slo_miss ~0 below capacity and climbing past 1.0x offered load; \
-         the 2-model mix shares workers under weighted deficit round-robin)"
+        "\n(expect defended goodput to plateau near capacity past 1.0x offered load while \
+         undefended p99 collapses; the 2-model mixes degrade dense -> nmg under pressure \
+         and the mmpp mix arrives in bursts)"
     );
 }

@@ -1,33 +1,64 @@
 //! The concurrent serving front-end: model registry, pluggable scheduler,
-//! shared worker pool.
+//! shared worker pool, continuous batching with admission control and
+//! load shedding.
 //!
 //! Topology (all threads live on one [`WorkerPool`]):
 //!
 //! ```text
-//! submit_to(model, ..) --bounded channel--> [batcher] --batch channel--> [worker 0..W)
-//!   (backpressure: send blocks    |  drives a Scheduler:        each worker owns one
-//!    when queue_cap is reached;   |  per-model forming queues,  Engine replica of
-//!    per-model queue gauges)      |  FIFO-across-models or      EVERY model (weights
-//!                                 |  weighted deficit RR,       Arc-shared per model),
-//!                                 |  max_wait deadline batching |  executes whichever
-//!                                 |                             |  model's batch arrives
+//! submit_to(model, ..) ---> [admission control] --bounded channel--> [ingester]
+//!   (EWMA service-time     |  predicted wait > SLO:   |  feeds the shared
+//!    estimate per model;   |  degrade to the n:m:g    |  scheduler queues,
+//!    try_submit_to never   |  variant, else Rejected) |  bounded by forming_cap
+//!    blocks: QueueFull)                               v
+//!                                        +------ Mutex<Scheduler> ------+
+//!                                        |  per-model forming queues,   |
+//!                                        |  FIFO or weighted deficit RR |
+//!                                        +---^----------------------^---+
+//!                                            |                      |
+//!                                      [worker 0]    ...      [worker W-1]
+//!                                 each worker PULLS its next batch the moment
+//!                                 it frees up (continuous batching); sheds
+//!                                 expired entries first, then executes on its
+//!                                 own Engine replica of EVERY model
 //! ```
 //!
 //! Guarantees:
 //!
-//! * **Backpressure** — at most `queue_cap` requests are queued ahead of the
-//!   batcher (global across models); further `submit` calls block. The
-//!   scheduler's per-model forming queues stay small because the batcher
-//!   dispatches every dispatchable batch before ingesting the next arrival.
-//! * **Deadline batching** — per model: a full batch (that model's artifact
-//!   batch size) dispatches immediately; otherwise a batch dispatches the
-//!   moment its oldest request has waited `max_wait`. Deadline-expired
-//!   batches bypass the weighted-scheduling deficit, so `max_wait` is a
-//!   latency promise no weight assignment can starve.
+//! * **Continuous batching** — there is no formed-batch channel: a batch is
+//!   formed at the instant a worker frees up, from everything queued at
+//!   that moment. A slow batch occupies exactly one worker; the queues keep
+//!   draining through the other workers, so head-of-line blocking is
+//!   bounded by one batch per worker rather than a pipeline of pre-formed
+//!   batches.
+//! * **Backpressure** — at most `queue_cap` requests are queued ahead of
+//!   the ingester (global across models); further `submit` calls block
+//!   (`try_submit` returns [`SubmitError::QueueFull`] instead). The
+//!   scheduler's forming queues are bounded by `max(queue_cap, max model
+//!   batch)`: the ingester parks until a dispatch or shed frees space, so
+//!   total in-flight admissions stay bounded end to end.
+//! * **Admission control** (opt-in, `ServeConfig::admission`) — a
+//!   per-model EWMA of observed per-request service time predicts each
+//!   submission's queue-plus-service delay. Past the SLO the server
+//!   degrades the request to the model's registered sparse variant
+//!   ([`ModelRegistry::set_degrade`]) when that variant's own prediction
+//!   fits, and otherwise rejects with [`SubmitError::Rejected`] — shifting
+//!   work the queue cannot absorb to the cheap n:m:g weights instead of
+//!   letting every queued request go late.
+//! * **Load shedding** (opt-in, `ServeConfig::shed`) — before forming a
+//!   batch, a worker drops queue entries that have already outlived the
+//!   SLO: executing them would spend compute on guaranteed misses. Sheds,
+//!   rejections and degrades are first-class outcomes in [`ServeReport`]
+//!   (per model and total), and `goodput_rps` counts only in-SLO
+//!   completions — the number that must plateau, not collapse, under
+//!   overload.
+//! * **Deadline batching** — per model: a full batch (that model's
+//!   artifact batch size) dispatches immediately; otherwise a batch
+//!   dispatches the moment its oldest request has waited `max_wait`.
+//!   Deadline-expired batches bypass the weighted-scheduling deficit, so
+//!   `max_wait` is a latency promise no weight assignment can starve.
 //! * **Weighted sharing** — under saturation the WDRR policy serves models
 //!   proportionally to their registry weights; the FIFO policy serves the
-//!   globally-oldest request first and, with a single registered model,
-//!   reproduces the pre-registry server's batch formation exactly.
+//!   globally-oldest request first.
 //! * **Shared weights** — each worker holds an [`Engine::replicate`] clone
 //!   of every registered model: one `Arc`-held parameter set per model,
 //!   n:m:g conversion done once per model, zero weight bytes copied per
@@ -37,11 +68,12 @@
 //!   oversubscribes the host regardless of how many models it serves.
 //! * **De-contended completion** — each worker records results in its own
 //!   buffer; snapshots merge by cloning, `finish` drains the buffers
-//!   without cloning. The only cross-worker critical section per batch is
-//!   a counter bump under the completion condvar's mutex.
+//!   without cloning. The scheduler mutex is held only for queue surgery
+//!   (shed/form/enqueue), never across a forward.
 //! * **Metrics** — per-request records carry model and batch ids;
-//!   [`ServeReport`] summarizes p50/p95/p99 latency, SLO-miss fractions
-//!   and queue high-water marks globally and per model.
+//!   [`ServeReport`] summarizes p50/p95/p99 latency, SLO-miss fractions,
+//!   goodput, shed/reject/degrade counts and queue high-water marks
+//!   globally and per model.
 
 use std::fmt;
 use std::time::{Duration, Instant};
@@ -52,7 +84,7 @@ use crate::util::sync::{Arc, Condvar, Mutex};
 use anyhow::{anyhow, bail, Result};
 
 use crate::runtime::ArtifactRuntime;
-use crate::util::channel::{self, Received};
+use crate::util::channel::{self, TrySendError};
 use crate::util::threadpool::{self, WorkerPool};
 use crate::util::timer::TimeBreakdown;
 
@@ -62,6 +94,11 @@ use super::registry::ModelRegistry;
 use super::scheduler::{self, Decision, SchedModel, SchedPolicy, Scheduler};
 use super::serve::{canonical_tokens, pad_batch_tokens, Request, RequestResult};
 
+/// EWMA smoothing for the per-model service-time estimate: each new
+/// observation contributes 20%, so the estimate tracks drift in a few
+/// dozen batches without whipsawing on one outlier.
+const SVC_EWMA_ALPHA: f64 = 0.2;
+
 /// Configuration for [`ConcurrentServer`].
 #[derive(Debug, Clone, Copy)]
 pub struct ServeConfig {
@@ -70,8 +107,8 @@ pub struct ServeConfig {
     /// there, each model's registered replica count contributes workers.
     pub replicas: usize,
     /// Submission queue bound, global across models; `submit` blocks past
-    /// this depth. Per-model forming queues inside the scheduler are not
-    /// separately bounded — they hold less than one batch per model.
+    /// this depth. The scheduler's forming queues are additionally bounded
+    /// by `max(queue_cap, largest model batch)`.
     pub queue_cap: usize,
     /// Max time a request may wait for batch-mates before its (possibly
     /// partial) batch is dispatched.
@@ -79,8 +116,21 @@ pub struct ServeConfig {
     /// Batch-formation policy across models.
     pub policy: SchedPolicy,
     /// End-to-end latency objective judged against each request's
-    /// `total_s`; reported as SLO-miss fractions, never enforced.
+    /// `total_s`. Always reported as SLO-miss fractions and goodput; with
+    /// `admission`/`shed` enabled it also drives reject/degrade/shed
+    /// decisions.
     pub slo: Duration,
+    /// Enable admission control: predict queue wait at submit time from
+    /// the per-model service-time EWMA, and degrade (or reject) requests
+    /// whose prediction blows the SLO. Off by default: an unloaded server
+    /// admits everything either way, and tests exercising raw queue
+    /// mechanics want no admission interference.
+    pub admission: bool,
+    /// Enable load shedding: drop queue entries that have already
+    /// outlived the SLO before forming batches. Off by default — with
+    /// `max_wait` larger than `slo`, shedding would drop lone requests
+    /// that deadline batching is deliberately holding.
+    pub shed: bool,
 }
 
 impl Default for ServeConfig {
@@ -91,17 +141,32 @@ impl Default for ServeConfig {
             max_wait: Duration::from_millis(2),
             policy: SchedPolicy::Fifo,
             slo: Duration::from_millis(25),
+            admission: false,
+            shed: false,
         }
     }
 }
 
-/// Typed rejection from [`ConcurrentServer::submit_to`].
+/// Typed rejection from the submit paths. Non-exhaustive: overload
+/// handling grows outcomes (`Rejected`, `QueueFull`), and downstream
+/// matches must not break when it does.
 #[derive(Debug, Clone, PartialEq, Eq)]
+#[non_exhaustive]
 pub enum SubmitError {
     /// The model name is not in the server's registry.
     UnknownModel(String),
     /// The server no longer accepts requests.
     ShutDown,
+    /// Admission control predicted `predicted` of queue-plus-service
+    /// delay — past the SLO — and no registered degrade target could
+    /// absorb the request either.
+    Rejected {
+        /// The predicted end-to-end delay that triggered the rejection.
+        predicted: Duration,
+    },
+    /// Non-blocking submit ([`ConcurrentServer::try_submit_to`]) found
+    /// the submission queue at capacity.
+    QueueFull,
 }
 
 impl fmt::Display for SubmitError {
@@ -109,6 +174,11 @@ impl fmt::Display for SubmitError {
         match self {
             SubmitError::UnknownModel(name) => write!(f, "unknown model {name:?}"),
             SubmitError::ShutDown => write!(f, "server is shut down"),
+            SubmitError::Rejected { predicted } => {
+                let ms = predicted.as_secs_f64() * 1e3;
+                write!(f, "rejected: predicted wait {ms:.1}ms past SLO")
+            }
+            SubmitError::QueueFull => write!(f, "submission queue full"),
         }
     }
 }
@@ -166,7 +236,7 @@ impl Default for CompletionLatch {
     }
 }
 
-/// A formed batch travelling from the batcher to a worker.
+/// A batch a worker formed for itself, about to execute.
 struct Batch {
     id: u64,
     model: usize,
@@ -174,20 +244,53 @@ struct Batch {
     requests: Vec<Request>,
 }
 
-/// State shared by submitters, the batcher and the workers.
+/// The scheduler plus the ingest state it is driven under. One mutex:
+/// every queue decision (enqueue, shed, form) is a pure function of this
+/// state and a timestamp.
+struct SchedState {
+    sched: Box<dyn Scheduler>,
+    /// False once the submission queue has closed and drained: pollers
+    /// then dispatch partial batches immediately instead of waiting for
+    /// batch-mates that can no longer arrive.
+    open: bool,
+}
+
+/// State shared by submitters, the ingester and the workers.
 struct Shared {
+    /// The forming queues; workers pull batches out of it directly.
+    sched: Mutex<SchedState>,
+    /// Signals queued work (or closure) to parked workers.
+    work_cv: Condvar,
+    /// Signals freed forming-queue space (dispatch or shed) to the
+    /// ingester.
+    space_cv: Condvar,
+    /// Forming-queue bound the ingester enforces.
+    forming_cap: usize,
     /// One completion buffer per worker. Each worker appends only to its
     /// own slot, so the result-recording hot path never contends with other
     /// workers; snapshots merge the buffers by cloning, `finish` drains
     /// them.
     worker_results: Vec<Mutex<Vec<RequestResult>>>,
-    /// Batch/batcher failures (rare path; a plain shared lock is fine).
+    /// Batch/worker failures (rare path; a plain shared lock is fine).
     errors: Mutex<Vec<String>>,
-    /// Requests accounted for (completed or failed).
+    /// Requests accounted for (completed, failed, or shed).
     latch: CompletionLatch,
     gauge: QueueGauge,
-    /// Per-model queue gauges, indexed by registry order.
+    /// Per-model queue gauges, indexed by registry order. Admission
+    /// control reads these as the live backlog estimate.
     model_gauges: Vec<QueueGauge>,
+    /// Per-model EWMA of observed per-request service time, stored as
+    /// `f64::to_bits` (0 = no observation yet, which predicts zero wait:
+    /// everything is admitted until the first completion calibrates it).
+    svc_ewma: Vec<AtomicU64>,
+    /// Per-model count of queue entries dropped past their SLO.
+    shed: Vec<AtomicU64>,
+    /// Per-model count of submissions rejected by admission control
+    /// (indexed by the model the client asked for).
+    rejected: Vec<AtomicU64>,
+    /// Per-model count of submissions degraded to the sparse variant
+    /// (indexed by the model the client asked for, not the target).
+    degraded: Vec<AtomicU64>,
     batches: AtomicU64,
 }
 
@@ -197,16 +300,33 @@ impl Shared {
         self.latch.account(n);
     }
 
-    /// Record a failure covering `n` requests.
-    fn fail(&self, n: u64, msg: String) {
-        self.errors.lock().unwrap().push(msg);
-        self.account(n);
-    }
-
-    /// A request left the queues (dispatched or failed).
+    /// A request left the queues (dispatched, shed, or failed).
     fn exit_queues(&self, model: usize, n: usize) {
         self.gauge.exit(n);
         self.model_gauges[model].exit(n);
+    }
+
+    /// Current service-time estimate for `model`, seconds per request
+    /// (0.0 until the first batch of that model completes).
+    fn svc_estimate(&self, model: usize) -> f64 {
+        f64::from_bits(self.svc_ewma[model].load(Ordering::SeqCst))
+    }
+
+    /// Fold one observed per-request service time into `model`'s EWMA.
+    fn observe_svc(&self, model: usize, obs: f64) {
+        let cell = &self.svc_ewma[model];
+        let mut cur = cell.load(Ordering::SeqCst);
+        loop {
+            let new = if cur == 0 {
+                obs
+            } else {
+                (1.0 - SVC_EWMA_ALPHA) * f64::from_bits(cur) + SVC_EWMA_ALPHA * obs
+            };
+            match cell.compare_exchange(cur, new.to_bits(), Ordering::SeqCst, Ordering::SeqCst) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
     }
 
     /// Merge all per-worker buffers into one id-ordered result vector,
@@ -241,6 +361,13 @@ pub struct ModelReport {
     pub metrics: ModelMetrics,
     /// Deepest this model's share of the submission queue has been.
     pub queue_high_water: usize,
+    /// Queue entries for this model dropped past their SLO.
+    pub shed: u64,
+    /// Submissions naming this model rejected by admission control.
+    pub rejected: u64,
+    /// Submissions naming this model degraded to its sparse variant
+    /// (their completions are accounted under the target model).
+    pub degraded: u64,
 }
 
 /// Final report returned by [`ConcurrentServer::finish`].
@@ -260,8 +387,17 @@ pub struct ServeReport {
     pub wall_s: f64,
     /// Requests per second of wall-clock server lifetime.
     pub wall_rps: f64,
+    /// In-SLO completions per second of wall-clock server lifetime: the
+    /// overload figure of merit (see [`metrics::goodput`]).
+    pub goodput_rps: f64,
     /// Requests per second of (batch-deduplicated) compute time.
     pub compute_rps: Option<f64>,
+    /// Queue entries dropped past their SLO, all models.
+    pub shed: u64,
+    /// Submissions rejected by admission control, all models.
+    pub rejected: u64,
+    /// Submissions degraded to a sparse variant, all models.
+    pub degraded: u64,
     /// Deepest the submission queue has been (all models).
     pub queue_high_water: usize,
     /// Per-worker runtime timing views (`execute`/`transfer`/`compile`
@@ -273,7 +409,10 @@ pub struct ServeReport {
 pub struct ConcurrentServer {
     names: Vec<String>,
     dims: Vec<EncoderDims>,
+    /// Admission-control degrade target per model (registry order).
+    degrade_idx: Vec<Option<usize>>,
     slo: Duration,
+    admission: bool,
     submit_tx: Option<channel::Sender<Request>>,
     pool: Option<WorkerPool>,
     shared: Arc<Shared>,
@@ -304,10 +443,10 @@ impl ConcurrentServer {
     }
 
     /// Start serving every model in `registry` behind one front-end: one
-    /// scheduler (per `cfg.policy`), one batcher thread, and a shared pool
-    /// of `registry.total_replicas()` workers, each holding a replica of
-    /// every model so it can execute whichever model's batch the scheduler
-    /// forms next.
+    /// shared scheduler (per `cfg.policy`), one ingester thread feeding it,
+    /// and a pool of `registry.total_replicas()` workers that pull batches
+    /// from it continuously, each holding a replica of every model so it
+    /// can execute whichever model's batch it forms next.
     pub fn start_registry(registry: ModelRegistry, cfg: ServeConfig) -> Result<Self> {
         if registry.is_empty() {
             bail!("model registry has no models");
@@ -315,6 +454,16 @@ impl ConcurrentServer {
         let entries = registry.into_entries();
         let names: Vec<String> = entries.iter().map(|m| m.name.clone()).collect();
         let dims: Vec<EncoderDims> = entries.iter().map(|m| m.engine.dims.clone()).collect();
+        let mut degrade_idx = Vec::with_capacity(entries.len());
+        for m in &entries {
+            degrade_idx.push(match &m.degrade_to {
+                None => None,
+                Some(t) => match names.iter().position(|n| n == t) {
+                    Some(i) => Some(i),
+                    None => bail!("model {:?}: degrade target {t:?} is not registered", m.name),
+                },
+            });
+        }
         let rt = Arc::clone(entries[0].engine.runtime());
         // Per-worker timing views (and the compile-once guarantee) are read
         // from one runtime; engines built over separate runtimes would
@@ -333,7 +482,12 @@ impl ConcurrentServer {
             .iter()
             .map(|m| SchedModel { batch: m.engine.dims.batch, weight: m.weight })
             .collect();
-        let mut sched = scheduler::make(cfg.policy, sched_models, cfg.max_wait);
+        let sched = scheduler::make(cfg.policy, sched_models, cfg.max_wait);
+        // The forming queues must hold at least one full batch of the
+        // largest model or full batches could never form under a tiny
+        // queue_cap; beyond that, queue_cap bounds total in-flight work.
+        let max_batch = entries.iter().map(|m| m.engine.dims.batch).max().unwrap_or(1);
+        let forming_cap = cfg.queue_cap.max(1).max(max_batch);
 
         // One replica set per worker: every model, Arc-shared weights.
         let worker_engines: Vec<Vec<Engine>> = (0..workers)
@@ -341,138 +495,126 @@ impl ConcurrentServer {
             .collect();
 
         let shared = Arc::new(Shared {
+            sched: Mutex::new(SchedState { sched, open: true }),
+            work_cv: Condvar::new(),
+            space_cv: Condvar::new(),
+            forming_cap,
             worker_results: (0..workers).map(|_| Mutex::new(Vec::new())).collect(),
             errors: Mutex::new(Vec::new()),
             latch: CompletionLatch::new(),
             gauge: QueueGauge::new(),
             model_gauges: (0..names.len()).map(|_| QueueGauge::new()).collect(),
+            svc_ewma: (0..names.len()).map(|_| AtomicU64::new(0)).collect(),
+            shed: (0..names.len()).map(|_| AtomicU64::new(0)).collect(),
+            rejected: (0..names.len()).map(|_| AtomicU64::new(0)).collect(),
+            degraded: (0..names.len()).map(|_| AtomicU64::new(0)).collect(),
             batches: AtomicU64::new(0),
         });
 
         let (submit_tx, submit_rx) = channel::bounded::<Request>(cfg.queue_cap.max(1));
-        let (batch_tx, batch_rx) = channel::bounded::<Batch>(workers * 2);
         let pool = WorkerPool::named("sten-serve", workers + 1);
 
-        // The batcher: drives the scheduler over the arrival stream.
+        // The ingester: moves arrivals from the submission channel into the
+        // scheduler's forming queues, parking when the queues are at
+        // forming_cap (a dispatch or shed frees space and signals space_cv
+        // — liveness holds because any nonempty queue dispatches within
+        // max_wait). On channel closure it flips `open` so pollers drain.
         {
             let shared = shared.clone();
             pool.execute(move || {
-                let mut open = true;
+                while let Some(r) = submit_rx.recv() {
+                    let mut st = shared.sched.lock().unwrap();
+                    while st.sched.pending() >= shared.forming_cap {
+                        st = shared.space_cv.wait(st).unwrap();
+                    }
+                    st.sched.enqueue(r);
+                    drop(st);
+                    shared.work_cv.notify_one();
+                }
+                shared.sched.lock().unwrap().open = false;
+                shared.work_cv.notify_all();
+            });
+        }
+
+        // The workers: continuous batching. Each worker, the moment it is
+        // free, sheds expired entries, asks the scheduler for a batch
+        // formed from everything queued *now*, and executes it on its own
+        // engine replicas — so a slow batch stalls one worker, never the
+        // queues.
+        let slo = cfg.slo;
+        let shed_enabled = cfg.shed;
+        for (worker_idx, mut engines) in worker_engines.into_iter().enumerate() {
+            let shared = shared.clone();
+            pool.execute(move || {
+                // Tag this worker thread so the shared runtime charges its
+                // artifact time to this worker's timing view.
+                crate::runtime::set_replica_id(Some(worker_idx as u64));
+                let mut st = shared.sched.lock().unwrap();
                 loop {
-                    match sched.poll(Instant::now(), open) {
+                    // Load shedding: entries older than the SLO are already
+                    // guaranteed misses — drop them before they cost a
+                    // batch slot. (checked_sub: very early in process life
+                    // Instant cannot go back by `slo`; nothing can have
+                    // expired then either.)
+                    if shed_enabled {
+                        if let Some(cutoff) = Instant::now().checked_sub(slo) {
+                            let dropped = st.sched.shed_expired(cutoff);
+                            if !dropped.is_empty() {
+                                for r in &dropped {
+                                    shared.exit_queues(r.model, 1);
+                                    shared.shed[r.model].fetch_add(1, Ordering::SeqCst);
+                                }
+                                shared.space_cv.notify_all();
+                                shared.account(dropped.len() as u64);
+                            }
+                        }
+                    }
+                    match st.sched.poll(Instant::now(), st.open) {
                         Decision::Dispatch(formed) => {
                             shared.exit_queues(formed.model, formed.requests.len());
                             shared.batches.fetch_add(1, Ordering::SeqCst);
+                            shared.space_cv.notify_all();
+                            drop(st);
                             let batch = Batch {
                                 id: formed.id,
                                 model: formed.model,
                                 formed: Instant::now(),
                                 requests: formed.requests,
                             };
-                            if let Err(channel::SendError(batch)) = batch_tx.send(batch) {
-                                // All workers are gone (e.g. panicked): fail
-                                // this batch, everything still queued, and
-                                // everything that arrives until the queue
-                                // closes, so drain() and finish() never hang
-                                // on requests nobody will execute.
-                                shared.fail(
-                                    batch.requests.len() as u64,
-                                    format!("batch {}: no workers left", batch.id),
-                                );
-                                let stranded = sched.take_all();
-                                if !stranded.is_empty() {
-                                    for r in &stranded {
-                                        shared.exit_queues(r.model, 1);
-                                    }
-                                    shared.fail(
-                                        stranded.len() as u64,
-                                        format!(
-                                            "{} pending requests: no workers left",
-                                            stranded.len()
-                                        ),
-                                    );
-                                }
-                                while let Some(r) = submit_rx.recv() {
-                                    shared.exit_queues(r.model, 1);
-                                    shared.fail(1, format!("request {}: no workers left", r.id));
-                                }
-                                break;
-                            }
+                            Self::execute_batch(&shared, &mut engines, worker_idx, batch);
+                            st = shared.sched.lock().unwrap();
                         }
-                        Decision::WaitUntil(deadline) => match submit_rx.recv_deadline(deadline) {
-                            Received::Item(r) => sched.enqueue(r),
-                            Received::TimedOut => {}
-                            Received::Closed => open = false,
-                        },
-                        Decision::WaitForArrival => match submit_rx.recv() {
-                            Some(r) => sched.enqueue(r),
-                            None => open = false,
-                        },
+                        Decision::WaitUntil(deadline) => {
+                            let now = Instant::now();
+                            if deadline <= now {
+                                // The deadline lapsed between the poll's
+                                // timestamp and now; re-poll dispatches it.
+                                continue;
+                            }
+                            let (guard, _) =
+                                shared.work_cv.wait_timeout(st, deadline - now).unwrap();
+                            st = guard;
+                        }
+                        Decision::WaitForArrival => {
+                            st = shared.work_cv.wait(st).unwrap();
+                        }
                         Decision::Idle => break,
                     }
                 }
-            });
-        }
-
-        // The workers: each holds one engine replica per model and executes
-        // whatever the scheduler dispatched, recording results in a private
-        // buffer so completion never contends.
-        for (worker_idx, mut engines) in worker_engines.into_iter().enumerate() {
-            let rx = batch_rx.clone();
-            let shared = shared.clone();
-            pool.execute(move || {
-                // Tag this worker thread so the shared runtime charges its
-                // artifact time to this worker's timing view.
-                crate::runtime::set_replica_id(Some(worker_idx as u64));
-                while let Some(batch) = rx.recv() {
-                    let model = batch.model;
-                    let tokens = pad_batch_tokens(&engines[model].dims, &batch.requests);
-                    let t = Instant::now();
-                    // A panicking forward must not kill the worker: the
-                    // batch's requests would never be accounted and drain()
-                    // would hang. Weights are immutable, so continuing with
-                    // this engine after an unwind is safe.
-                    let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
-                        || engines[model].forward(&tokens),
-                    ))
-                    .unwrap_or_else(|_| Err(anyhow!("engine forward panicked")));
-                    let compute_s = t.elapsed().as_secs_f64();
-                    let done = Instant::now();
-                    match outcome {
-                        Ok(_) => {
-                            let mut buf = shared.worker_results[worker_idx].lock().unwrap();
-                            for r in &batch.requests {
-                                buf.push(RequestResult {
-                                    id: r.id,
-                                    model,
-                                    batch_id: batch.id,
-                                    queue_s: batch
-                                        .formed
-                                        .saturating_duration_since(r.arrived)
-                                        .as_secs_f64(),
-                                    compute_s,
-                                    total_s: done
-                                        .saturating_duration_since(r.arrived)
-                                        .as_secs_f64(),
-                                    batch_size: batch.requests.len(),
-                                });
-                            }
-                        }
-                        Err(e) => {
-                            shared.errors.lock().unwrap().push(format!("batch {}: {e:#}", batch.id))
-                        }
-                    }
-                    shared.account(batch.requests.len() as u64);
-                }
+                drop(st);
+                // Wake sibling workers so they re-poll, see Idle and exit
+                // too instead of parking forever on work_cv.
+                shared.work_cv.notify_all();
                 crate::runtime::set_replica_id(None);
             });
         }
-        drop(batch_rx);
 
         Ok(ConcurrentServer {
             names,
             dims,
+            degrade_idx,
             slo: cfg.slo,
+            admission: cfg.admission,
             submit_tx: Some(submit_tx),
             pool: Some(pool),
             shared,
@@ -483,6 +625,47 @@ impl ConcurrentServer {
             started: Instant::now(),
             _kernel_users: threadpool::register_kernel_users(workers),
         })
+    }
+
+    /// Execute one formed batch on this worker's engine replicas and
+    /// record/account its results.
+    fn execute_batch(shared: &Shared, engines: &mut [Engine], worker_idx: usize, batch: Batch) {
+        let model = batch.model;
+        let t = Instant::now();
+        // A panicking forward (or pad) must not kill the worker: the
+        // batch's requests would never be accounted and drain() would
+        // hang. Weights are immutable, so continuing with this engine
+        // after an unwind is safe.
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let tokens = pad_batch_tokens(&engines[model].dims, &batch.requests);
+            engines[model].forward(&tokens)
+        }))
+        .unwrap_or_else(|_| Err(anyhow!("engine forward panicked")));
+        let compute_s = t.elapsed().as_secs_f64();
+        let done = Instant::now();
+        match outcome {
+            Ok(_) => {
+                // Calibrate admission control: observed service time per
+                // request of this batch.
+                shared.observe_svc(model, compute_s / batch.requests.len().max(1) as f64);
+                let mut buf = shared.worker_results[worker_idx].lock().unwrap();
+                for r in &batch.requests {
+                    buf.push(RequestResult {
+                        id: r.id,
+                        model,
+                        batch_id: batch.id,
+                        queue_s: batch.formed.saturating_duration_since(r.arrived).as_secs_f64(),
+                        compute_s,
+                        total_s: done.saturating_duration_since(r.arrived).as_secs_f64(),
+                        batch_size: batch.requests.len(),
+                    });
+                }
+            }
+            Err(e) => {
+                shared.errors.lock().unwrap().push(format!("batch {}: {e:#}", batch.id));
+            }
+        }
+        shared.account(batch.requests.len() as u64);
     }
 
     /// Registered model names, in registry order.
@@ -501,36 +684,115 @@ impl ConcurrentServer {
         &self.dims[model]
     }
 
+    /// Current admission-control service-time estimate for model `model`,
+    /// seconds per request (0.0 until its first batch completes).
+    pub fn service_estimate(&self, model: usize) -> f64 {
+        self.shared.svc_estimate(model)
+    }
+
+    /// Predicted queue-plus-service delay for a request submitted to
+    /// `model` right now: the backlog of every model weighted by its
+    /// service estimate, divided across the workers, plus one service
+    /// time of `model` itself. This is what admission control compares
+    /// against the SLO.
+    pub fn predicted_wait(&self, model: usize) -> Duration {
+        Duration::from_secs_f64(self.predicted_wait_s(model))
+    }
+
+    fn predicted_wait_s(&self, model: usize) -> f64 {
+        let backlog: f64 = (0..self.names.len())
+            .map(|m| self.shared.model_gauges[m].depth() as f64 * self.shared.svc_estimate(m))
+            .sum();
+        backlog / self.workers as f64 + self.shared.svc_estimate(model)
+    }
+
     /// Enqueue a request for the first registered model; blocks while the
     /// submission queue is at capacity. Returns the request id.
     pub fn submit(&self, tokens: &[i32]) -> Result<u64, SubmitError> {
-        self.submit_idx(0, tokens)
+        self.submit_inner(0, tokens, true)
     }
 
     /// Enqueue a request for the named model (tokens clamped/padded to that
     /// model's dims); blocks while the submission queue is at capacity.
-    /// Returns [`SubmitError::UnknownModel`] for unregistered names.
+    /// Returns [`SubmitError::UnknownModel`] for unregistered names, and —
+    /// with admission control on — [`SubmitError::Rejected`] when the
+    /// predicted wait blows the SLO and no degrade target can absorb it.
     pub fn submit_to(&self, model: &str, tokens: &[i32]) -> Result<u64, SubmitError> {
-        let idx = self
-            .names
-            .iter()
-            .position(|n| n == model)
-            .ok_or_else(|| SubmitError::UnknownModel(model.to_string()))?;
-        self.submit_idx(idx, tokens)
+        self.submit_inner(self.model_idx(model)?, tokens, true)
     }
 
-    fn submit_idx(&self, model: usize, tokens: &[i32]) -> Result<u64, SubmitError> {
-        let t = canonical_tokens(&self.dims[model], tokens);
+    /// Non-blocking [`Self::submit`]: a full submission queue returns
+    /// [`SubmitError::QueueFull`] immediately instead of parking the
+    /// caller. Open-loop load generators use this so saturation surfaces
+    /// as accountable failures rather than silently stalling the arrival
+    /// process (coordinated omission).
+    pub fn try_submit(&self, tokens: &[i32]) -> Result<u64, SubmitError> {
+        self.submit_inner(0, tokens, false)
+    }
+
+    /// Non-blocking [`Self::submit_to`]; see [`Self::try_submit`].
+    pub fn try_submit_to(&self, model: &str, tokens: &[i32]) -> Result<u64, SubmitError> {
+        self.submit_inner(self.model_idx(model)?, tokens, false)
+    }
+
+    fn model_idx(&self, model: &str) -> Result<usize, SubmitError> {
+        self.names
+            .iter()
+            .position(|n| n == model)
+            .ok_or_else(|| SubmitError::UnknownModel(model.to_string()))
+    }
+
+    fn submit_inner(
+        &self,
+        model: usize,
+        tokens: &[i32],
+        blocking: bool,
+    ) -> Result<u64, SubmitError> {
+        let mut target = model;
+        let mut degraded = false;
+        if self.admission {
+            let slo_s = self.slo.as_secs_f64();
+            let predicted = self.predicted_wait_s(model);
+            if predicted > slo_s {
+                // Try one degrade hop: the registered sparse variant, if
+                // its own prediction fits the SLO.
+                match self.degrade_idx[model] {
+                    Some(d) if self.predicted_wait_s(d) <= slo_s => {
+                        target = d;
+                        degraded = true;
+                    }
+                    _ => {
+                        self.shared.rejected[model].fetch_add(1, Ordering::SeqCst);
+                        return Err(SubmitError::Rejected {
+                            predicted: Duration::from_secs_f64(predicted),
+                        });
+                    }
+                }
+            }
+        }
+        let t = canonical_tokens(&self.dims[target], tokens);
         let id = self.next_id.fetch_add(1, Ordering::SeqCst);
         self.shared.gauge.enter();
-        self.shared.model_gauges[model].enter();
+        self.shared.model_gauges[target].enter();
         let Some(tx) = self.submit_tx.as_ref() else {
-            self.shared.exit_queues(model, 1);
+            self.shared.exit_queues(target, 1);
             return Err(SubmitError::ShutDown);
         };
-        if tx.send(Request { id, tokens: t, model, arrived: Instant::now() }).is_err() {
-            self.shared.exit_queues(model, 1);
-            return Err(SubmitError::ShutDown);
+        let req = Request { id, tokens: t, model: target, arrived: Instant::now() };
+        let sent: Result<(), SubmitError> = if blocking {
+            tx.send(req).map_err(|_| SubmitError::ShutDown)
+        } else {
+            tx.try_send(req).map_err(|e| match e {
+                TrySendError::Full(_) => SubmitError::QueueFull,
+                TrySendError::Closed(_) => SubmitError::ShutDown,
+            })
+        };
+        if let Err(e) = sent {
+            self.shared.exit_queues(target, 1);
+            return Err(e);
+        }
+        if degraded {
+            self.shared.degraded[model].fetch_add(1, Ordering::SeqCst);
         }
         self.submitted.fetch_add(1, Ordering::SeqCst);
         Ok(id)
@@ -557,7 +819,8 @@ impl ConcurrentServer {
         self.shared.merged_results()
     }
 
-    /// Block until every request submitted so far has completed or failed.
+    /// Block until every request submitted so far has completed, failed,
+    /// or been shed.
     pub fn drain(&self) {
         let target = self.submitted.load(Ordering::SeqCst);
         self.shared.latch.wait(target);
@@ -584,6 +847,14 @@ impl ConcurrentServer {
         let compute_rps = metrics::compute_throughput(&results);
         let slo_s = self.slo.as_secs_f64();
         let slo_miss = metrics::slo_miss_fraction(&results, slo_s);
+        let counts = |v: &[AtomicU64]| -> Vec<u64> {
+            v.iter().map(|c| c.load(Ordering::SeqCst)).collect()
+        };
+        let (shed, rejected, degraded) = (
+            counts(&self.shared.shed),
+            counts(&self.shared.rejected),
+            counts(&self.shared.degraded),
+        );
         let per_model = metrics::per_model(&results, self.names.len(), slo_s)
             .into_iter()
             .enumerate()
@@ -591,18 +862,25 @@ impl ConcurrentServer {
                 name: self.names[m].clone(),
                 metrics: rollup,
                 queue_high_water: self.shared.model_gauges[m].high_water(),
+                shed: shed[m],
+                rejected: rejected[m],
+                degraded: degraded[m],
             })
             .collect();
         let replica_timing =
             (0..self.workers as u64).map(|r| self.rt.timing_for_replica(r)).collect();
         Ok(ServeReport {
             wall_rps: results.len() as f64 / wall_s.max(1e-12),
+            goodput_rps: metrics::goodput(&results, slo_s, wall_s),
             latency,
             slo_miss,
             per_model,
             batches: self.shared.batches.load(Ordering::SeqCst),
             wall_s,
             compute_rps,
+            shed: shed.iter().sum(),
+            rejected: rejected.iter().sum(),
+            degraded: degraded.iter().sum(),
             queue_high_water: self.shared.gauge.high_water(),
             replica_timing,
             results,

@@ -91,6 +91,15 @@ pub fn per_model(results: &[RequestResult], n_models: usize, slo_s: f64) -> Vec<
         .collect()
 }
 
+/// Goodput: completions that landed *within* the SLO, per second of wall
+/// time. Under overload this is the number that must plateau rather than
+/// collapse — total throughput can stay high while every completion is
+/// late, and SLO-miss fractions hide how much useful work still finishes.
+pub fn goodput(results: &[RequestResult], slo_s: f64, wall_s: f64) -> f64 {
+    let in_slo = results.iter().filter(|r| r.total_s <= slo_s).count();
+    in_slo as f64 / wall_s.max(1e-12)
+}
+
 /// Requests per second of compute: each batch's `compute_s` is counted once
 /// (keyed by `batch_id` — batches with bit-identical compute times used to
 /// be merged, undercounting total compute).
@@ -128,9 +137,22 @@ impl QueueGauge {
         self.high_water.fetch_max(d, Ordering::SeqCst);
     }
 
-    /// `n` requests left the queue (were placed into a batch).
+    /// `n` requests left the queue (were placed into a batch, shed, or
+    /// rolled back after a failed submit). Saturating: a double-counted
+    /// exit must not wrap the gauge to `usize::MAX` and freeze every
+    /// depth-based decision (admission control reads this gauge). Debug
+    /// builds assert instead, so the double count is found, not papered
+    /// over.
     pub fn exit(&self, n: usize) {
-        self.depth.fetch_sub(n, Ordering::SeqCst);
+        let prev = loop {
+            let cur = self.depth.load(Ordering::SeqCst);
+            let next = cur.saturating_sub(n);
+            match self.depth.compare_exchange(cur, next, Ordering::SeqCst, Ordering::SeqCst) {
+                Ok(prev) => break prev,
+                Err(_) => continue,
+            }
+        };
+        debug_assert!(prev >= n, "queue gauge under-flow: exit({n}) at depth {prev}");
     }
 
     /// Current depth.
@@ -241,5 +263,39 @@ mod tests {
         g.exit(2);
         assert_eq!(g.depth(), 1);
         assert_eq!(g.high_water(), 3);
+    }
+
+    /// Regression: `exit` used to be an unguarded `fetch_sub`, so a
+    /// double-counted exit (a request both shed and batch-exited) wrapped
+    /// the depth gauge to `usize::MAX`. Release builds must saturate at 0.
+    #[test]
+    #[cfg(not(debug_assertions))]
+    fn gauge_over_exit_saturates_instead_of_wrapping() {
+        let g = QueueGauge::new();
+        g.enter();
+        g.exit(3);
+        assert_eq!(g.depth(), 0, "over-exit must saturate, not wrap");
+        g.enter();
+        assert_eq!(g.depth(), 1, "gauge must stay usable after an over-exit");
+    }
+
+    /// Debug builds surface the same double count as an assertion so the
+    /// bug is found rather than silently clamped.
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "queue gauge under-flow")]
+    fn gauge_over_exit_asserts_in_debug() {
+        let g = QueueGauge::new();
+        g.enter();
+        g.exit(3);
+    }
+
+    #[test]
+    fn goodput_counts_only_in_slo_completions() {
+        let results =
+            vec![result(0.010, 0, 0.001), result(0.020, 0, 0.001), result(0.050, 1, 0.001)];
+        // SLO 20ms: two in-SLO completions over 4s of wall time.
+        assert!((goodput(&results, 0.020, 4.0) - 0.5).abs() < 1e-12);
+        assert_eq!(goodput(&[], 0.020, 4.0), 0.0);
     }
 }

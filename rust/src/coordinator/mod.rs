@@ -14,16 +14,22 @@
 //!
 //! ```text
 //!                 ┌────────────────────── ConcurrentServer ──────────────────────┐
-//! submit_to(      │  [batcher thread]                       [worker 0..W)        │
-//!  "nmg", toks) ──┼─> bounded submit     ┌─ Scheduler ─┐     each worker holds   │
-//!  (blocks at     │   channel ─────────> │ per-model   │ ──> one Engine replica  │
-//!   queue_cap,    │                      │ queues;     │     of EVERY model      │
-//!   global)       │                      │ FIFO | WDRR │     (Arc-shared weights │
-//!                 │                      └─────────────┘     per model) and runs │
-//!                 │                        max_wait deadline  whichever model's  │
-//!                 │                        batching per model batch it receives  │
+//! submit_to(      │ [admission control]   [ingester]          [worker 0..W)      │
+//!  "dense",toks)──┼─> EWMA predicts wait ──> bounded  ┌─ Scheduler ─┐  each      │
+//!  (blocks at     │   > SLO? degrade to      submit   │ per-model   │  worker    │
+//!   queue_cap;    │   "nmg" | Rejected       channel ─> queues;     │  PULLS a   │
+//!   try_submit:   │                                   │ FIFO | WDRR <── batch    │
+//!   QueueFull)    │                                   └──────┬──────┘  when free │
+//!                 │   sheds: entries already past the SLO    └─> shed   (its own │
+//!                 │   are dropped before batch formation          path   replica │
+//!                 │   (accounted per model, never executed)        of every model│
 //!                 └──────────────────────────────────────────────────────────────┘
 //! ```
+//!
+//! Batches are *continuously* formed: a worker pulls its next batch from
+//! the shared scheduler at the moment it frees up, so a slow batch
+//! occupies one worker while the queues keep draining through the rest —
+//! there is no pre-formed batch pipeline to stall behind.
 //!
 //! Three serving modes share one request/result vocabulary
 //! ([`serve::Request`], [`RequestResult`] — both carry a model index):
@@ -31,10 +37,11 @@
 //! * [`BatchServer`] — the single-threaded drain-loop baseline: callers
 //!   enqueue, then `run_until_drained` forms and executes batches inline.
 //! * [`ConcurrentServer::start`] — the single-model concurrent server:
-//!   bounded submission queue, batcher thread, N weight-sharing replicas.
-//!   With the default FIFO policy its batch formation is bit-for-bit the
-//!   pre-registry behavior (asserted by a scripted-trace equivalence test
-//!   in [`scheduler`]).
+//!   bounded submission queue, ingester thread, N weight-sharing replicas
+//!   pulling batches continuously. With the default FIFO policy and a
+//!   free worker its batch formation matches the pre-registry behavior
+//!   (asserted by scripted-trace equivalence tests in [`scheduler`],
+//!   including one driving a simulated finite worker pool).
 //! * [`ConcurrentServer::start_registry`] — the multi-model front-end: a
 //!   [`registry::ModelRegistry`] of named engines (each with its own
 //!   `FfnMode`/sparsity config and replica count) served through a
@@ -55,13 +62,29 @@
 //! `max_wait`. Deadline-expired batches bypass WDRR deficits, so weights
 //! shape bandwidth under saturation but can never starve a model past its
 //! deadline. Under overload the bounded queue pushes the wait back onto
-//! submitters.
+//! blocking submitters; `try_submit` surfaces it as `QueueFull` instead.
 //!
-//! **Metrics.** Every completion carries its model index and real
-//! `batch_id`; [`metrics`] derives global and per-model p50/p95/p99
-//! latency summaries, SLO-miss fractions, batch-deduplicated compute
-//! throughput and queue-depth gauges with high-water marks, surfaced in
-//! [`ServeReport::per_model`].
+//! **Overload defense.** With `ServeConfig::admission` on, each submit is
+//! checked against a predicted queue-plus-service delay (per-model EWMA
+//! of observed `compute_s` per request × live queue depths ÷ workers):
+//! past the SLO, the request is degraded to the model's registered sparse
+//! n:m:g variant ([`ModelRegistry::set_degrade`]) if that variant's own
+//! prediction fits, else rejected with `SubmitError::Rejected`. With
+//! `ServeConfig::shed` on, queue entries that have already outlived the
+//! SLO are dropped before batch formation — compute is never spent on a
+//! guaranteed miss.
+//!
+//! **Metrics / goodput accounting.** Every completion carries its model
+//! index and real `batch_id`; [`metrics`] derives global and per-model
+//! p50/p95/p99 latency summaries, SLO-miss fractions, batch-deduplicated
+//! compute throughput and queue-depth gauges with high-water marks,
+//! surfaced in [`ServeReport::per_model`]. The overload figure of merit
+//! is `goodput_rps` = completions with `total_s <= slo` per wall second:
+//! sheds and rejections reduce goodput's numerator but are reported as
+//! their own per-model counts (`shed`/`rejected`/`degraded`), never as
+//! completions. A degraded request's completion is accounted under the
+//! *target* model; the `degraded` count stays with the model the client
+//! asked for.
 //!
 //! * [`engine`] — the per-model engine with latency breakdown.
 //! * [`registry`] — named models behind one front-end.

@@ -29,6 +29,10 @@ pub struct ModelEntry {
     pub replicas: usize,
     /// Scheduling weight (used by weighted policies; 1 = neutral).
     pub weight: u64,
+    /// Admission-control fallback: when this model's predicted queue wait
+    /// blows the SLO, degrade the request to the named model (typically the
+    /// sparse n:m:g variant of the same weights) instead of rejecting.
+    pub degrade_to: Option<String>,
 }
 
 /// An ordered collection of named models; indices are registration order.
@@ -64,8 +68,33 @@ impl ModelRegistry {
         if weight == 0 {
             bail!("model {name:?}: weight must be at least 1");
         }
-        self.models.push(ModelEntry { name: name.to_string(), engine, replicas, weight });
+        self.models.push(ModelEntry {
+            name: name.to_string(),
+            engine,
+            replicas,
+            weight,
+            degrade_to: None,
+        });
         Ok(self.models.len() - 1)
+    }
+
+    /// Declare that overloaded submissions for `from` may be degraded to
+    /// `to` (the registered sparse variant of the same model). Both names
+    /// must already be registered and distinct; degrading to a model with
+    /// its own degrade target is allowed but the chain is not followed —
+    /// admission control tries exactly one hop.
+    pub fn set_degrade(&mut self, from: &str, to: &str) -> Result<()> {
+        if from == to {
+            bail!("model {from:?} cannot degrade to itself");
+        }
+        if self.index_of(to).is_none() {
+            bail!("degrade target {to:?} is not registered");
+        }
+        let Some(idx) = self.index_of(from) else {
+            bail!("model {from:?} is not registered");
+        };
+        self.models[idx].degrade_to = Some(to.to_string());
+        Ok(())
     }
 
     /// Number of registered models.
@@ -139,5 +168,18 @@ mod tests {
         assert!(reg.register("r0", tiny_engine(), 0, 1).is_err(), "zero replicas");
         assert!(reg.register("w0", tiny_engine(), 1, 0).is_err(), "zero weight");
         assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn degrade_links_require_registered_distinct_models() {
+        let mut reg = ModelRegistry::new();
+        reg.register("dense", tiny_engine(), 1, 1).unwrap();
+        reg.register("nmg", tiny_engine(), 1, 1).unwrap();
+        assert!(reg.set_degrade("dense", "dense").is_err(), "self-degrade");
+        assert!(reg.set_degrade("dense", "missing").is_err(), "unknown target");
+        assert!(reg.set_degrade("missing", "nmg").is_err(), "unknown source");
+        reg.set_degrade("dense", "nmg").unwrap();
+        assert_eq!(reg.entries()[0].degrade_to.as_deref(), Some("nmg"));
+        assert!(reg.entries()[1].degrade_to.is_none());
     }
 }

@@ -1,13 +1,19 @@
 //! Batch-formation policies over per-model queues.
 //!
 //! The batcher thread of [`super::concurrent::ConcurrentServer`] used to own
-//! batch formation inline; it is now split into a [`Scheduler`] the batcher
-//! *drives*: the batcher feeds arrivals in with [`Scheduler::enqueue`] and
-//! asks [`Scheduler::poll`] what to do next — dispatch a formed batch, wait
-//! for more arrivals (optionally with a deadline), or stop. Every decision
-//! is a pure function of the queues, the passed-in `now` and the `open`
-//! flag, so policies are unit-testable in *virtual time* against scripted
-//! arrival traces (no wall clock, no threads).
+//! batch formation inline; it is now split into a [`Scheduler`] its callers
+//! *drive*: the ingest thread feeds arrivals in with [`Scheduler::enqueue`]
+//! and each worker, the moment it frees up, asks [`Scheduler::poll`] what to
+//! do next — dispatch a formed batch, wait for more arrivals (optionally
+//! with a deadline), or stop. That worker-pull loop is *continuous
+//! batching*: the next batch is formed at dispatch time from everything
+//! queued at that instant, so a slow batch occupies only its worker and
+//! never stalls queue progress behind pre-formed batches. Every decision is
+//! a pure function of the queues, the passed-in `now` and the `open` flag,
+//! so policies are unit-testable in *virtual time* against scripted arrival
+//! traces (no wall clock, no threads) — both in the legacy
+//! always-a-free-worker regime and under a simulated worker pool
+//! (`drive_workers` below).
 //!
 //! Two policies:
 //!
@@ -26,9 +32,10 @@
 //! Queue-cap semantics: the scheduler's per-model queues are *forming*
 //! queues, not the backpressure bound. The server's bounded submission
 //! channel (`ServeConfig::queue_cap`, global across models) is what blocks
-//! submitters; the batcher dispatches every dispatchable batch before
-//! ingesting the next arrival, so each forming queue holds less than one
-//! full batch plus the arrival in flight.
+//! submitters; the ingester additionally caps total forming-queue depth at
+//! `max(queue_cap, largest model batch)`, parking until a dispatch or a
+//! shed frees space, so end-to-end in-flight work stays bounded even
+//! though workers pull batches asynchronously.
 
 use std::collections::VecDeque;
 use std::time::{Duration, Instant};
@@ -90,6 +97,13 @@ pub trait Scheduler: Send {
     fn pending(&self) -> usize;
     /// Requests currently queued for one model.
     fn pending_for(&self, model: usize) -> usize;
+    /// Drop and return every queued request that arrived at or before
+    /// `expire_before` (load shedding: entries already past their service
+    /// objective are removed *before* batch formation, so a worker that
+    /// frees up under backlog spends its capacity on requests that can
+    /// still complete in time). Relative queue order of the survivors is
+    /// unchanged; WDRR deficits are untouched.
+    fn shed_expired(&mut self, expire_before: Instant) -> Vec<Request>;
     /// Remove and return everything queued (shutdown/failure path).
     fn take_all(&mut self) -> Vec<Request>;
 }
@@ -196,6 +210,28 @@ impl Queues {
         self.pending = 0;
         out
     }
+
+    /// Remove every queued request with `arrived <= expire_before`,
+    /// preserving the relative order of both the shed and the surviving
+    /// requests. Queues are FIFO per model, so expired entries are a
+    /// prefix of each queue only under FIFO arrival — a retained scan
+    /// keeps this correct for any arrival pattern.
+    fn shed_expired(&mut self, expire_before: Instant) -> Vec<Request> {
+        let mut out = Vec::new();
+        for q in &mut self.queues {
+            let mut keep = VecDeque::with_capacity(q.len());
+            for r in q.drain(..) {
+                if r.arrived <= expire_before {
+                    out.push(r);
+                } else {
+                    keep.push_back(r);
+                }
+            }
+            *q = keep;
+        }
+        self.pending -= out.len();
+        out
+    }
 }
 
 /// FIFO across models: serve the globally-oldest request's model next; a
@@ -238,6 +274,10 @@ impl Scheduler for FifoScheduler {
 
     fn pending_for(&self, model: usize) -> usize {
         self.q.queues[model].len()
+    }
+
+    fn shed_expired(&mut self, expire_before: Instant) -> Vec<Request> {
+        self.q.shed_expired(expire_before)
     }
 
     fn take_all(&mut self) -> Vec<Request> {
@@ -327,6 +367,10 @@ impl Scheduler for WdrrScheduler {
 
     fn pending_for(&self, model: usize) -> usize {
         self.q.queues[model].len()
+    }
+
+    fn shed_expired(&mut self, expire_before: Instant) -> Vec<Request> {
+        self.q.shed_expired(expire_before)
     }
 
     fn take_all(&mut self) -> Vec<Request> {
@@ -590,6 +634,205 @@ mod tests {
                 }
             }
             assert_eq!(sizes, vec![(0, 2), (1, 1)], "policy {policy:?}");
+            assert_eq!(sched.pending(), 0);
+        }
+    }
+
+    /// Drive a scheduler through a scripted single-model arrival trace in
+    /// virtual time under a *simulated finite worker pool* — the continuous
+    /// batching regime: a batch can only form when a worker is free, and
+    /// arrivals keep landing while workers are busy. Each dispatch occupies
+    /// one worker for `service_ms`.
+    fn drive_workers(
+        sched: &mut dyn Scheduler,
+        offsets_ms: &[u64],
+        workers: usize,
+        service_ms: u64,
+    ) -> Vec<(u64, usize)> {
+        let base = Instant::now();
+        let at = |ms: u64| base + Duration::from_millis(ms);
+        let mut free_at: Vec<Instant> = vec![base; workers];
+        let mut out = Vec::new();
+        let mut now = base;
+        let mut open = true;
+        let mut i = 0usize;
+        loop {
+            // The ingester runs concurrently with busy workers: everything
+            // due by `now` is already in the forming queues.
+            while i < offsets_ms.len() && at(offsets_ms[i]) <= now {
+                sched.enqueue(req(i as u64, 0, at(offsets_ms[i])));
+                i += 1;
+            }
+            // No free worker: nothing can pull a batch until one frees up.
+            let earliest_free = *free_at.iter().min().unwrap();
+            if earliest_free > now {
+                now = earliest_free;
+                continue; // re-ingest whatever arrived meanwhile
+            }
+            match sched.poll(now, open) {
+                Decision::Dispatch(b) => {
+                    out.push((b.id, b.requests.len()));
+                    let w = free_at.iter().position(|&f| f <= now).unwrap();
+                    free_at[w] = now + Duration::from_millis(service_ms);
+                }
+                Decision::WaitUntil(deadline) => {
+                    if i < offsets_ms.len() && at(offsets_ms[i]) <= deadline {
+                        now = now.max(at(offsets_ms[i]));
+                    } else if i < offsets_ms.len() {
+                        now = deadline; // timed out waiting for batch-mates
+                    } else {
+                        open = false; // submitters done, channel closed
+                    }
+                }
+                Decision::WaitForArrival => {
+                    if i < offsets_ms.len() {
+                        now = now.max(at(offsets_ms[i]));
+                    } else {
+                        open = false;
+                    }
+                }
+                Decision::Idle => break,
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn continuous_refill_matches_form_then_drain_at_sub_saturation() {
+        // The tentpole equivalence gate: under continuous batching with a
+        // finite worker pool, as long as the pool is never the bottleneck
+        // (sub-saturation: service time <= every inter-dispatch gap), batch
+        // formation must be byte-identical to the old form-then-drain
+        // batcher. Same traces and (batch, max_wait) matrix as
+        // `fifo_single_model_matches_pre_refactor_batcher`.
+        let traces: [&[u64]; 4] = [
+            &[0, 1, 2, 3, 4, 20, 21, 40, 41, 42, 43, 44, 45, 100],
+            &[0, 50, 100, 150],
+            &[0, 0, 0, 0, 0, 0, 0, 0, 0],
+            &[7],
+        ];
+        for (batch, max_wait_ms) in [(4usize, 10u64), (3, 5), (2, 25)] {
+            for trace in traces {
+                let expected = reference_old_batcher(trace, batch, max_wait_ms);
+                let mut sched = make(
+                    SchedPolicy::Fifo,
+                    models(&[(batch, 1)]),
+                    Duration::from_millis(max_wait_ms),
+                );
+                let got = drive_workers(sched.as_mut(), trace, 2, 1);
+                assert_eq!(
+                    got, expected,
+                    "continuous batching diverged (batch={batch}, \
+                     max_wait={max_wait_ms}ms, trace={trace:?})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn wdrr_deadline_bypass_under_continuous_refill() {
+        // Continuous batching never leaves the heavy model's queue empty:
+        // after every pull, four fresh model-1 requests land before the
+        // next poll. The lone weight-1 model-0 request must still dispatch
+        // the moment its max_wait deadline expires — the bypass has to win
+        // against a queue that is *always* full, not just a static backlog.
+        let base = Instant::now();
+        let batch = 4;
+        let max_wait = Duration::from_millis(10);
+        let mut sched = make(SchedPolicy::Wdrr, models(&[(batch, 1), (batch, 100)]), max_wait);
+        sched.enqueue(req(0, 0, base));
+        let mut id = 1u64;
+        let mut served = None;
+        for step in 0..20u64 {
+            let now = base + Duration::from_millis(step);
+            for _ in 0..batch {
+                sched.enqueue(req(id, 1, now));
+                id += 1;
+            }
+            match sched.poll(now, true) {
+                Decision::Dispatch(b) if b.model == 0 => {
+                    served = Some((step, b.requests.len()));
+                    break;
+                }
+                Decision::Dispatch(b) => {
+                    assert_eq!((b.model, b.requests.len()), (1, batch));
+                }
+                other => panic!("expected dispatch under refill, got {other:?}"),
+            }
+        }
+        // Expired at exactly base + max_wait; not a poll earlier.
+        assert_eq!(served, Some((10, 1)), "deadline bypass failed under continuous refill");
+    }
+
+    #[test]
+    fn drain_orders_across_models_with_full_batch_chunks() {
+        // Drain phase (open == false) under a mixed backlog: the scheduler
+        // must empty the queues oldest-front-first, in full-batch chunks,
+        // regardless of policy — WDRR deficits don't apply once the stream
+        // is closed.
+        for policy in [SchedPolicy::Fifo, SchedPolicy::Wdrr] {
+            let base = Instant::now();
+            let at = |ms: u64| base + Duration::from_millis(ms);
+            let mut sched = make(policy, models(&[(2, 1), (3, 5)]), Duration::from_secs(3600));
+            // model 0: ids 0(t0), 3(t3), 4(t4); model 1: 1(t1), 2(t2), 5(t5), 6(t6)
+            for (id, model, t) in
+                [(0, 0, 0), (1, 1, 1), (2, 1, 2), (3, 0, 3), (4, 0, 4), (5, 1, 5), (6, 1, 6)]
+            {
+                sched.enqueue(req(id, model, at(t)));
+            }
+            let mut got = Vec::new();
+            loop {
+                match sched.poll(at(7), false) {
+                    Decision::Dispatch(b) => {
+                        got.push((b.model, b.requests.iter().map(|r| r.id).collect::<Vec<_>>()));
+                    }
+                    Decision::Idle => break,
+                    other => panic!("drain must dispatch or idle, got {other:?}"),
+                }
+            }
+            let want = vec![
+                (0, vec![0, 3]),    // oldest front t0, chunked at batch 2
+                (1, vec![1, 2, 5]), // next-oldest front t1, chunked at batch 3
+                (0, vec![4]),       // fronts t4 vs t6
+                (1, vec![6]),
+            ];
+            assert_eq!(got, want, "policy {policy:?}");
+            assert_eq!(sched.pending(), 0);
+        }
+    }
+
+    #[test]
+    fn shed_expired_drops_only_aged_entries_preserving_order() {
+        for policy in [SchedPolicy::Fifo, SchedPolicy::Wdrr] {
+            let base = Instant::now();
+            let at = |ms: u64| base + Duration::from_millis(ms);
+            let mut sched = make(policy, models(&[(4, 1), (4, 1)]), Duration::from_secs(3600));
+            // model 0: 0(t0), 1(t5), 2(t10); model 1: 3(t1), 4(t12)
+            for (id, model, t) in [(0, 0, 0), (1, 0, 5), (2, 0, 10), (3, 1, 1), (4, 1, 12)] {
+                sched.enqueue(req(id, model, at(t)));
+            }
+            // Cutoff is inclusive: arrived <= expire_before is shed.
+            let shed = sched.shed_expired(at(5));
+            let shed_ids: Vec<u64> = shed.iter().map(|r| r.id).collect();
+            assert_eq!(shed_ids, vec![0, 1, 3], "policy {policy:?}");
+            assert_eq!(sched.pending(), 2);
+            assert_eq!(sched.pending_for(0), 1);
+            assert_eq!(sched.pending_for(1), 1);
+            // Survivors keep their order and stay dispatchable: drain
+            // serves the t10 model-0 front before the t12 model-1 front.
+            let mut got = Vec::new();
+            loop {
+                match sched.poll(at(13), false) {
+                    Decision::Dispatch(b) => {
+                        got.push((b.model, b.requests.iter().map(|r| r.id).collect::<Vec<_>>()));
+                    }
+                    Decision::Idle => break,
+                    other => panic!("drain must dispatch or idle, got {other:?}"),
+                }
+            }
+            assert_eq!(got, vec![(0, vec![2]), (1, vec![4])], "policy {policy:?}");
+            // Nothing left, and shedding an empty scheduler is a no-op.
+            assert!(sched.shed_expired(at(100)).is_empty());
             assert_eq!(sched.pending(), 0);
         }
     }

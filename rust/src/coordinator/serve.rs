@@ -37,7 +37,11 @@ pub struct Request {
     pub arrived: Instant,
 }
 
-/// Completion record for one request.
+/// Completion record for one request. Only *completions* produce one of
+/// these: requests rejected by admission control or shed past their SLO
+/// are reported as counts in the concurrent server's `ServeReport`, never
+/// as results. A degraded request completes (and is recorded) under the
+/// model that actually served it.
 #[derive(Debug, Clone)]
 pub struct RequestResult {
     /// Request id.

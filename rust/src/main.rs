@@ -7,7 +7,9 @@
 //! * `serve`    — run the dynamic batcher over synthetic requests
 //!   (`--replicas N` switches to the concurrent deadline-batching server;
 //!   `--models dense:2,nmg:2 --weights 1,3` serves a multi-model registry
-//!   with weighted scheduling and per-model latency/SLO reports).
+//!   with weighted scheduling and per-model latency/SLO reports;
+//!   `--admission --degrade-to dense=nmg --shed` turns on overload
+//!   defense: reject/degrade at submit time, shed expired queue entries).
 //! * `energy`   — print the Fig. 7 energy table for a random weight.
 //! * `sparsify` — demonstrate the SparsityBuilder on an MLP.
 
@@ -17,7 +19,7 @@ use std::time::Duration;
 use anyhow::{bail, Result};
 use sten::coordinator::{
     BatchServer, ConcurrentServer, Engine, FfnMode, ModelRegistry, SchedPolicy, ServeConfig,
-    ServeReport,
+    ServeReport, SubmitError,
 };
 use sten::formats::Layout;
 use sten::model::{MlpSpec, SparsityBuilder};
@@ -156,9 +158,11 @@ fn ffn_mode_for(kind: &str) -> Result<FfnMode> {
     })
 }
 
-/// `serve --models dense:2,nmg:2 --weights 1,3 [--policy wdrr|fifo]`: a
-/// multi-model registry behind one front-end, mixed synthetic traffic, and
-/// per-model p50/p95/p99 + SLO-miss reporting.
+/// `serve --models dense:2,nmg:2 --weights 1,3 [--policy wdrr|fifo]
+/// [--admission] [--degrade-to dense=nmg] [--shed]`: a multi-model
+/// registry behind one front-end, mixed synthetic traffic, per-model
+/// p50/p95/p99 + SLO-miss reporting, and opt-in overload defense
+/// (admission control with sparse-degrade, expired-entry shedding).
 fn serve_multi(
     args: &Args,
     tag: &str,
@@ -204,6 +208,14 @@ fn serve_multi(
         let engine = Engine::with_runtime(rt.clone(), tag, ffn_mode_for(name)?, 42 + i as u64)?;
         registry.register(name, engine, *replicas, *weight)?;
     }
+    if let Some(spec) = args.get("degrade-to") {
+        for link in spec.split(',').filter(|s| !s.is_empty()) {
+            let Some((from, to)) = link.split_once('=') else {
+                bail!("--degrade-to wants from=to entries, got {link:?}");
+            };
+            registry.set_degrade(from, to)?;
+        }
+    }
     let names: Vec<String> = parts.iter().map(|(name, _)| name.clone()).collect();
     let workers = registry.total_replicas();
     let cfg = ServeConfig {
@@ -211,6 +223,8 @@ fn serve_multi(
         max_wait,
         policy,
         slo,
+        admission: args.flag("admission"),
+        shed: args.flag("shed"),
         ..ServeConfig::default()
     };
     let server = ConcurrentServer::start_registry(registry, cfg)?;
@@ -220,24 +234,35 @@ fn serve_multi(
     for _ in 0..requests {
         let model = &names[rng.below(names.len() as u32) as usize];
         let toks: Vec<i32> = (0..seq).map(|_| rng.below(vocab) as i32).collect();
-        server.submit_to(model, &toks)?;
+        match server.submit_to(model, &toks) {
+            Ok(_) => {}
+            // Admission rejections are an expected overload outcome, not a
+            // CLI failure; the final report carries the counts.
+            Err(SubmitError::Rejected { .. }) => {}
+            Err(e) => return Err(e.into()),
+        }
     }
     let report = server.finish()?;
     println!(
         "served {} requests across {} models on {workers} workers ({policy:?}) in {} batches; \
-         {:.1} req/s wall; slo {:.1} ms; overall slo-miss {:.1}%",
+         {:.1} req/s wall; slo {:.1} ms; overall slo-miss {:.1}%; goodput {:.1} req/s; \
+         shed/rejected/degraded {}/{}/{}",
         report.results.len(),
         names.len(),
         report.batches,
         report.wall_rps,
         slo.as_secs_f64() * 1e3,
         report.slo_miss.unwrap_or(0.0) * 100.0,
+        report.goodput_rps,
+        report.shed,
+        report.rejected,
+        report.degraded,
     );
     for m in &report.per_model {
         match m.metrics.latency {
             Some(lat) => println!(
                 "  model {}: {} requests in {} batches; p50/p95/p99 {:.3}/{:.3}/{:.3} ms; \
-                 slo-miss {:.1}%; queue high-water {}",
+                 slo-miss {:.1}%; queue high-water {}; shed/rejected/degraded {}/{}/{}",
                 m.name,
                 m.metrics.requests,
                 m.metrics.batches,
@@ -246,8 +271,14 @@ fn serve_multi(
                 lat.p99 * 1e3,
                 m.metrics.slo_miss.unwrap_or(0.0) * 100.0,
                 m.queue_high_water,
+                m.shed,
+                m.rejected,
+                m.degraded,
             ),
-            None => println!("  model {}: no traffic", m.name),
+            None => println!(
+                "  model {}: no traffic (shed/rejected/degraded {}/{}/{})",
+                m.name, m.shed, m.rejected, m.degraded
+            ),
         }
     }
     print_replica_timing(&report);

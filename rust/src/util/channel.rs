@@ -63,6 +63,24 @@ impl<T> fmt::Debug for SendError<T> {
     }
 }
 
+/// The value returned by a failed [`Sender::try_send`], carrying the
+/// rejected item so open-loop producers can account for it.
+pub enum TrySendError<T> {
+    /// The queue was at capacity; the caller may retry or shed the item.
+    Full(T),
+    /// The channel is closed; no retry can succeed.
+    Closed(T),
+}
+
+impl<T> fmt::Debug for TrySendError<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TrySendError::Full(_) => f.write_str("TrySendError::Full"),
+            TrySendError::Closed(_) => f.write_str("TrySendError::Closed"),
+        }
+    }
+}
+
 /// Outcome of a deadline-bounded receive.
 #[derive(Debug)]
 pub enum Received<T> {
@@ -96,6 +114,25 @@ impl<T> Sender<T> {
             }
             st = self.shared.not_full.wait(st).unwrap();
         }
+    }
+
+    /// Non-blocking send: enqueue if there is room, otherwise return the
+    /// value immediately. Open-loop producers (the arrivals bench, the
+    /// admission-controlled submit path) use this so a saturated queue
+    /// surfaces as an accountable failure instead of silently turning the
+    /// producer closed-loop (coordinated omission).
+    pub fn try_send(&self, value: T) -> Result<(), TrySendError<T>> {
+        let mut st = self.shared.state.lock().unwrap();
+        if st.closed {
+            return Err(TrySendError::Closed(value));
+        }
+        if st.queue.len() >= self.shared.cap {
+            return Err(TrySendError::Full(value));
+        }
+        st.queue.push_back(value);
+        drop(st);
+        self.shared.not_empty.notify_one();
+        Ok(())
     }
 
     /// Items currently queued (a queue-depth gauge, racy by nature).
@@ -269,6 +306,23 @@ mod tests {
         assert_eq!(rx.recv(), Some(2));
         assert_eq!(rx.recv(), Some(3));
         t.join().unwrap();
+    }
+
+    #[test]
+    fn try_send_full_then_closed() {
+        let (tx, rx) = bounded(1);
+        assert!(tx.try_send(1).is_ok());
+        match tx.try_send(2) {
+            Err(TrySendError::Full(v)) => assert_eq!(v, 2),
+            other => panic!("expected Full, got {other:?}"),
+        }
+        assert_eq!(rx.recv(), Some(1));
+        assert!(tx.try_send(3).is_ok(), "space freed by recv");
+        drop(rx);
+        match tx.try_send(4) {
+            Err(TrySendError::Closed(v)) => assert_eq!(v, 4),
+            other => panic!("expected Closed, got {other:?}"),
+        }
     }
 
     #[test]

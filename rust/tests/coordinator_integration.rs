@@ -2,7 +2,9 @@
 //! FFN modes agree numerically (modulo pruning), both servers deliver every
 //! request, batch formation honors `max_wait`, replicas share weights, and
 //! the multi-model registry path completes mixed traffic with per-model
-//! reports and typed submit errors.
+//! reports and typed submit errors. Overload defenses are covered end to
+//! end: admission rejects and sparse-degrades, load shedding, non-blocking
+//! submission (`QueueFull`) and goodput accounting.
 
 use std::collections::HashSet;
 use std::sync::Arc;
@@ -358,6 +360,201 @@ fn multi_model_server_completes_mixed_traffic_with_per_model_reports() {
     assert_eq!(report.slo_miss, Some(0.0));
     // Two workers (one per registered replica), each with a timing view.
     assert_eq!(report.replica_timing.len(), 2);
+}
+
+#[test]
+fn admission_rejects_once_the_estimate_blows_the_slo() {
+    // An impossible SLO (zero) with admission on: everything is admitted
+    // until the first completion calibrates the service-time EWMA; after
+    // that every prediction exceeds the SLO and — with no degrade target
+    // registered — submits are rejected, typed and counted.
+    let e = engine(FfnMode::NativeDense);
+    let batch = e.dims.batch;
+    let seq = e.dims.seq;
+    // Large max_wait: the priming submissions dispatch only as one full
+    // batch, so the EWMA cannot calibrate (and start rejecting) while the
+    // priming loop is still submitting on a slow host.
+    let cfg = ServeConfig {
+        replicas: 1,
+        queue_cap: 32,
+        max_wait: Duration::from_millis(500),
+        slo: Duration::ZERO,
+        admission: true,
+        ..ServeConfig::default()
+    };
+    let server = ConcurrentServer::start(e, cfg).unwrap();
+    let mut rng = Pcg64::seeded(60);
+    for _ in 0..batch {
+        server.submit(&random_request(seq, &mut rng)).unwrap();
+    }
+    server.drain();
+    assert!(server.service_estimate(0) > 0.0, "drain must have calibrated the EWMA");
+    assert!(server.predicted_wait(0) > Duration::ZERO);
+
+    let err = server.submit(&random_request(seq, &mut rng)).unwrap_err();
+    match err {
+        SubmitError::Rejected { predicted } => assert!(predicted > Duration::ZERO),
+        other => panic!("expected Rejected, got {other:?}"),
+    }
+    let report = server.finish().unwrap();
+    assert_eq!(report.results.len(), batch, "rejected submits must not complete");
+    assert_eq!(report.rejected, 1);
+    assert_eq!(report.per_model[0].rejected, 1);
+    assert_eq!(report.shed, 0);
+    assert_eq!(report.degraded, 0);
+}
+
+#[test]
+fn admission_degrades_to_the_registered_sparse_variant() {
+    let rt = Arc::new(ArtifactRuntime::open_default().expect("artifact runtime"));
+    let dense = Engine::with_runtime(rt.clone(), "tiny", FfnMode::NativeDense, 42).unwrap();
+    let nmg =
+        Engine::with_runtime(rt.clone(), "tiny", FfnMode::NativeNmg { n: 2, m: 4, g: 4 }, 43)
+            .unwrap();
+    let batch = dense.dims.batch;
+    let seq = dense.dims.seq;
+    let mut registry = ModelRegistry::new();
+    registry.register("dense", dense, 1, 1).unwrap();
+    registry.register("nmg", nmg, 1, 1).unwrap();
+    registry.set_degrade("dense", "nmg").unwrap();
+    // Large max_wait for the same priming-race reason as the rejection
+    // test: dense primes as one full batch or not at all.
+    let cfg = ServeConfig {
+        queue_cap: 32,
+        max_wait: Duration::from_millis(500),
+        slo: Duration::ZERO,
+        admission: true,
+        ..ServeConfig::default()
+    };
+    let server = ConcurrentServer::start_registry(registry, cfg).unwrap();
+
+    // Prime the dense EWMA; the nmg variant stays unobserved (estimate 0),
+    // so its prediction still fits the impossible SLO.
+    let mut rng = Pcg64::seeded(61);
+    for _ in 0..batch {
+        server.submit_to("dense", &random_request(seq, &mut rng)).unwrap();
+    }
+    server.drain();
+    assert!(server.service_estimate(0) > 0.0);
+
+    // Every further dense request degrades to nmg — until an nmg batch
+    // completes and calibrates *its* estimate too, after which requests
+    // are rejected. Both outcomes are legitimate; the first submit must
+    // degrade (nothing nmg has run yet).
+    let mut degraded_ids = Vec::new();
+    for _ in 0..4 {
+        match server.submit_to("dense", &random_request(seq, &mut rng)) {
+            Ok(id) => degraded_ids.push(id),
+            Err(SubmitError::Rejected { predicted }) => assert!(predicted > Duration::ZERO),
+            Err(other) => panic!("unexpected submit error: {other:?}"),
+        }
+    }
+    assert!(!degraded_ids.is_empty(), "the first post-prime submit must degrade");
+    server.drain();
+    let report = server.finish().unwrap();
+
+    // Degraded requests complete under the *target* model; the degrade
+    // count stays with the model the client asked for.
+    for id in &degraded_ids {
+        let r = report.results.iter().find(|r| r.id == *id).expect("degraded completion");
+        assert_eq!(r.model, 1, "request {id} should have been served by nmg");
+    }
+    assert_eq!(report.degraded, degraded_ids.len() as u64);
+    assert_eq!(report.per_model[0].degraded, degraded_ids.len() as u64);
+    assert_eq!(report.per_model[1].degraded, 0);
+    assert_eq!(report.per_model[0].rejected, 4 - degraded_ids.len() as u64);
+    assert_eq!(report.per_model[0].metrics.requests, batch);
+    assert_eq!(report.per_model[1].metrics.requests, degraded_ids.len());
+    assert_eq!(report.results.len(), batch + degraded_ids.len());
+}
+
+#[test]
+fn shedding_drops_requests_already_past_the_slo() {
+    // A zero SLO with shedding on: every queued entry is a guaranteed miss
+    // by the time a worker sees it, so nothing may reach an engine — all
+    // requests are shed, accounted, and drain() still returns.
+    let e = engine(FfnMode::NativeDense);
+    let seq = e.dims.seq;
+    let cfg = ServeConfig {
+        replicas: 2,
+        queue_cap: 32,
+        max_wait: Duration::from_millis(2),
+        slo: Duration::ZERO,
+        shed: true,
+        ..ServeConfig::default()
+    };
+    let server = ConcurrentServer::start(e, cfg).unwrap();
+    let mut rng = Pcg64::seeded(62);
+    let total = 6usize;
+    for _ in 0..total {
+        server.submit(&random_request(seq, &mut rng)).unwrap();
+    }
+    server.drain(); // sheds are accounted: this must not hang
+    let report = server.finish().unwrap();
+    assert!(report.results.is_empty(), "shed requests must never execute");
+    assert_eq!(report.shed, total as u64);
+    assert_eq!(report.per_model[0].shed, total as u64);
+    assert_eq!(report.batches, 0, "no batch may form from expired entries");
+    assert_eq!(report.goodput_rps, 0.0);
+}
+
+#[test]
+fn try_submit_surfaces_queue_full_instead_of_blocking() {
+    // A capacity-1 submission queue and a single worker: a tight submit
+    // loop outruns service and must see QueueFull (never a block). Every
+    // accepted request still completes exactly once.
+    let e = engine(FfnMode::NativeDense);
+    let seq = e.dims.seq;
+    let cfg = ServeConfig {
+        replicas: 1,
+        queue_cap: 1,
+        max_wait: Duration::from_millis(1),
+        slo: Duration::from_secs(30),
+        ..ServeConfig::default()
+    };
+    let server = ConcurrentServer::start(e, cfg).unwrap();
+    let mut rng = Pcg64::seeded(63);
+    let mut accepted = 0usize;
+    let mut saw_full = false;
+    for _ in 0..50_000 {
+        match server.try_submit(&random_request(seq, &mut rng)) {
+            Ok(_) => accepted += 1,
+            Err(SubmitError::QueueFull) => {
+                saw_full = true;
+                break;
+            }
+            Err(other) => panic!("unexpected submit error: {other:?}"),
+        }
+    }
+    assert!(saw_full, "a tight loop never saturated a capacity-1 queue");
+    server.drain();
+    let report = server.finish().unwrap();
+    assert_eq!(report.results.len(), accepted, "accepted requests must all complete");
+    assert_eq!(report.shed + report.rejected + report.degraded, 0);
+}
+
+#[test]
+fn goodput_matches_wall_rate_when_every_request_is_in_slo() {
+    let e = engine(FfnMode::NativeNmg { n: 2, m: 4, g: 4 });
+    let batch = e.dims.batch;
+    let seq = e.dims.seq;
+    let cfg = ServeConfig { slo: Duration::from_secs(30), ..ServeConfig::default() };
+    let server = ConcurrentServer::start(e, cfg).unwrap();
+    let mut rng = Pcg64::seeded(64);
+    for _ in 0..batch * 2 {
+        server.submit(&random_request(seq, &mut rng)).unwrap();
+    }
+    let report = server.finish().unwrap();
+    assert_eq!(report.results.len(), batch * 2);
+    assert!(report.goodput_rps > 0.0);
+    // With a 30s SLO every completion is goodput.
+    assert!(
+        (report.goodput_rps - report.wall_rps).abs() < 1e-6 * report.wall_rps.max(1.0),
+        "goodput {} != wall rate {}",
+        report.goodput_rps,
+        report.wall_rps
+    );
+    assert_eq!(report.shed + report.rejected + report.degraded, 0);
 }
 
 #[test]

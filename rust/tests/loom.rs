@@ -24,7 +24,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::{Duration, Instant};
 
 use sten::coordinator::CompletionLatch;
-use sten::util::channel::{bounded, Received};
+use sten::util::channel::{bounded, Received, TrySendError};
 use sten::util::loom::ModelOptions;
 use sten::util::sync::atomic::{AtomicUsize, Ordering};
 use sten::util::sync::{thread, Arc, Mutex};
@@ -244,6 +244,38 @@ fn channel_full_queue_send_parks_until_recv() {
         assert_eq!(rx.recv(), Some(2));
         sender.join().unwrap();
         assert_eq!(rx.recv(), None);
+    });
+}
+
+/// `try_send` (the non-blocking submit path) never blocks, never loses an
+/// item and never duplicates one: on success the item is delivered exactly
+/// once; on `Full` the value is handed back and must never surface at the
+/// receiver. The sender's return and the consumer's observations have to
+/// agree in every interleaving with a racing recv.
+#[test]
+fn channel_try_send_never_blocks_or_duplicates() {
+    channel_bounds().check(|| {
+        let (tx, rx) = bounded::<u32>(1);
+        tx.send(1).unwrap(); // the queue starts full
+        let consumer = thread::spawn(move || {
+            let first = rx.recv();
+            let second = rx.recv();
+            (first, second)
+        });
+        let attempt = tx.try_send(2); // races the consumer's first recv
+        drop(tx);
+        let (first, second) = consumer.join().unwrap();
+        assert_eq!(first, Some(1), "pre-filled item lost");
+        match attempt {
+            Ok(()) => assert_eq!(second, Some(2), "accepted item never delivered"),
+            Err(TrySendError::Full(v)) => {
+                assert_eq!(v, 2, "rejected item not handed back intact");
+                assert_eq!(second, None, "rejected item must not be delivered");
+            }
+            Err(TrySendError::Closed(_)) => {
+                panic!("channel reported closed while the receiver was alive")
+            }
+        }
     });
 }
 
