@@ -48,6 +48,13 @@ echo "==> forward_latency --smoke (pool regression gate, 300s ceiling)"
 # pool worker (or any scope that never completes) into a loud failure.
 timeout 300 cargo bench --bench forward_latency -- --smoke
 
+echo "==> fig10_gemm --smoke (kernel correctness gate, 300s ceiling)"
+# Small-shape Fig.10 sweep with every kernel (blocked and baseline n:m:g,
+# CSR, blocked and naive BCSR) asserted allclose against the densified
+# dense-GEMM reference before timing — a cache-blocking bug that silently
+# skews results fails here as an assertion, not as a bad benchmark number.
+timeout 300 cargo bench --bench fig10_gemm -- --smoke
+
 echo "==> serving_arrivals --smoke (open-loop scheduler + overload gate, 300s ceiling)"
 # Paced open-loop (non-blocking submit) arrivals on a 1-model and a 2-model
 # mix: a trivial-load point per mix asserts zero steady-state thread spawns

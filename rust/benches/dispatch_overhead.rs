@@ -4,6 +4,9 @@
 //! Measures the per-call cost of each dispatch outcome on a small matmul so
 //! the dispatch machinery (signature hash, conversion search, fallback
 //! densification) dominates — the framework-overhead component of Fig. 11.
+//! Also compares frozen (lock-free snapshot) vs unfrozen (Mutex-guarded)
+//! registry lookup under pool-worker contention, and reports conversion-path
+//! clones avoided by the Cow operand pass-through.
 //!
 //! Run: `cargo bench --bench dispatch_overhead [-- --full]`
 
@@ -13,6 +16,7 @@ use sten::ops::OpKind;
 use sten::tensor::DenseTensor;
 use sten::util::benchkit::{parse_mode, Bench, BenchMode};
 use sten::util::rng::Pcg64;
+use sten::util::threadpool;
 
 fn main() {
     let mode = parse_mode();
@@ -38,13 +42,17 @@ fn main() {
     let t = bench.run(|| d.call(OpKind::MatMul, &[a.clone(), x.clone()]).unwrap());
     println!("hit (Csr,Dense)\t{:.1}\thit", t.median * 1e6);
 
-    // 3. Conversion: (Coo, Dense) -> (Csr, Dense).
+    // 3. Conversion: (Coo, Dense) -> (Csr, Dense). The dense rhs is already
+    // in the candidate layout, so it rides through borrowed (Cow), not
+    // cloned — counted by `avoided_clones`.
     let a = AnyTensor::Coo(CooTensor::from_dense(&w));
     d.stats.reset();
     let t = bench.run(|| d.call(OpKind::MatMul, &[a.clone(), x.clone()]).unwrap());
     let (_, conv, _) = d.stats.counts();
     assert!(conv > 0, "expected conversion route");
-    println!("convert (Coo->Csr)\t{:.1}\tconversion", t.median * 1e6);
+    let avoided = d.stats.avoided_clones();
+    assert!(avoided >= conv, "each conversion call must borrow its dense rhs");
+    println!("convert (Coo->Csr)\t{:.1}\tconversion ({avoided} clones avoided)", t.median * 1e6);
 
     // 4. Dense fallback: softmax on a masked tensor.
     let a = AnyTensor::Masked(MaskedTensor::from_dense(&w));
@@ -72,6 +80,49 @@ fn main() {
     let tiny_b = AnyTensor::Dense(DenseTensor::ones(&[2, 2]));
     let t = bench.run(|| d.call(OpKind::MatMul, &[tiny_a.clone(), tiny_b.clone()]).unwrap());
     println!("decision-only (2x2)\t{:.2}\thit", t.median * 1e6);
+
+    // 6b. Same decision through call_ref: no owned argument vector at all.
+    let t = bench.run(|| d.call_ref(OpKind::MatMul, &[&tiny_a, &tiny_b]).unwrap());
+    println!("decision-only call_ref (2x2)\t{:.2}\thit (zero-clone)", t.median * 1e6);
+
+    // 7. Frozen vs unfrozen registry under contention: pool workers hammer
+    // call_ref concurrently. Unfrozen, every call serializes on the registry
+    // Mutex (one acquisition per decision — and before this PR, up to
+    // 1 + 2 x conversion-targets); frozen, lookup is lock-free.
+    let df = Dispatcher::with_builtins();
+    df.freeze();
+    let calls_per_worker = 256usize;
+    let lanes = 16usize;
+    let contended = |disp: &Dispatcher| {
+        bench
+            .run(|| {
+                threadpool::parallel_for(lanes, 1, |s, e| {
+                    for _ in s..e {
+                        for _ in 0..calls_per_worker {
+                            disp.call_ref(OpKind::MatMul, &[&tiny_a, &tiny_b]).unwrap();
+                        }
+                    }
+                });
+            })
+            .median
+            / (lanes * calls_per_worker) as f64
+    };
+    let t_unfrozen = contended(&d);
+    let t_frozen = contended(&df);
+    println!(
+        "contended lookup\tunfrozen {:.3} us/call, frozen {:.3} us/call ({:.2}x)",
+        t_unfrozen * 1e6,
+        t_frozen * 1e6,
+        t_unfrozen / t_frozen.max(1e-12)
+    );
+    // Generous bound (timing noise on loaded CI boxes), but a frozen
+    // registry must never be meaningfully slower than a locked one.
+    assert!(
+        t_frozen <= t_unfrozen * 1.5,
+        "frozen (lock-free) lookup slower than locked lookup: {:.3}us vs {:.3}us",
+        t_frozen * 1e6,
+        t_unfrozen * 1e6
+    );
 
     let (dispatch_s, kernel_s) = d.stats.times();
     println!(

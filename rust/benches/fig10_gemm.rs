@@ -4,29 +4,77 @@
 //! on a 768x3072x4096 BERT FFN GEMM over 50-95% sparsity; DeepSparse is
 //! closed-source, so the comparator here is the tuned CSR kernel (DESIGN.md
 //! §Substitutions). Also reports the dense GEMM and the BCSR (TVM-block
-//! style) kernel for context.
+//! style) kernel for context, plus blocked-vs-baseline rows for the
+//! cache-blocked n:m:g and BCSR kernels (`spmm` vs `spmm_unblocked` /
+//! `spmm_naive`) and the format the cost-model autotuner would choose at
+//! each swept point.
 //!
 //! Paper claims to reproduce in shape: n:m:g beats unstructured at every
 //! sparsity level (up to ~4x), and beats dense from moderate sparsity on.
 //!
-//! Run: `cargo bench --bench fig10_gemm [-- --full]`
+//! Run: `cargo bench --bench fig10_gemm [-- --full | -- --smoke]`
+//! (`--smoke` is the CI gate: small shapes, every kernel asserted allclose
+//! against the densified dense-GEMM reference before timing.)
+//!
+//! Emits `BENCH_fig10_gemm.json` (machine-readable points, including the
+//! autotuner's chosen format per sparsity level).
 
-use sten::formats::{BcsrTensor, CsrTensor, NmgTensor};
+use sten::formats::{BcsrTensor, CsrTensor, Layout, NmgTensor};
 use sten::kernels::{bcsr_gemm, csr_gemm, dense_gemm, gemm_flops, nmg_gemm};
 use sten::sparsify::{BlockFraction, ScalarFraction, Sparsifier};
 use sten::tensor::DenseTensor;
-use sten::util::benchkit::{parse_mode, Bench, BenchMode};
+use sten::tune::{model_cost, WeightStats};
+use sten::util::benchkit::{Bench, JsonReport};
 use sten::util::rng::Pcg64;
 
+/// Cheapest layout under the autotuner's cost model for this pruned weight.
+fn chosen_format(
+    weight: &DenseTensor,
+    ncols: usize,
+    nmg: Option<(usize, usize, usize)>,
+) -> String {
+    let stats = WeightStats::measure(weight);
+    let mut best: Option<(Layout, f64)> = None;
+    for layout in [Layout::Dense, Layout::Nmg, Layout::Bcsr, Layout::Ell, Layout::Csr] {
+        if let Some(cost) = model_cost(layout, &stats, ncols, nmg) {
+            let better = match best {
+                None => true,
+                Some((_, c)) => cost < c,
+            };
+            if better {
+                best = Some((layout, cost));
+            }
+        }
+    }
+    best.map(|(l, _)| l.to_string()).unwrap_or_else(|| "none".to_string())
+}
+
+fn assert_close(got: &DenseTensor, want: &DenseTensor, label: &str) {
+    assert!(
+        got.allclose(want, 1e-3, 1e-3),
+        "{label}: kernel diverges from dense reference by {}",
+        got.max_abs_diff(want)
+    );
+}
+
 fn main() {
-    let mode = parse_mode();
+    let args: Vec<String> = std::env::args().collect();
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let full = args.iter().any(|a| a == "--full");
     // (M, K, N): A (M,K) sparse weight, B (K,N) dense activations.
-    let (m_dim, k_dim, n_dim, bench) = match mode {
-        BenchMode::Full => (760, 3072, 4096, Bench::new(2, 8)),
-        BenchMode::Quick => (240, 1024, 512, Bench::new(1, 5)),
+    let (m_dim, k_dim, n_dim, bench) = if full {
+        (760, 3072, 4096, Bench::new(2, 8))
+    } else if smoke {
+        (120, 512, 256, Bench::new(1, 3))
+    } else {
+        (240, 1024, 512, Bench::new(1, 5))
     };
-    println!("# Fig 10: sparse-dense GEMM {m_dim}x{k_dim}x{n_dim} (M chosen divisible by m in {{4,8,10}}) (mode {mode:?})");
+    println!(
+        "# Fig 10: sparse-dense GEMM {m_dim}x{k_dim}x{n_dim} \
+         (M chosen divisible by m in {{4,8,10}}) (smoke={smoke}, full={full})"
+    );
     let flops = gemm_flops(m_dim, k_dim, n_dim);
+    let mut json = JsonReport::new("fig10_gemm");
 
     let mut rng = Pcg64::seeded(3);
     let a = DenseTensor::randn(&[m_dim, k_dim], &mut rng);
@@ -34,8 +82,19 @@ fn main() {
 
     // Dense baseline.
     let dense_t = bench.run(|| dense_gemm::matmul(&a, &b)).median;
-    println!("\nsparsity\tkernel\tmedian_ms\tdense_gflops_equiv\tspeedup_vs_dense");
-    println!("0.00\tdense\t{:.2}\t{:.1}\t1.00", dense_t * 1e3, flops / dense_t / 1e9);
+    println!("\nsparsity\tkernel\tmedian_ms\tdense_gflops_equiv\tspeedup_vs_dense\tchosen_format");
+    println!(
+        "0.00\tdense\t{:.2}\t{:.1}\t1.00\t{}",
+        dense_t * 1e3,
+        flops / dense_t / 1e9,
+        chosen_format(&a, n_dim, None)
+    );
+    json.row(&[
+        ("sparsity", 0.0.into()),
+        ("kernel", "dense".into()),
+        ("median_s", dense_t.into()),
+        ("chosen_format", chosen_format(&a, n_dim, None).as_str().into()),
+    ]);
 
     // Sweep formats: (n, m, g) covering 50-90%.
     for (n, m, g) in [(2usize, 4usize, 4usize), (1, 4, 4), (2, 8, 4), (1, 8, 4), (1, 10, 4)] {
@@ -43,35 +102,94 @@ fn main() {
 
         // n:m:g kernel on a conforming (pruned) weight.
         let nmg = NmgTensor::from_dense(&a, n, m, g);
+        let pruned_nmg = nmg.to_dense();
+        let want_nmg = dense_gemm::matmul(&pruned_nmg, &b);
+        if smoke {
+            assert_close(&nmg_gemm::spmm(&nmg, &b), &want_nmg, "nmg blocked");
+            assert_close(&nmg_gemm::spmm_unblocked(&nmg, &b), &want_nmg, "nmg unblocked");
+        }
+        let chosen = chosen_format(&pruned_nmg, n_dim, Some((n, m, g)));
         let t_nmg = bench.run(|| nmg_gemm::spmm(&nmg, &b)).median;
+        let t_nmg_un = bench.run(|| nmg_gemm::spmm_unblocked(&nmg, &b)).median;
         println!(
-            "{s:.2}\tnmg-{n}:{m}:{g}\t{:.2}\t{:.1}\t{:.2}",
+            "{s:.2}\tnmg-{n}:{m}:{g}\t{:.2}\t{:.1}\t{:.2}\t{chosen}",
             t_nmg * 1e3,
             flops / t_nmg / 1e9,
             dense_t / t_nmg
         );
+        println!(
+            "{s:.2}\tnmg-{n}:{m}:{g}-unblocked\t{:.2}\t{:.1}\t{:.2}\t-",
+            t_nmg_un * 1e3,
+            flops / t_nmg_un / 1e9,
+            dense_t / t_nmg_un
+        );
+        json.row(&[
+            ("sparsity", (s as f64).into()),
+            ("kernel", format!("nmg-{n}:{m}:{g}").as_str().into()),
+            ("median_s", t_nmg.into()),
+            ("unblocked_median_s", t_nmg_un.into()),
+            ("blocked_speedup", (t_nmg_un / t_nmg).into()),
+            ("chosen_format", chosen.as_str().into()),
+        ]);
+        if t_nmg > t_nmg_un {
+            println!("WARNING: blocked nmg slower than unblocked at sparsity {s:.2}");
+        }
 
         // Unstructured comparator (DeepSparse stand-in) at matched sparsity.
         let pruned = ScalarFraction { fraction: s }.prune(&a);
         let csr = CsrTensor::from_dense(&pruned);
+        if smoke {
+            assert_close(&csr_gemm::spmm(&csr, &b), &dense_gemm::matmul(&pruned, &b), "csr");
+        }
         let t_csr = bench.run(|| csr_gemm::spmm(&csr, &b)).median;
         println!(
-            "{s:.2}\tcsr-unstructured\t{:.2}\t{:.1}\t{:.2}",
+            "{s:.2}\tcsr-unstructured\t{:.2}\t{:.1}\t{:.2}\t{}",
             t_csr * 1e3,
             flops / t_csr / 1e9,
-            dense_t / t_csr
+            dense_t / t_csr,
+            chosen_format(&pruned, n_dim, None)
         );
+        json.row(&[
+            ("sparsity", (s as f64).into()),
+            ("kernel", "csr-unstructured".into()),
+            ("median_s", t_csr.into()),
+            ("chosen_format", chosen_format(&pruned, n_dim, None).as_str().into()),
+        ]);
 
         // Block comparator (TVM-block stand-in) at matched sparsity.
         let bpruned = BlockFraction { fraction: s, bh: 4, bw: 4 }.prune(&a);
         let bcsr = BcsrTensor::from_dense(&bpruned, 4, 4);
+        if smoke {
+            let want = dense_gemm::matmul(&bpruned, &b);
+            assert_close(&bcsr_gemm::spmm(&bcsr, &b), &want, "bcsr blocked");
+            assert_close(&bcsr_gemm::spmm_naive(&bcsr, &b), &want, "bcsr naive");
+        }
         let t_bcsr = bench.run(|| bcsr_gemm::spmm(&bcsr, &b)).median;
+        let t_bcsr_naive = bench.run(|| bcsr_gemm::spmm_naive(&bcsr, &b)).median;
         println!(
-            "{s:.2}\tbcsr-4x4\t{:.2}\t{:.1}\t{:.2}",
+            "{s:.2}\tbcsr-4x4\t{:.2}\t{:.1}\t{:.2}\t{}",
             t_bcsr * 1e3,
             flops / t_bcsr / 1e9,
-            dense_t / t_bcsr
+            dense_t / t_bcsr,
+            chosen_format(&bpruned, n_dim, None)
         );
+        println!(
+            "{s:.2}\tbcsr-4x4-naive\t{:.2}\t{:.1}\t{:.2}\t-",
+            t_bcsr_naive * 1e3,
+            flops / t_bcsr_naive / 1e9,
+            dense_t / t_bcsr_naive
+        );
+        json.row(&[
+            ("sparsity", (s as f64).into()),
+            ("kernel", "bcsr-4x4".into()),
+            ("median_s", t_bcsr.into()),
+            ("naive_median_s", t_bcsr_naive.into()),
+            ("blocked_speedup", (t_bcsr_naive / t_bcsr).into()),
+            ("chosen_format", chosen_format(&bpruned, n_dim, None).as_str().into()),
+        ]);
+        if t_bcsr > t_bcsr_naive {
+            println!("WARNING: blocked bcsr slower than naive at sparsity {s:.2}");
+        }
 
         // Shape claim: n:m:g faster than unstructured at every level.
         if t_nmg >= t_csr {
@@ -85,4 +203,12 @@ fn main() {
     let swap = Bench::new(1, 3).run(|| NmgTensor::from_dense_swap(&a, 2, 4, 4)).median;
     println!("greedy\t{:.2} ms", conv * 1e3);
     println!("swap-refine\t{:.2} ms", swap * 1e3);
+
+    if smoke {
+        println!("smoke OK: every kernel matched the dense reference");
+    }
+    match json.write() {
+        Ok(path) => println!("wrote {}", path.display()),
+        Err(e) => eprintln!("failed to write bench json: {e}"),
+    }
 }

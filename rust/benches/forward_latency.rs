@@ -19,6 +19,7 @@ use sten::coordinator::{Engine, FfnMode};
 use sten::formats::NmgTensor;
 use sten::runtime::{ArtifactRuntime, ArtifactSpec, DType, Value};
 use sten::tensor::DenseTensor;
+use sten::tune::{Autotuner, TunePolicy};
 use sten::util::benchkit::{table_header, Bench, JsonReport};
 use sten::util::rng::Pcg64;
 use sten::util::threadpool;
@@ -133,17 +134,33 @@ fn main() {
     threadpool::set_worker_cap(None);
 
     // End-to-end single request (all blocks composed), dense vs n:m:g FFN.
-    table_header("end-to-end forward", &["ffn", "threads", "median_ms", "p95_ms"]);
+    // The chosen-format column is what the cost-model autotuner would store
+    // the layer-0 FFN weight as for this mode's sparsity.
+    table_header(
+        "end-to-end forward",
+        &["ffn", "threads", "median_ms", "p95_ms", "chosen_format"],
+    );
     for (mode_label, mode) in
         [("dense", FfnMode::NativeDense), ("nmg", FfnMode::NativeNmg { n: 2, m: 4, g: 4 })]
     {
         let mut engine = Engine::with_runtime(rt.clone(), tag, mode, 42).expect("engine");
+        let nmg_cfg = match mode {
+            FfnMode::NativeNmg { n, m, g } => Some((n, m, g)),
+            _ => None,
+        };
+        let mut tuner = Autotuner::new(TunePolicy::CostModel);
+        let w1t = engine.param("layer0.w1").transpose2();
+        let ncols = engine.dims.batch * engine.dims.seq;
+        let chosen = tuner
+            .choose(sten::dispatch::global(), &w1t, ncols, nmg_cfg)
+            .map(|d| d.layout.to_string())
+            .unwrap_or_else(|e| format!("error: {e}"));
         let tokens = engine.random_tokens(&mut rng);
         for &nthreads in &threads {
             threadpool::set_worker_cap(Some(nthreads));
             let sample = bench.run(|| engine.forward(&tokens).expect("forward"));
             println!(
-                "{mode_label}\t{nthreads}\t{:.3}\t{:.3}",
+                "{mode_label}\t{nthreads}\t{:.3}\t{:.3}\t{chosen}",
                 sample.median * 1e3,
                 sample.p95 * 1e3
             );
@@ -154,6 +171,7 @@ fn main() {
                 ("threads", nthreads.into()),
                 ("median_s", sample.median.into()),
                 ("p95_s", sample.p95.into()),
+                ("chosen_format", chosen.as_str().into()),
             ]);
         }
     }

@@ -23,10 +23,12 @@ use std::time::Instant;
 
 use anyhow::{anyhow, Result};
 
-use crate::formats::NmgTensor;
+use crate::formats::{AnyTensor, Layout, NmgTensor};
 use crate::kernels::{dense_gemm, elementwise, nmg_gemm};
+use crate::ops::OpKind;
 use crate::runtime::{ArtifactRuntime, Value};
 use crate::tensor::DenseTensor;
+use crate::tune::{Autotuner, Decision};
 use crate::util::rng::Pcg64;
 use crate::util::timer::TimeBreakdown;
 
@@ -79,6 +81,10 @@ struct EngineWeights {
     params: BTreeMap<String, Arc<DenseTensor>>,
     /// Pre-converted W1^T n:m:g weights per layer (NativeNmg mode).
     nmg_w1t: Vec<NmgTensor>,
+    /// Autotuned W1^T per layer ([`Engine::autotune_ffn`]): each weight
+    /// stored in the layout the tuner picked, dispatched as an exact
+    /// phase-1 signature hit. Takes precedence over `nmg_w1t` when present.
+    tuned_w1t: Vec<AnyTensor>,
 }
 
 /// The engine: runtime + shared weights + execution mode.
@@ -143,7 +149,11 @@ impl Engine {
             rt,
             tag: tag.to_string(),
             dims,
-            weights: Arc::new(EngineWeights { params, nmg_w1t: Vec::new() }),
+            weights: Arc::new(EngineWeights {
+                params,
+                nmg_w1t: Vec::new(),
+                tuned_w1t: Vec::new(),
+            }),
             ffn_mode,
             times: TimeBreakdown::new(),
         };
@@ -188,6 +198,9 @@ impl Engine {
         let n_layers = self.dims.n_layers;
         let w = Arc::make_mut(&mut self.weights);
         w.nmg_w1t.clear();
+        // Tuned layouts were chosen for the previous mode's weights; drop
+        // them (re-run autotune_ffn after a mode switch).
+        w.tuned_w1t.clear();
         if let FfnMode::NativeNmg { n, m, g } = mode {
             for l in 0..n_layers {
                 let key = format!("layer{l}.w1");
@@ -199,6 +212,44 @@ impl Engine {
                 w.nmg_w1t.push(nmg);
             }
         }
+    }
+
+    /// Autotune the FFN W1 weights: for every layer, score each registered
+    /// `(format, kernel)` matmul candidate under the tuner's policy, store
+    /// W1^T in the winning layout, and route subsequent native FFN calls
+    /// through the dispatcher (exact phase-1 hit, zero per-call tuning
+    /// overhead). Decisions come from / go into the tuner's cache, so a
+    /// second build of the same engine replays them without re-scoring.
+    ///
+    /// Call after [`Engine::set_ffn_mode`]: in `NativeNmg` mode the weights
+    /// are already pruned, the n:m:g config becomes a tuning candidate, and
+    /// re-materializing into n:m:g is lossless (same-format). When the
+    /// weight set is shared with replicas this engine gets a private copy.
+    pub fn autotune_ffn(&mut self, tuner: &mut Autotuner) -> Result<Vec<Decision>> {
+        let n_layers = self.dims.n_layers;
+        let ncols = self.dims.batch * self.dims.seq;
+        let nmg = match self.ffn_mode {
+            FfnMode::NativeNmg { n, m, g } => Some((n, m, g)),
+            _ => None,
+        };
+        let d = crate::dispatch::global();
+        let w = Arc::make_mut(&mut self.weights);
+        w.tuned_w1t.clear();
+        let mut decisions = Vec::with_capacity(n_layers);
+        for l in 0..n_layers {
+            let key = format!("layer{l}.w1");
+            let w1t = w.params[&key].transpose2(); // (F, D)
+            let dec = tuner.choose(d, &w1t, ncols, nmg)?;
+            let tuned = crate::tune::materialize(&w1t, dec.layout, nmg)?;
+            if dec.layout == Layout::Nmg {
+                // n:m:g re-prunes; keep the served dense weights consistent
+                // (a no-op when set_ffn_mode already pruned them).
+                w.params.insert(key, Arc::new(tuned.to_dense().transpose2()));
+            }
+            w.tuned_w1t.push(tuned);
+            decisions.push(dec);
+        }
+        Ok(decisions)
     }
 
     /// Borrow a parameter.
@@ -326,19 +377,29 @@ impl Engine {
         let ln_b = &params[&pre("ln2_b")];
         let y = elementwise::layernorm_rows(&x2, ln_g.data(), ln_b.data());
 
-        // Fall back to the dense GEMM when no converted weights exist (the
-        // mode was switched by field mutation rather than set_ffn_mode).
+        // Precedence: autotuned layout (dispatcher route) > pre-converted
+        // n:m:g > dense GEMM (the mode was switched by field mutation
+        // rather than set_ffn_mode, so no converted weights exist).
         let nmg_w1t = match self.ffn_mode {
             FfnMode::NativeNmg { .. } => self.weights.nmg_w1t.get(l),
             _ => None,
         };
-        let h = match nmg_w1t {
-            Some(w1t) => {
-                // (F, D) nmg @ (D, rows) -> (F, rows) -> transpose.
-                let yt = y.transpose2();
-                nmg_gemm::spmm(w1t, &yt).transpose2()
+        let h = if let Some(w1t) = self.weights.tuned_w1t.get(l) {
+            // (F, D) tuned @ (D, rows) -> (F, rows) -> transpose. The tuned
+            // signature is registered, so this is an exact phase-1 hit.
+            let yt = AnyTensor::Dense(y.transpose2());
+            let out = crate::dispatch::global().call_ref(OpKind::MatMul, &[w1t, &yt])?;
+            match out {
+                AnyTensor::Dense(t) => t,
+                other => other.to_dense(),
             }
-            None => dense_gemm::matmul(&y, &params[&pre("w1")]),
+            .transpose2()
+        } else if let Some(w1t) = nmg_w1t {
+            // (F, D) nmg @ (D, rows) -> (F, rows) -> transpose.
+            let yt = y.transpose2();
+            nmg_gemm::spmm(w1t, &yt).transpose2()
+        } else {
+            dense_gemm::matmul(&y, &params[&pre("w1")])
         };
         let h = elementwise::bias_add(&h, params[&pre("b1")].data());
         let h = elementwise::gelu(&h);
@@ -363,6 +424,35 @@ mod tests {
         let rt = ArtifactRuntime::open(std::path::PathBuf::from("target/nonexistent-artifacts"))
             .unwrap();
         Engine::new(rt, "tiny", mode, 7).unwrap()
+    }
+
+    #[test]
+    fn autotuned_ffn_matches_untuned_forward_and_replays_from_cache() {
+        use crate::tune::{Autotuner, TunePolicy};
+        let mut rng = Pcg64::seeded(5);
+        let mut e = tiny_engine(FfnMode::NativeNmg { n: 2, m: 4, g: 2 });
+        let tokens = e.random_tokens(&mut rng);
+        let want = e.forward(&tokens).unwrap();
+
+        let mut tuner = Autotuner::new(TunePolicy::CostModel);
+        let decisions = e.autotune_ffn(&mut tuner).unwrap();
+        assert_eq!(decisions.len(), e.dims.n_layers);
+        assert!(tuner.misses >= 1, "fresh cache: at least the first layer is a miss");
+        let got = e.forward(&tokens).unwrap();
+        assert!(got.allclose(&want, 1e-4, 1e-4), "tuned forward must match untuned");
+
+        // A second engine build with the same shapes and sparsity replays
+        // every decision from the cache without re-scoring.
+        let hits_before = tuner.hits;
+        let mut e2 = tiny_engine(FfnMode::NativeNmg { n: 2, m: 4, g: 2 });
+        let replay = e2.autotune_ffn(&mut tuner).unwrap();
+        assert_eq!(replay, decisions);
+        assert_eq!(tuner.hits - hits_before, e.dims.n_layers as u64);
+
+        // Switching modes drops the tuned weights (stale layouts must not
+        // survive a re-sparsification).
+        e.set_ffn_mode(FfnMode::NativeDense);
+        assert!(e.weights.tuned_w1t.is_empty());
     }
 
     #[test]

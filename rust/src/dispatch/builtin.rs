@@ -34,38 +34,38 @@ pub fn register_all(d: &Dispatcher) {
 
     // Sparse-dense matmuls: the inference hot path (Fig. 10 contenders).
     d.register(OpKind::MatMul, &[Nmg, Dense], |ins| {
-        let AnyTensor::Nmg(a) = &ins[0] else { bail!("expected Nmg lhs") };
+        let AnyTensor::Nmg(a) = ins[0] else { bail!("expected Nmg lhs") };
         let Some(b) = ins[1].as_dense() else { bail!("expected dense rhs") };
         Ok(AnyTensor::Dense(nmg_gemm::spmm(a, b)))
     });
     d.register(OpKind::MatMul, &[Csr, Dense], |ins| {
-        let AnyTensor::Csr(a) = &ins[0] else { bail!("expected Csr lhs") };
+        let AnyTensor::Csr(a) = ins[0] else { bail!("expected Csr lhs") };
         let Some(b) = ins[1].as_dense() else { bail!("expected dense rhs") };
         Ok(AnyTensor::Dense(csr_gemm::spmm(a, b)))
     });
     d.register(OpKind::MatMul, &[Bcsr, Dense], |ins| {
-        let AnyTensor::Bcsr(a) = &ins[0] else { bail!("expected Bcsr lhs") };
+        let AnyTensor::Bcsr(a) = ins[0] else { bail!("expected Bcsr lhs") };
         let Some(b) = ins[1].as_dense() else { bail!("expected dense rhs") };
         Ok(AnyTensor::Dense(bcsr_gemm::spmm(a, b)))
     });
     d.register(OpKind::MatMul, &[Masked, Dense], |ins| {
-        let AnyTensor::Masked(a) = &ins[0] else { bail!("expected Masked lhs") };
+        let AnyTensor::Masked(a) = ins[0] else { bail!("expected Masked lhs") };
         let Some(b) = ins[1].as_dense() else { bail!("expected dense rhs") };
         // Values are stored pre-masked: a plain GEMM is exact.
         Ok(AnyTensor::Dense(dense_gemm::matmul(a.values(), b)))
     });
     d.register(OpKind::MatMul, &[Ell, Dense], |ins| {
-        let AnyTensor::Ell(a) = &ins[0] else { bail!("expected Ell lhs") };
+        let AnyTensor::Ell(a) = ins[0] else { bail!("expected Ell lhs") };
         let Some(b) = ins[1].as_dense() else { bail!("expected dense rhs") };
         Ok(AnyTensor::Dense(crate::kernels::ell_gemm::spmm(a, b)))
     });
     d.register(OpKind::MatMul, &[Dense, Csc], |ins| {
         let Some(a) = ins[0].as_dense() else { bail!("expected dense lhs") };
-        let AnyTensor::Csc(b) = &ins[1] else { bail!("expected Csc rhs") };
+        let AnyTensor::Csc(b) = ins[1] else { bail!("expected Csc rhs") };
         Ok(AnyTensor::Dense(crate::kernels::csc_gemm::spmm_dense_csc(a, b)))
     });
     d.register(OpKind::MatMul, &[Nm, Dense], |ins| {
-        let AnyTensor::Nm(a) = &ins[0] else { bail!("expected Nm lhs") };
+        let AnyTensor::Nm(a) = ins[0] else { bail!("expected Nm lhs") };
         let Some(b) = ins[1].as_dense() else { bail!("expected dense rhs") };
         // n:m goes through CSR (its structure is unstructured-within-block).
         let csr = crate::formats::CsrTensor::from_dense(&a.to_dense());
@@ -74,7 +74,7 @@ pub fn register_all(d: &Dispatcher) {
 
     // Sparse add with keep-all: union of nonzeros (the §3.3 example).
     d.register(OpKind::Add, &[Csr, Csr], |ins| {
-        let (AnyTensor::Csr(a), AnyTensor::Csr(b)) = (&ins[0], &ins[1]) else {
+        let (AnyTensor::Csr(a), AnyTensor::Csr(b)) = (ins[0], ins[1]) else {
             bail!("expected Csr operands")
         };
         if a.shape() != b.shape() {
@@ -122,14 +122,14 @@ pub fn register_all(d: &Dispatcher) {
 
     // Elementwise ops preserve masked structure cheaply.
     d.register(OpKind::Relu, &[Masked], |ins| {
-        let AnyTensor::Masked(a) = &ins[0] else { bail!("expected Masked input") };
+        let AnyTensor::Masked(a) = ins[0] else { bail!("expected Masked input") };
         Ok(AnyTensor::Masked(a.with_values(
             &crate::kernels::elementwise::relu(a.values()),
         )))
     });
 }
 
-fn dense_ref(op: OpKind, ins: &[AnyTensor]) -> Result<AnyTensor> {
+fn dense_ref(op: OpKind, ins: &[&AnyTensor]) -> Result<AnyTensor> {
     let dense: Vec<_> = ins
         .iter()
         .map(|t| t.as_dense().cloned().unwrap_or_else(|| t.to_dense()))

@@ -20,6 +20,7 @@ mod patch;
 pub use inplace::{InplaceDispatcher, InplaceImplFn};
 pub use patch::{PatchTable, Patched};
 
+use std::borrow::Cow;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
@@ -28,11 +29,13 @@ use std::time::Instant;
 use anyhow::{bail, Result};
 
 use crate::formats::{convert, AnyTensor, Layout};
-use crate::ops::{dense_reference_any, OpKind};
+use crate::ops::{dense_reference, OpKind};
 use crate::sparsify::{sparsifier_registry, Sparsifier};
 
-/// An operator implementation for one layout signature.
-pub type OpImplFn = fn(&[AnyTensor]) -> Result<AnyTensor>;
+/// An operator implementation for one layout signature. Implementations
+/// take borrowed operands so the hot path (and the conversion path's
+/// unchanged operands) never clone tensors just to build an argument slice.
+pub type OpImplFn = fn(&[&AnyTensor]) -> Result<AnyTensor>;
 
 /// Canonical dispatch signature.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
@@ -63,6 +66,9 @@ pub struct DispatchStats {
     pub dispatch_ns: AtomicU64,
     /// Nanoseconds spent inside kernels / fallbacks.
     pub kernel_ns: AtomicU64,
+    /// Conversion-path operands passed through borrowed because they were
+    /// already in the target layout (each one is a deep clone avoided).
+    pub avoided_clones: AtomicU64,
 }
 
 impl DispatchStats {
@@ -83,6 +89,7 @@ impl DispatchStats {
         self.fallbacks.store(0, Ordering::Relaxed);
         self.dispatch_ns.store(0, Ordering::Relaxed);
         self.kernel_ns.store(0, Ordering::Relaxed);
+        self.avoided_clones.store(0, Ordering::Relaxed);
     }
 
     /// (hits, conversions, fallbacks).
@@ -96,16 +103,42 @@ impl DispatchStats {
         let (_, _, _, d, k) = self.snapshot();
         (d, k)
     }
+
+    /// Deep clones avoided on the conversion path (operands already in the
+    /// candidate layout, passed through borrowed).
+    pub fn avoided_clones(&self) -> u64 {
+        self.avoided_clones.load(Ordering::Relaxed)
+    }
 }
 
 /// The dispatcher: registry + conversion search + dense fallback.
+///
+/// The registry has two phases. During registration (builtins, autotuner
+/// extras) it lives behind a `Mutex`; [`Dispatcher::freeze`] then snapshots
+/// it into a read-only map that every subsequent lookup reads lock-free —
+/// the serving hot path (continuous-batching workers dispatching
+/// concurrently) never contends on the registry again. Unfrozen dispatchers
+/// still work (tests build ad-hoc ones), paying one lock acquisition per
+/// call for the whole phase-1 + phase-2 decision.
 pub struct Dispatcher {
     registry: Mutex<HashMap<Signature, OpImplFn>>,
+    /// Read-only snapshot of `registry`, set once by [`Self::freeze`].
+    frozen: OnceLock<HashMap<Signature, OpImplFn>>,
     /// Preferred conversion targets, in order (§4.4: "generally it only
     /// attempts conversion to formats such as CSR").
     conversion_targets: Vec<Layout>,
     /// Outcome statistics.
     pub stats: DispatchStats,
+}
+
+/// Routing decision for one call, computed under a single registry access.
+enum Decision {
+    /// Phase 1: exact signature hit.
+    Exact(OpImplFn),
+    /// Phase 2 candidates in preference order: (impl, candidate layouts).
+    /// Conversion is attempted outside the registry access; the first
+    /// candidate whose operands all convert losslessly wins.
+    Convert(Vec<(OpImplFn, Vec<Layout>)>),
 }
 
 impl Default for Dispatcher {
@@ -119,12 +152,14 @@ impl Dispatcher {
     pub fn new() -> Self {
         Dispatcher {
             registry: Mutex::new(HashMap::new()),
+            frozen: OnceLock::new(),
             conversion_targets: vec![Layout::Csr],
             stats: DispatchStats::default(),
         }
     }
 
-    /// Dispatcher with all built-in implementations registered.
+    /// Dispatcher with all built-in implementations registered (unfrozen, so
+    /// tests and the autotuner can still register; [`global`] freezes).
     pub fn with_builtins() -> Self {
         let d = Self::new();
         builtin::register_all(&d);
@@ -132,16 +167,45 @@ impl Dispatcher {
     }
 
     /// Register an implementation for a signature (last registration wins).
+    ///
+    /// Panics after [`Self::freeze`]: the frozen map is the one lock-free
+    /// structure the serving hot path reads, so late registration would be
+    /// silently invisible — fail loudly instead.
     pub fn register(&self, op: OpKind, inputs: &[Layout], f: OpImplFn) {
+        assert!(
+            self.frozen.get().is_none(),
+            "dispatcher registry is frozen; register all implementations before freeze()"
+        );
         self.registry
             .lock()
             .unwrap()
             .insert(Signature { op, inputs: inputs.to_vec() }, f);
     }
 
+    /// Snapshot the registry into the read-only, lock-free map used by every
+    /// subsequent lookup. Idempotent; call after all registrations.
+    pub fn freeze(&self) {
+        let snapshot = self.registry.lock().unwrap().clone();
+        let _ = self.frozen.set(snapshot);
+    }
+
+    /// True once [`Self::freeze`] has run.
+    pub fn is_frozen(&self) -> bool {
+        self.frozen.get().is_some()
+    }
+
+    /// Run `f` against the active registry map: the frozen snapshot
+    /// (lock-free) when present, else the build-side map under its lock.
+    fn with_map<R>(&self, f: impl FnOnce(&HashMap<Signature, OpImplFn>) -> R) -> R {
+        match self.frozen.get() {
+            Some(m) => f(m),
+            None => f(&self.registry.lock().unwrap()),
+        }
+    }
+
     /// Number of registered implementations.
     pub fn len(&self) -> usize {
-        self.registry.lock().unwrap().len()
+        self.with_map(|m| m.len())
     }
 
     /// True when no implementations are registered.
@@ -150,53 +214,94 @@ impl Dispatcher {
     }
 
     fn lookup(&self, sig: &Signature) -> Option<OpImplFn> {
-        self.registry.lock().unwrap().get(sig).copied()
+        self.with_map(|m| m.get(sig).copied())
     }
 
-    /// Route an op call (§4.4 flow). Returns the output tensor.
+    /// Input-layout signatures registered for `op`, in unspecified order.
+    /// The autotuner enumerates its (format, kernel) candidates from this.
+    pub fn registered_inputs(&self, op: OpKind) -> Vec<Vec<Layout>> {
+        self.with_map(|m| {
+            m.keys().filter(|s| s.op == op).map(|s| s.inputs.clone()).collect()
+        })
+    }
+
+    /// Compute the routing decision for `sig` under ONE registry access
+    /// (frozen: lock-free; unfrozen: a single lock acquisition, where the
+    /// old per-lookup scheme took up to `1 + 2 x targets`).
+    fn decide(&self, sig: &Signature) -> Decision {
+        self.with_map(|m| {
+            if let Some(&f) = m.get(sig) {
+                return Decision::Exact(f);
+            }
+            // Phase-2 candidates per preferred target: (a) convert only the
+            // sparse inputs (dense stays dense) — covers sparse×dense
+            // kernels; (b) convert every input — covers sparse-sparse.
+            let mut cands = Vec::new();
+            for &target in &self.conversion_targets {
+                let options = [
+                    sig.inputs
+                        .iter()
+                        .map(|&l| if l == Layout::Dense { Layout::Dense } else { target })
+                        .collect::<Vec<_>>(),
+                    sig.inputs.iter().map(|_| target).collect::<Vec<_>>(),
+                ];
+                for cand in options {
+                    if cand == sig.inputs || cands.iter().any(|(_, c)| *c == cand) {
+                        continue;
+                    }
+                    let cand_sig = Signature { op: sig.op, inputs: cand.clone() };
+                    if let Some(&f) = m.get(&cand_sig) {
+                        cands.push((f, cand));
+                    }
+                }
+            }
+            Decision::Convert(cands)
+        })
+    }
+
+    /// Route an op call (§4.4 flow) over owned operands. Delegates to
+    /// [`Self::call_ref`]; prefer that on hot paths to avoid building owned
+    /// argument vectors.
     pub fn call(&self, op: OpKind, inputs: &[AnyTensor]) -> Result<AnyTensor> {
+        let refs: Vec<&AnyTensor> = inputs.iter().collect();
+        self.call_ref(op, &refs)
+    }
+
+    /// Route an op call over borrowed operands — the zero-clone hot path:
+    /// a phase-1 exact hit performs no allocation beyond the kernel's own.
+    pub fn call_ref(&self, op: OpKind, inputs: &[&AnyTensor]) -> Result<AnyTensor> {
         if inputs.len() != op.arity() {
             bail!("{op}: expected {} inputs, got {}", op.arity(), inputs.len());
         }
         let t0 = Instant::now();
+        let sig = Signature { op, inputs: inputs.iter().map(|t| t.layout()).collect() };
+        let decision = self.decide(&sig);
+
         // Phase 1: exact hit.
-        let sig = Signature::of(op, inputs);
-        if let Some(f) = self.lookup(&sig) {
+        if let Decision::Exact(f) = decision {
             self.stats.hits.fetch_add(1, Ordering::Relaxed);
             self.charge_dispatch(t0);
             return self.run_kernel(f, inputs);
         }
 
         // Phase 2: lossless conversion search (§4.4: conversion only to
-        // formats guaranteed lossless, e.g. CSR — never through sparsifiers).
-        // Candidates per preferred target: (a) convert only the sparse
-        // inputs (dense stays dense) — covers sparse×dense kernels; (b)
-        // convert every input — covers sparse-sparse kernels.
-        for &target in &self.conversion_targets {
-            let candidates = [
-                sig.inputs
-                    .iter()
-                    .map(|&l| if l == Layout::Dense { Layout::Dense } else { target })
-                    .collect::<Vec<_>>(),
-                sig.inputs.iter().map(|_| target).collect::<Vec<_>>(),
-            ];
-            for cand in candidates {
-                if cand == sig.inputs {
-                    continue;
-                }
-                let cand_sig = Signature { op, inputs: cand.clone() };
-                if let Some(f) = self.lookup(&cand_sig) {
-                    let converted: Option<Vec<AnyTensor>> = inputs
-                        .iter()
-                        .zip(&cand)
-                        .map(|(t, &l)| convert::lossless(t, l))
-                        .collect();
-                    if let Some(conv) = converted {
-                        self.stats.conversions.fetch_add(1, Ordering::Relaxed);
-                        self.charge_dispatch(t0);
-                        return self.run_kernel(f, &conv);
-                    }
-                }
+        // formats guaranteed lossless, e.g. CSR — never through
+        // sparsifiers). Operands already in the candidate layout pass
+        // through borrowed (counted as avoided clones).
+        let Decision::Convert(cands) = decision else { unreachable!() };
+        for (f, cand) in cands {
+            let converted: Option<Vec<Cow<'_, AnyTensor>>> = inputs
+                .iter()
+                .zip(&cand)
+                .map(|(t, &l)| convert::lossless_cow(t, l))
+                .collect();
+            if let Some(conv) = converted {
+                let borrowed = conv.iter().filter(|c| matches!(c, Cow::Borrowed(_))).count();
+                self.stats.avoided_clones.fetch_add(borrowed as u64, Ordering::Relaxed);
+                self.stats.conversions.fetch_add(1, Ordering::Relaxed);
+                self.charge_dispatch(t0);
+                let refs: Vec<&AnyTensor> = conv.iter().map(|c| c.as_ref()).collect();
+                return self.run_kernel(f, &refs);
             }
         }
 
@@ -204,7 +309,9 @@ impl Dispatcher {
         self.stats.fallbacks.fetch_add(1, Ordering::Relaxed);
         self.charge_dispatch(t0);
         let t1 = Instant::now();
-        let out = dense_reference_any(op, inputs);
+        let dense: Vec<crate::tensor::DenseTensor> =
+            inputs.iter().map(|t| t.to_dense()).collect();
+        let out = dense_reference(op, &dense).map(AnyTensor::Dense);
         self.stats
             .kernel_ns
             .fetch_add(t1.elapsed().as_nanos() as u64, Ordering::Relaxed);
@@ -223,7 +330,7 @@ impl Dispatcher {
         out_fmt.apply(&raw)
     }
 
-    fn run_kernel(&self, f: OpImplFn, inputs: &[AnyTensor]) -> Result<AnyTensor> {
+    fn run_kernel(&self, f: OpImplFn, inputs: &[&AnyTensor]) -> Result<AnyTensor> {
         let t = Instant::now();
         let out = f(inputs);
         self.stats
@@ -281,10 +388,16 @@ impl OutputFormat {
     }
 }
 
-/// The process-wide dispatcher with builtins registered.
+/// The process-wide dispatcher with builtins registered, frozen for
+/// lock-free lookup (register on a local [`Dispatcher`] instead if you need
+/// ad-hoc implementations).
 pub fn global() -> &'static Dispatcher {
     static D: OnceLock<Dispatcher> = OnceLock::new();
-    D.get_or_init(Dispatcher::with_builtins)
+    D.get_or_init(|| {
+        let d = Dispatcher::with_builtins();
+        d.freeze();
+        d
+    })
 }
 
 #[cfg(test)]
@@ -408,6 +521,70 @@ mod tests {
         // Every surviving value exceeds the threshold.
         for &v in out.to_dense().data() {
             assert!(v == 0.0 || v.abs() >= 0.5);
+        }
+    }
+
+    #[test]
+    fn frozen_registry_dispatches_and_rejects_late_registration() {
+        let d = Dispatcher::with_builtins();
+        let before = d.len();
+        d.freeze();
+        assert!(d.is_frozen());
+        assert_eq!(d.len(), before);
+        d.freeze(); // idempotent
+        let a = AnyTensor::Dense(dense(&[4, 6], 30));
+        let b = AnyTensor::Dense(dense(&[6, 3], 31));
+        let out = d.call(OpKind::MatMul, &[a, b]).unwrap();
+        assert_eq!(out.shape(), &[4, 3]);
+        assert_eq!(d.stats.counts(), (1, 0, 0));
+        let late = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            d.register(OpKind::Relu, &[Layout::Csr], |_| bail!("unused"));
+        }));
+        assert!(late.is_err(), "late registration must panic loudly");
+    }
+
+    #[test]
+    fn call_ref_is_the_zero_clone_hot_path() {
+        let d = Dispatcher::with_builtins();
+        let a = AnyTensor::Dense(dense(&[4, 6], 32));
+        let b = AnyTensor::Dense(dense(&[6, 3], 33));
+        let out = d.call_ref(OpKind::MatMul, &[&a, &b]).unwrap();
+        assert_eq!(out.shape(), &[4, 3]);
+        assert_eq!(d.stats.counts(), (1, 0, 0));
+    }
+
+    #[test]
+    fn conversion_path_counts_avoided_clones() {
+        // COO x Dense converts COO -> CSR; the dense rhs is already in the
+        // candidate layout and must pass through borrowed, not cloned.
+        let d = Dispatcher::with_builtins();
+        let mut w = dense(&[6, 6], 34);
+        for (i, x) in w.data_mut().iter_mut().enumerate() {
+            if i % 2 == 0 {
+                *x = 0.0;
+            }
+        }
+        let a = AnyTensor::Coo(crate::formats::CooTensor::from_dense(&w));
+        let b = AnyTensor::Dense(dense(&[6, 4], 35));
+        d.call(OpKind::MatMul, &[a, b]).unwrap();
+        assert_eq!(d.stats.counts(), (0, 1, 0));
+        assert_eq!(d.stats.avoided_clones(), 1);
+        d.stats.reset();
+        assert_eq!(d.stats.avoided_clones(), 0);
+    }
+
+    #[test]
+    fn registered_inputs_enumerates_matmul_candidates() {
+        let d = Dispatcher::with_builtins();
+        let sigs = d.registered_inputs(OpKind::MatMul);
+        for want in [
+            vec![Layout::Dense, Layout::Dense],
+            vec![Layout::Csr, Layout::Dense],
+            vec![Layout::Bcsr, Layout::Dense],
+            vec![Layout::Nmg, Layout::Dense],
+            vec![Layout::Ell, Layout::Dense],
+        ] {
+            assert!(sigs.contains(&want), "missing {want:?}");
         }
     }
 

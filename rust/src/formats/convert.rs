@@ -7,6 +7,8 @@
 //! structured formats (n:m, n:m:g) convert *out* losslessly but never *in*
 //! (going in requires a sparsifier, which may drop values).
 
+use std::borrow::Cow;
+
 use super::{AnyTensor, BcsrTensor, CooTensor, CscTensor, CsrTensor, EllTensor, Layout, MaskedTensor};
 
 /// True when `from -> to` is guaranteed lossless.
@@ -28,14 +30,22 @@ pub fn is_lossless(from: Layout, to: Layout) -> bool {
 /// Convert losslessly, or return `None` when the conversion could lose
 /// information (the caller then falls back to dense-with-mask or errors).
 pub fn lossless(t: &AnyTensor, target: Layout) -> Option<AnyTensor> {
+    lossless_cow(t, target).map(Cow::into_owned)
+}
+
+/// Borrow-preserving variant of [`lossless`]: an operand already in the
+/// target layout comes back as `Cow::Borrowed` — no clone — so the
+/// dispatcher's conversion path only pays for operands that actually change
+/// layout (it counts the borrows as `avoided_clones` in `DispatchStats`).
+pub fn lossless_cow(t: &AnyTensor, target: Layout) -> Option<Cow<'_, AnyTensor>> {
     if t.layout() == target {
-        return Some(t.clone());
+        return Some(Cow::Borrowed(t));
     }
     if !is_lossless(t.layout(), target) {
         return None;
     }
     let dense = t.to_dense();
-    Some(match target {
+    Some(Cow::Owned(match target {
         Layout::Dense => AnyTensor::Dense(dense),
         Layout::Csr => AnyTensor::Csr(CsrTensor::from_dense(&dense)),
         Layout::Csc => AnyTensor::Csc(CscTensor::from_dense(&dense)),
@@ -45,7 +55,7 @@ pub fn lossless(t: &AnyTensor, target: Layout) -> Option<AnyTensor> {
         // Bcsr target needs block-size parameters; not offered as an
         // automatic conversion target. Nm/Nmg/Custom require sparsifiers.
         _ => return None,
-    })
+    }))
 }
 
 /// Exact BCSR conversion with explicit block shape (all nonzero blocks kept).
@@ -91,6 +101,17 @@ mod tests {
         let t = sample();
         let same = lossless(&t, Layout::Csr).unwrap();
         assert_eq!(same.layout(), Layout::Csr);
+    }
+
+    #[test]
+    fn identity_conversion_borrows_instead_of_cloning() {
+        let t = sample();
+        match lossless_cow(&t, Layout::Csr) {
+            Some(Cow::Borrowed(b)) => assert!(std::ptr::eq(b, &t)),
+            other => panic!("expected borrowed identity conversion, got {other:?}"),
+        }
+        // A layout change still produces an owned tensor.
+        assert!(matches!(lossless_cow(&t, Layout::Dense), Some(Cow::Owned(_))));
     }
 
     #[test]

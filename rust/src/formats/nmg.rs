@@ -4,8 +4,10 @@
 //! and Python implementations share semantics (same pattern order, same
 //! greedy conversion) so artifacts and native kernels interoperate.
 //!
-//! Layout recap: a (M, K) matrix with `M % m == 0` is split into slabs of
-//! `m` rows. Within a slab, columns are processed in chunks of
+//! Layout recap: a (M, K) matrix is split into slabs of `m` rows; when
+//! `M % m != 0` the final slab is zero-padded (the logical `shape` keeps the
+//! true row count, and pad rows never re-materialize because their stored
+//! values are all zero). Within a slab, columns are processed in chunks of
 //! `C(m,n) * g` columns; each column keeps `n` of its `m` values, and the
 //! chunk stores its columns permuted so the `C(m,n)` nonzero patterns appear
 //! in a fixed Gray-code-like order, `g` columns per pattern ("group"). The
@@ -95,7 +97,7 @@ pub struct NmgTensor {
     pub c: usize,
     /// Chunks per slab.
     pub chunks: usize,
-    /// Slabs (M / m).
+    /// Slabs (ceil(M / m); the final slab is zero-padded when `M % m != 0`).
     pub slabs: usize,
     /// Kept values, shape (slabs, chunks, C, g, n) flattened.
     pub val: Vec<f32>,
@@ -112,14 +114,16 @@ impl NmgTensor {
     }
 
     /// Greedy magnitude conversion (§5.2, CPU algorithm), parallel over slabs.
+    ///
+    /// Ragged row counts (`rows % m != 0`) are supported: the final slab is
+    /// zero-padded, so no trailing rows are dropped.
     pub fn from_dense(d: &DenseTensor, n: usize, m: usize, g: usize) -> Self {
         assert_eq!(d.rank(), 2, "n:m:g requires 2-D");
         let (rows, k) = (d.rows(), d.cols());
-        assert_eq!(rows % m, 0, "rows {rows} not divisible by m={m}");
         let pats = patterns(m, n);
         let c = pats.len();
         let cc = c * g;
-        let slabs = rows / m;
+        let slabs = rows.div_ceil(m);
         let chunks = k.div_ceil(cc);
         let slot_count = slabs * chunks * c * g;
         let mut val = vec![0f32; slot_count * n];
@@ -139,7 +143,7 @@ impl NmgTensor {
                 let idx_s = unsafe {
                     std::slice::from_raw_parts_mut(idx_ptr.get().add(ibase), chunks * c * g)
                 };
-                convert_slab(d, s, n, m, g, &pats, val_s, idx_s);
+                convert_slab(d, rows, s, n, m, g, &pats, val_s, idx_s);
             }
         });
 
@@ -156,6 +160,9 @@ impl NmgTensor {
         let (c, chunks, g_, nn) = (t.c, t.chunks, t.g, t.n);
         let cc = c * g_;
         let k = d.cols();
+        let rows = d.rows();
+        // Zero-padded read past the true row count (ragged final slab).
+        let at = |r: usize, col: usize| if r < rows { d.get2(r, col) } else { 0.0 };
         for s in 0..t.slabs {
             for ch in 0..chunks {
                 let lo = ch * cc;
@@ -166,7 +173,7 @@ impl NmgTensor {
                     (0..cc).map(|i| if i < ncols { Some(lo + i) } else { None }).collect();
                 let score = |slot: usize, col: usize| -> f32 {
                     let p = slot / g_;
-                    pats[p].iter().map(|&r| d.get2(s * m + r as usize, col).abs()).sum()
+                    pats[p].iter().map(|&r| at(s * m + r as usize, col).abs()).sum()
                 };
                 // Sweep until no improving swap. Bounded by cc^2 per sweep and
                 // monotone improvement, so termination is guaranteed.
@@ -193,7 +200,7 @@ impl NmgTensor {
                         let slot_idx = ((s * chunks + ch) * c * g_) + slot;
                         t.idx[slot_idx] = col as u32;
                         for (j, &r) in pats[p].iter().enumerate() {
-                            t.val[slot_idx * nn + j] = d.get2(s * m + r as usize, col);
+                            t.val[slot_idx * nn + j] = at(s * m + r as usize, col);
                         }
                     }
                 }
@@ -213,10 +220,9 @@ impl NmgTensor {
         val: Vec<f32>,
         idx: Vec<u32>,
     ) -> Self {
-        assert_eq!(shape[0] % m, 0, "rows {} not divisible by m={m}", shape[0]);
         let pats = patterns(m, n);
         let c = pats.len();
-        let slabs = shape[0] / m;
+        let slabs = shape[0].div_ceil(m);
         let chunks = shape[1].div_ceil(c * g);
         assert_eq!(idx.len(), slabs * chunks * c * g, "idx length mismatch");
         assert_eq!(val.len(), idx.len() * n, "val length mismatch");
@@ -225,10 +231,9 @@ impl NmgTensor {
 
     fn template(d: &DenseTensor, n: usize, m: usize, g: usize) -> Self {
         let (rows, k) = (d.rows(), d.cols());
-        assert_eq!(rows % m, 0, "rows {rows} not divisible by m={m}");
         let pats = patterns(m, n);
         let c = pats.len();
-        let slabs = rows / m;
+        let slabs = rows.div_ceil(m);
         let chunks = k.div_ceil(c * g);
         let slot_count = slabs * chunks * c * g;
         NmgTensor {
@@ -256,8 +261,10 @@ impl NmgTensor {
                 let p = (slot / self.g) % self.c;
                 for (j, &r) in self.pats[p].iter().enumerate() {
                     let v = self.val[gi * self.n + j];
-                    if v != 0.0 {
-                        let row = s * self.m + r as usize;
+                    let row = s * self.m + r as usize;
+                    // Pad slots (and pad rows of a ragged final slab) store
+                    // val = 0, so skipping zeros also skips out-of-range rows.
+                    if v != 0.0 && row < self.shape[0] {
                         let cur = out.get2(row, col);
                         out.set2(row, col, cur + v);
                     }
@@ -299,8 +306,10 @@ impl NmgTensor {
 }
 
 /// Greedy assignment for one slab (writes this slab's val/idx slices).
+/// `rows` is the true (possibly ragged) row count; reads past it see zeros.
 fn convert_slab(
     d: &DenseTensor,
+    rows: usize,
     s: usize,
     n: usize,
     m: usize,
@@ -313,6 +322,7 @@ fn convert_slab(
     let cc = c * g;
     let k = d.cols();
     let chunks = k.div_ceil(cc);
+    let at = |r: usize, col: usize| if r < rows { d.get2(r, col) } else { 0.0 };
     let mut scores: Vec<f32> = Vec::new();
     let mut order: Vec<u32> = Vec::new();
     for ch in 0..chunks {
@@ -327,7 +337,7 @@ fn convert_slab(
             for pat in pats {
                 let mut acc = 0f32;
                 for &r in pat {
-                    acc += d.get2(s * m + r as usize, col).abs();
+                    acc += at(s * m + r as usize, col).abs();
                 }
                 scores.push(acc);
             }
@@ -356,7 +366,7 @@ fn convert_slab(
             let slot_idx = ch * cc + p * g + slot;
             idx[slot_idx] = col as u32;
             for (jj, &r) in pats[p].iter().enumerate() {
-                val[slot_idx * n + jj] = d.get2(s * m + r as usize, col);
+                val[slot_idx * n + jj] = at(s * m + r as usize, col);
             }
             assigned += 1;
             if assigned == ncols {
@@ -494,6 +504,70 @@ mod tests {
         let e1 = NmgTensor::from_dense(&d, 2, 4, 1).to_dense().l1_norm();
         let e16 = NmgTensor::from_dense(&d, 2, 4, 16).to_dense().l1_norm();
         assert!(e16 >= e1 * 0.98, "g=16 {e16} vs g=1 {e1}");
+    }
+
+    #[test]
+    fn ragged_rows_are_not_dropped() {
+        // Regression: rows % m != 0 used to assert (and an earlier draft
+        // silently truncated). The final slab must be zero-padded so every
+        // real row survives the round trip.
+        let mut rng = Pcg64::seeded(21);
+        for rows in [1usize, 3, 5, 7, 9, 11] {
+            let d = DenseTensor::randn(&[rows, 30], &mut rng);
+            let t = NmgTensor::from_dense(&d, 2, 4, 2);
+            assert_eq!(t.shape(), &[rows, 30]);
+            assert_eq!(t.slabs, rows.div_ceil(4));
+            let back = t.to_dense();
+            assert_eq!(back.shape(), d.shape());
+            let kept: usize = (0..rows)
+                .map(|r| (0..30).filter(|&c| back.get2(r, c) != 0.0).count())
+                .sum();
+            assert!(kept > 0, "rows={rows}: every row was dropped");
+            // Every kept value is genuine (never invented, incl. pad rows).
+            for r in 0..rows {
+                for c in 0..30 {
+                    let v = back.get2(r, c);
+                    assert!(v == 0.0 || v == d.get2(r, c), "invented value at ({r},{c})");
+                }
+            }
+            // The true last row keeps values: with n=2, m=4 and a ragged slab
+            // the real rows carry all the magnitude, so the final real row
+            // must retain at least one nonzero.
+            let last = (0..30).filter(|&c| back.get2(rows - 1, c) != 0.0).count();
+            assert!(last > 0, "rows={rows}: trailing ragged row dropped");
+        }
+    }
+
+    #[test]
+    fn ragged_rows_swap_conversion_matches_shapes() {
+        let mut rng = Pcg64::seeded(22);
+        let d = DenseTensor::randn(&[6, 26], &mut rng);
+        let t = NmgTensor::from_dense_swap(&d, 2, 4, 2);
+        assert_eq!(t.shape(), &[6, 26]);
+        let back = t.to_dense();
+        for r in 0..6 {
+            for c in 0..26 {
+                let v = back.get2(r, c);
+                assert!(v == 0.0 || v == d.get2(r, c));
+            }
+        }
+        assert!((0..26).any(|c| back.get2(5, c) != 0.0));
+    }
+
+    #[test]
+    fn ragged_from_flat_roundtrips() {
+        let mut rng = Pcg64::seeded(23);
+        let d = DenseTensor::randn(&[7, 30], &mut rng);
+        let t = NmgTensor::from_dense(&d, 2, 4, 2);
+        let t2 = NmgTensor::from_flat(
+            [7, 30],
+            2,
+            4,
+            2,
+            t.val_flat().to_vec(),
+            t.idx_flat().to_vec(),
+        );
+        assert_eq!(t.to_dense().data(), t2.to_dense().data());
     }
 
     #[test]

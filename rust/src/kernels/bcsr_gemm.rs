@@ -5,6 +5,15 @@
 //! scaled by the block occupancy — the classic blocked-sparsity trade-off
 //! the paper discusses (§1: blocked formats are fast but restrict nonzero
 //! placement).
+//!
+//! The default [`spmm`] is register-blocked: per (block row, N-tile) it keeps
+//! the whole `bh x NR` accumulator tile resident across *all* blocks of the
+//! row and stores C exactly once (`const BH` specializations for bh in
+//! {2, 4, 8}), where the naive loop ([`spmm_naive`], kept as the `fig10_gemm`
+//! baseline) re-reads and re-writes C per block. Products are visited in the
+//! same (block, block-column) order but accumulated in one running sum
+//! instead of per-block partials, so the kernels agree to rounding (allclose
+//! against the densified reference is the correctness oracle for both).
 
 use crate::formats::bcsr::BcsrTensor;
 use crate::tensor::DenseTensor;
@@ -12,8 +21,119 @@ use crate::util::threadpool;
 
 const NR: usize = 16;
 
-/// Sparse-dense GEMM: `C = A_bcsr · B`.
+/// Sparse-dense GEMM: `C = A_bcsr · B` (register-blocked kernel).
 pub fn spmm(a: &BcsrTensor, b: &DenseTensor) -> DenseTensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, n) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "spmm inner dim mismatch");
+    let mut out = DenseTensor::zeros(&[m, n]);
+    let (bh, bw) = (a.bh, a.bw);
+    let bd = b.data();
+    let od_ptr = threadpool::SyncPtr::new(out.data_mut().as_mut_ptr());
+    let brows = m / bh;
+    threadpool::parallel_for(brows, 1, |r0, r1| {
+        for br in r0..r1 {
+            // SAFETY: block row br exclusively owns C rows [br*bh, (br+1)*bh).
+            let c_rows =
+                unsafe { std::slice::from_raw_parts_mut(od_ptr.get().add(br * bh * n), bh * n) };
+            let blocks = &a.blocks[a.indptr[br] * bh * bw..a.indptr[br + 1] * bh * bw];
+            let cols = &a.indices[a.indptr[br]..a.indptr[br + 1]];
+            for jj in (0..n).step_by(NR) {
+                let jw = (n - jj).min(NR);
+                match (bh, jw == NR) {
+                    (2, true) => brow_tile::<2, true>(blocks, cols, bw, bd, c_rows, n, jj, jw),
+                    (2, false) => brow_tile::<2, false>(blocks, cols, bw, bd, c_rows, n, jj, jw),
+                    (4, true) => brow_tile::<4, true>(blocks, cols, bw, bd, c_rows, n, jj, jw),
+                    (4, false) => brow_tile::<4, false>(blocks, cols, bw, bd, c_rows, n, jj, jw),
+                    (8, true) => brow_tile::<8, true>(blocks, cols, bw, bd, c_rows, n, jj, jw),
+                    (8, false) => brow_tile::<8, false>(blocks, cols, bw, bd, c_rows, n, jj, jw),
+                    _ => brow_tile_generic(blocks, cols, bh, bw, bd, c_rows, n, jj, jw),
+                }
+            }
+        }
+    });
+    out
+}
+
+/// One (block row, N-tile) pass with the `BH x NR` accumulator resident
+/// across every block of the row; C is written exactly once at the end.
+/// `FULL` selects the fixed-width path (jw == NR, no tail masking).
+#[allow(clippy::too_many_arguments)]
+#[inline]
+fn brow_tile<const BH: usize, const FULL: bool>(
+    blocks: &[f32],
+    cols: &[u32],
+    bw: usize,
+    bd: &[f32],
+    c_rows: &mut [f32],
+    n: usize,
+    jj: usize,
+    jw: usize,
+) {
+    let bsz = BH * bw;
+    let mut acc = [[0f32; NR]; BH];
+    for (bi, &bc) in cols.iter().enumerate() {
+        let blk = &blocks[bi * bsz..(bi + 1) * bsz];
+        let kbase = bc as usize * bw;
+        // Block-column-major micro-GEMM: each B row is loaded once and
+        // broadcast-FMAed into all BH accumulator rows.
+        for p in 0..bw {
+            let brow = &bd[(kbase + p) * n + jj..(kbase + p) * n + jj + jw];
+            for (i, acc_row) in acc.iter_mut().enumerate() {
+                let av = blk[i * bw + p];
+                if FULL {
+                    for (x, &bv) in acc_row.iter_mut().zip(&brow[..NR]) {
+                        *x += av * bv;
+                    }
+                } else {
+                    for (x, &bv) in acc_row[..jw].iter_mut().zip(brow) {
+                        *x += av * bv;
+                    }
+                }
+            }
+        }
+    }
+    for (i, acc_row) in acc.iter().enumerate() {
+        c_rows[i * n + jj..i * n + jj + jw].copy_from_slice(&acc_row[..jw]);
+    }
+}
+
+/// Fallback for bh values without a const specialization.
+#[allow(clippy::too_many_arguments)]
+fn brow_tile_generic(
+    blocks: &[f32],
+    cols: &[u32],
+    bh: usize,
+    bw: usize,
+    bd: &[f32],
+    c_rows: &mut [f32],
+    n: usize,
+    jj: usize,
+    jw: usize,
+) {
+    let bsz = bh * bw;
+    let mut acc = vec![[0f32; NR]; bh];
+    for (bi, &bc) in cols.iter().enumerate() {
+        let blk = &blocks[bi * bsz..(bi + 1) * bsz];
+        let kbase = bc as usize * bw;
+        for p in 0..bw {
+            let brow = &bd[(kbase + p) * n + jj..(kbase + p) * n + jj + jw];
+            for (i, acc_row) in acc.iter_mut().enumerate() {
+                let av = blk[i * bw + p];
+                for (x, &bv) in acc_row[..jw].iter_mut().zip(brow) {
+                    *x += av * bv;
+                }
+            }
+        }
+    }
+    for (i, acc_row) in acc.iter().enumerate() {
+        c_rows[i * n + jj..i * n + jj + jw].copy_from_slice(&acc_row[..jw]);
+    }
+}
+
+/// The pre-blocking kernel (C read-modify-written per block), kept as the
+/// `fig10_gemm` baseline for the register-blocked version.
+pub fn spmm_naive(a: &BcsrTensor, b: &DenseTensor) -> DenseTensor {
     let (m, k) = (a.shape()[0], a.shape()[1]);
     let (k2, n) = (b.rows(), b.cols());
     assert_eq!(k, k2, "spmm inner dim mismatch");
@@ -78,6 +198,8 @@ mod tests {
         let got = spmm(&a, &b);
         let want = dense_gemm::matmul_naive(&d, &b);
         assert!(got.allclose(&want, 1e-4, 1e-4), "diff {}", got.max_abs_diff(&want));
+        let naive = spmm_naive(&a, &b);
+        assert!(got.allclose(&naive, 1e-5, 1e-5), "blocked vs naive {}", got.max_abs_diff(&naive));
     }
 
     #[test]
@@ -86,5 +208,32 @@ mod tests {
         let a = BcsrTensor::from_dense(&d, 4, 4);
         let b = DenseTensor::ones(&[8, 3]);
         assert_eq!(spmm(&a, &b).max_abs(), 0.0);
+        assert_eq!(spmm_naive(&a, &b).max_abs(), 0.0);
+    }
+
+    #[test]
+    fn generic_block_heights_and_tail_tiles() {
+        let mut rng = Pcg64::seeded(61);
+        for (bh, bw, rows, k, n) in
+            [(3usize, 2usize, 9usize, 10usize, 7usize), (5, 3, 10, 9, NR + 5), (2, 4, 8, 16, NR)]
+        {
+            let mut d = DenseTensor::randn(&[rows, k], &mut rng);
+            for (i, x) in d.data_mut().iter_mut().enumerate() {
+                if i % 3 == 0 {
+                    *x = 0.0;
+                }
+            }
+            let a = BcsrTensor::from_dense(&d, bh, bw);
+            let b = DenseTensor::randn(&[k, n], &mut rng);
+            let got = spmm(&a, &b);
+            let want = dense_gemm::matmul_naive(&d, &b);
+            assert!(
+                got.allclose(&want, 1e-4, 1e-4),
+                "bh={bh} bw={bw} diff {}",
+                got.max_abs_diff(&want)
+            );
+            let naive = spmm_naive(&a, &b);
+            assert!(got.allclose(&naive, 1e-5, 1e-5), "blocked vs naive bh={bh} bw={bw}");
+        }
     }
 }

@@ -19,6 +19,13 @@
 //!    traffic matches a dense kernel with panel height m * slabs instead of
 //!    being multiplied by the slab count.
 //!
+//! The default [`spmm`] additionally hoists the pad-slot check out of every
+//! chunk that cannot contain pads (only the final, partial chunk can) and
+//! unrolls the group loop by two in that pad-free region, so the hot loop is
+//! pure broadcast-FMA with two independent B-row streams in flight. The
+//! pre-hoisting kernel is kept as [`spmm_unblocked`] so `fig10_gemm` can
+//! track the win.
+//!
 //! See EXPERIMENTS.md §Perf for the measured iteration log of these choices.
 
 use crate::formats::nmg::NmgTensor;
@@ -38,11 +45,46 @@ pub fn spmm(a: &NmgTensor, b: &DenseTensor) -> DenseTensor {
     out
 }
 
-/// SpMM into a preallocated output buffer.
+/// Pre-hoisting kernel (pad check in every chunk, no group unroll). Kept as
+/// the `fig10_gemm` baseline for the blocked kernel; identical results.
+pub fn spmm_unblocked(a: &NmgTensor, b: &DenseTensor) -> DenseTensor {
+    let (mrows, k) = (a.shape()[0], a.shape()[1]);
+    let (k2, ncols) = (b.rows(), b.cols());
+    assert_eq!(k, k2, "spmm inner dim mismatch: {k} vs {k2}");
+    let mut out = DenseTensor::zeros(&[mrows, ncols]);
+    spmm_into_impl::<false>(a, b.data(), out.data_mut(), ncols);
+    out
+}
+
+/// SpMM into a preallocated output buffer of exactly `a.shape()[0] * ncols`
+/// elements (the logical row count — pad rows of a ragged final slab are
+/// never written).
 pub fn spmm_into(a: &NmgTensor, b: &[f32], c: &mut [f32], ncols: usize) {
+    spmm_into_impl::<true>(a, b, c, ncols);
+}
+
+/// `HOIST` selects the pad-hoisted + group-unrolled fast path; `false`
+/// reproduces the earlier kernel exactly (used as the bench baseline).
+fn spmm_into_impl<const HOIST: bool>(a: &NmgTensor, b: &[f32], c: &mut [f32], ncols: usize) {
+    let mrows = a.shape()[0];
+    assert_eq!(
+        c.len(),
+        mrows * ncols,
+        "spmm output length mismatch: got {}, need rows {mrows} x ncols {ncols}",
+        c.len()
+    );
     // Flattened pattern rows: pattern p occupies pats_flat[p*n .. p*n+n].
     let pats_flat: Vec<usize> =
         a.pats.iter().flat_map(|p| p.iter().map(|&r| r as usize)).collect();
+    // Chunks below this bound hold no pad slots: only the final chunk can be
+    // partial, and only when K does not fill it.
+    let padfree = if HOIST && a.shape()[1] % (a.c * a.g) == 0 {
+        a.chunks
+    } else if HOIST {
+        a.chunks.saturating_sub(1)
+    } else {
+        0
+    };
     let jtiles = ncols.div_ceil(NR);
     let c_ptr = threadpool::SyncPtr::new(c.as_mut_ptr());
     // Parallelize over N tiles: threads own disjoint column stripes of C,
@@ -53,43 +95,53 @@ pub fn spmm_into(a: &NmgTensor, b: &[f32], c: &mut [f32], ncols: usize) {
             let jw = (ncols - jj).min(NR);
             for s in 0..a.slabs {
                 // SAFETY: tile stripes are disjoint columns; slabs are
-                // disjoint rows; each (tile, slab) region is written once.
-                let c_all = unsafe {
-                    std::slice::from_raw_parts_mut(c_ptr.get(), a.slabs * a.m * ncols)
-                };
+                // disjoint rows; each (tile, slab) region is written once,
+                // and all writes stay below mrows * ncols == c.len().
+                let c_all =
+                    unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), mrows * ncols) };
+                let t = Tile { s, ncols, mrows, jj, jw, padfree };
                 match (a.m, jw == NR) {
-                    (4, true) => slab_tile::<4, true>(a, s, b, c_all, ncols, jj, jw, &pats_flat),
-                    (4, false) => slab_tile::<4, false>(a, s, b, c_all, ncols, jj, jw, &pats_flat),
-                    (8, true) => slab_tile::<8, true>(a, s, b, c_all, ncols, jj, jw, &pats_flat),
-                    (8, false) => slab_tile::<8, false>(a, s, b, c_all, ncols, jj, jw, &pats_flat),
-                    (10, true) => slab_tile::<10, true>(a, s, b, c_all, ncols, jj, jw, &pats_flat),
-                    (10, false) => slab_tile::<10, false>(a, s, b, c_all, ncols, jj, jw, &pats_flat),
-                    (16, true) => slab_tile::<16, true>(a, s, b, c_all, ncols, jj, jw, &pats_flat),
-                    (16, false) => slab_tile::<16, false>(a, s, b, c_all, ncols, jj, jw, &pats_flat),
-                    _ => slab_tile_generic(a, s, b, c_all, ncols, jj, jw, &pats_flat),
+                    (4, true) => slab_tile::<4, true>(a, b, c_all, &t, &pats_flat),
+                    (4, false) => slab_tile::<4, false>(a, b, c_all, &t, &pats_flat),
+                    (8, true) => slab_tile::<8, true>(a, b, c_all, &t, &pats_flat),
+                    (8, false) => slab_tile::<8, false>(a, b, c_all, &t, &pats_flat),
+                    (10, true) => slab_tile::<10, true>(a, b, c_all, &t, &pats_flat),
+                    (10, false) => slab_tile::<10, false>(a, b, c_all, &t, &pats_flat),
+                    (16, true) => slab_tile::<16, true>(a, b, c_all, &t, &pats_flat),
+                    (16, false) => slab_tile::<16, false>(a, b, c_all, &t, &pats_flat),
+                    _ => slab_tile_generic(a, b, c_all, &t, &pats_flat),
                 }
             }
         }
     });
 }
 
+/// Per-(slab, N-tile) geometry shared by the kernels.
+struct Tile {
+    s: usize,
+    ncols: usize,
+    /// Logical row count of C (clamps the store for ragged final slabs).
+    mrows: usize,
+    jj: usize,
+    jw: usize,
+    /// Chunks `< padfree` are guaranteed pad-free (fast path eligible).
+    padfree: usize,
+}
+
 /// One (slab, N-tile) pass with the full m x NR accumulator tile resident.
 ///
 /// `FULL` selects the fixed-width fast path (jw == NR), letting LLVM keep
 /// the accumulators in vector registers with no tail masking.
-#[allow(clippy::too_many_arguments)]
 #[inline]
 fn slab_tile<const M: usize, const FULL: bool>(
     a: &NmgTensor,
-    s: usize,
     b: &[f32],
     c: &mut [f32],
-    ncols: usize,
-    jj: usize,
-    jw: usize,
+    t: &Tile,
     pats_flat: &[usize],
 ) {
     debug_assert_eq!(a.m, M);
+    let (s, ncols, jj, jw) = (t.s, t.ncols, t.jj, t.jw);
     let n = a.n;
     let g = a.g;
     let slots_per_slab = a.chunks * a.c * g;
@@ -114,6 +166,36 @@ fn slab_tile<const M: usize, const FULL: bool>(
                 let mut acc0 = [0f32; NR];
                 for ch in ch0..ch1 {
                     let base = ch * cg + p * g;
+                    if FULL && ch < t.padfree {
+                        // Pad-free chunk: no zero check (a zero value only
+                        // adds 0), group loop unrolled by two so two B-row
+                        // streams are in flight per iteration.
+                        let mut gi = 0;
+                        while gi + 2 <= g {
+                            let (sa, sb) = (base + gi, base + gi + 1);
+                            let (va, vb) = (val[sa], val[sb]);
+                            let ka = idx[sa] as usize * ncols + jj;
+                            let kb = idx[sb] as usize * ncols + jj;
+                            let ba = &b[ka..ka + NR];
+                            let bb = &b[kb..kb + NR];
+                            for j in 0..NR {
+                                acc0[j] += va * ba[j];
+                                acc0[j] += vb * bb[j];
+                            }
+                            gi += 2;
+                        }
+                        while gi < g {
+                            let slot = base + gi;
+                            let v0 = val[slot];
+                            let kk = idx[slot] as usize * ncols + jj;
+                            let brow = &b[kk..kk + NR];
+                            for j in 0..NR {
+                                acc0[j] += v0 * brow[j];
+                            }
+                            gi += 1;
+                        }
+                        continue;
+                    }
                     for gi in 0..g {
                         let slot = base + gi;
                         let v0 = val[slot];
@@ -143,6 +225,22 @@ fn slab_tile<const M: usize, const FULL: bool>(
                 let mut acc1 = [0f32; NR];
                 for ch in ch0..ch1 {
                     let base = ch * cg + p * g;
+                    if FULL && ch < t.padfree {
+                        // Pad-free chunk: checkless dual-row broadcast FMA.
+                        for gi in 0..g {
+                            let slot = base + gi;
+                            let v0 = val[slot * 2];
+                            let v1 = val[slot * 2 + 1];
+                            let kk = idx[slot] as usize * ncols + jj;
+                            let brow = &b[kk..kk + NR];
+                            for j in 0..NR {
+                                let bv = brow[j];
+                                acc0[j] += v0 * bv;
+                                acc1[j] += v1 * bv;
+                            }
+                        }
+                        continue;
+                    }
                     for gi in 0..g {
                         let slot = base + gi;
                         let v0 = val[slot * 2];
@@ -182,8 +280,8 @@ fn slab_tile<const M: usize, const FULL: bool>(
                         let kk = idx[slot] as usize;
                         let vslot = &val[slot * n..slot * n + n];
                         let brow = &b[kk * ncols + jj..kk * ncols + jj + jw];
-                        for (t, &row) in rows.iter().enumerate() {
-                            let av = vslot[t];
+                        for (tt, &row) in rows.iter().enumerate() {
+                            let av = vslot[tt];
                             if av == 0.0 {
                                 continue;
                             }
@@ -197,25 +295,21 @@ fn slab_tile<const M: usize, const FULL: bool>(
         }
     }
     }
-    // Single store of the whole slab tile.
+    // Single store of the whole slab tile, clamped to the logical row count
+    // (a ragged final slab's pad rows have no backing C storage).
     for (r, acc_row) in acc.iter().enumerate() {
-        let crow = &mut c[(s * M + r) * ncols + jj..(s * M + r) * ncols + jj + jw];
+        let row = s * M + r;
+        if row >= t.mrows {
+            break;
+        }
+        let crow = &mut c[row * ncols + jj..row * ncols + jj + jw];
         crow.copy_from_slice(&acc_row[..jw]);
     }
 }
 
 /// Fallback for m values without a const specialization.
-#[allow(clippy::too_many_arguments)]
-fn slab_tile_generic(
-    a: &NmgTensor,
-    s: usize,
-    b: &[f32],
-    c: &mut [f32],
-    ncols: usize,
-    jj: usize,
-    jw: usize,
-    pats_flat: &[usize],
-) {
+fn slab_tile_generic(a: &NmgTensor, b: &[f32], c: &mut [f32], t: &Tile, pats_flat: &[usize]) {
+    let (s, ncols, jj, jw) = (t.s, t.ncols, t.jj, t.jw);
     let (m, n, g) = (a.m, a.n, a.g);
     let slots_per_slab = a.chunks * a.c * g;
     let val = &a.val[s * slots_per_slab * n..(s + 1) * slots_per_slab * n];
@@ -230,8 +324,8 @@ fn slab_tile_generic(
                 let vslot = &val[slot * n..slot * n + n];
                 slot += 1;
                 let brow = &b[kk * ncols + jj..kk * ncols + jj + jw];
-                for (t, &row) in rows.iter().enumerate() {
-                    let av = vslot[t];
+                for (tt, &row) in rows.iter().enumerate() {
+                    let av = vslot[tt];
                     if av == 0.0 {
                         continue;
                     }
@@ -243,7 +337,11 @@ fn slab_tile_generic(
         }
     }
     for (r, acc_row) in acc.iter().enumerate() {
-        let crow = &mut c[(s * m + r) * ncols + jj..(s * m + r) * ncols + jj + jw];
+        let row = s * m + r;
+        if row >= t.mrows {
+            break;
+        }
+        let crow = &mut c[row * ncols + jj..row * ncols + jj + jw];
         crow.copy_from_slice(&acc_row[..jw]);
     }
 }
@@ -260,8 +358,12 @@ mod tests {
     use crate::util::rng::Pcg64;
 
     fn check_format(m: usize, n: usize, g: usize, slabs: usize, k: usize, ncols: usize, seed: u64) {
+        check_rows(m, n, g, slabs * m, k, ncols, seed);
+    }
+
+    fn check_rows(m: usize, n: usize, g: usize, rows: usize, k: usize, ncols: usize, seed: u64) {
         let mut rng = Pcg64::seeded(seed);
-        let dense = DenseTensor::randn(&[slabs * m, k], &mut rng);
+        let dense = DenseTensor::randn(&[rows, k], &mut rng);
         let a = NmgTensor::from_dense(&dense, n, m, g);
         let b = DenseTensor::randn(&[k, ncols], &mut rng);
         let got = spmm(&a, &b);
@@ -270,6 +372,12 @@ mod tests {
             got.allclose(&want, 1e-4, 1e-4),
             "{n}:{m}:{g} mismatch, diff {}",
             got.max_abs_diff(&want)
+        );
+        let unblocked = spmm_unblocked(&a, &b);
+        assert!(
+            got.allclose(&unblocked, 1e-4, 1e-4),
+            "{n}:{m}:{g} blocked vs unblocked diff {}",
+            got.max_abs_diff(&unblocked)
         );
     }
 
@@ -311,6 +419,30 @@ mod tests {
     }
 
     #[test]
+    fn ragged_rows_match_ref() {
+        // Regression: ragged row counts used to assert in from_dense and
+        // would have written past c.len() here. Sweep slab remainders.
+        for (rows, seed) in [(5usize, 60u64), (7, 61), (9, 62), (3, 63)] {
+            check_rows(4, 2, 2, rows, 37, 21, seed);
+            check_rows(4, 1, 4, rows, 40, NR + 3, seed + 100);
+        }
+        check_rows(6, 3, 2, 7, 45, 19, 70); // generic path, ragged
+        check_rows(10, 1, 2, 14, 50, 18, 71);
+    }
+
+    #[test]
+    #[should_panic(expected = "output length mismatch")]
+    fn spmm_into_rejects_wrong_output_length() {
+        let mut rng = Pcg64::seeded(64);
+        let dense = DenseTensor::randn(&[6, 20], &mut rng);
+        let a = NmgTensor::from_dense(&dense, 2, 4, 2);
+        let b = DenseTensor::randn(&[20, 8], &mut rng);
+        // Padded-slab sizing (8 rows) instead of the logical 6 rows.
+        let mut c = vec![0f32; 8 * 8];
+        spmm_into(&a, b.data(), &mut c, 8);
+    }
+
+    #[test]
     fn prop_matches_ref() {
         proptest::check(
             "nmg-spmm-vs-ref",
@@ -318,17 +450,20 @@ mod tests {
             |rng| {
                 let fmts = [(4usize, 2usize, 2usize), (4, 1, 4), (8, 2, 1), (10, 1, 2)];
                 let (m, n, g) = fmts[rng.below(4) as usize];
-                let slabs = 1 + rng.below(3) as usize;
+                // Ragged row counts on purpose: any remainder mod m is legal.
+                let rows = 1 + rng.below(3 * m as u64) as usize;
                 let k = 1 + rng.below(60) as usize;
                 let ncols = 1 + rng.below(40) as usize;
-                (m, n, g, slabs, k, ncols, rng.next_u64())
+                (m, n, g, rows, k, ncols, rng.next_u64())
             },
-            |&(m, n, g, slabs, k, ncols, seed)| {
+            |&(m, n, g, rows, k, ncols, seed)| {
                 let mut rng = Pcg64::seeded(seed);
-                let dense = DenseTensor::randn(&[slabs * m, k], &mut rng);
+                let dense = DenseTensor::randn(&[rows, k], &mut rng);
                 let a = NmgTensor::from_dense(&dense, n, m, g);
                 let b = DenseTensor::randn(&[k, ncols], &mut rng);
-                spmm(&a, &b).allclose(&spmm_ref(&a, &b), 1e-3, 1e-3)
+                let got = spmm(&a, &b);
+                got.allclose(&spmm_ref(&a, &b), 1e-3, 1e-3)
+                    && got.allclose(&spmm_unblocked(&a, &b), 1e-3, 1e-3)
             },
         );
     }

@@ -21,6 +21,8 @@
 //! * [`dist`] — data-parallel gradient synchronization with sparse handling (§4.6).
 //! * [`runtime`] — manifest-driven executor for AOT-described JAX/Pallas
 //!   artifacts (L2/L1), currently backed by a hermetic native interpreter.
+//! * [`tune`] — cost-model / microbench format autotuner with a
+//!   schema-versioned, deterministic decision cache.
 //! * [`coordinator`] — batched sparse inference engine with dispatch/runtime
 //!   timing breakdown (Fig 11), plus the concurrent deadline-batching
 //!   serving front-end (bounded queue, N weight-sharing engine replicas).
@@ -51,6 +53,7 @@ pub mod model;
 pub mod train;
 pub mod dist;
 pub mod runtime;
+pub mod tune;
 pub mod coordinator;
 pub mod energy;
 

@@ -3,7 +3,9 @@
 //! Subcommands:
 //!
 //! * `info`     — print artifact manifest + dispatcher summary.
-//! * `infer`    — run sparse/dense encoder inference over the AOT artifacts.
+//! * `infer`    — run sparse/dense encoder inference over the AOT artifacts
+//!   (`--autotune [--tune-policy cost|bench]` picks per-layer FFN weight
+//!   formats via the cost-model autotuner, cached across runs).
 //! * `serve`    — run the dynamic batcher over synthetic requests
 //!   (`--replicas N` switches to the concurrent deadline-batching server;
 //!   `--models dense:2,nmg:2 --weights 1,3` serves a multi-model registry
@@ -26,6 +28,7 @@ use sten::model::{MlpSpec, SparsityBuilder};
 use sten::runtime::ArtifactRuntime;
 use sten::sparsify::GroupedNm;
 use sten::tensor::DenseTensor;
+use sten::tune::{Autotuner, TuneCache, TunePolicy};
 use sten::util::cli::Args;
 use sten::util::rng::Pcg64;
 
@@ -67,6 +70,32 @@ fn infer(args: &Args) -> Result<()> {
     let iters: usize = args.num("iters", 3);
     let rt = ArtifactRuntime::open_default()?;
     let mut engine = Engine::new(rt, &tag, mode, 42)?;
+    if args.flag("autotune") {
+        // Pick per-layer FFN weight formats; decisions replay from the
+        // schema-versioned cache (`$STEN_AUTOTUNE_CACHE` or
+        // `target/autotune_cache.json`) on later runs.
+        let policy = match args.get_or("tune-policy", "cost").as_str() {
+            "bench" => TunePolicy::Microbench { warmup: 1, iters: 3 },
+            _ => TunePolicy::CostModel,
+        };
+        let cache_path = TuneCache::default_path();
+        let mut tuner = Autotuner::with_cache(policy, TuneCache::load(&cache_path)?);
+        let decisions = engine.autotune_ffn(&mut tuner)?;
+        for (l, d) in decisions.iter().enumerate() {
+            println!(
+                "autotune layer {l}: {} via {} (cost {:.3e}, {})",
+                d.layout, d.kernel, d.cost, d.policy
+            );
+        }
+        println!(
+            "autotune: {} hits, {} misses; cache {} entries -> {}",
+            tuner.hits,
+            tuner.misses,
+            tuner.cache.len(),
+            cache_path.display()
+        );
+        tuner.cache.save(&cache_path)?;
+    }
     let mut rng = Pcg64::seeded(7);
     let tokens = engine.random_tokens(&mut rng);
     for i in 0..iters {

@@ -20,6 +20,7 @@ use anyhow::{bail, Result};
 use crate::dispatch::OutputFormat;
 use crate::formats::Layout;
 use crate::sparsify::{sparsifier_registry, Sparsifier};
+use crate::tune::{Autotuner, TunePolicy};
 
 use super::graph::GraphModel;
 
@@ -35,6 +36,10 @@ pub struct SparsityBuilder {
     weights: BTreeMap<String, WeightMark>,
     interms: BTreeMap<String, OutputFormat>,
     weight_grads: BTreeMap<String, OutputFormat>,
+    /// Weights whose storage layout the autotuner picks: name -> expected
+    /// dense rhs columns of the consuming matmul (the cost model's N).
+    autos: BTreeMap<String, usize>,
+    tuner: Option<Autotuner>,
 }
 
 impl SparsityBuilder {
@@ -66,6 +71,24 @@ impl SparsityBuilder {
         self.weight_grads.insert(name.to_string(), fmt);
     }
 
+    /// Let the autotuner pick the storage layout for a (possibly already
+    /// sparsified) weight: [`SparsityBuilder::get_sparse_model`] scores every
+    /// registered lossless `(format, kernel)` matmul candidate and re-stores
+    /// the weight in the winner. `ncols` is the expected dense rhs column
+    /// count of the consuming matmul (the cost model's N). Runs after
+    /// explicit [`SparsityBuilder::set_weight`] marks, so the two compose:
+    /// prune first, then pick the layout the pruned weight executes best in.
+    pub fn set_weight_auto(&mut self, name: &str, ncols: usize) {
+        self.autos.insert(name.to_string(), ncols);
+    }
+
+    /// Supply a pre-loaded autotuner (policy + decision cache) for
+    /// [`SparsityBuilder::set_weight_auto`] marks. Defaults to a fresh
+    /// cost-model tuner.
+    pub fn set_tuner(&mut self, tuner: Autotuner) {
+        self.tuner = Some(tuner);
+    }
+
     /// Apply all marks, producing the sparse model. Errors on unknown traced
     /// names (catching typos early, like STen).
     pub fn get_sparse_model(self, mut model: GraphModel) -> Result<GraphModel> {
@@ -88,6 +111,25 @@ impl SparsityBuilder {
                 );
             };
             node.out_fmt = Some(fmt);
+        }
+        if !self.autos.is_empty() {
+            let d = crate::dispatch::global();
+            let mut tuner =
+                self.tuner.unwrap_or_else(|| Autotuner::new(TunePolicy::CostModel));
+            for (name, ncols) in self.autos {
+                let Some(w) = model.weights.get(&name) else {
+                    bail!(
+                        "set_weight_auto: unknown weight {name:?} (have {:?})",
+                        model.weight_names()
+                    );
+                };
+                // Densify (lossless for every layout), score, re-store in
+                // the winning layout. No n:m:g config here: the builder path
+                // only reformats, never re-prunes.
+                let dense = w.to_dense();
+                let dec = tuner.choose(d, &dense, ncols, None)?;
+                model.weights.insert(name, crate::tune::materialize(&dense, dec.layout, None)?);
+            }
         }
         for (name, fmt) in self.weight_grads {
             if !model.weights.contains_key(&name) {
@@ -158,6 +200,29 @@ mod tests {
         sb.set_weight("fc1.w", Box::new(GroupedNm { n: 2, m: 4, g: 2 }), Layout::Nmg);
         let sparse = sb.get_sparse_model(model()).unwrap();
         assert_eq!(sparse.weights["fc1.w"].layout(), Layout::Nmg);
+    }
+
+    #[test]
+    fn auto_weight_picks_a_sparse_layout_for_pruned_weight() {
+        // Prune fc1.w hard, then let the tuner pick its storage layout: at
+        // 95% unstructured sparsity no cost model should keep it dense.
+        let mut sb = SparsityBuilder::new();
+        sb.set_weight("fc1.w", Box::new(ScalarFraction { fraction: 0.95 }), Layout::Csr);
+        sb.set_weight_auto("fc1.w", 4);
+        let sparse = sb.get_sparse_model(model()).unwrap();
+        let w = &sparse.weights["fc1.w"];
+        assert_ne!(w.layout(), Layout::Dense, "95% sparse weight must not stay dense");
+        // The reformat is lossless: the forward still runs and shapes hold.
+        let d = Dispatcher::with_builtins();
+        let mut rng = Pcg64::seeded(502);
+        let x = AnyTensor::Dense(DenseTensor::randn(&[2, 8], &mut rng));
+        let y = sparse.forward(&d, &[x]).unwrap();
+        assert_eq!(y.shape(), &[2, 4]);
+
+        // Unknown names are rejected like every other mark.
+        let mut sb = SparsityBuilder::new();
+        sb.set_weight_auto("typo.w", 4);
+        assert!(sb.get_sparse_model(model()).is_err());
     }
 
     #[test]

@@ -64,6 +64,81 @@ impl Json {
             other => bail!("expected number, got {other:?}"),
         }
     }
+
+    /// Numeric view as f64.
+    pub fn f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(n) => Ok(*n),
+            other => bail!("expected number, got {other:?}"),
+        }
+    }
+
+    /// Deterministic serialization: object keys emitted in sorted order, so
+    /// semantically identical documents are byte-identical. Used by the
+    /// autotune cache, whose on-disk bytes are part of its determinism
+    /// contract.
+    pub fn to_string_sorted(&self) -> String {
+        let mut out = String::new();
+        self.write_sorted(&mut out);
+        out
+    }
+
+    fn write_sorted(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(n) => {
+                // Integral values print without a fractional part so the
+                // output round-trips through the parser unchanged.
+                if n.fract() == 0.0 && n.abs() < 9e15 {
+                    out.push_str(&format!("{}", *n as i64));
+                } else {
+                    out.push_str(&format!("{n}"));
+                }
+            }
+            Json::Str(s) => write_escaped(s, out),
+            Json::Arr(items) => {
+                out.push('[');
+                for (i, item) in items.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    item.write_sorted(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(map) => {
+                let mut keys: Vec<&String> = map.keys().collect();
+                keys.sort_unstable();
+                out.push('{');
+                for (i, k) in keys.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    write_escaped(k, out);
+                    out.push(':');
+                    map[*k].write_sorted(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+fn write_escaped(s: &str, out: &mut String) {
+    out.push('"');
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\t' => out.push_str("\\t"),
+            '\r' => out.push_str("\\r"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out.push('"');
 }
 
 struct Parser<'a> {
@@ -415,6 +490,18 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("1 2").is_err());
         assert!(Json::parse("{\"a\" 1}").is_err());
+    }
+
+    #[test]
+    fn sorted_serialization_is_deterministic_and_roundtrips() {
+        let text = r#"{"z": 1, "a": [true, null, "x\n", -2.5], "m": {"k2": 3, "k1": 4.0}}"#;
+        let v = Json::parse(text).unwrap();
+        let s = v.to_string_sorted();
+        assert_eq!(s, r#"{"a":[true,null,"x\n",-2.5],"m":{"k1":4,"k2":3},"z":1}"#);
+        // Round-trip: parse(serialize(v)) == v, and re-serializing is stable.
+        let v2 = Json::parse(&s).unwrap();
+        assert_eq!(v2, v);
+        assert_eq!(v2.to_string_sorted(), s);
     }
 
     #[test]

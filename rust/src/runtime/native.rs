@@ -146,7 +146,7 @@ fn nmg_meta(m: usize, n: usize, g: usize, mdim: usize, k: usize) -> Vec<(&'stati
         ("g", jnum(g)),
         ("C", jnum(c)),
         ("CH", jnum(ch)),
-        ("S", jnum(mdim / m)),
+        ("S", jnum(mdim.div_ceil(m))),
         ("M", jnum(mdim)),
         ("K", jnum(k)),
     ]
@@ -364,7 +364,9 @@ pub fn prepare(spec: &ArtifactSpec) -> Result<()> {
             &spec.meta
         };
         let (m, n) = (meta_usize(nmg, "m")?, meta_usize(nmg, "n")?);
-        if n == 0 || n > m || meta_usize(nmg, "M")? % m != 0 {
+        // Ragged M (rows % m != 0) is fine: the format zero-pads the final
+        // slab. Only the n <= m structural invariant is checked here.
+        if n == 0 || n > m || meta_usize(nmg, "M")? == 0 {
             bail!("{name}: invalid n:m:g meta");
         }
     }

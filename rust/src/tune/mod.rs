@@ -1,0 +1,610 @@
+//! Cost-model format autotuner.
+//!
+//! At engine build time, for each (weight shape, sparsity level) tuple the
+//! autotuner scores every registered `(format, kernel)` matmul candidate —
+//! either with a deterministic cost model or by microbenchmarking the real
+//! kernels — picks the winner, and caches the decision in a schema-versioned
+//! on-disk cache keyed by shape + sparsity + n:m:g config. A tuned layer then
+//! routes through [`crate::dispatch`] with an exact phase-1 signature hit, so
+//! steady-state execution pays zero per-call tuning overhead.
+//!
+//! Cache invalidation is by construction: the key embeds every input the
+//! decision depends on (op, M/K/N, sparsity permille, n:m:g parameters), so a
+//! shape or sparsity change misses the cache and re-tunes, and a schema bump
+//! drops the whole file. Serialization goes through
+//! [`Json::to_string_sorted`], so "same decisions" implies "byte-identical
+//! cache file" — the determinism contract the autotune tests pin down.
+
+use std::collections::{BTreeMap, HashMap};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::dispatch::Dispatcher;
+use crate::formats::{
+    AnyTensor, BcsrTensor, CooTensor, CscTensor, CsrTensor, EllTensor, Layout, MaskedTensor,
+    NmgTensor,
+};
+use crate::ops::OpKind;
+use crate::runtime::Json;
+use crate::tensor::DenseTensor;
+use crate::util::rng::Pcg64;
+
+/// Cache schema version: bump on any change to the key format, the decision
+/// fields, or the cost model's units. A loaded cache with a different schema
+/// is dropped wholesale (stale decisions are worse than a re-tune).
+pub const TUNE_SCHEMA_VERSION: u64 = 1;
+
+/// Block edge used for BCSR candidates.
+const BCSR_BLOCK: usize = 4;
+
+/// How candidates are scored.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TunePolicy {
+    /// Deterministic analytic cost model (effective-flop units). Same inputs
+    /// always produce the same decisions — the reproducible default.
+    CostModel,
+    /// Wall-clock microbenchmark of the real kernels through the dispatcher
+    /// (best-of-`iters` after `warmup` unrecorded runs). More faithful,
+    /// machine-dependent; the cache makes replays deterministic.
+    Microbench {
+        /// Unrecorded warm-up runs per candidate.
+        warmup: usize,
+        /// Recorded runs per candidate (best is kept).
+        iters: usize,
+    },
+}
+
+impl TunePolicy {
+    /// Stable name recorded in cached decisions.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TunePolicy::CostModel => "cost_model",
+            TunePolicy::Microbench { .. } => "microbench",
+        }
+    }
+}
+
+/// Sparsity statistics of a weight matrix, measured once per tuning query.
+#[derive(Debug, Clone, Copy)]
+pub struct WeightStats {
+    /// Matrix rows (M of the matmul).
+    pub rows: usize,
+    /// Matrix cols (K of the matmul).
+    pub cols: usize,
+    /// Stored nonzeros.
+    pub nnz: usize,
+    /// Maximum nonzeros in any single row (ELL width).
+    pub max_row_nnz: usize,
+    /// Occupied 4x4 blocks (BCSR payload count; 0 when not block-divisible).
+    pub blocks_occupied: usize,
+}
+
+impl WeightStats {
+    /// Measure a dense weight.
+    pub fn measure(d: &DenseTensor) -> WeightStats {
+        assert_eq!(d.rank(), 2, "autotuner expects 2-D weights");
+        let (rows, cols) = (d.rows(), d.cols());
+        let mut nnz = 0usize;
+        let mut max_row_nnz = 0usize;
+        for r in 0..rows {
+            let row_nnz = (0..cols).filter(|&c| d.get2(r, c) != 0.0).count();
+            nnz += row_nnz;
+            max_row_nnz = max_row_nnz.max(row_nnz);
+        }
+        let mut blocks_occupied = 0usize;
+        if rows % BCSR_BLOCK == 0 && cols % BCSR_BLOCK == 0 {
+            for br in 0..rows / BCSR_BLOCK {
+                for bc in 0..cols / BCSR_BLOCK {
+                    let occupied = (0..BCSR_BLOCK).any(|i| {
+                        (0..BCSR_BLOCK)
+                            .any(|j| d.get2(br * BCSR_BLOCK + i, bc * BCSR_BLOCK + j) != 0.0)
+                    });
+                    if occupied {
+                        blocks_occupied += 1;
+                    }
+                }
+            }
+        }
+        WeightStats { rows, cols, nnz, max_row_nnz, blocks_occupied }
+    }
+
+    /// Fraction of zero entries in parts-per-thousand (integer, so it can be
+    /// embedded in cache keys without float formatting hazards).
+    pub fn sparsity_permille(&self) -> usize {
+        let numel = self.rows * self.cols;
+        if numel == 0 {
+            return 0;
+        }
+        1000 - (self.nnz * 1000) / numel
+    }
+}
+
+/// Analytic cost of running `weight @ B` (B is `cols x ncols` dense) with the
+/// weight stored in `layout`, in effective-flop units: useful flops divided
+/// by each kernel's measured-on-this-codebase efficiency relative to the
+/// blocked dense GEMM. `None` means the layout is not a viable candidate for
+/// this weight (e.g. BCSR on non-divisible shapes, n:m:g without a config).
+pub fn model_cost(
+    layout: Layout,
+    stats: &WeightStats,
+    ncols: usize,
+    nmg: Option<(usize, usize, usize)>,
+) -> Option<f64> {
+    let n2 = 2.0 * ncols as f64;
+    // Per-format inefficiency factors (relative to dense-GEMM flops): the
+    // structured formats stream contiguously (near-dense), scalar CSR pays
+    // per-element indexing — the paper's §1 blocked-vs-flexible trade-off.
+    match layout {
+        Layout::Dense => Some(n2 * (stats.rows * stats.cols) as f64 * 1.0),
+        Layout::Nmg => {
+            let (n, m, _) = nmg?;
+            // After n:m pruning, n/m of the elements survive; the kernel
+            // streams them slab-contiguously.
+            let kept = (stats.rows * stats.cols) as f64 * n as f64 / m as f64;
+            Some(n2 * kept * 1.25)
+        }
+        Layout::Bcsr => {
+            if stats.rows % BCSR_BLOCK != 0 || stats.cols % BCSR_BLOCK != 0 {
+                return None;
+            }
+            // Every stored block multiplies densely, zeros included.
+            let slots = (stats.blocks_occupied * BCSR_BLOCK * BCSR_BLOCK) as f64;
+            Some(n2 * slots * 1.1)
+        }
+        Layout::Ell => Some(n2 * (stats.rows * stats.max_row_nnz) as f64 * 2.5),
+        Layout::Csr => Some(n2 * stats.nnz as f64 * 3.0),
+        // Csc/Coo/Masked/Nm matmuls exist but are never cheaper than the
+        // candidates above under this model; leaving them out keeps the
+        // candidate set (and the cache) small.
+        _ => None,
+    }
+}
+
+/// One cached tuning decision.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Decision {
+    /// Winning storage layout.
+    pub layout: Layout,
+    /// Human-readable kernel the dispatcher will route to.
+    pub kernel: String,
+    /// Winning score (effective flops for `CostModel`, best seconds for
+    /// `Microbench`).
+    pub cost: f64,
+    /// Policy that produced the decision.
+    pub policy: String,
+}
+
+/// Kernel label for a layout's registered matmul implementation.
+fn kernel_name(layout: Layout) -> &'static str {
+    match layout {
+        Layout::Dense => "dense_gemm::matmul",
+        Layout::Csr => "csr_gemm::spmm",
+        Layout::Csc => "csc_gemm::spmm",
+        Layout::Ell => "ell_gemm::spmm",
+        Layout::Bcsr => "bcsr_gemm::spmm",
+        Layout::Nmg => "nmg_gemm::spmm",
+        _ => "dispatch::fallback",
+    }
+}
+
+fn parse_layout(s: &str) -> Result<Layout> {
+    Ok(match s {
+        "Dense" => Layout::Dense,
+        "Csr" => Layout::Csr,
+        "Csc" => Layout::Csc,
+        "Coo" => Layout::Coo,
+        "Ell" => Layout::Ell,
+        "Bcsr" => Layout::Bcsr,
+        "Nm" => Layout::Nm,
+        "Nmg" => Layout::Nmg,
+        "Masked" => Layout::Masked,
+        other => bail!("unknown layout {other:?} in autotune cache"),
+    })
+}
+
+/// Schema-versioned decision cache with deterministic serialization.
+#[derive(Debug, Default)]
+pub struct TuneCache {
+    entries: BTreeMap<String, Decision>,
+}
+
+impl TuneCache {
+    /// Empty cache.
+    pub fn new() -> TuneCache {
+        TuneCache::default()
+    }
+
+    /// Cache path: `$STEN_AUTOTUNE_CACHE` or `target/autotune_cache.json`.
+    /// Deliberately *not* under `artifacts/` — the artifact runtime treats an
+    /// artifacts directory without a manifest as an error.
+    pub fn default_path() -> PathBuf {
+        match std::env::var_os("STEN_AUTOTUNE_CACHE") {
+            Some(p) => PathBuf::from(p),
+            None => PathBuf::from("target/autotune_cache.json"),
+        }
+    }
+
+    /// Load from disk. A missing file is an empty cache; a schema mismatch
+    /// drops every entry (decisions from another schema are untrusted).
+    pub fn load(path: &Path) -> Result<TuneCache> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(TuneCache::new());
+            }
+            Err(e) => return Err(e).with_context(|| format!("reading {path:?}")),
+        };
+        let root = Json::parse(&text).with_context(|| format!("parsing {path:?}"))?;
+        let schema = root.get("schema").ok_or_else(|| anyhow!("cache missing schema"))?.usize()?;
+        if schema as u64 != TUNE_SCHEMA_VERSION {
+            return Ok(TuneCache::new());
+        }
+        let mut entries = BTreeMap::new();
+        if let Some(Json::Obj(map)) = root.get("entries") {
+            for (key, v) in map {
+                let dec = Decision {
+                    layout: parse_layout(
+                        v.get("layout").ok_or_else(|| anyhow!("entry missing layout"))?.str()?,
+                    )?,
+                    kernel: v
+                        .get("kernel")
+                        .ok_or_else(|| anyhow!("entry missing kernel"))?
+                        .str()?
+                        .to_string(),
+                    cost: v.get("cost").ok_or_else(|| anyhow!("entry missing cost"))?.f64()?,
+                    policy: v
+                        .get("policy")
+                        .ok_or_else(|| anyhow!("entry missing policy"))?
+                        .str()?
+                        .to_string(),
+                };
+                entries.insert(key.clone(), dec);
+            }
+        }
+        Ok(TuneCache { entries })
+    }
+
+    /// Serialize (sorted keys, stable bytes) and write to disk.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir).with_context(|| format!("creating {dir:?}"))?;
+            }
+        }
+        std::fs::write(path, self.to_json_text()).with_context(|| format!("writing {path:?}"))
+    }
+
+    /// The exact bytes [`Self::save`] writes.
+    pub fn to_json_text(&self) -> String {
+        let mut entries = HashMap::new();
+        for (key, d) in &self.entries {
+            let mut obj = HashMap::new();
+            obj.insert("layout".to_string(), Json::Str(d.layout.to_string()));
+            obj.insert("kernel".to_string(), Json::Str(d.kernel.clone()));
+            obj.insert("cost".to_string(), Json::Num(d.cost));
+            obj.insert("policy".to_string(), Json::Str(d.policy.clone()));
+            entries.insert(key.clone(), Json::Obj(obj));
+        }
+        let mut root = HashMap::new();
+        root.insert("schema".to_string(), Json::Num(TUNE_SCHEMA_VERSION as f64));
+        root.insert("entries".to_string(), Json::Obj(entries));
+        Json::Obj(root).to_string_sorted()
+    }
+
+    /// Cached decision for `key`.
+    pub fn get(&self, key: &str) -> Option<&Decision> {
+        self.entries.get(key)
+    }
+
+    /// Insert a decision.
+    pub fn insert(&mut self, key: String, d: Decision) {
+        self.entries.insert(key, d);
+    }
+
+    /// Number of cached decisions.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when no decisions are cached.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Cache key: embeds every input the decision depends on, so invalidation on
+/// shape / sparsity / config change falls out of key inequality.
+pub fn tune_key(stats: &WeightStats, ncols: usize, nmg: Option<(usize, usize, usize)>) -> String {
+    let nmg_part = match nmg {
+        Some((n, m, g)) => format!("{n}:{m}:{g}"),
+        None => "none".to_string(),
+    };
+    format!(
+        "matmul:m{}k{}n{}:sp{}:nmg{}",
+        stats.rows,
+        stats.cols,
+        ncols,
+        stats.sparsity_permille(),
+        nmg_part
+    )
+}
+
+/// Store a dense weight in `layout`. Every conversion except `Nmg` is
+/// lossless; `Nmg` re-runs the grouped-n:m sparsifier, which is also lossless
+/// when the weight was already pruned to that pattern (the engine's case).
+pub fn materialize(
+    d: &DenseTensor,
+    layout: Layout,
+    nmg: Option<(usize, usize, usize)>,
+) -> Result<AnyTensor> {
+    Ok(match layout {
+        Layout::Dense => AnyTensor::Dense(d.clone()),
+        Layout::Csr => AnyTensor::Csr(CsrTensor::from_dense(d)),
+        Layout::Csc => AnyTensor::Csc(CscTensor::from_dense(d)),
+        Layout::Coo => AnyTensor::Coo(CooTensor::from_dense(d)),
+        Layout::Ell => AnyTensor::Ell(EllTensor::from_dense(d)),
+        Layout::Masked => AnyTensor::Masked(MaskedTensor::from_dense(d)),
+        Layout::Bcsr => AnyTensor::Bcsr(BcsrTensor::from_dense(d, BCSR_BLOCK, BCSR_BLOCK)),
+        Layout::Nmg => {
+            let (n, m, g) = nmg.ok_or_else(|| anyhow!("n:m:g candidate without a config"))?;
+            AnyTensor::Nmg(NmgTensor::from_dense(d, n, m, g))
+        }
+        other => bail!("cannot materialize autotune layout {other}"),
+    })
+}
+
+/// The autotuner: policy + cache + hit counters.
+pub struct Autotuner {
+    /// Scoring policy.
+    pub policy: TunePolicy,
+    /// Decision cache (load/save via [`TuneCache`]).
+    pub cache: TuneCache,
+    /// Queries answered from the cache.
+    pub hits: u64,
+    /// Queries that ran the scoring loop.
+    pub misses: u64,
+}
+
+impl Autotuner {
+    /// Autotuner with an empty cache.
+    pub fn new(policy: TunePolicy) -> Autotuner {
+        Autotuner::with_cache(policy, TuneCache::new())
+    }
+
+    /// Autotuner over a pre-loaded cache.
+    pub fn with_cache(policy: TunePolicy, cache: TuneCache) -> Autotuner {
+        Autotuner { policy, cache, hits: 0, misses: 0 }
+    }
+
+    /// Enumerate candidate layouts for `weight @ dense` from the
+    /// dispatcher's registered matmul signatures, filtered to layouts this
+    /// weight can actually be stored in. Sorted for determinism.
+    pub fn candidates(
+        &self,
+        d: &Dispatcher,
+        stats: &WeightStats,
+        nmg: Option<(usize, usize, usize)>,
+    ) -> Vec<Layout> {
+        let mut out: Vec<Layout> = d
+            .registered_inputs(OpKind::MatMul)
+            .into_iter()
+            .filter(|sig| sig.len() == 2 && sig[1] == Layout::Dense)
+            .map(|sig| sig[0])
+            .filter(|&l| model_cost(l, stats, 1, nmg).is_some())
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Pick the best layout for `weight @ B` where B is `weight.cols x ncols`
+    /// dense. Answers from the cache when the key matches; otherwise scores
+    /// every candidate under the policy, caches, and returns the winner.
+    pub fn choose(
+        &mut self,
+        d: &Dispatcher,
+        weight: &DenseTensor,
+        ncols: usize,
+        nmg: Option<(usize, usize, usize)>,
+    ) -> Result<Decision> {
+        let stats = WeightStats::measure(weight);
+        let key = tune_key(&stats, ncols, nmg);
+        if let Some(dec) = self.cache.get(&key) {
+            self.hits += 1;
+            return Ok(dec.clone());
+        }
+        self.misses += 1;
+        let cands = self.candidates(d, &stats, nmg);
+        if cands.is_empty() {
+            bail!("no matmul candidates registered for autotuning");
+        }
+        let mut best: Option<(Layout, f64)> = None;
+        for &layout in &cands {
+            let cost = match self.policy {
+                TunePolicy::CostModel => {
+                    model_cost(layout, &stats, ncols, nmg).expect("candidate was pre-filtered")
+                }
+                TunePolicy::Microbench { warmup, iters } => {
+                    microbench(d, weight, layout, ncols, nmg, warmup, iters)?
+                }
+            };
+            // Ties break toward the earlier (sorted) layout: deterministic.
+            let better = match best {
+                None => true,
+                Some((_, c)) => cost < c,
+            };
+            if better {
+                best = Some((layout, cost));
+            }
+        }
+        let (layout, cost) = best.expect("non-empty candidate list");
+        let dec = Decision {
+            layout,
+            kernel: kernel_name(layout).to_string(),
+            cost,
+            policy: self.policy.name().to_string(),
+        };
+        self.cache.insert(key, dec.clone());
+        Ok(dec)
+    }
+}
+
+/// Time `weight-as-layout @ B` through the dispatcher (exact phase-1 hit for
+/// every candidate, since candidates come from registered signatures).
+/// Returns best-of-`iters` seconds.
+fn microbench(
+    d: &Dispatcher,
+    weight: &DenseTensor,
+    layout: Layout,
+    ncols: usize,
+    nmg: Option<(usize, usize, usize)>,
+    warmup: usize,
+    iters: usize,
+) -> Result<f64> {
+    let wt = materialize(weight, layout, nmg)?;
+    let mut rng = Pcg64::seeded(0x7u64);
+    let b = AnyTensor::Dense(DenseTensor::randn(&[weight.cols(), ncols], &mut rng));
+    for _ in 0..warmup {
+        d.call_ref(OpKind::MatMul, &[&wt, &b])?;
+    }
+    let mut best = f64::INFINITY;
+    for _ in 0..iters.max(1) {
+        let t = Instant::now();
+        d.call_ref(OpKind::MatMul, &[&wt, &b])?;
+        best = best.min(t.elapsed().as_secs_f64());
+    }
+    Ok(best)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dispatch::Dispatcher;
+
+    fn nmg_pruned_weight(rows: usize, cols: usize, seed: u64) -> DenseTensor {
+        let mut rng = Pcg64::seeded(seed);
+        let d = DenseTensor::randn(&[rows, cols], &mut rng);
+        NmgTensor::from_dense(&d, 2, 4, 2).to_dense()
+    }
+
+    #[test]
+    fn stats_measure_counts() {
+        let mut d = DenseTensor::zeros(&[4, 8]);
+        d.data_mut()[0] = 1.0; // row 0: 1 nnz, block (0,0)
+        d.data_mut()[9] = 2.0; // row 1: 1 nnz, block (0,0)
+        d.data_mut()[3 * 8 + 7] = 3.0; // row 3: 1 nnz, block (0,1)
+        let s = WeightStats::measure(&d);
+        assert_eq!((s.rows, s.cols, s.nnz, s.max_row_nnz), (4, 8, 3, 1));
+        assert_eq!(s.blocks_occupied, 2);
+        assert_eq!(s.sparsity_permille(), 1000 - 3000 / 32);
+    }
+
+    #[test]
+    fn cost_model_prefers_structured_formats_on_structured_sparsity() {
+        let w = nmg_pruned_weight(16, 32, 40);
+        let s = WeightStats::measure(&w);
+        let nmg = Some((2, 4, 2));
+        let dense = model_cost(Layout::Dense, &s, 8, nmg).unwrap();
+        let nmg_c = model_cost(Layout::Nmg, &s, 8, nmg).unwrap();
+        let csr = model_cost(Layout::Csr, &s, 8, nmg).unwrap();
+        assert!(nmg_c < dense, "50% structured sparsity must beat dense");
+        assert!(nmg_c < csr, "contiguous n:m:g must beat scalar CSR");
+        // Without an n:m:g config the format is not a candidate at all.
+        assert!(model_cost(Layout::Nmg, &s, 8, None).is_none());
+        // BCSR requires block-divisible shapes.
+        let ragged = WeightStats { rows: 5, ..s };
+        assert!(model_cost(Layout::Bcsr, &ragged, 8, nmg).is_none());
+    }
+
+    #[test]
+    fn choose_picks_nmg_for_pruned_weight_and_caches() {
+        let d = Dispatcher::with_builtins();
+        let w = nmg_pruned_weight(16, 32, 41);
+        let mut tuner = Autotuner::new(TunePolicy::CostModel);
+        let dec = tuner.choose(&d, &w, 8, Some((2, 4, 2))).unwrap();
+        assert_eq!(dec.layout, Layout::Nmg);
+        assert_eq!(dec.kernel, "nmg_gemm::spmm");
+        assert_eq!((tuner.hits, tuner.misses), (0, 1));
+        // Second query with identical inputs hits the cache.
+        let dec2 = tuner.choose(&d, &w, 8, Some((2, 4, 2))).unwrap();
+        assert_eq!(dec, dec2);
+        assert_eq!((tuner.hits, tuner.misses), (1, 1));
+        // A different ncols is a different key: cache miss, fresh decision.
+        tuner.choose(&d, &w, 16, Some((2, 4, 2))).unwrap();
+        assert_eq!(tuner.misses, 2);
+        assert_eq!(tuner.cache.len(), 2);
+    }
+
+    #[test]
+    fn dense_weight_stays_dense() {
+        let mut rng = Pcg64::seeded(42);
+        let w = DenseTensor::randn(&[16, 32], &mut rng);
+        let d = Dispatcher::with_builtins();
+        let mut tuner = Autotuner::new(TunePolicy::CostModel);
+        let dec = tuner.choose(&d, &w, 8, None).unwrap();
+        assert_eq!(dec.layout, Layout::Dense, "fully dense weight: no sparse format can win");
+    }
+
+    #[test]
+    fn cache_roundtrips_and_drops_on_schema_mismatch() {
+        let mut cache = TuneCache::new();
+        cache.insert(
+            "matmul:m16k32n8:sp500:nmg2:4:2".to_string(),
+            Decision {
+                layout: Layout::Nmg,
+                kernel: "nmg_gemm::spmm".to_string(),
+                cost: 4096.0,
+                policy: "cost_model".to_string(),
+            },
+        );
+        let text = cache.to_json_text();
+        let dir = std::env::temp_dir().join("sten_tune_cache_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("cache.json");
+        cache.save(&path).unwrap();
+        let loaded = TuneCache::load(&path).unwrap();
+        assert_eq!(loaded.len(), 1);
+        let key = "matmul:m16k32n8:sp500:nmg2:4:2";
+        assert_eq!(loaded.get(key), cache.get(key));
+        assert_eq!(loaded.to_json_text(), text, "save/load/save must be byte-stable");
+        // Schema bump drops everything.
+        let bumped = text.replace("\"schema\":1", "\"schema\":999");
+        std::fs::write(&path, bumped).unwrap();
+        assert!(TuneCache::load(&path).unwrap().is_empty());
+        // Missing file is an empty cache, not an error.
+        assert!(TuneCache::load(&dir.join("nope.json")).unwrap().is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn microbench_policy_produces_a_valid_decision() {
+        let d = Dispatcher::with_builtins();
+        let w = nmg_pruned_weight(16, 32, 43);
+        let mut tuner = Autotuner::new(TunePolicy::Microbench { warmup: 1, iters: 2 });
+        let dec = tuner.choose(&d, &w, 4, Some((2, 4, 2))).unwrap();
+        assert!(dec.cost > 0.0 && dec.cost.is_finite());
+        assert_eq!(dec.policy, "microbench");
+        let cands = tuner.candidates(&d, &WeightStats::measure(&w), Some((2, 4, 2)));
+        assert!(cands.contains(&dec.layout));
+    }
+
+    #[test]
+    fn materialized_candidates_dispatch_with_exact_hits() {
+        let d = Dispatcher::with_builtins();
+        let w = nmg_pruned_weight(16, 32, 44);
+        let stats = WeightStats::measure(&w);
+        let tuner = Autotuner::new(TunePolicy::CostModel);
+        let mut rng = Pcg64::seeded(45);
+        let b = AnyTensor::Dense(DenseTensor::randn(&[32, 6], &mut rng));
+        let want = crate::kernels::dense_gemm::matmul_naive(&w, b.as_dense().unwrap());
+        for layout in tuner.candidates(&d, &stats, Some((2, 4, 2))) {
+            let wt = materialize(&w, layout, Some((2, 4, 2))).unwrap();
+            d.stats.reset();
+            let got = d.call_ref(OpKind::MatMul, &[&wt, &b]).unwrap();
+            assert_eq!(d.stats.counts(), (1, 0, 0), "{layout}: tuned layers must hit phase 1");
+            assert!(got.to_dense().allclose(&want, 1e-4, 1e-4), "{layout} kernel mismatch");
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! Autotuner determinism contract: the same manifest of weights tuned twice
+//! from scratch must produce identical decisions AND byte-identical cache
+//! files, and the cache must invalidate (by key inequality) whenever a shape,
+//! sparsity level, or n:m:g config changes.
+
+use sten::dispatch::Dispatcher;
+use sten::formats::{Layout, NmgTensor};
+use sten::sparsify::{ScalarFraction, Sparsifier};
+use sten::tensor::DenseTensor;
+use sten::tune::{Autotuner, Decision, TuneCache, TunePolicy};
+use sten::util::rng::Pcg64;
+
+/// A small "model manifest": weights of varied shape and sparsity structure,
+/// each paired with the activation width and n:m:g config it is tuned for.
+fn manifest() -> Vec<(DenseTensor, usize, Option<(usize, usize, usize)>)> {
+    let mut rng = Pcg64::seeded(2024);
+    let mut out = Vec::new();
+    // Structured n:m:g-pruned layers (the engine's FFN case).
+    let cfgs: [(usize, usize, (usize, usize, usize)); 3] =
+        [(16, 32, (2, 4, 2)), (24, 48, (1, 4, 2)), (16, 32, (2, 8, 2))];
+    for &(rows, cols, nmg) in &cfgs {
+        let d = DenseTensor::randn(&[rows, cols], &mut rng);
+        let pruned = NmgTensor::from_dense(&d, nmg.0, nmg.1, nmg.2).to_dense();
+        out.push((pruned, 8, Some(nmg)));
+    }
+    // Unstructured-pruned and fully dense layers (no n:m:g config).
+    let d = DenseTensor::randn(&[20, 40], &mut rng);
+    out.push((ScalarFraction { fraction: 0.9 }.prune(&d), 8, None));
+    out.push((DenseTensor::randn(&[12, 24], &mut rng), 8, None));
+    out
+}
+
+fn tune_all(d: &Dispatcher, tuner: &mut Autotuner) -> Vec<Decision> {
+    manifest()
+        .iter()
+        .map(|(w, ncols, nmg)| tuner.choose(d, w, *ncols, *nmg).expect("choose"))
+        .collect()
+}
+
+#[test]
+fn same_manifest_tunes_to_identical_decisions_and_byte_identical_cache() {
+    let d = Dispatcher::with_builtins();
+    let dir = std::env::temp_dir().join("sten_autotune_determinism_test");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    let mut run_a = Autotuner::new(TunePolicy::CostModel);
+    let mut run_b = Autotuner::new(TunePolicy::CostModel);
+    let decs_a = tune_all(&d, &mut run_a);
+    let decs_b = tune_all(&d, &mut run_b);
+    assert_eq!(decs_a, decs_b, "two fresh runs over the same manifest must agree");
+    assert!(run_a.misses >= 1 && run_a.hits == 0, "fresh run answers nothing from cache");
+
+    let path_a = dir.join("cache_a.json");
+    let path_b = dir.join("cache_b.json");
+    run_a.cache.save(&path_a).unwrap();
+    run_b.cache.save(&path_b).unwrap();
+    let bytes_a = std::fs::read(&path_a).unwrap();
+    let bytes_b = std::fs::read(&path_b).unwrap();
+    assert_eq!(bytes_a, bytes_b, "same decisions must serialize to byte-identical cache files");
+
+    // A third run seeded from the saved cache replays every decision without
+    // re-scoring, and re-saving changes nothing on disk.
+    let warm = TuneCache::load(&path_a).unwrap();
+    let mut replay = Autotuner::with_cache(TunePolicy::CostModel, warm);
+    let decs_c = tune_all(&d, &mut replay);
+    assert_eq!(decs_a, decs_c);
+    assert_eq!(replay.misses, 0, "warm cache must answer every query");
+    assert_eq!(replay.hits as usize, manifest().len());
+    replay.cache.save(&path_a).unwrap();
+    assert_eq!(std::fs::read(&path_a).unwrap(), bytes_a, "replay save must be a byte-level no-op");
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn shape_and_sparsity_changes_miss_the_cache() {
+    let d = Dispatcher::with_builtins();
+    let mut rng = Pcg64::seeded(77);
+    let raw = DenseTensor::randn(&[16, 32], &mut rng);
+    let base = NmgTensor::from_dense(&raw, 2, 4, 2).to_dense();
+    let mut tuner = Autotuner::new(TunePolicy::CostModel);
+    tuner.choose(&d, &base, 8, Some((2, 4, 2))).unwrap();
+    assert_eq!((tuner.hits, tuner.misses), (0, 1));
+
+    // Same weight again: pure cache hit.
+    tuner.choose(&d, &base, 8, Some((2, 4, 2))).unwrap();
+    assert_eq!((tuner.hits, tuner.misses), (1, 1));
+
+    // Shape change (more rows), sparsity change (1:4 instead of 2:4), and
+    // activation-width change each produce a distinct key -> re-tune.
+    let tall = DenseTensor::randn(&[24, 32], &mut rng);
+    let taller = NmgTensor::from_dense(&tall, 2, 4, 2).to_dense();
+    tuner.choose(&d, &taller, 8, Some((2, 4, 2))).unwrap();
+    let sparser = NmgTensor::from_dense(&base, 1, 4, 2).to_dense();
+    tuner.choose(&d, &sparser, 8, Some((1, 4, 2))).unwrap();
+    tuner.choose(&d, &base, 16, Some((2, 4, 2))).unwrap();
+    assert_eq!((tuner.hits, tuner.misses), (1, 4));
+    assert_eq!(tuner.cache.len(), 4, "each distinct (shape, sparsity, ncols) gets its own entry");
+}
+
+#[test]
+fn schema_bump_forces_a_full_retune_with_identical_outcome() {
+    let d = Dispatcher::with_builtins();
+    let dir = std::env::temp_dir().join("sten_autotune_schema_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cache.json");
+
+    let mut first = Autotuner::new(TunePolicy::CostModel);
+    let decs = tune_all(&d, &mut first);
+    first.cache.save(&path).unwrap();
+
+    // Corrupt the schema: the loader must drop every entry rather than trust
+    // decisions produced under different cost-model units.
+    let text = std::fs::read_to_string(&path).unwrap();
+    std::fs::write(&path, text.replace("\"schema\":1", "\"schema\":999")).unwrap();
+    let dropped = TuneCache::load(&path).unwrap();
+    let mut second = Autotuner::with_cache(TunePolicy::CostModel, dropped);
+    assert!(second.cache.is_empty(), "schema mismatch must drop the cache wholesale");
+    let redecs = tune_all(&d, &mut second);
+    assert_eq!(second.hits, 0, "dropped cache means every query re-scores");
+    assert_eq!(decs, redecs, "re-tuning under the same policy reaches the same decisions");
+    assert!(redecs.iter().any(|dec| dec.layout == Layout::Nmg), "pruned layers should pick n:m:g");
+
+    std::fs::remove_dir_all(&dir).ok();
+}

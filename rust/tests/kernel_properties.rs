@@ -144,6 +144,73 @@ fn prop_nmg_matches_dense_over_pruned_weights() {
 }
 
 #[test]
+fn prop_bcsr_blocked_matches_naive_baseline() {
+    // The register-blocked BCSR kernel and the naive per-block loop visit
+    // products in the same order but group sums differently, so they agree
+    // to rounding on every shape: empty blocks, generic block heights, tail
+    // N-tiles (n % 16 != 0), and single-column B.
+    proptest::check(
+        "bcsr-blocked-vs-naive",
+        25,
+        |rng| {
+            let bh = 1 + rng.below(8) as usize;
+            let bw = 1 + rng.below(4) as usize;
+            let m = bh * (1 + rng.below(6) as usize);
+            let k = bw * (1 + rng.below(6) as usize);
+            let n = 1 + rng.below(40) as usize;
+            let density = [0.0f32, 0.2, 0.8][rng.below(3) as usize];
+            (bh, bw, m, k, n, density, rng.next_u64())
+        },
+        |&(bh, bw, m, k, n, density, seed)| {
+            let mut rng = Pcg64::seeded(seed);
+            let mut a = random_sparse(&mut rng, m, k, density);
+            clear_row(&mut a, rng.below(m as u32) as usize);
+            let t = BcsrTensor::from_dense(&a, bh, bw);
+            let b = DenseTensor::randn(&[k, n], &mut rng);
+            bcsr_gemm::spmm(&t, &b).allclose(&bcsr_gemm::spmm_naive(&t, &b), TOL, TOL)
+        },
+    );
+}
+
+#[test]
+fn prop_nmg_ragged_rows_match_dense() {
+    // Row counts deliberately not divisible by m: the final slab is
+    // zero-padded and both the blocked and unblocked kernels must still
+    // match the densified reference (the row-truncation regression).
+    proptest::check(
+        "nmg-ragged-vs-dense",
+        20,
+        |rng| {
+            let fmts = [(2usize, 4usize, 4usize), (1, 4, 2), (2, 8, 2)];
+            let (nn, m, g) = fmts[rng.below(3) as usize];
+            // 1..3m rows, biased to avoid multiples of m.
+            let mut rows = 1 + rng.below(3 * m as u32) as usize;
+            if rows % m == 0 {
+                rows = rows.saturating_sub(1).max(1);
+            }
+            let k = 1 + rng.below(48) as usize;
+            let ncols = 1 + rng.below(32) as usize;
+            let density = [0.4f32, 1.0][rng.below(2) as usize];
+            (nn, m, g, rows, k, ncols, density, rng.next_u64())
+        },
+        |&(nn, m, g, rows, k, ncols, density, seed)| {
+            let mut rng = Pcg64::seeded(seed);
+            let mut d = random_sparse(&mut rng, rows, k, density);
+            d.scale(0.5);
+            let a = NmgTensor::from_dense(&d, nn, m, g);
+            if a.to_dense().shape() != d.shape() {
+                return false; // padding must never change the logical shape
+            }
+            let mut b = DenseTensor::randn(&[k, ncols], &mut rng);
+            b.scale(0.5);
+            let want = dense_gemm::matmul_naive(&a.to_dense(), &b);
+            nmg_gemm::spmm(&a, &b).allclose(&want, TOL, TOL)
+                && nmg_gemm::spmm_unblocked(&a, &b).allclose(&want, TOL, TOL)
+        },
+    );
+}
+
+#[test]
 fn all_zero_matrices_multiply_to_zero_everywhere() {
     let mut rng = Pcg64::seeded(99);
     let (m, k, n) = (8, 12, 5);
