@@ -42,10 +42,14 @@ time timeout 600 cargo test --release --test serving_stress -- --nocapture
 echo "==> building bench targets"
 cargo build --release --benches
 
-echo "==> forward_latency --smoke (pool regression gate, 300s ceiling)"
+echo "==> forward_latency --smoke (pool + tensor-parallel gate, 300s ceiling)"
 # Runs the tiny-config latency breakdown and asserts zero thread spawns per
-# request in steady state. The wall-clock ceiling turns a deadlocked parked
-# pool worker (or any scope that never completes) into a loud failure.
+# request in steady state — for the global pool AND for the sharded
+# (tensor-parallel) model, whose W-thread shard pool and ring-collective
+# group are built once at shard() time. Also asserts the sharded forward is
+# bit-identical to the unsharded engine at every swept width. The
+# wall-clock ceiling turns a deadlocked parked pool worker or a stuck
+# collective barrier into a loud failure.
 timeout 300 cargo bench --bench forward_latency -- --smoke
 
 echo "==> fig10_gemm --smoke (kernel correctness gate, 300s ceiling)"

@@ -1,11 +1,17 @@
 //! Single-request forward latency breakdown: attention vs FFN vs LM head,
-//! swept over per-scope worker budgets 1..=cores, dense vs n:m:g weights.
+//! swept over per-scope worker budgets 1..=cores, dense vs n:m:g weights —
+//! plus the tensor-parallel strong-scaling sweep: one batch executed
+//! cooperatively by `W` shard threads ([`Engine::shard`]) vs `W`
+//! independent replicas each serving its own batch.
 //!
-//! Proves the persistent-pool tentpole claims: block latency (attention
-//! above all — it was the last head-by-head serial path) scales with the
-//! worker budget, and the pool performs **zero thread spawns per request**
-//! in steady state (asserted in `--smoke` mode, which ci.sh runs under a
-//! wall-clock ceiling so a deadlocked parked worker fails loudly).
+//! Proves the persistent-pool claims — block latency scales with the
+//! worker budget and steady state performs **zero thread spawns per
+//! request** — and the tensor-parallel claims: the sharded forward is
+//! bit-identical to the unsharded engine (asserted on every run) and the
+//! per-request critical-path CPU time shrinks as shards are added (the
+//! strong-scaling curve in the JSON; wall clock follows on multi-core).
+//! `--smoke` additionally asserts the sharded steady state is spawn-free,
+//! under ci.sh's wall-clock ceiling so a deadlocked barrier fails loudly.
 //!
 //! Run: `cargo bench --bench forward_latency [-- --full | -- --smoke]`
 //! (quick/full serve the `base` artifacts; smoke serves `tiny`.)
@@ -14,13 +20,14 @@
 //! trajectory is tracked across PRs.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use sten::coordinator::{Engine, FfnMode};
 use sten::formats::NmgTensor;
 use sten::runtime::{ArtifactRuntime, ArtifactSpec, DType, Value};
 use sten::tensor::DenseTensor;
 use sten::tune::{Autotuner, TunePolicy};
-use sten::util::benchkit::{table_header, Bench, JsonReport};
+use sten::util::benchkit::{summarize, table_header, Bench, JsonReport};
 use sten::util::rng::Pcg64;
 use sten::util::threadpool;
 
@@ -176,6 +183,125 @@ fn main() {
         }
     }
     threadpool::set_worker_cap(None);
+
+    // ── Tensor parallelism: sharded vs replicated strong scaling ──
+    //
+    // At width W the *sharded* row executes ONE batch cooperatively on W
+    // dedicated shard threads (a latency play: per-request critical-path
+    // CPU ~ 1/W); the *replicated* row executes W batches concurrently on
+    // W independent weight-sharing replicas (a throughput play: latency
+    // flat, batches/s ~ W). Kernel users are registered per width so the
+    // shared pool budget matches what serving would grant.
+    table_header(
+        "tensor-parallel forward (sharded vs replicated)",
+        &["mode", "width", "median_ms", "p95_ms", "batches_per_s", "cpu_crit_ms"],
+    );
+    let mut eng = Engine::with_runtime(rt.clone(), tag, FfnMode::NativeDense, 42).expect("engine");
+    let tokens = eng.random_tokens(&mut rng);
+    let want = eng.forward(&tokens).expect("unsharded forward");
+    let widths: Vec<usize> = if smoke { vec![1, 2] } else { vec![1, 2, 4] };
+    let mut tp_curve: Vec<(usize, f64, f64)> = Vec::new();
+    for &w in &widths {
+        let _users = threadpool::register_kernel_users(w);
+
+        // Sharded: warm up, then time with per-rank CPU accounting.
+        let mut sharded = eng.shard(w).expect("shard");
+        for _ in 0..bench.warmup {
+            sharded.forward(&tokens);
+        }
+        let got = sharded.forward(&tokens);
+        assert_eq!(got.data(), want.data(), "w={w}: sharded forward must be bit-identical");
+        sharded.reset_timing();
+        let mut times = Vec::with_capacity(bench.iters);
+        for _ in 0..bench.iters {
+            let t = Instant::now();
+            std::hint::black_box(sharded.forward(&tokens));
+            times.push(t.elapsed().as_secs_f64());
+        }
+        let sample = summarize(&times);
+        let timing = sharded.shard_timing();
+        let per_req = |key: &str| {
+            timing.iter().map(|t| t.secs(key)).fold(0.0, f64::max) / sample.iters as f64
+        };
+        let (cpu_crit, coll_crit) = (per_req("cpu"), per_req("collective"));
+        tp_curve.push((w, sample.median, cpu_crit));
+        println!(
+            "sharded\t{w}\t{:.3}\t{:.3}\t{:.2}\t{:.3}",
+            sample.median * 1e3,
+            sample.p95 * 1e3,
+            1.0 / sample.median.max(1e-12),
+            cpu_crit * 1e3,
+        );
+        json.row(&[
+            ("tag", tag.into()),
+            ("block", "tp".into()),
+            ("mode", "sharded".into()),
+            ("width", w.into()),
+            ("median_s", sample.median.into()),
+            ("p95_s", sample.p95.into()),
+            ("batches_per_s", (1.0 / sample.median.max(1e-12)).into()),
+            ("cpu_crit_s", cpu_crit.into()),
+            ("collective_crit_s", coll_crit.into()),
+        ]);
+
+        // Replicated baseline: W replicas, each forwarding its own batch.
+        let mut reps: Vec<Engine> = (0..w).map(|_| eng.replicate()).collect();
+        let toks = &tokens;
+        let sample = bench.run(|| {
+            std::thread::scope(|s| {
+                for rep in reps.iter_mut() {
+                    s.spawn(move || {
+                        rep.forward(toks).expect("replicated forward");
+                    });
+                }
+            })
+        });
+        println!(
+            "replicated\t{w}\t{:.3}\t{:.3}\t{:.2}\t-",
+            sample.median * 1e3,
+            sample.p95 * 1e3,
+            w as f64 / sample.median.max(1e-12),
+        );
+        json.row(&[
+            ("tag", tag.into()),
+            ("block", "tp".into()),
+            ("mode", "replicated".into()),
+            ("width", w.into()),
+            ("median_s", sample.median.into()),
+            ("p95_s", sample.p95.into()),
+            ("batches_per_s", (w as f64 / sample.median.max(1e-12)).into()),
+        ]);
+    }
+    if let Some(&(_, wall1, cpu1)) = tp_curve.iter().find(|(w, _, _)| *w == 1) {
+        for &(w, wall, cpu) in &tp_curve {
+            if w != 1 {
+                println!(
+                    "tp-scaling-{w}v1: wall {:.2}x, cpu-critical-path {:.2}x",
+                    wall1 / wall.max(1e-12),
+                    cpu1 / cpu.max(1e-12),
+                );
+            }
+        }
+    }
+
+    // Sharded steady state must also be spawn-free: the shard pool and
+    // collective group are built once at `shard()` time, so repeated
+    // forwards may not create a single thread.
+    let mut sharded = eng.shard(2).expect("shard");
+    sharded.forward(&tokens);
+    let spawns_before = threadpool::total_spawns();
+    let requests = if smoke { 5 } else { 3 };
+    for _ in 0..requests {
+        sharded.forward(&tokens);
+    }
+    let spawned = threadpool::total_spawns() - spawns_before;
+    println!("sharded steady-state thread spawns across {requests} requests: {spawned} (expect 0)");
+    json.row(&[("block", "tp_steady_state".into()), ("spawns", spawned.into())]);
+    if smoke {
+        assert_eq!(spawned, 0, "sharded steady state must not spawn threads");
+        println!("smoke OK: sharded forward is bit-identical and spawn-free in steady state");
+    }
+    drop(sharded);
 
     // Attention scaling summary (the ROADMAP's last serial compute path).
     if let Some(&(_, base)) = attn_by_threads.iter().find(|(t, _)| *t == 1) {

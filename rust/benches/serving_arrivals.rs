@@ -1,10 +1,13 @@
 //! Open-loop arrivals: offered load vs SLO-miss and goodput, for 1-model,
 //! 2-model and bursty (Markov-modulated) registry mixes, with and without
 //! overload defense (admission control + sparse-degrade + load shedding).
+//! The 2-model mixes offer a heavy-tailed prompt-length mix
+//! (Pareto-sampled lengths clamped to `[1, seq]` — most prompts short, a
+//! fat tail full-length; `len_mean`/`len_p99` land in the JSON report).
 //!
 //! An open-loop generator submits on a precomputed arrival schedule —
-//! inter-arrival gaps and per-request model picks drawn from a seeded
-//! [`Pcg64`], so the *workload* is fully deterministic (no wall clock
+//! inter-arrival gaps, per-request model picks and prompt lengths drawn
+//! from a seeded [`Pcg64`], so the *workload* is fully deterministic (no wall clock
 //! anywhere in its construction; real time is only used to pace the
 //! schedule and to measure latency). Arrivals never wait for completions
 //! — submission is **non-blocking** (`try_submit_to`), and a failed
@@ -55,6 +58,36 @@ enum Arrivals {
     Mmpp,
 }
 
+/// Request token-length distribution. The server pads/truncates every
+/// prompt to the model's fixed `seq` (`canonical_tokens`), so the mix
+/// shapes the *offered* prompt lengths that the padding path absorbs —
+/// the realistic serving workload is heavy-tailed, not full-length.
+#[derive(Clone, Copy)]
+enum LengthMix {
+    /// Every request arrives with a full `seq`-length prompt.
+    Full,
+    /// Heavy-tailed: Pareto (scale 1 token, shape `alpha`), clamped to
+    /// `[1, seq]`. Most prompts are a few tokens; a fat tail is
+    /// full-length (`P(len >= seq) = seq^-alpha` before clamping).
+    Pareto { alpha: f64 },
+}
+
+impl LengthMix {
+    fn sample(self, rng: &mut Pcg64, seq: usize) -> usize {
+        match self {
+            LengthMix::Full => seq,
+            LengthMix::Pareto { alpha } => (rng.pareto(alpha) as usize).clamp(1, seq),
+        }
+    }
+
+    fn label(self) -> String {
+        match self {
+            LengthMix::Full => "full".to_string(),
+            LengthMix::Pareto { alpha } => format!("pareto-{alpha}"),
+        }
+    }
+}
+
 /// A registry mix: (name, ffn mode, replicas, weight) per model, plus an
 /// optional admission-control degrade link (from, to).
 struct Mix {
@@ -62,6 +95,7 @@ struct Mix {
     models: Vec<(&'static str, FfnMode, usize, u64)>,
     policy: SchedPolicy,
     arrivals: Arrivals,
+    lengths: LengthMix,
     degrade: Option<(&'static str, &'static str)>,
 }
 
@@ -158,6 +192,8 @@ struct Point {
     /// (name, slo_miss, shed, rejected, degraded) per model.
     per_model: Vec<(String, f64, u64, u64, u64)>,
     spawned: usize,
+    len_mean: f64,
+    len_p99: f64,
 }
 
 /// One open-loop load point: pace `n` arrivals at `offered_rps`, measure
@@ -199,8 +235,15 @@ fn run_point(
         Arrivals::Mmpp => mmpp_gaps(&mut rng, offered_rps, n),
     };
     let picks: Vec<usize> = (0..n).map(|_| rng.below(names.len() as u32) as usize).collect();
+    let lens: Vec<usize> = (0..n).map(|_| mix.lengths.sample(&mut rng, seq)).collect();
     let tokens: Vec<Vec<i32>> =
-        (0..n).map(|_| (0..seq).map(|_| rng.below(vocab) as i32).collect()).collect();
+        lens.iter().map(|&l| (0..l).map(|_| rng.below(vocab) as i32).collect()).collect();
+    let len_mean = lens.iter().sum::<usize>() as f64 / n as f64;
+    let len_p99 = {
+        let mut sorted: Vec<f64> = lens.iter().map(|&l| l as f64).collect();
+        sorted.sort_by(|a, b| a.total_cmp(b));
+        percentile(&sorted, 99.0)
+    };
 
     // Warmup wave (every model once, plus pool/artifact spin-up; primes
     // the admission EWMA), drained and excluded from the measured window.
@@ -282,6 +325,8 @@ fn run_point(
         degraded: report.degraded,
         per_model: per_model_rows,
         spawned,
+        len_mean,
+        len_p99,
     }
 }
 
@@ -332,6 +377,9 @@ fn emit_point(
         ("rejected", (p.rejected as usize).into()),
         ("degraded", (p.degraded as usize).into()),
         ("spawns", p.spawned.into()),
+        ("length_mix", mix.lengths.label().as_str().into()),
+        ("len_mean", p.len_mean.into()),
+        ("len_p99", p.len_p99.into()),
     ]);
     for (name, miss, shed, rejected, degraded) in &p.per_model {
         json.row(&[
@@ -361,6 +409,7 @@ fn main() {
             models: vec![("nmg", NMG, 2, 1)],
             policy: SchedPolicy::Fifo,
             arrivals: Arrivals::Poisson,
+            lengths: LengthMix::Full,
             degrade: None,
         },
         Mix {
@@ -368,6 +417,7 @@ fn main() {
             models: vec![("dense", FfnMode::NativeDense, 1, 1), ("nmg", NMG, 1, 3)],
             policy: SchedPolicy::Wdrr,
             arrivals: Arrivals::Poisson,
+            lengths: LengthMix::Pareto { alpha: 1.2 },
             degrade: Some(("dense", "nmg")),
         },
         Mix {
@@ -375,6 +425,7 @@ fn main() {
             models: vec![("dense", FfnMode::NativeDense, 1, 1), ("nmg", NMG, 1, 3)],
             policy: SchedPolicy::Wdrr,
             arrivals: Arrivals::Mmpp,
+            lengths: LengthMix::Pareto { alpha: 1.2 },
             degrade: Some(("dense", "nmg")),
         },
     ];
@@ -407,9 +458,10 @@ fn main() {
         // overload shows, loose enough that trivial load sails under it.
         let slo = Duration::from_secs_f64((10.0 / capacity).max(0.005));
         println!(
-            "\n## mix {} ({:?}); calibrated capacity {:.0} req/s, slo {:.1} ms",
+            "\n## mix {} ({:?}, lengths {}); calibrated capacity {:.0} req/s, slo {:.1} ms",
             mix.label,
             mix.policy,
+            mix.lengths.label(),
             capacity,
             slo.as_secs_f64() * 1e3
         );

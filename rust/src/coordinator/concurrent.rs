@@ -78,7 +78,7 @@
 use std::fmt;
 use std::time::{Duration, Instant};
 
-use crate::util::sync::atomic::{AtomicU64, Ordering};
+use crate::util::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use crate::util::sync::{Arc, Condvar, Mutex};
 
 use anyhow::{anyhow, bail, Result};
@@ -93,6 +93,7 @@ use super::metrics::{self, LatencySummary, ModelMetrics, QueueGauge};
 use super::registry::ModelRegistry;
 use super::scheduler::{self, Decision, SchedModel, SchedPolicy, Scheduler};
 use super::serve::{canonical_tokens, pad_batch_tokens, Request, RequestResult};
+use super::shard::ShardedModel;
 
 /// EWMA smoothing for the per-model service-time estimate: each new
 /// observation contributes 20%, so the estimate tracks drift in a few
@@ -242,6 +243,39 @@ struct Batch {
     model: usize,
     formed: Instant,
     requests: Vec<Request>,
+}
+
+/// One registered model as a worker sees it.
+enum WorkerModel {
+    /// The worker's private [`Engine::replicate`] clone (weights
+    /// `Arc`-shared with every other replica).
+    Own(Engine),
+    /// A handle on the model's shared tensor-parallel instance set:
+    /// batches round-robin across instances and each batch executes
+    /// cooperatively on that instance's dedicated shard threads.
+    Sharded(Arc<ShardedSet>),
+}
+
+/// The tensor-parallel instances of one registered model (`replicas`
+/// instances, each with its own shard-thread pool and collective group,
+/// weight slices `Arc`-shared). Shared by every worker: a sharded batch is
+/// executed by whichever instance round-robin assigns, regardless of which
+/// worker formed it.
+struct ShardedSet {
+    instances: Vec<Mutex<ShardedModel>>,
+    next: AtomicUsize,
+}
+
+impl ShardedSet {
+    /// Execute one padded batch on the next instance in round-robin order.
+    /// Holding the instance lock across the forward is the intended
+    /// serialization: an instance runs one cooperative batch at a time.
+    fn forward(&self, requests: &[Request]) -> crate::tensor::DenseTensor {
+        let i = self.next.fetch_add(1, Ordering::SeqCst) % self.instances.len();
+        let mut inst = self.instances[i].lock().unwrap();
+        let tokens = pad_batch_tokens(inst.dims(), requests);
+        inst.forward(&tokens)
+    }
 }
 
 /// The scheduler plus the ingest state it is driven under. One mutex:
@@ -403,6 +437,23 @@ pub struct ServeReport {
     /// Per-worker runtime timing views (`execute`/`transfer`/`compile`
     /// buckets charged by each worker thread), indexed by worker id.
     pub replica_timing: Vec<TimeBreakdown>,
+    /// Per-rank timing for every tensor-parallel model (empty when no
+    /// registered model declared `shards > 1`).
+    pub shard_timing: Vec<ShardTiming>,
+}
+
+/// Per-rank timing rollup for one tensor-parallel model: rank `r`'s
+/// breakdown merged across all of the model's instances.
+#[derive(Debug)]
+pub struct ShardTiming {
+    /// Registered model name.
+    pub model: String,
+    /// Shard count (ranks per instance).
+    pub shards: usize,
+    /// Merged per-rank breakdowns: `compute` (local kernels),
+    /// `collective` (ring steps incl. barrier waits), `cpu` (thread CPU
+    /// time, Linux only).
+    pub per_rank: Vec<TimeBreakdown>,
 }
 
 /// The concurrent, deadline-aware, multi-model batch server.
@@ -416,6 +467,9 @@ pub struct ConcurrentServer {
     submit_tx: Option<channel::Sender<Request>>,
     pool: Option<WorkerPool>,
     shared: Arc<Shared>,
+    /// Tensor-parallel instance sets, indexed by model (None = unsharded).
+    /// Kept for the post-join shard-timing rollup in [`Self::finish`].
+    sharded: Vec<Option<Arc<ShardedSet>>>,
     /// The workers' shared artifact runtime (for per-worker timing views).
     rt: Arc<ArtifactRuntime>,
     workers: usize,
@@ -489,10 +543,40 @@ impl ConcurrentServer {
         let max_batch = entries.iter().map(|m| m.engine.dims.batch).max().unwrap_or(1);
         let forming_cap = cfg.queue_cap.max(1).max(max_batch);
 
-        // One replica set per worker: every model, Arc-shared weights.
-        let worker_engines: Vec<Vec<Engine>> = (0..workers)
-            .map(|_| entries.iter().map(|m| m.engine.replicate()).collect())
+        // Tensor-parallel models: one shared set of `replicas` sharded
+        // instances per model (weight slices computed once, Arc-shared
+        // across instances via ShardedModel::replicate).
+        let mut sharded: Vec<Option<Arc<ShardedSet>>> = Vec::with_capacity(entries.len());
+        for m in &entries {
+            sharded.push(if m.shards > 1 {
+                let proto = m.engine.shard(m.shards)?;
+                let mut instances: Vec<Mutex<ShardedModel>> =
+                    (1..m.replicas).map(|_| Mutex::new(proto.replicate())).collect();
+                instances.insert(0, Mutex::new(proto));
+                Some(Arc::new(ShardedSet { instances, next: AtomicUsize::new(0) }))
+            } else {
+                None
+            });
+        }
+
+        // One model set per worker: a private replica of every unsharded
+        // model (Arc-shared weights), a shared handle on every sharded one.
+        let worker_models: Vec<Vec<WorkerModel>> = (0..workers)
+            .map(|_| {
+                entries
+                    .iter()
+                    .zip(&sharded)
+                    .map(|(m, set)| match set {
+                        Some(s) => WorkerModel::Sharded(Arc::clone(s)),
+                        None => WorkerModel::Own(m.engine.replicate()),
+                    })
+                    .collect()
+            })
             .collect();
+
+        // Kernel budgets follow compute threads: a sharded model's replica
+        // runs its batch on `shards` dedicated threads, not on the worker.
+        let kernel_users: usize = entries.iter().map(|m| m.replicas * m.shards).sum();
 
         let shared = Arc::new(Shared {
             sched: Mutex::new(SchedState { sched, open: true }),
@@ -543,7 +627,7 @@ impl ConcurrentServer {
         // queues.
         let slo = cfg.slo;
         let shed_enabled = cfg.shed;
-        for (worker_idx, mut engines) in worker_engines.into_iter().enumerate() {
+        for (worker_idx, mut models) in worker_models.into_iter().enumerate() {
             let shared = shared.clone();
             pool.execute(move || {
                 // Tag this worker thread so the shared runtime charges its
@@ -581,7 +665,7 @@ impl ConcurrentServer {
                                 formed: Instant::now(),
                                 requests: formed.requests,
                             };
-                            Self::execute_batch(&shared, &mut engines, worker_idx, batch);
+                            Self::execute_batch(&shared, &mut models, worker_idx, batch);
                             st = shared.sched.lock().unwrap();
                         }
                         Decision::WaitUntil(deadline) => {
@@ -618,18 +702,25 @@ impl ConcurrentServer {
             submit_tx: Some(submit_tx),
             pool: Some(pool),
             shared,
+            sharded,
             rt,
             workers,
             next_id: AtomicU64::new(0),
             submitted: AtomicU64::new(0),
             started: Instant::now(),
-            _kernel_users: threadpool::register_kernel_users(workers),
+            _kernel_users: threadpool::register_kernel_users(kernel_users),
         })
     }
 
-    /// Execute one formed batch on this worker's engine replicas and
-    /// record/account its results.
-    fn execute_batch(shared: &Shared, engines: &mut [Engine], worker_idx: usize, batch: Batch) {
+    /// Execute one formed batch on this worker's model set (its own engine
+    /// replica, or the shared sharded instances) and record/account its
+    /// results.
+    fn execute_batch(
+        shared: &Shared,
+        models: &mut [WorkerModel],
+        worker_idx: usize,
+        batch: Batch,
+    ) {
         let model = batch.model;
         let t = Instant::now();
         // A panicking forward (or pad) must not kill the worker: the
@@ -637,8 +728,13 @@ impl ConcurrentServer {
         // hang. Weights are immutable, so continuing with this engine
         // after an unwind is safe.
         let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            let tokens = pad_batch_tokens(&engines[model].dims, &batch.requests);
-            engines[model].forward(&tokens)
+            match &mut models[model] {
+                WorkerModel::Own(engine) => {
+                    let tokens = pad_batch_tokens(&engine.dims, &batch.requests);
+                    engine.forward(&tokens)
+                }
+                WorkerModel::Sharded(set) => Ok(set.forward(&batch.requests)),
+            }
         }))
         .unwrap_or_else(|_| Err(anyhow!("engine forward panicked")));
         let compute_s = t.elapsed().as_secs_f64();
@@ -869,6 +965,27 @@ impl ConcurrentServer {
             .collect();
         let replica_timing =
             (0..self.workers as u64).map(|r| self.rt.timing_for_replica(r)).collect();
+        // Per-rank shard timing, merged across each model's instances
+        // (workers are joined, so the instance locks are uncontended).
+        let mut shard_timing = Vec::new();
+        for (m, set) in self.sharded.iter().enumerate() {
+            let Some(set) = set else { continue };
+            let mut per_rank: Vec<TimeBreakdown> = Vec::new();
+            for inst in &set.instances {
+                let inst = inst.lock().unwrap();
+                for (r, t) in inst.shard_timing().iter().enumerate() {
+                    if per_rank.len() <= r {
+                        per_rank.push(TimeBreakdown::new());
+                    }
+                    per_rank[r].merge(t);
+                }
+            }
+            shard_timing.push(ShardTiming {
+                model: self.names[m].clone(),
+                shards: per_rank.len(),
+                per_rank,
+            });
+        }
         Ok(ServeReport {
             wall_rps: results.len() as f64 / wall_s.max(1e-12),
             goodput_rps: metrics::goodput(&results, slo_s, wall_s),
@@ -883,6 +1000,7 @@ impl ConcurrentServer {
             degraded: degraded.iter().sum(),
             queue_high_water: self.shared.gauge.high_water(),
             replica_timing,
+            shard_timing,
             results,
         })
     }

@@ -32,6 +32,8 @@ use crate::tune::{Autotuner, Decision};
 use crate::util::rng::Pcg64;
 use crate::util::timer::TimeBreakdown;
 
+use super::shard::{SeamMode, ShardedModel};
+
 /// Encoder dimensions, read from the artifact manifest meta.
 #[derive(Debug, Clone)]
 pub struct EncoderDims {
@@ -179,6 +181,37 @@ impl Engine {
     /// The shared artifact runtime.
     pub fn runtime(&self) -> &Arc<ArtifactRuntime> {
         &self.rt
+    }
+
+    /// Attention head count, read from the artifact spec meta (it is not
+    /// part of [`EncoderDims`] because only attention-sharding needs it).
+    pub fn n_heads(&self) -> Result<usize> {
+        let spec = self.rt.spec(&format!("encoder_fwd_{}", self.tag))?;
+        spec.meta.get("n_heads").ok_or_else(|| anyhow!("meta.n_heads"))?.usize()
+    }
+
+    /// Split this engine into a `world`-way tensor-parallel
+    /// [`ShardedModel`]: attention sharded per head, FFN column-parallel
+    /// for W1 (sparse formats sliced on slab/block boundaries) and
+    /// row-parallel at the W2 seam, shards meeting at ring collectives.
+    /// Dense sharded forwards are bit-identical to [`Engine::forward`];
+    /// sparse modes are allclose. The engine itself is unchanged — weight
+    /// slices are copies, replicated tensors `Arc`-shared.
+    pub fn shard(&self, world: usize) -> Result<ShardedModel> {
+        ShardedModel::from_engine(self, world, SeamMode::default())
+    }
+
+    /// [`Engine::shard`] with an explicit FFN W2 [`SeamMode`].
+    pub fn shard_with_seam(&self, world: usize, seam: SeamMode) -> Result<ShardedModel> {
+        ShardedModel::from_engine(self, world, seam)
+    }
+
+    /// Weight views for the sharder: parameters, pre-converted n:m:g W1^T
+    /// and autotuned W1^T (same precedence as [`Engine::forward`]).
+    pub(crate) fn weights_view(
+        &self,
+    ) -> (&BTreeMap<String, Arc<DenseTensor>>, &[NmgTensor], &[AnyTensor]) {
+        (&self.weights.params, &self.weights.nmg_w1t, &self.weights.tuned_w1t)
     }
 
     /// True when two engines share one weight set (replicas of each other).

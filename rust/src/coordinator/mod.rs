@@ -86,12 +86,22 @@
 //! *target* model; the `degraded` count stays with the model the client
 //! asked for.
 //!
+//! **Tensor parallelism.** A registry entry can declare `shards: W` in
+//! addition to `replicas`: the model is then served by [`ShardedModel`]
+//! instances ([`Engine::shard`]) whose batches are executed cooperatively
+//! by `W` dedicated shard threads — attention split per head, FFN
+//! column-parallel for W1 (sparse formats sliced on their natural
+//! slab/block boundaries) and row-parallel at the W2 seam — meeting at
+//! [`crate::dist::ShardGroup`] ring collectives. Dense sharded execution
+//! is bit-identical to the unsharded engine (see [`shard`]).
+//!
 //! * [`engine`] — the per-model engine with latency breakdown.
 //! * [`registry`] — named models behind one front-end.
 //! * [`scheduler`] — batch-formation policies (FIFO, WDRR).
 //! * [`serve`] — request vocabulary + the synchronous dynamic batcher.
 //! * [`concurrent`] — the multi-model deadline-batching front-end.
 //! * [`metrics`] — latency percentiles, SLO misses, throughput, gauges.
+//! * [`shard`] — tensor-parallel sharded execution over ring collectives.
 
 pub mod concurrent;
 pub mod engine;
@@ -99,12 +109,15 @@ pub mod metrics;
 pub mod registry;
 pub mod scheduler;
 pub mod serve;
+pub mod shard;
 
 pub use concurrent::{
-    CompletionLatch, ConcurrentServer, ModelReport, ServeConfig, ServeReport, SubmitError,
+    CompletionLatch, ConcurrentServer, ModelReport, ServeConfig, ServeReport, ShardTiming,
+    SubmitError,
 };
 pub use engine::{Engine, EncoderDims, FfnMode};
 pub use metrics::{LatencySummary, ModelMetrics};
 pub use registry::ModelRegistry;
 pub use scheduler::{SchedPolicy, Scheduler};
 pub use serve::{BatchServer, RequestResult};
+pub use shard::{shard_bounds, SeamMode, ShardedModel};

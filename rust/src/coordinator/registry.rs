@@ -33,6 +33,12 @@ pub struct ModelEntry {
     /// blows the SLO, degrade the request to the named model (typically the
     /// sparse n:m:g variant of the same weights) instead of rejecting.
     pub degrade_to: Option<String>,
+    /// Tensor-parallel shard count. 1 (the default) serves each batch on
+    /// one engine replica; `W > 1` serves the model as `replicas`
+    /// [`super::shard::ShardedModel`] instances whose batches execute
+    /// cooperatively on `W` dedicated shard threads each, with attention
+    /// split per head and the FFN split column-/row-parallel.
+    pub shards: usize,
 }
 
 /// An ordered collection of named models; indices are registration order.
@@ -56,6 +62,21 @@ impl ModelRegistry {
         replicas: usize,
         weight: u64,
     ) -> Result<usize> {
+        self.register_sharded(name, engine, replicas, weight, 1)
+    }
+
+    /// Register a tensor-parallel model: each of its `replicas` serving
+    /// slots is a sharded instance executing batches cooperatively on
+    /// `shards` dedicated threads ([`crate::coordinator::Engine::shard`]).
+    /// `shards = 1` is identical to [`ModelRegistry::register`].
+    pub fn register_sharded(
+        &mut self,
+        name: &str,
+        engine: Engine,
+        replicas: usize,
+        weight: u64,
+        shards: usize,
+    ) -> Result<usize> {
         if name.is_empty() {
             bail!("model name must be non-empty");
         }
@@ -68,12 +89,16 @@ impl ModelRegistry {
         if weight == 0 {
             bail!("model {name:?}: weight must be at least 1");
         }
+        if shards == 0 {
+            bail!("model {name:?}: shards must be at least 1");
+        }
         self.models.push(ModelEntry {
             name: name.to_string(),
             engine,
             replicas,
             weight,
             degrade_to: None,
+            shards,
         });
         Ok(self.models.len() - 1)
     }
@@ -127,6 +152,13 @@ impl ModelRegistry {
         self.models.iter().map(|m| m.replicas).sum()
     }
 
+    /// Total compute threads the registered models put behind the worker
+    /// pool: each replica of a sharded model runs its batches on `shards`
+    /// dedicated threads, so its kernel footprint is `replicas * shards`.
+    pub fn total_kernel_users(&self) -> usize {
+        self.models.iter().map(|m| m.replicas * m.shards).sum()
+    }
+
     /// Consume the registry (server start).
     pub(super) fn into_entries(self) -> Vec<ModelEntry> {
         self.models
@@ -157,6 +189,19 @@ mod tests {
         assert_eq!(reg.total_replicas(), 3);
         assert_eq!(reg.entries()[1].weight, 3);
         assert_eq!(reg.dims(0).batch, reg.dims(1).batch);
+    }
+
+    #[test]
+    fn sharded_entries_declare_their_kernel_footprint() {
+        let mut reg = ModelRegistry::new();
+        reg.register("dense", tiny_engine(), 2, 1).unwrap();
+        reg.register_sharded("tp", tiny_engine(), 2, 1, 2).unwrap();
+        assert_eq!(reg.entries()[0].shards, 1);
+        assert_eq!(reg.entries()[1].shards, 2);
+        // Worker slots count replicas; compute threads count shards too.
+        assert_eq!(reg.total_replicas(), 4);
+        assert_eq!(reg.total_kernel_users(), 2 + 2 * 2);
+        assert!(reg.register_sharded("z", tiny_engine(), 1, 1, 0).is_err(), "zero shards");
     }
 
     #[test]

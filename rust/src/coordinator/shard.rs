@@ -1,0 +1,729 @@
+//! Tensor-parallel sharded model execution.
+//!
+//! A [`ShardedModel`] splits one engine's weights across `W` shard engines
+//! that execute every batch *cooperatively*: each shard owns a disjoint
+//! slice of the attention heads, the FFN hidden dimension, the output
+//! projection rows and the vocabulary, and the shards meet at
+//! [`ShardGroup`](crate::dist::ShardGroup) ring collectives at each seam.
+//! Shard threads are **dedicated** [`WorkerPool`] workers — never
+//! threadpool-scope chunks — because a collective blocks until all `W`
+//! ranks arrive, and a blocked chunk inside a pool scope could deadlock the
+//! pool (see `util::threadpool`). `W` cooperative jobs on a `W`-thread
+//! `WorkerPool` always land on `W` distinct workers: a worker cannot take a
+//! second job until its first completes, and no job completes until all
+//! have run.
+//!
+//! # Exact sharded-vs-unsharded equivalence
+//!
+//! All sharded GEMMs run in *transposed* space: activations are carried as
+//! `X^T` so each shard computes contiguous **row** ranges of the transposed
+//! result — `Q^T = Wq^T·Y^T`, `H^T = W1^T·Y^T`, etc. — and the seams are
+//! ring allgathers over those contiguous row segments. This makes dense
+//! sharded execution **bit-identical** to the unsharded engine at *any*
+//! split boundary, because of two properties of `dense_gemm`:
+//!
+//! 1. Row (M-dimension) slicing never changes a result element's
+//!    accumulation order (k-blocks and column tiles are absolute), so a
+//!    shard's `matmul(W^T rows [lo, hi), Y^T)` equals those rows of the
+//!    full product bitwise.
+//! 2. `A·B` and `(B^T·A^T)^T` are bit-identical when both outputs consist
+//!    of full 16-wide column tiles (IEEE multiplication commutes exactly
+//!    and the k-grouping matches). The transposed products have
+//!    `N = batch·seq` columns and the unsharded ones `N ∈ {d_model, d_ff,
+//!    vocab}` — all multiples of 16 for the shipped configs (asserted at
+//!    shard time; non-multiple shapes still shard correctly, just with
+//!    allclose- rather than bit-level equivalence).
+//!
+//! Sparse formats shard along their natural boundaries — n:m:g by slab
+//! ([`NmgTensor::slice_slabs`]), BCSR by block row
+//! ([`BcsrTensor::slice_block_rows`]) — so autotuned formats survive
+//! sharding; their kernels produce exactly the sliced output rows.
+//!
+//! The FFN's second linear supports two seams ([`SeamMode`]): the default
+//! `Allgather` keeps `W2^T` row-parallel after gathering the full hidden
+//! activation (bit-identical, one allgather each side); `Allreduce` is the
+//! classic Megatron-style row-parallel `W2` whose partial outputs are
+//! summed with a ring allreduce (deterministic ring-order reduction, but a
+//! *different* order than the unsharded GEMM — allclose, not bit-equal).
+//!
+//! Synchronization goes through the `util::sync` shim (this file is
+//! lint-ported) and the collective barrier has a loom model in
+//! `tests/loom.rs`.
+
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::dist::ShardGroup;
+use crate::formats::{AnyTensor, BcsrTensor, NmgTensor};
+use crate::kernels::{bcsr_gemm, dense_gemm, elementwise, nmg_gemm};
+use crate::tensor::DenseTensor;
+use crate::util::sync::{Arc, Mutex};
+use crate::util::threadpool::WorkerPool;
+use crate::util::timer::TimeBreakdown;
+
+use super::concurrent::CompletionLatch;
+use super::engine::{EncoderDims, Engine, FfnMode};
+
+/// How the FFN's second linear combines shard partials.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SeamMode {
+    /// Gather the full hidden activation, then compute disjoint output
+    /// rows (`W2^T` row-parallel). Bit-identical to unsharded dense.
+    #[default]
+    Allgather,
+    /// Classic row-parallel `W2`: each shard computes a full-size partial
+    /// output from its hidden slice; partials are ring-allreduce-summed.
+    /// Deterministic (fixed ring order) but allclose to unsharded, not
+    /// bit-equal.
+    Allreduce,
+}
+
+/// Balanced `[0 ..= w]` split bounds of `total` in multiples of `align`
+/// (the remainder spread over the low shards; the final bound is clamped
+/// to `total`, so with `align > 1` the last shard absorbs the ragged
+/// tail). Empty shards (`bounds[i] == bounds[i+1]`) are legal and arise
+/// when `total / align < w`.
+pub fn shard_bounds(total: usize, w: usize, align: usize) -> Vec<usize> {
+    assert!(w >= 1, "need at least one shard");
+    assert!(align >= 1, "alignment must be positive");
+    let units = total.div_ceil(align);
+    let (q, r) = (units / w, units % w);
+    (0..=w).map(|i| ((i * q + i.min(r)) * align).min(total)).collect()
+}
+
+/// This shard's slice of one layer's first FFN linear, stored transposed
+/// (`W1^T` rows `[ff_lo, ff_hi)`) in the format the engine serves.
+enum W1Slice {
+    /// No rows on this shard.
+    Empty,
+    /// Dense `(ff_hi - ff_lo, d_model)`.
+    Dense(DenseTensor),
+    /// n:m:g slab range.
+    Nmg(NmgTensor),
+    /// BCSR block-row range.
+    Bcsr(BcsrTensor),
+}
+
+/// Per-layer attention weights, pre-sliced for one shard.
+struct AttnShard {
+    ln_g: Arc<DenseTensor>,
+    ln_b: Arc<DenseTensor>,
+    /// Rows `[hc_lo, hc_hi)` of `Wq^T` / `Wk^T` / `Wv^T` — this shard's
+    /// head columns, transposed: shape `(hc, d_model)`.
+    wqt: DenseTensor,
+    wkt: DenseTensor,
+    wvt: DenseTensor,
+    bq: Vec<f32>,
+    bk: Vec<f32>,
+    bv: Vec<f32>,
+    /// Rows `[dm_lo, dm_hi)` of `Wo^T`: shape `(dm, d_model)`.
+    wot: DenseTensor,
+    bo: Vec<f32>,
+}
+
+/// This shard's slice of one layer's second FFN linear.
+enum W2Seam {
+    /// Rows `[dm_lo, dm_hi)` of `W2^T` (shape `(dm, d_ff)`) plus the
+    /// matching `b2` slice.
+    Allgather { w2t: DenseTensor, b2: Vec<f32> },
+    /// Rows `[ff_lo, ff_hi)` of `W2` (shape `(ff, d_model)`) plus the
+    /// *full* `b2` (added after the reduction).
+    Allreduce { w2: DenseTensor, b2: Vec<f32> },
+}
+
+/// Per-layer FFN weights, pre-sliced for one shard.
+struct FfnShard {
+    ln_g: Arc<DenseTensor>,
+    ln_b: Arc<DenseTensor>,
+    w1t: W1Slice,
+    b1: Vec<f32>,
+    /// Full `[0 ..= w]` hidden-dimension bounds for this layer (aligned to
+    /// the format's slab/block size — they can differ per layer when
+    /// autotuning picked different formats).
+    ff_bounds: Vec<usize>,
+    w2: W2Seam,
+}
+
+/// Everything immutable a shard needs: pre-sliced weights and the split
+/// bounds. `Arc`-shared between replicas of the same sharded model, and
+/// the replicated parameters (layernorms, embeddings) are `Arc` clones of
+/// the source engine's allocations — zero copies of unsliced weights.
+struct ShardWeights {
+    emb: Arc<DenseTensor>,
+    pos: Arc<DenseTensor>,
+    layers: Vec<(AttnShard, FfnShard)>,
+    lnf_g: Arc<DenseTensor>,
+    lnf_b: Arc<DenseTensor>,
+    /// Rows `[v_lo, v_hi)` of `out_w^T`: shape `(v, d_model)`.
+    out_wt: DenseTensor,
+    out_b: Vec<f32>,
+    /// Head-column bounds (head index bounds × head dim).
+    hc_bounds: Vec<usize>,
+    /// d_model row bounds (attention projection / FFN output rows).
+    dm_bounds: Vec<usize>,
+    /// Vocabulary row bounds (LM head).
+    v_bounds: Vec<usize>,
+}
+
+/// One rank of a sharded model: its weight slices plus private timing.
+pub struct ShardEngine {
+    rank: usize,
+    world: usize,
+    dims: EncoderDims,
+    n_heads: usize,
+    seam: SeamMode,
+    weights: Arc<ShardWeights>,
+    times: TimeBreakdown,
+}
+
+/// Copy rows `[r0, r1)` of a row-major 2-D tensor.
+fn row_slice(t: &DenseTensor, r0: usize, r1: usize) -> DenseTensor {
+    let c = t.cols();
+    DenseTensor::from_vec(&[r1 - r0, c], t.data()[r0 * c..r1 * c].to_vec())
+}
+
+/// Copy the rectangular block rows `[r0, r0+nr)` × cols `[c0, c0+nc)`.
+fn block(t: &DenseTensor, r0: usize, nr: usize, c0: usize, nc: usize) -> DenseTensor {
+    let cols = t.cols();
+    let mut out = vec![0f32; nr * nc];
+    for r in 0..nr {
+        let src = (r0 + r) * cols + c0;
+        out[r * nc..(r + 1) * nc].copy_from_slice(&t.data()[src..src + nc]);
+    }
+    DenseTensor::from_vec(&[nr, nc], out)
+}
+
+/// `out[r, c] = t[r, c] + bias[r]` — the transposed-layout form of
+/// `elementwise::bias_add` (bias varies per *row*). Same scalar additions
+/// as the row-major form, so results stay bit-identical to it.
+fn bias_add_rows(t: &DenseTensor, bias: &[f32]) -> DenseTensor {
+    let (r, c) = (t.rows(), t.cols());
+    assert_eq!(r, bias.len(), "row-bias length mismatch");
+    let mut out = t.data().to_vec();
+    for (i, &b) in bias.iter().enumerate() {
+        for v in &mut out[i * c..(i + 1) * c] {
+            *v += b;
+        }
+    }
+    DenseTensor::from_vec(&[r, c], out)
+}
+
+/// Element-count bounds for an allgather over row ranges of a transposed
+/// `(R, cols)` buffer: row bounds × cols.
+fn elem_bounds(bounds: &[usize], cols: usize) -> Vec<usize> {
+    bounds.iter().map(|&b| b * cols).collect()
+}
+
+/// This thread's cumulative CPU time (user + system) from
+/// `/proc/thread-self/stat`, or `None` off Linux. Used for the per-shard
+/// `cpu` timing bucket: on machines with fewer cores than shards,
+/// wall-clock hides the per-shard speedup that CPU time still shows.
+fn thread_cpu_time() -> Option<Duration> {
+    let stat = std::fs::read_to_string("/proc/thread-self/stat").ok()?;
+    // Fields 14/15 (1-based: utime, stime) count from after the comm field,
+    // which is parenthesized and may contain spaces.
+    let rest = &stat[stat.rfind(')')? + 2..];
+    let mut it = rest.split_ascii_whitespace();
+    let utime: u64 = it.nth(11)?.parse().ok()?;
+    let stime: u64 = it.next()?.parse().ok()?;
+    // Jiffies at the kernel's USER_HZ, which is 100 on every Linux ABI.
+    Some(Duration::from_millis((utime + stime) * 10))
+}
+
+impl ShardEngine {
+    /// This shard's rank in `[0, world)`.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Accumulated per-shard timing: `compute` (local kernels),
+    /// `collective` (time inside allgather/allreduce, including barrier
+    /// waits) and `cpu` (thread CPU time, Linux only).
+    pub fn timing(&self) -> &TimeBreakdown {
+        &self.times
+    }
+
+    /// Reset the accumulated timing.
+    pub fn reset_timing(&mut self) {
+        self.times = TimeBreakdown::new();
+    }
+
+    /// Replicated embedding: same math as the runtime's `embed_` artifact
+    /// (token row + position row), so every shard starts from the same
+    /// activations as the unsharded engine, bitwise.
+    fn embed(&self, tokens: &[i32]) -> DenseTensor {
+        let (d, s, v) = (self.dims.d_model, self.dims.seq, self.dims.vocab);
+        let w = &self.weights;
+        let (embd, posd) = (w.emb.data(), w.pos.data());
+        let rows = tokens.len();
+        let mut out = vec![0f32; rows * d];
+        for r in 0..rows {
+            let tok = tokens[r].rem_euclid(v as i32) as usize;
+            let e = &embd[tok * d..(tok + 1) * d];
+            let p = &posd[(r % s) * d..(r % s + 1) * d];
+            for (j, o) in out[r * d..(r + 1) * d].iter_mut().enumerate() {
+                *o = e[j] + p[j];
+            }
+        }
+        DenseTensor::from_vec(&[rows, d], out)
+    }
+
+    /// Pre-LN multi-head attention with residual, head-sharded: this rank
+    /// computes `Q^T/K^T/V^T` for its head columns, runs its heads'
+    /// score/softmax/value pipelines, allgathers the transposed attention
+    /// output, computes its `Wo^T` row range of the projection, and
+    /// allgathers again before the (replicated) residual add.
+    fn attn_block(
+        &self,
+        l: usize,
+        x: &DenseTensor,
+        group: &ShardGroup,
+        coll: &mut Duration,
+    ) -> DenseTensor {
+        let (b, s, d) = (self.dims.batch, self.dims.seq, self.dims.d_model);
+        let rows = b * s;
+        let hd = d / self.n_heads;
+        let w = &self.weights.layers[l].0;
+        let (hc_lo, hc_hi) =
+            (self.weights.hc_bounds[self.rank], self.weights.hc_bounds[self.rank + 1]);
+
+        let y = elementwise::layernorm_rows(x, w.ln_g.data(), w.ln_b.data());
+        let yt = y.transpose2();
+
+        let mut ot = vec![0f32; d * rows];
+        if hc_hi > hc_lo {
+            let qt = bias_add_rows(&dense_gemm::matmul(&w.wqt, &yt), &w.bq);
+            let kt = bias_add_rows(&dense_gemm::matmul(&w.wkt, &yt), &w.bk);
+            let vt = bias_add_rows(&dense_gemm::matmul(&w.wvt, &yt), &w.bv);
+            let scale = 1.0 / (hd as f32).sqrt();
+            for h in 0..(hc_hi - hc_lo) / hd {
+                for bi in 0..b {
+                    let qb = block(&qt, h * hd, hd, bi * s, s).transpose2();
+                    let kbt = block(&kt, h * hd, hd, bi * s, s);
+                    let vb = block(&vt, h * hd, hd, bi * s, s).transpose2();
+                    let mut scores = dense_gemm::matmul_serial(&qb, &kbt);
+                    scores.scale(scale);
+                    let att = elementwise::softmax_rows(&scores);
+                    let ob = dense_gemm::matmul_serial(&att, &vb); // (s, hd)
+                    let obd = ob.data();
+                    for c in 0..hd {
+                        let dst = (hc_lo + h * hd + c) * rows + bi * s;
+                        for r in 0..s {
+                            ot[dst + r] = obd[r * hd + c];
+                        }
+                    }
+                }
+            }
+        }
+        let t = Instant::now();
+        group.allgather(self.rank, &mut ot, &elem_bounds(&self.weights.hc_bounds, rows));
+        *coll += t.elapsed();
+        let ot = DenseTensor::from_vec(&[d, rows], ot);
+
+        let (dm_lo, dm_hi) =
+            (self.weights.dm_bounds[self.rank], self.weights.dm_bounds[self.rank + 1]);
+        let mut pt = vec![0f32; d * rows];
+        if dm_hi > dm_lo {
+            let p = bias_add_rows(&dense_gemm::matmul(&w.wot, &ot), &w.bo);
+            pt[dm_lo * rows..dm_hi * rows].copy_from_slice(p.data());
+        }
+        let t = Instant::now();
+        group.allgather(self.rank, &mut pt, &elem_bounds(&self.weights.dm_bounds, rows));
+        *coll += t.elapsed();
+        let proj = DenseTensor::from_vec(&[d, rows], pt).transpose2();
+        x.zip(&proj, |a, c| a + c)
+    }
+
+    /// Pre-LN FFN with residual: column-parallel `W1` (this rank's hidden
+    /// rows, sparse formats sliced on their natural boundaries), then the
+    /// configured [`SeamMode`] for `W2`.
+    fn ffn_block(
+        &self,
+        l: usize,
+        x: &DenseTensor,
+        group: &ShardGroup,
+        coll: &mut Duration,
+    ) -> DenseTensor {
+        let (b, s, d) = (self.dims.batch, self.dims.seq, self.dims.d_model);
+        let (rows, f) = (b * s, self.dims.d_ff);
+        let w = &self.weights.layers[l].1;
+        let (ff_lo, ff_hi) = (w.ff_bounds[self.rank], w.ff_bounds[self.rank + 1]);
+
+        let y = elementwise::layernorm_rows(x, w.ln_g.data(), w.ln_b.data());
+        let yt = y.transpose2();
+
+        // This rank's hidden rows, transposed: (ff_hi - ff_lo, rows).
+        let ht_s = match &w.w1t {
+            W1Slice::Empty => None,
+            W1Slice::Dense(w1t) => Some(dense_gemm::matmul(w1t, &yt)),
+            W1Slice::Nmg(w1t) => Some(nmg_gemm::spmm(w1t, &yt)),
+            W1Slice::Bcsr(w1t) => Some(bcsr_gemm::spmm(w1t, &yt)),
+        };
+        let ht_s = ht_s.map(|h| elementwise::gelu(&bias_add_rows(&h, &w.b1)));
+
+        match &w.w2 {
+            W2Seam::Allgather { w2t, b2 } => {
+                let mut ht = vec![0f32; f * rows];
+                if let Some(h) = &ht_s {
+                    ht[ff_lo * rows..ff_hi * rows].copy_from_slice(h.data());
+                }
+                let t = Instant::now();
+                group.allgather(self.rank, &mut ht, &elem_bounds(&w.ff_bounds, rows));
+                *coll += t.elapsed();
+                let ht = DenseTensor::from_vec(&[f, rows], ht);
+
+                let (dm_lo, dm_hi) =
+                    (self.weights.dm_bounds[self.rank], self.weights.dm_bounds[self.rank + 1]);
+                let mut ot = vec![0f32; d * rows];
+                if dm_hi > dm_lo {
+                    let o = bias_add_rows(&dense_gemm::matmul(w2t, &ht), b2);
+                    ot[dm_lo * rows..dm_hi * rows].copy_from_slice(o.data());
+                }
+                let t = Instant::now();
+                group.allgather(self.rank, &mut ot, &elem_bounds(&self.weights.dm_bounds, rows));
+                *coll += t.elapsed();
+                let o = DenseTensor::from_vec(&[d, rows], ot).transpose2();
+                x.zip(&o, |a, c| a + c)
+            }
+            W2Seam::Allreduce { w2, b2 } => {
+                // Partial output from this rank's hidden slice; ring-summed.
+                let mut partial = match &ht_s {
+                    Some(h) => dense_gemm::matmul(&h.transpose2(), w2),
+                    None => DenseTensor::zeros(&[rows, d]),
+                };
+                let t = Instant::now();
+                group.allreduce_sum(self.rank, partial.data_mut());
+                *coll += t.elapsed();
+                let o = elementwise::bias_add(&partial, b2);
+                x.zip(&o, |a, c| a + c)
+            }
+        }
+    }
+
+    /// One full forward on this rank. Collective: all `world` ranks must
+    /// call concurrently with the same tokens. Returns the full logits
+    /// `(batch, seq, vocab)` (identical on every rank).
+    fn forward_local(&mut self, tokens: &[i32], group: &ShardGroup) -> DenseTensor {
+        let t_all = Instant::now();
+        let cpu0 = thread_cpu_time();
+        let mut coll = Duration::ZERO;
+        let (b, s, v) = (self.dims.batch, self.dims.seq, self.dims.vocab);
+        let rows = b * s;
+
+        let mut x = self.embed(tokens);
+        for l in 0..self.dims.n_layers {
+            x = self.attn_block(l, &x, group, &mut coll);
+            x = self.ffn_block(l, &x, group, &mut coll);
+        }
+
+        let w = Arc::clone(&self.weights);
+        let y = elementwise::layernorm_rows(&x, w.lnf_g.data(), w.lnf_b.data());
+        let yt = y.transpose2();
+        let (v_lo, v_hi) = (w.v_bounds[self.rank], w.v_bounds[self.rank + 1]);
+        let mut lt = vec![0f32; v * rows];
+        if v_hi > v_lo {
+            let part = bias_add_rows(&dense_gemm::matmul(&w.out_wt, &yt), &w.out_b);
+            lt[v_lo * rows..v_hi * rows].copy_from_slice(part.data());
+        }
+        let t = Instant::now();
+        group.allgather(self.rank, &mut lt, &elem_bounds(&w.v_bounds, rows));
+        coll += t.elapsed();
+        let logits = DenseTensor::from_vec(&[v, rows], lt).transpose2().reshape(&[b, s, v]);
+
+        self.times.add("collective", coll);
+        self.times.add("compute", t_all.elapsed().saturating_sub(coll));
+        if let (Some(c0), Some(c1)) = (cpu0, thread_cpu_time()) {
+            self.times.add("cpu", c1.saturating_sub(c0));
+        }
+        logits
+    }
+}
+
+/// A model executed cooperatively by `W` shard engines on a dedicated
+/// worker pool. Construct via [`Engine::shard`]; replicate via
+/// [`ShardedModel::replicate`] (weight slices are `Arc`-shared, never
+/// re-sliced). `forward` takes `&mut self`: one batch at a time per
+/// instance — run several replicas for concurrent sharded batches.
+pub struct ShardedModel {
+    shards: Arc<Vec<Mutex<ShardEngine>>>,
+    group: Arc<ShardGroup>,
+    pool: WorkerPool,
+    world: usize,
+    dims: EncoderDims,
+}
+
+impl ShardedModel {
+    /// Split `engine`'s weights into `world` shard engines.
+    pub(crate) fn from_engine(engine: &Engine, world: usize, seam: SeamMode) -> Result<Self> {
+        assert!(world >= 1, "need at least one shard");
+        let dims = engine.dims.clone();
+        let n_heads = engine.n_heads()?;
+        if dims.d_model % n_heads != 0 {
+            return Err(anyhow!("d_model {} % n_heads {n_heads} != 0", dims.d_model));
+        }
+        let hd = dims.d_model / n_heads;
+        let (params, nmg_w1t, tuned_w1t) = engine.weights_view();
+
+        let head_bounds = shard_bounds(n_heads, world, 1);
+        let hc_bounds: Vec<usize> = head_bounds.iter().map(|&h| h * hd).collect();
+        let dm_bounds = shard_bounds(dims.d_model, world, 1);
+        let v_bounds = shard_bounds(dims.vocab, world, 1);
+
+        let p = |name: &str| -> Result<&Arc<DenseTensor>> {
+            params.get(name).ok_or_else(|| anyhow!("missing parameter {name}"))
+        };
+
+        let mut shards = Vec::with_capacity(world);
+        for rank in 0..world {
+            let (hc_lo, hc_hi) = (hc_bounds[rank], hc_bounds[rank + 1]);
+            let (dm_lo, dm_hi) = (dm_bounds[rank], dm_bounds[rank + 1]);
+            let (v_lo, v_hi) = (v_bounds[rank], v_bounds[rank + 1]);
+            let mut layers = Vec::with_capacity(dims.n_layers);
+            for l in 0..dims.n_layers {
+                let key = |n: &str| format!("layer{l}.{n}");
+                let slice_qkv = |w_name: &str, b_name: &str| -> Result<(DenseTensor, Vec<f32>)> {
+                    let wt = p(&key(w_name))?.transpose2();
+                    Ok((
+                        row_slice(&wt, hc_lo, hc_hi),
+                        p(&key(b_name))?.data()[hc_lo..hc_hi].to_vec(),
+                    ))
+                };
+                let (wqt, bq) = slice_qkv("wq", "bq")?;
+                let (wkt, bk) = slice_qkv("wk", "bk")?;
+                let (wvt, bv) = slice_qkv("wv", "bv")?;
+                let wot_full = p(&key("wo"))?.transpose2();
+                let attn = AttnShard {
+                    ln_g: Arc::clone(p(&key("ln1_g"))?),
+                    ln_b: Arc::clone(p(&key("ln1_b"))?),
+                    wqt,
+                    wkt,
+                    wvt,
+                    bq,
+                    bk,
+                    bv,
+                    wot: row_slice(&wot_full, dm_lo, dm_hi),
+                    bo: p(&key("bo"))?.data()[dm_lo..dm_hi].to_vec(),
+                };
+
+                // W1^T slices in the engine's served format. Autotuned
+                // layouts take precedence, mirroring Engine::native_ffn.
+                let (w1t, ff_bounds) = match tuned_w1t.get(l) {
+                    Some(AnyTensor::Nmg(t)) => slice_w1_nmg(t, world, rank, dims.d_ff),
+                    Some(AnyTensor::Bcsr(t)) => slice_w1_bcsr(t, world, rank, dims.d_ff),
+                    Some(AnyTensor::Dense(t)) => slice_w1_dense(t, world, rank, dims.d_ff),
+                    Some(other) => {
+                        // CSR/ELL and friends have no natural row-slab
+                        // boundary; shard their densified form (allclose).
+                        slice_w1_dense(&other.to_dense(), world, rank, dims.d_ff)
+                    }
+                    None => match (engine.ffn_mode, nmg_w1t.get(l)) {
+                        (FfnMode::NativeNmg { .. }, Some(t)) => {
+                            slice_w1_nmg(t, world, rank, dims.d_ff)
+                        }
+                        _ => {
+                            let w1t_full = p(&key("w1"))?.transpose2();
+                            slice_w1_dense(&w1t_full, world, rank, dims.d_ff)
+                        }
+                    },
+                };
+                let (ff_lo, ff_hi) = (ff_bounds[rank], ff_bounds[rank + 1]);
+                let w2 = match seam {
+                    SeamMode::Allgather => {
+                        let w2t_full = p(&key("w2"))?.transpose2();
+                        W2Seam::Allgather {
+                            w2t: row_slice(&w2t_full, dm_lo, dm_hi),
+                            b2: p(&key("b2"))?.data()[dm_lo..dm_hi].to_vec(),
+                        }
+                    }
+                    SeamMode::Allreduce => W2Seam::Allreduce {
+                        w2: row_slice(p(&key("w2"))?, ff_lo, ff_hi),
+                        b2: p(&key("b2"))?.data().to_vec(),
+                    },
+                };
+                let ffn = FfnShard {
+                    ln_g: Arc::clone(p(&key("ln2_g"))?),
+                    ln_b: Arc::clone(p(&key("ln2_b"))?),
+                    w1t,
+                    b1: p(&key("b1"))?.data()[ff_lo..ff_hi].to_vec(),
+                    ff_bounds,
+                    w2,
+                };
+                layers.push((attn, ffn));
+            }
+            let out_wt_full = p("out_w")?.transpose2();
+            let weights = ShardWeights {
+                emb: Arc::clone(p("emb")?),
+                pos: Arc::clone(p("pos")?),
+                layers,
+                lnf_g: Arc::clone(p("lnf_g")?),
+                lnf_b: Arc::clone(p("lnf_b")?),
+                out_wt: row_slice(&out_wt_full, v_lo, v_hi),
+                out_b: p("out_b")?.data()[v_lo..v_hi].to_vec(),
+                hc_bounds: hc_bounds.clone(),
+                dm_bounds: dm_bounds.clone(),
+                v_bounds: v_bounds.clone(),
+            };
+            shards.push(Mutex::new(ShardEngine {
+                rank,
+                world,
+                dims: dims.clone(),
+                n_heads,
+                seam,
+                weights: Arc::new(weights),
+                times: TimeBreakdown::new(),
+            }));
+        }
+        Ok(ShardedModel {
+            shards: Arc::new(shards),
+            group: Arc::new(ShardGroup::new(world)),
+            pool: WorkerPool::named("sten-shard", world),
+            world,
+            dims,
+        })
+    }
+
+    /// Shard count.
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    /// Encoder dimensions (same as the source engine's).
+    pub fn dims(&self) -> &EncoderDims {
+        &self.dims
+    }
+
+    /// A replica executing the same sharded weights on its own pool and
+    /// collective group: weight slices are `Arc`-shared, never re-sliced.
+    pub fn replicate(&self) -> ShardedModel {
+        let shards: Vec<Mutex<ShardEngine>> = self
+            .shards
+            .iter()
+            .map(|s| {
+                let src = s.lock().unwrap();
+                Mutex::new(ShardEngine {
+                    rank: src.rank,
+                    world: src.world,
+                    dims: src.dims.clone(),
+                    n_heads: src.n_heads,
+                    seam: src.seam,
+                    weights: Arc::clone(&src.weights),
+                    times: TimeBreakdown::new(),
+                })
+            })
+            .collect();
+        ShardedModel {
+            shards: Arc::new(shards),
+            group: Arc::new(ShardGroup::new(self.world)),
+            pool: WorkerPool::named("sten-shard", self.world),
+            world: self.world,
+            dims: self.dims.clone(),
+        }
+    }
+
+    /// Execute one batch cooperatively across all shards and return the
+    /// logits `(batch, seq, vocab)`. Spawn-free in steady state: the `W`
+    /// jobs run on the model's persistent dedicated workers.
+    pub fn forward(&mut self, tokens: &[i32]) -> DenseTensor {
+        let tokens: Arc<Vec<i32>> = Arc::new(tokens.to_vec());
+        let latch = Arc::new(CompletionLatch::new());
+        let out: Arc<Mutex<Option<DenseTensor>>> = Arc::new(Mutex::new(None));
+        for rank in 0..self.world {
+            let shards = Arc::clone(&self.shards);
+            let group = Arc::clone(&self.group);
+            let tokens = Arc::clone(&tokens);
+            let latch = Arc::clone(&latch);
+            let out = Arc::clone(&out);
+            self.pool.execute(move || {
+                let logits = shards[rank].lock().unwrap().forward_local(&tokens, &group);
+                if rank == 0 {
+                    *out.lock().unwrap() = Some(logits);
+                }
+                latch.account(1);
+            });
+        }
+        latch.wait(self.world);
+        let logits = out.lock().unwrap().take();
+        logits.expect("shard 0 produced no logits")
+    }
+
+    /// Per-shard timing snapshots (rank order).
+    pub fn shard_timing(&self) -> Vec<TimeBreakdown> {
+        self.shards.iter().map(|s| s.lock().unwrap().timing().clone()).collect()
+    }
+
+    /// Reset every shard's timing.
+    pub fn reset_timing(&mut self) {
+        for s in self.shards.iter() {
+            s.lock().unwrap().reset_timing();
+        }
+    }
+}
+
+/// Dense `W1^T` slice: any row boundary is exact (M-dimension slicing).
+fn slice_w1_dense(w1t: &DenseTensor, world: usize, rank: usize, f: usize) -> (W1Slice, Vec<usize>) {
+    let bounds = shard_bounds(f, world, 1);
+    let (lo, hi) = (bounds[rank], bounds[rank + 1]);
+    let slice = if hi > lo {
+        W1Slice::Dense(row_slice(w1t, lo, hi))
+    } else {
+        W1Slice::Empty
+    };
+    (slice, bounds)
+}
+
+/// n:m:g `W1^T` slice on slab boundaries.
+fn slice_w1_nmg(w1t: &NmgTensor, world: usize, rank: usize, f: usize) -> (W1Slice, Vec<usize>) {
+    let m = w1t.m;
+    let bounds = shard_bounds(f, world, m);
+    let (lo, hi) = (bounds[rank], bounds[rank + 1]);
+    let slice = if hi > lo {
+        W1Slice::Nmg(w1t.slice_slabs(lo / m, hi.div_ceil(m)))
+    } else {
+        W1Slice::Empty
+    };
+    (slice, bounds)
+}
+
+/// BCSR `W1^T` slice on block-row boundaries.
+fn slice_w1_bcsr(w1t: &BcsrTensor, world: usize, rank: usize, f: usize) -> (W1Slice, Vec<usize>) {
+    let bh = w1t.bh;
+    let bounds = shard_bounds(f, world, bh);
+    let (lo, hi) = (bounds[rank], bounds[rank + 1]);
+    let slice = if hi > lo {
+        W1Slice::Bcsr(w1t.slice_block_rows(lo / bh, hi.div_ceil(bh)))
+    } else {
+        W1Slice::Empty
+    };
+    (slice, bounds)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_bounds_balanced_and_aligned() {
+        assert_eq!(shard_bounds(10, 1, 1), vec![0, 10]);
+        assert_eq!(shard_bounds(10, 3, 1), vec![0, 4, 7, 10]);
+        assert_eq!(shard_bounds(2, 4, 1), vec![0, 1, 2, 2, 2]);
+        // Aligned: 64 rows in units of 4 across 3 shards -> 16 slabs as 6/5/5.
+        assert_eq!(shard_bounds(64, 3, 4), vec![0, 24, 44, 64]);
+        // Ragged tail: 18 rows, m = 4 -> 5 slabs as 3/2, last bound clamped.
+        assert_eq!(shard_bounds(18, 2, 4), vec![0, 12, 18]);
+        // Fewer units than shards leaves trailing shards empty.
+        assert_eq!(shard_bounds(4, 3, 4), vec![0, 4, 4, 4]);
+    }
+
+    #[test]
+    fn elem_bounds_scale_rows() {
+        assert_eq!(elem_bounds(&[0, 2, 5], 3), vec![0, 6, 15]);
+    }
+
+    #[test]
+    fn bias_add_rows_matches_manual() {
+        let t = DenseTensor::from_vec(&[2, 3], vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        let out = bias_add_rows(&t, &[10.0, 20.0]);
+        assert_eq!(out.data(), &[11.0, 12.0, 13.0, 24.0, 25.0, 26.0]);
+    }
+}

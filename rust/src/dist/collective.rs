@@ -1,17 +1,46 @@
-//! Ring allreduce over in-process worker buffers.
+//! Ring collectives over in-process worker buffers.
 //!
-//! The classic two-phase algorithm: w-1 reduce-scatter steps (each worker
+//! Two families share the same ring schedules:
+//!
+//! * [`RingAllreduce`] — caller-orchestrated: one thread owns all `w`
+//!   buffers and each ring step fans its `w` edge transfers out on the
+//!   persistent pool (`parallel_for`), with the pool's scope join as the
+//!   inter-step barrier. Used by `dist::ddp` gradient averaging.
+//! * [`ShardGroup`] — thread-cooperative: `w` dedicated shard threads each
+//!   own one buffer and drive their own edge of the ring, rendezvousing at
+//!   a [`ShardBarrier`] between steps. Used by tensor-parallel sharded
+//!   execution, where the participants are long-lived worker threads that
+//!   cannot be fanned out from a single orchestrator without handing their
+//!   buffers over.
+//!
+//! The classic two-phase allreduce: w-1 reduce-scatter steps (each worker
 //! accumulates its neighbor's rotating segment) followed by w-1 allgather
-//! steps (the fully-reduced segments rotate back around), over in-process
-//! buffers. Within a step, every segment is "in flight" between exactly one
-//! sender/receiver pair, and the pair's read and write regions of any one
-//! buffer are *different* segments — so the w transfers of a step run
-//! concurrently on the persistent thread pool (real overlap, matching the
-//! wire-parallel behavior of a physical ring), with a barrier between
-//! steps. The per-segment accumulation order is unchanged, so results are
-//! bit-identical to the sequential emulation.
+//! steps (the fully-reduced segments rotate back around). Within a step,
+//! every segment is "in flight" between exactly one sender/receiver pair,
+//! and the pair's read and write regions of any one buffer are *different*
+//! segments — so the w transfers of a step run concurrently (real overlap,
+//! matching the wire-parallel behavior of a physical ring), with a barrier
+//! between steps. The per-segment accumulation order is fixed by the ring
+//! schedule alone, so results are bit-identical run to run and independent
+//! of thread timing.
+//!
+//! `ShardGroup` synchronization goes through the `util::sync` shim and has
+//! a loom model (`tests/loom.rs`) covering the barrier.
 
+use crate::util::sync::{Condvar, Mutex};
 use crate::util::threadpool;
+
+/// Balanced segment bounds `[lo, hi)` of segment `s` when a length-`n`
+/// buffer is cut into `w` near-equal segments (remainder spread over the
+/// low segments). Shared by both collective families so their reduction
+/// orders line up.
+fn segment_bounds(n: usize, w: usize, s: usize) -> (usize, usize) {
+    let q = n / w;
+    let r = n % w;
+    let lo = s * q + s.min(r);
+    let len = q + usize::from(s < r);
+    (lo, lo + len)
+}
 
 /// A ring of `workers` in-process replicas.
 #[derive(Debug, Clone, Copy)]
@@ -33,12 +62,7 @@ impl RingAllreduce {
 
     /// Segment bounds `[lo, hi)` of segment `s` for buffers of length `n`.
     fn segment(&self, n: usize, s: usize) -> (usize, usize) {
-        let w = self.workers;
-        let q = n / w;
-        let r = n % w;
-        let lo = s * q + s.min(r);
-        let len = q + usize::from(s < r);
-        (lo, lo + len)
+        segment_bounds(n, self.workers, s)
     }
 
     /// In-place mean-allreduce: every buffer ends up holding the
@@ -117,6 +141,240 @@ impl RingAllreduce {
     }
 }
 
+/// Sense-reversing barrier for a fixed party of `w` shard threads.
+///
+/// Built on the `util::sync` shim (`Mutex` + `Condvar`) so the loom suite
+/// can model it; modeled in `tests/loom.rs`. The generation counter is the
+/// "sense": the last arrival of a round flips it and wakes the rest, and a
+/// waiter only sleeps while the generation it arrived under is still
+/// current — a wakeup from a *later* round can never strand a thread from
+/// an earlier one.
+#[derive(Debug)]
+pub struct ShardBarrier {
+    state: Mutex<BarrierState>,
+    cv: Condvar,
+    parties: usize,
+}
+
+#[derive(Debug)]
+struct BarrierState {
+    count: usize,
+    generation: usize,
+}
+
+impl ShardBarrier {
+    /// Barrier for `parties` threads (at least 1).
+    pub fn new(parties: usize) -> Self {
+        assert!(parties >= 1, "barrier needs at least one party");
+        ShardBarrier {
+            state: Mutex::new(BarrierState { count: 0, generation: 0 }),
+            cv: Condvar::new(),
+            parties,
+        }
+    }
+
+    /// Number of threads that rendezvous per round.
+    pub fn parties(&self) -> usize {
+        self.parties
+    }
+
+    /// Block until all `parties` threads have called `wait` this round.
+    ///
+    /// Establishes happens-before between everything each thread did before
+    /// its call and everything every thread does after returning (the
+    /// shared `Mutex` carries the ordering), which is what lets the ring
+    /// transfers publish raw buffer contents across the barrier.
+    pub fn wait(&self) {
+        let mut st = self.state.lock().unwrap();
+        st.count += 1;
+        if st.count == self.parties {
+            st.count = 0;
+            st.generation = st.generation.wrapping_add(1);
+            self.cv.notify_all();
+        } else {
+            let arrived = st.generation;
+            while st.generation == arrived {
+                st = self.cv.wait(st).unwrap();
+            }
+        }
+    }
+}
+
+/// One shard's published buffer: a raw pointer plus length, parked in a
+/// `Mutex` slot for the ring neighbors to pick up.
+#[derive(Debug)]
+struct SharedSlot {
+    ptr: *mut f32,
+    len: usize,
+}
+
+// SAFETY: `SharedSlot` is only a mailbox for a pointer + length; it never
+// dereferences the pointer itself. All dereferences happen in
+// `ShardGroup::{allgather, allreduce_sum}` under the disjoint-segment
+// schedule proven there, with the barrier providing happens-before, so
+// moving the slot's *value* across threads (what `Send` permits) is sound.
+unsafe impl Send for SharedSlot {}
+
+/// Thread-cooperative ring collectives for `w` dedicated shard threads.
+///
+/// Unlike [`RingAllreduce`] (one orchestrator fanning transfers onto the
+/// pool), every participant here is a long-lived thread that owns its
+/// buffer and drives its own ring edge, meeting the others at a
+/// [`ShardBarrier`] between steps. Calls are *collective*: all `w` threads
+/// must call the same operation with agreeing arguments, and the call
+/// returns only once every rank's buffer holds the final result.
+///
+/// Reduction order is fixed by the ring schedule (segment `s` accumulates
+/// rank `s`, then `s+1`, … around the ring), so sums are bit-identical run
+/// to run. Never call these from inside a threadpool scope: a blocked
+/// barrier inside a scope chunk can deadlock the pool (see
+/// `util::threadpool` docs) — shard threads must be dedicated
+/// `WorkerPool` workers.
+#[derive(Debug)]
+pub struct ShardGroup {
+    workers: usize,
+    slots: Vec<Mutex<SharedSlot>>,
+    barrier: ShardBarrier,
+}
+
+impl ShardGroup {
+    /// Group of `workers` cooperating shard threads (at least 1).
+    pub fn new(workers: usize) -> Self {
+        assert!(workers >= 1, "shard group needs at least one worker");
+        ShardGroup {
+            workers,
+            slots: (0..workers)
+                .map(|_| Mutex::new(SharedSlot { ptr: std::ptr::null_mut(), len: 0 }))
+                .collect(),
+            barrier: ShardBarrier::new(workers),
+        }
+    }
+
+    /// Number of shard threads in the group.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Rendezvous all shard threads (a bare barrier round).
+    pub fn barrier(&self) {
+        if self.workers > 1 {
+            self.barrier.wait();
+        }
+    }
+
+    /// Publish this rank's buffer and return the right neighbor's pointer.
+    ///
+    /// The returned pointer is valid for the duration of the current
+    /// collective call: the neighbor's buffer is a live `&mut [f32]` held
+    /// across its own matching call, and the final barrier of the schedule
+    /// quiesces all access before anyone returns.
+    fn publish(&self, rank: usize, buf: &mut [f32]) -> *mut f32 {
+        {
+            let mut slot = self.slots[rank].lock().unwrap();
+            slot.ptr = buf.as_mut_ptr();
+            slot.len = buf.len();
+        }
+        self.barrier.wait();
+        let right = (rank + 1) % self.workers;
+        let slot = self.slots[right].lock().unwrap();
+        assert_eq!(slot.len, buf.len(), "ragged collective buffers");
+        slot.ptr
+    }
+
+    /// Ring allgather with explicit segment `bounds` (length `w + 1`,
+    /// `bounds[0] == 0`, `bounds[w] == buf.len()`, non-decreasing; empty
+    /// segments are fine). On entry rank `r` owns segment
+    /// `[bounds[r], bounds[r+1])` of its buffer; on return every rank's
+    /// buffer holds all segments, byte-for-byte identical across ranks.
+    ///
+    /// Collective: all `w` threads must call with the same `bounds` and
+    /// equal buffer lengths.
+    pub fn allgather(&self, rank: usize, buf: &mut [f32], bounds: &[usize]) {
+        let w = self.workers;
+        assert!(rank < w, "rank {rank} out of range for {w} workers");
+        assert_eq!(bounds.len(), w + 1, "bounds must have w + 1 entries");
+        assert_eq!(bounds[0], 0, "bounds must start at 0");
+        assert_eq!(bounds[w], buf.len(), "bounds must end at buffer length");
+        assert!(bounds.windows(2).all(|p| p[0] <= p[1]), "bounds must be non-decreasing");
+        if w == 1 {
+            return;
+        }
+        let right_ptr = self.publish(rank, buf);
+        // Step t: rank i forwards the segment it most recently received,
+        // s = (i - t) mod w, to its right neighbor. After w-1 steps every
+        // segment has visited every rank.
+        for t in 0..w - 1 {
+            let s = (rank + w - t) % w;
+            let (lo, hi) = (bounds[s], bounds[s + 1]);
+            // SAFETY: within this step rank i writes its right neighbor's
+            // segment s = (i - t) mod w and reads its own segment s; the
+            // only concurrent writer of rank i's buffer is its left
+            // neighbor, writing segment (i - 1 - t) mod w != s (w >= 2), so
+            // every read and write region in flight is disjoint. The
+            // neighbor pointer was published under the slot mutex and the
+            // barrier after each step orders the writes of step t before
+            // the reads of step t + 1; the final step's barrier quiesces
+            // all access before any rank returns.
+            unsafe {
+                let src = std::slice::from_raw_parts(buf.as_ptr().add(lo), hi - lo);
+                let dst = std::slice::from_raw_parts_mut(right_ptr.add(lo), hi - lo);
+                dst.copy_from_slice(src);
+            }
+            self.barrier.wait();
+        }
+    }
+
+    /// Ring allreduce-sum over balanced segments: on return every rank's
+    /// buffer holds the element-wise sum of all ranks' buffers, with a
+    /// reduction order fixed by the ring schedule (bit-identical run to
+    /// run). Collective: all `w` threads must call with equal lengths.
+    pub fn allreduce_sum(&self, rank: usize, buf: &mut [f32]) {
+        let w = self.workers;
+        assert!(rank < w, "rank {rank} out of range for {w} workers");
+        if w == 1 {
+            return;
+        }
+        let n = buf.len();
+        let right_ptr = self.publish(rank, buf);
+        // Reduce-scatter: step t, rank i accumulates its segment
+        // s = (i - t) mod w into the right neighbor's copy; after w-1
+        // steps rank i holds the full sum of segment (i + 1) mod w, built
+        // in ring order s, s+1, ... regardless of thread timing.
+        for t in 0..w - 1 {
+            let s = (rank + w - t) % w;
+            let (lo, hi) = segment_bounds(n, w, s);
+            // SAFETY: same disjointness argument as `allgather` — rank i
+            // reads its own segment s and writes the neighbor's segment s,
+            // while the left neighbor writes rank i's segment
+            // (s - 1) mod w != s; barriers order step t's writes before
+            // step t + 1's reads.
+            unsafe {
+                let src = std::slice::from_raw_parts(buf.as_ptr().add(lo), hi - lo);
+                let dst = std::slice::from_raw_parts_mut(right_ptr.add(lo), hi - lo);
+                for (d, v) in dst.iter_mut().zip(src) {
+                    *d += *v;
+                }
+            }
+            self.barrier.wait();
+        }
+        // Allgather rotation: rank i starts owning the fully-reduced
+        // segment (i + 1) mod w; w-1 copy steps rotate the reduced
+        // segments around the ring, overwriting stale partials.
+        for t in 0..w - 1 {
+            let s = (rank + 1 + w - t) % w;
+            let (lo, hi) = segment_bounds(n, w, s);
+            // SAFETY: as above; copies only, regions disjoint per step,
+            // barriers between steps, final barrier quiesces the buffers.
+            unsafe {
+                let src = std::slice::from_raw_parts(buf.as_ptr().add(lo), hi - lo);
+                let dst = std::slice::from_raw_parts_mut(right_ptr.add(lo), hi - lo);
+                dst.copy_from_slice(src);
+            }
+            self.barrier.wait();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -180,5 +438,139 @@ mod tests {
     fn wrong_buffer_count_panics() {
         let mut bufs = vec![vec![0.0; 4]; 3];
         RingAllreduce::new(2).allreduce_mean(&mut bufs);
+    }
+
+    /// Run a `w`-thread collective: thread `r` gets buffer `r` and calls
+    /// `op(group, rank, buf)`; returns the final buffers.
+    fn run_group<F>(bufs: Vec<Vec<f32>>, op: F) -> Vec<Vec<f32>>
+    where
+        F: Fn(&ShardGroup, usize, &mut [f32]) + Send + Sync + 'static,
+    {
+        let w = bufs.len();
+        let group = std::sync::Arc::new(ShardGroup::new(w));
+        let op = std::sync::Arc::new(op);
+        let handles: Vec<_> = bufs
+            .into_iter()
+            .enumerate()
+            .map(|(rank, mut buf)| {
+                let group = std::sync::Arc::clone(&group);
+                let op = std::sync::Arc::clone(&op);
+                std::thread::spawn(move || {
+                    op(&group, rank, &mut buf);
+                    buf
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    fn gather_case(w: usize, bounds: Vec<usize>) {
+        let n = *bounds.last().unwrap();
+        let mut rng = Pcg64::seeded((w * 7919 + n) as u64);
+        let full: Vec<f32> = (0..n).map(|_| rng.normal()).collect();
+        // Rank r starts with only its own segment valid.
+        let bufs: Vec<Vec<f32>> = (0..w)
+            .map(|r| {
+                let mut b = vec![f32::NAN; n];
+                b[bounds[r]..bounds[r + 1]].copy_from_slice(&full[bounds[r]..bounds[r + 1]]);
+                b
+            })
+            .collect();
+        let bc = bounds.clone();
+        let out = run_group(bufs, move |g, rank, buf| g.allgather(rank, buf, &bc));
+        for (r, b) in out.iter().enumerate() {
+            assert_eq!(b, &full, "rank {r} allgather mismatch (w={w}, bounds={bounds:?})");
+        }
+    }
+
+    #[test]
+    fn allgather_matches_across_shapes() {
+        gather_case(1, vec![0, 9]);
+        gather_case(2, vec![0, 4, 9]);
+        gather_case(3, vec![0, 5, 5, 12]); // empty middle segment
+        gather_case(4, vec![0, 1, 2, 3, 4]);
+        gather_case(4, vec![0, 16, 32, 48, 64]);
+    }
+
+    fn sum_case(w: usize, n: usize) {
+        let mut rng = Pcg64::seeded((w * 104729 + n) as u64);
+        let bufs: Vec<Vec<f32>> =
+            (0..w).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        // Reference: accumulate in ring order per segment — seg s sums
+        // ranks s, s+1, ... around the ring, then everything allclose
+        // (and every rank bit-identical to every other).
+        let mut want = vec![0f32; n];
+        for s in 0..w {
+            let (lo, hi) = segment_bounds(n, w, s);
+            for j in lo..hi {
+                let mut acc = bufs[s][j];
+                for step in 1..w {
+                    acc += bufs[(s + step) % w][j];
+                }
+                want[j] = acc;
+            }
+        }
+        let out = run_group(bufs, |g, rank, buf| g.allreduce_sum(rank, buf));
+        for (r, b) in out.iter().enumerate() {
+            for (j, (&got, &expect)) in b.iter().zip(&want).enumerate() {
+                assert!(
+                    got.to_bits() == expect.to_bits()
+                        || (got - expect).abs() < 1e-5 * (1.0 + expect.abs()),
+                    "rank {r} elem {j}: {got} vs {expect} (w={w}, n={n})"
+                );
+            }
+            assert_eq!(b, &out[0], "rank {r} not bit-identical to rank 0");
+        }
+    }
+
+    #[test]
+    fn allreduce_sum_matches_ring_order_reference() {
+        for w in [1, 2, 3, 4] {
+            for n in [1, 3, 16, 257] {
+                sum_case(w, n);
+            }
+        }
+    }
+
+    #[test]
+    fn allreduce_sum_is_deterministic_across_runs() {
+        let w = 4;
+        let n = 129;
+        let make = || -> Vec<Vec<f32>> {
+            let mut rng = Pcg64::seeded(42);
+            (0..w).map(|_| (0..n).map(|_| rng.normal()).collect()).collect()
+        };
+        let a = run_group(make(), |g, rank, buf| g.allreduce_sum(rank, buf));
+        let b = run_group(make(), |g, rank, buf| g.allreduce_sum(rank, buf));
+        assert_eq!(a, b, "allreduce_sum must be bit-identical run to run");
+    }
+
+    #[test]
+    fn barrier_keeps_rounds_in_lockstep() {
+        let w = 3;
+        let rounds = 50;
+        let group = std::sync::Arc::new(ShardGroup::new(w));
+        let count = std::sync::Arc::new(std::sync::atomic::AtomicUsize::new(0));
+        let handles: Vec<_> = (0..w)
+            .map(|_| {
+                let group = std::sync::Arc::clone(&group);
+                let count = std::sync::Arc::clone(&count);
+                std::thread::spawn(move || {
+                    for round in 0..rounds {
+                        count.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+                        group.barrier();
+                        // Every thread of round r sees all w increments of
+                        // round r and none of round r + 1 yet... until it
+                        // increments again itself.
+                        let seen = count.load(std::sync::atomic::Ordering::SeqCst);
+                        assert!(seen >= (round + 1) * w && seen < (round + 2) * w);
+                        group.barrier();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
     }
 }

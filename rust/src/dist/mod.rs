@@ -1,8 +1,11 @@
 //! Data-parallel gradient synchronization with sparse handling (§4.6).
 //!
 //! In-process simulation of distributed masked training: [`collective`]
-//! implements a faithful ring allreduce (reduce-scatter + allgather over
-//! per-worker buffers), and [`ddp`] layers STen's sparse gradient handling
+//! implements faithful ring collectives — a caller-orchestrated allreduce
+//! (reduce-scatter + allgather over per-worker buffers) plus the
+//! thread-cooperative [`collective::ShardGroup`] family (allgather /
+//! allreduce-sum with a sense-reversing barrier) used by tensor-parallel
+//! sharded execution — and [`ddp`] layers STen's sparse gradient handling
 //! on top — the conservative convert-and-resparsify path and the
 //! fixed-pattern optimization that skips densification when every worker
 //! shares one mask (the §6.1 weak-scaling experiment).
@@ -10,5 +13,5 @@
 pub mod collective;
 pub mod ddp;
 
-pub use collective::RingAllreduce;
+pub use collective::{RingAllreduce, ShardBarrier, ShardGroup};
 pub use ddp::{sync_gradients, GradSyncMode, GradSyncStats};

@@ -58,6 +58,27 @@ impl BcsrTensor {
         BcsrTensor { shape: [rows, cols], bh, bw, indptr, indices, blocks }
     }
 
+    /// The row-slice covering block rows `[br0, br1)` — the format's
+    /// natural sharding boundary (tensor-parallel row splits must land on
+    /// block-row edges so stored blocks stay whole). Rows become
+    /// `[br0 * bh, br1 * bh)`; `indptr` is rebased and the covered
+    /// `indices`/`blocks` are copied verbatim, so a kernel over the slice
+    /// produces exactly the corresponding output rows of the full tensor.
+    pub fn slice_block_rows(&self, br0: usize, br1: usize) -> BcsrTensor {
+        let brows = self.indptr.len() - 1;
+        assert!(br0 <= br1 && br1 <= brows, "block-row range {br0}..{br1} out of 0..{brows}");
+        let (blk_lo, blk_hi) = (self.indptr[br0], self.indptr[br1]);
+        let bsz = self.bh * self.bw;
+        BcsrTensor {
+            shape: [(br1 - br0) * self.bh, self.shape[1]],
+            bh: self.bh,
+            bw: self.bw,
+            indptr: self.indptr[br0..=br1].iter().map(|&p| p - blk_lo).collect(),
+            indices: self.indices[blk_lo..blk_hi].to_vec(),
+            blocks: self.blocks[blk_lo * bsz..blk_hi * bsz].to_vec(),
+        }
+    }
+
     /// Materialize as dense.
     pub fn to_dense(&self) -> DenseTensor {
         let mut out = DenseTensor::zeros(&self.shape);
@@ -137,5 +158,30 @@ mod tests {
     #[should_panic(expected = "not divisible")]
     fn indivisible_shape_rejected() {
         BcsrTensor::from_dense(&DenseTensor::zeros(&[6, 6]), 4, 4);
+    }
+
+    #[test]
+    fn block_row_slices_cover_the_dense_rows() {
+        use crate::util::rng::Pcg64;
+        let mut rng = Pcg64::seeded(31);
+        let mut d = DenseTensor::randn(&[16, 8], &mut rng);
+        // Punch out some blocks so indptr is non-trivial.
+        for r in 4..8 {
+            for c in 0..8 {
+                d.set2(r, c, 0.0);
+            }
+        }
+        let b = BcsrTensor::from_dense(&d, 4, 4);
+        let full = b.to_dense();
+        for (br0, br1) in [(0, 4), (0, 0), (1, 3), (2, 4), (4, 4)] {
+            let s = b.slice_block_rows(br0, br1);
+            let sd = s.to_dense();
+            assert_eq!(sd.rows(), (br1 - br0) * 4);
+            for r in 0..sd.rows() {
+                for c in 0..sd.cols() {
+                    assert_eq!(sd.get2(r, c), full.get2(br0 * 4 + r, c), "({br0},{br1}) at ({r},{c})");
+                }
+            }
+        }
     }
 }

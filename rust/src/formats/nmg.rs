@@ -229,6 +229,29 @@ impl NmgTensor {
         NmgTensor { shape, n, m, g, c, chunks, slabs, val, idx, pats }
     }
 
+    /// The row-slice covering slabs `[s0, s1)` — the format's natural
+    /// sharding boundary (tensor-parallel row splits must land on slab
+    /// edges so the per-slab val/idx layout survives intact). Rows become
+    /// `[s0 * m, min(s1 * m, rows))`; the final slab's zero padding (ragged
+    /// `rows % m != 0`) carries over unchanged. Values and indices are
+    /// copied verbatim, so a kernel over the slice produces exactly the
+    /// corresponding output rows of the full tensor.
+    pub fn slice_slabs(&self, s0: usize, s1: usize) -> NmgTensor {
+        assert!(s0 <= s1 && s1 <= self.slabs, "slab range {s0}..{s1} out of 0..{}", self.slabs);
+        let rows = self.shape[0];
+        let k = self.shape[1];
+        let (row_lo, row_hi) = ((s0 * self.m).min(rows), (s1 * self.m).min(rows));
+        let slot = self.chunks * self.c * self.g;
+        NmgTensor::from_flat(
+            [row_hi - row_lo, k],
+            self.n,
+            self.m,
+            self.g,
+            self.val[s0 * slot * self.n..s1 * slot * self.n].to_vec(),
+            self.idx[s0 * slot..s1 * slot].to_vec(),
+        )
+    }
+
     fn template(d: &DenseTensor, n: usize, m: usize, g: usize) -> Self {
         let (rows, k) = (d.rows(), d.cols());
         let pats = patterns(m, n);
@@ -577,5 +600,26 @@ mod tests {
         let t = NmgTensor::from_dense(&d, 2, 4, 4);
         // values: numel/2 * 4 bytes; idx: numel/(m) * ... — well under dense.
         assert!(t.bytes() < d.numel() * 4);
+    }
+
+    #[test]
+    fn slab_slices_cover_the_dense_rows() {
+        let mut rng = Pcg64::seeded(33);
+        // Ragged row count: 18 rows at m=4 -> 5 slabs, last one padded.
+        let d = DenseTensor::randn(&[18, 24], &mut rng);
+        let t = NmgTensor::from_dense(&d, 2, 4, 2);
+        let full = t.to_dense();
+        for (s0, s1) in [(0, 5), (0, 0), (0, 2), (1, 4), (3, 5), (5, 5)] {
+            let s = t.slice_slabs(s0, s1);
+            let sd = s.to_dense();
+            let row_lo = (s0 * 4).min(18);
+            let row_hi = (s1 * 4).min(18);
+            assert_eq!(sd.rows(), row_hi - row_lo, "({s0},{s1})");
+            for r in 0..sd.rows() {
+                for c in 0..sd.cols() {
+                    assert_eq!(sd.get2(r, c), full.get2(row_lo + r, c), "({s0},{s1}) at ({r},{c})");
+                }
+            }
+        }
     }
 }

@@ -8,6 +8,8 @@
 //!   formats via the cost-model autotuner, cached across runs).
 //! * `serve`    — run the dynamic batcher over synthetic requests
 //!   (`--replicas N` switches to the concurrent deadline-batching server;
+//!   `--shards W` serves each replica as a W-way tensor-parallel sharded
+//!   model with per-shard timing in the report;
 //!   `--models dense:2,nmg:2 --weights 1,3` serves a multi-model registry
 //!   with weighted scheduling and per-model latency/SLO reports;
 //!   `--admission --degrade-to dense=nmg --shed` turns on overload
@@ -115,6 +117,7 @@ fn serve(args: &Args) -> Result<()> {
     let tag = args.get_or("tag", "tiny");
     let requests: usize = args.num("requests", 32);
     let replicas: usize = args.num("replicas", 0); // 0 = synchronous drain loop
+    let shards: usize = args.num("shards", 1);
     let max_wait = Duration::from_millis(args.num("max-wait-ms", 5));
     let slo = Duration::from_millis(args.num("slo-ms", 25));
     if args.get("models").is_some() {
@@ -129,7 +132,8 @@ fn serve(args: &Args) -> Result<()> {
         (0..seq).map(|_| rng.below(vocab) as i32).collect()
     };
 
-    if replicas > 0 {
+    if replicas > 0 || shards > 1 {
+        let replicas = replicas.max(1);
         let cfg = ServeConfig {
             replicas,
             queue_cap: args.num("queue-cap", 256),
@@ -137,7 +141,15 @@ fn serve(args: &Args) -> Result<()> {
             slo,
             ..ServeConfig::default()
         };
-        let server = ConcurrentServer::start(engine, cfg)?;
+        let server = if shards > 1 {
+            // Tensor-parallel: each replica slot is a sharded instance
+            // executing batches cooperatively on `shards` threads.
+            let mut registry = ModelRegistry::new();
+            registry.register_sharded("default", engine, replicas, 1, shards)?;
+            ConcurrentServer::start_registry(registry, cfg)?
+        } else {
+            ConcurrentServer::start(engine, cfg)?
+        };
         for _ in 0..requests {
             server.submit(&next(&mut rng))?;
         }
@@ -159,6 +171,7 @@ fn serve(args: &Args) -> Result<()> {
             None => println!("served 0 requests"),
         }
         print_replica_timing(&report);
+        print_shard_timing(&report);
         return Ok(());
     }
 
@@ -231,11 +244,12 @@ fn serve_multi(
         other => bail!("unknown policy {other:?} (try fifo|wdrr)"),
     };
 
+    let shards: usize = args.num("shards", 1);
     let rt = Arc::new(ArtifactRuntime::open_default()?);
     let mut registry = ModelRegistry::new();
     for (i, ((name, replicas), weight)) in parts.iter().zip(&weights).enumerate() {
         let engine = Engine::with_runtime(rt.clone(), tag, ffn_mode_for(name)?, 42 + i as u64)?;
-        registry.register(name, engine, *replicas, *weight)?;
+        registry.register_sharded(name, engine, *replicas, *weight, shards)?;
     }
     if let Some(spec) = args.get("degrade-to") {
         for link in spec.split(',').filter(|s| !s.is_empty()) {
@@ -311,6 +325,7 @@ fn serve_multi(
         }
     }
     print_replica_timing(&report);
+    print_shard_timing(&report);
     Ok(())
 }
 
@@ -322,6 +337,20 @@ fn print_replica_timing(report: &ServeReport) {
             t.secs("transfer"),
             t.secs("compile"),
         );
+    }
+}
+
+fn print_shard_timing(report: &ServeReport) {
+    for st in &report.shard_timing {
+        println!("  model {} ({}-way tensor-parallel):", st.model, st.shards);
+        for (r, t) in st.per_rank.iter().enumerate() {
+            println!(
+                "    shard {r}: compute {:.3}s, collective {:.3}s, cpu {:.3}s",
+                t.secs("compute"),
+                t.secs("collective"),
+                t.secs("cpu"),
+            );
+        }
     }
 }
 

@@ -4,7 +4,7 @@
 //! recursive-descent JSON parser sufficient for the manifest schema (objects,
 //! arrays, strings, integers/floats, booleans, null).
 
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 use std::path::Path;
 
 use anyhow::{anyhow, bail, Context, Result};
@@ -357,6 +357,12 @@ impl ArtifactSpec {
 #[derive(Debug, Clone, Default)]
 pub struct Manifest {
     artifacts: HashMap<String, ArtifactSpec>,
+    /// Embedded autotune decisions: tune cache key -> decision object
+    /// (layout / kernel / cost / policy), carried in the optional
+    /// top-level `autotune` field of `manifest.json`. A deployed artifact
+    /// thereby pins the exact layout choices it was tuned with;
+    /// `tune::Autotuner::from_manifest` replays them without re-tuning.
+    autotune: BTreeMap<String, Json>,
 }
 
 impl Manifest {
@@ -371,7 +377,10 @@ impl Manifest {
     /// Build a manifest from in-memory specs (the native backend's built-in
     /// artifact set when no `manifest.json` is on disk).
     pub fn from_specs(specs: Vec<ArtifactSpec>) -> Manifest {
-        Manifest { artifacts: specs.into_iter().map(|s| (s.name.clone(), s)).collect() }
+        Manifest {
+            artifacts: specs.into_iter().map(|s| (s.name.clone(), s)).collect(),
+            autotune: BTreeMap::new(),
+        }
     }
 
     /// Parse manifest JSON text.
@@ -388,7 +397,13 @@ impl Manifest {
             };
             artifacts.insert(spec.name.clone(), spec);
         }
-        Ok(Manifest { artifacts })
+        let mut autotune = BTreeMap::new();
+        if let Some(Json::Obj(map)) = root.get("autotune") {
+            for (k, v) in map {
+                autotune.insert(k.clone(), v.clone());
+            }
+        }
+        Ok(Manifest { artifacts, autotune })
     }
 
     /// Look up an artifact by name.
@@ -416,6 +431,23 @@ impl Manifest {
     /// True when no artifacts are present.
     pub fn is_empty(&self) -> bool {
         self.artifacts.is_empty()
+    }
+
+    /// Embedded autotune decisions (tune cache key -> decision object).
+    pub fn autotune(&self) -> &BTreeMap<String, Json> {
+        &self.autotune
+    }
+
+    /// Record an autotune decision under its tune cache key.
+    pub fn set_autotune(&mut self, key: &str, decision: Json) {
+        self.autotune.insert(key.to_string(), decision);
+    }
+
+    /// The `autotune` section as one JSON object. Serialize with
+    /// [`Json::to_string_sorted`] to embed in a written manifest; parsing
+    /// the result back yields the same decisions (round-trip tested).
+    pub fn autotune_json(&self) -> Json {
+        Json::Obj(self.autotune.iter().map(|(k, v)| (k.clone(), v.clone())).collect())
     }
 }
 
@@ -502,6 +534,29 @@ mod tests {
         let v2 = Json::parse(&s).unwrap();
         assert_eq!(v2, v);
         assert_eq!(v2.to_string_sorted(), s);
+    }
+
+    #[test]
+    fn autotune_section_parses_and_roundtrips() {
+        let doc = r#"{"artifacts": [], "autotune": {
+            "matmul:m16k32n8:sp500:nmg2:4:2": {"layout": "Nmg",
+             "kernel": "nmg_gemm::spmm", "cost": 4096, "policy": "cost_model"}}}"#;
+        let mut m = Manifest::parse(doc).unwrap();
+        assert_eq!(m.autotune().len(), 1);
+        let dec = &m.autotune()["matmul:m16k32n8:sp500:nmg2:4:2"];
+        assert_eq!(dec.get("layout").unwrap().str().unwrap(), "Nmg");
+        assert_eq!(dec.get("cost").unwrap().f64().unwrap(), 4096.0);
+        // Add an entry, serialize the section, parse it back: identical.
+        let mut extra = HashMap::new();
+        extra.insert("layout".to_string(), Json::Str("Dense".to_string()));
+        m.set_autotune("matmul:m8k8n4:sp0:nmgnone", Json::Obj(extra));
+        let section = m.autotune_json().to_string_sorted();
+        let doc2 = format!(r#"{{"artifacts": [], "autotune": {section}}}"#);
+        let m2 = Manifest::parse(&doc2).unwrap();
+        assert_eq!(m2.autotune(), m.autotune());
+        assert_eq!(m2.autotune_json().to_string_sorted(), section, "byte-stable");
+        // A manifest without the section has no decisions.
+        assert!(Manifest::parse(r#"{"artifacts": []}"#).unwrap().autotune().is_empty());
     }
 
     #[test]

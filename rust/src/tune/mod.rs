@@ -27,7 +27,7 @@ use crate::formats::{
     NmgTensor,
 };
 use crate::ops::OpKind;
-use crate::runtime::Json;
+use crate::runtime::{Json, Manifest};
 use crate::tensor::DenseTensor;
 use crate::util::rng::Pcg64;
 
@@ -355,6 +355,43 @@ pub fn materialize(
     })
 }
 
+/// A [`Decision`] as a manifest/cache JSON object
+/// (layout / kernel / cost / policy).
+pub fn decision_to_json(d: &Decision) -> Json {
+    let mut obj = HashMap::new();
+    obj.insert("layout".to_string(), Json::Str(d.layout.to_string()));
+    obj.insert("kernel".to_string(), Json::Str(d.kernel.clone()));
+    obj.insert("cost".to_string(), Json::Num(d.cost));
+    obj.insert("policy".to_string(), Json::Str(d.policy.clone()));
+    Json::Obj(obj)
+}
+
+/// Parse a [`Decision`] back out of its manifest JSON object.
+pub fn decision_from_json(j: &Json) -> Result<Decision> {
+    let field = |k: &str| j.get(k).ok_or_else(|| anyhow!("autotune decision missing {k:?}"));
+    Ok(Decision {
+        layout: parse_layout(field("layout")?.str()?)?,
+        kernel: field("kernel")?.str()?.to_string(),
+        cost: field("cost")?.f64()?,
+        policy: field("policy")?.str()?.to_string(),
+    })
+}
+
+/// Materialize a tuned weight *and* record its decision in the artifact
+/// manifest under the tune cache key: the deployed artifact pins the exact
+/// layout the autotuner chose, and [`Autotuner::from_manifest`] replays it
+/// without re-tuning.
+pub fn materialize_into_manifest(
+    manifest: &mut Manifest,
+    key: &str,
+    d: &DenseTensor,
+    dec: &Decision,
+    nmg: Option<(usize, usize, usize)>,
+) -> Result<AnyTensor> {
+    manifest.set_autotune(key, decision_to_json(dec));
+    materialize(d, dec.layout, nmg)
+}
+
 /// The autotuner: policy + cache + hit counters.
 pub struct Autotuner {
     /// Scoring policy.
@@ -376,6 +413,18 @@ impl Autotuner {
     /// Autotuner over a pre-loaded cache.
     pub fn with_cache(policy: TunePolicy, cache: TuneCache) -> Autotuner {
         Autotuner { policy, cache, hits: 0, misses: 0 }
+    }
+
+    /// Replay tuner over a manifest's embedded autotune decisions
+    /// ([`crate::runtime::Manifest::autotune`]): the cache is pre-seeded,
+    /// so every [`Autotuner::choose`] with matching inputs is a pure cache
+    /// hit — a deployed artifact reproduces its tuned layouts exactly.
+    pub fn from_manifest(policy: TunePolicy, manifest: &Manifest) -> Result<Autotuner> {
+        let mut cache = TuneCache::new();
+        for (key, dec) in manifest.autotune() {
+            cache.insert(key.clone(), decision_from_json(dec)?);
+        }
+        Ok(Autotuner::with_cache(policy, cache))
     }
 
     /// Enumerate candidate layouts for `weight @ dense` from the
@@ -576,6 +625,38 @@ mod tests {
         // Missing file is an empty cache, not an error.
         assert!(TuneCache::load(&dir.join("nope.json")).unwrap().is_empty());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn manifest_embeds_and_replays_autotune_decisions() {
+        let d = Dispatcher::with_builtins();
+        let w = nmg_pruned_weight(16, 32, 46);
+        let mut tuner = Autotuner::new(TunePolicy::CostModel);
+        let dec = tuner.choose(&d, &w, 8, Some((2, 4, 2))).unwrap();
+        let key = tune_key(&WeightStats::measure(&w), 8, Some((2, 4, 2)));
+
+        // Materialize-and-record, then round-trip the manifest's autotune
+        // section through serialized JSON.
+        let mut manifest = Manifest::default();
+        let wt =
+            materialize_into_manifest(&mut manifest, &key, &w, &dec, Some((2, 4, 2))).unwrap();
+        assert_eq!(wt.layout(), dec.layout, "materializes the recorded layout");
+        let section = manifest.autotune_json().to_string_sorted();
+        let doc = format!(r#"{{"artifacts": [], "autotune": {section}}}"#);
+        let parsed = Manifest::parse(&doc).unwrap();
+        assert_eq!(parsed.autotune(), manifest.autotune());
+        assert_eq!(decision_from_json(&parsed.autotune()[&key]).unwrap(), dec);
+
+        // Replay: identical decision, answered purely from the cache.
+        let mut replay = Autotuner::from_manifest(TunePolicy::CostModel, &parsed).unwrap();
+        let dec2 = replay.choose(&d, &w, 8, Some((2, 4, 2))).unwrap();
+        assert_eq!(dec2, dec);
+        assert_eq!((replay.hits, replay.misses), (1, 0), "replay must never re-tune");
+
+        // A malformed embedded decision is a loud error, not a silent miss.
+        let mut bad = Manifest::default();
+        bad.set_autotune("k", Json::Str("not an object".to_string()));
+        assert!(Autotuner::from_manifest(TunePolicy::CostModel, &bad).is_err());
     }
 
     #[test]

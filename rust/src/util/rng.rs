@@ -57,6 +57,17 @@ impl Pcg64 {
         lo + (hi - lo) * self.next_f32()
     }
 
+    /// Pareto-distributed sample with scale 1 and shape `alpha > 0`, via
+    /// inverse-CDF transform `(1 - u)^(-1/alpha)`. Heavy-tailed: the mean
+    /// is `alpha / (alpha - 1)` for `alpha > 1` and infinite otherwise —
+    /// used for realistic (fat-tailed) request-length mixes in the serving
+    /// benches.
+    pub fn pareto(&mut self, alpha: f64) -> f64 {
+        debug_assert!(alpha > 0.0);
+        let u = (1.0 - self.next_f32() as f64).max(1e-12); // in (0, 1]
+        u.powf(-1.0 / alpha)
+    }
+
     /// Standard normal via Box–Muller.
     pub fn normal(&mut self) -> f32 {
         let u1 = self.next_f32().max(1e-12);
@@ -151,6 +162,21 @@ mod tests {
         let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f32>() / n as f32;
         assert!(mean.abs() < 0.05, "mean {mean}");
         assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn pareto_mean_and_tail() {
+        let mut rng = Pcg64::seeded(13);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.pareto(3.0)).collect();
+        assert!(xs.iter().all(|&x| x >= 1.0), "support starts at the scale");
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        assert!((mean - 1.5).abs() < 0.05, "mean {mean}"); // alpha/(alpha-1)
+        // Heavier shape -> fatter tail: P(X > 10) is 10^-1.1 vs 10^-3.
+        let mut rng = Pcg64::seeded(13);
+        let heavy = (0..n).filter(|_| rng.pareto(1.1) > 10.0).count();
+        let light = xs.iter().filter(|&&x| x > 10.0).count();
+        assert!(heavy > 10 * light.max(1), "heavy {heavy} vs light {light}");
     }
 
     #[test]

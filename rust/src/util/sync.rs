@@ -3,7 +3,8 @@
 //! `--features loom`.
 //!
 //! Code ported to this shim (`util/threadpool.rs`, `util/channel.rs`,
-//! `coordinator/concurrent.rs`) imports `Arc`, `Mutex`, `Condvar`,
+//! `coordinator/concurrent.rs`, `dist/collective.rs`,
+//! `coordinator/shard.rs`) imports `Arc`, `Mutex`, `Condvar`,
 //! `atomic::*` and `thread::*` from here instead of `std` directly — the
 //! `xtask lint` invariant `std-sync-in-ported-file` enforces it. In
 //! a default build every re-export below is *exactly* the `std` item

@@ -24,6 +24,7 @@ use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::time::{Duration, Instant};
 
 use sten::coordinator::CompletionLatch;
+use sten::dist::ShardBarrier;
 use sten::util::channel::{bounded, Received, TrySendError};
 use sten::util::loom::ModelOptions;
 use sten::util::sync::atomic::{AtomicUsize, Ordering};
@@ -300,6 +301,66 @@ fn latch_wait_never_misses_final_account() {
         assert_eq!(latch.count(), 2);
         for w in workers {
             w.join().unwrap();
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// ShardBarrier: the per-step rendezvous of the ring collectives.
+// ---------------------------------------------------------------------------
+
+/// Every party's pre-barrier write is visible to every party after `wait`
+/// returns, and the sense-reversing generation makes the barrier reusable:
+/// a second round on the same barrier never deadlocks and never releases a
+/// party early, in any interleaving of arrivals, wakeups and the
+/// generation flip.
+#[test]
+fn shard_barrier_releases_all_parties_with_writes_visible() {
+    channel_bounds().check(|| {
+        let barrier = Arc::new(ShardBarrier::new(2));
+        let hits = Arc::new(AtomicUsize::new(0));
+        let peer = {
+            let barrier = Arc::clone(&barrier);
+            let hits = Arc::clone(&hits);
+            thread::spawn(move || {
+                hits.fetch_add(1, Ordering::SeqCst);
+                barrier.wait();
+                assert_eq!(hits.load(Ordering::SeqCst), 2, "peer write invisible");
+                barrier.wait(); // round 2: the generation flip must reopen it
+            })
+        };
+        hits.fetch_add(1, Ordering::SeqCst);
+        barrier.wait();
+        assert_eq!(hits.load(Ordering::SeqCst), 2, "peer write invisible");
+        barrier.wait();
+        peer.join().unwrap();
+    });
+}
+
+/// The collective publish protocol: each rank writes its slot, crosses the
+/// barrier, then reads its neighbor's slot. The barrier must order every
+/// publish before every cross-rank read — the happens-before edge the
+/// `ShardGroup` ring steps rely on for their raw-pointer exchanges.
+#[test]
+fn shard_barrier_orders_slot_publish_before_neighbor_read() {
+    channel_bounds().check(|| {
+        let slots = Arc::new(vec![Mutex::new(0usize), Mutex::new(0usize)]);
+        let barrier = Arc::new(ShardBarrier::new(2));
+        let handles: Vec<_> = (0..2)
+            .map(|rank: usize| {
+                let slots = Arc::clone(&slots);
+                let barrier = Arc::clone(&barrier);
+                thread::spawn(move || {
+                    *slots[rank].lock().unwrap() = rank + 1;
+                    barrier.wait();
+                    let neighbor = (rank + 1) % 2;
+                    let got = *slots[neighbor].lock().unwrap();
+                    assert_eq!(got, neighbor + 1, "neighbor publish not ordered before read");
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
         }
     });
 }

@@ -1,0 +1,191 @@
+//! Sharded-vs-unsharded forward equivalence: tensor-parallel execution
+//! ([`Engine::shard`]) must reproduce the single-engine forward — dense
+//! modes **bit-identically** (the sharded GEMMs are row slices of
+//! transposed products with matching tile structure, see
+//! `coordinator::shard`), sparse modes allclose — across shard counts
+//! 1/2/4 and ragged head/hidden divisions, for both W2 seam modes.
+
+use std::sync::Arc;
+
+use sten::coordinator::{shard_bounds, Engine, FfnMode, SeamMode};
+use sten::runtime::ArtifactRuntime;
+use sten::util::rng::Pcg64;
+
+fn engine(tag: &str, mode: FfnMode) -> Engine {
+    let rt = ArtifactRuntime::open_default().expect("artifact runtime");
+    Engine::new(rt, tag, mode, 42).unwrap()
+}
+
+#[test]
+fn dense_sharded_forward_is_bit_identical_across_shard_counts() {
+    let mut e = engine("tiny", FfnMode::NativeDense);
+    let mut rng = Pcg64::seeded(7);
+    let tokens = e.random_tokens(&mut rng);
+    let want = e.forward(&tokens).unwrap();
+    // W = 3 exercises ragged divisions everywhere: tiny has 2 heads (one
+    // shard gets none) and none of d_model/d_ff/vocab divide by 3.
+    for w in [1, 2, 3, 4] {
+        let mut sharded = e.shard(w).unwrap();
+        let got = sharded.forward(&tokens);
+        assert_eq!(got.shape(), want.shape(), "w={w}");
+        assert_eq!(got.data(), want.data(), "w={w}: dense sharding must be bit-identical");
+    }
+}
+
+#[test]
+fn nmg_sharded_forward_matches_unsharded() {
+    let mut e = engine("tiny", FfnMode::NativeNmg { n: 2, m: 4, g: 4 });
+    let mut rng = Pcg64::seeded(8);
+    let tokens = e.random_tokens(&mut rng);
+    let want = e.forward(&tokens).unwrap();
+    // tiny d_ff = 64 with m = 4 -> 16 slabs; w = 3 leaves a ragged slab
+    // split. Sparse formats are asserted allclose (the slab slices are
+    // exact, but the unsharded nmg path transposes before the W2 GEMM).
+    for w in [1, 2, 3, 4] {
+        let mut sharded = e.shard(w).unwrap();
+        let got = sharded.forward(&tokens);
+        assert!(
+            got.allclose(&want, 1e-5, 1e-5),
+            "w={w}: nmg sharded diverges: {}",
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn autotuned_sharded_forward_matches_unsharded() {
+    use sten::tune::{Autotuner, TunePolicy};
+    let mut e = engine("tiny", FfnMode::NativeNmg { n: 2, m: 4, g: 2 });
+    let mut tuner = Autotuner::new(TunePolicy::CostModel);
+    e.autotune_ffn(&mut tuner).unwrap();
+    let mut rng = Pcg64::seeded(9);
+    let tokens = e.random_tokens(&mut rng);
+    let want = e.forward(&tokens).unwrap();
+    for w in [2, 4] {
+        let mut sharded = e.shard(w).unwrap();
+        let got = sharded.forward(&tokens);
+        assert!(
+            got.allclose(&want, 1e-5, 1e-5),
+            "w={w}: autotuned sharded diverges: {}",
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn allreduce_seam_matches_unsharded_allclose() {
+    let mut e = engine("tiny", FfnMode::NativeDense);
+    let mut rng = Pcg64::seeded(10);
+    let tokens = e.random_tokens(&mut rng);
+    let want = e.forward(&tokens).unwrap();
+    for w in [2, 3, 4] {
+        let mut sharded = e.shard_with_seam(w, SeamMode::Allreduce).unwrap();
+        let got = sharded.forward(&tokens);
+        // The ring reduction sums hidden-slice partials in a different
+        // order than the unsharded GEMM's k-loop: allclose, not bit-equal.
+        assert!(
+            got.allclose(&want, 1e-4, 1e-4),
+            "w={w}: allreduce seam diverges: {}",
+            got.max_abs_diff(&want)
+        );
+    }
+}
+
+#[test]
+fn base_config_sharded_forward_is_bit_identical() {
+    // The default bench shape: base has 4 heads, d_model 256, d_ff 1024.
+    let mut e = engine("base", FfnMode::NativeDense);
+    let mut rng = Pcg64::seeded(11);
+    let tokens = e.random_tokens(&mut rng);
+    let want = e.forward(&tokens).unwrap();
+    let mut sharded = e.shard(2).unwrap();
+    let got = sharded.forward(&tokens);
+    assert_eq!(got.data(), want.data(), "base w=2 must be bit-identical");
+}
+
+#[test]
+fn sharded_replicas_share_slices_and_agree() {
+    let e = engine("tiny", FfnMode::NativeDense);
+    let mut rng = Pcg64::seeded(12);
+    let tokens = e.random_tokens(&mut rng);
+    let mut a = e.shard(2).unwrap();
+    let mut b = a.replicate();
+    let la = a.forward(&tokens);
+    let lb = b.forward(&tokens);
+    assert_eq!(la.data(), lb.data(), "replicas must agree bitwise");
+
+    // Replicas can run concurrently: each has its own collective group.
+    let tokens = Arc::new(tokens);
+    let t2 = Arc::clone(&tokens);
+    let h = std::thread::spawn(move || b.forward(&t2));
+    let la2 = a.forward(&tokens);
+    let lb2 = h.join().unwrap();
+    assert_eq!(la2.data(), lb2.data());
+}
+
+#[test]
+fn shard_timing_is_populated_per_rank() {
+    let e = engine("tiny", FfnMode::NativeDense);
+    let mut rng = Pcg64::seeded(13);
+    let tokens = e.random_tokens(&mut rng);
+    let mut sharded = e.shard(2).unwrap();
+    sharded.forward(&tokens);
+    let timing = sharded.shard_timing();
+    assert_eq!(timing.len(), 2);
+    for (rank, t) in timing.iter().enumerate() {
+        assert!(t.secs("compute") > 0.0, "rank {rank} recorded no compute time");
+        assert!(t.total().as_secs_f64() > 0.0);
+    }
+    sharded.reset_timing();
+    assert_eq!(sharded.shard_timing()[0].total().as_secs_f64(), 0.0);
+}
+
+#[test]
+fn concurrent_server_serves_a_sharded_model() {
+    use std::time::Duration;
+    use sten::coordinator::{ConcurrentServer, ModelRegistry, ServeConfig};
+    let rt = Arc::new(ArtifactRuntime::open_default().unwrap());
+    let mut registry = ModelRegistry::new();
+    let e = Engine::with_runtime(Arc::clone(&rt), "tiny", FfnMode::NativeDense, 42).unwrap();
+    registry.register_sharded("tp", e, 2, 1, 2).unwrap();
+    let cfg = ServeConfig {
+        queue_cap: 64,
+        max_wait: Duration::from_millis(2),
+        ..ServeConfig::default()
+    };
+    let server = ConcurrentServer::start_registry(registry, cfg).unwrap();
+    let seq = server.dims().seq;
+    let mut rng = Pcg64::seeded(14);
+    for _ in 0..16 {
+        let toks: Vec<i32> = (0..seq).map(|_| rng.below(100) as i32).collect();
+        server.submit_to("tp", &toks).unwrap();
+    }
+    let report = server.finish().unwrap();
+    assert_eq!(report.results.len(), 16, "every sharded request completes");
+    assert_eq!(report.shard_timing.len(), 1);
+    let st = &report.shard_timing[0];
+    assert_eq!((st.model.as_str(), st.shards), ("tp", 2));
+    for (rank, t) in st.per_rank.iter().enumerate() {
+        assert!(t.secs("compute") > 0.0, "rank {rank} recorded no compute time");
+    }
+}
+
+#[test]
+fn shard_bounds_cover_and_align() {
+    // Whole-range coverage, monotonicity and alignment for the shapes the
+    // sharder uses (heads, d_model, slab- and block-aligned d_ff).
+    for &(total, align) in &[(2usize, 1usize), (32, 1), (64, 4), (1024, 4), (2048, 1)] {
+        for w in 1..=5 {
+            let b = shard_bounds(total, w, align);
+            assert_eq!(b.len(), w + 1);
+            assert_eq!(b[0], 0);
+            assert_eq!(b[w], total);
+            for i in 0..w {
+                assert!(b[i] <= b[i + 1]);
+                if b[i + 1] != total {
+                    assert_eq!(b[i + 1] % align, 0, "interior bound off alignment");
+                }
+            }
+        }
+    }
+}

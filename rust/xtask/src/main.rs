@@ -31,6 +31,8 @@ const PORTED_FILES: &[&str] = &[
     "util/threadpool.rs",
     "util/channel.rs",
     "coordinator/concurrent.rs",
+    "dist/collective.rs",
+    "coordinator/shard.rs",
 ];
 
 /// How many lines above an `unsafe` token a SAFETY comment may sit (rule 1).
