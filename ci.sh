@@ -10,10 +10,12 @@
 set -euo pipefail
 cd "$(dirname "$0")/rust"
 
-echo "==> xtask lint (unsafe/SAFETY, guard-across-scope, spawn, shim invariants)"
+echo "==> xtask lint (unsafe/SAFETY, guard-across-scope, spawn, shim + SIMD invariants)"
 # Fail-fast static gate: every `unsafe` carries a SAFETY comment, no lock
 # guard is held across a threadpool scope call, threads are only spawned
-# under util/, and shim-ported files never name std::sync directly.
+# under util/, shim-ported files never name std::sync directly, std::arch
+# intrinsics live only under kernels/simd/, and every #[target_feature] fn
+# sits behind a runtime feature-detection guard.
 cargo run -q -p xtask -- lint
 
 echo "==> tier-1: cargo build --release"
@@ -21,6 +23,19 @@ cargo build --release
 
 echo "==> tier-1: cargo test -q"
 cargo test -q
+
+echo "==> tier-1 under forced scalar backend"
+# The scalar backend is the bit-identical reference every SIMD kernel is
+# judged against, so it must stay green on its own — a SIMD-only fix that
+# silently breaks the scalar path fails here.
+STEN_BACKEND=scalar cargo test -q --lib
+
+echo "==> backend parity harness (golden vectors, scalar vs SIMD)"
+# Generates golden vectors from the forced-scalar backend, then checks every
+# runtime artifact on both backends against them within per-seam tolerances
+# (bit-identical where the seam demands it). A drifting SIMD kernel fails
+# here before it can skew any benchmark.
+cargo test -q --test backend_parity
 
 echo "==> xtask self-tests"
 cargo test -q -p xtask

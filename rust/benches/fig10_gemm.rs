@@ -20,14 +20,16 @@
 //! autotuner's chosen format per sparsity level).
 
 use sten::formats::{BcsrTensor, CsrTensor, Layout, NmgTensor};
-use sten::kernels::{bcsr_gemm, csr_gemm, dense_gemm, gemm_flops, nmg_gemm};
+use sten::kernels::backend::{self, Backend};
+use sten::kernels::{bcsr_gemm, csr_gemm, dense_gemm, gemm_flops, nmg_gemm, simd};
 use sten::sparsify::{BlockFraction, ScalarFraction, Sparsifier};
 use sten::tensor::DenseTensor;
 use sten::tune::{model_cost, WeightStats};
 use sten::util::benchkit::{Bench, JsonReport};
 use sten::util::rng::Pcg64;
 
-/// Cheapest layout under the autotuner's cost model for this pruned weight.
+/// Cheapest layout under the autotuner's cost model for this pruned weight
+/// (scored for the backend the sweep is actually running on).
 fn chosen_format(
     weight: &DenseTensor,
     ncols: usize,
@@ -36,7 +38,7 @@ fn chosen_format(
     let stats = WeightStats::measure(weight);
     let mut best: Option<(Layout, f64)> = None;
     for layout in [Layout::Dense, Layout::Nmg, Layout::Bcsr, Layout::Ell, Layout::Csr] {
-        if let Some(cost) = model_cost(layout, &stats, ncols, nmg) {
+        if let Some(cost) = model_cost(layout, &stats, ncols, nmg, backend::active()) {
             let better = match best {
                 None => true,
                 Some((_, c)) => cost < c,
@@ -75,6 +77,12 @@ fn main() {
     );
     let flops = gemm_flops(m_dim, k_dim, n_dim);
     let mut json = JsonReport::new("fig10_gemm");
+    // Every row records the backend the timed kernels dispatched to plus
+    // the detected CPU features, so BENCH_ deltas across machines/backends
+    // are attributable.
+    let be = backend::active().to_string();
+    let cpu = simd::cpu_features();
+    println!("# backend: {be} (cpu features: {cpu})");
 
     let mut rng = Pcg64::seeded(3);
     let a = DenseTensor::randn(&[m_dim, k_dim], &mut rng);
@@ -94,7 +102,65 @@ fn main() {
         ("kernel", "dense".into()),
         ("median_s", dense_t.into()),
         ("chosen_format", chosen_format(&a, n_dim, None).as_str().into()),
+        ("backend", be.as_str().into()),
+        ("cpu_features", cpu.as_str().into()),
     ]);
+
+    // Scalar-vs-SIMD backend sweep on the two kernels the backend work
+    // targets hardest: dense GEMM and the n:m:g slab kernel. Results are
+    // allclose-asserted against each other BEFORE anything is timed, so a
+    // silently-diverging SIMD path can never post a speedup number.
+    {
+        let nmg = NmgTensor::from_dense(&a, 2, 4, 4);
+        let (scalar_dense, scalar_nmg) = {
+            let _g = backend::force(Backend::Scalar);
+            (dense_gemm::matmul(&a, &b), nmg_gemm::spmm(&nmg, &b))
+        };
+        if simd::have_avx2_fma() {
+            {
+                let _g = backend::force(Backend::Simd);
+                let simd_dense = dense_gemm::matmul(&a, &b);
+                let simd_nmg = nmg_gemm::spmm(&nmg, &b);
+                assert_close(&simd_dense, &scalar_dense, "backend sweep: dense simd-vs-scalar");
+                assert_close(&simd_nmg, &scalar_nmg, "backend sweep: nmg simd-vs-scalar");
+            }
+            println!("\n# backend sweep: scalar vs simd (allclose-checked before timing)");
+            let dense_run = || dense_gemm::matmul(&a, &b);
+            let nmg_run = || nmg_gemm::spmm(&nmg, &b);
+            let kernels: [(&str, f64, &dyn Fn() -> DenseTensor); 2] =
+                [("dense", 0.0, &dense_run), ("nmg-2:4:4", 0.5, &nmg_run)];
+            for (kernel, sparsity, run) in kernels {
+                let t_scalar = {
+                    let _g = backend::force(Backend::Scalar);
+                    bench.run(run).median
+                };
+                let t_simd = {
+                    let _g = backend::force(Backend::Simd);
+                    bench.run(run).median
+                };
+                let speedup = t_scalar / t_simd;
+                println!(
+                    "{kernel}\tscalar {:.2} ms\tsimd {:.2} ms\tspeedup {speedup:.2}x",
+                    t_scalar * 1e3,
+                    t_simd * 1e3
+                );
+                if speedup <= 1.0 {
+                    println!("WARNING: simd not faster than scalar on {kernel}");
+                }
+                json.row(&[
+                    ("sparsity", sparsity.into()),
+                    ("kernel", format!("{kernel}-backend-sweep").as_str().into()),
+                    ("scalar_median_s", t_scalar.into()),
+                    ("simd_median_s", t_simd.into()),
+                    ("simd_speedup", speedup.into()),
+                    ("backend", "both".into()),
+                    ("cpu_features", cpu.as_str().into()),
+                ]);
+            }
+        } else {
+            println!("# backend sweep skipped: AVX2+FMA not detected on this host");
+        }
+    }
 
     // Sweep formats: (n, m, g) covering 50-90%.
     for (n, m, g) in [(2usize, 4usize, 4usize), (1, 4, 4), (2, 8, 4), (1, 8, 4), (1, 10, 4)] {
@@ -130,6 +196,8 @@ fn main() {
             ("unblocked_median_s", t_nmg_un.into()),
             ("blocked_speedup", (t_nmg_un / t_nmg).into()),
             ("chosen_format", chosen.as_str().into()),
+            ("backend", be.as_str().into()),
+            ("cpu_features", cpu.as_str().into()),
         ]);
         if t_nmg > t_nmg_un {
             println!("WARNING: blocked nmg slower than unblocked at sparsity {s:.2}");
@@ -154,6 +222,8 @@ fn main() {
             ("kernel", "csr-unstructured".into()),
             ("median_s", t_csr.into()),
             ("chosen_format", chosen_format(&pruned, n_dim, None).as_str().into()),
+            ("backend", be.as_str().into()),
+            ("cpu_features", cpu.as_str().into()),
         ]);
 
         // Block comparator (TVM-block stand-in) at matched sparsity.
@@ -186,6 +256,8 @@ fn main() {
             ("naive_median_s", t_bcsr_naive.into()),
             ("blocked_speedup", (t_bcsr_naive / t_bcsr).into()),
             ("chosen_format", chosen_format(&bpruned, n_dim, None).as_str().into()),
+            ("backend", be.as_str().into()),
+            ("cpu_features", cpu.as_str().into()),
         ]);
         if t_bcsr > t_bcsr_naive {
             println!("WARNING: blocked bcsr slower than naive at sparsity {s:.2}");

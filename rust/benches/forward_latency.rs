@@ -24,6 +24,7 @@ use std::time::Instant;
 
 use sten::coordinator::{Engine, FfnMode};
 use sten::formats::NmgTensor;
+use sten::kernels::{backend, simd};
 use sten::runtime::{ArtifactRuntime, ArtifactSpec, DType, Value};
 use sten::tensor::DenseTensor;
 use sten::tune::{Autotuner, TunePolicy};
@@ -109,6 +110,11 @@ fn main() {
          (smoke={smoke}, full={full})"
     );
     let mut json = JsonReport::new("forward_latency");
+    // Stamp every row with the backend the kernels dispatched to plus the
+    // detected CPU features, so latency deltas across hosts are attributable.
+    let be = backend::active().to_string();
+    let cpu = simd::cpu_features();
+    println!("# backend: {be} (cpu features: {cpu})");
     let mut attn_by_threads: Vec<(usize, f64)> = Vec::new();
 
     table_header("block latency", &["block", "threads", "median_ms", "p95_ms", "speedup_vs_1"]);
@@ -135,6 +141,8 @@ fn main() {
                 ("threads", nthreads.into()),
                 ("median_s", sample.median.into()),
                 ("p95_s", sample.p95.into()),
+                ("backend", be.as_str().into()),
+                ("cpu_features", cpu.as_str().into()),
             ]);
         }
     }
@@ -179,6 +187,8 @@ fn main() {
                 ("median_s", sample.median.into()),
                 ("p95_s", sample.p95.into()),
                 ("chosen_format", chosen.as_str().into()),
+                ("backend", be.as_str().into()),
+                ("cpu_features", cpu.as_str().into()),
             ]);
         }
     }
@@ -242,6 +252,8 @@ fn main() {
             ("batches_per_s", (1.0 / sample.median.max(1e-12)).into()),
             ("cpu_crit_s", cpu_crit.into()),
             ("collective_crit_s", coll_crit.into()),
+            ("backend", be.as_str().into()),
+            ("cpu_features", cpu.as_str().into()),
         ]);
 
         // Replicated baseline: W replicas, each forwarding its own batch.
@@ -270,6 +282,8 @@ fn main() {
             ("median_s", sample.median.into()),
             ("p95_s", sample.p95.into()),
             ("batches_per_s", (w as f64 / sample.median.max(1e-12)).into()),
+            ("backend", be.as_str().into()),
+            ("cpu_features", cpu.as_str().into()),
         ]);
     }
     if let Some(&(_, wall1, cpu1)) = tp_curve.iter().find(|(w, _, _)| *w == 1) {
@@ -296,7 +310,11 @@ fn main() {
     }
     let spawned = threadpool::total_spawns() - spawns_before;
     println!("sharded steady-state thread spawns across {requests} requests: {spawned} (expect 0)");
-    json.row(&[("block", "tp_steady_state".into()), ("spawns", spawned.into())]);
+    json.row(&[
+        ("block", "tp_steady_state".into()),
+        ("spawns", spawned.into()),
+        ("backend", be.as_str().into()),
+    ]);
     if smoke {
         assert_eq!(spawned, 0, "sharded steady state must not spawn threads");
         println!("smoke OK: sharded forward is bit-identical and spawn-free in steady state");
@@ -326,7 +344,11 @@ fn main() {
     }
     let spawned = threadpool::total_spawns() - spawns_before;
     println!("\nsteady-state thread spawns across {requests} requests: {spawned} (expect 0)");
-    json.row(&[("block", "steady_state".into()), ("spawns", spawned.into())]);
+    json.row(&[
+        ("block", "steady_state".into()),
+        ("spawns", spawned.into()),
+        ("backend", be.as_str().into()),
+    ]);
     if smoke {
         assert_eq!(spawned, 0, "steady-state requests must not spawn threads");
         println!("smoke OK: persistent pool is spawn-free in steady state");

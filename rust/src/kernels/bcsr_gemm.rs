@@ -15,6 +15,8 @@
 //! instead of per-block partials, so the kernels agree to rounding (allclose
 //! against the densified reference is the correctness oracle for both).
 
+use super::backend::{self, Backend};
+use super::simd;
 use crate::formats::bcsr::BcsrTensor;
 use crate::tensor::DenseTensor;
 use crate::util::threadpool;
@@ -70,6 +72,12 @@ fn brow_tile<const BH: usize, const FULL: bool>(
     jj: usize,
     jw: usize,
 ) {
+    if FULL
+        && backend::active() == Backend::Simd
+        && simd::bcsr::brow_tile(blocks, cols, BH, bw, bd, c_rows, n, jj)
+    {
+        return;
+    }
     let bsz = BH * bw;
     let mut acc = [[0f32; NR]; BH];
     for (bi, &bc) in cols.iter().enumerate() {
@@ -198,8 +206,10 @@ mod tests {
         let got = spmm(&a, &b);
         let want = dense_gemm::matmul_naive(&d, &b);
         assert!(got.allclose(&want, 1e-4, 1e-4), "diff {}", got.max_abs_diff(&want));
+        // 1e-4, not 1e-5: under an ambient SIMD backend the blocked kernel
+        // contracts with FMA while the naive baseline stays scalar.
         let naive = spmm_naive(&a, &b);
-        assert!(got.allclose(&naive, 1e-5, 1e-5), "blocked vs naive {}", got.max_abs_diff(&naive));
+        assert!(got.allclose(&naive, 1e-4, 1e-4), "blocked vs naive {}", got.max_abs_diff(&naive));
     }
 
     #[test]
@@ -233,7 +243,7 @@ mod tests {
                 got.max_abs_diff(&want)
             );
             let naive = spmm_naive(&a, &b);
-            assert!(got.allclose(&naive, 1e-5, 1e-5), "blocked vs naive bh={bh} bw={bw}");
+            assert!(got.allclose(&naive, 1e-4, 1e-4), "blocked vs naive bh={bh} bw={bw}");
         }
     }
 }

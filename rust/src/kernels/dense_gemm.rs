@@ -4,6 +4,8 @@
 //! for its own kernel (§5.1): pack a K×NR panel of B, run an MR×NR
 //! register-blocked microkernel over M, parallelize across M panels.
 
+use super::backend::{self, Backend};
+use super::simd;
 use crate::tensor::DenseTensor;
 use crate::util::threadpool;
 
@@ -114,6 +116,11 @@ fn micro_kernel(
     k: usize,
     n: usize,
 ) {
+    if backend::active() == Backend::Simd
+        && simd::dense::micro_kernel(a, b, c_panel, i0, i1, k0, k1, j0, j1, k, n)
+    {
+        return;
+    }
     let jw = j1 - j0;
     if jw == NR {
         // Fast path: full-width tile with fixed-size accumulators that LLVM

@@ -3,6 +3,8 @@
 //! Numerics match the JAX L2 model (`python/compile/kernels/ref.py`) exactly
 //! so the native path and the PJRT artifact path are interchangeable.
 
+use super::backend::{self, Backend};
+use super::simd;
 use crate::tensor::DenseTensor;
 use crate::util::threadpool;
 
@@ -42,6 +44,11 @@ pub fn gelu_grad(x: &DenseTensor) -> DenseTensor {
 /// (results are identical to the serial path: rows are independent).
 pub fn softmax_rows(x: &DenseTensor) -> DenseTensor {
     fn softmax_block(xd: &[f32], c: usize, od: &mut [f32], i0: usize, i1: usize) {
+        // The SIMD twin keeps exp and the sum in scalar order, so this
+        // seam stays bit-identical across backends.
+        if backend::active() == Backend::Simd && simd::rows::softmax_block(xd, c, od, i0, i1) {
+            return;
+        }
         for i in i0..i1 {
             let row = &xd[i * c..(i + 1) * c];
             let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
@@ -78,6 +85,10 @@ pub fn softmax_rows(x: &DenseTensor) -> DenseTensor {
 /// (results are identical to the serial path: rows are independent).
 pub fn layernorm_rows(x: &DenseTensor, gamma: &[f32], beta: &[f32]) -> DenseTensor {
     fn ln_block(xd: &[f32], gamma: &[f32], beta: &[f32], od: &mut [f32], i0: usize, i1: usize) {
+        if backend::active() == Backend::Simd && simd::rows::ln_block(xd, gamma, beta, od, i0, i1)
+        {
+            return;
+        }
         let c = gamma.len();
         for i in i0..i1 {
             let row = &xd[i * c..(i + 1) * c];
@@ -115,6 +126,11 @@ pub fn bias_add(x: &DenseTensor, bias: &[f32]) -> DenseTensor {
     let c = x.cols();
     assert_eq!(bias.len(), c);
     let mut out = x.clone();
+    // Bit-identical across backends: the vector twin performs the exact
+    // same per-element addition.
+    if backend::active() == Backend::Simd && simd::rows::bias_add(out.data_mut(), bias) {
+        return out;
+    }
     for (i, v) in out.data_mut().iter_mut().enumerate() {
         *v += bias[i % c];
     }

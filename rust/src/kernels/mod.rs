@@ -12,7 +12,15 @@
 //! * [`ell_gemm`] — ELLPACK sparse-dense GEMM (fixed-width classic format).
 //! * [`bcsr_gemm`] — block-sparse GEMM (TVM block-sparse stand-in).
 //! * [`elementwise`] — activation / normalization kernels shared by ops.
+//!
+//! Every kernel above is scalar Rust — the bit-identical reference. The
+//! [`backend`] module selects between it and the AVX2+FMA vector twins
+//! under [`simd`] (env `STEN_BACKEND`, CLI `--backend`, default auto with
+//! runtime feature detection and a guaranteed scalar fallback); the
+//! cross-backend golden-vector parity harness lives in
+//! `crate::parity` + `tests/backend_parity.rs`.
 
+pub mod backend;
 pub mod dense_gemm;
 pub mod nmg_gemm;
 pub mod csr_gemm;
@@ -20,6 +28,7 @@ pub mod csc_gemm;
 pub mod ell_gemm;
 pub mod bcsr_gemm;
 pub mod elementwise;
+pub mod simd;
 
 /// FLOP count of an (M, K) x (K, N) GEMM.
 pub fn gemm_flops(m: usize, k: usize, n: usize) -> f64 {

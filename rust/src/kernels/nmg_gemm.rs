@@ -28,6 +28,8 @@
 //!
 //! See EXPERIMENTS.md §Perf for the measured iteration log of these choices.
 
+use super::backend::{self, Backend};
+use super::simd;
 use crate::formats::nmg::NmgTensor;
 use crate::tensor::DenseTensor;
 use crate::util::threadpool;
@@ -86,6 +88,9 @@ fn spmm_into_impl<const HOIST: bool>(a: &NmgTensor, b: &[f32], c: &mut [f32], nc
         0
     };
     let jtiles = ncols.div_ceil(NR);
+    // Resolved once per spmm call so every tile of one multiply runs on the
+    // same backend even if a test guard flips the global mid-flight.
+    let simd_on = backend::active() == Backend::Simd;
     let c_ptr = threadpool::SyncPtr::new(c.as_mut_ptr());
     // Parallelize over N tiles: threads own disjoint column stripes of C,
     // and each stripe's K x NR panel of B stays cache-hot across slabs.
@@ -99,7 +104,7 @@ fn spmm_into_impl<const HOIST: bool>(a: &NmgTensor, b: &[f32], c: &mut [f32], nc
                 // and all writes stay below mrows * ncols == c.len().
                 let c_all =
                     unsafe { std::slice::from_raw_parts_mut(c_ptr.get(), mrows * ncols) };
-                let t = Tile { s, ncols, mrows, jj, jw, padfree };
+                let t = Tile { s, ncols, mrows, jj, jw, padfree, simd: simd_on };
                 match (a.m, jw == NR) {
                     (4, true) => slab_tile::<4, true>(a, b, c_all, &t, &pats_flat),
                     (4, false) => slab_tile::<4, false>(a, b, c_all, &t, &pats_flat),
@@ -126,6 +131,8 @@ struct Tile {
     jw: usize,
     /// Chunks `< padfree` are guaranteed pad-free (fast path eligible).
     padfree: usize,
+    /// Dispatch the full-width band loops to the AVX2+FMA twins.
+    simd: bool,
 }
 
 /// One (slab, N-tile) pass with the full m x NR accumulator tile resident.
@@ -164,7 +171,16 @@ fn slab_tile<const M: usize, const FULL: bool>(
         match n {
             1 => {
                 let mut acc0 = [0f32; NR];
-                for ch in ch0..ch1 {
+                // Full-width tiles dispatch the whole band to the AVX2+FMA
+                // twin; scalar keeps the loop below (and remains the
+                // reference when the backend or the CPU says so).
+                let handled = FULL
+                    && t.simd
+                    && simd::nmg::band_n1(
+                        val, idx, b, ncols, jj, cg, p, g, ch0, ch1, t.padfree, &mut acc0,
+                    );
+                let chunks = if handled { 0..0 } else { ch0..ch1 };
+                for ch in chunks {
                     let base = ch * cg + p * g;
                     if FULL && ch < t.padfree {
                         // Pad-free chunk: no zero check (a zero value only
@@ -223,7 +239,14 @@ fn slab_tile<const M: usize, const FULL: bool>(
                 let (r0, r1) = (rows[0], rows[1]);
                 let mut acc0 = [0f32; NR];
                 let mut acc1 = [0f32; NR];
-                for ch in ch0..ch1 {
+                let handled = FULL
+                    && t.simd
+                    && simd::nmg::band_n2(
+                        val, idx, b, ncols, jj, cg, p, g, ch0, ch1, t.padfree, &mut acc0,
+                        &mut acc1,
+                    );
+                let chunks = if handled { 0..0 } else { ch0..ch1 };
+                for ch in chunks {
                     let base = ch * cg + p * g;
                     if FULL && ch < t.padfree {
                         // Pad-free chunk: checkless dual-row broadcast FMA.

@@ -1,0 +1,109 @@
+//! AVX2+FMA block-row kernel for the register-blocked BCSR GEMM.
+//!
+//! Vector twin of `bcsr_gemm::brow_tile` on full-width (jw == NR) tiles:
+//! the whole `BH x NR` accumulator tile lives in registers across every
+//! block of the row, each B row is loaded once and broadcast-FMAed into all
+//! BH rows, and C is overwritten exactly once at the end — the same visit
+//! order as the scalar kernel, with FMA contraction the allclose parity
+//! seam absorbs. B and block accesses go through bounds-checked subslices;
+//! the intrinsics never read past what the scalar kernel would.
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+/// Output-column tile width (must match `bcsr_gemm::NR`).
+#[cfg(target_arch = "x86_64")]
+const NR: usize = 16;
+
+/// One (block row, full N-tile) pass. Returns `false` (caller runs the
+/// scalar loop) when AVX2+FMA is unavailable or `bh` has no vector
+/// specialization.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+pub fn brow_tile(
+    blocks: &[f32],
+    cols: &[u32],
+    bh: usize,
+    bw: usize,
+    bd: &[f32],
+    c_rows: &mut [f32],
+    n: usize,
+    jj: usize,
+) -> bool {
+    if !super::have_avx2_fma() {
+        return false;
+    }
+    match bh {
+        // SAFETY (each arm): AVX2+FMA verified above; the kernel indexes
+        // blocks/bd/c_rows through bounds-checked slices only.
+        2 => unsafe { kernel::<2>(blocks, cols, bw, bd, c_rows, n, jj) },
+        4 => unsafe { kernel::<4>(blocks, cols, bw, bd, c_rows, n, jj) },
+        8 => unsafe { kernel::<8>(blocks, cols, bw, bd, c_rows, n, jj) },
+        _ => return false,
+    }
+    true
+}
+
+/// Scalar-fallback stub: non-x86_64 hosts never take the vector path.
+#[cfg(not(target_arch = "x86_64"))]
+#[allow(clippy::too_many_arguments)]
+pub fn brow_tile(
+    _blocks: &[f32],
+    _cols: &[u32],
+    _bh: usize,
+    _bw: usize,
+    _bd: &[f32],
+    _c_rows: &mut [f32],
+    _n: usize,
+    _jj: usize,
+) -> bool {
+    false
+}
+
+/// The resident-accumulator block-row micro-GEMM for one const block
+/// height.
+///
+/// # Safety
+///
+/// Caller must verify AVX2+FMA before calling; all slice accesses inside
+/// are bounds-checked.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[inline]
+unsafe fn kernel<const BH: usize>(
+    blocks: &[f32],
+    cols: &[u32],
+    bw: usize,
+    bd: &[f32],
+    c_rows: &mut [f32],
+    n: usize,
+    jj: usize,
+) {
+    // SAFETY: every load/store goes through a pointer derived from a
+    // bounds-checked subslice formed just above it; loadu/storeu carry no
+    // alignment obligations.
+    unsafe {
+        let bsz = BH * bw;
+        let mut acc = [[_mm256_setzero_ps(); 2]; BH];
+        for (bi, &bc) in cols.iter().enumerate() {
+            let blk = &blocks[bi * bsz..(bi + 1) * bsz];
+            let kbase = bc as usize * bw;
+            for p in 0..bw {
+                let boff = (kbase + p) * n + jj;
+                let brow = &bd[boff..boff + NR];
+                let blo = _mm256_loadu_ps(brow.as_ptr());
+                let bhi = _mm256_loadu_ps(brow.as_ptr().add(8));
+                for (i, acc_row) in acc.iter_mut().enumerate() {
+                    let av = _mm256_set1_ps(blk[i * bw + p]);
+                    acc_row[0] = _mm256_fmadd_ps(av, blo, acc_row[0]);
+                    acc_row[1] = _mm256_fmadd_ps(av, bhi, acc_row[1]);
+                }
+            }
+        }
+        for (i, acc_row) in acc.iter().enumerate() {
+            let crow = &mut c_rows[i * n + jj..i * n + jj + NR];
+            _mm256_storeu_ps(crow.as_mut_ptr(), acc_row[0]);
+            _mm256_storeu_ps(crow.as_mut_ptr().add(8), acc_row[1]);
+        }
+    }
+}

@@ -1,0 +1,262 @@
+//! AVX2+FMA microkernel for the blocked dense GEMM.
+//!
+//! Drop-in vector twin of `dense_gemm::micro_kernel`: same (row, K, column)
+//! per-element traversal, local per-call accumulators merged into C once at
+//! the end — for BOTH full 16-wide tiles and masked tails. Keeping the tail
+//! on the FULL-tile accumulation order matters: a sharded column slice of
+//! the output sees tail tiles where the unsharded run sees full ones, and
+//! identical per-element operation order is what keeps the sharded forward
+//! bit-identical to the unsharded engine *within* the SIMD backend.
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+/// Microkernel tile width (must match `dense_gemm::NR`).
+#[cfg(target_arch = "x86_64")]
+const NR: usize = 16;
+
+/// Mask rows for `_mm256_maskload_ps`/`_mm256_maskstore_ps`: row `w`
+/// enables the first `w` lanes (sign bit set).
+#[cfg(target_arch = "x86_64")]
+const MASKS: [[i32; 8]; 9] = [
+    [0, 0, 0, 0, 0, 0, 0, 0],
+    [-1, 0, 0, 0, 0, 0, 0, 0],
+    [-1, -1, 0, 0, 0, 0, 0, 0],
+    [-1, -1, -1, 0, 0, 0, 0, 0],
+    [-1, -1, -1, -1, 0, 0, 0, 0],
+    [-1, -1, -1, -1, -1, 0, 0, 0],
+    [-1, -1, -1, -1, -1, -1, 0, 0],
+    [-1, -1, -1, -1, -1, -1, -1, 0],
+    [-1, -1, -1, -1, -1, -1, -1, -1],
+];
+
+/// Vectorized microkernel over a K stripe — same contract as the scalar
+/// `dense_gemm::micro_kernel` (accumulates `A[i0..i1, k0..k1] ·
+/// B[k0..k1, j0..j1]` into the panel rows of `c_panel`, whose row `r` holds
+/// logical row `i0 + r` with stride `n`). Returns `false` (caller runs the
+/// scalar loop) when AVX2+FMA is unavailable.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+pub fn micro_kernel(
+    a: &[f32],
+    b: &[f32],
+    c_panel: &mut [f32],
+    i0: usize,
+    i1: usize,
+    k0: usize,
+    k1: usize,
+    j0: usize,
+    j1: usize,
+    k: usize,
+    n: usize,
+) -> bool {
+    if !super::have_avx2_fma() {
+        return false;
+    }
+    if i1 <= i0 || k1 <= k0 {
+        return true; // empty stripe: nothing to accumulate
+    }
+    let jw = j1 - j0;
+    assert!(jw >= 1 && jw <= NR);
+    // Bounds the unsafe kernels rely on, established in safe code: every
+    // pointer they form stays inside these slices.
+    assert!(a.len() >= (i1 - 1) * k + k1);
+    assert!(b.len() >= (k1 - 1) * n + j0 + jw);
+    assert!(c_panel.len() >= (i1 - i0 - 1) * n + j0 + jw);
+    if jw == NR {
+        // SAFETY: AVX2+FMA verified above; slice bounds asserted above.
+        unsafe { kernel_full(a, b, c_panel, i0, i1, k0, k1, j0, k, n) };
+    } else {
+        // SAFETY: AVX2+FMA verified above; slice bounds asserted above.
+        unsafe { kernel_tail(a, b, c_panel, i0, i1, k0, k1, j0, jw, k, n) };
+    }
+    true
+}
+
+/// Scalar-fallback stub: non-x86_64 hosts never take the vector path.
+#[cfg(not(target_arch = "x86_64"))]
+#[allow(clippy::too_many_arguments)]
+pub fn micro_kernel(
+    _a: &[f32],
+    _b: &[f32],
+    _c_panel: &mut [f32],
+    _i0: usize,
+    _i1: usize,
+    _k0: usize,
+    _k1: usize,
+    _j0: usize,
+    _j1: usize,
+    _k: usize,
+    _n: usize,
+) -> bool {
+    false
+}
+
+/// Full-width (jw == 16) tile: rows in pairs, two 8-lane accumulators per
+/// row, one fused multiply-add per (row, half, p). Per element the order is
+/// "accumulate over p ascending, then one merge into C" — the vector
+/// analogue of the scalar FULL path.
+///
+/// # Safety
+///
+/// Caller must verify AVX2+FMA and assert the slice bounds checked in
+/// [`micro_kernel`] before calling.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[allow(clippy::too_many_arguments)]
+#[inline]
+unsafe fn kernel_full(
+    a: &[f32],
+    b: &[f32],
+    c_panel: &mut [f32],
+    i0: usize,
+    i1: usize,
+    k0: usize,
+    k1: usize,
+    j0: usize,
+    k: usize,
+    n: usize,
+) {
+    // SAFETY: the wrapper asserted every offset formed below is in bounds
+    // of its slice; loadu/storeu carry no alignment obligations.
+    unsafe {
+        let bp = b.as_ptr();
+        let cp = c_panel.as_mut_ptr();
+        let mut i = i0;
+        while i + 2 <= i1 {
+            let a0 = &a[i * k..i * k + k1];
+            let a1 = &a[(i + 1) * k..(i + 1) * k + k1];
+            let mut acc00 = _mm256_setzero_ps();
+            let mut acc01 = _mm256_setzero_ps();
+            let mut acc10 = _mm256_setzero_ps();
+            let mut acc11 = _mm256_setzero_ps();
+            for p in k0..k1 {
+                let av0 = _mm256_set1_ps(a0[p]);
+                let av1 = _mm256_set1_ps(a1[p]);
+                let b0 = _mm256_loadu_ps(bp.add(p * n + j0));
+                let b1 = _mm256_loadu_ps(bp.add(p * n + j0 + 8));
+                acc00 = _mm256_fmadd_ps(av0, b0, acc00);
+                acc01 = _mm256_fmadd_ps(av0, b1, acc01);
+                acc10 = _mm256_fmadd_ps(av1, b0, acc10);
+                acc11 = _mm256_fmadd_ps(av1, b1, acc11);
+            }
+            let c0 = cp.add((i - i0) * n + j0);
+            let c1 = cp.add((i + 1 - i0) * n + j0);
+            _mm256_storeu_ps(c0, _mm256_add_ps(_mm256_loadu_ps(c0), acc00));
+            _mm256_storeu_ps(c0.add(8), _mm256_add_ps(_mm256_loadu_ps(c0.add(8)), acc01));
+            _mm256_storeu_ps(c1, _mm256_add_ps(_mm256_loadu_ps(c1), acc10));
+            _mm256_storeu_ps(c1.add(8), _mm256_add_ps(_mm256_loadu_ps(c1.add(8)), acc11));
+            i += 2;
+        }
+        if i < i1 {
+            let arow = &a[i * k..i * k + k1];
+            let mut acc0 = _mm256_setzero_ps();
+            let mut acc1 = _mm256_setzero_ps();
+            for p in k0..k1 {
+                let av = _mm256_set1_ps(arow[p]);
+                acc0 = _mm256_fmadd_ps(av, _mm256_loadu_ps(bp.add(p * n + j0)), acc0);
+                acc1 = _mm256_fmadd_ps(av, _mm256_loadu_ps(bp.add(p * n + j0 + 8)), acc1);
+            }
+            let c0 = cp.add((i - i0) * n + j0);
+            _mm256_storeu_ps(c0, _mm256_add_ps(_mm256_loadu_ps(c0), acc0));
+            _mm256_storeu_ps(c0.add(8), _mm256_add_ps(_mm256_loadu_ps(c0.add(8)), acc1));
+        }
+    }
+}
+
+/// Tail tile (jw < 16) with masked loads/stores. The per-element operation
+/// sequence (fmadd over p ascending into a zeroed local accumulator, one
+/// add-merge into C) is identical to [`kernel_full`], so an output column
+/// computes to the same bits whether it lands in a full or a tail tile.
+///
+/// # Safety
+///
+/// Caller must verify AVX2+FMA and assert the slice bounds checked in
+/// [`micro_kernel`] before calling.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[allow(clippy::too_many_arguments)]
+#[inline]
+unsafe fn kernel_tail(
+    a: &[f32],
+    b: &[f32],
+    c_panel: &mut [f32],
+    i0: usize,
+    i1: usize,
+    k0: usize,
+    k1: usize,
+    j0: usize,
+    jw: usize,
+    k: usize,
+    n: usize,
+) {
+    // SAFETY: the wrapper asserted bounds for the first `jw` lanes past
+    // every offset formed below; the masked loads/stores fault-suppress
+    // their disabled lanes, so the ragged row edge is never touched.
+    unsafe {
+        let w0 = jw.min(8);
+        let w1 = jw - w0;
+        let m0 = _mm256_loadu_si256(MASKS[w0].as_ptr() as *const __m256i);
+        let m1 = _mm256_loadu_si256(MASKS[w1].as_ptr() as *const __m256i);
+        let bp = b.as_ptr();
+        let cp = c_panel.as_mut_ptr();
+        for i in i0..i1 {
+            let arow = &a[i * k..i * k + k1];
+            let mut acc0 = _mm256_setzero_ps();
+            let mut acc1 = _mm256_setzero_ps();
+            for p in k0..k1 {
+                let av = _mm256_set1_ps(arow[p]);
+                acc0 = _mm256_fmadd_ps(av, _mm256_maskload_ps(bp.add(p * n + j0), m0), acc0);
+                if w1 > 0 {
+                    acc1 =
+                        _mm256_fmadd_ps(av, _mm256_maskload_ps(bp.add(p * n + j0 + 8), m1), acc1);
+                }
+            }
+            let c0 = cp.add((i - i0) * n + j0);
+            _mm256_maskstore_ps(c0, m0, _mm256_add_ps(_mm256_maskload_ps(c0, m0), acc0));
+            if w1 > 0 {
+                let c1 = c0.add(8);
+                _mm256_maskstore_ps(c1, m1, _mm256_add_ps(_mm256_maskload_ps(c1, m1), acc1));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::util::rng::Pcg64;
+
+    /// Exercise full tiles, a masked tail, and multi-stripe K blocking
+    /// against a plain triple loop. Skips (vacuously passes) on hosts
+    /// without AVX2+FMA, where the wrapper reports `false`.
+    #[test]
+    fn tiles_match_naive_reference() {
+        let (m, k, n) = (5usize, 37usize, 23usize);
+        let mut rng = Pcg64::seeded(7);
+        let a: Vec<f32> = (0..m * k).map(|_| rng.normal()).collect();
+        let b: Vec<f32> = (0..k * n).map(|_| rng.normal()).collect();
+        let mut c = vec![0f32; m * n];
+        let mut hit = true;
+        for kk in (0..k).step_by(16) {
+            let kend = (kk + 16).min(k);
+            for jj in (0..n).step_by(16) {
+                let jend = (jj + 16).min(n);
+                hit &= super::micro_kernel(&a, &b, &mut c, 0, m, kk, kend, jj, jend, k, n);
+            }
+        }
+        if !hit {
+            assert!(!super::super::have_avx2_fma());
+            return;
+        }
+        for i in 0..m {
+            for j in 0..n {
+                let want: f32 = (0..k).map(|p| a[i * k + p] * b[p * n + j]).sum();
+                let got = c[i * n + j];
+                assert!(
+                    (got - want).abs() <= 1e-4 * (1.0 + want.abs()),
+                    "({i},{j}): {got} vs {want}"
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,87 @@
+//! SIMD (AVX2+FMA) backend kernels — the vectorized twins of the scalar
+//! compute kernels, selected via [`crate::kernels::backend`].
+//!
+//! Layout rules (enforced by `xtask lint`):
+//!
+//! * `std::arch` intrinsics and `#[target_feature]` fns live only under
+//!   `kernels/simd/` — nothing outside this directory touches raw vector
+//!   code.
+//! * Every `#[target_feature]` fn is **private** and reached only through a
+//!   safe `pub fn ... -> bool` wrapper that checks [`have_avx2_fma`] first.
+//!   The wrappers return `false` when the CPU (or the shape) cannot run the
+//!   vector kernel, and the scalar caller falls through to its own loop — so
+//!   the scalar fallback is a guaranteed property of the call structure, not
+//!   a promise.
+//! * All `unsafe` carries a SAFETY comment; slice bounds are established in
+//!   safe code before any raw pointer is formed.
+//!
+//! Numerics: FMA contracts mul+add and wider accumulators regroup sums, so
+//! SIMD results are *allclose* to the scalar reference (per-seam tolerances
+//! in `runtime/README.md` § Backend selection), not bit-identical — except
+//! where a kernel performs the exact per-element operation sequence of its
+//! scalar twin (the dense tail tiles keep FULL-tile accumulation order so
+//! sharded column slices stay bit-identical to the unsharded run *within*
+//! the SIMD backend).
+//!
+//! Threading: these kernels never create threads or scopes. They are leaf
+//! compute called from inside the existing `util::threadpool` panel /
+//! tile / block-row tasks, exactly where the scalar loops they replace ran.
+
+pub mod bcsr;
+pub mod dense;
+pub mod nmg;
+pub mod rows;
+
+/// True when the host can run the AVX2+FMA kernels in this module.
+#[cfg(target_arch = "x86_64")]
+pub fn have_avx2_fma() -> bool {
+    is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma")
+}
+
+/// Non-x86_64 hosts never run the vector kernels.
+#[cfg(not(target_arch = "x86_64"))]
+pub fn have_avx2_fma() -> bool {
+    false
+}
+
+/// Detected CPU features relevant to kernel selection, joined with `+`
+/// (e.g. `"avx2+fma+avx512f"`), or `"none"`. Recorded in the bench JSON so
+/// perf numbers stay attributable to the hardware that produced them.
+#[cfg(target_arch = "x86_64")]
+pub fn cpu_features() -> String {
+    let mut feats = Vec::new();
+    if is_x86_feature_detected!("avx2") {
+        feats.push("avx2");
+    }
+    if is_x86_feature_detected!("fma") {
+        feats.push("fma");
+    }
+    if is_x86_feature_detected!("avx512f") {
+        feats.push("avx512f");
+    }
+    if feats.is_empty() {
+        "none".to_string()
+    } else {
+        feats.join("+")
+    }
+}
+
+/// Non-x86_64 hosts report no vector features.
+#[cfg(not(target_arch = "x86_64"))]
+pub fn cpu_features() -> String {
+    "none".to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cpu_features_is_nonempty_and_consistent() {
+        let feats = cpu_features();
+        assert!(!feats.is_empty());
+        if have_avx2_fma() {
+            assert!(feats.contains("avx2") && feats.contains("fma"), "{feats}");
+        }
+    }
+}

@@ -1,0 +1,270 @@
+//! AVX2+FMA band kernels for the n:m:g sparse-dense GEMM.
+//!
+//! Vector twins of the `nmg_gemm::slab_tile` n == 1 and n == 2 inner band
+//! loops on full-width (jw == NR) tiles: the caller keeps the banded
+//! pattern-major traversal, pad-free classification and the scalar merge of
+//! the per-pattern accumulator into the slab tile; these kernels only
+//! replace the per-chunk broadcast-FMA loops. Pad slots (only possible in
+//! chunks at or past `padfree`) are skipped by the same `val == 0` test the
+//! scalar loop uses — their stored index may point past the end of B, so
+//! the skip happens *before* any B row is touched.
+//!
+//! All B-row accesses go through bounds-checked subslices formed in-line;
+//! the intrinsics only ever read through pointers derived from those
+//! slices, so an out-of-range stored index panics exactly like the scalar
+//! kernel instead of reading wild memory.
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+/// Output-column tile width (must match `nmg_gemm::NR`).
+#[cfg(target_arch = "x86_64")]
+const NR: usize = 16;
+
+/// n == 1 band: accumulate pattern `p` of chunks `[ch0, ch1)` into `acc0`
+/// (one 16-wide accumulator row). Returns `false` when AVX2+FMA is
+/// unavailable and the caller must run its scalar loop.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+pub fn band_n1(
+    val: &[f32],
+    idx: &[u32],
+    b: &[f32],
+    ncols: usize,
+    jj: usize,
+    cg: usize,
+    p: usize,
+    g: usize,
+    ch0: usize,
+    ch1: usize,
+    padfree: usize,
+    acc0: &mut [f32; 16],
+) -> bool {
+    if !super::have_avx2_fma() {
+        return false;
+    }
+    // SAFETY: AVX2+FMA verified above; the kernel indexes val/idx/b through
+    // bounds-checked slices only.
+    unsafe { band_n1_avx(val, idx, b, ncols, jj, cg, p, g, ch0, ch1, padfree, acc0) };
+    true
+}
+
+/// Scalar-fallback stub: non-x86_64 hosts never take the vector path.
+#[cfg(not(target_arch = "x86_64"))]
+#[allow(clippy::too_many_arguments)]
+pub fn band_n1(
+    _val: &[f32],
+    _idx: &[u32],
+    _b: &[f32],
+    _ncols: usize,
+    _jj: usize,
+    _cg: usize,
+    _p: usize,
+    _g: usize,
+    _ch0: usize,
+    _ch1: usize,
+    _padfree: usize,
+    _acc0: &mut [f32; 16],
+) -> bool {
+    false
+}
+
+/// n == 2 band: accumulate pattern `p` of chunks `[ch0, ch1)` into the two
+/// accumulator rows `acc0`/`acc1` (each B row is loaded once and
+/// broadcast-FMAed into both). Returns `false` when AVX2+FMA is
+/// unavailable.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+pub fn band_n2(
+    val: &[f32],
+    idx: &[u32],
+    b: &[f32],
+    ncols: usize,
+    jj: usize,
+    cg: usize,
+    p: usize,
+    g: usize,
+    ch0: usize,
+    ch1: usize,
+    padfree: usize,
+    acc0: &mut [f32; 16],
+    acc1: &mut [f32; 16],
+) -> bool {
+    if !super::have_avx2_fma() {
+        return false;
+    }
+    // SAFETY: AVX2+FMA verified above; the kernel indexes val/idx/b through
+    // bounds-checked slices only.
+    unsafe { band_n2_avx(val, idx, b, ncols, jj, cg, p, g, ch0, ch1, padfree, acc0, acc1) };
+    true
+}
+
+/// Scalar-fallback stub: non-x86_64 hosts never take the vector path.
+#[cfg(not(target_arch = "x86_64"))]
+#[allow(clippy::too_many_arguments)]
+pub fn band_n2(
+    _val: &[f32],
+    _idx: &[u32],
+    _b: &[f32],
+    _ncols: usize,
+    _jj: usize,
+    _cg: usize,
+    _p: usize,
+    _g: usize,
+    _ch0: usize,
+    _ch1: usize,
+    _padfree: usize,
+    _acc0: &mut [f32; 16],
+    _acc1: &mut [f32; 16],
+) -> bool {
+    false
+}
+
+/// n == 1 inner band. Two slot-parity accumulator pairs keep two
+/// independent FMA chains in flight (merged once at the end — a regrouping
+/// the allclose parity seam absorbs); pad-capable chunks fall back to the
+/// zero-checked single chain.
+///
+/// # Safety
+///
+/// Caller must verify AVX2+FMA before calling; all slice accesses inside
+/// are bounds-checked.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[allow(clippy::too_many_arguments)]
+#[inline]
+unsafe fn band_n1_avx(
+    val: &[f32],
+    idx: &[u32],
+    b: &[f32],
+    ncols: usize,
+    jj: usize,
+    cg: usize,
+    p: usize,
+    g: usize,
+    ch0: usize,
+    ch1: usize,
+    padfree: usize,
+    acc0: &mut [f32; 16],
+) {
+    // SAFETY: every load/store goes through a pointer derived from a
+    // bounds-checked subslice formed just above it; loadu/storeu carry no
+    // alignment obligations.
+    unsafe {
+        let mut lo = _mm256_loadu_ps(acc0.as_ptr());
+        let mut hi = _mm256_loadu_ps(acc0.as_ptr().add(8));
+        let mut lo2 = _mm256_setzero_ps();
+        let mut hi2 = _mm256_setzero_ps();
+        for ch in ch0..ch1 {
+            let base = ch * cg + p * g;
+            if ch < padfree {
+                // Pad-free chunk: checkless, slots split across the two
+                // accumulator pairs.
+                let mut gi = 0;
+                while gi + 2 <= g {
+                    let (sa, sb) = (base + gi, base + gi + 1);
+                    let va = _mm256_set1_ps(val[sa]);
+                    let vb = _mm256_set1_ps(val[sb]);
+                    let ka = idx[sa] as usize * ncols + jj;
+                    let kb = idx[sb] as usize * ncols + jj;
+                    let ba = &b[ka..ka + NR];
+                    let bb = &b[kb..kb + NR];
+                    lo = _mm256_fmadd_ps(va, _mm256_loadu_ps(ba.as_ptr()), lo);
+                    hi = _mm256_fmadd_ps(va, _mm256_loadu_ps(ba.as_ptr().add(8)), hi);
+                    lo2 = _mm256_fmadd_ps(vb, _mm256_loadu_ps(bb.as_ptr()), lo2);
+                    hi2 = _mm256_fmadd_ps(vb, _mm256_loadu_ps(bb.as_ptr().add(8)), hi2);
+                    gi += 2;
+                }
+                while gi < g {
+                    let slot = base + gi;
+                    let v = _mm256_set1_ps(val[slot]);
+                    let kk = idx[slot] as usize * ncols + jj;
+                    let brow = &b[kk..kk + NR];
+                    lo = _mm256_fmadd_ps(v, _mm256_loadu_ps(brow.as_ptr()), lo);
+                    hi = _mm256_fmadd_ps(v, _mm256_loadu_ps(brow.as_ptr().add(8)), hi);
+                    gi += 1;
+                }
+            } else {
+                for gi in 0..g {
+                    let slot = base + gi;
+                    let v0 = val[slot];
+                    if v0 == 0.0 {
+                        continue; // pad slot: its index may point past B
+                    }
+                    let v = _mm256_set1_ps(v0);
+                    let kk = idx[slot] as usize * ncols + jj;
+                    let brow = &b[kk..kk + NR];
+                    lo = _mm256_fmadd_ps(v, _mm256_loadu_ps(brow.as_ptr()), lo);
+                    hi = _mm256_fmadd_ps(v, _mm256_loadu_ps(brow.as_ptr().add(8)), hi);
+                }
+            }
+        }
+        lo = _mm256_add_ps(lo, lo2);
+        hi = _mm256_add_ps(hi, hi2);
+        _mm256_storeu_ps(acc0.as_mut_ptr(), lo);
+        _mm256_storeu_ps(acc0.as_mut_ptr().add(8), hi);
+    }
+}
+
+/// n == 2 inner band: four resident accumulator registers (two rows x two
+/// halves), one B-row load shared by both rows per slot.
+///
+/// # Safety
+///
+/// Caller must verify AVX2+FMA before calling; all slice accesses inside
+/// are bounds-checked.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[allow(clippy::too_many_arguments)]
+#[inline]
+unsafe fn band_n2_avx(
+    val: &[f32],
+    idx: &[u32],
+    b: &[f32],
+    ncols: usize,
+    jj: usize,
+    cg: usize,
+    p: usize,
+    g: usize,
+    ch0: usize,
+    ch1: usize,
+    padfree: usize,
+    acc0: &mut [f32; 16],
+    acc1: &mut [f32; 16],
+) {
+    // SAFETY: every load/store goes through a pointer derived from a
+    // bounds-checked subslice formed just above it; loadu/storeu carry no
+    // alignment obligations.
+    unsafe {
+        let mut lo0 = _mm256_loadu_ps(acc0.as_ptr());
+        let mut hi0 = _mm256_loadu_ps(acc0.as_ptr().add(8));
+        let mut lo1 = _mm256_loadu_ps(acc1.as_ptr());
+        let mut hi1 = _mm256_loadu_ps(acc1.as_ptr().add(8));
+        for ch in ch0..ch1 {
+            let base = ch * cg + p * g;
+            let checkless = ch < padfree;
+            for gi in 0..g {
+                let slot = base + gi;
+                let v0 = val[slot * 2];
+                let v1 = val[slot * 2 + 1];
+                if !checkless && v0 == 0.0 && v1 == 0.0 {
+                    continue; // pad slot: its index may point past B
+                }
+                let kk = idx[slot] as usize * ncols + jj;
+                let brow = &b[kk..kk + NR];
+                let blo = _mm256_loadu_ps(brow.as_ptr());
+                let bhi = _mm256_loadu_ps(brow.as_ptr().add(8));
+                let va = _mm256_set1_ps(v0);
+                let vb = _mm256_set1_ps(v1);
+                lo0 = _mm256_fmadd_ps(va, blo, lo0);
+                hi0 = _mm256_fmadd_ps(va, bhi, hi0);
+                lo1 = _mm256_fmadd_ps(vb, blo, lo1);
+                hi1 = _mm256_fmadd_ps(vb, bhi, hi1);
+            }
+        }
+        _mm256_storeu_ps(acc0.as_mut_ptr(), lo0);
+        _mm256_storeu_ps(acc0.as_mut_ptr().add(8), hi0);
+        _mm256_storeu_ps(acc1.as_mut_ptr(), lo1);
+        _mm256_storeu_ps(acc1.as_mut_ptr().add(8), hi1);
+    }
+}

@@ -1,0 +1,328 @@
+//! AVX2(+FMA) row loops for the elementwise / normalization kernels.
+//!
+//! Vector twins of the `elementwise` row-block helpers. The softmax kernel
+//! keeps `exp` and the running sum scalar (identical order to the scalar
+//! twin — there is no vector exp in `std`) and vectorizes the max fold and
+//! the divide, both of which are order-insensitive per element, so softmax
+//! stays bit-identical across backends. LayerNorm regroups its mean /
+//! variance sums into vector lanes and contracts the normalize step with
+//! FMA, so it is an allclose seam. The bias add performs the exact same
+//! per-element addition and stays bit-identical.
+
+#[cfg(target_arch = "x86_64")]
+use std::arch::x86_64::*;
+
+/// Row-wise softmax over rows `[i0, i1)` of `xd` (row width `c`) into the
+/// relative rows of `od` — same contract as the scalar block helper in
+/// `elementwise::softmax_rows`. Returns `false` when AVX2+FMA is
+/// unavailable or the row is too narrow to vectorize.
+#[cfg(target_arch = "x86_64")]
+pub fn softmax_block(xd: &[f32], c: usize, od: &mut [f32], i0: usize, i1: usize) -> bool {
+    if !super::have_avx2_fma() || c < 8 {
+        return false;
+    }
+    assert!(xd.len() >= i1 * c && od.len() >= (i1 - i0) * c);
+    // SAFETY: AVX2+FMA verified above; row bounds asserted above and every
+    // vector access stays within one row slice.
+    unsafe { softmax_avx(xd, c, od, i0, i1) };
+    true
+}
+
+/// Scalar-fallback stub: non-x86_64 hosts never take the vector path.
+#[cfg(not(target_arch = "x86_64"))]
+pub fn softmax_block(_xd: &[f32], _c: usize, _od: &mut [f32], _i0: usize, _i1: usize) -> bool {
+    false
+}
+
+/// Row-wise LayerNorm over rows `[i0, i1)` — same contract as the scalar
+/// block helper in `elementwise::layernorm_rows` (eps = 1e-5). Returns
+/// `false` when AVX2+FMA is unavailable or the row is too narrow.
+#[cfg(target_arch = "x86_64")]
+pub fn ln_block(
+    xd: &[f32],
+    gamma: &[f32],
+    beta: &[f32],
+    od: &mut [f32],
+    i0: usize,
+    i1: usize,
+) -> bool {
+    let c = gamma.len();
+    if !super::have_avx2_fma() || c < 8 {
+        return false;
+    }
+    assert!(beta.len() == c && xd.len() >= i1 * c && od.len() >= (i1 - i0) * c);
+    // SAFETY: AVX2+FMA verified above; row bounds asserted above and every
+    // vector access stays within one row / gamma / beta slice.
+    unsafe { ln_avx(xd, gamma, beta, od, i0, i1) };
+    true
+}
+
+/// Scalar-fallback stub: non-x86_64 hosts never take the vector path.
+#[cfg(not(target_arch = "x86_64"))]
+pub fn ln_block(
+    _xd: &[f32],
+    _gamma: &[f32],
+    _beta: &[f32],
+    _od: &mut [f32],
+    _i0: usize,
+    _i1: usize,
+) -> bool {
+    false
+}
+
+/// `data[r * c + j] += bias[j]` for every row — same contract as the loop
+/// in `elementwise::bias_add` (`data.len()` must be a multiple of
+/// `bias.len()`). Bit-identical to the scalar loop. Returns `false` when
+/// AVX2+FMA is unavailable or the row is too narrow.
+#[cfg(target_arch = "x86_64")]
+pub fn bias_add(data: &mut [f32], bias: &[f32]) -> bool {
+    if !super::have_avx2_fma() || bias.len() < 8 {
+        return false;
+    }
+    assert_eq!(data.len() % bias.len(), 0);
+    // SAFETY: AVX2+FMA verified above; all accesses stay within one
+    // `chunks_exact` row of `data` or within `bias`.
+    unsafe { bias_add_avx(data, bias) };
+    true
+}
+
+/// Scalar-fallback stub: non-x86_64 hosts never take the vector path.
+#[cfg(not(target_arch = "x86_64"))]
+pub fn bias_add(_data: &mut [f32], _bias: &[f32]) -> bool {
+    false
+}
+
+/// Horizontal sum of the 8 lanes.
+///
+/// # Safety
+///
+/// Caller must verify AVX2+FMA; pure register arithmetic otherwise.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[inline]
+unsafe fn hsum(v: __m256) -> f32 {
+    // SAFETY: pure register arithmetic, no memory access.
+    unsafe {
+        let s = _mm_add_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps(v, 1));
+        let s = _mm_hadd_ps(s, s);
+        let s = _mm_hadd_ps(s, s);
+        _mm_cvtss_f32(s)
+    }
+}
+
+/// Horizontal max of the 8 lanes.
+///
+/// # Safety
+///
+/// Caller must verify AVX2+FMA; pure register arithmetic otherwise.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[inline]
+unsafe fn hmax(v: __m256) -> f32 {
+    // SAFETY: pure register arithmetic, no memory access.
+    unsafe {
+        let m = _mm_max_ps(_mm256_castps256_ps128(v), _mm256_extractf128_ps(v, 1));
+        let m = _mm_max_ps(m, _mm_movehl_ps(m, m));
+        let m = _mm_max_ps(m, _mm_shuffle_ps(m, m, 0b01));
+        _mm_cvtss_f32(m)
+    }
+}
+
+/// # Safety
+///
+/// Caller must verify AVX2+FMA and assert the row bounds checked in
+/// [`softmax_block`] before calling.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[inline]
+unsafe fn softmax_avx(xd: &[f32], c: usize, od: &mut [f32], i0: usize, i1: usize) {
+    // SAFETY: the wrapper asserted the row bounds; every pointer below is
+    // derived from an in-bounds row slice with at least 8 lanes left.
+    unsafe {
+        for i in i0..i1 {
+            let row = &xd[i * c..(i + 1) * c];
+            let orow = &mut od[(i - i0) * c..(i - i0 + 1) * c];
+            // Vector max fold (max is order-insensitive: same result bits).
+            let mut mv = _mm256_set1_ps(f32::NEG_INFINITY);
+            let mut j = 0;
+            while j + 8 <= c {
+                mv = _mm256_max_ps(mv, _mm256_loadu_ps(row.as_ptr().add(j)));
+                j += 8;
+            }
+            let mut mx = hmax(mv);
+            while j < c {
+                mx = mx.max(row[j]);
+                j += 1;
+            }
+            // Scalar exp + running sum: identical order to the scalar twin.
+            let mut sum = 0.0;
+            for (o, &v) in orow.iter_mut().zip(row) {
+                *o = (v - mx).exp();
+                sum += *o;
+            }
+            // Vector divide (per-element, same op as the scalar twin).
+            let sv = _mm256_set1_ps(sum);
+            let mut j = 0;
+            while j + 8 <= c {
+                let op = orow.as_mut_ptr().add(j);
+                _mm256_storeu_ps(op, _mm256_div_ps(_mm256_loadu_ps(op), sv));
+                j += 8;
+            }
+            while j < c {
+                orow[j] /= sum;
+                j += 1;
+            }
+        }
+    }
+}
+
+/// # Safety
+///
+/// Caller must verify AVX2+FMA and assert the row bounds checked in
+/// [`ln_block`] before calling.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[inline]
+unsafe fn ln_avx(xd: &[f32], gamma: &[f32], beta: &[f32], od: &mut [f32], i0: usize, i1: usize) {
+    // SAFETY: the wrapper asserted the row bounds; every pointer below is
+    // derived from an in-bounds row / gamma / beta slice with at least 8
+    // lanes left.
+    unsafe {
+        let c = gamma.len();
+        for i in i0..i1 {
+            let row = &xd[i * c..(i + 1) * c];
+            let mut sv = _mm256_setzero_ps();
+            let mut j = 0;
+            while j + 8 <= c {
+                sv = _mm256_add_ps(sv, _mm256_loadu_ps(row.as_ptr().add(j)));
+                j += 8;
+            }
+            let mut sum = hsum(sv);
+            while j < c {
+                sum += row[j];
+                j += 1;
+            }
+            let mean = sum / c as f32;
+            let mv = _mm256_set1_ps(mean);
+            let mut vv = _mm256_setzero_ps();
+            let mut j = 0;
+            while j + 8 <= c {
+                let d = _mm256_sub_ps(_mm256_loadu_ps(row.as_ptr().add(j)), mv);
+                vv = _mm256_fmadd_ps(d, d, vv);
+                j += 8;
+            }
+            let mut var = hsum(vv);
+            while j < c {
+                let d = row[j] - mean;
+                var += d * d;
+                j += 1;
+            }
+            let inv = 1.0 / (var / c as f32 + 1e-5).sqrt();
+            let iv = _mm256_set1_ps(inv);
+            let orow = &mut od[(i - i0) * c..(i - i0 + 1) * c];
+            let mut j = 0;
+            while j + 8 <= c {
+                let t = _mm256_mul_ps(_mm256_sub_ps(_mm256_loadu_ps(row.as_ptr().add(j)), mv), iv);
+                let g = _mm256_loadu_ps(gamma.as_ptr().add(j));
+                let bt = _mm256_loadu_ps(beta.as_ptr().add(j));
+                _mm256_storeu_ps(orow.as_mut_ptr().add(j), _mm256_fmadd_ps(t, g, bt));
+                j += 8;
+            }
+            while j < c {
+                orow[j] = (row[j] - mean) * inv * gamma[j] + beta[j];
+                j += 1;
+            }
+        }
+    }
+}
+
+/// # Safety
+///
+/// Caller must verify AVX2+FMA and assert the whole-rows invariant checked
+/// in [`bias_add`] before calling.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2,fma")]
+#[inline]
+unsafe fn bias_add_avx(data: &mut [f32], bias: &[f32]) {
+    // SAFETY: the wrapper asserted data.len() is a whole number of
+    // bias-width rows; every pointer below stays inside one row or bias.
+    unsafe {
+        let c = bias.len();
+        for row in data.chunks_exact_mut(c) {
+            let mut j = 0;
+            while j + 8 <= c {
+                let p = row.as_mut_ptr().add(j);
+                let bv = _mm256_loadu_ps(bias.as_ptr().add(j));
+                _mm256_storeu_ps(p, _mm256_add_ps(_mm256_loadu_ps(p), bv));
+                j += 8;
+            }
+            while j < c {
+                row[j] += bias[j];
+                j += 1;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn softmax_and_bias_match_scalar_exactly() {
+        let (r, c) = (3usize, 21usize);
+        let mut rng = Pcg64::seeded(8);
+        let xd: Vec<f32> = (0..r * c).map(|_| rng.normal()).collect();
+        let mut got = vec![0f32; r * c];
+        if !super::softmax_block(&xd, c, &mut got, 0, r) {
+            assert!(!super::super::have_avx2_fma());
+            return;
+        }
+        for i in 0..r {
+            let row = &xd[i * c..(i + 1) * c];
+            let mx = row.iter().fold(f32::NEG_INFINITY, |a, &b| a.max(b));
+            let mut sum = 0.0;
+            let mut want = vec![0f32; c];
+            for (o, &v) in want.iter_mut().zip(row) {
+                *o = (v - mx).exp();
+                sum += *o;
+            }
+            for (j, o) in want.iter_mut().enumerate() {
+                *o /= sum;
+                assert_eq!(got[i * c + j], *o, "softmax row {i} col {j}");
+            }
+        }
+        let bias: Vec<f32> = (0..c).map(|_| rng.normal()).collect();
+        let mut data: Vec<f32> = (0..r * c).map(|_| rng.normal()).collect();
+        let before = data.clone();
+        assert!(super::bias_add(&mut data, &bias));
+        for (i, (&d, &b4)) in data.iter().zip(&before).enumerate() {
+            assert_eq!(d, b4 + bias[i % c], "bias at {i}");
+        }
+    }
+
+    #[test]
+    fn layernorm_close_to_scalar() {
+        let (r, c) = (2usize, 19usize);
+        let mut rng = Pcg64::seeded(9);
+        let xd: Vec<f32> = (0..r * c).map(|_| rng.normal()).collect();
+        let gamma: Vec<f32> = (0..c).map(|_| 1.0 + 0.1 * rng.normal()).collect();
+        let beta: Vec<f32> = (0..c).map(|_| 0.1 * rng.normal()).collect();
+        let mut got = vec![0f32; r * c];
+        if !super::ln_block(&xd, &gamma, &beta, &mut got, 0, r) {
+            assert!(!super::super::have_avx2_fma());
+            return;
+        }
+        for i in 0..r {
+            let row = &xd[i * c..(i + 1) * c];
+            let mean = row.iter().sum::<f32>() / c as f32;
+            let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / c as f32;
+            let inv = 1.0 / (var + 1e-5).sqrt();
+            for j in 0..c {
+                let want = (row[j] - mean) * inv * gamma[j] + beta[j];
+                let g = got[i * c + j];
+                assert!((g - want).abs() <= 1e-4 * (1.0 + want.abs()), "({i},{j}): {g} vs {want}");
+            }
+        }
+    }
+}

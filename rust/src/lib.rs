@@ -54,6 +54,7 @@ pub mod train;
 pub mod dist;
 pub mod runtime;
 pub mod tune;
+pub mod parity;
 pub mod coordinator;
 pub mod energy;
 

@@ -16,6 +16,10 @@
 //!   defense: reject/degrade at submit time, shed expired queue entries).
 //! * `energy`   — print the Fig. 7 energy table for a random weight.
 //! * `sparsify` — demonstrate the SparsityBuilder on an MLP.
+//!
+//! Global flag: `--backend scalar|simd|auto` selects the compute backend
+//! for every subcommand (default auto: SIMD when the host has AVX2+FMA,
+//! scalar otherwise; see `src/runtime/README.md` § Compute backends).
 
 use std::sync::Arc;
 use std::time::Duration;
@@ -36,6 +40,12 @@ use sten::util::rng::Pcg64;
 
 fn main() -> Result<()> {
     let args = Args::parse();
+    // Resolve the compute backend once, before any kernel runs: CLI
+    // `--backend scalar|simd|auto` beats the `STEN_BACKEND` env (both lose
+    // to `STEN_FORCE_SCALAR`, and "simd" degrades to scalar without AVX2).
+    if let Some(req) = args.get("backend") {
+        sten::kernels::backend::select(req);
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("info");
     match cmd {
         "info" => info(&args),
@@ -59,6 +69,11 @@ fn info(_args: &Args) -> Result<()> {
     }
     let d = sten::dispatch::global();
     println!("dispatcher: {} registered op implementations", d.len());
+    println!(
+        "backend: {} (cpu features: {})",
+        sten::kernels::backend::active(),
+        sten::kernels::simd::cpu_features()
+    );
     Ok(())
 }
 

@@ -1,0 +1,372 @@
+//! Cross-backend golden-vector parity harness.
+//!
+//! The scalar backend is the bit-identical reference for the whole stack;
+//! this module turns that into a checkable contract. For every runtime
+//! artifact it can (a) synthesize deterministic inputs, (b) generate a
+//! golden vector by running the artifact on the **forced scalar** backend,
+//! and (c) replay the golden inputs under any backend and compare against
+//! the recorded outputs within the per-seam tolerance from [`SEAMS`].
+//!
+//! Golden files use the `aot.py` interchange format (inputs then outputs in
+//! manifest order, little-endian f32/i32), so a cross-language golden
+//! shipped beside the artifacts (`make artifacts`) is preferred verbatim;
+//! only when it is absent does [`ensure_golden`] generate a hermetic one
+//! under [`golden_dir`] (`target/goldens`, override with `STEN_GOLDENS`).
+//! Generation is deterministic (inputs are seeded from the artifact name,
+//! the scalar backend is forced for the reference call), so concurrent test
+//! binaries racing on the same golden write byte-identical files; the
+//! tmp-write + rename keeps readers from ever seeing a partial file.
+//!
+//! Consumers: `tests/backend_parity.rs` (the scalar-vs-SIMD sweep),
+//! `tests/pipeline_integration.rs` (the un-skipped golden path), and the
+//! benches' pre-timing allclose asserts.
+
+use crate::formats::nmg::NmgTensor;
+use crate::kernels::backend::{self, Backend};
+use crate::runtime::{ArtifactRuntime, DType, Json, Value};
+use crate::tensor::DenseTensor;
+use crate::util::rng::Pcg64;
+use crate::Result;
+use anyhow::{anyhow, bail, Context};
+use std::path::{Path, PathBuf};
+
+/// Tolerance contract for one family of runtime artifacts.
+#[derive(Debug, Clone, Copy)]
+pub struct Seam {
+    /// Artifact-name prefix this seam covers.
+    pub prefix: &'static str,
+    /// Relative tolerance for cross-backend comparison.
+    pub rtol: f32,
+    /// Absolute tolerance for cross-backend comparison.
+    pub atol: f32,
+    /// Whether the SIMD backend must reproduce the scalar outputs
+    /// bit-for-bit (gather/add-only seams with no reassociation).
+    pub bit_identical: bool,
+}
+
+/// Per-seam parity tolerances, matched by prefix in order (more specific
+/// prefixes first: `ffn_block_nmg_` must precede `ffn_block_`). Tolerances
+/// mirror the historical golden-vector bounds in
+/// `tests/pipeline_integration.rs`.
+pub const SEAMS: &[Seam] = &[
+    // Embedding is a pure gather + add: no dot products, no reassociation.
+    Seam { prefix: "embed_", rtol: 1e-5, atol: 1e-5, bit_identical: true },
+    Seam { prefix: "gemm_dense_", rtol: 1e-4, atol: 1e-4, bit_identical: false },
+    Seam { prefix: "gemm_masked_", rtol: 1e-4, atol: 1e-4, bit_identical: false },
+    Seam { prefix: "gemm_nmg_", rtol: 1e-4, atol: 1e-4, bit_identical: false },
+    Seam { prefix: "ffn_block_nmg_", rtol: 1e-3, atol: 1e-3, bit_identical: false },
+    Seam { prefix: "attn_block_", rtol: 1e-3, atol: 1e-3, bit_identical: false },
+    Seam { prefix: "ffn_block_", rtol: 1e-3, atol: 1e-3, bit_identical: false },
+    Seam { prefix: "lm_head_", rtol: 1e-3, atol: 1e-3, bit_identical: false },
+    Seam { prefix: "encoder_fwd_", rtol: 1e-2, atol: 1e-2, bit_identical: false },
+    Seam { prefix: "train_step_", rtol: 1e-2, atol: 1e-2, bit_identical: false },
+];
+
+/// Catch-all for artifacts without a dedicated seam entry.
+const DEFAULT_SEAM: Seam =
+    Seam { prefix: "", rtol: 1e-4, atol: 1e-4, bit_identical: false };
+
+/// The tolerance contract governing `name` (first matching prefix wins).
+pub fn seam_for(name: &str) -> Seam {
+    SEAMS.iter().copied().find(|s| name.starts_with(s.prefix)).unwrap_or(DEFAULT_SEAM)
+}
+
+/// Directory for generated golden vectors: `STEN_GOLDENS` if set, else
+/// `target/goldens` under the crate root (hermetic, wiped by `cargo clean`).
+pub fn golden_dir() -> PathBuf {
+    if let Some(d) = std::env::var_os("STEN_GOLDENS") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("target").join("goldens")
+}
+
+/// FNV-1a of the artifact name — the deterministic per-artifact RNG seed.
+fn name_seed(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn meta_usize(meta: &Json, key: &str) -> Result<usize> {
+    meta.get(key).ok_or_else(|| anyhow!("missing meta.{key}"))?.usize()
+}
+
+/// Deterministic inputs for `name`, valid against its manifest spec.
+///
+/// n:m:g artifacts get a *consistent* `(val, idx)` pair converted from a
+/// random dense weight via [`NmgTensor::from_dense`] (independent random
+/// val/idx would not describe any real tensor, and the runtime validates
+/// idx bounds). Token inputs are drawn below the vocab from the spec meta;
+/// gains (`*_g`) are ones, masks are Bernoulli(0.5) in {0, 1}, 2-D weights
+/// are He-scaled, everything else is small Gaussian.
+pub fn synth_inputs(rt: &ArtifactRuntime, name: &str) -> Result<Vec<Value>> {
+    let spec = rt.spec(name).with_context(|| format!("synth_inputs({name})"))?.clone();
+    let mut rng = Pcg64::seeded(name_seed(name));
+
+    // A consistent n:m:g (val, idx) pair for the sparse-weight artifacts.
+    let nmg_meta = if name.starts_with("gemm_nmg_") {
+        Some(&spec.meta)
+    } else if name.starts_with("ffn_block_nmg_") {
+        Some(spec.meta.get("nmg").ok_or_else(|| anyhow!("{name}: missing meta.nmg"))?)
+    } else {
+        None
+    };
+    let sparse = match nmg_meta {
+        Some(meta) => {
+            let (m, n, g) = (
+                meta_usize(meta, "m")?,
+                meta_usize(meta, "n")?,
+                meta_usize(meta, "g")?,
+            );
+            let (rows, k) = (meta_usize(meta, "M")?, meta_usize(meta, "K")?);
+            let mut w = DenseTensor::randn(&[rows, k], &mut rng);
+            w.scale((2.0 / rows as f32).sqrt());
+            Some(NmgTensor::from_dense(&w, n, m, g))
+        }
+        None => None,
+    };
+
+    let vocab = spec.meta.get("vocab").and_then(|j| j.usize().ok()).unwrap_or(16) as u32;
+    let mut inputs = Vec::with_capacity(spec.inputs.len());
+    for io in &spec.inputs {
+        let v = match (io.dtype, io.name.as_str()) {
+            (DType::I32, "idx") if sparse.is_some() => {
+                let s = sparse.as_ref().unwrap();
+                Value::I32(io.shape.clone(), s.idx_flat().iter().map(|&i| i as i32).collect())
+            }
+            (DType::I32, _) => Value::I32(
+                io.shape.clone(),
+                (0..io.numel()).map(|_| rng.below(vocab) as i32).collect(),
+            ),
+            (DType::F32, "val") if sparse.is_some() => Value::from(DenseTensor::from_vec(
+                &io.shape,
+                sparse.as_ref().unwrap().val_flat().to_vec(),
+            )),
+            (DType::F32, "lr") => {
+                Value::from(DenseTensor::from_vec(&io.shape, vec![0.05; io.numel()]))
+            }
+            (DType::F32, n) if n == "mask" || n.starts_with("mask.") => {
+                Value::from(DenseTensor::from_vec(
+                    &io.shape,
+                    (0..io.numel())
+                        .map(|_| if rng.next_f32() < 0.5 { 1.0 } else { 0.0 })
+                        .collect(),
+                ))
+            }
+            (DType::F32, n) if n.ends_with("_g") => Value::from(DenseTensor::ones(&io.shape)),
+            (DType::F32, _) if io.shape.len() == 2 => {
+                let mut w = DenseTensor::randn(&io.shape, &mut rng);
+                w.scale((2.0 / io.shape[0] as f32).sqrt());
+                Value::from(w)
+            }
+            (DType::F32, _) => {
+                let mut t = DenseTensor::randn(&io.shape, &mut rng);
+                if io.shape.len() == 1 {
+                    t.scale(0.05); // bias-scale 1-D params
+                }
+                Value::from(t)
+            }
+        };
+        inputs.push(v);
+    }
+    Ok(inputs)
+}
+
+fn push_value_bytes(v: &Value, out: &mut Vec<u8>) {
+    match v {
+        Value::F32(t) => {
+            for x in t.data() {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Value::I32(_, ints) => {
+            for x in ints {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+}
+
+/// Path to a golden vector for `name`, generating one if needed.
+///
+/// A cross-language golden in the artifact directory wins (it pins the
+/// jax-computed outputs). Otherwise the golden is produced hermetically:
+/// deterministic inputs from [`synth_inputs`], outputs from the **forced
+/// scalar** backend (the reference numerics), written into [`golden_dir`]
+/// via tmp + atomic rename.
+///
+/// Never call this while holding a [`backend::ForceGuard`] — the guard's
+/// lock is not reentrant and generation takes it internally.
+pub fn ensure_golden(rt: &ArtifactRuntime, name: &str) -> Result<PathBuf> {
+    let shipped = rt.dir().join(format!("{name}.golden.bin"));
+    if shipped.is_file() {
+        return Ok(shipped);
+    }
+    let dir = golden_dir();
+    let path = dir.join(format!("{name}.golden.bin"));
+    if path.is_file() {
+        return Ok(path);
+    }
+    std::fs::create_dir_all(&dir).with_context(|| format!("mkdir {}", dir.display()))?;
+
+    let inputs = synth_inputs(rt, name)?;
+    // The force guard doubles as the in-process writer lock: threads racing
+    // on the same golden (the tmp name is only pid-unique) serialize here,
+    // and the re-check turns every loser into a plain reader. Racing
+    // *processes* interleave safely anyway — deterministic inputs + the
+    // forced scalar call make both writers produce byte-identical files,
+    // and the rename is atomic.
+    let _scalar = backend::force(Backend::Scalar);
+    if path.is_file() {
+        return Ok(path);
+    }
+    let outputs =
+        rt.call(name, &inputs).with_context(|| format!("golden generation for {name}"))?;
+    let mut bytes = Vec::new();
+    for v in inputs.iter().chain(outputs.iter()) {
+        push_value_bytes(v, &mut bytes);
+    }
+    let tmp = dir.join(format!("{name}.golden.bin.{}.tmp", std::process::id()));
+    std::fs::write(&tmp, &bytes).with_context(|| format!("write {}", tmp.display()))?;
+    std::fs::rename(&tmp, &path).with_context(|| format!("rename to {}", path.display()))?;
+    Ok(path)
+}
+
+/// Parse a golden file: inputs then outputs, manifest order, little-endian.
+pub fn load_golden(
+    rt: &ArtifactRuntime,
+    name: &str,
+    path: &Path,
+) -> Result<(Vec<Value>, Vec<DenseTensor>)> {
+    let spec = rt.spec(name)?.clone();
+    let bytes =
+        std::fs::read(path).with_context(|| format!("golden for {name} at {}", path.display()))?;
+    let mut off = 0usize;
+    let mut take = |n: usize| -> Result<&[u8]> {
+        let end = off + 4 * n;
+        if end > bytes.len() {
+            bail!("golden for {name} truncated at byte {end} (file has {})", bytes.len());
+        }
+        let s = &bytes[off..end];
+        off = end;
+        Ok(s)
+    };
+    let mut inputs = Vec::new();
+    for io in &spec.inputs {
+        let raw = take(io.numel())?;
+        match io.dtype {
+            DType::F32 => {
+                let f: Vec<f32> = raw
+                    .chunks_exact(4)
+                    .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                inputs.push(Value::from(DenseTensor::from_vec(&io.shape, f)));
+            }
+            DType::I32 => {
+                let ints: Vec<i32> = raw
+                    .chunks_exact(4)
+                    .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+                    .collect();
+                inputs.push(Value::I32(io.shape.clone(), ints));
+            }
+        }
+    }
+    let mut outputs = Vec::new();
+    for io in &spec.outputs {
+        let raw = take(io.numel())?;
+        let f: Vec<f32> =
+            raw.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect();
+        outputs.push(DenseTensor::from_vec(&io.shape, f));
+    }
+    if off != bytes.len() {
+        bail!("golden for {name}: {} trailing bytes", bytes.len() - off);
+    }
+    Ok((inputs, outputs))
+}
+
+/// Replay the golden inputs for `name` under the *ambient* backend and
+/// compare against the golden outputs within the seam tolerance. Callers
+/// choose the backend with [`backend::force`] (take the guard **after**
+/// this has generated the golden, or call [`ensure_golden`] first).
+pub fn verify_artifact(rt: &ArtifactRuntime, name: &str) -> Result<()> {
+    let path = ensure_golden(rt, name)?;
+    let (inputs, want) = load_golden(rt, name, &path)?;
+    let got = rt.call(name, &inputs)?;
+    if got.len() != want.len() {
+        bail!("{name}: {} outputs, golden has {}", got.len(), want.len());
+    }
+    let seam = seam_for(name);
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        let g = g.as_f32().with_context(|| format!("{name} output {i}"))?;
+        if !g.allclose(w, seam.rtol, seam.atol) {
+            bail!(
+                "{name} output {i} diverges from golden: max diff {} (rtol {}, atol {})",
+                g.max_abs_diff(w),
+                seam.rtol,
+                seam.atol
+            );
+        }
+    }
+    Ok(())
+}
+
+/// Artifacts covered by the default parity sweep: every builtin-manifest
+/// artifact with a deterministic single-call contract. `train_step_*` is
+/// excluded — it is exercised through its own integration tests and its
+/// looped optimizer updates amplify benign cross-backend rounding.
+pub fn sweep_artifacts(rt: &ArtifactRuntime) -> Vec<String> {
+    let mut names: Vec<String> = rt
+        .manifest()
+        .names()
+        .into_iter()
+        .filter(|n| !n.starts_with("train_step_"))
+        .map(|n| n.to_string())
+        .collect();
+    names.sort();
+    names
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seam_prefix_order_is_specific_first() {
+        // The nmg ffn seam must win over the generic ffn prefix.
+        assert_eq!(seam_for("ffn_block_nmg_tiny").prefix, "ffn_block_nmg_");
+        assert_eq!(seam_for("ffn_block_tiny").prefix, "ffn_block_");
+        assert!(seam_for("embed_tiny").bit_identical);
+        assert!(!seam_for("encoder_fwd_base").bit_identical);
+        // Unknown artifacts fall back to the strict default.
+        assert_eq!(seam_for("mystery_op").rtol, 1e-4);
+    }
+
+    #[test]
+    fn name_seed_is_stable_and_distinct() {
+        assert_eq!(name_seed("gemm_dense_8x48x16"), name_seed("gemm_dense_8x48x16"));
+        assert_ne!(name_seed("gemm_dense_8x48x16"), name_seed("gemm_dense_64x192x128"));
+    }
+
+    #[test]
+    fn synth_inputs_match_spec_shapes() {
+        let rt = ArtifactRuntime::open_default().unwrap();
+        for name in sweep_artifacts(&rt) {
+            let spec = rt.spec(&name).unwrap().clone();
+            let inputs = synth_inputs(&rt, &name).unwrap();
+            assert_eq!(inputs.len(), spec.inputs.len(), "{name}");
+            for (io, v) in spec.inputs.iter().zip(&inputs) {
+                let numel = match v {
+                    Value::F32(t) => t.numel(),
+                    Value::I32(_, d) => d.len(),
+                };
+                assert_eq!(numel, io.numel(), "{name} input {}", io.name);
+            }
+            // The inputs must actually be callable (validates dtypes,
+            // nmg idx bounds, token ranges...).
+            rt.call(&name, &inputs).unwrap_or_else(|e| panic!("{name}: {e}"));
+        }
+    }
+}

@@ -9,9 +9,10 @@
 //! steady-state execution pays zero per-call tuning overhead.
 //!
 //! Cache invalidation is by construction: the key embeds every input the
-//! decision depends on (op, M/K/N, sparsity permille, n:m:g parameters), so a
-//! shape or sparsity change misses the cache and re-tunes, and a schema bump
-//! drops the whole file. Serialization goes through
+//! decision depends on (op, M/K/N, sparsity permille, n:m:g parameters, and
+//! the active compute [`Backend`] — the SIMD kernels shift the
+//! dense-vs-irregular trade-off), so a shape, sparsity, or backend change
+//! misses the cache and re-tunes, and a schema bump drops the whole file. Serialization goes through
 //! [`Json::to_string_sorted`], so "same decisions" implies "byte-identical
 //! cache file" — the determinism contract the autotune tests pin down.
 
@@ -22,6 +23,7 @@ use std::time::Instant;
 use anyhow::{anyhow, bail, Context, Result};
 
 use crate::dispatch::Dispatcher;
+use crate::kernels::backend::{self, Backend};
 use crate::formats::{
     AnyTensor, BcsrTensor, CooTensor, CscTensor, CsrTensor, EllTensor, Layout, MaskedTensor,
     NmgTensor,
@@ -34,7 +36,8 @@ use crate::util::rng::Pcg64;
 /// Cache schema version: bump on any change to the key format, the decision
 /// fields, or the cost model's units. A loaded cache with a different schema
 /// is dropped wholesale (stale decisions are worse than a re-tune).
-pub const TUNE_SCHEMA_VERSION: u64 = 1;
+/// v2: keys embed the compute backend; cost model is vector-width-aware.
+pub const TUNE_SCHEMA_VERSION: u64 = 2;
 
 /// Block edge used for BCSR candidates.
 const BCSR_BLOCK: usize = 4;
@@ -126,13 +129,23 @@ impl WeightStats {
 /// by each kernel's measured-on-this-codebase efficiency relative to the
 /// blocked dense GEMM. `None` means the layout is not a viable candidate for
 /// this weight (e.g. BCSR on non-divisible shapes, n:m:g without a config).
+///
+/// The cost is backend-aware: under the SIMD backend the dense, n:m:g, and
+/// BCSR kernels have vector twins while the scalar-indexed formats (CSR,
+/// ELL) do not, so the irregular formats' relative cost scales with the
+/// backend's vector width (they forfeit the vector speedup the others get).
 pub fn model_cost(
     layout: Layout,
     stats: &WeightStats,
     ncols: usize,
     nmg: Option<(usize, usize, usize)>,
+    be: Backend,
 ) -> Option<f64> {
     let n2 = 2.0 * ncols as f64;
+    // Relative penalty for formats the vector backend cannot accelerate:
+    // 1.0 on the scalar backend, vector_width / 4 under SIMD (the gather-
+    // bound kernels recover roughly half the 8-lane speedup in practice).
+    let irregular = (be.vector_width() as f64 / 4.0).max(1.0);
     // Per-format inefficiency factors (relative to dense-GEMM flops): the
     // structured formats stream contiguously (near-dense), scalar CSR pays
     // per-element indexing — the paper's §1 blocked-vs-flexible trade-off.
@@ -153,8 +166,8 @@ pub fn model_cost(
             let slots = (stats.blocks_occupied * BCSR_BLOCK * BCSR_BLOCK) as f64;
             Some(n2 * slots * 1.1)
         }
-        Layout::Ell => Some(n2 * (stats.rows * stats.max_row_nnz) as f64 * 2.5),
-        Layout::Csr => Some(n2 * stats.nnz as f64 * 3.0),
+        Layout::Ell => Some(n2 * (stats.rows * stats.max_row_nnz) as f64 * 2.5 * irregular),
+        Layout::Csr => Some(n2 * stats.nnz as f64 * 3.0 * irregular),
         // Csc/Coo/Masked/Nm matmuls exist but are never cheaper than the
         // candidates above under this model; leaving them out keeps the
         // candidate set (and the cache) small.
@@ -315,19 +328,26 @@ impl TuneCache {
 }
 
 /// Cache key: embeds every input the decision depends on, so invalidation on
-/// shape / sparsity / config change falls out of key inequality.
-pub fn tune_key(stats: &WeightStats, ncols: usize, nmg: Option<(usize, usize, usize)>) -> String {
+/// shape / sparsity / config / backend change falls out of key inequality
+/// (a decision tuned under SIMD must not be replayed on a scalar-only host).
+pub fn tune_key(
+    stats: &WeightStats,
+    ncols: usize,
+    nmg: Option<(usize, usize, usize)>,
+    be: Backend,
+) -> String {
     let nmg_part = match nmg {
         Some((n, m, g)) => format!("{n}:{m}:{g}"),
         None => "none".to_string(),
     };
     format!(
-        "matmul:m{}k{}n{}:sp{}:nmg{}",
+        "matmul:m{}k{}n{}:sp{}:nmg{}:be{}",
         stats.rows,
         stats.cols,
         ncols,
         stats.sparsity_permille(),
-        nmg_part
+        nmg_part,
+        be.name()
     )
 }
 
@@ -441,7 +461,7 @@ impl Autotuner {
             .into_iter()
             .filter(|sig| sig.len() == 2 && sig[1] == Layout::Dense)
             .map(|sig| sig[0])
-            .filter(|&l| model_cost(l, stats, 1, nmg).is_some())
+            .filter(|&l| model_cost(l, stats, 1, nmg, backend::active()).is_some())
             .collect();
         out.sort_unstable();
         out.dedup();
@@ -459,7 +479,8 @@ impl Autotuner {
         nmg: Option<(usize, usize, usize)>,
     ) -> Result<Decision> {
         let stats = WeightStats::measure(weight);
-        let key = tune_key(&stats, ncols, nmg);
+        let be = backend::active();
+        let key = tune_key(&stats, ncols, nmg, be);
         if let Some(dec) = self.cache.get(&key) {
             self.hits += 1;
             return Ok(dec.clone());
@@ -473,7 +494,7 @@ impl Autotuner {
         for &layout in &cands {
             let cost = match self.policy {
                 TunePolicy::CostModel => {
-                    model_cost(layout, &stats, ncols, nmg).expect("candidate was pre-filtered")
+                    model_cost(layout, &stats, ncols, nmg, be).expect("candidate was pre-filtered")
                 }
                 TunePolicy::Microbench { warmup, iters } => {
                     microbench(d, weight, layout, ncols, nmg, warmup, iters)?
@@ -555,16 +576,36 @@ mod tests {
         let w = nmg_pruned_weight(16, 32, 40);
         let s = WeightStats::measure(&w);
         let nmg = Some((2, 4, 2));
-        let dense = model_cost(Layout::Dense, &s, 8, nmg).unwrap();
-        let nmg_c = model_cost(Layout::Nmg, &s, 8, nmg).unwrap();
-        let csr = model_cost(Layout::Csr, &s, 8, nmg).unwrap();
+        let dense = model_cost(Layout::Dense, &s, 8, nmg, Backend::Scalar).unwrap();
+        let nmg_c = model_cost(Layout::Nmg, &s, 8, nmg, Backend::Scalar).unwrap();
+        let csr = model_cost(Layout::Csr, &s, 8, nmg, Backend::Scalar).unwrap();
         assert!(nmg_c < dense, "50% structured sparsity must beat dense");
         assert!(nmg_c < csr, "contiguous n:m:g must beat scalar CSR");
         // Without an n:m:g config the format is not a candidate at all.
-        assert!(model_cost(Layout::Nmg, &s, 8, None).is_none());
+        assert!(model_cost(Layout::Nmg, &s, 8, None, Backend::Scalar).is_none());
         // BCSR requires block-divisible shapes.
         let ragged = WeightStats { rows: 5, ..s };
-        assert!(model_cost(Layout::Bcsr, &ragged, 8, nmg).is_none());
+        assert!(model_cost(Layout::Bcsr, &ragged, 8, nmg, Backend::Scalar).is_none());
+    }
+
+    #[test]
+    fn cost_model_is_vector_width_aware() {
+        let w = nmg_pruned_weight(16, 32, 47);
+        let s = WeightStats::measure(&w);
+        // Vectorizable formats cost the same under both backends (relative
+        // units); the scalar-indexed formats get proportionally worse under
+        // SIMD because they forfeit the vector speedup.
+        for layout in [Layout::Dense, Layout::Nmg, Layout::Bcsr] {
+            let sc = model_cost(layout, &s, 8, Some((2, 4, 2)), Backend::Scalar);
+            let vc = model_cost(layout, &s, 8, Some((2, 4, 2)), Backend::Simd);
+            assert_eq!(sc, vc, "{layout}: vector-twin formats keep their relative cost");
+        }
+        for layout in [Layout::Csr, Layout::Ell] {
+            let sc = model_cost(layout, &s, 8, None, Backend::Scalar).unwrap();
+            let vc = model_cost(layout, &s, 8, None, Backend::Simd).unwrap();
+            let factor = (Backend::Simd.vector_width() as f64 / 4.0).max(1.0);
+            assert_eq!(vc, sc * factor, "{layout}: irregular penalty scales with width");
+        }
     }
 
     #[test]
@@ -619,7 +660,7 @@ mod tests {
         assert_eq!(loaded.get(key), cache.get(key));
         assert_eq!(loaded.to_json_text(), text, "save/load/save must be byte-stable");
         // Schema bump drops everything.
-        let bumped = text.replace("\"schema\":1", "\"schema\":999");
+        let bumped = text.replace("\"schema\":2", "\"schema\":999");
         std::fs::write(&path, bumped).unwrap();
         assert!(TuneCache::load(&path).unwrap().is_empty());
         // Missing file is an empty cache, not an error.
@@ -633,7 +674,9 @@ mod tests {
         let w = nmg_pruned_weight(16, 32, 46);
         let mut tuner = Autotuner::new(TunePolicy::CostModel);
         let dec = tuner.choose(&d, &w, 8, Some((2, 4, 2))).unwrap();
-        let key = tune_key(&WeightStats::measure(&w), 8, Some((2, 4, 2)));
+        // The key must reflect the backend `choose` resolved (the ambient
+        // one — this test binary never forces backends).
+        let key = tune_key(&WeightStats::measure(&w), 8, Some((2, 4, 2)), backend::active());
 
         // Materialize-and-record, then round-trip the manifest's autotune
         // section through serialized JSON.

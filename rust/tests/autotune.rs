@@ -1,13 +1,14 @@
 //! Autotuner determinism contract: the same manifest of weights tuned twice
 //! from scratch must produce identical decisions AND byte-identical cache
 //! files, and the cache must invalidate (by key inequality) whenever a shape,
-//! sparsity level, or n:m:g config changes.
+//! sparsity level, n:m:g config, or compute backend changes.
 
 use sten::dispatch::Dispatcher;
 use sten::formats::{Layout, NmgTensor};
+use sten::kernels::backend::Backend;
 use sten::sparsify::{ScalarFraction, Sparsifier};
 use sten::tensor::DenseTensor;
-use sten::tune::{Autotuner, Decision, TuneCache, TunePolicy};
+use sten::tune::{tune_key, Autotuner, Decision, TuneCache, TunePolicy, WeightStats};
 use sten::util::rng::Pcg64;
 
 /// A small "model manifest": weights of varied shape and sparsity structure,
@@ -99,6 +100,29 @@ fn shape_and_sparsity_changes_miss_the_cache() {
 }
 
 #[test]
+fn backend_change_invalidates_the_cache_key() {
+    // A decision tuned under one backend must never be replayed under the
+    // other: the SIMD cost model ranks irregular formats differently. Key
+    // inequality is the whole invalidation mechanism, so pin it directly
+    // (pure key computation — no backend forcing, no cache I/O).
+    let mut rng = Pcg64::seeded(78);
+    let raw = DenseTensor::randn(&[16, 32], &mut rng);
+    let w = NmgTensor::from_dense(&raw, 2, 4, 2).to_dense();
+    let stats = WeightStats::measure(&w);
+    let scalar_key = tune_key(&stats, 8, Some((2, 4, 2)), Backend::Scalar);
+    let simd_key = tune_key(&stats, 8, Some((2, 4, 2)), Backend::Simd);
+    assert_ne!(scalar_key, simd_key, "backend must be part of the cache key");
+    assert!(scalar_key.ends_with(":bescalar"), "got {scalar_key}");
+    assert!(simd_key.ends_with(":besimd"), "got {simd_key}");
+    // Everything upstream of the backend suffix is identical: the backend
+    // only extends the key, it does not perturb shape/sparsity fields.
+    assert_eq!(
+        scalar_key.rsplit_once(":be").unwrap().0,
+        simd_key.rsplit_once(":be").unwrap().0
+    );
+}
+
+#[test]
 fn schema_bump_forces_a_full_retune_with_identical_outcome() {
     let d = Dispatcher::with_builtins();
     let dir = std::env::temp_dir().join("sten_autotune_schema_test");
@@ -112,7 +136,7 @@ fn schema_bump_forces_a_full_retune_with_identical_outcome() {
     // Corrupt the schema: the loader must drop every entry rather than trust
     // decisions produced under different cost-model units.
     let text = std::fs::read_to_string(&path).unwrap();
-    std::fs::write(&path, text.replace("\"schema\":1", "\"schema\":999")).unwrap();
+    std::fs::write(&path, text.replace("\"schema\":2", "\"schema\":999")).unwrap();
     let dropped = TuneCache::load(&path).unwrap();
     let mut second = Autotuner::with_cache(TunePolicy::CostModel, dropped);
     assert!(second.cache.is_empty(), "schema mismatch must drop the cache wholesale");

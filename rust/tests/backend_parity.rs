@@ -1,0 +1,228 @@
+//! Cross-backend golden-vector parity harness (the SIMD backend's gate).
+//!
+//! Every runtime artifact is checked on both backends against golden
+//! vectors generated from the forced-scalar reference (see `sten::parity`),
+//! and every SIMD kernel is checked directly against its scalar twin.
+//! Backend forcing happens only in this integration binary (and its
+//! siblings), never in the lib test binary: the `backend::force` guards
+//! serialize through a process-global lock, so concurrently running tests
+//! here cannot observe a half-switched backend.
+//!
+//! Tolerance contract per seam lives in `sten::parity::SEAMS`; the
+//! bit-identical seams (embed artifact, softmax, bias_add) are asserted
+//! with exact equality, everything else with the seam's allclose bounds.
+
+use sten::formats::bcsr::BcsrTensor;
+use sten::formats::nmg::NmgTensor;
+use sten::kernels::backend::{self, Backend};
+use sten::kernels::{bcsr_gemm, dense_gemm, elementwise, nmg_gemm, simd};
+use sten::parity;
+use sten::runtime::{ArtifactRuntime, Value};
+use sten::tensor::DenseTensor;
+use sten::util::rng::Pcg64;
+
+fn runtime() -> ArtifactRuntime {
+    ArtifactRuntime::open_default().expect("artifact runtime")
+}
+
+/// Generate every golden *before* any force guard is taken (golden
+/// generation takes the guard internally and it is not reentrant).
+fn ensure_all(rt: &ArtifactRuntime) -> Vec<String> {
+    let names = parity::sweep_artifacts(rt);
+    for n in &names {
+        parity::ensure_golden(rt, n).unwrap_or_else(|e| panic!("golden for {n}: {e}"));
+    }
+    names
+}
+
+/// Run `f` with the given backend forced (guard held for the duration).
+fn with_backend<T>(b: Backend, f: impl FnOnce() -> T) -> T {
+    let _g = backend::force(b);
+    f()
+}
+
+#[test]
+fn scalar_backend_reproduces_every_golden() {
+    let rt = runtime();
+    let names = ensure_all(&rt);
+    let _g = backend::force(Backend::Scalar);
+    for n in &names {
+        parity::verify_artifact(&rt, n).unwrap_or_else(|e| panic!("scalar parity: {e}"));
+    }
+}
+
+#[test]
+fn simd_backend_matches_goldens_within_seam_tolerances() {
+    if !simd::have_avx2_fma() {
+        eprintln!("skipping SIMD parity sweep: no AVX2+FMA on this host");
+        return;
+    }
+    let rt = runtime();
+    let names = ensure_all(&rt);
+    let _g = backend::force(Backend::Simd);
+    for n in &names {
+        parity::verify_artifact(&rt, n).unwrap_or_else(|e| panic!("simd parity: {e}"));
+    }
+}
+
+#[test]
+fn scalar_reference_is_deterministic_bitwise() {
+    // The golden generator's claim: same name -> same inputs -> same bytes.
+    let rt = runtime();
+    for n in parity::sweep_artifacts(&rt) {
+        let i1 = parity::synth_inputs(&rt, &n).unwrap();
+        let i2 = parity::synth_inputs(&rt, &n).unwrap();
+        let (o1, o2) = with_backend(Backend::Scalar, || {
+            (rt.call(&n, &i1).unwrap(), rt.call(&n, &i2).unwrap())
+        });
+        for (a, b) in o1.iter().zip(&o2) {
+            match (a, b) {
+                (Value::F32(x), Value::F32(y)) => assert_eq!(x.data(), y.data(), "{n}"),
+                (Value::I32(_, x), Value::I32(_, y)) => assert_eq!(x, y, "{n}"),
+                _ => panic!("{n}: output dtype mismatch between identical calls"),
+            }
+        }
+    }
+}
+
+#[test]
+fn bit_identical_seams_agree_exactly_across_backends() {
+    if !simd::have_avx2_fma() {
+        eprintln!("skipping bit-identity cross-backend check: no AVX2+FMA");
+        return;
+    }
+    let rt = runtime();
+    let names = ensure_all(&rt);
+    for n in names.iter().filter(|n| parity::seam_for(n).bit_identical) {
+        let path = parity::ensure_golden(&rt, n).unwrap();
+        let (inputs, _) = parity::load_golden(&rt, n, &path).unwrap();
+        let scalar = with_backend(Backend::Scalar, || rt.call(n, &inputs).unwrap());
+        let vector = with_backend(Backend::Simd, || rt.call(n, &inputs).unwrap());
+        for (i, (s, v)) in scalar.iter().zip(&vector).enumerate() {
+            assert_eq!(
+                s.as_f32().unwrap().data(),
+                v.as_f32().unwrap().data(),
+                "{n} output {i}: bit-identical seam diverged"
+            );
+        }
+    }
+}
+
+#[test]
+fn dense_gemm_parity_scalar_vs_simd() {
+    if !simd::have_avx2_fma() {
+        return;
+    }
+    let mut rng = Pcg64::seeded(901);
+    // Full tiles, ragged N (tail < 8 and 8..16), ragged M/K, tiny shapes.
+    for (m, k, n) in [(1, 1, 1), (8, 48, 16), (33, 47, 29), (64, 192, 128), (17, 300, 21)] {
+        let a = DenseTensor::randn(&[m, k], &mut rng);
+        let b = DenseTensor::randn(&[k, n], &mut rng);
+        let s = with_backend(Backend::Scalar, || dense_gemm::matmul(&a, &b));
+        let v = with_backend(Backend::Simd, || dense_gemm::matmul(&a, &b));
+        assert!(
+            s.allclose(&v, 1e-4, 1e-4),
+            "dense {m}x{k}x{n}: max diff {}",
+            s.max_abs_diff(&v)
+        );
+    }
+}
+
+#[test]
+fn nmg_gemm_parity_scalar_vs_simd() {
+    if !simd::have_avx2_fma() {
+        return;
+    }
+    let mut rng = Pcg64::seeded(902);
+    for (n, m, g, rows, k, cols) in [
+        (1usize, 4usize, 4usize, 16usize, 48usize, 16usize),
+        (2, 4, 4, 17, 50, 33),
+        (1, 8, 2, 9, 40, 64),
+    ] {
+        let d = DenseTensor::randn(&[rows, k], &mut rng);
+        let a = NmgTensor::from_dense(&d, n, m, g);
+        let b = DenseTensor::randn(&[k, cols], &mut rng);
+        let s = with_backend(Backend::Scalar, || nmg_gemm::spmm(&a, &b));
+        let v = with_backend(Backend::Simd, || nmg_gemm::spmm(&a, &b));
+        assert!(
+            s.allclose(&v, 1e-4, 1e-4),
+            "nmg {n}:{m}:{g} {rows}x{k}x{cols}: max diff {}",
+            s.max_abs_diff(&v)
+        );
+    }
+}
+
+#[test]
+fn bcsr_gemm_parity_scalar_vs_simd() {
+    if !simd::have_avx2_fma() {
+        return;
+    }
+    let mut rng = Pcg64::seeded(903);
+    for (bh, bw, rows, k, cols) in [
+        (2usize, 4usize, 8usize, 16usize, 32usize),
+        (4, 4, 16, 24, 21),
+        (8, 8, 16, 32, 48),
+        (3, 2, 9, 10, 17),
+    ] {
+        let mut d = DenseTensor::randn(&[rows, k], &mut rng);
+        for (i, x) in d.data_mut().iter_mut().enumerate() {
+            if i % 3 == 0 {
+                *x = 0.0;
+            }
+        }
+        let a = BcsrTensor::from_dense(&d, bh, bw);
+        let b = DenseTensor::randn(&[k, cols], &mut rng);
+        let s = with_backend(Backend::Scalar, || bcsr_gemm::spmm(&a, &b));
+        let v = with_backend(Backend::Simd, || bcsr_gemm::spmm(&a, &b));
+        assert!(
+            s.allclose(&v, 1e-4, 1e-4),
+            "bcsr bh={bh} bw={bw}: max diff {}",
+            s.max_abs_diff(&v)
+        );
+    }
+}
+
+#[test]
+fn softmax_and_bias_add_are_bit_identical_across_backends() {
+    if !simd::have_avx2_fma() {
+        return;
+    }
+    let mut rng = Pcg64::seeded(904);
+    for (r, c) in [(3usize, 21usize), (5, 8), (2, 64), (7, 9)] {
+        let x = DenseTensor::randn(&[r, c], &mut rng);
+        let bias: Vec<f32> = (0..c).map(|_| rng.next_f32() - 0.5).collect();
+        let (s_sm, s_ba) = with_backend(Backend::Scalar, || {
+            (elementwise::softmax_rows(&x), elementwise::bias_add(&x, &bias))
+        });
+        let (v_sm, v_ba) = with_backend(Backend::Simd, || {
+            (elementwise::softmax_rows(&x), elementwise::bias_add(&x, &bias))
+        });
+        assert_eq!(s_sm.data(), v_sm.data(), "softmax {r}x{c} diverged bitwise");
+        assert_eq!(s_ba.data(), v_ba.data(), "bias_add {r}x{c} diverged bitwise");
+    }
+}
+
+#[test]
+fn layernorm_parity_scalar_vs_simd() {
+    if !simd::have_avx2_fma() {
+        return;
+    }
+    let mut rng = Pcg64::seeded(905);
+    for (r, c) in [(4usize, 32usize), (3, 19), (1, 8), (6, 7)] {
+        let x = DenseTensor::randn(&[r, c], &mut rng);
+        let gamma: Vec<f32> = (0..c).map(|_| 0.5 + rng.next_f32()).collect();
+        let beta: Vec<f32> = (0..c).map(|_| rng.next_f32() - 0.5).collect();
+        let s = with_backend(Backend::Scalar, || elementwise::layernorm_rows(&x, &gamma, &beta));
+        let v = with_backend(Backend::Simd, || elementwise::layernorm_rows(&x, &gamma, &beta));
+        assert!(s.allclose(&v, 1e-4, 1e-4), "layernorm {r}x{c}: max diff {}", s.max_abs_diff(&v));
+    }
+}
+
+#[test]
+fn force_guard_applies_and_serializes() {
+    // Within a guard the forced backend is globally visible; guards from
+    // concurrent tests serialize on the force lock, so these observations
+    // are race-free.
+    with_backend(Backend::Scalar, || assert_eq!(backend::active(), Backend::Scalar));
+    with_backend(Backend::Simd, || assert_eq!(backend::active(), Backend::Simd));
+}

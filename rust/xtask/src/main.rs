@@ -2,7 +2,7 @@
 //!
 //! Usage: `cargo run -p xtask -- lint [src-dir]`
 //!
-//! Four rules, all enforced over `rust/src` (test modules are exempt where
+//! Six rules, all enforced over `rust/src` (test modules are exempt where
 //! noted). The checker is deliberately line-based and syntactic: it strips
 //! comments and string literals, then pattern-matches. That keeps it
 //! dependency-free (the build environment is offline) at the cost of some
@@ -22,6 +22,14 @@
 //! 4. `std-sync-in-ported-file` — files ported to the `util::sync` shim must
 //!    not name `std::sync` / `std::thread` directly (outside `#[cfg(test)]`),
 //!    otherwise the loom lane silently stops covering them.
+//! 5. `arch-outside-simd` — `std::arch` / `core::arch` intrinsics,
+//!    `#[target_feature]`, and `is_x86_feature_detected!` are only permitted
+//!    under `kernels/simd/`; everything else dispatches through the backend
+//!    so the scalar reference path stays the single source of truth.
+//! 6. `target-feature-without-guard` — a file containing `#[target_feature]`
+//!    fns must also contain a runtime-detection guard (`have_avx2_fma(` or
+//!    `is_x86_feature_detected!`), so no vectorized fn is reachable on a CPU
+//!    that cannot execute it.
 
 use std::fmt;
 use std::path::{Path, PathBuf};
@@ -135,6 +143,8 @@ fn lint_source(rel: &str, text: &str) -> Vec<Violation> {
     check_guard_across_scope(rel, &code, &in_test, &mut out);
     check_spawn_outside_util(rel, &code, &in_test, &mut out);
     check_std_sync_in_ported(rel, &code, &in_test, &mut out);
+    check_arch_outside_simd(rel, &code, &mut out);
+    check_target_feature_guard(rel, &code, &mut out);
     out.sort_by_key(|v| v.line);
     out
 }
@@ -446,6 +456,67 @@ fn check_std_sync_in_ported(
     }
 }
 
+/// Tokens that mark direct use of CPU intrinsics (rule 5). Applies to test
+/// code too: a test exercising raw intrinsics belongs next to them.
+const ARCH_TOKENS: &[&str] = &[
+    "std::arch",
+    "core::arch",
+    "#[target_feature",
+    "is_x86_feature_detected!",
+];
+
+/// Rule 5: CPU intrinsics only under `kernels/simd/`. Everywhere else must
+/// call the safe wrappers, which carry the runtime-detection guard and the
+/// scalar fallback.
+fn check_arch_outside_simd(rel: &str, code: &[String], out: &mut Vec<Violation>) {
+    if rel.starts_with("kernels/simd/") {
+        return;
+    }
+    for (i, c) in code.iter().enumerate() {
+        for needle in ARCH_TOKENS {
+            if c.contains(needle) {
+                out.push(Violation {
+                    file: rel.to_string(),
+                    line: i + 1,
+                    rule: "arch-outside-simd",
+                    msg: format!(
+                        "`{needle}` outside `kernels/simd/`; call the safe \
+                         `kernels::simd` wrappers instead so runtime feature \
+                         detection and the scalar fallback stay centralized"
+                    ),
+                });
+            }
+        }
+    }
+}
+
+/// Rule 6: a file declaring `#[target_feature]` fns must also contain a
+/// runtime-detection guard. The guard being *somewhere in the file* is the
+/// syntactic proxy for "every vectorized fn is reached through a detection
+/// check" (the module convention: private `#[target_feature]` fns, public
+/// wrappers that test `have_avx2_fma()` first).
+fn check_target_feature_guard(rel: &str, code: &[String], out: &mut Vec<Violation>) {
+    let guarded = code
+        .iter()
+        .any(|c| c.contains("have_avx2_fma(") || c.contains("is_x86_feature_detected!"));
+    if guarded {
+        return;
+    }
+    for (i, c) in code.iter().enumerate() {
+        if c.contains("#[target_feature") {
+            out.push(Violation {
+                file: rel.to_string(),
+                line: i + 1,
+                rule: "target-feature-without-guard",
+                msg: "`#[target_feature]` fn in a file with no runtime-detection \
+                      guard (`have_avx2_fma(` / `is_x86_feature_detected!`); \
+                      calling it on an unsupported CPU is undefined behavior"
+                    .to_string(),
+            });
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -615,6 +686,67 @@ mod tests {
                    \x20   #[test]\n\
                    \x20   fn t() { let (_tx, _rx) = mpsc::channel::<u32>(); }\n}\n";
         assert!(lint_source("util/channel.rs", src).is_empty());
+    }
+
+    // ---- rule 5: arch-outside-simd -----------------------------------
+
+    #[test]
+    fn std_arch_outside_simd_is_flagged() {
+        let src = "use std::arch::x86_64::*;\nfn f() {}\n";
+        let v = lint_source("kernels/dense_gemm.rs", src);
+        assert_eq!(rules(&v), ["arch-outside-simd"]);
+        assert_eq!(v[0].line, 1);
+    }
+
+    #[test]
+    fn target_feature_outside_simd_is_flagged() {
+        let src = "fn guard() -> bool { have_avx2_fma() }\n\
+                   #[target_feature(enable = \"avx2\")]\n\
+                   unsafe fn k() {}\n";
+        // Flags the attribute placement (rule 5); rule 1 additionally flags
+        // the bare `unsafe`, and the in-file guard satisfies rule 6.
+        let v = lint_source("tensor/mod.rs", src);
+        assert!(rules(&v).contains(&"arch-outside-simd"), "got {v:?}");
+        assert!(!rules(&v).contains(&"target-feature-without-guard"));
+    }
+
+    #[test]
+    fn arch_under_simd_passes() {
+        let src = "use std::arch::x86_64::*;\n\
+                   fn have_avx2_fma() -> bool { is_x86_feature_detected!(\"avx2\") }\n";
+        assert!(lint_source("kernels/simd/dense.rs", src).is_empty());
+    }
+
+    #[test]
+    fn arch_token_in_comment_or_string_is_ignored() {
+        let src = "// std::arch is documented here\nfn f() { let _ = \"core::arch\"; }\n";
+        assert!(lint_source("runtime/executor.rs", src).is_empty());
+    }
+
+    // ---- rule 6: target-feature-without-guard ------------------------
+
+    #[test]
+    fn target_feature_without_detection_guard_is_flagged() {
+        let src = "// SAFETY: caller checked avx2.\n\
+                   #[target_feature(enable = \"avx2,fma\")]\n\
+                   unsafe fn k(p: *const f32) {}\n";
+        let v = lint_source("kernels/simd/rogue.rs", src);
+        assert_eq!(rules(&v), ["target-feature-without-guard"]);
+        assert_eq!(v[0].line, 2);
+    }
+
+    #[test]
+    fn target_feature_with_detection_guard_passes() {
+        let src = "pub fn entry() -> bool {\n\
+                   \x20   if !is_x86_feature_detected!(\"avx2\") { return false; }\n\
+                   \x20   // SAFETY: avx2 verified above.\n\
+                   \x20   unsafe { k() };\n\
+                   \x20   true\n\
+                   }\n\
+                   // SAFETY: only called after the detection check in entry().\n\
+                   #[target_feature(enable = \"avx2\")]\n\
+                   unsafe fn k() {}\n";
+        assert!(lint_source("kernels/simd/ok.rs", src).is_empty());
     }
 
     // ---- the tree itself ---------------------------------------------
